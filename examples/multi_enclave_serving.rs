@@ -1,0 +1,187 @@
+//! Multi-enclave serving over *real TCP*: two worker processes-worth of
+//! enclave services listening on localhost sockets, a 30 Mbps-throttled
+//! link between them, and a camera client streaming sealed frames — the
+//! closest layout to the paper's two-desktop deployment that fits in one
+//! process tree.
+//!
+//! Wire protocol: length-prefixed frames (net::framing); every DATA frame
+//! payload is an AES-GCM sealed record (crypto::channel); EOS terminates.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use serdab::crypto::channel::Channel;
+use serdab::enclave::{EnclaveSim, NnService};
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::net::framing::{read_frame, write_frame, FrameType};
+use serdab::net::TokenBucket;
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::profiler::calibrated_profile;
+use serdab::runtime::executor::cpu_client;
+use serdab::runtime::ChainExecutor;
+use serdab::video::{SceneKind, VideoSource};
+
+const MODEL: &str = "squeezenet";
+const FRAMES: usize = 8;
+
+/// One enclave worker: accept a connection, serve sealed records, forward
+/// to `next` (another worker) or reply on the same socket (final stage).
+fn worker(
+    listener: TcpListener,
+    range: std::ops::Range<usize>,
+    ingress_secret: Vec<u8>,
+    egress: Option<(String, Vec<u8>)>,
+    sink_addr: Option<String>,
+    throttle_bps: Option<f64>,
+) -> std::thread::JoinHandle<anyhow::Result<u64>> {
+    std::thread::spawn(move || -> anyhow::Result<u64> {
+        let man = load_manifest(default_artifacts_dir())?;
+        let client = cpu_client()?;
+        let chain = ChainExecutor::load_range(&client, &man, MODEL, range.clone())?;
+        let mut param_bytes = Vec::new();
+        for b in &man.model(MODEL)?.blocks[range.clone()] {
+            param_bytes.extend_from_slice(&std::fs::read(man.dir.join(&b.params))?);
+        }
+        let enclave = EnclaveSim::new("serdab-nn-service-v1", &param_bytes, [9u8; 32]);
+        let mut svc = NnService::new(
+            enclave,
+            chain,
+            Channel::new(&ingress_secret, false),
+            egress.as_ref().map(|(_, s)| Channel::new(s, true)),
+        );
+        let mut bucket = throttle_bps.map(|bps| TokenBucket::new(bps, 256.0 * 1024.0 * 8.0));
+
+        let (mut conn, _) = listener.accept()?;
+        let mut downstream = match &egress {
+            Some((addr, _)) => Some(TcpStream::connect(addr)?),
+            None => None,
+        };
+        // final stage delivers results to the camera's sink listener
+        let mut sink = match &sink_addr {
+            Some(addr) => Some(TcpStream::connect(addr)?),
+            None => None,
+        };
+        let mut served = 0u64;
+        loop {
+            let (ty, payload) = read_frame(&mut conn)?;
+            match ty {
+                FrameType::Eos => {
+                    if let Some(ds) = &mut downstream {
+                        write_frame(ds, FrameType::Eos, &[])?;
+                    }
+                    if let Some(sk) = &mut sink {
+                        write_frame(sk, FrameType::Eos, &[])?;
+                    }
+                    break;
+                }
+                FrameType::Data => {
+                    let out = svc.process_record(&payload)?;
+                    match &mut downstream {
+                        Some(ds) => {
+                            if let Some(b) = &mut bucket {
+                                b.consume(out.len());
+                            }
+                            write_frame(ds, FrameType::Data, &out)?;
+                        }
+                        None => {
+                            // final stage: deliver to the camera's sink
+                            let sink = sink.as_mut().expect("final stage needs a sink");
+                            write_frame(sink, FrameType::Data, &out)?;
+                        }
+                    }
+                    served += 1;
+                }
+                FrameType::Control => {}
+            }
+        }
+        Ok(served)
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let man = load_manifest(default_artifacts_dir())?;
+    let info = man.model(MODEL)?;
+    let profile = calibrated_profile(info);
+    let p = plan(Strategy::TwoTees, &CostModel::new(&profile), FRAMES as u64);
+    let cut = p.placement.stages[0].range.end;
+    let m = info.m();
+    println!("placement over TCP: TEE1[0..{cut}] → 30Mbps → TEE2[{cut}..{m}]");
+
+    // session secrets (in the full coordinator these come from attestation;
+    // see coordinator::deploy — here we bind the workers directly)
+    let cam_secret = b"tcp-camera-hop".to_vec();
+    let hop_secret = b"tcp-tee1-tee2".to_vec();
+
+    let l1 = TcpListener::bind("127.0.0.1:0")?;
+    let l2 = TcpListener::bind("127.0.0.1:0")?;
+    let a1 = l1.local_addr()?;
+    let a2 = l2.local_addr()?;
+
+    // the camera also runs a sink listener where the final stage (TEE2)
+    // delivers results — route: camera → TEE1 → 30Mbps → TEE2 → camera
+    let sink_listener = TcpListener::bind("127.0.0.1:0")?;
+    let sink_addr = sink_listener.local_addr()?;
+
+    let h2 = worker(
+        l2,
+        cut..m,
+        hop_secret.clone(),
+        None,
+        Some(sink_addr.to_string()),
+        None,
+    );
+    let h1 = worker(
+        l1,
+        0..cut,
+        cam_secret.clone(),
+        Some((a2.to_string(), hop_secret.clone())),
+        None,
+        Some(30e6),
+    );
+
+    let mut to_tee1 = TcpStream::connect(a1)?;
+    let mut camera = Channel::new(&cam_secret, true);
+    let mut cam_src = VideoSource::new(SceneKind::Street, 3);
+    let t0 = Instant::now();
+    for _ in 0..FRAMES {
+        let f = cam_src.next_frame();
+        let rec = camera.tx.seal_record(&f.to_le_bytes());
+        write_frame(&mut to_tee1, FrameType::Data, &rec)?;
+    }
+    write_frame(&mut to_tee1, FrameType::Eos, &[])?;
+
+    // drain results at the camera sink
+    let (mut from_tee2, _) = sink_listener.accept()?;
+    let mut results = 0usize;
+    loop {
+        let (ty, payload) = read_frame(&mut from_tee2)?;
+        match ty {
+            FrameType::Eos => break,
+            FrameType::Data => {
+                anyhow::ensure!(!payload.is_empty());
+                results += 1;
+            }
+            FrameType::Control => {}
+        }
+    }
+    anyhow::ensure!(results == FRAMES, "camera got {results} results");
+
+    let served1 = h1.join().unwrap()?;
+    let served2 = h2.join().unwrap()?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "TEE1 served {served1}, TEE2 served {served2} frames in {dt:.2}s ({:.2} fps over real TCP + AES-GCM)",
+        FRAMES as f64 / dt
+    );
+    anyhow::ensure!(served1 == FRAMES as u64 && served2 == FRAMES as u64);
+
+    // numerics check: run the same frames through a single local chain
+    let client = cpu_client()?;
+    let full = ChainExecutor::load(&client, &man, MODEL)?;
+    let mut cam2 = VideoSource::new(SceneKind::Street, 3);
+    let out = full.run(&cam2.next_frame())?;
+    println!("local full-chain checksum of frame 0: {:.4}", out.data.iter().sum::<f32>());
+    println!("multi_enclave_serving OK");
+    Ok(())
+}

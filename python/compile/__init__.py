@@ -1,0 +1,3 @@
+# Build-time-only package: JAX/Pallas model authoring + AOT lowering.
+# Nothing in here is imported at runtime; the Rust binary consumes only
+# the artifacts/ directory this package emits.

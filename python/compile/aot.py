@@ -1,0 +1,248 @@
+"""AOT lowering: JAX/Pallas model zoo -> artifacts/ consumed by the Rust side.
+
+Per model, per block, this emits:
+
+  artifacts/<model>/block_NN.hlo.txt    HLO *text* for fn(activation, *params)
+  artifacts/<model>/block_NN.params.bin concatenated f32 LE parameters
+  artifacts/<model>/golden_block_NN.bin expected activation after this block
+  artifacts/<model>/golden_input.bin    the deterministic test frame
+
+plus a single artifacts/manifest.json carrying every shape, the spatial
+resolution trajectory, the full-scale analytical profile (FLOPs, parameter
+bytes, boundary tensor bytes, op counts — the inputs to the Rust placement
+algorithm), and the Pallas kernel structure metrics (VMEM footprint, MXU
+utilization estimate) for the dominant matmul of each block.
+
+Interchange is HLO **text**, not serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the `xla` crate binds) rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary never
+imports it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import matmul as kmm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, data: bytes) -> str:
+    with open(path, "wb") as f:
+        f.write(data)
+    return hashlib.sha256(data).hexdigest()
+
+
+def _f32_bytes(arrs) -> bytes:
+    return b"".join(np.asarray(a, dtype="<f4").tobytes() for a in arrs)
+
+
+def _dominant_matmul(arch: M.Arch, metas_tiny, bidx: int):
+    """Kernel-structure metrics for the block's largest matmul.
+
+    The conv with the most FLOPs dominates; reconstruct its (M, K, N) from
+    the tiny-scale shapes to report VMEM footprint + MXU utilization of the
+    Pallas tiling (DESIGN.md §6/§8).
+    """
+    best = None
+    shape = metas_tiny[bidx]["in_shape"]
+
+    def visit(layers, shape):
+        nonlocal best
+        for ly in layers:
+            if isinstance(ly, M.Conv):
+                h, w, c = shape
+                oh, ow = M._conv_out_hw(h, w, ly.kernel, ly.stride, ly.padding)
+                oc = (
+                    arch.tiny_classes
+                    if ly.out_ch == M.NUM_CLASSES_FULL
+                    else M.scale_ch(ly.out_ch, arch.tiny_width)
+                )
+                prob = (oh * ow, ly.kernel * ly.kernel * c, oc)
+                fl = 2 * prob[0] * prob[1] * prob[2]
+                if best is None or fl > best[0]:
+                    best = (fl, prob)
+                shape = (oh, ow, oc)
+            elif isinstance(ly, M.DWConv):
+                h, w, c = shape
+                oh, ow = M._conv_out_hw(h, w, ly.kernel, ly.stride, ly.padding)
+                shape = (oh, ow, c)
+            elif isinstance(ly, M.Pool):
+                h, w, c = shape
+                oh, ow = M._conv_out_hw(h, w, ly.kernel, ly.stride, ly.padding)
+                shape = (oh, ow, c)
+            elif isinstance(ly, M.GAP):
+                shape = ("flat", shape[2])
+            elif isinstance(ly, M.Dense):
+                fin = shape[1] if shape[0] == "flat" else shape[0] * shape[1] * shape[2]
+                fout = (
+                    arch.tiny_classes
+                    if ly.out == M.NUM_CLASSES_FULL
+                    else M._r8(ly.out * arch.tiny_width * 0.5)
+                )
+                prob = (1, fin, fout)
+                fl = 2 * fin * fout
+                if best is None or fl > best[0]:
+                    best = (fl, prob)
+                shape = ("flat", fout)
+            elif isinstance(ly, M.Parallel):
+                outs = []
+                for p in ly.paths:
+                    outs.append(visit(p, shape))
+                if ly.combine == "concat":
+                    shape = (outs[0][0], outs[0][1], sum(o[2] for o in outs))
+                else:
+                    shape = outs[0]
+            elif isinstance(ly, M.Identity):
+                pass
+        return shape
+
+    visit(arch.blocks[bidx].layers, shape)
+    if best is None:
+        return None
+    m, k, n = best[1]
+    return dict(
+        m=m,
+        k=k,
+        n=n,
+        vmem_bytes=kmm.vmem_footprint_bytes(m, k, n),
+        mxu_utilization=round(kmm.mxu_utilization_estimate(m, k, n), 4),
+    )
+
+
+def lower_model(arch: M.Arch, out_dir: str, seed: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = M.init_block_params(arch, arch.tiny_width, arch.tiny_classes, seed)
+    metas_full = M.block_meta(arch, 1.0, M.NUM_CLASSES_FULL)
+    metas_tiny = M.block_meta(arch, arch.tiny_width, arch.tiny_classes)
+
+    x = M.test_frame()
+    _write(os.path.join(out_dir, "golden_input.bin"), _f32_bytes([x]))
+
+    blocks = []
+    act = x
+    for b in range(len(arch.blocks)):
+        t0 = time.time()
+        ps = params[b]
+
+        def block_fn(a, *flat_params):
+            return (M.block_forward(arch, b, a, list(flat_params), interpret=True),)
+
+        arg_specs = [jax.ShapeDtypeStruct(act.shape, jnp.float32)] + [
+            jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in ps
+        ]
+        lowered = jax.jit(block_fn).lower(*arg_specs)
+        hlo = to_hlo_text(lowered)
+        hlo_rel = f"{arch.name}/block_{b:02d}.hlo.txt"
+        with open(os.path.join(out_dir, f"block_{b:02d}.hlo.txt"), "w") as f:
+            f.write(hlo)
+
+        params_rel = f"{arch.name}/block_{b:02d}.params.bin"
+        pdigest = _write(os.path.join(out_dir, f"block_{b:02d}.params.bin"),
+                         _f32_bytes(ps))
+
+        # golden via the pure-jnp oracle (independent of the pallas path)
+        act = M.block_forward_ref(arch, b, act, ps)
+        gdigest = _write(
+            os.path.join(out_dir, f"golden_block_{b:02d}.bin"), _f32_bytes([act])
+        )
+
+        mt, mf = metas_tiny[b], metas_full[b]
+        out_shape_t = (
+            [1, mt["out_shape"][1]]
+            if mt["out_shape"][0] == "flat"
+            else [1, mt["out_shape"][0], mt["out_shape"][1], mt["out_shape"][2]]
+        )
+        in_shape_t = (
+            [1, mt["in_shape"][1]]
+            if mt["in_shape"][0] == "flat"
+            else [1, mt["in_shape"][0], mt["in_shape"][1], mt["in_shape"][2]]
+        )
+        blocks.append(
+            dict(
+                idx=b,
+                name=arch.blocks[b].name,
+                hlo=hlo_rel,
+                params=params_rel,
+                params_sha256=pdigest,
+                param_shapes=[list(p.shape) for p in ps],
+                param_floats=int(sum(int(np.prod(p.shape)) for p in ps)),
+                in_shape=in_shape_t,
+                out_shape=out_shape_t,
+                in_res=int(mt["in_res"]),
+                out_res=int(mt["out_res"]),
+                flops_full=int(mf["flops"]),
+                param_bytes_full=int(mf["param_floats"] * 4),
+                out_bytes_full=int(mf["out_elems"] * 4),
+                act_bytes_full=int(mf["act_elems"] * 4),
+                peak_act_bytes_full=int(mf["peak_act_elems"] * 4),
+                n_ops=int(mf["n_ops"]),
+                golden=f"{arch.name}/golden_block_{b:02d}.bin",
+                golden_sha256=gdigest,
+                kernel=_dominant_matmul(arch, metas_tiny, b),
+            )
+        )
+        print(
+            f"  [{arch.name}] block {b:02d} {arch.blocks[b].name:14s} "
+            f"hlo={len(hlo)//1024:4d}KiB  t={time.time()-t0:5.1f}s"
+        )
+
+    return dict(
+        name=arch.name,
+        tiny_width=arch.tiny_width,
+        tiny_classes=arch.tiny_classes,
+        blocks=blocks,
+        golden_input=f"{arch.name}/golden_input.bin",
+        total_flops_full=int(sum(b["flops_full"] for b in blocks)),
+        model_bytes_full=int(sum(b["param_bytes_full"] for b in blocks)),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--models", default=",".join(M.MODEL_NAMES))
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = dict(
+        version=1,
+        input_shape=list(M.INPUT_SHAPE),
+        seed=args.seed,
+        models={},
+    )
+    for name in args.models.split(","):
+        arch = M.ZOO[name]
+        print(f"== lowering {name} ({len(arch.blocks)} blocks)")
+        manifest["models"][name] = lower_model(
+            arch, os.path.join(args.out, name), args.seed
+        )
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    n_blocks = sum(len(m["blocks"]) for m in manifest["models"].values())
+    print(f"wrote manifest with {len(manifest['models'])} models / {n_blocks} blocks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# Layer-1 Pallas kernels for the Serdab compute hot-spots, plus the
+# pure-jnp oracle (ref.py) they are verified against.
+from . import conv2d, matmul, pool, ref  # noqa: F401

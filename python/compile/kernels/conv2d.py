@@ -1,0 +1,191 @@
+"""Layer-1 Pallas kernels: conv2d (im2col x MXU matmul), bias+ReLU epilogue.
+
+The paper's compute hot-spot is CNN inference inside an SGX enclave; on the
+TPU-shaped stack the same hot-spot is expressed as an im2col patch
+extraction feeding the tiled Pallas matmul (matmul.py). This is the
+hardware adaptation called out in DESIGN.md §6: instead of porting the
+paper's TFLite CPU loops, we tile the (H*W, KH*KW*Cin) x (KH*KW*Cin, Cout)
+product for VMEM residency and MXU shape.
+
+Layout: NHWC with N == 1 throughout (the Serdab data path is a stream of
+single frames; batching across frames happens at the pipeline level, not
+inside a kernel — that is the paper's pipeline-parallelism insight).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, pad: tuple) -> jax.Array:
+    """(1, H, W, C) -> (OH*OW, KH*KW*C) patch matrix.
+
+    Uses static strided slices only (TPU-friendly; no gather). ``pad`` is
+    ((top, bottom), (left, right)).
+    """
+    _, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), pad[0], pad[1], (0, 0)))
+    hp = h + pad[0][0] + pad[0][1]
+    wp = w + pad[1][0] + pad[1][1]
+    oh = (hp - kh) // stride + 1
+    ow = (wp - kw) // stride + 1
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = jax.lax.slice(
+                xp,
+                (0, di, dj, 0),
+                (1, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(sl.reshape(oh * ow, c))
+    # (OH*OW, KH*KW, C) -> (OH*OW, KH*KW*C); ordering matches ref.py and the
+    # weight reshape in ``conv2d`` below.
+    return jnp.stack(cols, axis=1).reshape(oh * ow, kh * kw * c), oh, ow
+
+
+def _bias_act_kernel(x_ref, b_ref, o_ref, *, relu: bool):
+    v = x_ref[...] + b_ref[...]
+    o_ref[...] = jnp.maximum(v, 0.0) if relu else v
+
+
+def _bias_act(y: jax.Array, b: jax.Array, relu: bool, interpret: bool) -> jax.Array:
+    """Fused bias + activation epilogue as a row-tiled Pallas kernel.
+
+    Whole-array when it fits VMEM (elementwise VPU work is bandwidth-bound;
+    one grid step minimizes invocation overhead — §Perf iteration 2),
+    row-tiled otherwise.
+    """
+    m, n = y.shape
+    bm = m if (m * n * 8) <= 8 * 1024 * 1024 else (256 if m % 256 == 0 else m)
+    return pl.pallas_call(
+        functools.partial(_bias_act_kernel, relu=relu),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(y, b.reshape(1, n))
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str | tuple = "SAME",
+    relu: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """2-D convolution via im2col + the tiled Pallas matmul.
+
+    x: (1, H, W, Cin); w: (KH, KW, Cin, Cout); b: (Cout,).
+    padding: "SAME", "VALID", or explicit ((t, b), (l, r)).
+    """
+    _, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, f"channel mismatch {cin} vs {cin2}"
+    if padding == "SAME":
+        oh = -(-h // stride)
+        ow = -(-wd // stride)
+        ph = max(0, (oh - 1) * stride + kh - h)
+        pw = max(0, (ow - 1) * stride + kw - wd)
+        pad = ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2))
+    elif padding == "VALID":
+        pad = ((0, 0), (0, 0))
+    else:
+        pad = padding
+    patches, oh, ow = _im2col(x, kh, kw, stride, pad)
+    wmat = w.reshape(kh * kw * cin, cout)
+    y = mm.matmul(patches, wmat, interpret=interpret)
+    y = _bias_act(y, b, relu, interpret)
+    return y.reshape(1, oh, ow, cout)
+
+
+def _dwconv_kernel(p_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    # p: (BM, KH*KW, C) patch rows; w: (KH*KW, C); reduce the window axis on
+    # the VPU (depthwise conv has no MXU contraction — it is elementwise
+    # multiply + window reduction per channel).
+    v = jnp.sum(p_ref[...] * w_ref[...][None, :, :], axis=1) + b_ref[...]
+    o_ref[...] = jnp.maximum(v, 0.0) if relu else v
+
+
+def dwconv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str | tuple = "SAME",
+    relu: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Depthwise 2-D convolution (MobileNet), NHWC, N == 1.
+
+    x: (1, H, W, C); w: (KH, KW, C); b: (C,). Each channel is convolved with
+    its own KHxKW filter — expressed as patch extraction + a row-tiled VPU
+    reduction kernel.
+    """
+    _, h, wd, c = x.shape
+    kh, kw, c2 = w.shape
+    assert c == c2
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-wd // stride)
+        ph = max(0, (oh - 1) * stride + kh - h)
+        pw = max(0, (ow - 1) * stride + kw - wd)
+        pad = ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2))
+    elif padding == "VALID":
+        pad = ((0, 0), (0, 0))
+    else:
+        pad = padding
+    xp = jnp.pad(x, ((0, 0), pad[0], pad[1], (0, 0)))
+    hp, wp = xp.shape[1], xp.shape[2]
+    oh = (hp - kh) // stride + 1
+    ow = (wp - kw) // stride + 1
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = jax.lax.slice(
+                xp,
+                (0, di, dj, 0),
+                (1, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(sl.reshape(oh * ow, c))
+    patches = jnp.stack(cols, axis=1)  # (OH*OW, KH*KW, C)
+    m = oh * ow
+    # whole-array when the patch tensor fits VMEM (one grid step), else rows
+    bm = m if (m * kh * kw * c * 8) <= 8 * 1024 * 1024 else (256 if m % 256 == 0 else m)
+    y = pl.pallas_call(
+        functools.partial(_dwconv_kernel, relu=relu),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, kh * kw, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((kh * kw, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c), jnp.float32),
+        interpret=interpret,
+    )(patches, w.reshape(kh * kw, c), b.reshape(1, c))
+    return y.reshape(1, oh, ow, c)
+
+
+def conv_flops(h: int, w: int, cin: int, cout: int, kh: int, kw: int, stride: int,
+               padding: str = "SAME") -> int:
+    """Multiply-accumulate count (x2 for FLOPs) of one conv layer."""
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w // stride)
+    else:
+        oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
+    return 2 * oh * ow * kh * kw * cin * cout

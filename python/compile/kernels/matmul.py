@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernel: tiled matmul — the MXU hot-spot of every Serdab block.
+
+All convolutions and dense layers in the Serdab model zoo reduce to this
+kernel (conv via im2col, see conv2d.py). The tiling discipline targets the
+TPU memory hierarchy:
+
+  * grid = (M/BM, N/BN): each grid step owns one (BM, BN) output tile.
+  * per-step working set = BM*K + K*BN + BM*BN floats, kept under the
+    VMEM budget (see ``vmem_footprint_bytes``) — this is the TPU analogue
+    of the paper's 128 MB SGX EPC ceiling: compute must be scheduled in
+    resident tiles.
+  * the inner ``jnp.dot`` maps onto the MXU systolic array; tiles are kept
+    MXU-shaped (multiples of 8x128 where the model widths allow; the tiny
+    calibration models use smaller tiles, and ``mxu_utilization_estimate``
+    reports the resulting padding waste).
+
+On this image Pallas runs interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls), so what we optimize/verify is kernel *structure* (footprint,
+tile shapes, numerics vs ref.py), not CPU wall-clock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 is the MXU lane width; 8 the sublane. The tiny
+# models override BM/BN downwards when a dimension is smaller than a tile.
+DEF_BM = 128
+DEF_BN = 128
+
+# VMEM budget per grid step (bytes). Real TPUv4 VMEM is ~16 MiB/core; we
+# keep each step's working set well under 1/4 of it so double-buffering
+# (next tile prefetch while current computes) fits.
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pick_tiles(m: int, k: int, n: int) -> tuple[int, int]:
+    """Choose (BM, BN) that divide the padded problem and respect VMEM.
+
+    Policy (§Perf iteration 2): take the *largest* BM that keeps the
+    working set (BM*K + K*BN + BM*BN) * 4 under the VMEM budget, starting
+    from the whole-M extent rounded to the 8-row sublane. Fewer grid steps
+    means fewer kernel invocations (and on real TPU, better MXU occupancy
+    per step while 2x the budget still leaves room for double-buffering).
+    K is never tiled: every matmul in the zoo has K = kh*kw*cin small
+    enough to keep resident, which avoids an accumulation loop and the
+    associated revolving-buffer hazard.
+    """
+    bn = min(DEF_BN, max(8, -(-n // 8) * 8))
+
+    def fits(bm_, bn_):
+        return (bm_ * k + k * bn_ + bm_ * bn_) * 4 <= VMEM_BUDGET
+
+    # largest power-of-two-ish BM (multiple of 8) that fits
+    bm = max(8, -(-m // 8) * 8)
+    while not fits(bm, bn) and bm > 8:
+        bm = max(8, (bm // 2 + 7) // 8 * 8)
+    while not fits(bm, bn) and bn > 8:
+        bn //= 2
+    return bm, bn
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int) -> int:
+    """Per-grid-step VMEM working set of ``matmul`` for this problem."""
+    bm, bn = pick_tiles(m, k, n)
+    return (bm * k + k * bn + bm * bn) * 4
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int) -> float:
+    """Fraction of MXU issue slots doing useful work (padding waste only).
+
+    The MXU consumes 128x128 operand tiles; dimensions that are not
+    multiples of (8, 128) are padded by the hardware. This is the
+    structural estimate recorded in the manifest for DESIGN.md's
+    roofline discussion.
+    """
+    bm, bn = pick_tiles(m, k, n)
+    pm = _ceil_div(m, bm) * bm
+    pn = _ceil_div(n, bn) * bn
+    pk = _ceil_div(k, 128) * 128
+    useful = m * k * n
+    issued = pm * pk * pn
+    return useful / issued if issued else 0.0
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (BM, BN) output tile per grid step; K resident. jnp.dot lowers to
+    # the MXU on real hardware; preferred_element_type pins f32 accumulation.
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(x: jax.Array, w: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """``x @ w`` via the tiled Pallas kernel.
+
+    x: (M, K) f32, w: (K, N) f32 -> (M, N) f32.
+    Pads M and N up to tile multiples, never K (kept resident).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn = pick_tiles(m, k, n)
+    pm, pn = _ceil_div(m, bm) * bm, _ceil_div(n, bn) * bn
+    xp = jnp.pad(x, ((0, pm - m), (0, 0))) if pm != m else x
+    wp = jnp.pad(w, ((0, 0), (0, pn - n))) if pn != n else w
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(pm // bm, pn // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]

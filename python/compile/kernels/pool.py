@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernels: max / average pooling and global average pool.
+
+Pooling is VPU (vector unit) work, not MXU work: the kernel materializes
+the KxK strided window views and reduces them elementwise. The whole
+feature map for the Serdab models fits comfortably in VMEM (<= 112*112*64
+floats ~ 3.2 MB at the tiny calibration widths), so the grid is 1 and the
+BlockSpec keeps the full array resident; for full-width models a row-tiled
+grid would be used instead (same kernel body).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref, *, kh, kw, stride, oh, ow, mode):
+    x = x_ref[...]  # (1, HP, WP, C)
+    c = x.shape[3]
+    acc = None
+    for di in range(kh):
+        for dj in range(kw):
+            sl = jax.lax.slice(
+                x,
+                (0, di, dj, 0),
+                (1, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            if acc is None:
+                acc = sl
+            elif mode == "max":
+                acc = jnp.maximum(acc, sl)
+            else:
+                acc = acc + sl
+    if mode == "avg":
+        acc = acc / float(kh * kw)
+    o_ref[...] = acc
+
+
+def pool2d(
+    x: jax.Array,
+    *,
+    kernel: int,
+    stride: int,
+    mode: str = "max",
+    padding: str = "VALID",
+    interpret: bool = True,
+) -> jax.Array:
+    """Max/avg pool, NHWC, N == 1. VALID or SAME padding.
+
+    Max pool pads with -inf, avg pool with 0 (and divides by the full
+    window, matching the TFLite semantics the paper's stack uses).
+    """
+    _, h, w, c = x.shape
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w // stride)
+        ph = max(0, (oh - 1) * stride + kernel - h)
+        pw = max(0, (ow - 1) * stride + kernel - w)
+        pv = -jnp.inf if mode == "max" else 0.0
+        x = jnp.pad(
+            x,
+            ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)),
+            constant_values=pv,
+        )
+    else:
+        oh, ow = (h - kernel) // stride + 1, (w - kernel) // stride + 1
+    hp, wp = x.shape[1], x.shape[2]
+    return pl.pallas_call(
+        functools.partial(
+            _pool_kernel, kh=kernel, kw=kernel, stride=stride, oh=oh, ow=ow, mode=mode
+        ),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, hp, wp, c), lambda i: (0, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow, c), lambda i: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, oh, ow, c), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def _gap_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.mean(x, axis=(1, 2))
+
+
+def global_avg_pool(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """(1, H, W, C) -> (1, C) global average pool."""
+    _, h, w, c = x.shape
+    return pl.pallas_call(
+        _gap_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (0, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, c), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for every Layer-1 Pallas kernel.
+
+These are the ground-truth semantics: python/tests/test_kernels.py sweeps
+shapes (hypothesis) and asserts the Pallas kernels match to float32
+tolerance, and aot.py uses this module to emit golden activations that the
+Rust runtime re-verifies after loading the HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def conv2d(x, w, b, *, stride=1, padding="SAME", relu=True):
+    """NHWC conv, w: (KH, KW, Cin, Cout) — jax.lax.conv_general_dilated."""
+    if padding in ("SAME", "VALID"):
+        pad = padding
+    else:
+        pad = list(padding)
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y + b.reshape(1, 1, 1, -1)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def pool2d(x, *, kernel, stride, mode="max", padding="VALID"):
+    if mode == "max":
+        init, op = -jnp.inf, jax.lax.max
+    else:
+        init, op = 0.0, jax.lax.add
+    y = jax.lax.reduce_window(
+        x,
+        init,
+        op,
+        window_dimensions=(1, kernel, kernel, 1),
+        window_strides=(1, stride, stride, 1),
+        padding=padding,
+    )
+    if mode == "avg":
+        y = y / float(kernel * kernel)
+    return y
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def dense(x, w, b, *, relu=True):
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    return jnp.maximum(y, 0.0) if relu else y

@@ -1,0 +1,621 @@
+"""Layer-2 JAX model zoo: the five CNNs Serdab evaluates, as *block* chains.
+
+Each architecture (GoogLeNet, AlexNet, ResNet, MobileNet, SqueezeNet) is
+described once at **full channel scale** — that description is the source of
+the analytical profile (FLOPs, parameter bytes, boundary-tensor bytes, spatial
+resolution) the Rust placement algorithm uses for the paper-scale experiments
+— and is **instantiated at a tiny width multiplier** for the executable
+artifacts, preserving the layer structure and, crucially, the spatial
+*resolution trajectory* (stride/pool schedule), which is what the paper's
+privacy metric (resolution <= delta = 20x20) depends on.
+
+A *block* is the unit of partitioning: the paper partitions at layer
+granularity; our blocks correspond to the paper's "layers" L_x (it treats an
+inception module as one partitionable unit). Every block is lowered to its own
+HLO module by aot.py, so the Rust coordinator can execute any contiguous block
+range on any device — that is what makes arbitrary placement paths runnable.
+
+All forward math routes through the Layer-1 Pallas kernels (kernels/), with a
+pure-jnp mirror (forward_ref) against kernels/ref.py used for goldens and
+pytest equivalence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as kconv
+from .kernels import pool as kpool
+from .kernels import matmul as kmm
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Layer description types (full-scale channel counts; width_mult applied at
+# instantiation time).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    kernel: int
+    stride: int
+    out_ch: int
+    padding: object = "SAME"  # "SAME" | "VALID" | ((t,b),(l,r))
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DWConv:
+    """Depthwise conv (MobileNet); out channels == in channels."""
+
+    kernel: int
+    stride: int
+    padding: object = "SAME"
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    kernel: int
+    stride: int
+    mode: str = "max"  # "max" | "avg"
+    padding: str = "VALID"
+
+
+@dataclasses.dataclass(frozen=True)
+class GAP:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    out: int
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallel:
+    """Multi-path module: inception (concat), fire expand (concat),
+    residual (add). Each path is a sequence of layers applied to the same
+    input; ``combine`` merges path outputs; ``post_relu`` applies a ReLU to
+    the merged result (ResNet)."""
+
+    paths: Tuple[Tuple[object, ...], ...]
+    combine: str = "concat"  # "concat" | "add"
+    post_relu: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    name: str
+    layers: Tuple[object, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    blocks: Tuple[Block, ...]
+    # width multiplier used for the executable (tiny) instantiation
+    tiny_width: float = 0.125
+    tiny_classes: int = 10
+
+
+INPUT_SHAPE = (1, 224, 224, 3)
+NUM_CLASSES_FULL = 1000
+
+
+def _r8(c: float) -> int:
+    """Round a scaled channel count to a multiple of 8, min 8 (VPU lanes)."""
+    return max(8, int(math.ceil(c / 8.0)) * 8)
+
+
+def scale_ch(c: int, width: float) -> int:
+    return _r8(c * width)
+
+
+# ---------------------------------------------------------------------------
+# Architecture zoo (full-scale descriptions)
+# ---------------------------------------------------------------------------
+
+
+def _inception(n, c1, c3r, c3, c5r, c5, cp) -> Block:
+    return Block(
+        n,
+        (
+            Parallel(
+                paths=(
+                    (Conv(1, 1, c1),),
+                    (Conv(1, 1, c3r), Conv(3, 1, c3)),
+                    (Conv(1, 1, c5r), Conv(5, 1, c5)),
+                    (Pool(3, 1, "max", "SAME"), Conv(1, 1, cp)),
+                ),
+            ),
+        ),
+    )
+
+
+def _fire(n, s, e) -> Block:
+    return Block(
+        n,
+        (
+            Conv(1, 1, s),
+            Parallel(paths=((Conv(1, 1, e),), (Conv(3, 1, e),))),
+        ),
+    )
+
+
+def _res_block(n, c, stride, project) -> Block:
+    """Bottleneck residual block (ResNet-50 style): 1x1 c → 3x3 c → 1x1 4c."""
+    main = (
+        Conv(1, stride, c),
+        Conv(3, 1, c),
+        Conv(1, 1, 4 * c, relu=False),
+    )
+    shortcut = (Conv(1, stride, 4 * c, relu=False),) if project else (Identity(),)
+    return Block(n, (Parallel(paths=(main, shortcut), combine="add", post_relu=True),))
+
+
+def _dsw(n, cout, stride) -> Block:
+    return Block(n, (DWConv(3, stride), Conv(1, 1, cout)))
+
+
+ALEXNET = Arch(
+    "alexnet",
+    (
+        Block("conv1", (Conv(11, 4, 96, ((2, 2), (2, 2))),)),
+        Block("pool1_conv2", (Pool(3, 2), Conv(5, 1, 256))),
+        Block("pool2_conv3", (Pool(3, 2), Conv(3, 1, 384))),
+        Block("conv4", (Conv(3, 1, 384),)),
+        Block("conv5_pool5", (Conv(3, 1, 256), Pool(3, 2))),
+        Block("fc6", (Dense(4096),)),
+        Block("fc7", (Dense(4096),)),
+        Block("fc8", (Dense(NUM_CLASSES_FULL, relu=False),)),
+    ),
+)
+
+GOOGLENET = Arch(
+    "googlenet",
+    (
+        Block("conv1_pool1", (Conv(7, 2, 64), Pool(3, 2, "max", "SAME"))),
+        Block(
+            "conv2_pool2",
+            (Conv(1, 1, 64), Conv(3, 1, 192), Pool(3, 2, "max", "SAME")),
+        ),
+        _inception("inc3a", 64, 96, 128, 16, 32, 32),
+        Block(
+            "inc3b_pool3",
+            _inception("x", 128, 128, 192, 32, 96, 64).layers
+            + (Pool(3, 2, "max", "SAME"),),
+        ),
+        _inception("inc4a", 192, 96, 208, 16, 48, 64),
+        _inception("inc4b", 160, 112, 224, 24, 64, 64),
+        _inception("inc4c", 128, 128, 256, 24, 64, 64),
+        _inception("inc4d", 112, 144, 288, 32, 64, 64),
+        Block(
+            "inc4e_pool4",
+            _inception("x", 256, 160, 320, 32, 128, 128).layers
+            + (Pool(3, 2, "max", "SAME"),),
+        ),
+        _inception("inc5a", 256, 160, 320, 32, 128, 128),
+        _inception("inc5b", 384, 192, 384, 48, 128, 128),
+        Block("head", (GAP(), Dense(NUM_CLASSES_FULL, relu=False))),
+    ),
+)
+
+# ResNet-50-like: bottleneck stages [3, 4, 6, 3]. Consecutive identity
+# blocks within a stage are grouped pairwise to keep the partition-unit
+# count near the paper's layer granularity (16 residual units -> 11 blocks).
+RESNET = Arch(
+    "resnet",
+    (
+        Block("conv1_pool1", (Conv(7, 2, 64), Pool(3, 2, "max", "SAME"))),
+        _res_block("res2a", 64, 1, True),
+        Block("res2bc", _res_block("x", 64, 1, False).layers * 2),
+        _res_block("res3a", 128, 2, True),
+        Block("res3bc", _res_block("x", 128, 1, False).layers * 2),
+        _res_block("res3d", 128, 1, False),
+        _res_block("res4a", 256, 2, True),
+        Block("res4bc", _res_block("x", 256, 1, False).layers * 2),
+        Block("res4de", _res_block("x", 256, 1, False).layers * 2),
+        _res_block("res4f", 256, 1, False),
+        _res_block("res5a", 512, 2, True),
+        Block("res5bc", _res_block("x", 512, 1, False).layers * 2),
+        Block("head", (GAP(), Dense(NUM_CLASSES_FULL, relu=False))),
+    ),
+)
+
+MOBILENET = Arch(
+    "mobilenet",
+    (
+        Block("conv1", (Conv(3, 2, 32),)),
+        _dsw("dsw1", 64, 1),
+        _dsw("dsw2", 128, 2),
+        _dsw("dsw3", 128, 1),
+        _dsw("dsw4", 256, 2),
+        _dsw("dsw5", 256, 1),
+        _dsw("dsw6", 512, 2),
+        _dsw("dsw7", 512, 1),
+        _dsw("dsw8", 512, 1),
+        _dsw("dsw9", 512, 1),
+        _dsw("dsw10", 512, 1),
+        _dsw("dsw11", 512, 1),
+        _dsw("dsw12", 1024, 2),
+        _dsw("dsw13", 1024, 1),
+        Block("head", (GAP(), Dense(NUM_CLASSES_FULL, relu=False))),
+    ),
+)
+
+SQUEEZENET = Arch(
+    "squeezenet",
+    (
+        Block("conv1_pool1", (Conv(7, 2, 96), Pool(3, 2))),
+        _fire("fire2", 16, 64),
+        _fire("fire3", 16, 64),
+        Block("fire4_pool4", _fire("x", 32, 128).layers + (Pool(3, 2),)),
+        _fire("fire5", 32, 128),
+        _fire("fire6", 48, 192),
+        _fire("fire7", 48, 192),
+        Block("fire8_pool8", _fire("x", 64, 256).layers + (Pool(3, 2),)),
+        _fire("fire9", 64, 256),
+        Block("head", (Conv(1, 1, NUM_CLASSES_FULL, relu=True), GAP())),
+    ),
+)
+
+ZOO = {a.name: a for a in (GOOGLENET, ALEXNET, RESNET, MOBILENET, SQUEEZENET)}
+MODEL_NAMES = ("googlenet", "alexnet", "resnet", "mobilenet", "squeezenet")
+
+
+# ---------------------------------------------------------------------------
+# Shape / cost inference (pure python; drives both instantiation and the
+# analytical profile the manifest carries to Rust).
+# ---------------------------------------------------------------------------
+
+
+def _conv_out_hw(h: int, w: int, k: int, s: int, padding) -> Tuple[int, int]:
+    if padding == "SAME":
+        return -(-h // s), -(-w // s)
+    if padding == "VALID":
+        return (h - k) // s + 1, (w - k) // s + 1
+    (pt, pb), (pl_, pr) = padding
+    return (h + pt + pb - k) // s + 1, (w + pl_ + pr - k) // s + 1
+
+
+@dataclasses.dataclass
+class LayerCost:
+    name: str
+    flops: int
+    param_floats: int
+    out_elems: int
+    n_ops: int
+
+
+def _walk_layers(
+    layers: Sequence[object], shape, width: float, classes: int, costs: Optional[list]
+):
+    """Propagate (h, w, c) or ('flat', f) through a layer sequence at the
+    given width multiplier, appending per-primitive costs."""
+
+    def ch(c):
+        return scale_ch(c, width) if width != 1.0 else c
+
+    for ly in layers:
+        if isinstance(ly, Conv):
+            h, w, c = shape
+            oh, ow = _conv_out_hw(h, w, ly.kernel, ly.stride, ly.padding)
+            oc = ch(ly.out_ch)
+            if costs is not None:
+                costs.append(
+                    LayerCost(
+                        "conv",
+                        2 * oh * ow * ly.kernel * ly.kernel * c * oc,
+                        ly.kernel * ly.kernel * c * oc + oc,
+                        oh * ow * oc,
+                        1,
+                    )
+                )
+            shape = (oh, ow, oc)
+        elif isinstance(ly, DWConv):
+            h, w, c = shape
+            oh, ow = _conv_out_hw(h, w, ly.kernel, ly.stride, ly.padding)
+            if costs is not None:
+                costs.append(
+                    LayerCost(
+                        "dwconv",
+                        2 * oh * ow * ly.kernel * ly.kernel * c,
+                        ly.kernel * ly.kernel * c + c,
+                        oh * ow * c,
+                        1,
+                    )
+                )
+            shape = (oh, ow, c)
+        elif isinstance(ly, Pool):
+            h, w, c = shape
+            oh, ow = _conv_out_hw(h, w, ly.kernel, ly.stride, ly.padding)
+            if costs is not None:
+                costs.append(
+                    LayerCost("pool", oh * ow * ly.kernel * ly.kernel * c, 0, oh * ow * c, 1)
+                )
+            shape = (oh, ow, c)
+        elif isinstance(ly, GAP):
+            h, w, c = shape
+            if costs is not None:
+                costs.append(LayerCost("gap", h * w * c, 0, c, 1))
+            shape = ("flat", c)
+        elif isinstance(ly, Dense):
+            if shape[0] == "flat":
+                fin = shape[1]
+            else:
+                h, w, c = shape
+                fin = h * w * c
+            fout = classes if ly.out == NUM_CLASSES_FULL else ch(ly.out)
+            if width == 1.0:
+                fout = ly.out
+            elif ly.out != NUM_CLASSES_FULL:
+                fout = _r8(ly.out * width * 0.5)  # FCs shrink harder (memory)
+            if costs is not None:
+                costs.append(LayerCost("dense", 2 * fin * fout, fin * fout + fout, fout, 1))
+            shape = ("flat", fout)
+        elif isinstance(ly, Identity):
+            pass
+        elif isinstance(ly, Parallel):
+            h, w, c = shape
+            outs = []
+            for path in ly.paths:
+                s2 = shape
+                s2 = _walk_layers(path, s2, width, classes, costs)
+                outs.append(s2)
+            if ly.combine == "concat":
+                oh, ow = outs[0][0], outs[0][1]
+                shape = (oh, ow, sum(o[2] for o in outs))
+            else:  # add
+                shape = outs[0]
+                if costs is not None:
+                    costs.append(
+                        LayerCost("add", outs[0][0] * outs[0][1] * outs[0][2], 0,
+                                  outs[0][0] * outs[0][1] * outs[0][2], 0)
+                    )
+        else:
+            raise TypeError(f"unknown layer {ly!r}")
+    return shape
+
+
+def block_meta(arch: Arch, width: float, classes: int):
+    """Per-block metadata at a given width: shapes, resolution, costs."""
+    shape = (INPUT_SHAPE[1], INPUT_SHAPE[2], INPUT_SHAPE[3])
+    metas = []
+    for blk in arch.blocks:
+        costs: List[LayerCost] = []
+        in_shape = shape
+        shape = _walk_layers(blk.layers, shape, width, classes, costs)
+        metas.append(
+            dict(
+                name=blk.name,
+                in_shape=in_shape,
+                out_shape=shape,
+                in_res=(in_shape[0] if in_shape[0] != "flat" else 1),
+                out_res=(shape[0] if shape[0] != "flat" else 1),
+                flops=sum(c.flops for c in costs),
+                param_floats=sum(c.param_floats for c in costs),
+                out_elems=(
+                    shape[1] if shape[0] == "flat" else shape[0] * shape[1] * shape[2]
+                ),
+                # total activation traffic (sum of every primitive's output)
+                # and the largest single intermediate — these drive the
+                # enclave working-set / paging model on the Rust side
+                act_elems=sum(c.out_elems for c in costs),
+                peak_act_elems=max((c.out_elems for c in costs), default=0),
+                n_ops=sum(c.n_ops for c in costs),
+            )
+        )
+    return metas
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction + forward execution (tiny scale)
+# ---------------------------------------------------------------------------
+
+
+def _init_params_layers(layers, shape, width, classes, key, out):
+    def ch(c):
+        return scale_ch(c, width)
+
+    for ly in layers:
+        if isinstance(ly, Conv):
+            h, w, c = shape
+            oc = ch(ly.out_ch)
+            key, k1 = jax.random.split(key)
+            fan_in = ly.kernel * ly.kernel * c
+            wgt = jax.random.normal(k1, (ly.kernel, ly.kernel, c, oc), jnp.float32)
+            wgt = wgt * jnp.sqrt(2.0 / fan_in)
+            out.append(wgt)
+            out.append(jnp.zeros((oc,), jnp.float32))
+            oh, ow = _conv_out_hw(h, w, ly.kernel, ly.stride, ly.padding)
+            shape = (oh, ow, oc)
+        elif isinstance(ly, DWConv):
+            h, w, c = shape
+            key, k1 = jax.random.split(key)
+            wgt = jax.random.normal(k1, (ly.kernel, ly.kernel, c), jnp.float32)
+            wgt = wgt * jnp.sqrt(2.0 / (ly.kernel * ly.kernel))
+            out.append(wgt)
+            out.append(jnp.zeros((c,), jnp.float32))
+            oh, ow = _conv_out_hw(h, w, ly.kernel, ly.stride, ly.padding)
+            shape = (oh, ow, c)
+        elif isinstance(ly, Pool):
+            h, w, c = shape
+            oh, ow = _conv_out_hw(h, w, ly.kernel, ly.stride, ly.padding)
+            shape = (oh, ow, c)
+        elif isinstance(ly, GAP):
+            shape = ("flat", shape[2])
+        elif isinstance(ly, Dense):
+            fin = shape[1] if shape[0] == "flat" else shape[0] * shape[1] * shape[2]
+            if ly.out == NUM_CLASSES_FULL:
+                fout = classes
+            else:
+                fout = _r8(ly.out * width * 0.5)
+            key, k1 = jax.random.split(key)
+            wgt = jax.random.normal(k1, (fin, fout), jnp.float32) * jnp.sqrt(2.0 / fin)
+            out.append(wgt)
+            out.append(jnp.zeros((fout,), jnp.float32))
+            shape = ("flat", fout)
+        elif isinstance(ly, Identity):
+            pass
+        elif isinstance(ly, Parallel):
+            outs = []
+            for path in ly.paths:
+                key, k1 = jax.random.split(key)
+                s2 = _init_params_layers(path, shape, width, classes, k1, out)
+                outs.append(s2)
+            if ly.combine == "concat":
+                shape = (outs[0][0], outs[0][1], sum(o[2] for o in outs))
+            else:
+                shape = outs[0]
+        else:
+            raise TypeError(f"unknown layer {ly!r}")
+    return shape
+
+
+def init_block_params(arch: Arch, width: float, classes: int, seed: int):
+    """Returns: list (per block) of flat param lists, deterministic in seed."""
+    shape = (INPUT_SHAPE[1], INPUT_SHAPE[2], INPUT_SHAPE[3])
+    all_params = []
+    key = jax.random.PRNGKey(seed)
+    for blk in arch.blocks:
+        key, bk = jax.random.split(key)
+        ps: List[jax.Array] = []
+        shape = _init_params_layers(blk.layers, shape, width, classes, bk, ps)
+        all_params.append(ps)
+    return all_params
+
+
+class _ParamCursor:
+    def __init__(self, params):
+        self.params = list(params)
+        self.i = 0
+
+    def take(self, n=2):
+        got = self.params[self.i : self.i + n]
+        self.i += n
+        return got
+
+
+def _fwd_layers(layers, x, cur, width, classes, *, use_ref: bool, interpret: bool):
+    kc = kref if use_ref else None
+    for ly in layers:
+        if isinstance(ly, Conv):
+            w, b = cur.take()
+            if x.ndim == 2:
+                raise ValueError("conv after flatten")
+            if use_ref:
+                x = kref.conv2d(x, w, b, stride=ly.stride, padding=ly.padding, relu=ly.relu)
+            else:
+                x = kconv.conv2d(
+                    x, w, b, stride=ly.stride, padding=ly.padding, relu=ly.relu,
+                    interpret=interpret,
+                )
+        elif isinstance(ly, DWConv):
+            w, b = cur.take()
+            if use_ref:
+                # depthwise == grouped conv with feature_group_count=C
+                c = x.shape[3]
+                wr = w.reshape(ly.kernel, ly.kernel, 1, c)
+                y = jax.lax.conv_general_dilated(
+                    x, wr, (ly.stride, ly.stride), ly.padding,
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                    feature_group_count=c,
+                )
+                y = y + b.reshape(1, 1, 1, -1)
+                x = jnp.maximum(y, 0.0) if ly.relu else y
+            else:
+                x = kconv.dwconv2d(
+                    x, w, b, stride=ly.stride, padding=ly.padding, relu=ly.relu,
+                    interpret=interpret,
+                )
+        elif isinstance(ly, Pool):
+            if use_ref:
+                x = kref.pool2d(x, kernel=ly.kernel, stride=ly.stride, mode=ly.mode,
+                                padding=ly.padding)
+            else:
+                x = kpool.pool2d(x, kernel=ly.kernel, stride=ly.stride, mode=ly.mode,
+                                 padding=ly.padding, interpret=interpret)
+        elif isinstance(ly, GAP):
+            if use_ref:
+                x = kref.global_avg_pool(x)
+            else:
+                x = kpool.global_avg_pool(x, interpret=interpret)
+        elif isinstance(ly, Dense):
+            w, b = cur.take()
+            if x.ndim == 4:
+                x = x.reshape(1, -1)
+            if use_ref:
+                x = kref.dense(x, w, b, relu=ly.relu)
+            else:
+                y = kmm.matmul(x, w, interpret=interpret) + b
+                x = jnp.maximum(y, 0.0) if ly.relu else y
+        elif isinstance(ly, Identity):
+            pass
+        elif isinstance(ly, Parallel):
+            outs = []
+            for path in ly.paths:
+                outs.append(
+                    _fwd_layers(path, x, cur, width, classes, use_ref=use_ref,
+                                interpret=interpret)
+                )
+            if ly.combine == "concat":
+                x = jnp.concatenate(outs, axis=3)
+            else:
+                x = outs[0]
+                for o in outs[1:]:
+                    x = x + o
+            if ly.post_relu:
+                x = jnp.maximum(x, 0.0)
+        else:
+            raise TypeError(f"unknown layer {ly!r}")
+    return x
+
+
+def block_forward(arch: Arch, bidx: int, x, params, *, interpret: bool = True):
+    """Forward one block through the Pallas kernels."""
+    cur = _ParamCursor(params)
+    y = _fwd_layers(
+        arch.blocks[bidx].layers, x, cur, arch.tiny_width, arch.tiny_classes,
+        use_ref=False, interpret=interpret,
+    )
+    assert cur.i == len(cur.params), f"unused params in {arch.name}[{bidx}]"
+    return y
+
+
+def block_forward_ref(arch: Arch, bidx: int, x, params):
+    """Forward one block through the pure-jnp oracle."""
+    cur = _ParamCursor(params)
+    y = _fwd_layers(
+        arch.blocks[bidx].layers, x, cur, arch.tiny_width, arch.tiny_classes,
+        use_ref=True, interpret=True,
+    )
+    assert cur.i == len(cur.params)
+    return y
+
+
+def model_forward_ref(arch: Arch, x, all_params):
+    for i in range(len(arch.blocks)):
+        x = block_forward_ref(arch, i, x, all_params[i])
+    return x
+
+
+def test_frame(seed: int = 7) -> jax.Array:
+    """Deterministic 224x224x3 synthetic frame used for goldens."""
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.uniform(key, INPUT_SHAPE, jnp.float32)
+    # superimpose a deterministic gradient so the frame is not pure noise
+    yy = jnp.linspace(0.0, 1.0, INPUT_SHAPE[1]).reshape(1, -1, 1, 1)
+    xx = jnp.linspace(0.0, 1.0, INPUT_SHAPE[2]).reshape(1, 1, -1, 1)
+    return 0.5 * base + 0.3 * yy + 0.2 * xx

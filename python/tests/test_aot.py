@@ -1,0 +1,85 @@
+"""AOT artifact contract tests: manifest structure, digests, golden shapes.
+
+These run against artifacts/ if present (make artifacts); they are the
+python half of the interchange contract the Rust runtime tests re-verify.
+"""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def _manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_has_all_models():
+    m = _manifest()
+    assert set(m["models"]) == {
+        "googlenet", "alexnet", "resnet", "mobilenet", "squeezenet"
+    }
+
+
+def test_block_files_exist_and_digests_match():
+    m = _manifest()
+    for model in m["models"].values():
+        for blk in model["blocks"]:
+            hlo = os.path.join(ART, blk["hlo"])
+            assert os.path.exists(hlo), hlo
+            with open(hlo) as f:
+                head = f.read(64)
+            assert "HloModule" in head
+            for key, rel in (("params_sha256", "params"), ("golden_sha256", "golden")):
+                path = os.path.join(ART, blk[rel])
+                with open(path, "rb") as f:
+                    data = f.read()
+                assert hashlib.sha256(data).hexdigest() == blk[key], path
+
+
+def test_param_bin_sizes_match_shapes():
+    m = _manifest()
+    for model in m["models"].values():
+        for blk in model["blocks"]:
+            n = sum(int(np.prod(s)) for s in blk["param_shapes"])
+            assert n == blk["param_floats"]
+            size = os.path.getsize(os.path.join(ART, blk["params"]))
+            assert size == 4 * n, blk["hlo"]
+
+
+def test_golden_chain_shapes():
+    m = _manifest()
+    for model in m["models"].values():
+        for blk in model["blocks"]:
+            elems = int(np.prod(blk["out_shape"]))
+            size = os.path.getsize(os.path.join(ART, blk["golden"]))
+            assert size == 4 * elems, blk["golden"]
+
+
+def test_resolution_trajectory_recorded():
+    m = _manifest()
+    for model in m["models"].values():
+        res = [b["out_res"] for b in model["blocks"]]
+        assert all(a >= b for a, b in zip(res, res[1:]))
+        assert any(r <= 20 for r in res)  # privacy threshold reachable
+
+
+def test_kernel_structure_metrics_present():
+    m = _manifest()
+    for model in m["models"].values():
+        # every block with a matmul-shaped op carries VMEM/MXU metrics
+        with_kernel = [b for b in model["blocks"] if b["kernel"]]
+        assert with_kernel, model["name"]
+        for blk in with_kernel:
+            assert blk["kernel"]["vmem_bytes"] <= 4 * 1024 * 1024
+            assert 0.0 < blk["kernel"]["mxu_utilization"] <= 1.0

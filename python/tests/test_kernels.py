@@ -1,0 +1,166 @@
+"""Layer-1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/paddings; assert_allclose at float32
+tolerance. This is the core L1 correctness signal: if these pass, the HLO
+emitted by aot.py computes ref.py semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as kconv
+from compile.kernels import matmul as kmm
+from compile.kernels import pool as kpool
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 64),
+    n=st.integers(1, 200),
+)
+def test_matmul_matches_ref(m, k, n):
+    x, w = _rand(m * 7 + 1, (m, k)), _rand(n * 13 + 2, (k, n))
+    got = kmm.matmul(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul(x, w)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_tile_padding_exact():
+    # non-multiple-of-tile M and N must be sliced back exactly
+    x, w = _rand(1, (129, 27)), _rand(2, (27, 130))
+    got = kmm.matmul(x, w)
+    assert got.shape == (129, 130)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul(x, w)), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 9216, 256), (3136, 72, 24), (12544, 147, 16)])
+def test_matmul_zoo_shapes(m, k, n):
+    x, w = _rand(3, (m, k)), _rand(4, (k, n))
+    np.testing.assert_allclose(
+        np.asarray(kmm.matmul(x, w)),
+        np.asarray(ref.matmul(x, w)),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+def test_pick_tiles_respects_vmem_budget():
+    for m, k, n in [(12544, 147, 64), (3136, 1152, 256), (1, 9216, 512)]:
+        assert kmm.vmem_footprint_bytes(m, k, n) <= kmm.VMEM_BUDGET
+
+
+def test_mxu_utilization_in_unit_interval():
+    for m, k, n in [(4, 3, 5), (128, 128, 128), (3136, 27, 16)]:
+        u = kmm.mxu_utilization_estimate(m, k, n)
+        assert 0.0 < u <= 1.0
+    # perfectly tiled problem wastes nothing
+    assert kmm.mxu_utilization_estimate(128, 128, 128) == 1.0
+
+
+# ---------------------------------------------------------------- conv2d
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(6, 40),
+    cin=st.sampled_from([1, 3, 8]),
+    cout=st.sampled_from([8, 16]),
+    k=st.sampled_from([1, 3, 5]),
+    s=st.sampled_from([1, 2]),
+    pad=st.sampled_from(["SAME", "VALID"]),
+    relu=st.booleans(),
+)
+def test_conv2d_matches_ref(h, cin, cout, k, s, pad, relu):
+    if pad == "VALID" and h < k:
+        return
+    x = _rand(h * 31 + cin, (1, h, h, cin))
+    w = _rand(cout * 17 + k, (k, k, cin, cout)) * 0.1
+    b = _rand(5, (cout,)) * 0.1
+    got = kconv.conv2d(x, w, b, stride=s, padding=pad, relu=relu)
+    want = ref.conv2d(x, w, b, stride=s, padding=pad, relu=relu)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_explicit_padding_alexnet_conv1():
+    x = _rand(1, (1, 224, 224, 3))
+    w = _rand(2, (11, 11, 3, 16)) * 0.05
+    b = jnp.zeros((16,))
+    got = kconv.conv2d(x, w, b, stride=4, padding=((2, 2), (2, 2)))
+    want = ref.conv2d(x, w, b, stride=4, padding=((2, 2), (2, 2)))
+    assert got.shape == (1, 55, 55, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(8, 36),
+    c=st.sampled_from([8, 16]),
+    s=st.sampled_from([1, 2]),
+)
+def test_dwconv2d_matches_grouped_conv(h, c, s):
+    x = _rand(h, (1, h, h, c))
+    w = _rand(c, (3, 3, c)) * 0.2
+    b = _rand(9, (c,)) * 0.1
+    got = kconv.dwconv2d(x, w, b, stride=s, padding="SAME")
+    wr = w.reshape(3, 3, 1, c)
+    y = jax.lax.conv_general_dilated(
+        x, wr, (s, s), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    ) + b.reshape(1, 1, 1, -1)
+    want = jnp.maximum(y, 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- pooling
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(6, 40),
+    c=st.sampled_from([4, 8]),
+    k=st.sampled_from([2, 3]),
+    s=st.sampled_from([1, 2]),
+    mode=st.sampled_from(["max", "avg"]),
+    pad=st.sampled_from(["VALID", "SAME"]),
+)
+def test_pool2d_matches_ref(h, c, k, s, mode, pad):
+    if pad == "VALID" and h < k:
+        return
+    x = _rand(h * 3 + c, (1, h, h, c))
+    got = kpool.pool2d(x, kernel=k, stride=s, mode=mode, padding=pad)
+    want = ref.pool2d(x, kernel=k, stride=s, mode=mode, padding=pad)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_global_avg_pool_matches_ref():
+    x = _rand(11, (1, 7, 7, 32))
+    np.testing.assert_allclose(
+        np.asarray(kpool.global_avg_pool(x)),
+        np.asarray(ref.global_avg_pool(x)),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_maxpool_same_padding_uses_neg_inf():
+    # all-negative inputs: SAME zero-padding would corrupt a max pool
+    x = -jnp.ones((1, 5, 5, 4), jnp.float32)
+    got = kpool.pool2d(x, kernel=3, stride=2, mode="max", padding="SAME")
+    assert float(np.max(np.asarray(got))) == -1.0

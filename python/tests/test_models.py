@@ -1,0 +1,100 @@
+"""Layer-2 correctness: model zoo structure, shapes, determinism, and
+pallas-vs-ref equivalence block by block."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_resolution_trajectory_monotone_nonincreasing(name):
+    metas = M.block_meta(M.ZOO[name], 1.0, M.NUM_CLASSES_FULL)
+    res = [m["out_res"] for m in metas]
+    assert all(a >= b for a, b in zip(res, res[1:])), res
+    assert res[-1] == 1  # every model ends in a classifier vector
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_every_model_crosses_privacy_threshold(name):
+    # delta = 20x20 (paper §VI-B): every model must eventually produce an
+    # intermediate output below it, otherwise no offload is ever legal.
+    metas = M.block_meta(M.ZOO[name], 1.0, M.NUM_CLASSES_FULL)
+    assert any(m["out_res"] <= 20 for m in metas)
+
+
+def test_full_scale_profiles_match_published_models():
+    # sanity-calibration of the analytical profile against well-known
+    # numbers (tolerances are loose; these catch transcription errors).
+    gf = {
+        n: sum(m["flops"] for m in M.block_meta(M.ZOO[n], 1.0, 1000)) / 1e9
+        for n in M.MODEL_NAMES
+    }
+    pb = {
+        n: sum(m["param_floats"] for m in M.block_meta(M.ZOO[n], 1.0, 1000)) * 4 / 1e6
+        for n in M.MODEL_NAMES
+    }
+    assert 2.5 < gf["googlenet"] < 4.0
+    assert 1.3 < gf["alexnet"] < 3.0
+    assert 0.9 < gf["mobilenet"] < 1.4
+    assert 220 < pb["alexnet"] < 260  # AlexNet ~ 240 MB
+    assert 20 < pb["googlenet"] < 35
+    assert pb["squeezenet"] < 8  # SqueezeNet ~ 5 MB
+    assert 12 < pb["mobilenet"] < 20
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_tiny_resolution_trajectory_equals_full(name):
+    # the privacy metric depends only on the stride/pool schedule, which the
+    # tiny instantiation must preserve exactly
+    full = [m["out_res"] for m in M.block_meta(M.ZOO[name], 1.0, 1000)]
+    tiny = [
+        m["out_res"]
+        for m in M.block_meta(M.ZOO[name], M.ZOO[name].tiny_width, M.ZOO[name].tiny_classes)
+    ]
+    assert full == tiny
+
+
+def test_init_params_deterministic():
+    a = M.init_block_params(M.ZOO["alexnet"], 0.125, 10, 42)
+    b = M.init_block_params(M.ZOO["alexnet"], 0.125, 10, 42)
+    for pa, pb_ in zip(a, b):
+        for x, y in zip(pa, pb_):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_test_frame_deterministic_and_bounded():
+    f1, f2 = M.test_frame(), M.test_frame()
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    a = np.asarray(f1)
+    assert a.shape == M.INPUT_SHAPE and a.min() >= 0.0 and a.max() <= 1.0
+
+
+@pytest.mark.parametrize("name", ["squeezenet", "resnet"])
+def test_block_chain_pallas_matches_ref(name):
+    arch = M.ZOO[name]
+    ps = M.init_block_params(arch, arch.tiny_width, arch.tiny_classes, 42)
+    x = M.test_frame()
+    for b in range(len(arch.blocks)):
+        yp = M.block_forward(arch, b, x, ps[b])
+        yr = M.block_forward_ref(arch, b, x, ps[b])
+        np.testing.assert_allclose(
+            np.asarray(yp), np.asarray(yr), rtol=2e-4, atol=2e-4
+        )
+        x = yr
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_block_shapes_chain(name):
+    # out_shape of block i must equal in_shape of block i+1 (the contract
+    # the Rust chain executor relies on)
+    arch = M.ZOO[name]
+    metas = M.block_meta(arch, arch.tiny_width, arch.tiny_classes)
+    for a, b in zip(metas, metas[1:]):
+        # flatten boundaries are allowed: conv (h,w,c) -> dense consumes h*w*c
+        if a["out_shape"][0] != "flat" and b["in_shape"][0] == "flat":
+            h, w, c = a["out_shape"]
+            assert h * w * c == b["in_shape"][1]
+        else:
+            assert a["out_shape"] == b["in_shape"]

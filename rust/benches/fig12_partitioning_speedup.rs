@@ -1,0 +1,95 @@
+//! Fig. 12 — the paper's headline result: speedup of five partitioning
+//! strategies over the 1-TEE baseline for a 10 800-frame stream, per model.
+//!
+//! Paper shape to reproduce:
+//!   * GoogLeNet / MobileNet / SqueezeNet: 2 TEEs (1.8–1.95×) beats
+//!     1 TEE + GPU (1.15–1.5×) because the resolution crosses δ late;
+//!   * AlexNet / ResNet: 1 TEE + GPU (2.5–3.1×) beats 2 TEEs (2.2–2.3×)
+//!     because the crossing is early;
+//!   * Proposed (2 TEEs + GPU) is best everywhere: 3.2–4.7×, max AlexNet;
+//!   * No-pipelining collapses to the 1 TEE + GPU decision.
+//!
+//! Both the closed-form cost model and the discrete-event simulator score
+//! every strategy; the two agreeing is part of the check.
+
+use serdab::figures::{dump_json, Table};
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::model::MODEL_NAMES;
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::profiler::calibrated_profile;
+use serdab::sim::{simulate, SimConfig};
+use serdab::util::json::{arr, num, obj, s, Json};
+
+const FRAMES: u64 = 10_800; // the paper's dataset: 3h of video at 1 fps
+
+fn main() -> anyhow::Result<()> {
+    let man = load_manifest(default_artifacts_dir())?;
+    println!("# Fig. 12 — speedup vs 1-TEE, {FRAMES} frames, δ=20px, 30 Mbps WAN\n");
+
+    let mut table = Table::new(&[
+        "model", "1 TEE", "No pipelining", "1 TEE & 1 GPU", "2 TEEs", "Proposed",
+        "proposed placement",
+    ]);
+    let mut json_models = Vec::new();
+
+    for name in MODEL_NAMES {
+        let model = man.model(name)?;
+        let profile = calibrated_profile(model);
+        let cm = CostModel::new(&profile);
+
+        let base_plan = plan(Strategy::OneTee, &cm, FRAMES);
+        let base_des = simulate(&cm, &base_plan.placement, &SimConfig {
+            frames: FRAMES,
+            ..Default::default()
+        })
+        .completion_secs;
+
+        let mut cells = vec![name.to_string()];
+        let mut jrow = vec![("model", s(name))];
+        let mut speedups = Vec::new();
+        let mut proposed_desc = String::new();
+        for strat in Strategy::ALL {
+            let p = plan(strat, &cm, FRAMES);
+            let des = simulate(&cm, &p.placement, &SimConfig {
+                frames: FRAMES,
+                ..Default::default()
+            })
+            .completion_secs;
+            let model_speedup = base_plan.cost.chunk_secs(FRAMES) / p.cost.chunk_secs(FRAMES);
+            let des_speedup = base_des / des;
+            // closed form and DES must agree (within 2%)
+            let err = (model_speedup - des_speedup).abs() / des_speedup;
+            assert!(
+                err < 0.02,
+                "{name}/{:?}: model {model_speedup:.3} vs DES {des_speedup:.3}",
+                strat
+            );
+            cells.push(format!("{des_speedup:.2}x"));
+            speedups.push((strat.name(), des_speedup));
+            if strat == Strategy::Proposed {
+                proposed_desc = p.placement.describe();
+            }
+        }
+        cells.push(proposed_desc.clone());
+        table.row(cells);
+        jrow.push((
+            "speedups",
+            Json::Obj(
+                speedups
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), num(*v)))
+                    .collect(),
+            ),
+        ));
+        jrow.push(("proposed_placement", s(proposed_desc)));
+        json_models.push(obj(jrow));
+    }
+
+    println!("{}", table.render());
+    println!("\npaper: 2TEE wins for googlenet/mobilenet/squeezenet (1.8-1.95x vs 1.15-1.5x);");
+    println!("       GPU wins for alexnet/resnet (2.5-3.1x vs 2.2-2.3x); proposed 3.2-4.7x.");
+    let path = dump_json("fig12", &obj(vec![("frames", num(FRAMES as f64)), ("models", arr(json_models))]))?;
+    println!("json: {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Fig. 13 — single-frame execution-time breakdown, 1 TEE vs 2 TEEs:
+//! compute in TEE₁, encrypt, transmit (30 Mbps), decrypt, compute in TEE₂.
+//!
+//! Paper shape: the sum of the two enclaves' compute times is *less* than
+//! the whole model in one enclave for 4 of the 5 models (paging relief —
+//! each enclave's resident set shrinks), most pronounced for AlexNet
+//! (largest model, 243 MB) and absent for SqueezeNet (5 MB, never pages).
+//! AES-128 enc+dec stays < 2.5 ms/frame (we measure our real AES-GCM);
+//! transmission is 0.01–0.12 s depending on the boundary tensor.
+
+use serdab::crypto::gcm::AesGcm;
+use serdab::figures::{dump_json, BenchTimer, Table};
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::model::MODEL_NAMES;
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::profiler::calibrated_profile;
+use serdab::util::json::{arr, num, obj, s};
+
+/// Measure real AES-128-GCM seal+open on a tensor of `bytes`.
+fn measure_crypto_secs(bytes: usize) -> f64 {
+    let gcm = AesGcm::new(b"serdab-fig13-key");
+    let timer = BenchTimer::new(2, 9);
+    let mut buf = vec![7u8; bytes];
+    let m = timer.measure(|| {
+        let tag = gcm.seal(&[1u8; 12], b"fig13", &mut buf);
+        gcm.open(&[1u8; 12], b"fig13", &mut buf, &tag).unwrap();
+    });
+    m.median_secs
+}
+
+fn main() -> anyhow::Result<()> {
+    let man = load_manifest(default_artifacts_dir())?;
+    println!("# Fig. 13 — per-frame breakdown: 1 TEE vs 2 TEEs\n");
+
+    let mut table = Table::new(&[
+        "model", "1 TEE total", "TEE1 part", "enc+dec (measured)", "transmit", "TEE2 part",
+        "2-TEE compute sum", "paging relief",
+    ]);
+    let mut json_models = Vec::new();
+    let mut relief_count = 0;
+
+    for name in MODEL_NAMES {
+        let model = man.model(name)?;
+        let profile = calibrated_profile(model);
+        let cm = CostModel::new(&profile);
+
+        let one = plan(Strategy::OneTee, &cm, 1).cost.single_secs;
+        let two = plan(Strategy::TwoTees, &cm, 10_800);
+        assert_eq!(two.placement.stages.len(), 2);
+        let cut = two.placement.stages[0].range.end;
+        let boundary_bytes = profile.cut_bytes[cut - 1];
+
+        let t1 = two.cost.stage_secs[0];
+        let t2 = two.cost.stage_secs[1];
+        let crypto = measure_crypto_secs(boundary_bytes as usize);
+        let transmit = cm.net.transfer_secs(boundary_bytes);
+        let sum2 = t1 + t2;
+        let relief = one - sum2;
+        if relief > 0.0 {
+            relief_count += 1;
+        }
+
+        // the paper's stated bound on AES cost is 2.5 ms/frame for *their*
+        // boundary tensors (≤ ~0.5 MB); scale the bound by tensor size and
+        // keep a generous ceiling — crypto must stay negligible vs compute
+        assert!(
+            crypto < 25e-3 && crypto < 0.05 * (t1 + t2),
+            "{name}: measured AES {crypto}s is not negligible vs compute {:.2}s",
+            t1 + t2
+        );
+
+        table.row(vec![
+            name.into(),
+            format!("{one:.2}s"),
+            format!("{t1:.2}s"),
+            format!("{:.2}ms", crypto * 1e3),
+            format!("{transmit:.3}s"),
+            format!("{t2:.2}s"),
+            format!("{sum2:.2}s"),
+            format!("{:+.2}s", relief),
+        ]);
+        json_models.push(obj(vec![
+            ("model", s(name)),
+            ("one_tee_secs", num(one)),
+            ("tee1_secs", num(t1)),
+            ("tee2_secs", num(t2)),
+            ("crypto_secs_measured", num(crypto)),
+            ("transmit_secs", num(transmit)),
+            ("boundary_bytes", num(boundary_bytes as f64)),
+            ("paging_relief_secs", num(relief)),
+        ]));
+    }
+
+    println!("{}", table.render());
+    println!("\nmodels with 2-TEE compute sum < 1-TEE total: {relief_count}/5 (paper: 4/5, squeezenet excepted)");
+    println!("paper: enc+dec < 2.5 ms/frame; transmission 0.01–0.12 s; compute 1.1 s (squeezenet) – 7.2 s (resnet)");
+
+    let path = dump_json(
+        "fig13",
+        &obj(vec![("models", arr(json_models)), ("relief_count", num(relief_count as f64))]),
+    )?;
+    println!("json: {}", path.display());
+    Ok(())
+}

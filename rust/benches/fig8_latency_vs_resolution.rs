@@ -1,0 +1,57 @@
+//! Fig. 8 — relationship between the percentage of inference time spent
+//! and the resolution of the intermediate output, per model.
+//!
+//! Paper shape: monotone — deeper ⇒ more cumulative time, lower
+//! resolution; GoogLeNet/SqueezeNet need ~80% of inference time to reach
+//! an output ≤ 20×20 px while AlexNet/ResNet get there in < 50%.
+
+use serdab::figures::{dump_json, Table};
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::model::{DELTA_RESOLUTION, MODEL_NAMES};
+use serdab::profiler::calibrate::tee_block_secs_with_paging;
+use serdab::profiler::calibrated_profile;
+use serdab::util::json::{arr, num, obj, s};
+
+fn main() -> anyhow::Result<()> {
+    let man = load_manifest(default_artifacts_dir())?;
+    println!("# Fig. 8 — % of inference time vs resolution of intermediate output\n");
+
+    let mut json_models = Vec::new();
+    for name in MODEL_NAMES {
+        let model = man.model(name)?;
+        let profile = calibrated_profile(model);
+        let secs = tee_block_secs_with_paging(&profile);
+        let total: f64 = secs.iter().sum();
+
+        let mut table = Table::new(&["block", "out resolution", "cum. time %"]);
+        let mut series = Vec::new();
+        let mut cum = 0.0;
+        let mut frac_at_delta = None;
+        for (b, &t) in model.blocks.iter().zip(&secs) {
+            cum += t;
+            let pct = 100.0 * cum / total;
+            table.row(vec![b.name.clone(), format!("{}x{}", b.out_res, b.out_res), format!("{pct:.1}%")]);
+            series.push(obj(vec![
+                ("block", s(b.name.clone())),
+                ("out_res", num(b.out_res as f64)),
+                ("cum_time_pct", num(pct)),
+            ]));
+            if frac_at_delta.is_none() && b.out_res <= DELTA_RESOLUTION {
+                frac_at_delta = Some(pct);
+            }
+        }
+        let at_delta = frac_at_delta.expect("model must cross δ");
+        println!("## {name} — reaches ≤{DELTA_RESOLUTION}x{DELTA_RESOLUTION} at {at_delta:.0}% of inference time\n");
+        println!("{}\n", table.render());
+        json_models.push(obj(vec![
+            ("model", s(name)),
+            ("pct_at_delta", num(at_delta)),
+            ("series", arr(series)),
+        ]));
+    }
+
+    println!("paper: googlenet/squeezenet ≈80%, mobilenet ≈70%, alexnet/resnet <50%");
+    let path = dump_json("fig8", &obj(vec![("models", arr(json_models))]))?;
+    println!("json: {}", path.display());
+    Ok(())
+}

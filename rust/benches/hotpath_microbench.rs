@@ -1,0 +1,93 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the three components
+//! on the per-frame critical path of the live pipeline —
+//!   1. AES-128-GCM seal+open of boundary tensors (crypto),
+//!   2. Tensor ⇄ PJRT literal bridging + block execution (runtime),
+//!   3. record framing + channel sealing (net + channel).
+//!
+//! Run before/after each optimization; the table is the §Perf log's input.
+
+use serdab::crypto::channel::Channel;
+use serdab::crypto::gcm::AesGcm;
+use serdab::figures::{BenchTimer, Table};
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::runtime::executor::cpu_client;
+use serdab::runtime::{ChainExecutor, Tensor};
+use serdab::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    println!("# hot-path microbench\n");
+    let timer = BenchTimer::new(3, 21);
+    let mut table = Table::new(&["component", "payload", "median", "throughput"]);
+
+    // --- 1. GCM on representative boundary-tensor sizes -------------------
+    let gcm = AesGcm::new(b"hotpath-bench-ke");
+    for &kb in &[64usize, 400, 1600] {
+        let bytes = kb * 1024;
+        let mut buf = vec![3u8; bytes];
+        let m = timer.measure(|| {
+            let tag = gcm.seal(&[1u8; 12], b"bench", &mut buf);
+            gcm.open(&[1u8; 12], b"bench", &mut buf, &tag).unwrap();
+        });
+        table.row(vec![
+            "gcm seal+open".into(),
+            fmt_bytes(bytes as u64),
+            format!("{m}"),
+            format!("{:.0} MB/s", 2.0 * bytes as f64 / m.median_secs / 1e6),
+        ]);
+    }
+
+    // --- 2. channel record seal (incl. nonce + framing) -------------------
+    {
+        let mut ch = Channel::new(b"bench-secret", true);
+        let payload = vec![7u8; 400 * 1024];
+        let m = timer.measure(|| std::hint::black_box(ch.tx.seal_record(&payload)));
+        table.row(vec![
+            "channel seal_record".into(),
+            fmt_bytes(payload.len() as u64),
+            format!("{m}"),
+            format!("{:.0} MB/s", payload.len() as f64 / m.median_secs / 1e6),
+        ]);
+    }
+
+    // --- 3. tensor bridge + block execution --------------------------------
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let man = load_manifest(&dir)?;
+        let client = cpu_client()?;
+        let info = man.model("squeezenet")?;
+        let chain = ChainExecutor::load(&client, &man, "squeezenet")?;
+        let input =
+            Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone())?;
+
+        let m = timer.measure(|| std::hint::black_box(input.to_literal().unwrap()));
+        table.row(vec![
+            "tensor→literal".into(),
+            fmt_bytes(input.byte_len() as u64),
+            format!("{m}"),
+            format!("{:.0} MB/s", input.byte_len() as f64 / m.median_secs / 1e6),
+        ]);
+
+        let b0 = &chain.blocks[0];
+        let m = timer.measure(|| std::hint::black_box(b0.run(&input).unwrap()));
+        table.row(vec![
+            format!("block run [{}]", b0.name),
+            fmt_bytes(input.byte_len() as u64),
+            format!("{m}"),
+            String::new(),
+        ]);
+
+        let slow = BenchTimer::new(1, 5);
+        let m = slow.measure(|| std::hint::black_box(chain.run(&input).unwrap()));
+        table.row(vec![
+            "full chain (10 blocks)".into(),
+            fmt_bytes(input.byte_len() as u64),
+            format!("{m}"),
+            String::new(),
+        ]);
+    } else {
+        eprintln!("(artifacts missing — runtime rows skipped)");
+    }
+
+    println!("{}", table.render());
+    Ok(())
+}

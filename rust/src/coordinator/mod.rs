@@ -1,0 +1,15 @@
+//! Edge-cloud orchestration (the paper's §III architecture): the Resource
+//! Manager tracks registered devices, the Application Manager consults the
+//! privacy-aware placement, attests every enclave, deploys the partition
+//! services onto per-device dataflow engines, wires the transmission
+//! operators, and runs the stream; the Monitor compares online profiling
+//! against the predicted stage times and triggers re-partitioning on
+//! drift (§V "Algorithm Steps").
+
+pub mod deploy;
+pub mod monitor;
+pub mod resources;
+
+pub use deploy::{Deployment, DeploymentReport};
+pub use monitor::{Monitor, MonitorVerdict};
+pub use resources::{RegisteredDevice, ResourceManager};

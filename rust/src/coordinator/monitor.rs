@@ -1,0 +1,120 @@
+//! Online monitor (paper §V "Algorithm Steps"): "the system keeps
+//! monitoring the online profiling information for the execution time of
+//! each NN layer and issues a re-partitioning when the profiling
+//! information deviates from the predicted execution times."
+//!
+//! The monitor keeps an exponentially-weighted mean of observed per-stage
+//! times and compares against the cost model's predictions; sustained
+//! relative drift beyond the threshold yields `Repartition`.
+
+/// Verdict after feeding an observation window.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MonitorVerdict {
+    /// Observations track predictions.
+    Healthy,
+    /// Sustained drift on the named stage: re-run the placement solver
+    /// with the observed times.
+    Repartition { stage: usize, predicted: f64, observed: f64 },
+}
+
+#[derive(Debug)]
+pub struct Monitor {
+    predicted: Vec<f64>,
+    ewma: Vec<f64>,
+    alpha: f64,
+    /// relative drift that triggers repartitioning (e.g. 0.5 = 50%)
+    pub threshold: f64,
+    /// consecutive drifting windows required
+    pub patience: u32,
+    strikes: Vec<u32>,
+}
+
+impl Monitor {
+    pub fn new(predicted_stage_secs: Vec<f64>) -> Self {
+        let n = predicted_stage_secs.len();
+        Monitor {
+            ewma: predicted_stage_secs.clone(),
+            predicted: predicted_stage_secs,
+            alpha: 0.5,
+            threshold: 0.5,
+            patience: 3,
+            strikes: vec![0; n],
+        }
+    }
+
+    /// Feed one frame's observed per-stage times.
+    pub fn observe(&mut self, stage_secs: &[f64]) -> MonitorVerdict {
+        assert_eq!(stage_secs.len(), self.predicted.len(), "stage arity changed");
+        for (i, &obs) in stage_secs.iter().enumerate() {
+            self.ewma[i] = self.alpha * obs + (1.0 - self.alpha) * self.ewma[i];
+            let drift = (self.ewma[i] - self.predicted[i]).abs() / self.predicted[i].max(1e-9);
+            if drift > self.threshold {
+                self.strikes[i] += 1;
+                if self.strikes[i] >= self.patience {
+                    return MonitorVerdict::Repartition {
+                        stage: i,
+                        predicted: self.predicted[i],
+                        observed: self.ewma[i],
+                    };
+                }
+            } else {
+                self.strikes[i] = 0;
+            }
+        }
+        MonitorVerdict::Healthy
+    }
+
+    /// Adopt new predictions after a re-plan.
+    pub fn reset(&mut self, predicted_stage_secs: Vec<f64>) {
+        let n = predicted_stage_secs.len();
+        self.ewma = predicted_stage_secs.clone();
+        self.predicted = predicted_stage_secs;
+        self.strikes = vec![0; n];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_when_on_prediction() {
+        let mut m = Monitor::new(vec![1.0, 2.0]);
+        for _ in 0..50 {
+            assert_eq!(m.observe(&[1.05, 1.9]), MonitorVerdict::Healthy);
+        }
+    }
+
+    #[test]
+    fn sustained_drift_triggers_repartition() {
+        let mut m = Monitor::new(vec![1.0, 2.0]);
+        let mut fired = false;
+        for _ in 0..20 {
+            if let MonitorVerdict::Repartition { stage, .. } = m.observe(&[1.0, 4.5]) {
+                assert_eq!(stage, 1);
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "monitor never fired on 2.25x drift");
+    }
+
+    #[test]
+    fn transient_spike_is_tolerated() {
+        let mut m = Monitor::new(vec![1.0]);
+        assert_eq!(m.observe(&[5.0]), MonitorVerdict::Healthy); // 1 strike
+        for _ in 0..30 {
+            assert_eq!(m.observe(&[1.0]), MonitorVerdict::Healthy);
+        }
+    }
+
+    #[test]
+    fn reset_adopts_new_plan() {
+        let mut m = Monitor::new(vec![1.0]);
+        for _ in 0..10 {
+            let _ = m.observe(&[3.0]);
+        }
+        m.reset(vec![3.0]);
+        assert_eq!(m.observe(&[3.0]), MonitorVerdict::Healthy);
+    }
+}

@@ -1,0 +1,111 @@
+//! Resource Manager: the registry of compute devices available to execute
+//! NN layers (paper §III). Devices register dynamically (the provider
+//! "reports the available resources correctly" per the threat model) and
+//! the placement solver draws its resource graph from here.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::placement::Resource;
+use crate::profiler::DeviceKind;
+
+/// A registered device: the placement-level resource plus liveness and the
+/// simulated hardware key its quotes verify under.
+#[derive(Debug, Clone)]
+pub struct RegisteredDevice {
+    pub resource: Resource,
+    pub hw_key: [u8; 32],
+    pub online: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct ResourceManager {
+    devices: BTreeMap<&'static str, RegisteredDevice>,
+}
+
+impl ResourceManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The paper's evaluation testbed: two edges, a TEE on each, GPU on E2.
+    pub fn paper_testbed() -> Self {
+        use crate::placement::{E1_CPU, E2_CPU, E2_GPU, TEE1, TEE2};
+        let mut rm = Self::new();
+        for (i, r) in [TEE1, TEE2, E1_CPU, E2_CPU, E2_GPU].into_iter().enumerate() {
+            rm.register(r, [i as u8 + 1; 32]).unwrap();
+        }
+        rm
+    }
+
+    pub fn register(&mut self, resource: Resource, hw_key: [u8; 32]) -> Result<()> {
+        if self.devices.contains_key(resource.name) {
+            bail!("device {} already registered", resource.name);
+        }
+        self.devices.insert(resource.name, RegisteredDevice { resource, hw_key, online: true });
+        Ok(())
+    }
+
+    pub fn deregister(&mut self, name: &str) -> Result<()> {
+        match self.devices.get_mut(name) {
+            Some(d) => {
+                d.online = false;
+                Ok(())
+            }
+            None => bail!("unknown device {name}"),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&RegisteredDevice> {
+        self.devices.get(name).filter(|d| d.online)
+    }
+
+    /// Online resources, trusted first (the solver expects TEE1 first).
+    pub fn online(&self) -> Vec<Resource> {
+        let mut v: Vec<Resource> =
+            self.devices.values().filter(|d| d.online).map(|d| d.resource).collect();
+        v.sort_by_key(|r| (!r.kind.trusted(), r.host, r.name));
+        v
+    }
+
+    pub fn online_tees(&self) -> usize {
+        self.online().iter().filter(|r| r.kind == DeviceKind::Tee).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{E2_GPU, TEE1, TEE2};
+
+    #[test]
+    fn register_and_lookup() {
+        let mut rm = ResourceManager::new();
+        rm.register(TEE1, [1u8; 32]).unwrap();
+        assert!(rm.get("TEE1").is_some());
+        assert!(rm.get("TEE2").is_none());
+        assert!(rm.register(TEE1, [1u8; 32]).is_err(), "double registration");
+    }
+
+    #[test]
+    fn deregister_marks_offline() {
+        let mut rm = ResourceManager::new();
+        rm.register(TEE1, [1u8; 32]).unwrap();
+        rm.register(E2_GPU, [2u8; 32]).unwrap();
+        rm.deregister("TEE1").unwrap();
+        assert!(rm.get("TEE1").is_none());
+        assert_eq!(rm.online().len(), 1);
+        assert!(rm.deregister("nope").is_err());
+    }
+
+    #[test]
+    fn paper_testbed_has_two_tees() {
+        let rm = ResourceManager::paper_testbed();
+        assert_eq!(rm.online_tees(), 2);
+        assert_eq!(rm.online().len(), 5);
+        // trusted resources sort first
+        assert_eq!(rm.online()[0], TEE1);
+        assert_eq!(rm.online()[1], TEE2);
+    }
+}

@@ -1,0 +1,187 @@
+//! Simulated SGX remote attestation.
+//!
+//! In the paper, the user and the app developer "have a method, provided by
+//! Intel, to perform remote attestation on all the trusted hardware that
+//! they rent to ensure that the code has actually been deployed by Serdab"
+//! (§II-B). We do not have SGX hardware; this module reproduces the
+//! *protocol role* of attestation in the system: before the coordinator
+//! deploys a partition to an enclave, the enclave produces a **quote** over
+//! its measurement (hash of the code identity + the model-partition
+//! parameters it loaded + a caller-supplied challenge), signed with a key
+//! that only the (simulated) hardware knows; the verifier checks the quote
+//! against the expected measurement before releasing the session secret
+//! that keys the inter-enclave channel.
+//!
+//! The signature is HMAC-SHA256 under a per-"machine" hardware key —
+//! standing in for EPID/DCAP signatures; the trust argument (verifier
+//! compares measurement against an expected value established out of band)
+//! is structurally the same and exercises the same code paths in the
+//! coordinator.
+
+use anyhow::{bail, Result};
+
+use super::{hmac, os_random, sha256};
+
+/// What the verifier expects the enclave to be running.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Measurement(pub [u8; 32]);
+
+impl Measurement {
+    /// Measurement = H(code_id || param_digest) — the enclave's identity is
+    /// the inference service build plus the exact model partition sealed
+    /// into it.
+    pub fn compute(code_id: &str, param_digest: &[u8; 32]) -> Measurement {
+        let mut buf = Vec::with_capacity(code_id.len() + 32);
+        buf.extend_from_slice(code_id.as_bytes());
+        buf.extend_from_slice(param_digest);
+        Measurement(sha256(&buf))
+    }
+}
+
+/// A quote: measurement + challenge echo, signed by the hardware key.
+#[derive(Debug, Clone)]
+pub struct Quote {
+    pub measurement: Measurement,
+    pub challenge: [u8; 32],
+    pub mac: [u8; 32],
+}
+
+/// The enclave side of attestation (holds the simulated hardware key).
+pub struct QuotingEnclave {
+    hw_key: [u8; 32],
+}
+
+impl QuotingEnclave {
+    pub fn new(hw_key: [u8; 32]) -> Self {
+        QuotingEnclave { hw_key }
+    }
+
+    /// Generate a fresh simulated hardware key (per machine, at boot).
+    pub fn generate() -> Self {
+        let mut k = [0u8; 32];
+        os_random(&mut k);
+        QuotingEnclave { hw_key: k }
+    }
+
+    pub fn quote(&self, measurement: &Measurement, challenge: [u8; 32]) -> Quote {
+        let mut msg = Vec::with_capacity(64);
+        msg.extend_from_slice(&measurement.0);
+        msg.extend_from_slice(&challenge);
+        Quote { measurement: measurement.clone(), challenge, mac: hmac(&self.hw_key, &msg) }
+    }
+
+    /// The verification service role (Intel IAS / DCAP collateral): in the
+    /// simulation the verifier consults the same hardware key registry.
+    pub fn hw_key(&self) -> [u8; 32] {
+        self.hw_key
+    }
+}
+
+/// Verifier state: a fresh challenge per attestation round.
+pub struct Verifier {
+    pub challenge: [u8; 32],
+    expected: Measurement,
+    hw_key: [u8; 32],
+}
+
+impl Verifier {
+    pub fn new(expected: Measurement, hw_key: [u8; 32]) -> Self {
+        let mut challenge = [0u8; 32];
+        os_random(&mut challenge);
+        Verifier { challenge, expected, hw_key }
+    }
+
+    /// Check the quote: correct signature, matching measurement, and the
+    /// challenge we issued (freshness). On success the caller may release
+    /// the channel session secret to the enclave.
+    pub fn verify(&self, q: &Quote) -> Result<()> {
+        if q.challenge != self.challenge {
+            bail!("attestation: stale or foreign challenge (replay?)");
+        }
+        if q.measurement != self.expected {
+            bail!("attestation: measurement mismatch — enclave is not running the expected code/partition");
+        }
+        let mut msg = Vec::with_capacity(64);
+        msg.extend_from_slice(&q.measurement.0);
+        msg.extend_from_slice(&q.challenge);
+        let want = hmac(&self.hw_key, &msg);
+        if want != q.mac {
+            bail!("attestation: quote signature invalid");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (QuotingEnclave, Measurement) {
+        let qe = QuotingEnclave::new([9u8; 32]);
+        let m = Measurement::compute("serdab-nn-service-v1", &[3u8; 32]);
+        (qe, m)
+    }
+
+    #[test]
+    fn honest_quote_verifies() {
+        let (qe, m) = setup();
+        let v = Verifier::new(m.clone(), qe.hw_key());
+        let q = qe.quote(&m, v.challenge);
+        v.verify(&q).unwrap();
+    }
+
+    #[test]
+    fn wrong_code_rejected() {
+        let (qe, m) = setup();
+        let v = Verifier::new(m, qe.hw_key());
+        let evil = Measurement::compute("trojaned-service", &[3u8; 32]);
+        let q = qe.quote(&evil, v.challenge);
+        assert!(v.verify(&q).is_err());
+    }
+
+    #[test]
+    fn wrong_params_rejected() {
+        // provider swapped the model partition: param digest differs
+        let (qe, m) = setup();
+        let v = Verifier::new(m, qe.hw_key());
+        let swapped = Measurement::compute("serdab-nn-service-v1", &[4u8; 32]);
+        let q = qe.quote(&swapped, v.challenge);
+        assert!(v.verify(&q).is_err());
+    }
+
+    #[test]
+    fn stale_challenge_rejected() {
+        let (qe, m) = setup();
+        let v1 = Verifier::new(m.clone(), qe.hw_key());
+        let old = qe.quote(&m, v1.challenge);
+        let v2 = Verifier::new(m, qe.hw_key());
+        assert!(v2.verify(&old).is_err(), "quote for v1's challenge must not satisfy v2");
+    }
+
+    #[test]
+    fn forged_signature_rejected() {
+        let (qe, m) = setup();
+        let v = Verifier::new(m.clone(), qe.hw_key());
+        let mut q = qe.quote(&m, v.challenge);
+        q.mac[0] ^= 1;
+        assert!(v.verify(&q).is_err());
+    }
+
+    #[test]
+    fn different_hw_key_rejected() {
+        // quote produced by a machine whose hardware key the verifier
+        // does not trust
+        let (_, m) = setup();
+        let rogue = QuotingEnclave::new([1u8; 32]);
+        let v = Verifier::new(m.clone(), [9u8; 32]);
+        let q = rogue.quote(&m, v.challenge);
+        assert!(v.verify(&q).is_err());
+    }
+
+    #[test]
+    fn measurement_deterministic() {
+        let a = Measurement::compute("svc", &[7u8; 32]);
+        let b = Measurement::compute("svc", &[7u8; 32]);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,180 @@
+//! TLS-like secure channel between enclaves ("secret passages").
+//!
+//! The paper requires (§II-B threat model) that the channel from camera to
+//! enclave and between enclaves is "protected by TLS or similar secure
+//! protocols", and that each enclave encrypts its output before it crosses
+//! the untrusted host. This module implements that "similar secure
+//! protocol": a session is established from a shared secret (delivered via
+//! the attestation step, see `attest.rs`), per-direction AES-128-GCM keys
+//! are derived with label separation, and every record carries an explicit
+//! 64-bit sequence number that is authenticated as AAD — replay, reorder,
+//! and truncation of records are therefore detected.
+//!
+//! Record layout (what travels over the untrusted wire):
+//!   [seq: u64 BE][len: u32 BE][nonce: 12B][tag: 16B][ciphertext: len B]
+
+use anyhow::{bail, Context, Result};
+
+use super::gcm::AesGcm;
+use super::{derive_key, os_random};
+
+/// Fixed per-record overhead in bytes (seq + len + nonce + tag).
+pub const RECORD_OVERHEAD: usize = 8 + 4 + 12 + 16;
+
+/// One direction of a secure channel: seals on one side, opens on the other.
+pub struct SealKey {
+    gcm: AesGcm,
+    seq: u64,
+}
+
+pub struct OpenKey {
+    gcm: AesGcm,
+    expect_seq: u64,
+}
+
+/// Both endpoints derive the same pair of directional keys from the session
+/// secret; `initiator` decides which direction each side seals on.
+pub struct Channel {
+    pub tx: SealKey,
+    pub rx: OpenKey,
+}
+
+impl Channel {
+    pub fn new(session_secret: &[u8], initiator: bool) -> Self {
+        let k_i2r = derive_key(session_secret, "serdab/i2r");
+        let k_r2i = derive_key(session_secret, "serdab/r2i");
+        let (ktx, krx) = if initiator { (k_i2r, k_r2i) } else { (k_r2i, k_i2r) };
+        Channel {
+            tx: SealKey { gcm: AesGcm::new(&ktx), seq: 0 },
+            rx: OpenKey { gcm: AesGcm::new(&krx), expect_seq: 0 },
+        }
+    }
+}
+
+impl SealKey {
+    /// Encrypt `plain` into a self-contained record.
+    pub fn seal_record(&mut self, plain: &[u8]) -> Vec<u8> {
+        let mut nonce = [0u8; 12];
+        os_random(&mut nonce);
+        let seq = self.seq;
+        self.seq += 1;
+
+        let mut out = Vec::with_capacity(RECORD_OVERHEAD + plain.len());
+        out.extend_from_slice(&seq.to_be_bytes());
+        out.extend_from_slice(&(plain.len() as u32).to_be_bytes());
+        out.extend_from_slice(&nonce);
+        out.extend_from_slice(&[0u8; 16]); // tag placeholder
+        out.extend_from_slice(plain);
+
+        let aad = seq.to_be_bytes();
+        let (_, body) = out.split_at_mut(RECORD_OVERHEAD);
+        let tag = self.gcm.seal(&nonce, &aad, body);
+        out[24..40].copy_from_slice(&tag);
+        out
+    }
+}
+
+impl OpenKey {
+    /// Verify + decrypt one record; enforces strictly sequential delivery.
+    pub fn open_record(&mut self, record: &[u8]) -> Result<Vec<u8>> {
+        if record.len() < RECORD_OVERHEAD {
+            bail!("record truncated: {} bytes", record.len());
+        }
+        let seq = u64::from_be_bytes(record[0..8].try_into().unwrap());
+        let len = u32::from_be_bytes(record[8..12].try_into().unwrap()) as usize;
+        let nonce: [u8; 12] = record[12..24].try_into().unwrap();
+        let tag: [u8; 16] = record[24..40].try_into().unwrap();
+        if record.len() != RECORD_OVERHEAD + len {
+            bail!("record length mismatch: header says {len}, got {}", record.len() - RECORD_OVERHEAD);
+        }
+        if seq != self.expect_seq {
+            bail!("replay/reorder detected: expected seq {}, got {seq}", self.expect_seq);
+        }
+        let mut body = record[RECORD_OVERHEAD..].to_vec();
+        self.gcm
+            .open(&nonce, &seq.to_be_bytes(), &mut body, &tag)
+            .context("record authentication failed")?;
+        self.expect_seq += 1;
+        Ok(body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (Channel, Channel) {
+        let secret = b"attested-session-secret";
+        (Channel::new(secret, true), Channel::new(secret, false))
+    }
+
+    #[test]
+    fn roundtrip_both_directions() {
+        let (mut a, mut b) = pair();
+        let r = a.tx.seal_record(b"frame-0 tensor bytes");
+        assert_eq!(b.rx.open_record(&r).unwrap(), b"frame-0 tensor bytes");
+        let r2 = b.tx.seal_record(b"ack");
+        assert_eq!(a.rx.open_record(&r2).unwrap(), b"ack");
+    }
+
+    #[test]
+    fn sequence_numbers_advance() {
+        let (mut a, mut b) = pair();
+        for i in 0..5u32 {
+            let msg = i.to_be_bytes();
+            let r = a.tx.seal_record(&msg);
+            assert_eq!(b.rx.open_record(&r).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn replay_rejected() {
+        let (mut a, mut b) = pair();
+        let r = a.tx.seal_record(b"x");
+        b.rx.open_record(&r).unwrap();
+        assert!(b.rx.open_record(&r).is_err());
+    }
+
+    #[test]
+    fn reorder_rejected() {
+        let (mut a, mut b) = pair();
+        let r0 = a.tx.seal_record(b"first");
+        let r1 = a.tx.seal_record(b"second");
+        assert!(b.rx.open_record(&r1).is_err(), "skipping seq 0 must fail");
+        let _ = r0;
+    }
+
+    #[test]
+    fn tamper_rejected() {
+        let (mut a, mut b) = pair();
+        let mut r = a.tx.seal_record(b"payload-bytes");
+        let n = r.len();
+        r[n - 1] ^= 0x80;
+        assert!(b.rx.open_record(&r).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let (mut a, mut b) = pair();
+        let r = a.tx.seal_record(b"payload-bytes");
+        assert!(b.rx.open_record(&r[..r.len() - 3]).is_err());
+        assert!(b.rx.open_record(&r[..10]).is_err());
+    }
+
+    #[test]
+    fn wrong_secret_fails() {
+        let mut a = Channel::new(b"secret-1", true);
+        let mut b = Channel::new(b"secret-2", false);
+        let r = a.tx.seal_record(b"x");
+        assert!(b.rx.open_record(&r).is_err());
+    }
+
+    #[test]
+    fn ciphertext_hides_plaintext() {
+        let (mut a, _) = pair();
+        let plain = vec![0x41u8; 256];
+        let r = a.tx.seal_record(&plain);
+        // no 16-byte window of the record equals the plaintext run
+        assert!(!r.windows(32).any(|w| w == &plain[..32]));
+    }
+}

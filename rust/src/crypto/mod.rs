@@ -1,0 +1,106 @@
+//! Cryptographic substrate for Serdab's trust boundary.
+//!
+//! The paper's data path is: camera → TLS → TEE₁ → (AES-encrypted
+//! intermediate tensor over an untrusted WAN) → TEE₂ → result. This module
+//! provides the pieces: AES-128-GCM AEAD ([`gcm`]), a TLS-like secure
+//! channel with an HMAC-based key schedule ([`channel`]), and simulated SGX
+//! remote attestation ([`attest`]). Only the AES block core comes from the
+//! vendored `aes` crate; the modes, KDF, channel and attestation protocol
+//! are built here.
+
+pub mod attest;
+pub mod channel;
+pub mod gcm;
+
+use hmac::{Hmac, Mac};
+use sha2::{Digest, Sha256};
+
+pub type HmacSha256 = Hmac<Sha256>;
+
+/// SHA-256 convenience.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize().into()
+}
+
+/// HMAC-SHA256 convenience.
+pub fn hmac(key: &[u8], data: &[u8]) -> [u8; 32] {
+    let mut m = <HmacSha256 as Mac>::new_from_slice(key).expect("hmac accepts any key size");
+    m.update(data);
+    m.finalize().into_bytes().into()
+}
+
+/// HKDF-style expand (single-block, label-separated): enough for deriving
+/// the per-direction channel keys from a session secret.
+pub fn derive_key(secret: &[u8], label: &str) -> [u8; 16] {
+    let full = hmac(secret, label.as_bytes());
+    let mut k = [0u8; 16];
+    k.copy_from_slice(&full[..16]);
+    k
+}
+
+/// Fill `buf` with OS randomness (used for session secrets and nonces).
+pub fn os_random(buf: &mut [u8]) {
+    // getrandom(2) via libc; falls back to a time-seeded xorshift only if
+    // the syscall is unavailable (never on this image).
+    let r = unsafe { libc::getrandom(buf.as_mut_ptr() as *mut libc::c_void, buf.len(), 0) };
+    if r != buf.len() as isize {
+        let mut seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5eed);
+        for b in buf.iter_mut() {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            *b = seed as u8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vector() {
+        // sha256("abc")
+        let d = sha256(b"abc");
+        assert_eq!(
+            hex(&d),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn hmac_known_vector() {
+        // RFC 4231 test case 2
+        let d = hmac(b"Jefe", b"what do ya want for nothing?");
+        assert_eq!(
+            hex(&d),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+    }
+
+    #[test]
+    fn derive_key_label_separation() {
+        let s = b"session-secret";
+        assert_ne!(derive_key(s, "c2s"), derive_key(s, "s2c"));
+        assert_eq!(derive_key(s, "c2s"), derive_key(s, "c2s"));
+    }
+
+    #[test]
+    fn os_random_nontrivial() {
+        let mut a = [0u8; 32];
+        let mut b = [0u8; 32];
+        os_random(&mut a);
+        os_random(&mut b);
+        assert_ne!(a, b);
+        assert_ne!(a, [0u8; 32]);
+    }
+
+    pub(crate) fn hex(b: &[u8]) -> String {
+        b.iter().map(|x| format!("{x:02x}")).collect()
+    }
+}

@@ -1,0 +1,123 @@
+//! Enclave simulator + NN inference service.
+//!
+//! Stands in for the paper's Asylo/SGX deployment (DESIGN.md §2): an
+//! [`EnclaveSim`] owns a partition of the model (a `ChainExecutor` over a
+//! block range), sealed parameters whose digest feeds the attestation
+//! measurement, per-session channel keys, and an EPC accounting model that
+//! reports the working set / paging overflow its partition induces. The
+//! [`service::NnService`] wraps it as the gRPC-like "NN Inference Service"
+//! of the paper's architecture: sealed record in → decrypt *inside the
+//! trust boundary* → run blocks → encrypt → sealed record out.
+
+pub mod service;
+
+pub use service::{NnService, ServiceStats};
+
+use anyhow::Result;
+
+use crate::crypto::attest::{Measurement, Quote, QuotingEnclave};
+use crate::crypto::sha256;
+use crate::profiler::devices::EpcModel;
+
+/// Identity + memory accounting of one simulated enclave.
+pub struct EnclaveSim {
+    /// Code identity of the inference service build.
+    pub code_id: String,
+    /// Digest of the sealed model-partition parameters.
+    pub param_digest: [u8; 32],
+    /// Hardware quoting identity (per machine).
+    qe: QuotingEnclave,
+    /// EPC model for working-set accounting.
+    pub epc: EpcModel,
+    /// Bytes of parameters resident in this enclave.
+    pub resident_param_bytes: u64,
+    /// Peak activation bytes of the hosted partition.
+    pub peak_act_bytes: u64,
+}
+
+impl EnclaveSim {
+    pub fn new(code_id: &str, param_bytes: &[u8], hw_key: [u8; 32]) -> Self {
+        EnclaveSim {
+            code_id: code_id.to_string(),
+            param_digest: sha256(param_bytes),
+            qe: QuotingEnclave::new(hw_key),
+            epc: EpcModel::default(),
+            resident_param_bytes: param_bytes.len() as u64,
+            peak_act_bytes: 0,
+        }
+    }
+
+    /// The measurement a verifier should expect for this enclave.
+    pub fn measurement(&self) -> Measurement {
+        Measurement::compute(&self.code_id, &self.param_digest)
+    }
+
+    /// Produce an attestation quote for a verifier's challenge.
+    pub fn quote(&self, challenge: [u8; 32]) -> Quote {
+        self.qe.quote(&self.measurement(), challenge)
+    }
+
+    /// EPC overflow (bytes) of the current working set — the quantity the
+    /// Fig. 13 paging model charges for.
+    pub fn epc_overflow(&self) -> u64 {
+        self.epc.overflow_bytes(self.resident_param_bytes, self.peak_act_bytes)
+    }
+
+    /// Record the partition's peak activation footprint.
+    pub fn note_activation(&mut self, bytes: u64) {
+        self.peak_act_bytes = self.peak_act_bytes.max(bytes);
+    }
+}
+
+/// Verify an enclave's quote against an expected measurement, returning
+/// the session secret to release on success (the deployment handshake).
+pub fn attest_and_release(
+    expected: Measurement,
+    hw_key: [u8; 32],
+    quote_fn: impl FnOnce([u8; 32]) -> Quote,
+) -> Result<Vec<u8>> {
+    let verifier = crate::crypto::attest::Verifier::new(expected, hw_key);
+    let quote = quote_fn(verifier.challenge);
+    verifier.verify(&quote)?;
+    let mut secret = vec![0u8; 32];
+    crate::crypto::os_random(&mut secret);
+    Ok(secret)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_covers_code_and_params() {
+        let a = EnclaveSim::new("svc", b"params-A", [1u8; 32]);
+        let b = EnclaveSim::new("svc", b"params-B", [1u8; 32]);
+        let c = EnclaveSim::new("svc2", b"params-A", [1u8; 32]);
+        assert_ne!(a.measurement(), b.measurement());
+        assert_ne!(a.measurement(), c.measurement());
+    }
+
+    #[test]
+    fn attest_and_release_happy_path() {
+        let e = EnclaveSim::new("svc", b"params", [7u8; 32]);
+        let secret = attest_and_release(e.measurement(), [7u8; 32], |ch| e.quote(ch)).unwrap();
+        assert_eq!(secret.len(), 32);
+    }
+
+    #[test]
+    fn attest_rejects_swapped_partition() {
+        let honest = EnclaveSim::new("svc", b"params", [7u8; 32]);
+        let evil = EnclaveSim::new("svc", b"trojan-params", [7u8; 32]);
+        let r = attest_and_release(honest.measurement(), [7u8; 32], |ch| evil.quote(ch));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn epc_accounting_tracks_partition_size() {
+        let mut e = EnclaveSim::new("svc", &vec![0u8; 10 << 20], [0u8; 32]);
+        assert_eq!(e.epc_overflow(), 0); // 72 + 10 < 93
+        e.resident_param_bytes = 200 << 20;
+        e.note_activation(4 << 20);
+        assert!(e.epc_overflow() > 0);
+    }
+}

@@ -1,0 +1,177 @@
+//! The NN Inference Service (paper §III): receives encrypted video frames
+//! or intermediate tensors, decrypts them *inside* the trust boundary,
+//! executes its model partition via PJRT, re-encrypts, and returns the
+//! sealed output. The per-frame stats it keeps (compute / seal / open
+//! time) are what the coordinator's monitor consumes for online
+//! re-partitioning.
+
+use anyhow::{Context, Result};
+
+use super::EnclaveSim;
+use crate::crypto::channel::Channel;
+use crate::runtime::{ChainExecutor, Tensor};
+
+/// Running statistics of one service instance.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub frames: u64,
+    pub compute_secs: f64,
+    pub open_secs: f64,
+    pub seal_secs: f64,
+}
+
+impl ServiceStats {
+    pub fn mean_compute(&self) -> f64 {
+        if self.frames == 0 { 0.0 } else { self.compute_secs / self.frames as f64 }
+    }
+
+    pub fn mean_crypto(&self) -> f64 {
+        if self.frames == 0 {
+            0.0
+        } else {
+            (self.open_secs + self.seal_secs) / self.frames as f64
+        }
+    }
+}
+
+/// A deployed partition service: enclave identity + executor + channels.
+pub struct NnService {
+    pub enclave: EnclaveSim,
+    pub chain: ChainExecutor,
+    /// Channel from the upstream hop (camera or previous enclave).
+    pub ingress: Channel,
+    /// Channel to the downstream hop (None for the final stage).
+    pub egress: Option<Channel>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub stats: ServiceStats,
+}
+
+impl NnService {
+    pub fn new(
+        enclave: EnclaveSim,
+        chain: ChainExecutor,
+        ingress: Channel,
+        egress: Option<Channel>,
+    ) -> Self {
+        let in_shape = chain.blocks.first().map(|b| b.in_shape.clone()).unwrap_or_default();
+        let out_shape = chain.blocks.last().map(|b| b.out_shape.clone()).unwrap_or_default();
+        NnService { enclave, chain, ingress, egress, in_shape, out_shape, stats: Default::default() }
+    }
+
+    /// Process one sealed record: open → run partition → seal for the next
+    /// hop (or return plaintext bytes for a trusted local sink when this is
+    /// the final stage and `egress` is None).
+    pub fn process_record(&mut self, record: &[u8]) -> Result<Vec<u8>> {
+        let t0 = std::time::Instant::now();
+        let plain = self
+            .ingress
+            .rx
+            .open_record(record)
+            .context("opening ingress record inside enclave")?;
+        let t_open = t0.elapsed().as_secs_f64();
+
+        let input = Tensor::from_le_bytes(&plain, self.in_shape.clone())?;
+        self.enclave.note_activation(input.byte_len() as u64);
+        let t1 = std::time::Instant::now();
+        let out = self.chain.run(&input)?;
+        let t_compute = t1.elapsed().as_secs_f64();
+        self.enclave.note_activation(out.byte_len() as u64);
+
+        let t2 = std::time::Instant::now();
+        let out_bytes = out.to_le_bytes();
+        let sealed = match &mut self.egress {
+            Some(ch) => ch.tx.seal_record(&out_bytes),
+            None => out_bytes,
+        };
+        let t_seal = t2.elapsed().as_secs_f64();
+
+        self.stats.frames += 1;
+        self.stats.open_secs += t_open;
+        self.stats.compute_secs += t_compute;
+        self.stats.seal_secs += t_seal;
+        Ok(sealed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{default_artifacts_dir, load_manifest};
+    use crate::runtime::executor::cpu_client;
+
+    #[test]
+    fn two_chained_services_reproduce_the_full_model() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let man = load_manifest(&dir).unwrap();
+        let client = cpu_client().unwrap();
+        let name = "squeezenet";
+        let info = man.model(name).unwrap();
+        let m = info.m();
+        let cut = m / 2;
+
+        // session secrets established by (simulated) attestation
+        let cam_secret = b"camera-to-tee1".to_vec();
+        let hop_secret = b"tee1-to-tee2".to_vec();
+
+        let mut svc1 = NnService::new(
+            EnclaveSim::new("serdab-nn", b"p1", [1u8; 32]),
+            ChainExecutor::load_range(&client, &man, name, 0..cut).unwrap(),
+            Channel::new(&cam_secret, false),
+            Some(Channel::new(&hop_secret, true)),
+        );
+        let mut svc2 = NnService::new(
+            EnclaveSim::new("serdab-nn", b"p2", [2u8; 32]),
+            ChainExecutor::load_range(&client, &man, name, cut..m).unwrap(),
+            Channel::new(&hop_secret, false),
+            None,
+        );
+
+        // camera side: seal the golden frame
+        let mut cam = Channel::new(&cam_secret, true);
+        let input =
+            Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone()).unwrap();
+        let rec0 = cam.tx.seal_record(&input.to_le_bytes());
+
+        let rec1 = svc1.process_record(&rec0).unwrap();
+        let out_bytes = svc2.process_record(&rec1).unwrap();
+        let out =
+            Tensor::from_le_bytes(&out_bytes, info.blocks[m - 1].out_shape.clone()).unwrap();
+
+        let golden = Tensor::from_bin_file(
+            &man.path(&info.blocks[m - 1].golden),
+            info.blocks[m - 1].out_shape.clone(),
+        )
+        .unwrap();
+        assert!(out.max_abs_diff(&golden) < 1e-2, "diff {}", out.max_abs_diff(&golden));
+        assert_eq!(svc1.stats.frames, 1);
+        assert!(svc1.stats.compute_secs > 0.0);
+    }
+
+    #[test]
+    fn service_rejects_replayed_record() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = load_manifest(&dir).unwrap();
+        let client = cpu_client().unwrap();
+        let info = man.model("squeezenet").unwrap();
+        let mut svc = NnService::new(
+            EnclaveSim::new("serdab-nn", b"p", [3u8; 32]),
+            ChainExecutor::load_range(&client, &man, "squeezenet", 0..1).unwrap(),
+            Channel::new(b"cam", false),
+            None,
+        );
+        let mut cam = Channel::new(b"cam", true);
+        let input =
+            Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone()).unwrap();
+        let rec = cam.tx.seal_record(&input.to_le_bytes());
+        svc.process_record(&rec).unwrap();
+        assert!(svc.process_record(&rec).is_err(), "replay must be rejected");
+    }
+}

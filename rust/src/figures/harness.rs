@@ -1,0 +1,140 @@
+//! Micro-bench timer (median / MAD over repeated runs) and markdown table
+//! rendering for the figure benches.
+
+use crate::util::fmt_secs;
+
+/// Repeated-measurement timer: warmup + N timed iterations, reports
+/// median and median-absolute-deviation (robust against scheduler noise).
+pub struct BenchTimer {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub median_secs: f64,
+    pub mad_secs: f64,
+    pub min_secs: f64,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        BenchTimer { warmup: 3, iters: 15 }
+    }
+}
+
+impl BenchTimer {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        BenchTimer { warmup, iters }
+    }
+
+    pub fn measure<R>(&self, mut f: impl FnMut() -> R) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<f64> = (0..self.iters)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                std::hint::black_box(f());
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Measurement {
+            median_secs: median,
+            mad_secs: dev[dev.len() / 2],
+            min_secs: samples[0],
+        }
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ±{}", fmt_secs(self.median_secs), fmt_secs(self.mad_secs))
+    }
+}
+
+/// Markdown table builder for figure output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push('|');
+        for width in &w {
+            out.push_str(&format!("{:-<1$}|", "", width + 2));
+        }
+        for r in &self.rows {
+            out.push('\n');
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something_positive() {
+        let t = BenchTimer::new(1, 5);
+        let m = t.measure(|| {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(m.median_secs > 0.0);
+        assert!(m.min_secs <= m.median_secs);
+    }
+
+    #[test]
+    fn table_renders_aligned_markdown() {
+        let mut t = Table::new(&["model", "speedup"]);
+        t.row(vec!["googlenet".into(), "2.54x".into()]);
+        t.row(vec!["alexnet".into(), "4.7x".into()]);
+        let s = t.render();
+        assert!(s.contains("| model     | speedup |"));
+        assert!(s.lines().count() == 4);
+        assert!(s.lines().nth(1).unwrap().starts_with("|---"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

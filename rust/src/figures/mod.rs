@@ -1,0 +1,22 @@
+//! Figure/table regeneration harness (criterion is not in the offline
+//! vendor set; `harness = false` benches use this instead).
+//!
+//! Every bench binary under `rust/benches/` regenerates one figure of the
+//! paper as a markdown table plus a machine-readable JSON dump under
+//! `target/figures/`, and prints the paper's expected shape next to the
+//! measured one so EXPERIMENTS.md can quote both.
+
+pub mod harness;
+
+pub use harness::{BenchTimer, Table};
+
+use crate::util::json::Json;
+
+/// Write a figure's JSON dump to target/figures/<name>.json.
+pub fn dump_json(name: &str, value: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("target/figures");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_string_pretty())?;
+    Ok(path)
+}

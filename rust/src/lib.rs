@@ -1,0 +1,26 @@
+//! # Serdab
+//!
+//! Reproduction of *Serdab: An IoT Framework for Partitioning Neural
+//! Networks Computation across Multiple Enclaves* (Elgamal & Nahrstedt,
+//! 2020) as a three-layer Rust + JAX + Pallas system: a Rust orchestration
+//! coordinator (this crate) over AOT-compiled per-block HLO artifacts
+//! authored in JAX with Pallas kernels (`python/compile/`).
+//!
+//! See DESIGN.md for the architecture, substitution table (SGX → enclave
+//! simulator, etc.) and experiment index; EXPERIMENTS.md records
+//! paper-vs-measured results for every figure.
+pub mod coordinator;
+pub mod crypto;
+pub mod dataflow;
+pub mod enclave;
+pub mod figures;
+pub mod model;
+pub mod net;
+pub mod placement;
+pub mod privacy;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod study;
+pub mod util;
+pub mod video;

@@ -1,0 +1,195 @@
+//! `serdab` — the leader binary: plan placements, deploy pipelines over
+//! the (simulated) enclave testbed, and stream video through them.
+//!
+//! Subcommands:
+//!   plan   — run the privacy-aware placement solver for a model
+//!   serve  — deploy a placement and stream synthetic surveillance video
+//!   sweep  — strategy × model speedup table (Fig. 12 shape, cost model)
+//!   study  — run the user-study simulators (Fig. 10 / Fig. 11)
+
+use anyhow::Result;
+use serdab::coordinator::{Deployment, ResourceManager};
+use serdab::figures::Table;
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::model::MODEL_NAMES;
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, speedup_table, Strategy};
+use serdab::profiler::calibrated_profile;
+use serdab::util::cli::Command;
+use serdab::util::log;
+use serdab::video::{SceneKind, VideoSource};
+
+fn main() {
+    log::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match args.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let run = match sub {
+        "plan" => cmd_plan(&rest),
+        "serve" => cmd_serve(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "study" => cmd_study(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            return;
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "serdab — privacy-aware NN partitioning across enclaves\n\n\
+     subcommands:\n\
+     \x20 plan   --model <name> [--frames N] [--strategy s]   solve placement\n\
+     \x20 serve  --model <name> [--frames N] [--scene s]      deploy + stream\n\
+     \x20 sweep  [--frames N]                                 Fig.12-style table\n\
+     \x20 study  [--subjects N]                               Fig.10/11 simulators\n\
+     run any with --help for options"
+}
+
+fn strategy_from(name: &str) -> Result<Strategy> {
+    Ok(match name {
+        "one-tee" => Strategy::OneTee,
+        "no-pipelining" => Strategy::NoPipelining,
+        "tee-gpu" => Strategy::TeeGpu,
+        "two-tees" => Strategy::TwoTees,
+        "proposed" => Strategy::Proposed,
+        other => anyhow::bail!(
+            "unknown strategy '{other}' (one-tee|no-pipelining|tee-gpu|two-tees|proposed)"
+        ),
+    })
+}
+
+fn cmd_plan(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serdab plan", "solve the privacy-aware placement")
+        .opt("model", "googlenet", "model name (or 'all')")
+        .opt("frames", "10800", "chunk size n")
+        .opt("strategy", "proposed", "strategy to solve");
+    let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let man = load_manifest(default_artifacts_dir())?;
+    let n: u64 = a.get_u64("frames").map_err(|e| anyhow::anyhow!(e))?;
+    let strat = strategy_from(a.get("strategy"))?;
+    let models: Vec<&str> = if a.get("model") == "all" {
+        MODEL_NAMES.to_vec()
+    } else {
+        vec![a.get("model")]
+    };
+    for m in models {
+        let model = man.model(m)?;
+        let profile = calibrated_profile(model);
+        let cm = CostModel::new(&profile);
+        let p = plan(strat, &cm, n);
+        println!(
+            "{m}: {}\n  chunk({n}) = {:.1}s  period = {:.3}s  single-frame = {:.3}s  (examined {} paths)",
+            p.placement.describe(),
+            p.cost.chunk_secs(n),
+            p.cost.period_secs,
+            p.cost.single_secs,
+            p.examined
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serdab sweep", "strategy × model speedups (cost model)")
+        .opt("frames", "10800", "chunk size n");
+    let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let n: u64 = a.get_u64("frames").map_err(|e| anyhow::anyhow!(e))?;
+    let man = load_manifest(default_artifacts_dir())?;
+    let mut table = Table::new(&["model", "1 TEE", "No pipe", "TEE+GPU", "2 TEEs", "Proposed"]);
+    for m in MODEL_NAMES {
+        let model = man.model(m)?;
+        let profile = calibrated_profile(model);
+        let cm = CostModel::new(&profile);
+        let rows = speedup_table(&cm, n);
+        let mut cells = vec![m.to_string()];
+        for (_, _, sp) in rows {
+            cells.push(format!("{sp:.2}x"));
+        }
+        table.row(cells);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serdab serve", "deploy a placement and stream video")
+        .opt("model", "squeezenet", "model name")
+        .opt("frames", "20", "frames to stream")
+        .opt("scene", "street", "street|indoor|harbour")
+        .opt("strategy", "proposed", "placement strategy")
+        .opt("wan-mbps", "30", "inter-edge bandwidth")
+        .opt("seed", "7", "video seed");
+    let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let man = load_manifest(default_artifacts_dir())?;
+    let model = a.get("model").to_string();
+    let frames: usize = a.get_usize("frames").map_err(|e| anyhow::anyhow!(e))?;
+    let scene = match a.get("scene") {
+        "street" => SceneKind::Street,
+        "indoor" => SceneKind::Indoor,
+        "harbour" => SceneKind::Harbour,
+        s => anyhow::bail!("unknown scene '{s}'"),
+    };
+
+    let info = man.model(&model)?;
+    let profile = calibrated_profile(info);
+    let cm = CostModel::new(&profile);
+    let strat = strategy_from(a.get("strategy"))?;
+    let p = plan(strat, &cm, frames as u64);
+    println!("placement: {}", p.placement.describe());
+
+    let rm = ResourceManager::paper_testbed();
+    let dep = Deployment::deploy(
+        &man,
+        &rm,
+        &model,
+        &p.placement,
+        Some(a.get_f64("wan-mbps").map_err(|e| anyhow::anyhow!(e))? * 1e6),
+        4,
+    )?;
+    let mut src = VideoSource::new(scene, a.get_u64("seed").map_err(|e| anyhow::anyhow!(e))?);
+    let frames_vec: Vec<_> = (0..frames).map(|_| src.next_frame()).collect();
+    let rep = dep.run_stream(frames_vec.into_iter())?;
+    println!(
+        "frames={} total={:.2}s throughput={:.2} fps mean-latency={:.3}s p99={:.3}s checksum={:.3}",
+        rep.frames,
+        rep.total_secs,
+        rep.throughput_fps,
+        rep.mean_latency_secs,
+        rep.p99_latency_secs,
+        rep.output_checksum
+    );
+    Ok(())
+}
+
+fn cmd_study(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serdab study", "user-study simulators")
+        .opt("subjects", "10", "simulated subjects")
+        .opt("images", "10", "images per class (Fig.10)");
+    let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let subjects = a.get_usize("subjects").map_err(|e| anyhow::anyhow!(e))?;
+    let images = a.get_usize("images").map_err(|e| anyhow::anyhow!(e))?;
+
+    println!("Fig.10 accuracy vs resolution:");
+    for (res, acc) in serdab::study::accuracy_by_resolution(&[128, 64, 32, 18, 8], images, 2026) {
+        println!("  {res:>3}px  {:.0}%", acc * 100.0);
+    }
+    let rep = serdab::study::simulate_ranking([114, 57, 29, 20, 14], subjects, 40, 2026);
+    let pct: Vec<String> =
+        rep.agreement_by_rank.iter().map(|a| format!("{:.0}%", a * 100.0)).collect();
+    println!("Fig.11 ranking agreement by rank 1..5: {pct:?}");
+    Ok(())
+}

@@ -1,0 +1,300 @@
+//! Artifact-manifest loader — the python→rust interchange contract
+//! (DESIGN.md §7). Everything the coordinator knows about a model comes
+//! from here; the HLO/params/golden files it references are loaded lazily
+//! by the runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Pallas kernel structure metrics for a block's dominant matmul
+/// (VMEM footprint and MXU utilization estimate; see DESIGN.md §6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelInfo {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub vmem_bytes: u64,
+    pub mxu_utilization: f64,
+}
+
+/// One partitionable unit L_x: shapes and artifacts of the tiny executable
+/// plus the full-scale analytical profile.
+#[derive(Debug, Clone)]
+pub struct BlockInfo {
+    pub idx: usize,
+    pub name: String,
+    /// artifact-relative paths
+    pub hlo: String,
+    pub params: String,
+    pub golden: String,
+    pub params_sha256: String,
+    pub golden_sha256: String,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub param_floats: u64,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    /// spatial resolution (grid-cell px) of the block input / output —
+    /// the paper's privacy metric
+    pub in_res: u32,
+    pub out_res: u32,
+    /// full-scale analytical profile
+    pub flops_full: u64,
+    pub param_bytes_full: u64,
+    pub out_bytes_full: u64,
+    pub act_bytes_full: u64,
+    pub peak_act_bytes_full: u64,
+    pub n_ops: u32,
+    pub kernel: Option<KernelInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub tiny_width: f64,
+    pub tiny_classes: u32,
+    pub golden_input: String,
+    pub total_flops_full: u64,
+    pub model_bytes_full: u64,
+    pub blocks: Vec<BlockInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub seed: u64,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path of an artifact-relative file.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+fn req_u64(j: &Json, k: &str) -> Result<u64> {
+    j.req(k)?
+        .as_u64()
+        .ok_or_else(|| anyhow!("manifest key '{k}' is not a non-negative integer"))
+}
+
+fn req_str(j: &Json, k: &str) -> Result<String> {
+    Ok(j.req(k)?
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest key '{k}' is not a string"))?
+        .to_string())
+}
+
+fn parse_block(j: &Json) -> Result<BlockInfo> {
+    let kernel = match j.get("kernel") {
+        Some(Json::Null) | None => None,
+        Some(k) => Some(KernelInfo {
+            m: req_u64(k, "m")? as usize,
+            k: req_u64(k, "k")? as usize,
+            n: req_u64(k, "n")? as usize,
+            vmem_bytes: req_u64(k, "vmem_bytes")?,
+            mxu_utilization: k
+                .req("mxu_utilization")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("mxu_utilization not a number"))?,
+        }),
+    };
+    Ok(BlockInfo {
+        idx: req_u64(j, "idx")? as usize,
+        name: req_str(j, "name")?,
+        hlo: req_str(j, "hlo")?,
+        params: req_str(j, "params")?,
+        golden: req_str(j, "golden")?,
+        params_sha256: req_str(j, "params_sha256")?,
+        golden_sha256: req_str(j, "golden_sha256")?,
+        param_shapes: j
+            .req("param_shapes")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_shapes not an array"))?
+            .iter()
+            .map(|s| s.as_usize_vec().ok_or_else(|| anyhow!("bad param shape")))
+            .collect::<Result<_>>()?,
+        param_floats: req_u64(j, "param_floats")?,
+        in_shape: j
+            .req("in_shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad in_shape"))?,
+        out_shape: j
+            .req("out_shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad out_shape"))?,
+        in_res: req_u64(j, "in_res")? as u32,
+        out_res: req_u64(j, "out_res")? as u32,
+        flops_full: req_u64(j, "flops_full")?,
+        param_bytes_full: req_u64(j, "param_bytes_full")?,
+        out_bytes_full: req_u64(j, "out_bytes_full")?,
+        act_bytes_full: req_u64(j, "act_bytes_full")?,
+        peak_act_bytes_full: req_u64(j, "peak_act_bytes_full")?,
+        n_ops: req_u64(j, "n_ops")? as u32,
+        kernel,
+    })
+}
+
+fn parse_model(j: &Json) -> Result<ModelInfo> {
+    let blocks: Vec<BlockInfo> = j
+        .req("blocks")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("blocks not an array"))?
+        .iter()
+        .map(parse_block)
+        .collect::<Result<_>>()?;
+    // blocks must be a 0..M chain with matching boundary resolutions
+    for (i, b) in blocks.iter().enumerate() {
+        if b.idx != i {
+            anyhow::bail!("block index gap at {i}");
+        }
+        if i > 0 && blocks[i - 1].out_res != b.in_res {
+            anyhow::bail!("resolution chain broken at block {i}");
+        }
+    }
+    Ok(ModelInfo {
+        name: req_str(j, "name")?,
+        tiny_width: j
+            .req("tiny_width")?
+            .as_f64()
+            .ok_or_else(|| anyhow!("tiny_width not a number"))?,
+        tiny_classes: req_u64(j, "tiny_classes")? as u32,
+        golden_input: req_str(j, "golden_input")?,
+        total_flops_full: req_u64(j, "total_flops_full")?,
+        model_bytes_full: req_u64(j, "model_bytes_full")?,
+        blocks,
+    })
+}
+
+/// Load `artifacts/manifest.json` (or the directory containing it).
+pub fn load_manifest(dir: impl AsRef<Path>) -> Result<Manifest> {
+    let dir = dir.as_ref().to_path_buf();
+    let path = if dir.is_dir() { dir.join("manifest.json") } else { dir.clone() };
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let mut models = BTreeMap::new();
+    for (name, mj) in j
+        .req("models")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("models not an object"))?
+    {
+        models.insert(name.clone(), parse_model(mj).with_context(|| format!("model {name}"))?);
+    }
+    Ok(Manifest {
+        dir: path.parent().unwrap_or(&dir).to_path_buf(),
+        input_shape: j
+            .req("input_shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad input_shape"))?,
+        seed: req_u64(&j, "seed")?,
+        models,
+    })
+}
+
+/// Locate the artifacts directory: $SERDAB_ARTIFACTS, ./artifacts, or the
+/// crate-root artifacts dir (so tests work from any CWD).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SERDAB_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.join("manifest.json").exists() {
+        return local;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let text = r#"{
+          "version": 1, "seed": 42, "input_shape": [1,224,224,3],
+          "models": {"m": {
+            "name": "m", "tiny_width": 0.125, "tiny_classes": 10,
+            "golden_input": "m/golden_input.bin",
+            "total_flops_full": 10, "model_bytes_full": 40,
+            "blocks": [{
+              "idx": 0, "name": "b0", "hlo": "m/block_00.hlo.txt",
+              "params": "m/block_00.params.bin", "params_sha256": "x",
+              "golden": "m/golden_block_00.bin", "golden_sha256": "y",
+              "param_shapes": [[3,3,3,8],[8]], "param_floats": 224,
+              "in_shape": [1,224,224,3], "out_shape": [1,112,112,8],
+              "in_res": 224, "out_res": 112,
+              "flops_full": 10, "param_bytes_full": 40, "out_bytes_full": 8,
+              "act_bytes_full": 16, "peak_act_bytes_full": 8,
+              "n_ops": 1,
+              "kernel": {"m": 12544, "k": 27, "n": 8,
+                         "vmem_bytes": 1000, "mxu_utilization": 0.5}
+            }]
+          }}
+        }"#;
+        let tmp = std::env::temp_dir().join("serdab_manifest_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), text).unwrap();
+        let m = load_manifest(&tmp).unwrap();
+        let model = m.model("m").unwrap();
+        assert_eq!(model.blocks.len(), 1);
+        assert_eq!(model.blocks[0].param_shapes[0], vec![3, 3, 3, 8]);
+        assert_eq!(model.blocks[0].kernel.as_ref().unwrap().m, 12544);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_broken_resolution_chain() {
+        let text = r#"{
+          "version": 1, "seed": 1, "input_shape": [1,4,4,1],
+          "models": {"m": {
+            "name": "m", "tiny_width": 1.0, "tiny_classes": 2,
+            "golden_input": "g", "total_flops_full": 1, "model_bytes_full": 1,
+            "blocks": [
+              {"idx":0,"name":"a","hlo":"h","params":"p","params_sha256":"x",
+               "golden":"g","golden_sha256":"y","param_shapes":[],"param_floats":0,
+               "in_shape":[1,4,4,1],"out_shape":[1,2,2,1],"in_res":4,"out_res":2,
+               "flops_full":1,"param_bytes_full":1,"out_bytes_full":1,
+               "act_bytes_full":1,"peak_act_bytes_full":1,"n_ops":1,"kernel":null},
+              {"idx":1,"name":"b","hlo":"h","params":"p","params_sha256":"x",
+               "golden":"g","golden_sha256":"y","param_shapes":[],"param_floats":0,
+               "in_shape":[1,3,3,1],"out_shape":[1,1,1,1],"in_res":3,"out_res":1,
+               "flops_full":1,"param_bytes_full":1,"out_bytes_full":1,
+               "act_bytes_full":1,"peak_act_bytes_full":1,"n_ops":1,"kernel":null}
+            ]
+          }}
+        }"#;
+        let tmp = std::env::temp_dir().join("serdab_manifest_test_bad");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), text).unwrap();
+        let err = load_manifest(&tmp).unwrap_err();
+        assert!(format!("{err:#}").contains("resolution chain"));
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // `make artifacts` not run yet
+        }
+        let m = load_manifest(&dir).unwrap();
+        assert_eq!(m.models.len(), 5);
+        for name in crate::model::MODEL_NAMES {
+            let model = m.model(name).unwrap();
+            assert!(model.m() >= 8, "{name} suspiciously few blocks");
+            assert!(model.privacy_crossing(20) < model.m(), "{name} never crosses δ");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Neural-network application model: the paper's `NN = {L_x}` as a chain of
+//! partitionable blocks, loaded from the artifact manifest emitted by
+//! `python/compile/aot.py`.
+//!
+//! Two views of each model coexist (DESIGN.md §2):
+//!  * the **full-scale analytical profile** (FLOPs, parameter bytes,
+//!    activation traffic, boundary tensor sizes, spatial resolution) that
+//!    drives the placement algorithm and the paper-scale experiments, and
+//!  * the **tiny executable instantiation** (per-block HLO + params +
+//!    goldens) that the PJRT runtime actually runs end-to-end.
+
+pub mod manifest;
+
+pub use manifest::{load_manifest, BlockInfo, KernelInfo, Manifest, ModelInfo};
+
+/// The five models of the paper's evaluation, in the order of its figures.
+pub const MODEL_NAMES: [&str; 5] =
+    ["googlenet", "alexnet", "resnet", "mobilenet", "squeezenet"];
+
+/// Privacy threshold δ from the paper's user study (§VI-B): an intermediate
+/// output whose grid-cell resolution is at most 20×20 px is considered
+/// unidentifiable.
+pub const DELTA_RESOLUTION: u32 = 20;
+
+impl ModelInfo {
+    /// Number of partitionable units M (paper notation).
+    pub fn m(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// First block index whose *input* is private (resolution ≤ δ): blocks
+    /// `0..crossing` must stay on trusted hardware; `crossing..M` may run on
+    /// untrusted devices (paper constraint C2).
+    ///
+    /// Returns `M` if the model never crosses δ (then only all-trusted
+    /// placements are feasible).
+    pub fn privacy_crossing(&self, delta: u32) -> usize {
+        for b in &self.blocks {
+            if b.in_res <= delta {
+                return b.idx;
+            }
+        }
+        self.m()
+    }
+
+    /// Sum of full-scale FLOPs over a block range.
+    pub fn flops(&self, range: std::ops::Range<usize>) -> u64 {
+        self.blocks[range].iter().map(|b| b.flops_full).sum()
+    }
+
+    /// Sum of full-scale parameter bytes over a block range.
+    pub fn param_bytes(&self, range: std::ops::Range<usize>) -> u64 {
+        self.blocks[range].iter().map(|b| b.param_bytes_full).sum()
+    }
+
+    /// Boundary tensor size (bytes, full scale) when cutting *after* block
+    /// `i` — the D_{L_x} of the paper's transmission term.
+    pub fn cut_bytes(&self, i: usize) -> u64 {
+        self.blocks[i].out_bytes_full
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> ModelInfo {
+        // resolutions: 56, 28, 14, 7, 1 — crossing at input res 14 => idx 3
+        let res = [(224, 56), (56, 28), (28, 14), (14, 7), (7, 1)];
+        ModelInfo {
+            name: "toy".into(),
+            tiny_width: 0.125,
+            tiny_classes: 10,
+            golden_input: String::new(),
+            total_flops_full: 50,
+            model_bytes_full: 500,
+            blocks: res
+                .iter()
+                .enumerate()
+                .map(|(i, &(in_res, out_res))| BlockInfo {
+                    idx: i,
+                    name: format!("b{i}"),
+                    hlo: String::new(),
+                    params: String::new(),
+                    params_sha256: String::new(),
+                    golden: String::new(),
+                    golden_sha256: String::new(),
+                    param_shapes: vec![],
+                    param_floats: 10,
+                    in_shape: vec![1, in_res as usize, in_res as usize, 3],
+                    out_shape: vec![1, out_res as usize, out_res as usize, 3],
+                    in_res,
+                    out_res,
+                    flops_full: 10,
+                    param_bytes_full: 100,
+                    out_bytes_full: (out_res * out_res) as u64,
+                    act_bytes_full: 20,
+                    peak_act_bytes_full: 10,
+                    n_ops: 1,
+                    kernel: None,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn privacy_crossing_uses_input_resolution() {
+        let m = toy_model();
+        // inputs: 224, 56, 28, 14, 7 — first ≤ 20 is block 3 (input 14)
+        assert_eq!(m.privacy_crossing(20), 3);
+        assert_eq!(m.privacy_crossing(5), 5); // never crosses => M
+        assert_eq!(m.privacy_crossing(300), 0); // everything private
+    }
+
+    #[test]
+    fn range_sums() {
+        let m = toy_model();
+        assert_eq!(m.flops(0..2), 20);
+        assert_eq!(m.flops(0..5), 50);
+        assert_eq!(m.param_bytes(1..3), 200);
+        assert_eq!(m.cut_bytes(2), 14 * 14);
+    }
+}

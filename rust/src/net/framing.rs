@@ -1,0 +1,119 @@
+//! Length-prefixed frames: [len: u32 BE][type: u8][payload]. The payload
+//! of DATA frames is a sealed `crypto::channel` record — the framing layer
+//! never sees plaintext tensors.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Frame types on a Serdab connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameType {
+    /// Control-plane JSON (deploy requests, attestation, acks).
+    Control = 0,
+    /// Sealed tensor record.
+    Data = 1,
+    /// End of stream.
+    Eos = 2,
+}
+
+impl FrameType {
+    fn from_u8(v: u8) -> Result<FrameType> {
+        Ok(match v {
+            0 => FrameType::Control,
+            1 => FrameType::Data,
+            2 => FrameType::Eos,
+            _ => bail!("unknown frame type {v}"),
+        })
+    }
+}
+
+/// Maximum accepted frame (64 MB — largest tiny-model boundary is ~1 MB,
+/// full-scale ~3.2 MB; the cap is a sanity bound against corrupt peers).
+pub const MAX_FRAME: usize = 64 << 20;
+
+pub fn write_frame(w: &mut impl Write, ty: FrameType, payload: &[u8]) -> Result<()> {
+    anyhow::ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(&[ty as u8])?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_frame(r: &mut impl Read) -> Result<(FrameType, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head).context("reading frame header")?;
+    let len = u32::from_be_bytes([head[0], head[1], head[2], head[3]]) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds cap");
+    }
+    let ty = FrameType::from_u8(head[4])?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Ok((ty, payload))
+}
+
+/// Convenience wrappers that own a stream half.
+pub struct FrameWriter<W: Write>(pub W);
+pub struct FrameReader<R: Read>(pub R);
+
+impl<W: Write> FrameWriter<W> {
+    pub fn send(&mut self, ty: FrameType, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.0, ty, payload)
+    }
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn recv(&mut self) -> Result<(FrameType, Vec<u8>)> {
+        read_frame(&mut self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameType::Control, b"{\"op\":\"deploy\"}").unwrap();
+        write_frame(&mut buf, FrameType::Data, &[1, 2, 3]).unwrap();
+        write_frame(&mut buf, FrameType::Eos, &[]).unwrap();
+
+        let mut cur = Cursor::new(buf);
+        let (t1, p1) = read_frame(&mut cur).unwrap();
+        assert_eq!((t1, p1.as_slice()), (FrameType::Control, b"{\"op\":\"deploy\"}".as_slice()));
+        let (t2, p2) = read_frame(&mut cur).unwrap();
+        assert_eq!((t2, p2.as_slice()), (FrameType::Data, [1, 2, 3].as_slice()));
+        let (t3, p3) = read_frame(&mut cur).unwrap();
+        assert_eq!(t3, FrameType::Eos);
+        assert!(p3.is_empty());
+    }
+
+    #[test]
+    fn rejects_unknown_type() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&3u32.to_be_bytes());
+        buf.push(9); // bad type
+        buf.extend_from_slice(&[0, 0, 0]);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn rejects_oversize_header() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_be_bytes());
+        buf.push(1);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameType::Data, &[1, 2, 3, 4]).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Network substrate: length-prefixed message framing over TCP and a
+//! token-bucket bandwidth shaper reproducing the paper's controlled
+//! 30 Mbps WAN between the two edge devices.
+
+pub mod framing;
+pub mod throttle;
+
+pub use framing::{read_frame, write_frame, FrameReader, FrameWriter};
+pub use throttle::TokenBucket;

@@ -1,0 +1,96 @@
+//! Token-bucket bandwidth shaper. The paper controls the inter-edge link
+//! to 30 Mbps; the live pipeline reproduces that on loopback by charging
+//! every sent byte against the bucket and sleeping when it runs dry.
+
+use std::time::{Duration, Instant};
+
+/// Token bucket: `rate_bps` bits/second with `burst_bits` of depth.
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate_bps: f64,
+    burst_bits: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate_bps: f64, burst_bits: f64) -> Self {
+        TokenBucket { rate_bps, burst_bits, tokens: burst_bits, last: Instant::now() }
+    }
+
+    /// 30 Mbps with a 256 KiB burst — the paper's WAN profile.
+    pub fn wan_30mbps() -> Self {
+        TokenBucket::new(30e6, 256.0 * 1024.0 * 8.0)
+    }
+
+    fn refill(&mut self) {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate_bps).min(self.burst_bits);
+    }
+
+    /// How long sending `bytes` must wait right now (0 if tokens cover it).
+    pub fn required_delay(&mut self, bytes: usize) -> Duration {
+        self.refill();
+        let need = bytes as f64 * 8.0;
+        if self.tokens >= need {
+            self.tokens -= need;
+            Duration::ZERO
+        } else {
+            let deficit = need - self.tokens;
+            self.tokens = 0.0;
+            Duration::from_secs_f64(deficit / self.rate_bps)
+        }
+    }
+
+    /// Block until `bytes` may be sent (sleeps off the deficit).
+    pub fn consume(&mut self, bytes: usize) {
+        let d = self.required_delay(bytes);
+        if d > Duration::ZERO {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_passes_instantly() {
+        let mut tb = TokenBucket::new(30e6, 8.0 * 1024.0 * 8.0);
+        assert_eq!(tb.required_delay(1024), Duration::ZERO);
+    }
+
+    #[test]
+    fn sustained_rate_is_enforced() {
+        // draining 1 MB over a 30 Mbps bucket with tiny burst must take
+        // ~0.27s of accumulated delay
+        let mut tb = TokenBucket::new(30e6, 1024.0 * 8.0);
+        let mut total = Duration::ZERO;
+        for _ in 0..64 {
+            total += tb.required_delay(16 * 1024);
+        }
+        let expect = (64.0 * 16.0 * 1024.0 * 8.0) / 30e6;
+        let got = total.as_secs_f64();
+        assert!((got - expect).abs() / expect < 0.1, "got {got} want {expect}");
+    }
+
+    #[test]
+    fn refill_caps_at_burst() {
+        let mut tb = TokenBucket::new(1e9, 800.0);
+        std::thread::sleep(Duration::from_millis(5));
+        tb.refill();
+        assert!(tb.tokens <= 800.0);
+    }
+
+    #[test]
+    fn consume_sleeps_real_time() {
+        let mut tb = TokenBucket::new(8e6, 0.0); // 1 MB/s, no burst
+        let t0 = Instant::now();
+        tb.consume(50_000); // 50 KB at 1 MB/s = 50 ms
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.04, "only slept {dt}s");
+    }
+}

@@ -1,0 +1,196 @@
+//! Pipeline cost model: the paper's Eq. 1/2 generalized to any stage chain.
+//!
+//! For a placement with stages s₁..s_k, per-frame stage times e_i (including
+//! enclave paging for the stage's resident set) and boundary costs
+//! b_i = crypto + WAN transfer after stage i:
+//!
+//!   t_single     = Σ e_i + Σ b_i                       (latency, n = 1)
+//!   t_chunk(n)   = t_single + (n-1) · period            (pipelined stream)
+//!   period       = max(max_i e_i, max_i b_i)            (bottleneck stage)
+//!
+//! The WAN link is itself a pipeline stage (transfers of frame f overlap
+//! with compute of frame f+1 — paper Fig. 6), hence `period` includes the
+//! boundary terms. Eq. 2's `n · (slowest TEE)` is the special case where a
+//! TEE dominates. The discrete-event simulator (`sim/`) validates this
+//! closed form event-by-event, including bounded queues.
+
+use super::Placement;
+use crate::profiler::devices::NetworkParams;
+use crate::profiler::{DeviceKind, ModelProfile};
+
+/// Scored placement path.
+#[derive(Debug, Clone)]
+pub struct PathCost {
+    /// Per-frame latency (n = 1), seconds.
+    pub single_secs: f64,
+    /// Pipeline period (bottleneck stage), seconds per frame.
+    pub period_secs: f64,
+    /// Per-stage compute seconds.
+    pub stage_secs: Vec<f64>,
+    /// Per-boundary (crypto, transfer) seconds after each stage except last.
+    pub boundary_secs: Vec<(f64, f64)>,
+}
+
+impl PathCost {
+    /// Paper t_chunk(n, P): completion time for a chunk of n frames.
+    pub fn chunk_secs(&self, n: u64) -> f64 {
+        assert!(n >= 1);
+        self.single_secs + (n - 1) as f64 * self.period_secs
+    }
+
+    /// Steady-state throughput (frames/sec).
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.period_secs
+    }
+}
+
+/// Cost model = profile (per-device block times + paging) + network.
+pub struct CostModel<'a> {
+    pub profile: &'a ModelProfile,
+    pub net: NetworkParams,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(profile: &'a ModelProfile) -> Self {
+        CostModel { profile, net: NetworkParams::default() }
+    }
+
+    /// Score a placement. The placement must be valid for the model.
+    pub fn cost(&self, p: &Placement) -> PathCost {
+        let prof = self.profile;
+        let stage_secs: Vec<f64> = p
+            .stages
+            .iter()
+            .map(|s| prof.stage_secs(s.resource.kind, s.range.clone()))
+            .collect();
+
+        let mut boundary_secs = Vec::new();
+        for win in p.stages.windows(2) {
+            let (a, b) = (&win[0], &win[1]);
+            let cut = a.range.end - 1;
+            let bytes = prof.cut_bytes[cut];
+            // leaving or entering a TEE ⇒ seal/open the boundary tensor
+            let crypto = if a.resource.kind == DeviceKind::Tee
+                || b.resource.kind == DeviceKind::Tee
+            {
+                self.net.crypto_secs(bytes)
+            } else {
+                0.0
+            };
+            // cross-host hop ⇒ WAN transfer at the controlled bandwidth
+            let transfer = if a.resource.host != b.resource.host {
+                self.net.transfer_secs(bytes)
+            } else {
+                0.0
+            };
+            boundary_secs.push((crypto, transfer));
+        }
+
+        let single_secs = stage_secs.iter().sum::<f64>()
+            + boundary_secs.iter().map(|(c, t)| c + t).sum::<f64>();
+        let period_secs = stage_secs
+            .iter()
+            .copied()
+            .chain(boundary_secs.iter().map(|&(c, t)| c + t))
+            .fold(0.0f64, f64::max);
+
+        PathCost { single_secs, period_secs, stage_secs, boundary_secs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{Stage, E2_GPU, TEE1, TEE2};
+    use crate::profiler::devices::EpcModel;
+    use crate::profiler::DeviceProfile;
+
+    /// Hand-built profile: 4 blocks, TEE 1s each, GPU 0.1s each, no paging.
+    fn toy_profile() -> ModelProfile {
+        ModelProfile {
+            model: "toy".into(),
+            m: 4,
+            cpu: DeviceProfile { kind: DeviceKind::UntrustedCpu, block_secs: vec![0.5; 4] },
+            gpu: DeviceProfile { kind: DeviceKind::Gpu, block_secs: vec![0.1; 4] },
+            tee: DeviceProfile { kind: DeviceKind::Tee, block_secs: vec![1.0; 4] },
+            param_bytes: vec![0; 4],
+            peak_act_bytes: vec![0; 4],
+            cut_bytes: vec![3_750_000, 3_750_000, 3_750_000, 0], // 1s at 30Mbps
+            in_res: vec![224, 56, 14, 7],
+            epc: EpcModel::default(),
+        }
+    }
+
+    fn place(stages: Vec<(crate::placement::Resource, std::ops::Range<usize>)>) -> Placement {
+        Placement {
+            stages: stages
+                .into_iter()
+                .map(|(resource, range)| Stage { resource, range })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn single_stage_cost_is_stage_time() {
+        let prof = toy_profile();
+        let cm = CostModel::new(&prof);
+        let c = cm.cost(&Placement::single(TEE1, 4));
+        assert!((c.single_secs - 4.0).abs() < 1e-9);
+        assert!((c.period_secs - 4.0).abs() < 1e-9);
+        assert!((c.chunk_secs(10) - 4.0 * 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_period_is_bottleneck_stage() {
+        let prof = toy_profile();
+        let cm = CostModel::new(&prof);
+        // TEE1 3 blocks (3s), TEE2 1 block (1s); boundary after block 2:
+        // crypto (2*3.75MB/400MBps ≈ 0.019s) + transfer (1.01s)
+        let c = cm.cost(&place(vec![(TEE1, 0..3), (TEE2, 3..4)]));
+        assert!((c.stage_secs[0] - 3.0).abs() < 1e-9);
+        assert!((c.period_secs - 3.0).abs() < 1e-9, "TEE1 is the bottleneck");
+        let expected_single = 3.0 + 1.0 + c.boundary_secs[0].0 + c.boundary_secs[0].1;
+        assert!((c.single_secs - expected_single).abs() < 1e-9);
+    }
+
+    #[test]
+    fn network_can_be_the_bottleneck() {
+        let mut prof = toy_profile();
+        prof.cut_bytes = vec![40_000_000, 0, 0, 0]; // ~10.7s at 30 Mbps
+        let cm = CostModel::new(&prof);
+        let c = cm.cost(&place(vec![(TEE1, 0..1), (TEE2, 1..4)]));
+        assert!(c.period_secs > 10.0, "transfer dominates: {}", c.period_secs);
+    }
+
+    #[test]
+    fn chunk_time_matches_paper_equation_shape() {
+        // Eq. 2: t_chunk(n) ≈ n * slowest-stage for large n
+        let prof = toy_profile();
+        let cm = CostModel::new(&prof);
+        let c = cm.cost(&place(vec![(TEE1, 0..2), (TEE2, 2..4)]));
+        let n = 10_000u64;
+        let t = c.chunk_secs(n);
+        let bound = n as f64 * c.period_secs;
+        assert!((t - bound) / t < 0.01, "t={t} bound={bound}");
+    }
+
+    #[test]
+    fn intra_host_handoff_free_of_transfer() {
+        let prof = toy_profile();
+        let cm = CostModel::new(&prof);
+        // TEE2 and GPU2 share host 1: crypto yes (leaving TEE), transfer no
+        let c = cm.cost(&place(vec![(TEE2, 0..2), (E2_GPU, 2..4)]));
+        let (crypto, transfer) = c.boundary_secs[0];
+        assert!(crypto > 0.0);
+        assert_eq!(transfer, 0.0);
+    }
+
+    #[test]
+    fn gpu_offload_shrinks_period() {
+        let prof = toy_profile();
+        let cm = CostModel::new(&prof);
+        let solo = cm.cost(&Placement::single(TEE1, 4));
+        let split = cm.cost(&place(vec![(TEE1, 0..2), (E2_GPU, 2..4)]));
+        assert!(split.period_secs < solo.period_secs);
+    }
+}

@@ -1,0 +1,148 @@
+//! Privacy-aware placement — the paper's algorithmic contribution (§IV–V).
+//!
+//! A *placement path* P assigns every block L_x to a resource; because the
+//! NN is a chain and data flows forward once, any feasible P is a sequence
+//! of contiguous **stages**, each pinned to one resource. The solver
+//! enumerates the paper's placement tree ([`tree`]), scores every path
+//! under the pipeline cost model ([`cost`]), filters by the privacy
+//! constraint (C1/C2), and picks the argmin. [`strategies`] packages the
+//! five comparison strategies of Fig. 12.
+
+pub mod cost;
+pub mod strategies;
+pub mod tree;
+
+pub use cost::{CostModel, PathCost};
+pub use strategies::{plan, Strategy};
+pub use tree::{enumerate_paths, TreeStats};
+
+use crate::profiler::DeviceKind;
+
+/// A concrete compute resource in the resource graph G_R (paper Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Resource {
+    pub kind: DeviceKind,
+    /// Which edge device hosts it (0 = E1, 1 = E2, ...). Transfers between
+    /// different hosts pay the WAN cost; intra-host handoffs do not.
+    pub host: usize,
+    /// Display name, e.g. "TEE1".
+    pub name: &'static str,
+}
+
+/// The paper's evaluation resource graph: two edge devices, one enclave
+/// each, plus a GPU on E2 (and the untrusted CPUs).
+pub const TEE1: Resource = Resource { kind: DeviceKind::Tee, host: 0, name: "TEE1" };
+pub const TEE2: Resource = Resource { kind: DeviceKind::Tee, host: 1, name: "TEE2" };
+pub const E1_CPU: Resource = Resource { kind: DeviceKind::UntrustedCpu, host: 0, name: "E1" };
+pub const E2_CPU: Resource = Resource { kind: DeviceKind::UntrustedCpu, host: 1, name: "E2" };
+pub const E2_GPU: Resource = Resource { kind: DeviceKind::Gpu, host: 1, name: "GPU2" };
+
+/// One pipeline stage: a contiguous block range on one resource.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub resource: Resource,
+    pub range: std::ops::Range<usize>,
+}
+
+/// A placement path P_j (paper notation): ordered stages covering 0..M.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub stages: Vec<Stage>,
+}
+
+impl Placement {
+    pub fn single(resource: Resource, m: usize) -> Placement {
+        Placement { stages: vec![Stage { resource, range: 0..m }] }
+    }
+
+    /// Validity: stages tile 0..M contiguously, none empty, and no resource
+    /// is used twice (a resource cannot appear in two pipeline positions).
+    pub fn validate(&self, m: usize) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("no stages".into());
+        }
+        let mut next = 0usize;
+        let mut seen = std::collections::HashSet::new();
+        for s in &self.stages {
+            if s.range.start != next {
+                return Err(format!("gap/overlap at block {next}"));
+            }
+            if s.range.is_empty() {
+                return Err(format!("empty stage on {}", s.resource.name));
+            }
+            if !seen.insert(s.resource.name) {
+                return Err(format!("resource {} used twice", s.resource.name));
+            }
+            next = s.range.end;
+        }
+        if next != m {
+            return Err(format!("covers 0..{next}, model has {m} blocks"));
+        }
+        Ok(())
+    }
+
+    /// Indices of blocks placed on untrusted resources.
+    pub fn offloaded(&self) -> impl Iterator<Item = usize> + '_ {
+        self.stages
+            .iter()
+            .filter(|s| !s.resource.kind.trusted())
+            .flat_map(|s| s.range.clone())
+    }
+
+    /// Privacy constraint (C1 ∨ C2): every block on an untrusted resource
+    /// must have a private input (input resolution ≤ δ).
+    pub fn satisfies_privacy(&self, in_res: &[u32], delta: u32) -> bool {
+        self.offloaded().all(|i| in_res[i] <= delta)
+    }
+
+    /// Human-readable form, e.g. `TEE1[0..4] → TEE2[4..8] → GPU2[8..12]`.
+    pub fn describe(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| format!("{}[{}..{}]", s.resource.name, s.range.start, s.range.end))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(stages: Vec<(Resource, std::ops::Range<usize>)>) -> Placement {
+        Placement {
+            stages: stages
+                .into_iter()
+                .map(|(resource, range)| Stage { resource, range })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn valid_three_stage_path() {
+        let pl = p(vec![(TEE1, 0..3), (TEE2, 3..6), (E2_GPU, 6..10)]);
+        assert!(pl.validate(10).is_ok());
+        assert_eq!(pl.describe(), "TEE1[0..3] → TEE2[3..6] → GPU2[6..10]");
+    }
+
+    #[test]
+    fn rejects_gap_overlap_empty_and_reuse() {
+        assert!(p(vec![(TEE1, 0..3), (TEE2, 4..10)]).validate(10).is_err());
+        assert!(p(vec![(TEE1, 0..5), (TEE2, 3..10)]).validate(10).is_err());
+        assert!(p(vec![(TEE1, 0..0), (TEE2, 0..10)]).validate(10).is_err());
+        assert!(p(vec![(TEE1, 0..5), (TEE1, 5..10)]).validate(10).is_err());
+        assert!(p(vec![(TEE1, 0..5)]).validate(10).is_err());
+    }
+
+    #[test]
+    fn privacy_constraint_checks_untrusted_inputs_only() {
+        // resolutions: block inputs 224,56,28,14,7,1
+        let in_res = [224, 56, 28, 14, 7, 1];
+        let ok = p(vec![(TEE1, 0..3), (E2_GPU, 3..6)]);
+        assert!(ok.satisfies_privacy(&in_res, 20)); // GPU sees res 14 ✓
+        let bad = p(vec![(TEE1, 0..2), (E2_GPU, 2..6)]);
+        assert!(!bad.satisfies_privacy(&in_res, 20)); // GPU sees res 28 ✗
+        let all_trusted = p(vec![(TEE1, 0..2), (TEE2, 2..6)]);
+        assert!(all_trusted.satisfies_privacy(&in_res, 20)); // C1
+    }
+}

@@ -1,0 +1,238 @@
+//! The five partitioning strategies compared in the paper's Fig. 12,
+//! plus the generic solver (Step 2 + Step 3 of §V: evaluate every path in
+//! the placement tree, filter by privacy, argmin the chunk completion
+//! time).
+
+use super::cost::{CostModel, PathCost};
+use super::tree::enumerate_paths;
+use super::{Placement, Resource, E1_CPU, E2_CPU, E2_GPU, TEE1, TEE2};
+use crate::model::DELTA_RESOLUTION;
+
+/// Fig. 12 strategy set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Entire NN inside one enclave (the baseline).
+    OneTee,
+    /// Neurosurgeon-style: minimize single-frame latency (n = 1), ignoring
+    /// pipeline parallelism; same resource set as `Proposed`.
+    NoPipelining,
+    /// One enclave + the GPU on the other edge (no second TEE available).
+    TeeGpu,
+    /// Two enclaves only (no untrusted offload).
+    TwoTees,
+    /// The paper's approach: all resources (2 TEEs + GPU + CPUs),
+    /// pipeline-aware chunk-time objective.
+    Proposed,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 5] = [
+        Strategy::OneTee,
+        Strategy::NoPipelining,
+        Strategy::TeeGpu,
+        Strategy::TwoTees,
+        Strategy::Proposed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::OneTee => "1 TEE",
+            Strategy::NoPipelining => "No pipelining",
+            Strategy::TeeGpu => "1 TEE & 1 GPU",
+            Strategy::TwoTees => "2 TEEs",
+            Strategy::Proposed => "Proposed",
+        }
+    }
+
+    /// Ordered resource chains this strategy may draw from.
+    fn chains(self) -> Vec<Vec<Resource>> {
+        match self {
+            Strategy::OneTee => vec![vec![TEE1]],
+            Strategy::TeeGpu => vec![vec![TEE1, E2_GPU]],
+            Strategy::TwoTees => vec![vec![TEE1, TEE2]],
+            Strategy::NoPipelining | Strategy::Proposed => vec![
+                vec![TEE1, TEE2, E2_GPU],
+                vec![TEE1, TEE2, E2_CPU],
+                vec![TEE1, E2_GPU],
+                vec![TEE1, E1_CPU],
+            ],
+        }
+    }
+}
+
+/// A solved plan: the chosen path and its cost.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub strategy: Strategy,
+    pub placement: Placement,
+    pub cost: PathCost,
+    /// Number of candidate paths examined (tree size).
+    pub examined: usize,
+}
+
+/// Solve one strategy: enumerate its tree, keep privacy-feasible paths,
+/// pick the argmin of the objective (chunk time for pipelined strategies,
+/// single-frame latency for NoPipelining), with `n` the chunk size.
+pub fn plan(strategy: Strategy, cm: &CostModel<'_>, n: u64) -> Plan {
+    let m = cm.profile.m;
+    let in_res = &cm.profile.in_res;
+    let mut best: Option<(f64, Placement, PathCost)> = None;
+    let mut examined = 0usize;
+
+    for chain in strategy.chains() {
+        for p in enumerate_paths(&chain, m) {
+            examined += 1;
+            debug_assert!(p.validate(m).is_ok());
+            if !p.satisfies_privacy(in_res, DELTA_RESOLUTION) {
+                continue;
+            }
+            let cost = cm.cost(&p);
+            let objective = match strategy {
+                Strategy::NoPipelining => cost.single_secs,
+                _ => cost.chunk_secs(n),
+            };
+            let better = match &best {
+                None => true,
+                Some((obj, _, _)) => objective < *obj,
+            };
+            if better {
+                best = Some((objective, p, cost));
+            }
+        }
+    }
+    let (_, placement, cost) =
+        best.expect("at least the all-TEE1 path is always privacy-feasible");
+    Plan { strategy, placement, cost, examined }
+}
+
+/// Fig. 12's y-axis: speedup of each strategy over the 1-TEE baseline on a
+/// chunk of `n` frames.
+pub fn speedup_table(cm: &CostModel<'_>, n: u64) -> Vec<(Strategy, Plan, f64)> {
+    let base = plan(Strategy::OneTee, cm, n);
+    let base_t = base.cost.chunk_secs(n);
+    Strategy::ALL
+        .iter()
+        .map(|&s| {
+            let p = plan(s, cm, n);
+            let t = p.cost.chunk_secs(n);
+            (s, p, base_t / t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{default_artifacts_dir, load_manifest};
+    use crate::model::{ModelInfo, DELTA_RESOLUTION, MODEL_NAMES};
+    use crate::profiler::{calibrated_profile, DeviceKind};
+
+    fn with_profiles(f: impl Fn(&ModelInfo, &CostModel<'_>)) {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = load_manifest(&dir).unwrap();
+        for name in MODEL_NAMES {
+            let model = man.model(name).unwrap();
+            let profile = calibrated_profile(model);
+            f(model, &CostModel::new(&profile));
+        }
+    }
+
+    #[test]
+    fn one_tee_is_single_stage() {
+        with_profiles(|m, cm| {
+            let p = plan(Strategy::OneTee, cm, 1000);
+            assert_eq!(p.placement.stages.len(), 1);
+            assert_eq!(p.placement.stages[0].range, 0..m.m());
+        });
+    }
+
+    #[test]
+    fn all_plans_satisfy_privacy() {
+        with_profiles(|_, cm| {
+            for s in Strategy::ALL {
+                let p = plan(s, cm, 10_800);
+                assert!(
+                    p.placement.satisfies_privacy(&cm.profile.in_res, DELTA_RESOLUTION),
+                    "{:?}: {}",
+                    s,
+                    p.placement.describe()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn proposed_dominates_every_other_strategy() {
+        // Proposed's search space is a superset, so its chunk time is ≤ all
+        with_profiles(|m, cm| {
+            let n = 10_800;
+            let best = plan(Strategy::Proposed, cm, n).cost.chunk_secs(n);
+            for s in [Strategy::OneTee, Strategy::TeeGpu, Strategy::TwoTees] {
+                let t = plan(s, cm, n).cost.chunk_secs(n);
+                assert!(
+                    best <= t * (1.0 + 1e-9),
+                    "{}: Proposed {best} > {:?} {t}",
+                    m.name,
+                    s
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn two_tees_split_beats_one_tee_meaningfully() {
+        // Perfect balance is not always feasible (AlexNet's fc6 block alone
+        // overflows the EPC, pinning paging cost to whichever enclave holds
+        // it), so assert the outcome the paper reports instead: a 2-TEE
+        // pipeline is substantially faster than 1 TEE for every model.
+        with_profiles(|m, cm| {
+            let n = 10_800;
+            let p = plan(Strategy::TwoTees, cm, n);
+            assert_eq!(p.placement.stages.len(), 2, "{}", m.name);
+            let base = plan(Strategy::OneTee, cm, n).cost.chunk_secs(n);
+            let speedup = base / p.cost.chunk_secs(n);
+            assert!(speedup > 1.4, "{}: 2-TEE speedup only {speedup:.2}", m.name);
+            // and the split is never absurdly lopsided
+            let c = &p.cost.stage_secs;
+            let ratio = c[0].max(c[1]) / c[0].min(c[1]);
+            assert!(ratio < 3.0, "{}: stages {:?} badly unbalanced", m.name, c);
+        });
+    }
+
+    #[test]
+    fn tee_gpu_offloads_only_private_blocks() {
+        with_profiles(|m, cm| {
+            let p = plan(Strategy::TeeGpu, cm, 10_800);
+            let crossing = m.privacy_crossing(DELTA_RESOLUTION);
+            for s in &p.placement.stages {
+                if s.resource.kind == DeviceKind::Gpu {
+                    assert!(s.range.start >= crossing, "{}: {}", m.name, p.placement.describe());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn no_pipelining_minimizes_single_frame_not_chunk() {
+        with_profiles(|_, cm| {
+            let np = plan(Strategy::NoPipelining, cm, 10_800);
+            let prop = plan(Strategy::Proposed, cm, 10_800);
+            // single-frame objective: NoPipelining is at least as good
+            assert!(np.cost.single_secs <= prop.cost.single_secs * (1.0 + 1e-9));
+        });
+    }
+
+    #[test]
+    fn speedup_table_baseline_is_one() {
+        with_profiles(|_, cm| {
+            let table = speedup_table(cm, 10_800);
+            let one_tee = table.iter().find(|(s, _, _)| *s == Strategy::OneTee).unwrap();
+            assert!((one_tee.2 - 1.0).abs() < 1e-9);
+            let proposed = table.iter().find(|(s, _, _)| *s == Strategy::Proposed).unwrap();
+            assert!(proposed.2 >= 1.0);
+        });
+    }
+}

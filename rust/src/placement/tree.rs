@@ -1,0 +1,161 @@
+//! Placement-tree enumeration (paper §V, Fig. 7).
+//!
+//! Level 1: processing starts in TEE₁ (trusted source side), which takes
+//! blocks `0..c1` for every cut `c1 ∈ 1..=M` — `deg₁ = M`.
+//! Level 2: the remainder runs on E₁, E₂ (CPU or GPU), or goes to TEE₂ —
+//! either entirely, or TEE₂ takes `c2` blocks and level 3 puts the rest on
+//! E₂/GPU₂ — `deg₂ = M + 1` shapes.
+//! Total paths N = O(M²) for the paper's two-TEE resource graph, and
+//! O(M^R) in general; [`enumerate_paths`] is the generalized recursive
+//! enumerator over an ordered resource list with exactly the same shape.
+//!
+//! Enumeration yields *candidate* paths; privacy filtering and cost
+//! scoring happen in the caller (`strategies::plan`), mirroring the
+//! paper's Step 1 (construct) / Step 2 (evaluate) / Step 3 (choose).
+
+use super::{Placement, Resource, Stage};
+
+/// Statistics of one enumeration (for the algorithm-analysis bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreeStats {
+    pub paths: usize,
+    pub m: usize,
+    pub resources: usize,
+}
+
+/// Enumerate every placement path over `resources` (in pipeline order:
+/// the first resource hosts block 0). Each resource takes a non-empty
+/// contiguous range; not every resource must be used, but the *first* must
+/// (processing starts there), and relative order is fixed — exactly the
+/// paper's tree where level k decides where the k-th remainder goes.
+pub fn enumerate_paths(resources: &[Resource], m: usize) -> Vec<Placement> {
+    let mut out = Vec::new();
+    let mut stages: Vec<Stage> = Vec::new();
+    recurse(resources, 0, m, &mut stages, &mut out);
+    out
+}
+
+fn recurse(
+    resources: &[Resource],
+    start: usize,
+    m: usize,
+    stages: &mut Vec<Stage>,
+    out: &mut Vec<Placement>,
+) {
+    if start == m {
+        if !stages.is_empty() {
+            out.push(Placement { stages: stages.clone() });
+        }
+        return;
+    }
+    if resources.is_empty() {
+        return; // blocks left but no resources: dead branch
+    }
+    let (head, rest) = resources.split_first().unwrap();
+    // head takes blocks start..cut for every feasible cut
+    for cut in (start + 1)..=m {
+        stages.push(Stage { resource: *head, range: start..cut });
+        recurse(rest, cut, m, stages, out);
+        stages.pop();
+    }
+    // head skipped entirely — allowed for every resource except the first
+    // (the paper's level 1 always starts in TEE1)
+    if start > 0 {
+        recurse(rest, start, m, stages, out);
+    }
+}
+
+/// The paper's resource-graph enumeration for Fig. 7: TEE1 → TEE2 → GPU2,
+/// plus the E1/E2-CPU variants. Returns candidates + tree stats.
+pub fn paper_tree(m: usize) -> (Vec<Placement>, TreeStats) {
+    use super::{E1_CPU, E2_CPU, E2_GPU, TEE1, TEE2};
+    // Each ordered resource chain is one family of tree branches; dedupe
+    // identical placements that arise from shared prefixes.
+    let chains: [&[Resource]; 4] = [
+        &[TEE1, TEE2, E2_GPU],
+        &[TEE1, TEE2, E2_CPU],
+        &[TEE1, E2_GPU],
+        &[TEE1, E1_CPU],
+    ];
+    let mut all = Vec::new();
+    for chain in chains {
+        all.extend(enumerate_paths(chain, m));
+    }
+    all.sort_by_key(|p| p.describe());
+    all.dedup_by_key(|p| p.describe());
+    let stats = TreeStats { paths: all.len(), m, resources: 5 };
+    (all, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{E2_GPU, TEE1, TEE2};
+    use crate::util::prop;
+
+    #[test]
+    fn two_resources_yield_m_plus_cuts() {
+        // TEE1 alone (1 path: all blocks) + TEE1/TEE2 cut at 1..m-? :
+        // cuts c1 in 1..=m-1 with TEE2 taking the rest, plus all-TEE1
+        let m = 6;
+        let paths = enumerate_paths(&[TEE1, TEE2], m);
+        assert_eq!(paths.len(), m); // m-1 split points + 1 unsplit
+        for p in &paths {
+            p.validate(m).unwrap();
+            assert_eq!(p.stages[0].resource.name, "TEE1");
+        }
+    }
+
+    #[test]
+    fn three_resources_quadratic_count() {
+        // chains over (TEE1, TEE2, GPU): full 3-way splits = C(m-1,2),
+        // 2-way = 2(m-1)... exact: paths that use TEE1 only: 1; TEE1+TEE2 or
+        // TEE1+GPU: 2(m-1); all three: C(m-1,2).
+        let m = 8;
+        let paths = enumerate_paths(&[TEE1, TEE2, E2_GPU], m);
+        let expect = 1 + 2 * (m - 1) + (m - 1) * (m - 2) / 2;
+        assert_eq!(paths.len(), expect);
+    }
+
+    #[test]
+    fn complexity_is_o_m_squared_for_two_tees() {
+        // paper: N = O(M²) with R = 2 TEEs
+        for m in [4usize, 8, 16, 32] {
+            let (_, stats) = paper_tree(m);
+            assert!(
+                stats.paths <= 2 * m * m,
+                "m={m}: {} paths exceeds 2M²",
+                stats.paths
+            );
+        }
+    }
+
+    #[test]
+    fn every_enumerated_path_is_valid_and_ordered() {
+        let m = 9;
+        let (paths, _) = paper_tree(m);
+        for p in &paths {
+            p.validate(m).unwrap();
+            // stages appear in resource-chain order with TEE1 first
+            assert_eq!(p.stages[0].resource.name, "TEE1");
+        }
+    }
+
+    #[test]
+    fn prop_enumeration_valid_for_random_m() {
+        prop::forall("tree-paths-valid", &prop::usize_in(1, 24), 30, |&m| {
+            let (paths, _) = paper_tree(m);
+            if paths.is_empty() {
+                return Err("no paths".into());
+            }
+            for p in &paths {
+                p.validate(m).map_err(|e| format!("m={m}: {e} ({})", p.describe()))?;
+            }
+            // the all-in-TEE1 path must always be present (C1 fallback)
+            if !paths.iter().any(|p| p.stages.len() == 1) {
+                return Err(format!("m={m}: missing 1-TEE fallback"));
+            }
+            Ok(())
+        });
+    }
+}

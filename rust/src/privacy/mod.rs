@@ -1,0 +1,69 @@
+//! Privacy / similarity metrics between an original frame and an
+//! intermediate layer output (paper §IV "NN Layer Profile" item 4 and §V).
+//!
+//! The paper's deployed metric is the **resolution** of a single grid-cell
+//! image of the intermediate tensor: below δ = 20×20 px an output is
+//! unidentifiable (validated by their user study, reproduced in `study/`).
+//! The framework is explicitly "not restricted to using the resolution as
+//! a metric", so the classical alternatives they evaluated — MSE, Pearson
+//! correlation, SSIM — are implemented here too and exercised by the
+//! privacy benches and the e2e example (which scores real tensors off the
+//! PJRT runtime).
+
+pub mod metrics;
+
+pub use metrics::{mse, pearson, ssim, Image};
+
+use crate::model::{BlockInfo, ModelInfo};
+
+/// Similarity verdict for offloading the input of a block to an untrusted
+/// device (constraint C2 of the problem definition).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Leakage {
+    /// Grid-cell resolution of the tensor (px).
+    pub resolution: u32,
+    /// True if `resolution <= delta` (private / offloadable).
+    pub private: bool,
+}
+
+/// Assess the leakage of the tensor feeding block `b` under threshold δ.
+pub fn assess_block_input(b: &BlockInfo, delta: u32) -> Leakage {
+    Leakage { resolution: b.in_res, private: b.in_res <= delta }
+}
+
+/// The paper's per-path similarity: max leakage over every layer placed on
+/// an untrusted resource — here expressed as the *largest input resolution*
+/// among offloaded blocks (resolution is anti-monotone in privacy).
+pub fn path_max_resolution(model: &ModelInfo, offloaded: impl Iterator<Item = usize>) -> u32 {
+    offloaded.map(|i| model.blocks[i].in_res).max().unwrap_or(0)
+}
+
+/// Convert a (1, H, W, C) f32 tensor into the paper's grid-cell view: the
+/// single-channel image used for similarity scoring (channel-mean, the
+/// visualization tool's default).
+pub fn tensor_to_cell(data: &[f32], h: usize, w: usize, c: usize) -> Image {
+    let mut px = vec![0f32; h * w];
+    for y in 0..h {
+        for x in 0..w {
+            let mut s = 0f32;
+            for ch in 0..c {
+                s += data[(y * w + x) * c + ch];
+            }
+            px[y * w + x] = s / c as f32;
+        }
+    }
+    Image { w, h, px }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_to_cell_channel_mean() {
+        // 1x2x2x2 tensor; channels (1,3), (2,4), (0,0), (10,-10)
+        let data = [1.0, 3.0, 2.0, 4.0, 0.0, 0.0, 10.0, -10.0];
+        let img = tensor_to_cell(&data, 2, 2, 2);
+        assert_eq!(img.px, vec![2.0, 3.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Calibration of the TEE profile against the paper's published curves.
+//!
+//! We cannot measure SGX on this machine; the paper's placement results
+//! depend on two measured per-model quantities that we therefore take as
+//! calibration *targets* (DESIGN.md §2):
+//!
+//!  1. `one_tee_secs` — whole-model single-enclave latency per frame
+//!     (§VI-D: "1.1 seconds for Squeezenet to 7.2 seconds for Resnet").
+//!  2. `time_frac_at_delta` — the fraction of inference time spent before
+//!     the intermediate output resolution drops to δ = 20×20 (Fig. 8:
+//!     "GoogLeNet, Squeezenet ... 80% ... Alexnet and Resnet reach such
+//!     resolution in less than 50%").
+//!
+//! The calibration keeps the analytical model's *relative* per-block
+//! structure but applies a smooth depth-dependent multiplier
+//! `m_i = exp(k · cum_i)` (`cum_i` = cumulative FLOP fraction before block
+//! i), solving `k` by bisection so the pre-δ time fraction hits the target,
+//! then rescales everything to the target absolute latency. Paging is
+//! calibrated out of the base table first and re-added by the stage cost
+//! model, so partition-dependent paging relief (Fig. 13) stays endogenous.
+
+use super::ModelProfile;
+use crate::model::{ModelInfo, DELTA_RESOLUTION};
+
+/// Published targets per model (see module docs for provenance).
+#[derive(Debug, Clone, Copy)]
+pub struct CalibrationTarget {
+    pub model: &'static str,
+    /// Whole-model per-frame latency in one enclave (seconds).
+    pub one_tee_secs: f64,
+    /// Fraction of inference time before the output becomes private.
+    pub time_frac_at_delta: f64,
+}
+
+/// Fig. 8 / Fig. 13 / §VI-C,D derived targets.
+///
+/// `time_frac_at_delta`: GoogLeNet/SqueezeNet ≈ 0.80 (Fig. 8 text),
+/// MobileNet grouped with them in Fig. 12 (1.15–1.5× for 1 TEE + GPU ⇒
+/// frac ≈ 1/1.35 ≈ 0.72), AlexNet ⇒ "each TEE can do only 19% ... leaving
+/// 62% to the GPU" ⇒ 0.38, ResNet < 0.5 (Fig. 8) and 2.5–3.1× for
+/// 1 TEE + GPU ⇒ ≈ 0.42.
+///
+/// `one_tee_secs`: SqueezeNet 1.1 s and ResNet 7.2 s are stated; AlexNet is
+/// "the largest model (243 MB)" and paging-bound ⇒ 6.0 s; GoogLeNet and
+/// MobileNet sit between SqueezeNet and ResNet by compute volume.
+pub const PAPER_TARGETS: [CalibrationTarget; 5] = [
+    CalibrationTarget { model: "googlenet", one_tee_secs: 2.4, time_frac_at_delta: 0.80 },
+    CalibrationTarget { model: "alexnet", one_tee_secs: 6.0, time_frac_at_delta: 0.38 },
+    CalibrationTarget { model: "resnet", one_tee_secs: 7.2, time_frac_at_delta: 0.42 },
+    CalibrationTarget { model: "mobilenet", one_tee_secs: 1.9, time_frac_at_delta: 0.72 },
+    CalibrationTarget { model: "squeezenet", one_tee_secs: 1.1, time_frac_at_delta: 0.80 },
+];
+
+pub fn target_for(model: &str) -> Option<CalibrationTarget> {
+    PAPER_TARGETS.iter().copied().find(|t| t.model == model)
+}
+
+/// Pre-δ time fraction of a block table *including* full-model paging
+/// attributed per block in proportion to parameter bytes — the paper's
+/// Fig. 8 curves were measured on a single enclave holding the whole
+/// model, so paging time is part of what they profiled.
+fn frac_at(block_secs: &[f64], paging_attr: &[f64], crossing: usize) -> f64 {
+    let pre: f64 = block_secs[..crossing].iter().sum::<f64>()
+        + paging_attr[..crossing].iter().sum::<f64>();
+    let total: f64 =
+        block_secs.iter().sum::<f64>() + paging_attr.iter().sum::<f64>();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    pre / total
+}
+
+/// Apply depth multiplier exp(k·cum_flops_frac) and return the new table.
+fn apply_depth(block_secs: &[f64], flops: &[u64], k: f64) -> Vec<f64> {
+    let total: f64 = flops.iter().map(|&f| f as f64).sum();
+    let mut cum = 0.0;
+    block_secs
+        .iter()
+        .zip(flops)
+        .map(|(&s, &f)| {
+            let frac = cum / total.max(1.0);
+            cum += f as f64;
+            s * (k * frac).exp()
+        })
+        .collect()
+}
+
+/// Calibrate `profile` (in place) for the given targets.
+///
+/// Only the TEE table is calibrated — the paper's CPU/GPU numbers are
+/// ordinary hardware the analytical model covers fine. Returns the solved
+/// depth factor `k` for reporting.
+pub fn calibrate(profile: &mut ModelProfile, model: &ModelInfo, target: CalibrationTarget) -> f64 {
+    let crossing = model.privacy_crossing(DELTA_RESOLUTION);
+    let flops: Vec<u64> = model.blocks.iter().map(|b| b.flops_full).collect();
+
+    // Full-model paging, attributed per block ∝ parameter bytes (paging is
+    // driven by streaming the resident parameter set through the EPC).
+    let paging_total = profile.paging_secs(0..profile.m);
+    let pbytes: f64 = profile.param_bytes.iter().map(|&b| b as f64).sum();
+    let paging_attr: Vec<f64> = profile
+        .param_bytes
+        .iter()
+        .map(|&b| {
+            if pbytes > 0.0 { paging_total * b as f64 / pbytes } else { 0.0 }
+        })
+        .collect();
+
+    // Joint solve (k, scale):
+    //   Σ_i scale·base_i·e^{k·cum_i} + paging_total = one_tee_secs   (abs)
+    //   pre-δ share of (scale·base·e^{k·cum} + paging_attr) = frac   (shape)
+    // For a given k the scale is determined by the first equation, and the
+    // resulting pre-δ share is monotone decreasing in k ⇒ bisection.
+    let base = profile.tee.block_secs.clone();
+    let budget = (target.one_tee_secs - paging_total).max(1e-6);
+    let scaled = |k: f64| -> Vec<f64> {
+        let t = apply_depth(&base, &flops, k);
+        let sum: f64 = t.iter().sum();
+        t.into_iter().map(|s| s * budget / sum).collect()
+    };
+    let (mut lo, mut hi) = (-16.0f64, 16.0f64);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        let f = frac_at(&scaled(mid), &paging_attr, crossing);
+        if f > target.time_frac_at_delta {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let k = 0.5 * (lo + hi);
+    profile.tee.block_secs = scaled(k);
+    k
+}
+
+/// Per-block single-enclave time including attributed full-model paging —
+/// the quantity Fig. 8 plots cumulatively (and the calibration target).
+pub fn tee_block_secs_with_paging(profile: &ModelProfile) -> Vec<f64> {
+    let paging_total = profile.paging_secs(0..profile.m);
+    let pbytes: f64 = profile.param_bytes.iter().map(|&b| b as f64).sum();
+    profile
+        .tee
+        .block_secs
+        .iter()
+        .zip(&profile.param_bytes)
+        .map(|(&s, &b)| {
+            s + if pbytes > 0.0 { paging_total * b as f64 / pbytes } else { 0.0 }
+        })
+        .collect()
+}
+
+/// Build the calibrated profile for a model (analytical + paper targets).
+pub fn calibrated_profile(model: &ModelInfo) -> ModelProfile {
+    let mut p = super::AnalyticalProfiler::default().profile(model);
+    if let Some(t) = target_for(&model.name) {
+        calibrate(&mut p, model, t);
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{default_artifacts_dir, load_manifest};
+    use crate::model::MODEL_NAMES;
+
+    fn with_models(f: impl Fn(&ModelInfo, ModelProfile, CalibrationTarget)) {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = load_manifest(&dir).unwrap();
+        for name in MODEL_NAMES {
+            let model = man.model(name).unwrap();
+            let p = calibrated_profile(model);
+            f(model, p, target_for(name).unwrap());
+        }
+    }
+
+    #[test]
+    fn hits_one_tee_latency_target() {
+        with_models(|_, p, t| {
+            let got = p.one_tee_secs();
+            assert!(
+                (got - t.one_tee_secs).abs() / t.one_tee_secs < 0.05,
+                "{}: got {got:.3}s want {:.3}s",
+                p.model,
+                t.one_tee_secs
+            );
+        });
+    }
+
+    #[test]
+    fn hits_delta_crossing_fraction() {
+        with_models(|m, p, t| {
+            let crossing = m.privacy_crossing(DELTA_RESOLUTION);
+            let secs = tee_block_secs_with_paging(&p);
+            let pre: f64 = secs[..crossing].iter().sum();
+            let total: f64 = secs.iter().sum();
+            let frac = pre / total;
+            assert!(
+                (frac - t.time_frac_at_delta).abs() < 0.03,
+                "{}: frac {frac:.3} want {:.3}",
+                p.model,
+                t.time_frac_at_delta
+            );
+        });
+    }
+
+    #[test]
+    fn calibration_preserves_positivity_and_order_of_magnitude() {
+        with_models(|_, p, _| {
+            for (i, &s) in p.tee.block_secs.iter().enumerate() {
+                assert!(s > 0.0 && s < 10.0, "{} block {i}: {s}", p.model);
+            }
+        });
+    }
+
+    #[test]
+    fn gpu_much_faster_than_tee_everywhere() {
+        with_models(|_, p, _| {
+            let tee: f64 = p.tee.block_secs.iter().sum();
+            let gpu: f64 = p.gpu.block_secs.iter().sum();
+            assert!(tee / gpu > 10.0, "{}: ratio {}", p.model, tee / gpu);
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/<model>/block_*.hlo.txt`)
+//! and executes block chains on the CPU PJRT client — the only place the
+//! compiled XLA computations are touched. Python never runs here.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns them).
+
+pub mod executor;
+pub mod tensor;
+
+pub use executor::{BlockExecutable, ChainExecutor};
+pub use tensor::Tensor;

@@ -1,0 +1,119 @@
+//! Host tensor type bridging artifact files, AES-GCM payloads, and PJRT
+//! literals. f32 only — the entire model zoo is f32 (the paper's TFLite
+//! deployment likewise).
+
+use anyhow::{bail, Context, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elems, got {}", shape, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Load from a little-endian f32 binary file (the artifact format).
+    pub fn from_bin_file(path: &std::path::Path, shape: Vec<usize>) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading tensor {}", path.display()))?;
+        Self::from_le_bytes(&bytes, shape)
+    }
+
+    /// Decode from little-endian f32 bytes.
+    pub fn from_le_bytes(bytes: &[u8], shape: Vec<usize>) -> Result<Self> {
+        if bytes.len() % 4 != 0 {
+            bail!("byte length {} not a multiple of 4", bytes.len());
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::new(shape, data)
+    }
+
+    /// Encode to little-endian bytes (the wire/artifact format).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_len());
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Convert into an `xla::Literal` with this shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read back from an `xla::Literal` (shape taken from caller).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(shape, data)
+    }
+
+    /// Max absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn le_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.5, -2.25, 0.0, 1e-7]).unwrap();
+        let b = t.to_le_bytes();
+        let t2 = Tensor::from_le_bytes(&b, vec![2, 2]).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn rejects_ragged_bytes() {
+        assert!(Tensor::from_le_bytes(&[0u8; 7], vec![1]).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.0, 2.5, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

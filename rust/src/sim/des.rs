@@ -1,0 +1,132 @@
+//! Generic discrete-event core: a time-ordered event queue with stable
+//! FIFO tie-breaking (events at equal timestamps fire in insertion order,
+//! which keeps the pipeline deterministic).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event: fires at `at` (virtual seconds) carrying a payload.
+#[derive(Debug, Clone)]
+pub struct Event<T> {
+    pub at: f64,
+    pub seq: u64,
+    pub payload: T,
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<T> Eq for Event<T> {}
+
+impl<T> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on (time, seq): BinaryHeap is a max-heap, so reverse
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Virtual-time event queue.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Event<T>>,
+    next_seq: u64,
+    pub now: f64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0, now: 0.0 }
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `payload` at absolute virtual time `at` (>= now).
+    pub fn schedule(&mut self, at: f64, payload: T) {
+        debug_assert!(at >= self.now - 1e-12, "scheduling into the past");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { at, seq, payload });
+    }
+
+    /// Schedule after a delay from now.
+    pub fn after(&mut self, delay: f64, payload: T) {
+        self.schedule(self.now + delay, payload);
+    }
+
+    /// Pop the next event, advancing virtual time.
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        let e = self.heap.pop()?;
+        self.now = e.at;
+        Some(e)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn equal_times_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(5.0, i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn now_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, ());
+        q.schedule(4.0, ());
+        q.pop();
+        assert_eq!(q.now, 1.0);
+        q.after(0.5, ());
+        let e = q.pop().unwrap();
+        assert_eq!(e.at, 1.5);
+        assert_eq!(q.pop().unwrap().at, 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "past")]
+    #[cfg(debug_assertions)]
+    fn scheduling_into_past_panics_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, ());
+        q.pop();
+        q.schedule(1.0, ());
+    }
+}

@@ -1,0 +1,18 @@
+//! User-study simulation (paper §VI-B, Figs. 9–11).
+//!
+//! The paper ran a 10-subject survey: (part 1) identify the object in an
+//! intermediate-layer output; (part 2) rank five layer outputs by
+//! similarity to the original image. We cannot run human subjects; we
+//! reproduce the *mechanism* the study measures — information destruction
+//! by resolution loss — with a recognition proxy (template correlation
+//! over downsampled synthetic object images + a psychometric noise model)
+//! and simulated rankers (DESIGN.md §2). The knee the paper found at
+//! 20×20 px is an emergent property of the proxy, not an input: templates
+//! become indistinguishable once downsampling erases their discriminative
+//! detail.
+
+pub mod ranking;
+pub mod recognizer;
+
+pub use ranking::{simulate_ranking, RankingReport};
+pub use recognizer::{accuracy_by_resolution, ObjectClass, Recognizer};

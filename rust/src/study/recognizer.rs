@@ -1,0 +1,249 @@
+//! Recognition proxy for the survey's part 1 (Fig. 10): accuracy of
+//! object identification vs the resolution of the image shown.
+//!
+//! Ten object classes (the paper's: cat, dog, car, truck, bus, aeroplane,
+//! boat, horse, elephant, person) are modelled as parametric silhouettes
+//! with class-specific shape + texture detail. A "subject" sees the image
+//! after it has been downsampled to the intermediate layer's grid-cell
+//! resolution (then freely upscaled — the survey let users resize), and
+//! answers with the class whose template correlates best, degraded by
+//! psychometric noise that grows as discriminative evidence shrinks.
+
+use crate::privacy::metrics::{pearson, Image};
+use crate::util::rng::Rng;
+
+pub const BASE_RES: usize = 128;
+
+/// The paper's ten Imagenet classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ObjectClass {
+    Cat,
+    Dog,
+    Car,
+    Truck,
+    Bus,
+    Aeroplane,
+    Boat,
+    Horse,
+    Elephant,
+    Person,
+}
+
+impl ObjectClass {
+    pub const ALL: [ObjectClass; 10] = [
+        ObjectClass::Cat,
+        ObjectClass::Dog,
+        ObjectClass::Car,
+        ObjectClass::Truck,
+        ObjectClass::Bus,
+        ObjectClass::Aeroplane,
+        ObjectClass::Boat,
+        ObjectClass::Horse,
+        ObjectClass::Elephant,
+        ObjectClass::Person,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ObjectClass::Cat => "cat",
+            ObjectClass::Dog => "dog",
+            ObjectClass::Car => "car",
+            ObjectClass::Truck => "truck",
+            ObjectClass::Bus => "bus",
+            ObjectClass::Aeroplane => "aeroplane",
+            ObjectClass::Boat => "boat",
+            ObjectClass::Horse => "horse",
+            ObjectClass::Elephant => "elephant",
+            ObjectClass::Person => "person",
+        }
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|&c| c == self).unwrap()
+    }
+}
+
+/// Render a class instance at BASE_RES with instance jitter (position,
+/// scale, texture) — "100 images from Imagenet" stand-ins.
+pub fn render_object(class: ObjectClass, rng: &mut Rng) -> Image {
+    let mut im = Image::new(BASE_RES, BASE_RES);
+    let cx = BASE_RES as f32 * (0.46 + 0.08 * rng.f32());
+    let cy = BASE_RES as f32 * (0.46 + 0.08 * rng.f32());
+    let scale = 0.9 + 0.2 * rng.f32();
+    let idx = class.index();
+
+    // class-specific silhouette + high-frequency detail: the detail is
+    // what downsampling destroys first, mirroring real photos
+    for y in 0..BASE_RES {
+        for x in 0..BASE_RES {
+            let dx = (x as f32 - cx) / (scale * BASE_RES as f32);
+            let dy = (y as f32 - cy) / (scale * BASE_RES as f32);
+            let mut v = 0.08; // background
+            let body = match class {
+                // animals: elliptical body + legs/head bumps
+                ObjectClass::Cat | ObjectClass::Dog | ObjectClass::Horse | ObjectClass::Elephant => {
+                    let e = (dx / 0.30).powi(2) + (dy / (0.16 + 0.02 * idx as f32)).powi(2);
+                    let legs = (dy > 0.08 && (dx.abs() * 9.0).fract() < 0.35) as i32 as f32;
+                    (e < 1.0) as i32 as f32 * (0.55 + 0.1 * legs)
+                }
+                // vehicles: rectangle + wheels
+                ObjectClass::Car | ObjectClass::Truck | ObjectClass::Bus => {
+                    let h = 0.10 + 0.035 * (idx as f32 - 2.0);
+                    let rect = (dx.abs() < 0.32 && dy.abs() < h) as i32 as f32;
+                    let wheel = (((dx.abs() - 0.2).powi(2) + (dy - h).powi(2)) < 0.004) as i32 as f32;
+                    rect * 0.6 + wheel * 0.4
+                }
+                ObjectClass::Aeroplane => {
+                    let fuselage = (dx.abs() < 0.38 && dy.abs() < 0.05) as i32 as f32;
+                    let wings = (dy.abs() < 0.26 && dx.abs() < 0.07) as i32 as f32;
+                    (fuselage + wings).min(1.0) * 0.6
+                }
+                ObjectClass::Boat => {
+                    let hull = (dy > 0.0 && dy < 0.14 && dx.abs() < 0.3 - dy) as i32 as f32;
+                    let mast = (dx.abs() < 0.02 && dy > -0.3 && dy <= 0.0) as i32 as f32;
+                    (hull + mast).min(1.0) * 0.6
+                }
+                ObjectClass::Person => {
+                    let head = ((dx / 0.07).powi(2) + ((dy + 0.2) / 0.07).powi(2) < 1.0) as i32 as f32;
+                    let torso = (dx.abs() < 0.09 && dy > -0.12 && dy < 0.15) as i32 as f32;
+                    let legs = (dy >= 0.15 && dy < 0.35 && (dx.abs() - 0.045).abs() < 0.035) as i32
+                        as f32;
+                    (head + torso + legs).min(1.0) * 0.6
+                }
+            };
+            if body > 0.0 {
+                // class-keyed texture (stripes/spots at class frequency):
+                // the discriminative high-frequency evidence — deliberately
+                // strong, so resolution loss is what destroys identity
+                let f = 7.0 + idx as f32 * 3.3;
+                let tex = 0.55
+                    * ((x as f32 * f / BASE_RES as f32 * std::f32::consts::TAU).sin()
+                        * (y as f32 * (f * 0.7) / BASE_RES as f32 * std::f32::consts::TAU).cos());
+                v = body + tex + 0.10 * rng.f32();
+            } else {
+                v += 0.04 * rng.f32();
+            }
+            im.set(x, y, v);
+        }
+    }
+    im
+}
+
+/// Template-correlation recognizer with a psychometric noise model.
+pub struct Recognizer {
+    templates: Vec<Image>,
+    /// Subject inconsistency: noise added to each class score.
+    pub decision_noise: f64,
+}
+
+impl Recognizer {
+    /// Templates are canonical renders (no jitter) of each class.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let templates = ObjectClass::ALL
+            .iter()
+            .map(|&c| {
+                // canonical: average several renders to suppress jitter
+                let mut acc = Image::new(BASE_RES, BASE_RES);
+                let k = 4;
+                for _ in 0..k {
+                    let im = render_object(c, &mut rng);
+                    for (a, b) in acc.px.iter_mut().zip(&im.px) {
+                        *a += b / k as f32;
+                    }
+                }
+                acc
+            })
+            .collect();
+        Recognizer { templates, decision_noise: 0.05 }
+    }
+
+    /// Identify the class of `shown` (an image already degraded to some
+    /// resolution and upscaled back). Returns the argmax class.
+    pub fn identify(&self, shown: &Image, rng: &mut Rng) -> ObjectClass {
+        let mut best = (f64::MIN, ObjectClass::Cat);
+        for (i, t) in self.templates.iter().enumerate() {
+            let score = pearson(shown, t) + self.decision_noise * rng.normal();
+            if score > best.0 {
+                best = (score, ObjectClass::ALL[i]);
+            }
+        }
+        best.1
+    }
+}
+
+/// Fig. 10's experiment: accuracy of identification vs resolution band.
+/// Returns (resolution, accuracy) for each requested resolution.
+pub fn accuracy_by_resolution(
+    resolutions: &[usize],
+    images_per_class: usize,
+    seed: u64,
+) -> Vec<(usize, f64)> {
+    let rec = Recognizer::new(seed);
+    let mut rng = Rng::new(seed ^ 0x5757);
+    resolutions
+        .iter()
+        .map(|&res| {
+            let mut correct = 0usize;
+            let mut total = 0usize;
+            for &class in &ObjectClass::ALL {
+                for _ in 0..images_per_class {
+                    let orig = render_object(class, &mut rng);
+                    // degrade to the intermediate layer's grid-cell
+                    // resolution, then upscale (subjects may resize)
+                    let shown = orig.downsample(res, res).resize(BASE_RES, BASE_RES);
+                    if rec.identify(&shown, &mut rng) == class {
+                        correct += 1;
+                    }
+                    total += 1;
+                }
+            }
+            (res, correct as f64 / total as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_are_deterministic_per_seed() {
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        assert_eq!(render_object(ObjectClass::Car, &mut a).px,
+                   render_object(ObjectClass::Car, &mut b).px);
+    }
+
+    #[test]
+    fn full_resolution_recognition_is_accurate() {
+        let acc = accuracy_by_resolution(&[BASE_RES], 6, 42);
+        assert!(acc[0].1 >= 0.9, "full-res accuracy {} too low", acc[0].1);
+    }
+
+    #[test]
+    fn tiny_resolution_recognition_near_chance() {
+        let acc = accuracy_by_resolution(&[4], 6, 42);
+        assert!(acc[0].1 <= 0.45, "4px accuracy {} suspiciously high", acc[0].1);
+    }
+
+    #[test]
+    fn accuracy_degrades_with_resolution() {
+        // the psychometric curve must be (weakly) monotone across bands
+        let acc = accuracy_by_resolution(&[128, 32, 12, 4], 8, 7);
+        assert!(acc[0].1 > acc[2].1, "128px {} !> 12px {}", acc[0].1, acc[2].1);
+        assert!(acc[1].1 > acc[3].1, "32px {} !> 4px {}", acc[1].1, acc[3].1);
+    }
+
+    #[test]
+    fn knee_is_near_20px() {
+        // paper: ~100% above 110px; drastic drop below 20px
+        let acc = accuracy_by_resolution(&[110, 20, 8], 8, 11);
+        let hi = acc[0].1;
+        let knee = acc[1].1;
+        let lo = acc[2].1;
+        assert!(hi > 0.85, "high-res {hi}");
+        assert!(lo < hi - 0.3, "low-res {lo} vs {hi}");
+        assert!(knee < hi + 1e-9 && knee > lo - 1e-9);
+    }
+}

@@ -1,0 +1,197 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands, with generated `--help` text. This is the launcher substrate
+//! for `serdab` (the main binary), the examples, and the bench harness.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative command: name + described options, parsed from argv.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for s in &self.specs {
+            let kind = if s.is_flag {
+                "".to_string()
+            } else if let Some(d) = s.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            out.push_str(&format!("  --{}{}\n      {}\n", s.name, kind, s.help));
+        }
+        out
+    }
+
+    /// Parse argv (without the program name). Returns Err with a usage
+    /// string on unknown options, missing values, or `--help`.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("option --{key} requires a value"))?,
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        // apply defaults, check required
+        for s in &self.specs {
+            if s.is_flag {
+                continue;
+            }
+            if !args.values.contains_key(s.name) {
+                match s.default {
+                    Some(d) => {
+                        args.values.insert(s.name.to_string(), d.to_string());
+                    }
+                    None => return Err(format!("missing required option --{}", s.name)),
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.values.get(key).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, String> {
+        self.get(key).parse().map_err(|_| format!("--{key} must be an integer"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, String> {
+        self.get(key).parse().map_err(|_| format!("--{key} must be an integer"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, String> {
+        self.get(key).parse().map_err(|_| format!("--{key} must be a number"))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .opt("model", "googlenet", "model name")
+            .req("frames", "frame count")
+            .flag("verbose", "log more")
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = cmd().parse(&sv(&["--frames", "100", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get("model"), "googlenet"); // default applied
+        assert_eq!(a.get_usize("frames").unwrap(), 100);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = cmd().parse(&sv(&["--frames=7", "--model=alexnet"])).unwrap();
+        assert_eq!(a.get("frames"), "7");
+        assert_eq!(a.get("model"), "alexnet");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&sv(&["--model", "x"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors_with_usage() {
+        let e = cmd().parse(&sv(&["--nope", "1", "--frames", "2"])).unwrap_err();
+        assert!(e.contains("unknown option"));
+        assert!(e.contains("--model"));
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = cmd().parse(&sv(&["--help"])).unwrap_err();
+        assert!(e.contains("frame count"));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&sv(&["--verbose=1", "--frames", "2"])).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal leveled logger (the `log` crate is vendored but a facade without
+//! an emitter; this gives us one place that honours SERDAB_LOG=debug|info|
+//! warn|error and timestamps relative to process start).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1); // Info
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
+
+/// Initialise from SERDAB_LOG (call once from main; safe to call repeatedly).
+pub fn init() {
+    start();
+    if let Ok(v) = std::env::var("SERDAB_LOG") {
+        let lvl = match v.as_str() {
+            "debug" => Level::Debug,
+            "info" => Level::Info,
+            "warn" => Level::Warn,
+            "error" => Level::Error,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    }
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn emit(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = start().elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{t:9.3}s {tag} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

@@ -1,0 +1,60 @@
+//! Infrastructure substrates built in-repo (the offline vendor set has no
+//! serde / rand / clap / proptest / criterion): JSON, PRNG, property
+//! testing, CLI parsing, logging, timing helpers.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+
+/// Wall-clock stopwatch in seconds (f64).
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Format a byte count (B/KB/MB/GB).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf < K {
+        format!("{b}B")
+    } else if bf < K * K {
+        format!("{:.1}KB", bf / K)
+    } else if bf < K * K * K {
+        format!("{:.1}MB", bf / K / K)
+    } else {
+        format!("{:.2}GB", bf / K / K / K)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn fmt_bytes_ranges() {
+        assert_eq!(fmt_bytes(10), "10B");
+        assert_eq!(fmt_bytes(2048), "2.0KB");
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MB"));
+        assert!(fmt_bytes(5 * 1024 * 1024 * 1024).contains("GB"));
+    }
+}

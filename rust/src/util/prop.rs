@@ -1,0 +1,238 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set). Provides seeded generators, a `forall` runner with failure-case
+//! shrinking for the common shapes we need (integers, vectors, pairs), and
+//! deterministic replay: every failure prints the seed that reproduces it.
+//!
+//! Used across the coordinator for the paper's invariants: placement paths
+//! are well-formed, the pipeline cost model matches the discrete-event
+//! simulator, routing/batching never drops or duplicates frames, etc.
+
+use super::rng::Rng;
+
+/// A generator of values of type `T` plus a shrinker toward "smaller" cases.
+pub struct Gen<T> {
+    pub gen: Box<dyn Fn(&mut Rng) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen { gen: Box::new(gen), shrink: Box::new(shrink) }
+    }
+
+    /// Map the generated value (no shrinking through the map).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| f((self.gen)(r)), |_| Vec::new())
+    }
+}
+
+/// usize in [lo, hi], shrinking toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen::new(
+        move |r| r.range(lo, hi + 1),
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.sort();
+            out.dedup();
+            out.retain(|&x| x < v);
+            out
+        },
+    )
+}
+
+/// f64 in [lo, hi), shrinking toward lo.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(
+        move |r| r.range_f64(lo, hi),
+        move |&v| {
+            let mid = lo + (v - lo) / 2.0;
+            if v > lo && (v - lo) > 1e-9 {
+                vec![lo, mid]
+            } else {
+                Vec::new()
+            }
+        },
+    )
+}
+
+/// Vector of length [min_len, max_len], elementwise + length shrinking.
+pub fn vec_of<T: Clone + 'static>(
+    elem: impl Fn() -> Gen<T> + 'static,
+    min_len: usize,
+    max_len: usize,
+) -> Gen<Vec<T>> {
+    let e = elem();
+    let e2 = elem();
+    Gen::new(
+        move |r| {
+            let n = r.range(min_len, max_len + 1);
+            (0..n).map(|_| (e.gen)(r)).collect()
+        },
+        move |v: &Vec<T>| {
+            let mut out = Vec::new();
+            // shrink length: halves and minus-one
+            if v.len() > min_len {
+                out.push(v[..min_len].to_vec());
+                out.push(v[..v.len() - 1].to_vec());
+                out.push(v[..(min_len + v.len()) / 2].to_vec());
+            }
+            // shrink one element at a time (first few positions)
+            for i in 0..v.len().min(4) {
+                for sv in (e2.shrink)(&v[i]) {
+                    let mut w = v.clone();
+                    w[i] = sv;
+                    out.push(w);
+                }
+            }
+            out
+        },
+    )
+}
+
+/// Pair of independent generators.
+pub fn pair<A: Clone + 'static, B: Clone + 'static>(ga: Gen<A>, gb: Gen<B>) -> Gen<(A, B)> {
+    let (sa, sb) = (ga.shrink, gb.shrink);
+    let (fa, fb) = (ga.gen, gb.gen);
+    Gen::new(
+        move |r| ((fa)(r), (fb)(r)),
+        move |(a, b)| {
+            let mut out: Vec<(A, B)> = (sa)(a).into_iter().map(|a2| (a2, b.clone())).collect();
+            out.extend((sb)(b).into_iter().map(|b2| (a.clone(), b2)));
+            out
+        },
+    )
+}
+
+/// Result of a property run.
+pub struct Failure<T> {
+    pub seed: u64,
+    pub case: T,
+    pub shrunk: T,
+    pub msg: String,
+}
+
+/// Run `prop` against `cases` random inputs; on failure, shrink and panic
+/// with the reproducing seed. `name` labels the property in the panic.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    cases: usize,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let base_seed = match std::env::var("SERDAB_PROP_SEED") {
+        Ok(s) => s.parse().unwrap_or(0xdead_beef),
+        Err(_) => 0xdead_beef,
+    };
+    if let Some(f) = forall_inner(gen, cases, base_seed, &prop) {
+        panic!(
+            "property '{name}' failed (SERDAB_PROP_SEED={}):\n original: {:?}\n shrunk:   {:?}\n error: {}",
+            f.seed, f.case, f.shrunk, f.msg
+        );
+    }
+}
+
+fn forall_inner<T: Clone + 'static>(
+    gen: &Gen<T>,
+    cases: usize,
+    base_seed: u64,
+    prop: &impl Fn(&T) -> Result<(), String>,
+) -> Option<Failure<T>> {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let case = (gen.gen)(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // greedy shrink to a local minimum
+            let mut best = case.clone();
+            let mut best_msg = msg;
+            let mut progress = true;
+            let mut budget = 200;
+            while progress && budget > 0 {
+                progress = false;
+                for cand in (gen.shrink)(&best) {
+                    budget -= 1;
+                    if let Err(m2) = prop(&cand) {
+                        best = cand;
+                        best_msg = m2;
+                        progress = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            return Some(Failure { seed, case, shrunk: best, msg: best_msg });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum-commutes", &pair(usize_in(0, 100), usize_in(0, 100)), 200, |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        // property "v < 10" fails; the shrinker should find exactly 10
+        let f = forall_inner(&usize_in(0, 1000), 500, 42, &|&v: &usize| {
+            if v < 10 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 10"))
+            }
+        });
+        let f = f.expect("property must fail somewhere in [0,1000]");
+        assert_eq!(f.shrunk, 10, "greedy shrink should reach the boundary");
+    }
+
+    #[test]
+    fn vec_generator_respects_length_bounds() {
+        let g = vec_of(|| usize_in(0, 5), 2, 7);
+        let mut r = Rng::new(9);
+        for _ in 0..200 {
+            let v = (g.gen)(&mut r);
+            assert!((2..=7).contains(&v.len()));
+            assert!(v.iter().all(|&x| x <= 5));
+        }
+    }
+
+    #[test]
+    fn vec_shrink_never_below_min_len() {
+        let g = vec_of(|| usize_in(0, 5), 2, 7);
+        let mut r = Rng::new(10);
+        let v = (g.gen)(&mut r);
+        for s in (g.shrink)(&v) {
+            assert!(s.len() >= 2);
+        }
+    }
+
+    #[test]
+    fn f64_gen_in_bounds() {
+        let g = f64_in(1.5, 2.5);
+        let mut r = Rng::new(11);
+        for _ in 0..100 {
+            let x = (g.gen)(&mut r);
+            assert!((1.5..2.5).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Synthetic surveillance video (DESIGN.md §2 substitution for the paper's
+//! three surveillance datasets): three scene kinds differing in object
+//! type (car / person / boat), setting (outdoor street, indoor, harbour),
+//! and motion pattern. Frames are 224×224×3 f32 in [0, 1] — the input
+//! resolution all five models require — generated deterministically from a
+//! seed, sampled at the paper's 1 fps.
+
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+pub const W: usize = 224;
+pub const H: usize = 224;
+
+/// The paper's three dataset flavours.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SceneKind {
+    /// Outdoor street camera: moving cars, horizon line.
+    Street,
+    /// Indoor camera: person-sized blobs, static furniture.
+    Indoor,
+    /// Harbour camera: boats on a water band.
+    Harbour,
+}
+
+impl SceneKind {
+    pub const ALL: [SceneKind; 3] = [SceneKind::Street, SceneKind::Indoor, SceneKind::Harbour];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SceneKind::Street => "street",
+            SceneKind::Indoor => "indoor",
+            SceneKind::Harbour => "harbour",
+        }
+    }
+}
+
+/// Deterministic frame stream for one camera.
+pub struct VideoSource {
+    pub kind: SceneKind,
+    rng: Rng,
+    t: u64,
+    /// persistent object positions (x, y, velocity)
+    objects: Vec<(f32, f32, f32)>,
+    background: Vec<f32>,
+}
+
+impl VideoSource {
+    pub fn new(kind: SceneKind, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ (kind as u64) << 32);
+        let n_objects = match kind {
+            SceneKind::Street => 4,
+            SceneKind::Indoor => 2,
+            SceneKind::Harbour => 3,
+        };
+        let objects = (0..n_objects)
+            .map(|_| {
+                (
+                    rng.f32() * W as f32,
+                    (0.4 + 0.4 * rng.f32()) * H as f32,
+                    (0.5 + rng.f32()) * if rng.bool(0.5) { 1.0 } else { -1.0 },
+                )
+            })
+            .collect();
+        // static background texture per camera
+        let mut bg_rng = rng.fork(0xb6);
+        let background = (0..W * H).map(|_| 0.25 + 0.1 * bg_rng.f32()).collect();
+        VideoSource { kind, rng, t: 0, objects, background }
+    }
+
+    /// Next frame (1 second later at 1 fps).
+    pub fn next_frame(&mut self) -> Tensor {
+        let mut data = vec![0f32; H * W * 3];
+        let (sky, ground) = match self.kind {
+            SceneKind::Street => (0.55, 0.35),
+            SceneKind::Indoor => (0.45, 0.40),
+            SceneKind::Harbour => (0.60, 0.30),
+        };
+        for y in 0..H {
+            for x in 0..W {
+                let base = if y < H / 3 { sky } else { ground } + self.background[y * W + x] * 0.3;
+                let idx = (y * W + x) * 3;
+                data[idx] = base;
+                data[idx + 1] = base * 0.95;
+                data[idx + 2] = base * 1.05;
+            }
+        }
+        // advance + draw objects (cars: wide, persons: tall, boats: hull)
+        let (ow, oh) = match self.kind {
+            SceneKind::Street => (26i32, 12i32),
+            SceneKind::Indoor => (10, 26),
+            SceneKind::Harbour => (30, 10),
+        };
+        for oi in 0..self.objects.len() {
+            let (ref mut ox, oy, v) = self.objects[oi];
+            *ox += v * 8.0;
+            if *ox < -30.0 {
+                *ox = W as f32 + 20.0;
+            }
+            if *ox > W as f32 + 30.0 {
+                *ox = -20.0;
+            }
+            let shade = 0.1 + 0.6 * ((oi * 61) % 10) as f32 / 10.0;
+            let (cx, cy) = (*ox as i32, oy as i32);
+            for dy in -oh / 2..oh / 2 {
+                for dx in -ow / 2..ow / 2 {
+                    let (px, py) = (cx + dx, cy + dy);
+                    if (0..W as i32).contains(&px) && (0..H as i32).contains(&py) {
+                        let idx = (py as usize * W + px as usize) * 3;
+                        data[idx] = shade;
+                        data[idx + 1] = shade * 0.9;
+                        data[idx + 2] = shade * 0.8;
+                    }
+                }
+            }
+        }
+        // sensor noise
+        for v in data.iter_mut() {
+            *v = (*v + 0.02 * self.rng.f32()).clamp(0.0, 1.0);
+        }
+        self.t += 1;
+        Tensor::new(vec![1, H, W, 3], data).expect("frame shape")
+    }
+
+    /// Chunk of n frames (the paper's chunk_k = <f_1 .. f_n>).
+    pub fn chunk(&mut self, n: usize) -> Vec<Tensor> {
+        (0..n).map(|_| self.next_frame()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_have_model_input_shape_and_range() {
+        let mut src = VideoSource::new(SceneKind::Street, 1);
+        let f = src.next_frame();
+        assert_eq!(f.shape, vec![1, 224, 224, 3]);
+        assert!(f.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = VideoSource::new(SceneKind::Indoor, 9).chunk(3);
+        let b = VideoSource::new(SceneKind::Indoor, 9).chunk(3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn frames_change_over_time() {
+        let mut src = VideoSource::new(SceneKind::Harbour, 2);
+        let a = src.next_frame();
+        let b = src.next_frame();
+        assert_ne!(a.data, b.data, "objects must move between frames");
+    }
+
+    #[test]
+    fn scenes_differ() {
+        let a = VideoSource::new(SceneKind::Street, 5).next_frame();
+        let b = VideoSource::new(SceneKind::Harbour, 5).next_frame();
+        assert_ne!(a.data, b.data);
+    }
+}

@@ -1,0 +1,123 @@
+//! End-to-end coordinator integration: attested deployment over the
+//! paper testbed, sealed streaming, numerics vs the single-chain runtime,
+//! and failure injection (offline device, invalid placement).
+
+use serdab::coordinator::{Deployment, ResourceManager};
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::placement::{Placement, Stage, TEE1, TEE2};
+use serdab::profiler::calibrated_profile;
+use serdab::runtime::executor::cpu_client;
+use serdab::runtime::ChainExecutor;
+use serdab::video::{SceneKind, VideoSource};
+
+fn ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn deployed_pipeline_matches_single_chain_numerics() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = load_manifest(default_artifacts_dir()).unwrap();
+    let model = "squeezenet";
+    let info = man.model(model).unwrap();
+    let profile = calibrated_profile(info);
+    let cm = CostModel::new(&profile);
+    let p = plan(Strategy::TwoTees, &cm, 4);
+
+    let rm = ResourceManager::paper_testbed();
+    let dep = Deployment::deploy(&man, &rm, model, &p.placement, Some(1e9), 4).unwrap();
+
+    let mut cam = VideoSource::new(SceneKind::Indoor, 11);
+    let frames: Vec<_> = (0..4).map(|_| cam.next_frame()).collect();
+    let rep = dep.run_stream(frames.clone().into_iter()).unwrap();
+    assert_eq!(rep.frames, 4);
+
+    // same frames through a local full chain: checksums must agree
+    let client = cpu_client().unwrap();
+    let full = ChainExecutor::load(&client, &man, model).unwrap();
+    let mut want = 0f64;
+    for f in &frames {
+        want += full.run(f).unwrap().data.iter().map(|&v| v as f64).sum::<f64>();
+    }
+    let err = (rep.output_checksum - want).abs() / want.abs().max(1e-9);
+    assert!(err < 1e-4, "checksum {} vs {}", rep.output_checksum, want);
+}
+
+#[test]
+fn deploy_fails_for_unregistered_device() {
+    if !ready() {
+        return;
+    }
+    let man = load_manifest(default_artifacts_dir()).unwrap();
+    let mut rm = ResourceManager::paper_testbed();
+    rm.deregister("TEE2").unwrap();
+    let info = man.model("squeezenet").unwrap();
+    let placement = Placement {
+        stages: vec![
+            Stage { resource: TEE1, range: 0..5 },
+            Stage { resource: TEE2, range: 5..info.m() },
+        ],
+    };
+    let err = Deployment::deploy(&man, &rm, "squeezenet", &placement, None, 4);
+    assert!(err.is_err(), "deploy must fail when TEE2 is offline");
+}
+
+#[test]
+fn deploy_rejects_invalid_placement() {
+    if !ready() {
+        return;
+    }
+    let man = load_manifest(default_artifacts_dir()).unwrap();
+    let rm = ResourceManager::paper_testbed();
+    // gap in coverage
+    let placement = Placement {
+        stages: vec![
+            Stage { resource: TEE1, range: 0..2 },
+            Stage { resource: TEE2, range: 3..man.model("squeezenet").unwrap().m() },
+        ],
+    };
+    assert!(Deployment::deploy(&man, &rm, "squeezenet", &placement, None, 4).is_err());
+}
+
+#[test]
+fn pipelined_two_stage_not_slower_than_single_stage() {
+    // same 8 frames: a 2-stage placement (two worker threads) should not
+    // lose to 1-stage wall-clock (generous margin keeps CI stable)
+    if !ready() {
+        return;
+    }
+    let man = load_manifest(default_artifacts_dir()).unwrap();
+    let model = "alexnet";
+    let info = man.model(model).unwrap();
+    let rm = ResourceManager::paper_testbed();
+    let frames: Vec<_> = {
+        let mut cam = VideoSource::new(SceneKind::Street, 5);
+        (0..8).map(|_| cam.next_frame()).collect()
+    };
+
+    let one = Placement::single(TEE1, info.m());
+    let dep1 = Deployment::deploy(&man, &rm, model, &one, Some(1e9), 4).unwrap();
+    let r1 = dep1.run_stream(frames.clone().into_iter()).unwrap();
+
+    let cut = info.m() / 2;
+    let two = Placement {
+        stages: vec![
+            Stage { resource: TEE1, range: 0..cut },
+            Stage { resource: TEE2, range: cut..info.m() },
+        ],
+    };
+    let dep2 = Deployment::deploy(&man, &rm, model, &two, Some(1e9), 4).unwrap();
+    let r2 = dep2.run_stream(frames.into_iter()).unwrap();
+
+    assert!(
+        r2.total_secs < r1.total_secs * 1.10,
+        "pipelining regressed: 1-stage {:.2}s vs 2-stage {:.2}s",
+        r1.total_secs,
+        r2.total_secs
+    );
+}

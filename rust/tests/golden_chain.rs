@@ -1,0 +1,88 @@
+//! Integration: the Rust PJRT runtime must reproduce, block by block, the
+//! golden activations the JAX reference produced at build time — proving
+//! the AOT interchange (HLO text + params + tensor encoding) is faithful
+//! end-to-end. This is the cross-language numerical contract.
+
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::runtime::executor::cpu_client;
+use serdab::runtime::{ChainExecutor, Tensor};
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn squeezenet_chain_matches_goldens() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = load_manifest(default_artifacts_dir()).unwrap();
+    let client = cpu_client().unwrap();
+    let chain = ChainExecutor::load(&client, &man, "squeezenet").unwrap();
+    let info = man.model("squeezenet").unwrap();
+
+    let mut act = Tensor::from_bin_file(
+        &man.path(&info.golden_input),
+        man.input_shape.clone(),
+    )
+    .unwrap();
+    for (i, b) in chain.blocks.iter().enumerate() {
+        act = b.run(&act).unwrap();
+        let golden =
+            Tensor::from_bin_file(&man.path(&info.blocks[i].golden), act.shape.clone()).unwrap();
+        let diff = act.max_abs_diff(&golden);
+        assert!(diff < 1e-3, "block {i} ({}) diff {diff}", b.name);
+        // continue the chain from the golden to avoid error accumulation
+        act = golden;
+    }
+}
+
+#[test]
+fn every_model_final_output_matches_golden() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = load_manifest(default_artifacts_dir()).unwrap();
+    let client = cpu_client().unwrap();
+    for name in serdab::model::MODEL_NAMES {
+        let info = man.model(name).unwrap();
+        let chain = ChainExecutor::load(&client, &man, name).unwrap();
+        let input =
+            Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone()).unwrap();
+        let out = chain.run(&input).unwrap();
+        let last = info.blocks.last().unwrap();
+        let golden = Tensor::from_bin_file(&man.path(&last.golden), last.out_shape.clone()).unwrap();
+        let diff = out.max_abs_diff(&golden);
+        assert!(diff < 2e-2, "{name}: final diff {diff}");
+    }
+}
+
+#[test]
+fn range_split_equals_full_chain() {
+    // executing 0..c then c..M across two "enclaves" must equal 0..M —
+    // the numerical core of the partitioning claim
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = load_manifest(default_artifacts_dir()).unwrap();
+    let client = cpu_client().unwrap();
+    let name = "alexnet";
+    let info = man.model(name).unwrap();
+    let m = info.m();
+    let cut = m / 2;
+
+    let full = ChainExecutor::load(&client, &man, name).unwrap();
+    let first = ChainExecutor::load_range(&client, &man, name, 0..cut).unwrap();
+    let second = ChainExecutor::load_range(&client, &man, name, cut..m).unwrap();
+
+    let input =
+        Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone()).unwrap();
+    let whole = full.run(&input).unwrap();
+    let mid = first.run(&input).unwrap();
+    let split = second.run(&mid).unwrap();
+    let diff = whole.max_abs_diff(&split);
+    assert!(diff < 1e-5, "split diff {diff}");
+}

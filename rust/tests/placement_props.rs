@@ -1,0 +1,107 @@
+//! Property-based invariants of the placement solver (the paper's §V
+//! algorithm) using the in-repo mini-proptest framework.
+
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::model::{DELTA_RESOLUTION, MODEL_NAMES};
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::placement::tree::paper_tree;
+use serdab::profiler::calibrated_profile;
+use serdab::util::prop;
+
+fn with_manifest(f: impl FnOnce(serdab::model::Manifest)) {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    f(load_manifest(dir).unwrap());
+}
+
+#[test]
+fn prop_solver_output_always_valid_and_private() {
+    with_manifest(|man| {
+        let profiles: Vec<_> = MODEL_NAMES
+            .iter()
+            .map(|n| calibrated_profile(man.model(n).unwrap()))
+            .collect();
+        let gen = prop::pair(prop::usize_in(0, 4), prop::usize_in(1, 20_000));
+        prop::forall("solver-valid", &gen, 40, |&(mi, n)| {
+            let profile = &profiles[mi];
+            let cm = CostModel::new(profile);
+            for strat in Strategy::ALL {
+                let p = plan(strat, &cm, n as u64);
+                p.placement
+                    .validate(profile.m)
+                    .map_err(|e| format!("{strat:?}: {e}"))?;
+                if !p.placement.satisfies_privacy(&profile.in_res, DELTA_RESOLUTION) {
+                    return Err(format!("{strat:?} leaked: {}", p.placement.describe()));
+                }
+            }
+            Ok(())
+        });
+    });
+}
+
+#[test]
+fn prop_solver_is_argmin_over_its_tree() {
+    // the chosen plan must cost no more than any privacy-feasible path in
+    // the full paper tree
+    with_manifest(|man| {
+        let model = man.model("mobilenet").unwrap();
+        let profile = calibrated_profile(model);
+        let cm = CostModel::new(&profile);
+        let n = 10_800;
+        let best = plan(Strategy::Proposed, &cm, n);
+        let (paths, _) = paper_tree(profile.m);
+        for p in paths {
+            if !p.satisfies_privacy(&profile.in_res, DELTA_RESOLUTION) {
+                continue;
+            }
+            let c = cm.cost(&p).chunk_secs(n);
+            assert!(
+                best.cost.chunk_secs(n) <= c * (1.0 + 1e-9),
+                "solver missed better path {} ({c}s)",
+                p.describe()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_speedup_monotone_in_chunk_size_for_pipelined_strategies() {
+    // pipeline parallelism pays off more as n grows: speedup(n=10800) >=
+    // speedup(n=1) for every pipelined strategy
+    with_manifest(|man| {
+        for name in MODEL_NAMES {
+            let profile = calibrated_profile(man.model(name).unwrap());
+            let cm = CostModel::new(&profile);
+            for strat in [Strategy::TwoTees, Strategy::Proposed] {
+                let base1 = plan(Strategy::OneTee, &cm, 1).cost.chunk_secs(1);
+                let basen = plan(Strategy::OneTee, &cm, 10_800).cost.chunk_secs(10_800);
+                let s1 = base1 / plan(strat, &cm, 1).cost.chunk_secs(1);
+                let sn = basen / plan(strat, &cm, 10_800).cost.chunk_secs(10_800);
+                assert!(
+                    sn >= s1 - 1e-9,
+                    "{name}/{strat:?}: speedup shrank with n ({s1:.2} -> {sn:.2})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_delta_sweep_moves_crossing_monotonically() {
+    // lowering δ (stricter privacy) can only push the offload point deeper
+    with_manifest(|man| {
+        for name in MODEL_NAMES {
+            let model = man.model(name).unwrap();
+            let mut last = 0;
+            for delta in [300u32, 60, 28, 20, 10, 4] {
+                let c = model.privacy_crossing(delta);
+                assert!(c >= last, "{name}: crossing not monotone in δ");
+                last = c;
+            }
+        }
+    });
+}

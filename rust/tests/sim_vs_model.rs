@@ -1,0 +1,124 @@
+//! Cross-validation: the closed-form pipeline cost model (paper Eq. 1/2)
+//! vs the discrete-event simulator, over every model and strategy — and
+//! property-based over random stage structures.
+
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::model::MODEL_NAMES;
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::profiler::calibrated_profile;
+use serdab::profiler::devices::EpcModel;
+use serdab::profiler::{DeviceKind, DeviceProfile, ModelProfile};
+use serdab::sim::{simulate, SimConfig};
+use serdab::util::prop;
+
+#[test]
+fn des_matches_closed_form_for_all_models_and_strategies() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = load_manifest(dir).unwrap();
+    for name in MODEL_NAMES {
+        let model = man.model(name).unwrap();
+        let profile = calibrated_profile(model);
+        let cm = CostModel::new(&profile);
+        for strat in Strategy::ALL {
+            let p = plan(strat, &cm, 1000);
+            let predicted = p.cost.chunk_secs(1000);
+            let rep = simulate(&cm, &p.placement, &SimConfig { frames: 1000, ..Default::default() });
+            let err = (rep.completion_secs - predicted).abs() / predicted;
+            assert!(
+                err < 0.02,
+                "{name}/{strat:?}: DES {} vs model {predicted} (err {err:.3})",
+                rep.completion_secs
+            );
+        }
+    }
+}
+
+/// Random synthetic profiles: the DES must match the closed form for any
+/// stage-time structure, not just the calibrated zoo.
+#[test]
+fn prop_des_matches_closed_form_on_random_profiles() {
+    use serdab::placement::{Placement, Stage, E2_GPU, TEE1, TEE2};
+
+    let gen = prop::pair(
+        prop::vec_of(|| prop::f64_in(0.01, 2.0), 3, 9),
+        prop::pair(prop::usize_in(1, 2), prop::usize_in(0, 1_000_000)),
+    );
+    prop::forall("des-matches-model", &gen, 25, |(tee_secs, (cuts, bytes))| {
+        let m = tee_secs.len();
+        let profile = ModelProfile {
+            model: "rand".into(),
+            m,
+            cpu: DeviceProfile {
+                kind: DeviceKind::UntrustedCpu,
+                block_secs: tee_secs.iter().map(|s| s * 0.3).collect(),
+            },
+            gpu: DeviceProfile {
+                kind: DeviceKind::Gpu,
+                block_secs: tee_secs.iter().map(|s| s * 0.05).collect(),
+            },
+            tee: DeviceProfile { kind: DeviceKind::Tee, block_secs: tee_secs.clone() },
+            param_bytes: vec![0; m],
+            peak_act_bytes: vec![0; m],
+            cut_bytes: vec![*bytes as u64; m],
+            in_res: (0..m).map(|i| if i < m / 2 { 224 } else { 14 }).collect(),
+            epc: EpcModel::default(),
+        };
+        let cm = CostModel::new(&profile);
+        // placement: split at 1..m across TEE1/TEE2(/GPU for 3 stages)
+        let cut1 = (1 + (*cuts % (m - 1).max(1))).min(m - 1);
+        let placement = if m > cut1 + 1 && cuts % 2 == 1 {
+            Placement {
+                stages: vec![
+                    Stage { resource: TEE1, range: 0..cut1 },
+                    Stage { resource: TEE2, range: cut1..cut1 + 1 },
+                    Stage { resource: E2_GPU, range: cut1 + 1..m },
+                ],
+            }
+        } else {
+            Placement {
+                stages: vec![
+                    Stage { resource: TEE1, range: 0..cut1 },
+                    Stage { resource: TEE2, range: cut1..m },
+                ],
+            }
+        };
+        let n = 400u64;
+        let predicted = cm.cost(&placement).chunk_secs(n);
+        let rep = simulate(&cm, &placement, &SimConfig { frames: n, ..Default::default() });
+        let err = (rep.completion_secs - predicted).abs() / predicted;
+        if err < 0.03 {
+            Ok(())
+        } else {
+            Err(format!(
+                "stages {:?}: DES {} vs model {predicted}",
+                tee_secs, rep.completion_secs
+            ))
+        }
+    });
+}
+
+#[test]
+fn paced_arrival_reduces_latency_not_throughput_below_capacity() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let man = load_manifest(dir).unwrap();
+    let model = man.model("googlenet").unwrap();
+    let profile = calibrated_profile(model);
+    let cm = CostModel::new(&profile);
+    let p = plan(Strategy::TwoTees, &cm, 500);
+
+    let burst = simulate(&cm, &p.placement, &SimConfig { frames: 200, ..Default::default() });
+    let paced = simulate(
+        &cm,
+        &p.placement,
+        &SimConfig { frames: 200, arrival_secs: p.cost.period_secs * 1.1, queue_cap: 4 },
+    );
+    assert!(paced.mean_latency() < burst.mean_latency());
+}
