@@ -18,8 +18,7 @@ use serdab::net::TokenBucket;
 use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, Strategy};
 use serdab::profiler::calibrated_profile;
-use serdab::runtime::executor::cpu_client;
-use serdab::runtime::ChainExecutor;
+use serdab::runtime::{default_backend, ChainExecutor};
 use serdab::video::{SceneKind, VideoSource};
 
 const MODEL: &str = "squeezenet";
@@ -37,8 +36,8 @@ fn worker(
 ) -> std::thread::JoinHandle<anyhow::Result<u64>> {
     std::thread::spawn(move || -> anyhow::Result<u64> {
         let man = load_manifest(default_artifacts_dir())?;
-        let client = cpu_client()?;
-        let chain = ChainExecutor::load_range(&client, &man, MODEL, range.clone())?;
+        let backend = default_backend()?;
+        let chain = ChainExecutor::load_range(backend.as_ref(), &man, MODEL, range.clone())?;
         let mut param_bytes = Vec::new();
         for b in &man.model(MODEL)?.blocks[range.clone()] {
             param_bytes.extend_from_slice(&std::fs::read(man.dir.join(&b.params))?);
@@ -177,8 +176,8 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(served1 == FRAMES as u64 && served2 == FRAMES as u64);
 
     // numerics check: run the same frames through a single local chain
-    let client = cpu_client()?;
-    let full = ChainExecutor::load(&client, &man, MODEL)?;
+    let backend = default_backend()?;
+    let full = ChainExecutor::load(backend.as_ref(), &man, MODEL)?;
     let mut cam2 = VideoSource::new(SceneKind::Street, 3);
     let out = full.run(&cam2.next_frame())?;
     println!("local full-chain checksum of frame 0: {:.4}", out.data.iter().sum::<f32>());

@@ -15,8 +15,7 @@ use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, Strategy};
 use serdab::privacy::{pearson, tensor_to_cell};
 use serdab::profiler::calibrated_profile;
-use serdab::runtime::executor::cpu_client;
-use serdab::runtime::ChainExecutor;
+use serdab::runtime::{default_backend, ChainExecutor};
 use serdab::video::{SceneKind, VideoSource};
 
 const MODEL: &str = "squeezenet";
@@ -37,9 +36,9 @@ fn main() -> anyhow::Result<()> {
     // run the trusted prefix on a real frame and check that what would
     // cross to an untrusted device is actually dissimilar to the input
     {
-        let client = cpu_client()?;
+        let backend = default_backend()?;
         let crossing = info.privacy_crossing(DELTA_RESOLUTION);
-        let prefix = ChainExecutor::load_range(&client, &man, MODEL, 0..crossing)?;
+        let prefix = ChainExecutor::load_range(backend.as_ref(), &man, MODEL, 0..crossing)?;
         let mut cam = VideoSource::new(SceneKind::Street, 1);
         let frame = cam.next_frame();
         let boundary = prefix.run(&frame)?;

@@ -1,7 +1,8 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the three components
 //! on the per-frame critical path of the live pipeline —
 //!   1. AES-128-GCM seal+open of boundary tensors (crypto),
-//!   2. Tensor ⇄ PJRT literal bridging + block execution (runtime),
+//!   2. Tensor ⇄ wire-bytes bridging + block execution (runtime, on the
+//!      backend `SERDAB_BACKEND` selects — reference by default),
 //!   3. record framing + channel sealing (net + channel).
 //!
 //! Run before/after each optimization; the table is the §Perf log's input.
@@ -10,8 +11,7 @@ use serdab::crypto::channel::Channel;
 use serdab::crypto::gcm::AesGcm;
 use serdab::figures::{BenchTimer, Table};
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
-use serdab::runtime::executor::cpu_client;
-use serdab::runtime::{ChainExecutor, Tensor};
+use serdab::runtime::{default_backend, ChainExecutor, Tensor};
 use serdab::util::fmt_bytes;
 
 fn main() -> anyhow::Result<()> {
@@ -53,18 +53,24 @@ fn main() -> anyhow::Result<()> {
     let dir = default_artifacts_dir();
     if dir.join("manifest.json").exists() {
         let man = load_manifest(&dir)?;
-        let client = cpu_client()?;
+        let backend = default_backend()?;
         let info = man.model("squeezenet")?;
-        let chain = ChainExecutor::load(&client, &man, "squeezenet")?;
+        let chain = ChainExecutor::load(backend.as_ref(), &man, "squeezenet")?;
         let input =
             Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone())?;
 
-        let m = timer.measure(|| std::hint::black_box(input.to_literal().unwrap()));
+        let shape = input.shape.clone();
+        let m = timer.measure(|| {
+            // full round-trip: serialize (every sealed hop does this) and
+            // deserialize (every opened record does)
+            let wire = input.to_le_bytes();
+            std::hint::black_box(Tensor::from_le_bytes(&wire, shape.clone()).unwrap())
+        });
         table.row(vec![
-            "tensor→literal".into(),
+            "tensor→wire→tensor".into(),
             fmt_bytes(input.byte_len() as u64),
             format!("{m}"),
-            format!("{:.0} MB/s", input.byte_len() as f64 / m.median_secs / 1e6),
+            format!("{:.0} MB/s", 2.0 * input.byte_len() as f64 / m.median_secs / 1e6),
         ]);
 
         let b0 = &chain.blocks[0];

@@ -4,7 +4,8 @@
 //! against the expected measurement (code id + sealed-partition digest)
 //! before releasing the per-hop session secrets, (2) ships the partition
 //! description to the device, whose dataflow engine loads the block
-//! executables *inside its own runtime* (PJRT clients are per-device), and
+//! executables *inside its own runtime* (each stage constructs its own
+//! execution backend — PJRT clients are per-device), and
 //! (3) wires bandwidth-throttled transmission operators on every
 //! cross-host edge. Frames then stream camera → TEE₁ → … → sink.
 
@@ -23,8 +24,7 @@ use crate::enclave::{attest_and_release, EnclaveSim, NnService};
 use crate::model::Manifest;
 use crate::net::TokenBucket;
 use crate::placement::Placement;
-use crate::runtime::executor::cpu_client;
-use crate::runtime::{ChainExecutor, Tensor};
+use crate::runtime::{default_backend, ChainExecutor, Tensor};
 
 /// A deployed pipeline, ready to accept frames.
 pub struct Deployment {
@@ -109,10 +109,17 @@ impl Deployment {
             stages.push(spawn_stage_builder(
                 label,
                 move || -> Result<Box<dyn Operator>> {
-                    // device-local runtime: own PJRT client, own executables
-                    let client = cpu_client()?;
-                    let chain =
-                        ChainExecutor::load_range(&client, &manifest2, &model2, range.clone())?;
+                    // device-local runtime: each stage constructs its own
+                    // backend + executables (mirrors the real deployment —
+                    // the enclave loads its own partition; and PJRT
+                    // clients are per-device anyway)
+                    let backend = default_backend()?;
+                    let chain = ChainExecutor::load_range(
+                        backend.as_ref(),
+                        &manifest2,
+                        &model2,
+                        range.clone(),
+                    )?;
                     let mut param_bytes = Vec::new();
                     let info = manifest2.model(&model2)?;
                     for b in &info.blocks[range.clone()] {

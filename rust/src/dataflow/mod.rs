@@ -52,9 +52,10 @@ pub fn spawn_stage(
 }
 
 /// Spawn a stage whose operator is *constructed inside the stage thread*.
-/// PJRT clients/executables are not `Send` (each device owns its own
-/// runtime), so NN-service stages build their executor here — which also
-/// mirrors the real deployment: the enclave loads its own partition.
+/// Execution backends are per-device (block runners are not required to
+/// be `Send`; PJRT clients in particular are not), so NN-service stages
+/// build their backend + executor here — which also mirrors the real
+/// deployment: the enclave loads its own partition.
 pub fn spawn_stage_builder(
     name: String,
     builder: impl FnOnce() -> Result<Box<dyn Operator>> + Send + 'static,

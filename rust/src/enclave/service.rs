@@ -1,7 +1,7 @@
 //! The NN Inference Service (paper §III): receives encrypted video frames
 //! or intermediate tensors, decrypts them *inside* the trust boundary,
-//! executes its model partition via PJRT, re-encrypts, and returns the
-//! sealed output. The per-frame stats it keeps (compute / seal / open
+//! executes its model partition on the configured execution backend,
+//! re-encrypts, and returns the sealed output. The per-frame stats it keeps (compute / seal / open
 //! time) are what the coordinator's monitor consumes for online
 //! re-partitioning.
 
@@ -98,7 +98,7 @@ impl NnService {
 mod tests {
     use super::*;
     use crate::model::manifest::{default_artifacts_dir, load_manifest};
-    use crate::runtime::executor::cpu_client;
+    use crate::runtime::default_backend;
 
     #[test]
     fn two_chained_services_reproduce_the_full_model() {
@@ -108,7 +108,7 @@ mod tests {
             return;
         }
         let man = load_manifest(&dir).unwrap();
-        let client = cpu_client().unwrap();
+        let backend = default_backend().unwrap();
         let name = "squeezenet";
         let info = man.model(name).unwrap();
         let m = info.m();
@@ -120,13 +120,13 @@ mod tests {
 
         let mut svc1 = NnService::new(
             EnclaveSim::new("serdab-nn", b"p1", [1u8; 32]),
-            ChainExecutor::load_range(&client, &man, name, 0..cut).unwrap(),
+            ChainExecutor::load_range(backend.as_ref(), &man, name, 0..cut).unwrap(),
             Channel::new(&cam_secret, false),
             Some(Channel::new(&hop_secret, true)),
         );
         let mut svc2 = NnService::new(
             EnclaveSim::new("serdab-nn", b"p2", [2u8; 32]),
-            ChainExecutor::load_range(&client, &man, name, cut..m).unwrap(),
+            ChainExecutor::load_range(backend.as_ref(), &man, name, cut..m).unwrap(),
             Channel::new(&hop_secret, false),
             None,
         );
@@ -159,11 +159,11 @@ mod tests {
             return;
         }
         let man = load_manifest(&dir).unwrap();
-        let client = cpu_client().unwrap();
+        let backend = default_backend().unwrap();
         let info = man.model("squeezenet").unwrap();
         let mut svc = NnService::new(
             EnclaveSim::new("serdab-nn", b"p", [3u8; 32]),
-            ChainExecutor::load_range(&client, &man, "squeezenet", 0..1).unwrap(),
+            ChainExecutor::load_range(backend.as_ref(), &man, "squeezenet", 0..1).unwrap(),
             Channel::new(b"cam", false),
             None,
         );

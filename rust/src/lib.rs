@@ -3,12 +3,17 @@
 //! Reproduction of *Serdab: An IoT Framework for Partitioning Neural
 //! Networks Computation across Multiple Enclaves* (Elgamal & Nahrstedt,
 //! 2020) as a three-layer Rust + JAX + Pallas system: a Rust orchestration
-//! coordinator (this crate) over AOT-compiled per-block HLO artifacts
+//! coordinator (this crate) over AOT-compiled per-block artifacts
 //! authored in JAX with Pallas kernels (`python/compile/`).
 //!
+//! Block execution is pluggable ([`runtime::backend`]): the default
+//! pure-Rust reference backend runs everywhere with no native
+//! dependencies; the optional PJRT/XLA backend (`--features xla`)
+//! executes the compiled HLO artifacts.
+//!
 //! See DESIGN.md for the architecture, substitution table (SGX → enclave
-//! simulator, etc.) and experiment index; EXPERIMENTS.md records
-//! paper-vs-measured results for every figure.
+//! simulator, etc.), backend feature matrix, and experiment index;
+//! EXPERIMENTS.md records paper-vs-measured results for every figure.
 pub mod coordinator;
 pub mod crypto;
 pub mod dataflow;

@@ -131,9 +131,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("frames", "20", "frames to stream")
         .opt("scene", "street", "street|indoor|harbour")
         .opt("strategy", "proposed", "placement strategy")
+        .opt("backend", "", "execution backend (reference|xla; default $SERDAB_BACKEND)")
         .opt("wan-mbps", "30", "inter-edge bandwidth")
         .opt("seed", "7", "video seed");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if !a.get("backend").is_empty() {
+        // stage threads construct their backend via default_backend(),
+        // which reads this variable — validate the name up front so a typo
+        // fails here, not inside a spawned stage (construction itself is
+        // deferred to the stages: PJRT clients are per-device)
+        anyhow::ensure!(
+            serdab::runtime::backend::known_backend(a.get("backend")),
+            "unknown backend '{}' (reference|xla)",
+            a.get("backend")
+        );
+        std::env::set_var("SERDAB_BACKEND", a.get("backend"));
+    }
     let man = load_manifest(default_artifacts_dir())?;
     let model = a.get("model").to_string();
     let frames: usize = a.get_usize("frames").map_err(|e| anyhow::anyhow!(e))?;

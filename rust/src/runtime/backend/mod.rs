@@ -1,0 +1,109 @@
+//! Pluggable block-execution backends (DESIGN.md §4).
+//!
+//! A [`Backend`] turns one manifest block into a [`BlockRunner`]; the
+//! chain executor, enclave service, and deployment layers are all written
+//! against these traits and never name a concrete runtime. Two
+//! implementations exist:
+//!
+//! * [`reference`] — pure-Rust NHWC kernels mirroring
+//!   `python/compile/kernels/ref.py`; always available, no native
+//!   dependencies. The default.
+//! * [`pjrt`] (cargo feature `xla`) — compiles and executes the AOT HLO
+//!   artifacts on a PJRT client; needs real XLA bindings substituted for
+//!   the in-tree stub crate.
+//!
+//! Selection: `SERDAB_BACKEND=reference|xla` in the environment, falling
+//! back to the reference backend.
+
+pub mod reference;
+
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::tensor::Tensor;
+use crate::model::ModelInfo;
+
+/// One loaded, runnable model block.
+pub trait BlockRunner {
+    /// Execute the block on one activation tensor.
+    fn run(&self, activation: &Tensor) -> Result<Tensor>;
+}
+
+/// A block-execution engine: loads manifest blocks into runnable form.
+///
+/// Backends are constructed per thread/device (PJRT clients are not
+/// `Send`, and the real deployment loads each partition inside its own
+/// enclave runtime anyway), so neither trait requires `Send`.
+pub trait Backend {
+    /// Short stable name ("reference", "xla") for logs and errors.
+    fn name(&self) -> &'static str;
+
+    /// Load block `idx` of `model`, reading artifacts from `artifacts_dir`.
+    fn load_block(
+        &self,
+        artifacts_dir: &Path,
+        model: &ModelInfo,
+        idx: usize,
+    ) -> Result<Box<dyn BlockRunner>>;
+}
+
+/// Whether `name` is a backend name [`backend_by_name`] understands
+/// (availability is still feature-dependent at construction time).
+/// Cheap — use for CLI validation without paying backend construction.
+pub fn known_backend(name: &str) -> bool {
+    matches!(name, "reference" | "ref" | "xla" | "pjrt")
+}
+
+/// Construct a backend by name.
+pub fn backend_by_name(name: &str) -> Result<Box<dyn Backend>> {
+    match name {
+        "reference" | "ref" => Ok(Box::new(reference::ReferenceBackend)),
+        #[cfg(feature = "xla")]
+        "xla" | "pjrt" => Ok(Box::new(pjrt::PjrtBackend::new()?)),
+        #[cfg(not(feature = "xla"))]
+        "xla" | "pjrt" => anyhow::bail!(
+            "backend '{name}' requires building with `--features xla` (and real PJRT \
+             bindings substituted for the stub; see DESIGN.md §4)"
+        ),
+        other => anyhow::bail!("unknown backend '{other}' (available: reference, xla)"),
+    }
+}
+
+/// The backend the process should use: `$SERDAB_BACKEND` if set, else the
+/// pure-Rust reference backend.
+pub fn default_backend() -> Result<Box<dyn Backend>> {
+    match std::env::var("SERDAB_BACKEND") {
+        Ok(name) => backend_by_name(&name),
+        Err(_) => Ok(Box::new(reference::ReferenceBackend)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_is_always_available() {
+        assert_eq!(backend_by_name("reference").unwrap().name(), "reference");
+        assert_eq!(backend_by_name("ref").unwrap().name(), "reference");
+    }
+
+    #[test]
+    fn unknown_backend_is_an_error() {
+        let err = backend_by_name("tpu-v9").unwrap_err();
+        assert!(format!("{err}").contains("unknown backend"));
+        assert!(!known_backend("tpu-v9"));
+        assert!(known_backend("reference") && known_backend("xla"));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_without_feature_explains_itself() {
+        let err = backend_by_name("xla").unwrap_err();
+        assert!(format!("{err}").contains("--features xla"), "{err}");
+    }
+}

@@ -1,0 +1,132 @@
+//! PJRT/XLA execution backend (cargo feature `xla`): loads the AOT HLO
+//! artifacts (`artifacts/<model>/block_*.hlo.txt`) and executes them on a
+//! CPU PJRT client — the only place the compiled XLA computations are
+//! touched. Python never runs here.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns them).
+//!
+//! Every block is one PJRT executable with signature
+//! `(activation, *params) -> (activation,)` (lowered with
+//! `return_tuple=True`, so results unwrap with `to_tuple1`). Parameters
+//! are loaded once from `block_NN.params.bin` and converted to literals
+//! held by the runner; the hot path converts only the activation.
+//!
+//! The in-tree `vendor/xla` crate is a compile-only stub; substitute real
+//! bindings via `[patch]` to actually execute (DESIGN.md §4).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::{Backend, BlockRunner};
+use crate::model::ModelInfo;
+use crate::runtime::tensor::Tensor;
+
+/// PJRT backend: one CPU client shared by all blocks it loads.
+pub struct PjrtBackend {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        Ok(PjrtBackend { client: Arc::new(xla::PjRtClient::cpu()?) })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn load_block(
+        &self,
+        artifacts_dir: &Path,
+        model: &ModelInfo,
+        idx: usize,
+    ) -> Result<Box<dyn BlockRunner>> {
+        Ok(Box::new(PjrtBlock::load(&self.client, artifacts_dir, model, idx)?))
+    }
+}
+
+/// One compiled block: executable + its resident parameter literals.
+pub struct PjrtBlock {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    params: Vec<xla::Literal>,
+    out_shape: Vec<usize>,
+}
+
+impl PjrtBlock {
+    /// Load + compile a block from the artifact manifest.
+    pub fn load(
+        client: &xla::PjRtClient,
+        manifest_dir: &Path,
+        model: &ModelInfo,
+        idx: usize,
+    ) -> Result<Self> {
+        let b = &model.blocks[idx];
+        let hlo_path = manifest_dir.join(&b.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", b.hlo))?;
+
+        // parameters: one flat f32 file, split per declared shape
+        let raw = std::fs::read(manifest_dir.join(&b.params))
+            .with_context(|| format!("reading {}", b.params))?;
+        let mut params = Vec::with_capacity(b.param_shapes.len());
+        let mut off = 0usize;
+        for shape in &b.param_shapes {
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(
+                raw.len() >= (off + n) * 4,
+                "param file {} too short for shape {:?} at offset {off}",
+                b.params,
+                shape
+            );
+            let bytes = &raw[off * 4..(off + n) * 4];
+            let t = Tensor::from_le_bytes(bytes, shape.clone())?;
+            params.push(t.to_literal()?);
+            off += n;
+        }
+        anyhow::ensure!(
+            off as u64 == b.param_floats,
+            "param file length mismatch for {}",
+            b.name
+        );
+
+        Ok(PjrtBlock {
+            name: b.name.clone(),
+            exe,
+            params,
+            out_shape: b.out_shape.clone(),
+        })
+    }
+}
+
+impl BlockRunner for PjrtBlock {
+    fn run(&self, activation: &Tensor) -> Result<Tensor> {
+        // execute borrows literals — params stay resident, only the
+        // activation converts per call
+        let act_lit = activation.to_literal()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.params.len());
+        args.push(&act_lit);
+        for p in &self.params {
+            args.push(p);
+        }
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("executing block {}", self.name))?;
+        let out = result.to_tuple1()?;
+        Tensor::from_literal(&out, self.out_shape.clone())
+    }
+}

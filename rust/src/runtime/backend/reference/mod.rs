@@ -1,0 +1,261 @@
+//! The default execution backend: pure-Rust reference kernels walking the
+//! zoo's block structure, with parameters loaded straight from the
+//! artifact `block_NN.params.bin` files (same flat-f32 contract the PJRT
+//! path uses). No native dependencies — this is what makes the tier-1
+//! suite hermetic — and numerically it mirrors
+//! `python/compile/kernels/ref.py`, the oracle the golden activations
+//! were generated against.
+
+pub mod ops;
+pub mod zoo;
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use self::zoo::{BlockDef, Combine, Layer};
+use super::{Backend, BlockRunner};
+use crate::model::ModelInfo;
+use crate::runtime::tensor::Tensor;
+
+/// Pure-Rust reference backend (always available).
+pub struct ReferenceBackend;
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load_block(
+        &self,
+        artifacts_dir: &Path,
+        model: &ModelInfo,
+        idx: usize,
+    ) -> Result<Box<dyn BlockRunner>> {
+        let defs = zoo::arch_blocks(&model.name).ok_or_else(|| {
+            anyhow!(
+                "reference backend has no architecture definition for model '{}'",
+                model.name
+            )
+        })?;
+        ensure!(
+            defs.len() == model.blocks.len(),
+            "architecture mismatch for {}: zoo describes {} blocks, manifest has {}",
+            model.name,
+            defs.len(),
+            model.blocks.len()
+        );
+        let def: BlockDef = defs
+            .into_iter()
+            .nth(idx)
+            .ok_or_else(|| anyhow!("block index {idx} out of range for {}", model.name))?;
+        let b = &model.blocks[idx];
+        ensure!(
+            def.name == b.name,
+            "zoo/manifest block name mismatch at {} index {idx}: '{}' vs '{}'",
+            model.name,
+            def.name,
+            b.name
+        );
+        let expected = zoo::param_tensor_count(&def.layers);
+        ensure!(
+            expected == b.param_shapes.len(),
+            "block {}: zoo expects {expected} parameter tensors, manifest declares {}",
+            b.name,
+            b.param_shapes.len()
+        );
+
+        // parameters: one flat little-endian f32 file, split per declared
+        // shape (identical to the PJRT loader's contract)
+        let raw = std::fs::read(artifacts_dir.join(&b.params))
+            .with_context(|| format!("reading {}", b.params))?;
+        let mut params = Vec::with_capacity(b.param_shapes.len());
+        let mut off = 0usize;
+        for shape in &b.param_shapes {
+            let n: usize = shape.iter().product();
+            ensure!(
+                raw.len() >= (off + n) * 4,
+                "param file {} too short for shape {:?} at offset {off}",
+                b.params,
+                shape
+            );
+            params.push(Tensor::from_le_bytes(&raw[off * 4..(off + n) * 4], shape.clone())?);
+            off += n;
+        }
+        ensure!(off as u64 == b.param_floats, "param file length mismatch for {}", b.name);
+
+        Ok(Box::new(RefBlock { name: b.name.clone(), layers: def.layers, params }))
+    }
+}
+
+/// One loaded block: structure + resident parameter tensors. The
+/// out-shape contract is enforced by `BlockExecutable::run` for every
+/// backend, so it is not duplicated here.
+struct RefBlock {
+    name: String,
+    layers: Vec<Layer>,
+    params: Vec<Tensor>,
+}
+
+impl BlockRunner for RefBlock {
+    fn run(&self, activation: &Tensor) -> Result<Tensor> {
+        let mut cursor = 0usize;
+        let out = forward_layers(&self.layers, activation.clone(), &self.params, &mut cursor)
+            .with_context(|| format!("reference forward of block {}", self.name))?;
+        ensure!(
+            cursor == self.params.len(),
+            "block {}: consumed {cursor} of {} parameter tensors",
+            self.name,
+            self.params.len()
+        );
+        Ok(out)
+    }
+}
+
+/// Take the next (weight, bias) pair off the parameter stream.
+fn take_pair<'a>(params: &'a [Tensor], cursor: &mut usize) -> Result<(&'a Tensor, &'a Tensor)> {
+    if *cursor + 2 > params.len() {
+        bail!("parameter stream exhausted at tensor {}", *cursor);
+    }
+    let pair = (&params[*cursor], &params[*cursor + 1]);
+    *cursor += 2;
+    Ok(pair)
+}
+
+/// Depth-first forward walk, mirroring `model.py::_fwd_layers` with
+/// `use_ref=True`: each conv/dense consumes (weight, bias) in order;
+/// parallel paths all read the same input and consume params path by path.
+fn forward_layers(
+    layers: &[Layer],
+    mut x: Tensor,
+    params: &[Tensor],
+    cursor: &mut usize,
+) -> Result<Tensor> {
+    for layer in layers {
+        x = match layer {
+            Layer::Conv { kernel, stride, pad, relu } => {
+                ensure!(x.shape.len() == 4, "conv after flatten (shape {:?})", x.shape);
+                let (w, b) = take_pair(params, cursor)?;
+                ensure!(
+                    w.shape.len() == 4 && w.shape[0] == *kernel,
+                    "conv weight {:?} does not match declared {kernel}x{kernel} kernel",
+                    w.shape
+                );
+                ops::conv2d(&x, w, b, *stride, pad, *relu)?
+            }
+            Layer::DwConv { kernel, stride, pad, relu } => {
+                let (w, b) = take_pair(params, cursor)?;
+                ensure!(
+                    w.shape.len() == 3 && w.shape[0] == *kernel,
+                    "depthwise weight {:?} does not match declared {kernel}x{kernel} kernel",
+                    w.shape
+                );
+                ops::dwconv2d(&x, w, b, *stride, pad, *relu)?
+            }
+            Layer::Pool { kernel, stride, max, pad } => ops::pool2d(&x, *kernel, *stride, *max, pad)?,
+            Layer::GlobalAvgPool => ops::global_avg_pool(&x)?,
+            Layer::Dense { relu } => {
+                let (w, b) = take_pair(params, cursor)?;
+                let flat = if x.shape.len() == 4 { ops::flatten(&x)? } else { x };
+                ops::dense(&flat, w, b, *relu)?
+            }
+            Layer::Identity => x,
+            Layer::Parallel { paths, combine, post_relu } => {
+                let mut outs = Vec::with_capacity(paths.len());
+                for path in paths {
+                    outs.push(forward_layers(path, x.clone(), params, cursor)?);
+                }
+                let mut merged = match combine {
+                    Combine::Concat => ops::concat_channels(&outs)?,
+                    Combine::Add => {
+                        let mut acc = outs[0].clone();
+                        for o in &outs[1..] {
+                            acc = ops::add(&acc, o)?;
+                        }
+                        acc
+                    }
+                };
+                if *post_relu {
+                    ops::relu_in_place(&mut merged);
+                }
+                merged
+            }
+        };
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: Vec<f32>) -> Tensor {
+        Tensor::new(shape.to_vec(), data).unwrap()
+    }
+
+    #[test]
+    fn fire_module_walk_consumes_params_in_order() {
+        // squeeze 1x1 (2ch) then expand {1x1 | 3x3} concat, on a 2x2 input
+        let layers = zoo::arch_blocks("squeezenet").unwrap()[1].layers.clone();
+        let x = t(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let params = vec![
+            t(&[1, 1, 1, 2], vec![1.0, -1.0]), // squeeze w
+            t(&[2], vec![0.0, 0.0]),           // squeeze b
+            t(&[1, 1, 2, 1], vec![1.0, 1.0]),  // expand 1x1 w
+            t(&[1], vec![0.0]),                // expand 1x1 b
+            t(&[3, 3, 2, 1], vec![0.0; 18]),   // expand 3x3 w (zero)
+            t(&[1], vec![0.5]),                // expand 3x3 b
+        ];
+        let mut cursor = 0;
+        let out = forward_layers(&layers, x, &params, &mut cursor).unwrap();
+        assert_eq!(cursor, 6);
+        assert_eq!(out.shape, vec![1, 2, 2, 2]);
+        // squeeze: ch0 = x (relu), ch1 = -x → relu → 0.
+        // expand 1x1 sums the two squeeze channels = x; expand 3x3 = 0.5.
+        assert_eq!(out.data, vec![1.0, 0.5, 2.0, 0.5, 3.0, 0.5, 4.0, 0.5]);
+    }
+
+    #[test]
+    fn residual_identity_unit_adds_shortcut() {
+        let layers = vec![zoo::arch_blocks("resnet").unwrap()[5].layers[0].clone()];
+        let x = t(&[1, 1, 1, 1], vec![2.0]);
+        // main path: three 1x1 convs with weight 1, bias 0 → passes 2.0
+        let params = vec![
+            t(&[1, 1, 1, 1], vec![1.0]),
+            t(&[1], vec![0.0]),
+            t(&[3, 3, 1, 1], {
+                let mut w = vec![0.0; 9];
+                w[4] = 1.0; // center tap = identity conv
+                w
+            }),
+            t(&[1], vec![0.0]),
+            t(&[1, 1, 1, 1], vec![1.0]),
+            t(&[1], vec![0.0]),
+        ];
+        let mut cursor = 0;
+        let out = forward_layers(&layers, x, &params, &mut cursor).unwrap();
+        assert_eq!(cursor, 6);
+        // main 2.0 + identity shortcut 2.0, post-ReLU
+        assert_eq!(out.data, vec![4.0]);
+    }
+
+    #[test]
+    fn head_block_flattens_before_dense() {
+        let layers = zoo::arch_blocks("googlenet").unwrap()[11].layers.clone();
+        let x = t(&[1, 2, 2, 2], vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0]);
+        // GAP → [2.5, 25.0]; dense 2→2 identity, no relu
+        let params = vec![t(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]), t(&[2], vec![0.0, 0.0])];
+        let mut cursor = 0;
+        let out = forward_layers(&layers, x, &params, &mut cursor).unwrap();
+        assert_eq!(out.shape, vec![1, 2]);
+        assert_eq!(out.data, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn exhausted_param_stream_is_an_error() {
+        let layers = vec![Layer::Dense { relu: false }];
+        let x = t(&[1, 2], vec![1.0, 2.0]);
+        let mut cursor = 0;
+        assert!(forward_layers(&layers, x, &[], &mut cursor).is_err());
+    }
+}

@@ -1,0 +1,429 @@
+//! Pure-Rust NHWC reference kernels — the Rust mirror of
+//! `python/compile/kernels/ref.py` (the ground-truth semantics every
+//! Pallas kernel and HLO artifact is tested against). f32, row-major,
+//! batch-first; conv weights are HWIO `(KH, KW, Cin, Cout)`, depthwise
+//! weights `(KH, KW, C)`, dense weights `(Fin, Fout)`.
+//!
+//! Padding follows XLA/TF conventions: `SAME` pads
+//! `max((ceil(H/s)-1)·s + K - H, 0)` split floor-before / rest-after;
+//! `VALID` pads nothing. Max-pool padding is identity-valued (skipped
+//! cells), avg-pool divides by K² exactly like `ref.py`'s
+//! `reduce_window(add) / K²`.
+
+use anyhow::{bail, ensure, Result};
+
+use super::zoo::Pad;
+use crate::runtime::tensor::Tensor;
+
+/// Resolved padding: (top, left) offsets plus output height/width.
+struct Window {
+    top: usize,
+    left: usize,
+    oh: usize,
+    ow: usize,
+}
+
+fn resolve(h: usize, w: usize, k: usize, s: usize, pad: &Pad) -> Result<Window> {
+    ensure!(s > 0 && k > 0, "window needs positive kernel/stride, got k={k} s={s}");
+    match pad {
+        Pad::Same => {
+            let oh = (h + s - 1) / s;
+            let ow = (w + s - 1) / s;
+            let pad_h = ((oh - 1) * s + k).saturating_sub(h);
+            let pad_w = ((ow - 1) * s + k).saturating_sub(w);
+            Ok(Window { top: pad_h / 2, left: pad_w / 2, oh, ow })
+        }
+        Pad::Valid => {
+            ensure!(h >= k && w >= k, "VALID window {k}x{k} larger than input {h}x{w}");
+            Ok(Window { top: 0, left: 0, oh: (h - k) / s + 1, ow: (w - k) / s + 1 })
+        }
+        Pad::Explicit { top, bottom, left, right } => {
+            ensure!(
+                h + top + bottom >= k && w + left + right >= k,
+                "explicit padding leaves input smaller than the {k}x{k} window"
+            );
+            Ok(Window {
+                top: *top,
+                left: *left,
+                oh: (h + top + bottom - k) / s + 1,
+                ow: (w + left + right - k) / s + 1,
+            })
+        }
+    }
+}
+
+fn dims4(x: &Tensor, what: &str) -> Result<(usize, usize, usize, usize)> {
+    if x.shape.len() != 4 {
+        bail!("{what} wants a rank-4 NHWC tensor, got shape {:?}", x.shape);
+    }
+    Ok((x.shape[0], x.shape[1], x.shape[2], x.shape[3]))
+}
+
+/// 2-D convolution, NHWC × HWIO → NHWC, bias add, optional ReLU.
+pub fn conv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: usize, pad: &Pad, relu: bool) -> Result<Tensor> {
+    let (n, h, wd, cin) = dims4(x, "conv2d input")?;
+    ensure!(
+        w.shape.len() == 4 && w.shape[2] == cin,
+        "conv2d weight {:?} does not match input channels {cin}",
+        w.shape
+    );
+    let (kh, kw, _, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    ensure!(kh == kw, "conv2d kernels are square here, got {kh}x{kw}");
+    ensure!(b.shape == [cout], "conv2d bias {:?} vs {cout} output channels", b.shape);
+    let win = resolve(h, wd, kh, stride, pad)?;
+
+    let mut out = vec![0f32; n * win.oh * win.ow * cout];
+    let mut acc = vec![0f32; cout];
+    for ni in 0..n {
+        for oy in 0..win.oh {
+            for ox in 0..win.ow {
+                acc.copy_from_slice(&b.data);
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - win.top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - win.left as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let x_base = (((ni * h + iy as usize) * wd) + ix as usize) * cin;
+                        let w_base = ((ky * kw) + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x.data[x_base + ci];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let w_row = w_base + ci * cout;
+                            for (co, a) in acc.iter_mut().enumerate() {
+                                *a += xv * w.data[w_row + co];
+                            }
+                        }
+                    }
+                }
+                let o_base = (((ni * win.oh + oy) * win.ow) + ox) * cout;
+                for (co, &a) in acc.iter().enumerate() {
+                    out[o_base + co] = if relu { a.max(0.0) } else { a };
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, win.oh, win.ow, cout], out)
+}
+
+/// Depthwise 2-D convolution (MobileNet): weight `(KH, KW, C)`, one
+/// filter per input channel, channel count preserved.
+pub fn dwconv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: usize, pad: &Pad, relu: bool) -> Result<Tensor> {
+    let (n, h, wd, c) = dims4(x, "dwconv2d input")?;
+    ensure!(
+        w.shape.len() == 3 && w.shape[2] == c,
+        "dwconv2d weight {:?} does not match input channels {c}",
+        w.shape
+    );
+    let (kh, kw) = (w.shape[0], w.shape[1]);
+    ensure!(kh == kw, "dwconv2d kernels are square here, got {kh}x{kw}");
+    ensure!(b.shape == [c], "dwconv2d bias {:?} vs {c} channels", b.shape);
+    let win = resolve(h, wd, kh, stride, pad)?;
+
+    let mut out = vec![0f32; n * win.oh * win.ow * c];
+    for ni in 0..n {
+        for oy in 0..win.oh {
+            for ox in 0..win.ow {
+                let o_base = (((ni * win.oh + oy) * win.ow) + ox) * c;
+                for ch in 0..c {
+                    let mut a = b.data[ch];
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - win.top as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - win.left as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            let xi = (((ni * h + iy as usize) * wd) + ix as usize) * c + ch;
+                            a += x.data[xi] * w.data[((ky * kw) + kx) * c + ch];
+                        }
+                    }
+                    out[o_base + ch] = if relu { a.max(0.0) } else { a };
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, win.oh, win.ow, c], out)
+}
+
+/// Max / average pooling. Average divides by K² (exactly `ref.py`:
+/// zero-padded sum over the window divided by the full window size).
+pub fn pool2d(x: &Tensor, kernel: usize, stride: usize, max: bool, pad: &Pad) -> Result<Tensor> {
+    let (n, h, wd, c) = dims4(x, "pool2d input")?;
+    let win = resolve(h, wd, kernel, stride, pad)?;
+    let mut out = vec![0f32; n * win.oh * win.ow * c];
+    for ni in 0..n {
+        for oy in 0..win.oh {
+            for ox in 0..win.ow {
+                let o_base = (((ni * win.oh + oy) * win.ow) + ox) * c;
+                for ch in 0..c {
+                    let mut a = if max { f32::NEG_INFINITY } else { 0.0 };
+                    for ky in 0..kernel {
+                        let iy = (oy * stride + ky) as isize - win.top as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kernel {
+                            let ix = (ox * stride + kx) as isize - win.left as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            let v = x.data[(((ni * h + iy as usize) * wd) + ix as usize) * c + ch];
+                            if max {
+                                a = a.max(v);
+                            } else {
+                                a += v;
+                            }
+                        }
+                    }
+                    out[o_base + ch] = if max { a } else { a / (kernel * kernel) as f32 };
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, win.oh, win.ow, c], out)
+}
+
+/// Global average pool: `(N, H, W, C)` → `(N, C)`.
+pub fn global_avg_pool(x: &Tensor) -> Result<Tensor> {
+    let (n, h, w, c) = dims4(x, "global_avg_pool input")?;
+    let mut out = vec![0f32; n * c];
+    for ni in 0..n {
+        for y in 0..h {
+            for xx in 0..w {
+                let base = (((ni * h + y) * w) + xx) * c;
+                for ch in 0..c {
+                    out[ni * c + ch] += x.data[base + ch];
+                }
+            }
+        }
+    }
+    let denom = (h * w) as f32;
+    for v in &mut out {
+        *v /= denom;
+    }
+    Tensor::new(vec![n, c], out)
+}
+
+/// Dense layer: `(N, Fin) × (Fin, Fout) + bias`, optional ReLU.
+pub fn dense(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Result<Tensor> {
+    ensure!(x.shape.len() == 2, "dense wants a rank-2 input, got {:?}", x.shape);
+    let (n, fin) = (x.shape[0], x.shape[1]);
+    ensure!(
+        w.shape.len() == 2 && w.shape[0] == fin,
+        "dense weight {:?} does not match input features {fin}",
+        w.shape
+    );
+    let fout = w.shape[1];
+    ensure!(b.shape == [fout], "dense bias {:?} vs {fout} outputs", b.shape);
+    let mut out = vec![0f32; n * fout];
+    for ni in 0..n {
+        let row = &mut out[ni * fout..(ni + 1) * fout];
+        row.copy_from_slice(&b.data);
+        for fi in 0..fin {
+            let xv = x.data[ni * fin + fi];
+            if xv == 0.0 {
+                continue;
+            }
+            let w_row = &w.data[fi * fout..(fi + 1) * fout];
+            for (o, wv) in row.iter_mut().zip(w_row) {
+                *o += xv * wv;
+            }
+        }
+        if relu {
+            for o in row.iter_mut() {
+                *o = o.max(0.0);
+            }
+        }
+    }
+    Tensor::new(vec![n, fout], out)
+}
+
+/// Flatten `(N, H, W, C)` → `(N, H·W·C)` (row-major, matching
+/// `jnp.reshape(1, -1)` in the python forward).
+pub fn flatten(x: &Tensor) -> Result<Tensor> {
+    let (n, h, w, c) = dims4(x, "flatten input")?;
+    Tensor::new(vec![n, h * w * c], x.data.clone())
+}
+
+/// Concatenate along the channel axis (axis 3).
+pub fn concat_channels(parts: &[Tensor]) -> Result<Tensor> {
+    ensure!(!parts.is_empty(), "concat of zero tensors");
+    let (n, h, w, _) = dims4(&parts[0], "concat input")?;
+    let mut c_total = 0usize;
+    for p in parts {
+        let (pn, ph, pw, pc) = dims4(p, "concat input")?;
+        ensure!(
+            (pn, ph, pw) == (n, h, w),
+            "concat spatial mismatch: {:?} vs {:?}",
+            p.shape,
+            parts[0].shape
+        );
+        c_total += pc;
+    }
+    let mut out = vec![0f32; n * h * w * c_total];
+    for pixel in 0..n * h * w {
+        let mut off = 0usize;
+        for p in parts {
+            let pc = p.shape[3];
+            out[pixel * c_total + off..pixel * c_total + off + pc]
+                .copy_from_slice(&p.data[pixel * pc..(pixel + 1) * pc]);
+            off += pc;
+        }
+    }
+    Tensor::new(vec![n, h, w, c_total], out)
+}
+
+/// Elementwise sum (residual merge).
+pub fn add(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    ensure!(a.shape == b.shape, "add shape mismatch: {:?} vs {:?}", a.shape, b.shape);
+    let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+    Tensor::new(a.shape.clone(), data)
+}
+
+/// In-place ReLU.
+pub fn relu_in_place(t: &mut Tensor) {
+    for v in &mut t.data {
+        *v = v.max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: &[f32]) -> Tensor {
+        Tensor::new(shape.to_vec(), data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 conv with identity weight passes channels through + bias
+        let x = t(&[1, 2, 2, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let w = t(&[1, 1, 2, 2], &[1.0, 0.0, 0.0, 1.0]);
+        let b = t(&[2], &[0.5, -0.5]);
+        let y = conv2d(&x, &w, &b, 1, &Pad::Same, false).unwrap();
+        assert_eq!(y.shape, vec![1, 2, 2, 2]);
+        assert_eq!(y.data, vec![1.5, 1.5, 3.5, 3.5, 5.5, 5.5, 7.5, 7.5]);
+    }
+
+    #[test]
+    fn conv2d_same_padding_sums_window() {
+        // 3x3 all-ones kernel over a 3x3 ramp; SAME keeps 3x3 output.
+        // center output = sum of all 9 inputs = 45.
+        let x = t(&[1, 3, 3, 1], &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let w = t(&[3, 3, 1, 1], &[1.0; 9]);
+        let b = t(&[1], &[0.0]);
+        let y = conv2d(&x, &w, &b, 1, &Pad::Same, false).unwrap();
+        assert_eq!(y.shape, vec![1, 3, 3, 1]);
+        assert_eq!(y.data[4], 45.0);
+        // corner (0,0) sees the 2x2 top-left patch: 1+2+4+5 = 12
+        assert_eq!(y.data[0], 12.0);
+    }
+
+    #[test]
+    fn conv2d_valid_and_stride() {
+        let x = t(&[1, 4, 4, 1], &(1..=16).map(|v| v as f32).collect::<Vec<_>>());
+        let w = t(&[2, 2, 1, 1], &[1.0; 4]);
+        let b = t(&[1], &[0.0]);
+        let y = conv2d(&x, &w, &b, 2, &Pad::Valid, false).unwrap();
+        assert_eq!(y.shape, vec![1, 2, 2, 1]);
+        // windows: (1+2+5+6), (3+4+7+8), (9+10+13+14), (11+12+15+16)
+        assert_eq!(y.data, vec![14.0, 22.0, 46.0, 54.0]);
+    }
+
+    #[test]
+    fn conv2d_relu_clamps() {
+        let x = t(&[1, 1, 1, 1], &[2.0]);
+        let w = t(&[1, 1, 1, 1], &[-3.0]);
+        let b = t(&[1], &[1.0]);
+        let y = conv2d(&x, &w, &b, 1, &Pad::Valid, true).unwrap();
+        assert_eq!(y.data, vec![0.0]); // -6 + 1 = -5 → relu → 0
+        let y = conv2d(&x, &w, &b, 1, &Pad::Valid, false).unwrap();
+        assert_eq!(y.data, vec![-5.0]);
+    }
+
+    #[test]
+    fn dwconv2d_per_channel() {
+        // two channels, 1x1 depthwise weights [2, 10]: channels scale independently
+        let x = t(&[1, 1, 2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let w = t(&[1, 1, 2], &[2.0, 10.0]);
+        let b = t(&[2], &[0.0, 1.0]);
+        let y = dwconv2d(&x, &w, &b, 1, &Pad::Same, false).unwrap();
+        assert_eq!(y.data, vec![2.0, 21.0, 6.0, 41.0]);
+    }
+
+    #[test]
+    fn pool2d_max_and_avg() {
+        let x = t(&[1, 2, 2, 1], &[1.0, 5.0, 3.0, 2.0]);
+        let y = pool2d(&x, 2, 2, true, &Pad::Valid).unwrap();
+        assert_eq!(y.shape, vec![1, 1, 1, 1]);
+        assert_eq!(y.data, vec![5.0]);
+        let y = pool2d(&x, 2, 2, false, &Pad::Valid).unwrap();
+        assert_eq!(y.data, vec![11.0 / 4.0]);
+    }
+
+    #[test]
+    fn pool2d_same_ignores_padding_for_max() {
+        // 3x3 max over 2x2 input with SAME/stride 2: one output, max of all
+        let x = t(&[1, 2, 2, 1], &[-1.0, -5.0, -3.0, -2.0]);
+        let y = pool2d(&x, 3, 2, true, &Pad::Same).unwrap();
+        assert_eq!(y.shape, vec![1, 1, 1, 1]);
+        assert_eq!(y.data, vec![-1.0]); // padding must NOT contribute zeros
+    }
+
+    #[test]
+    fn global_avg_pool_means() {
+        let x = t(&[1, 2, 2, 2], &[1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0]);
+        let y = global_avg_pool(&x).unwrap();
+        assert_eq!(y.shape, vec![1, 2]);
+        assert_eq!(y.data, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn dense_matmul_bias_relu() {
+        let x = t(&[1, 3], &[1.0, 2.0, 3.0]);
+        let w = t(&[3, 2], &[1.0, -1.0, 0.0, 1.0, 1.0, -2.0]);
+        let b = t(&[2], &[0.5, 0.5]);
+        // y0 = 1*1 + 2*0 + 3*1 + .5 = 4.5 ; y1 = -1 + 2 - 6 + .5 = -4.5
+        let y = dense(&x, &w, &b, false).unwrap();
+        assert_eq!(y.data, vec![4.5, -4.5]);
+        let y = dense(&x, &w, &b, true).unwrap();
+        assert_eq!(y.data, vec![4.5, 0.0]);
+    }
+
+    #[test]
+    fn concat_and_add_and_flatten() {
+        let a = t(&[1, 1, 2, 1], &[1.0, 2.0]);
+        let b = t(&[1, 1, 2, 2], &[3.0, 4.0, 5.0, 6.0]);
+        let y = concat_channels(&[a.clone(), b]).unwrap();
+        assert_eq!(y.shape, vec![1, 1, 2, 3]);
+        assert_eq!(y.data, vec![1.0, 3.0, 4.0, 2.0, 5.0, 6.0]);
+
+        let s = add(&a, &a).unwrap();
+        assert_eq!(s.data, vec![2.0, 4.0]);
+
+        let f = flatten(&y).unwrap();
+        assert_eq!(f.shape, vec![1, 6]);
+    }
+
+    #[test]
+    fn shape_errors_are_caught() {
+        let x = t(&[1, 2, 2, 1], &[0.0; 4]);
+        let w = t(&[3, 3, 2, 1], &[0.0; 18]); // wrong cin
+        let b = t(&[1], &[0.0]);
+        assert!(conv2d(&x, &w, &b, 1, &Pad::Same, true).is_err());
+        let flat = t(&[1, 4], &[0.0; 4]);
+        assert!(dense(&flat, &t(&[3, 2], &[0.0; 6]), &t(&[2], &[0.0; 2]), true).is_err());
+        assert!(pool2d(&x, 3, 1, true, &Pad::Valid).is_err()); // window > input
+    }
+}

@@ -1,0 +1,290 @@
+//! Block-structure zoo: the layer topology of the five evaluated CNNs,
+//! transcribed from `python/compile/model.py` (the single source of truth
+//! for the artifacts). The reference backend only needs the *structure* —
+//! layer kinds, kernel/stride/padding, ReLU flags, and parallel-path
+//! topology; channel counts are recovered from the parameter tensors in
+//! `block_NN.params.bin`, so the tiny-width channel arithmetic never has
+//! to be duplicated here.
+//!
+//! Parameter consumption order is the contract: every `Conv`/`DwConv`/
+//! `Dense` consumes (weight, bias) in depth-first layer order, exactly as
+//! `model.py::_init_params_layers` emits them.
+
+/// Spatial padding of a windowed op, mirroring the python `padding` field.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Pad {
+    Same,
+    Valid,
+    Explicit { top: usize, bottom: usize, left: usize, right: usize },
+}
+
+/// How a [`Layer::Parallel`] merges its path outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Combine {
+    /// Channel concatenation (inception modules, fire expand).
+    Concat,
+    /// Elementwise sum (residual blocks).
+    Add,
+}
+
+/// One primitive in a block's forward walk.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Conv { kernel: usize, stride: usize, pad: Pad, relu: bool },
+    DwConv { kernel: usize, stride: usize, pad: Pad, relu: bool },
+    Pool { kernel: usize, stride: usize, max: bool, pad: Pad },
+    GlobalAvgPool,
+    Dense { relu: bool },
+    Identity,
+    Parallel { paths: Vec<Vec<Layer>>, combine: Combine, post_relu: bool },
+}
+
+/// One partitionable unit L_x: name (must match the manifest) + layers.
+#[derive(Debug, Clone)]
+pub struct BlockDef {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+fn conv(kernel: usize, stride: usize) -> Layer {
+    Layer::Conv { kernel, stride, pad: Pad::Same, relu: true }
+}
+
+fn conv_linear(kernel: usize, stride: usize) -> Layer {
+    Layer::Conv { kernel, stride, pad: Pad::Same, relu: false }
+}
+
+fn pool_valid(kernel: usize, stride: usize) -> Layer {
+    Layer::Pool { kernel, stride, max: true, pad: Pad::Valid }
+}
+
+fn pool_same(kernel: usize, stride: usize) -> Layer {
+    Layer::Pool { kernel, stride, max: true, pad: Pad::Same }
+}
+
+fn dense(relu: bool) -> Layer {
+    Layer::Dense { relu }
+}
+
+fn block(name: &'static str, layers: Vec<Layer>) -> BlockDef {
+    BlockDef { name, layers }
+}
+
+/// Inception module: 1x1 | 1x1→3x3 | 1x1→5x5 | maxpool→1x1, concat.
+fn inception() -> Layer {
+    Layer::Parallel {
+        paths: vec![
+            vec![conv(1, 1)],
+            vec![conv(1, 1), conv(3, 1)],
+            vec![conv(1, 1), conv(5, 1)],
+            vec![pool_same(3, 1), conv(1, 1)],
+        ],
+        combine: Combine::Concat,
+        post_relu: false,
+    }
+}
+
+/// Fire module (SqueezeNet): squeeze 1x1 → expand {1x1 | 3x3} concat.
+fn fire() -> Vec<Layer> {
+    vec![
+        conv(1, 1),
+        Layer::Parallel {
+            paths: vec![vec![conv(1, 1)], vec![conv(3, 1)]],
+            combine: Combine::Concat,
+            post_relu: false,
+        },
+    ]
+}
+
+/// Bottleneck residual unit (ResNet-50 style): 1x1 → 3x3 → linear 1x1,
+/// plus a projection (or identity) shortcut, summed then ReLU'd.
+fn res_unit(stride: usize, project: bool) -> Layer {
+    let main = vec![
+        Layer::Conv { kernel: 1, stride, pad: Pad::Same, relu: true },
+        conv(3, 1),
+        conv_linear(1, 1),
+    ];
+    let shortcut = if project {
+        vec![Layer::Conv { kernel: 1, stride, pad: Pad::Same, relu: false }]
+    } else {
+        vec![Layer::Identity]
+    };
+    Layer::Parallel { paths: vec![main, shortcut], combine: Combine::Add, post_relu: true }
+}
+
+/// Depthwise-separable unit (MobileNet): 3x3 depthwise → 1x1 pointwise.
+fn dsw(stride: usize) -> Vec<Layer> {
+    vec![Layer::DwConv { kernel: 3, stride, pad: Pad::Same, relu: true }, conv(1, 1)]
+}
+
+fn alexnet() -> Vec<BlockDef> {
+    vec![
+        block(
+            "conv1",
+            vec![Layer::Conv {
+                kernel: 11,
+                stride: 4,
+                pad: Pad::Explicit { top: 2, bottom: 2, left: 2, right: 2 },
+                relu: true,
+            }],
+        ),
+        block("pool1_conv2", vec![pool_valid(3, 2), conv(5, 1)]),
+        block("pool2_conv3", vec![pool_valid(3, 2), conv(3, 1)]),
+        block("conv4", vec![conv(3, 1)]),
+        block("conv5_pool5", vec![conv(3, 1), pool_valid(3, 2)]),
+        block("fc6", vec![dense(true)]),
+        block("fc7", vec![dense(true)]),
+        block("fc8", vec![dense(false)]),
+    ]
+}
+
+fn googlenet() -> Vec<BlockDef> {
+    vec![
+        block("conv1_pool1", vec![conv(7, 2), pool_same(3, 2)]),
+        block("conv2_pool2", vec![conv(1, 1), conv(3, 1), pool_same(3, 2)]),
+        block("inc3a", vec![inception()]),
+        block("inc3b_pool3", vec![inception(), pool_same(3, 2)]),
+        block("inc4a", vec![inception()]),
+        block("inc4b", vec![inception()]),
+        block("inc4c", vec![inception()]),
+        block("inc4d", vec![inception()]),
+        block("inc4e_pool4", vec![inception(), pool_same(3, 2)]),
+        block("inc5a", vec![inception()]),
+        block("inc5b", vec![inception()]),
+        block("head", vec![Layer::GlobalAvgPool, dense(false)]),
+    ]
+}
+
+fn resnet() -> Vec<BlockDef> {
+    vec![
+        block("conv1_pool1", vec![conv(7, 2), pool_same(3, 2)]),
+        block("res2a", vec![res_unit(1, true)]),
+        block("res2bc", vec![res_unit(1, false), res_unit(1, false)]),
+        block("res3a", vec![res_unit(2, true)]),
+        block("res3bc", vec![res_unit(1, false), res_unit(1, false)]),
+        block("res3d", vec![res_unit(1, false)]),
+        block("res4a", vec![res_unit(2, true)]),
+        block("res4bc", vec![res_unit(1, false), res_unit(1, false)]),
+        block("res4de", vec![res_unit(1, false), res_unit(1, false)]),
+        block("res4f", vec![res_unit(1, false)]),
+        block("res5a", vec![res_unit(2, true)]),
+        block("res5bc", vec![res_unit(1, false), res_unit(1, false)]),
+        block("head", vec![Layer::GlobalAvgPool, dense(false)]),
+    ]
+}
+
+fn mobilenet() -> Vec<BlockDef> {
+    let strides = [1usize, 2, 1, 2, 1, 2, 1, 1, 1, 1, 1, 2, 1];
+    let names = [
+        "dsw1", "dsw2", "dsw3", "dsw4", "dsw5", "dsw6", "dsw7", "dsw8", "dsw9", "dsw10",
+        "dsw11", "dsw12", "dsw13",
+    ];
+    let mut blocks = vec![block("conv1", vec![conv(3, 2)])];
+    for (&name, &stride) in names.iter().zip(strides.iter()) {
+        blocks.push(block(name, dsw(stride)));
+    }
+    blocks.push(block("head", vec![Layer::GlobalAvgPool, dense(false)]));
+    blocks
+}
+
+fn squeezenet() -> Vec<BlockDef> {
+    let mut fire4 = fire();
+    fire4.push(pool_valid(3, 2));
+    let mut fire8 = fire();
+    fire8.push(pool_valid(3, 2));
+    vec![
+        block("conv1_pool1", vec![conv(7, 2), pool_valid(3, 2)]),
+        block("fire2", fire()),
+        block("fire3", fire()),
+        block("fire4_pool4", fire4),
+        block("fire5", fire()),
+        block("fire6", fire()),
+        block("fire7", fire()),
+        block("fire8_pool8", fire8),
+        block("fire9", fire()),
+        block("head", vec![conv(1, 1), Layer::GlobalAvgPool]),
+    ]
+}
+
+/// Block definitions for a model, in manifest order; `None` for models
+/// the zoo does not describe.
+pub fn arch_blocks(model: &str) -> Option<Vec<BlockDef>> {
+    match model {
+        "alexnet" => Some(alexnet()),
+        "googlenet" => Some(googlenet()),
+        "resnet" => Some(resnet()),
+        "mobilenet" => Some(mobilenet()),
+        "squeezenet" => Some(squeezenet()),
+        _ => None,
+    }
+}
+
+/// Parameter tensors a layer sequence consumes (each conv/dense = 2).
+pub fn param_tensor_count(layers: &[Layer]) -> usize {
+    layers
+        .iter()
+        .map(|ly| match ly {
+            Layer::Conv { .. } | Layer::DwConv { .. } | Layer::Dense { .. } => 2,
+            Layer::Parallel { paths, .. } => paths.iter().map(|p| param_tensor_count(p)).sum(),
+            Layer::Pool { .. } | Layer::GlobalAvgPool | Layer::Identity => 0,
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MODEL_NAMES;
+
+    #[test]
+    fn every_paper_model_is_described() {
+        for name in MODEL_NAMES {
+            assert!(arch_blocks(name).is_some(), "{name} missing from zoo");
+        }
+        assert!(arch_blocks("vgg").is_none());
+    }
+
+    #[test]
+    fn block_counts_match_model_py() {
+        // transcription check against python/compile/model.py
+        assert_eq!(arch_blocks("googlenet").unwrap().len(), 12);
+        assert_eq!(arch_blocks("alexnet").unwrap().len(), 8);
+        assert_eq!(arch_blocks("resnet").unwrap().len(), 13);
+        assert_eq!(arch_blocks("mobilenet").unwrap().len(), 15);
+        assert_eq!(arch_blocks("squeezenet").unwrap().len(), 10);
+    }
+
+    #[test]
+    fn block_names_match_model_py() {
+        let names: Vec<&str> =
+            arch_blocks("squeezenet").unwrap().iter().map(|b| b.name).collect();
+        assert_eq!(
+            names,
+            [
+                "conv1_pool1", "fire2", "fire3", "fire4_pool4", "fire5", "fire6", "fire7",
+                "fire8_pool8", "fire9", "head"
+            ]
+        );
+        let names: Vec<&str> = arch_blocks("resnet").unwrap().iter().map(|b| b.name).collect();
+        assert_eq!(names[0], "conv1_pool1");
+        assert_eq!(names[12], "head");
+        assert_eq!(names[8], "res4de");
+    }
+
+    #[test]
+    fn param_counts_have_expected_shape() {
+        // squeezenet fire block: squeeze conv + 2 expand convs = 3 pairs
+        let sq = arch_blocks("squeezenet").unwrap();
+        assert_eq!(param_tensor_count(&sq[1].layers), 6);
+        // inception: 6 convs = 12 tensors
+        let gn = arch_blocks("googlenet").unwrap();
+        assert_eq!(param_tensor_count(&gn[2].layers), 12);
+        // residual projection unit: 4 convs; identity unit: 3 convs
+        let rn = arch_blocks("resnet").unwrap();
+        assert_eq!(param_tensor_count(&rn[1].layers), 8);
+        assert_eq!(param_tensor_count(&rn[5].layers), 6);
+        // alexnet fc blocks: one dense pair each
+        let an = arch_blocks("alexnet").unwrap();
+        assert_eq!(param_tensor_count(&an[5].layers), 2);
+    }
+}

@@ -1,78 +1,46 @@
-//! Block executables and the chain executor.
+//! Backend-agnostic block executables and the chain executor.
 //!
-//! Every model block is one PJRT executable with signature
-//! `(activation, *params) -> (activation,)` (lowered with
-//! `return_tuple=True`, so results unwrap with `to_tuple1`). Parameters
-//! are loaded once from `block_NN.params.bin` and converted to literals
-//! held by the executor; the hot path converts only the activation.
+//! [`BlockExecutable`] pairs one manifest block's metadata with whatever
+//! [`BlockRunner`](super::backend::BlockRunner) the active backend
+//! produced for it, and enforces the shape contract on both sides of
+//! every run. [`ChainExecutor`] is all (or a contiguous range of) blocks
+//! of one model — the unit an enclave hosts.
 
 use std::path::Path;
-use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::backend::Backend;
 use super::tensor::Tensor;
 use crate::model::{Manifest, ModelInfo};
 
-/// Shared PJRT client (one per process).
-pub fn cpu_client() -> Result<Arc<xla::PjRtClient>> {
-    Ok(Arc::new(xla::PjRtClient::cpu()?))
-}
-
-/// One compiled block: executable + its parameter literals.
+/// One loaded block: manifest metadata + the backend's runner.
 pub struct BlockExecutable {
     pub idx: usize,
     pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-    params: Vec<xla::Literal>,
     pub in_shape: Vec<usize>,
     pub out_shape: Vec<usize>,
+    runner: Box<dyn super::backend::BlockRunner>,
 }
 
 impl BlockExecutable {
-    /// Load + compile a block from the artifact manifest.
+    /// Load block `idx` of `model` through `backend`.
     pub fn load(
-        client: &xla::PjRtClient,
+        backend: &dyn Backend,
         manifest_dir: &Path,
         model: &ModelInfo,
         idx: usize,
     ) -> Result<Self> {
         let b = &model.blocks[idx];
-        let hlo_path = manifest_dir.join(&b.hlo);
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", b.hlo))?;
-
-        // parameters: one flat f32 file, split per declared shape
-        let raw = std::fs::read(manifest_dir.join(&b.params))
-            .with_context(|| format!("reading {}", b.params))?;
-        let mut params = Vec::with_capacity(b.param_shapes.len());
-        let mut off = 0usize;
-        for shape in &b.param_shapes {
-            let n: usize = shape.iter().product();
-            let bytes = &raw[off * 4..(off + n) * 4];
-            let t = Tensor::from_le_bytes(bytes, shape.clone())?;
-            params.push(t.to_literal()?);
-            off += n;
-        }
-        anyhow::ensure!(
-            off as u64 == b.param_floats,
-            "param file length mismatch for {}",
-            b.name
-        );
-
+        let runner = backend
+            .load_block(manifest_dir, model, idx)
+            .with_context(|| format!("loading block {} on backend '{}'", b.name, backend.name()))?;
         Ok(BlockExecutable {
             idx,
             name: b.name.clone(),
-            exe,
-            params,
             in_shape: b.in_shape.clone(),
             out_shape: b.out_shape.clone(),
+            runner,
         })
     }
 
@@ -85,45 +53,44 @@ impl BlockExecutable {
             activation.shape,
             self.in_shape
         );
-        // execute borrows literals — params stay resident, only the
-        // activation converts per call
-        let act_lit = activation.to_literal()?;
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.params.len());
-        args.push(&act_lit);
-        for p in &self.params {
-            args.push(p);
-        }
-        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Tensor::from_literal(&out, self.out_shape.clone())
+        let out = self.runner.run(activation)?;
+        anyhow::ensure!(
+            out.shape == self.out_shape,
+            "block {}: backend produced shape {:?}, manifest declares {:?}",
+            self.name,
+            out.shape,
+            self.out_shape
+        );
+        Ok(out)
     }
 }
 
-/// A chain executor: all blocks of one model, runnable over any range.
+/// A chain executor: all loaded blocks of one model, runnable in order.
 pub struct ChainExecutor {
     pub model: String,
     pub blocks: Vec<BlockExecutable>,
 }
 
 impl ChainExecutor {
-    pub fn load(client: &xla::PjRtClient, manifest: &Manifest, model: &str) -> Result<Self> {
+    /// Load every block of `model`.
+    pub fn load(backend: &dyn Backend, manifest: &Manifest, model: &str) -> Result<Self> {
         let info = manifest.model(model)?;
         let blocks = (0..info.m())
-            .map(|i| BlockExecutable::load(client, &manifest.dir, info, i))
+            .map(|i| BlockExecutable::load(backend, &manifest.dir, info, i))
             .collect::<Result<Vec<_>>>()?;
         Ok(ChainExecutor { model: model.to_string(), blocks })
     }
 
     /// Load only a block range (what a single enclave hosts).
     pub fn load_range(
-        client: &xla::PjRtClient,
+        backend: &dyn Backend,
         manifest: &Manifest,
         model: &str,
         range: std::ops::Range<usize>,
     ) -> Result<Self> {
         let info = manifest.model(model)?;
         let blocks = range
-            .map(|i| BlockExecutable::load(client, &manifest.dir, info, i))
+            .map(|i| BlockExecutable::load(backend, &manifest.dir, info, i))
             .collect::<Result<Vec<_>>>()?;
         Ok(ChainExecutor { model: model.to_string(), blocks })
     }

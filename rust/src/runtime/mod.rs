@@ -1,15 +1,20 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/<model>/block_*.hlo.txt`)
-//! and executes block chains on the CPU PJRT client — the only place the
-//! compiled XLA computations are touched. Python never runs here.
+//! Execution runtime: host tensors, the pluggable block-execution
+//! backends ([`backend`]), and the backend-agnostic chain executor
+//! ([`executor`]).
 //!
-//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. HLO *text* is the interchange format
-//! (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns them).
+//! The default [`backend::reference`] backend runs blocks with pure-Rust
+//! NHWC kernels (no native dependencies — hermetic tests). The optional
+//! PJRT path (`--features xla`, [`backend::pjrt`]) instead compiles the
+//! AOT HLO artifacts: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `compile` → `execute`; HLO *text* is
+//! the interchange format (jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns them). Python
+//! never runs here either way.
 
+pub mod backend;
 pub mod executor;
 pub mod tensor;
 
+pub use backend::{backend_by_name, default_backend, Backend, BlockRunner};
 pub use executor::{BlockExecutable, ChainExecutor};
 pub use tensor::Tensor;

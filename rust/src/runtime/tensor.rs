@@ -1,6 +1,6 @@
-//! Host tensor type bridging artifact files, AES-GCM payloads, and PJRT
-//! literals. f32 only — the entire model zoo is f32 (the paper's TFLite
-//! deployment likewise).
+//! Host tensor type bridging artifact files, AES-GCM payloads, and (with
+//! the `xla` feature) PJRT literals. f32 only — the entire model zoo is
+//! f32 (the paper's TFLite deployment likewise).
 
 use anyhow::{bail, Context, Result};
 
@@ -65,13 +65,15 @@ impl Tensor {
         out
     }
 
-    /// Convert into an `xla::Literal` with this shape.
+    /// Convert into an `xla::Literal` with this shape (PJRT backend only).
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
     }
 
     /// Read back from an `xla::Literal` (shape taken from caller).
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Self> {
         let data = lit.to_vec::<f32>()?;
         Tensor::new(shape, data)

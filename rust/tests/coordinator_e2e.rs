@@ -8,8 +8,7 @@ use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, Strategy};
 use serdab::placement::{Placement, Stage, TEE1, TEE2};
 use serdab::profiler::calibrated_profile;
-use serdab::runtime::executor::cpu_client;
-use serdab::runtime::ChainExecutor;
+use serdab::runtime::{default_backend, ChainExecutor};
 use serdab::video::{SceneKind, VideoSource};
 
 fn ready() -> bool {
@@ -38,8 +37,8 @@ fn deployed_pipeline_matches_single_chain_numerics() {
     assert_eq!(rep.frames, 4);
 
     // same frames through a local full chain: checksums must agree
-    let client = cpu_client().unwrap();
-    let full = ChainExecutor::load(&client, &man, model).unwrap();
+    let backend = default_backend().unwrap();
+    let full = ChainExecutor::load(backend.as_ref(), &man, model).unwrap();
     let mut want = 0f64;
     for f in &frames {
         want += full.run(f).unwrap().data.iter().map(|&v| v as f64).sum::<f64>();

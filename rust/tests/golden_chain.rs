@@ -1,11 +1,12 @@
-//! Integration: the Rust PJRT runtime must reproduce, block by block, the
+//! Integration: the Rust runtime must reproduce, block by block, the
 //! golden activations the JAX reference produced at build time — proving
-//! the AOT interchange (HLO text + params + tensor encoding) is faithful
-//! end-to-end. This is the cross-language numerical contract.
+//! the AOT interchange (params + tensor encoding + block semantics) is
+//! faithful end-to-end. This is the cross-language numerical contract,
+//! exercised through whatever backend `SERDAB_BACKEND` selects (the
+//! pure-Rust reference backend by default).
 
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
-use serdab::runtime::executor::cpu_client;
-use serdab::runtime::{ChainExecutor, Tensor};
+use serdab::runtime::{default_backend, ChainExecutor, Tensor};
 
 fn artifacts_ready() -> bool {
     default_artifacts_dir().join("manifest.json").exists()
@@ -18,8 +19,8 @@ fn squeezenet_chain_matches_goldens() {
         return;
     }
     let man = load_manifest(default_artifacts_dir()).unwrap();
-    let client = cpu_client().unwrap();
-    let chain = ChainExecutor::load(&client, &man, "squeezenet").unwrap();
+    let backend = default_backend().unwrap();
+    let chain = ChainExecutor::load(backend.as_ref(), &man, "squeezenet").unwrap();
     let info = man.model("squeezenet").unwrap();
 
     let mut act = Tensor::from_bin_file(
@@ -45,10 +46,10 @@ fn every_model_final_output_matches_golden() {
         return;
     }
     let man = load_manifest(default_artifacts_dir()).unwrap();
-    let client = cpu_client().unwrap();
+    let backend = default_backend().unwrap();
     for name in serdab::model::MODEL_NAMES {
         let info = man.model(name).unwrap();
-        let chain = ChainExecutor::load(&client, &man, name).unwrap();
+        let chain = ChainExecutor::load(backend.as_ref(), &man, name).unwrap();
         let input =
             Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone()).unwrap();
         let out = chain.run(&input).unwrap();
@@ -68,15 +69,15 @@ fn range_split_equals_full_chain() {
         return;
     }
     let man = load_manifest(default_artifacts_dir()).unwrap();
-    let client = cpu_client().unwrap();
+    let backend = default_backend().unwrap();
     let name = "alexnet";
     let info = man.model(name).unwrap();
     let m = info.m();
     let cut = m / 2;
 
-    let full = ChainExecutor::load(&client, &man, name).unwrap();
-    let first = ChainExecutor::load_range(&client, &man, name, 0..cut).unwrap();
-    let second = ChainExecutor::load_range(&client, &man, name, cut..m).unwrap();
+    let full = ChainExecutor::load(backend.as_ref(), &man, name).unwrap();
+    let first = ChainExecutor::load_range(backend.as_ref(), &man, name, 0..cut).unwrap();
+    let second = ChainExecutor::load_range(backend.as_ref(), &man, name, cut..m).unwrap();
 
     let input =
         Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone()).unwrap();

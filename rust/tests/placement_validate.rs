@@ -1,0 +1,100 @@
+//! Placement::validate edge cases — the deployment gate every placement
+//! passes through before attestation/key release, so its rejection
+//! surface (empty stage, gap, overlap, duplicate resource, bad coverage)
+//! must be exact.
+
+use serdab::placement::{Placement, Stage, E1_CPU, E2_CPU, E2_GPU, TEE1, TEE2};
+
+fn p(stages: Vec<(serdab::placement::Resource, std::ops::Range<usize>)>) -> Placement {
+    Placement {
+        stages: stages
+            .into_iter()
+            .map(|(resource, range)| Stage { resource, range })
+            .collect(),
+    }
+}
+
+#[test]
+fn accepts_single_and_full_multistage_coverage() {
+    assert!(Placement::single(TEE1, 10).validate(10).is_ok());
+    assert!(p(vec![(TEE1, 0..1), (TEE2, 1..2)]).validate(2).is_ok());
+    let five = p(vec![
+        (TEE1, 0..2),
+        (E1_CPU, 2..4),
+        (TEE2, 4..6),
+        (E2_CPU, 6..8),
+        (E2_GPU, 8..12),
+    ]);
+    assert!(five.validate(12).is_ok());
+}
+
+#[test]
+fn rejects_no_stages_at_all() {
+    let err = Placement { stages: vec![] }.validate(5).unwrap_err();
+    assert!(err.contains("no stages"), "{err}");
+}
+
+#[test]
+fn rejects_empty_stage() {
+    // an empty range on a resource is not a real pipeline position
+    let err = p(vec![(TEE1, 0..0), (TEE2, 0..5)]).validate(5).unwrap_err();
+    assert!(err.contains("empty stage"), "{err}");
+    assert!(err.contains("TEE1"), "{err}");
+    // empty stage in the middle
+    let err = p(vec![(TEE1, 0..3), (E2_GPU, 3..3), (TEE2, 3..5)])
+        .validate(5)
+        .unwrap_err();
+    assert!(err.contains("empty stage"), "{err}");
+}
+
+#[test]
+fn rejects_gap_and_overlap() {
+    let err = p(vec![(TEE1, 0..2), (TEE2, 3..6)]).validate(6).unwrap_err();
+    assert!(err.contains("gap/overlap at block 2"), "{err}");
+    let err = p(vec![(TEE1, 0..4), (TEE2, 3..6)]).validate(6).unwrap_err();
+    assert!(err.contains("gap/overlap"), "{err}");
+    // stages out of order are a gap at block 0's successor
+    let err = p(vec![(TEE2, 3..6), (TEE1, 0..3)]).validate(6).unwrap_err();
+    assert!(err.contains("gap/overlap"), "{err}");
+}
+
+#[test]
+fn rejects_duplicate_resource() {
+    // a resource cannot occupy two pipeline positions
+    let err = p(vec![(TEE1, 0..3), (TEE1, 3..6)]).validate(6).unwrap_err();
+    assert!(err.contains("used twice"), "{err}");
+    let err = p(vec![(TEE1, 0..2), (TEE2, 2..4), (TEE1, 4..6)])
+        .validate(6)
+        .unwrap_err();
+    assert!(err.contains("TEE1 used twice"), "{err}");
+}
+
+#[test]
+fn rejects_wrong_total_coverage() {
+    // undershoot: covers 0..4 of 6
+    let err = p(vec![(TEE1, 0..4)]).validate(6).unwrap_err();
+    assert!(err.contains("covers 0..4"), "{err}");
+    // overshoot: covers 0..8 of 6
+    let err = p(vec![(TEE1, 0..5), (TEE2, 5..8)]).validate(6).unwrap_err();
+    assert!(err.contains("covers 0..8"), "{err}");
+}
+
+#[test]
+fn zero_block_model_is_never_coverable() {
+    assert!(Placement { stages: vec![] }.validate(0).is_err());
+    assert!(p(vec![(TEE1, 0..1)]).validate(0).is_err());
+}
+
+#[test]
+fn validity_is_a_precondition_of_privacy_check() {
+    // satisfies_privacy only inspects untrusted stages; a valid placement
+    // with the cut exactly at the δ crossing passes, one block earlier
+    // fails — the C2 boundary is inclusive on the private side
+    let in_res = [224, 56, 28, 20, 7, 1];
+    let at_crossing = p(vec![(TEE1, 0..3), (E2_GPU, 3..6)]);
+    assert!(at_crossing.validate(6).is_ok());
+    assert!(at_crossing.satisfies_privacy(&in_res, 20)); // GPU first sees 20 ≤ δ
+    let too_early = p(vec![(TEE1, 0..2), (E2_GPU, 2..6)]);
+    assert!(too_early.validate(6).is_ok());
+    assert!(!too_early.satisfies_privacy(&in_res, 20)); // GPU sees 28 > δ
+}

@@ -1,0 +1,271 @@
+//! Minimal in-tree AES-128 block cipher exposing the `aes`/`cipher` API
+//! subset that `serdab::crypto::gcm` uses: `Aes128`, `Block`, and the
+//! `cipher::{BlockEncrypt, KeyInit}` traits. Encrypt-only — GCM is
+//! CTR-based, so decryption of the block cipher is never needed.
+//!
+//! The S-box is derived at first use from the GF(2^8) inverse + affine
+//! transform rather than transcribed, so there is no table to mistype;
+//! the NIST GCM known-answer tests in `serdab::crypto::gcm` pin the whole
+//! construction down.
+
+use std::ops::Deref;
+use std::sync::OnceLock;
+
+/// One 16-byte cipher block (mirrors `cipher::Block<Aes128>`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct Block([u8; 16]);
+
+impl From<[u8; 16]> for Block {
+    fn from(bytes: [u8; 16]) -> Self {
+        Block(bytes)
+    }
+}
+
+impl<'a> From<&'a [u8; 16]> for &'a Block {
+    fn from(bytes: &'a [u8; 16]) -> Self {
+        // sound: Block is repr(transparent) over [u8; 16]
+        unsafe { &*(bytes as *const [u8; 16] as *const Block) }
+    }
+}
+
+impl Deref for Block {
+    type Target = [u8; 16];
+
+    fn deref(&self) -> &[u8; 16] {
+        &self.0
+    }
+}
+
+pub mod cipher {
+    use super::Block;
+
+    /// Block-encryption trait (the `cipher::BlockEncrypt` subset).
+    pub trait BlockEncrypt {
+        fn encrypt_block(&self, block: &mut Block);
+
+        fn encrypt_blocks(&self, blocks: &mut [Block]) {
+            for b in blocks {
+                self.encrypt_block(b);
+            }
+        }
+    }
+
+    /// Keyed construction (the `cipher::KeyInit` subset).
+    pub trait KeyInit: Sized {
+        fn new(key: &Block) -> Self;
+    }
+}
+
+/// GF(2^8) multiply, AES polynomial x^8 + x^4 + x^3 + x + 1 (0x11b).
+fn gmul(mut a: u8, mut b: u8) -> u8 {
+    let mut p = 0u8;
+    for _ in 0..8 {
+        if b & 1 != 0 {
+            p ^= a;
+        }
+        let hi = a & 0x80;
+        a <<= 1;
+        if hi != 0 {
+            a ^= 0x1b;
+        }
+        b >>= 1;
+    }
+    p
+}
+
+/// Multiplicative inverse in GF(2^8) via x^254 (0 maps to 0).
+fn ginv(x: u8) -> u8 {
+    let mut result = 1u8;
+    let mut base = x;
+    let mut exp = 254u8;
+    while exp > 0 {
+        if exp & 1 != 0 {
+            result = gmul(result, base);
+        }
+        base = gmul(base, base);
+        exp >>= 1;
+    }
+    if x == 0 {
+        0
+    } else {
+        result
+    }
+}
+
+fn sbox() -> &'static [u8; 256] {
+    static SBOX: OnceLock<[u8; 256]> = OnceLock::new();
+    SBOX.get_or_init(|| {
+        let mut table = [0u8; 256];
+        for (x, entry) in table.iter_mut().enumerate() {
+            let inv = ginv(x as u8);
+            // affine transform: s = inv ^ rotl1 ^ rotl2 ^ rotl3 ^ rotl4 ^ 0x63
+            let mut s = inv;
+            let mut r = inv;
+            for _ in 0..4 {
+                r = r.rotate_left(1);
+                s ^= r;
+            }
+            *entry = s ^ 0x63;
+        }
+        table
+    })
+}
+
+const RCON: [u8; 10] = [0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1b, 0x36];
+
+/// AES-128 with expanded round keys (11 × 16 bytes), encrypt-only.
+#[derive(Clone)]
+pub struct Aes128 {
+    round_keys: [[u8; 16]; 11],
+}
+
+impl cipher::KeyInit for Aes128 {
+    fn new(key: &Block) -> Self {
+        let sb = sbox();
+        // w[0..44]: 4-byte words; w[0..4] = key
+        let mut w = [[0u8; 4]; 44];
+        for i in 0..4 {
+            w[i].copy_from_slice(&key[4 * i..4 * i + 4]);
+        }
+        for i in 4..44 {
+            let mut temp = w[i - 1];
+            if i % 4 == 0 {
+                temp.rotate_left(1); // RotWord
+                for b in &mut temp {
+                    *b = sb[*b as usize]; // SubWord
+                }
+                temp[0] ^= RCON[i / 4 - 1];
+            }
+            for j in 0..4 {
+                w[i][j] = w[i - 4][j] ^ temp[j];
+            }
+        }
+        let mut round_keys = [[0u8; 16]; 11];
+        for r in 0..11 {
+            for c in 0..4 {
+                round_keys[r][4 * c..4 * c + 4].copy_from_slice(&w[4 * r + c]);
+            }
+        }
+        Aes128 { round_keys }
+    }
+}
+
+fn add_round_key(state: &mut [u8; 16], rk: &[u8; 16]) {
+    for i in 0..16 {
+        state[i] ^= rk[i];
+    }
+}
+
+fn sub_bytes(state: &mut [u8; 16], sb: &[u8; 256]) {
+    for b in state.iter_mut() {
+        *b = sb[*b as usize];
+    }
+}
+
+/// ShiftRows on column-major state (state[r + 4c]): row r rotates left r.
+fn shift_rows(state: &mut [u8; 16]) {
+    let s = *state;
+    for r in 1..4 {
+        for c in 0..4 {
+            state[r + 4 * c] = s[r + 4 * ((c + r) % 4)];
+        }
+    }
+}
+
+fn mix_columns(state: &mut [u8; 16]) {
+    for c in 0..4 {
+        let col = [state[4 * c], state[4 * c + 1], state[4 * c + 2], state[4 * c + 3]];
+        state[4 * c] = gmul(col[0], 2) ^ gmul(col[1], 3) ^ col[2] ^ col[3];
+        state[4 * c + 1] = col[0] ^ gmul(col[1], 2) ^ gmul(col[2], 3) ^ col[3];
+        state[4 * c + 2] = col[0] ^ col[1] ^ gmul(col[2], 2) ^ gmul(col[3], 3);
+        state[4 * c + 3] = gmul(col[0], 3) ^ col[1] ^ col[2] ^ gmul(col[3], 2);
+    }
+}
+
+impl cipher::BlockEncrypt for Aes128 {
+    fn encrypt_block(&self, block: &mut Block) {
+        let sb = sbox();
+        let state = &mut block.0;
+        add_round_key(state, &self.round_keys[0]);
+        for round in 1..10 {
+            sub_bytes(state, sb);
+            shift_rows(state);
+            mix_columns(state);
+            add_round_key(state, &self.round_keys[round]);
+        }
+        sub_bytes(state, sb);
+        shift_rows(state);
+        add_round_key(state, &self.round_keys[10]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cipher::{BlockEncrypt, KeyInit};
+    use super::*;
+
+    #[test]
+    fn sbox_spot_values() {
+        let sb = sbox();
+        assert_eq!(sb[0x00], 0x63);
+        assert_eq!(sb[0x01], 0x7c);
+        assert_eq!(sb[0x53], 0xed);
+        assert_eq!(sb[0xff], 0x16);
+    }
+
+    #[test]
+    fn fips197_appendix_b() {
+        // FIPS-197 worked example: key 2b7e.., plaintext 3243..
+        let key: [u8; 16] = [
+            0x2b, 0x7e, 0x15, 0x16, 0x28, 0xae, 0xd2, 0xa6, 0xab, 0xf7, 0x15, 0x88, 0x09, 0xcf,
+            0x4f, 0x3c,
+        ];
+        let pt: [u8; 16] = [
+            0x32, 0x43, 0xf6, 0xa8, 0x88, 0x5a, 0x30, 0x8d, 0x31, 0x31, 0x98, 0xa2, 0xe0, 0x37,
+            0x07, 0x34,
+        ];
+        let want: [u8; 16] = [
+            0x39, 0x25, 0x84, 0x1d, 0x02, 0xdc, 0x09, 0xfb, 0xdc, 0x11, 0x85, 0x97, 0x19, 0x6a,
+            0x0b, 0x32,
+        ];
+        let aes = Aes128::new((&key).into());
+        let mut blk = Block::from(pt);
+        aes.encrypt_block(&mut blk);
+        assert_eq!(*blk, want);
+    }
+
+    #[test]
+    fn fips197_appendix_c1_style_vector() {
+        // NIST AESAVS: key 000102..0f, pt 00112233..ff
+        let key: [u8; 16] = [
+            0x00, 0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09, 0x0a, 0x0b, 0x0c, 0x0d,
+            0x0e, 0x0f,
+        ];
+        let pt: [u8; 16] = [
+            0x00, 0x11, 0x22, 0x33, 0x44, 0x55, 0x66, 0x77, 0x88, 0x99, 0xaa, 0xbb, 0xcc, 0xdd,
+            0xee, 0xff,
+        ];
+        let want: [u8; 16] = [
+            0x69, 0xc4, 0xe0, 0xd8, 0x6a, 0x7b, 0x04, 0x30, 0xd8, 0xcd, 0xb7, 0x80, 0x70, 0xb4,
+            0xc5, 0x5a,
+        ];
+        let aes = Aes128::new((&key).into());
+        let mut blk = Block::from(pt);
+        aes.encrypt_block(&mut blk);
+        assert_eq!(*blk, want);
+    }
+
+    #[test]
+    fn encrypt_blocks_matches_encrypt_block() {
+        let key = [7u8; 16];
+        let aes = Aes128::new((&key).into());
+        let mut batch: Vec<Block> = (0..5u8).map(|i| Block::from([i; 16])).collect();
+        aes.encrypt_blocks(&mut batch);
+        for (i, blk) in batch.iter().enumerate() {
+            let mut single = Block::from([i as u8; 16]);
+            aes.encrypt_block(&mut single);
+            assert_eq!(*blk, single);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Minimal in-tree stand-in for the `anyhow` crate, API-compatible with
+//! the subset the `serdab` crate uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Kept dependency-free so a clean checkout builds offline.
+//!
+//! Error values carry their context chain as strings: `{}` displays the
+//! outermost message, `{:#}` joins the whole chain with `: ` (matching
+//! anyhow's alternate formatting), and `{:?}` renders the multi-line
+//! "Caused by" report.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error value. The chain is stored outermost-first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The same blanket conversion real anyhow uses. It does not overlap with
+// the std identity `From<T> for T` because `Error` itself never implements
+// `std::error::Error` (and no downstream crate can add that impl).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($args:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($args)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($args:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($args)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/serdab")
+            .map(|_| ())
+            .context("reading config")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "reading config");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert!(full.len() > "reading config: ".len());
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let n = 3;
+        let e = anyhow!("got {n} items from {}", "here");
+        assert_eq!(format!("{e}"), "got 3 items from here");
+        let s = String::from("stringy");
+        let e = anyhow!(s);
+        assert_eq!(format!("{e}"), "stringy");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+        fn g(x: u32) -> Result<()> {
+            ensure!(x != 0);
+            Ok(())
+        }
+        assert!(format!("{}", g(0).unwrap_err()).contains("condition failed"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        assert_eq!(Some(5u32).context("missing").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff, 0xfe])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal in-tree HMAC (RFC 2104) over the vendored `sha2` digest,
+//! exposing the `hmac`/`digest` API subset the `serdab` crate uses:
+//! `Hmac<Sha256>` + the [`Mac`] trait (`new_from_slice / update /
+//! finalize().into_bytes()`). Verified against RFC 4231 vectors in
+//! `serdab::crypto` and below.
+
+use sha2::Digest;
+
+/// Error returned by `new_from_slice` — HMAC accepts any key length, so
+/// this is never actually produced; it exists for API compatibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InvalidLength;
+
+impl std::fmt::Display for InvalidLength {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("invalid key length")
+    }
+}
+
+impl std::error::Error for InvalidLength {}
+
+/// Finalized MAC output wrapper (mirrors `digest::CtOutput`).
+pub struct Output {
+    bytes: [u8; 32],
+}
+
+impl Output {
+    pub fn into_bytes(self) -> [u8; 32] {
+        self.bytes
+    }
+}
+
+/// The `Mac` trait subset: keyed init, streaming update, finalization.
+pub trait Mac: Sized {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength>;
+    fn update(&mut self, data: &[u8]);
+    fn finalize(self) -> Output;
+}
+
+/// HMAC over any vendored digest (only `Sha256` exists in this tree).
+#[derive(Clone)]
+pub struct Hmac<D: Digest> {
+    inner: D,
+    outer: D,
+}
+
+impl<D: Digest> Mac for Hmac<D> {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength> {
+        let mut block_key = vec![0u8; D::BLOCK_SIZE];
+        if key.len() > D::BLOCK_SIZE {
+            let mut h = D::new();
+            h.update(key);
+            let digest = h.finalize();
+            block_key[..D::OUTPUT_SIZE].copy_from_slice(&digest[..D::OUTPUT_SIZE]);
+        } else {
+            block_key[..key.len()].copy_from_slice(key);
+        }
+        let mut inner = D::new();
+        let ipad: Vec<u8> = block_key.iter().map(|b| b ^ 0x36).collect();
+        inner.update(&ipad);
+        let mut outer = D::new();
+        let opad: Vec<u8> = block_key.iter().map(|b| b ^ 0x5c).collect();
+        outer.update(&opad);
+        Ok(Hmac { inner, outer })
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        self.inner.update(data);
+    }
+
+    fn finalize(self) -> Output {
+        let inner_digest = self.inner.finalize();
+        let mut outer = self.outer;
+        outer.update(inner_digest);
+        Output { bytes: outer.finalize() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use sha2::Sha256;
+
+    fn hmac_hex(key: &[u8], data: &[u8]) -> String {
+        let mut m = <Hmac<Sha256> as Mac>::new_from_slice(key).unwrap();
+        m.update(data);
+        m.finalize()
+            .into_bytes()
+            .iter()
+            .map(|x| format!("{x:02x}"))
+            .collect()
+    }
+
+    #[test]
+    fn rfc4231_case_1() {
+        assert_eq!(
+            hmac_hex(&[0x0b; 20], b"Hi There"),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    #[test]
+    fn rfc4231_case_2() {
+        assert_eq!(
+            hmac_hex(b"Jefe", b"what do ya want for nothing?"),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+    }
+
+    #[test]
+    fn rfc4231_case_6_long_key() {
+        // 131-byte key: exercises the hash-the-key path
+        assert_eq!(
+            hmac_hex(
+                &[0xaa; 131],
+                b"Test Using Larger Than Block-Size Key - Hash Key First"
+            ),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! Minimal in-tree `libc` shim: only the `getrandom(2)` binding that
+//! `serdab::crypto::os_random` uses. On Linux this is the real glibc
+//! symbol; elsewhere a `/dev/urandom` fallback with the same signature
+//! keeps the crate portable.
+
+pub use std::os::raw::c_void;
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    /// ssize_t getrandom(void *buf, size_t buflen, unsigned int flags)
+    pub fn getrandom(buf: *mut c_void, buflen: usize, flags: u32) -> isize;
+}
+
+#[cfg(not(target_os = "linux"))]
+/// Portable fallback matching the Linux signature: fill from /dev/urandom.
+///
+/// # Safety
+/// `buf` must be valid for writes of `buflen` bytes.
+pub unsafe fn getrandom(buf: *mut c_void, buflen: usize, _flags: u32) -> isize {
+    use std::io::Read;
+    let slice = std::slice::from_raw_parts_mut(buf as *mut u8, buflen);
+    match std::fs::File::open("/dev/urandom").and_then(|mut f| f.read_exact(slice)) {
+        Ok(()) => buflen as isize,
+        Err(_) => -1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_buffer() {
+        let mut buf = [0u8; 64];
+        let n = unsafe { getrandom(buf.as_mut_ptr() as *mut c_void, buf.len(), 0) };
+        assert_eq!(n, 64);
+        assert_ne!(buf, [0u8; 64]);
+    }
+}

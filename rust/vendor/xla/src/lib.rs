@@ -1,0 +1,161 @@
+//! Compile-only stub of the `xla` PJRT binding surface used by
+//! `serdab::runtime::backend::pjrt` (the off-by-default `xla` cargo
+//! feature). It keeps the PJRT backend compiling — and CI type-checking it
+//! — on machines without the native XLA libraries; every runtime entry
+//! point returns [`Error::Unavailable`].
+//!
+//! To run the AOT HLO artifacts natively, point the `xla` dependency at a
+//! real PJRT binding with the same surface via a `[patch]` section in the
+//! workspace manifest (see DESIGN.md §4 for the exact steps). The surface
+//! is: `PjRtClient::cpu/compile`, `HloModuleProto::from_text_file`,
+//! `XlaComputation::from_proto`, `PjRtLoadedExecutable::execute`,
+//! `PjRtBuffer::to_literal_sync`, and `Literal::{vec1, reshape, to_vec,
+//! to_tuple1}`.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: the native runtime is not linked.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+    Shape(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the native XLA/PJRT libraries, which are not \
+                 linked in this build (see DESIGN.md §4 to substitute real bindings)"
+            ),
+            Error::Shape(msg) => write!(f, "xla stub: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &'static str) -> Result<T, Error> {
+    Err(Error::Unavailable(what))
+}
+
+/// Host literal: dense f32 data + dims. Fully functional in the stub so
+/// tensor bridging code can be exercised without a device runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Element types a literal can be read back as (f32-only tree).
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error::Shape(format!(
+                "reshape to {:?} wants {want} elements, literal has {}",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Unwrap a 1-tuple result literal (identity in the stub).
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        Ok(self)
+    }
+}
+
+/// PJRT client handle (stub: cannot be constructed).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub: cannot be constructed).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Compiled executable (stub: only obtainable through `compile`, which
+/// always fails, so `execute` is unreachable in practice).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_report_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not construct a client");
+        assert!(format!("{err}").contains("native XLA/PJRT"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
