@@ -11,7 +11,7 @@ use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
 use serdab::crypto::channel::Channel;
-use serdab::enclave::{EnclaveSim, NnService};
+use serdab::enclave::NnService;
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::net::framing::{read_frame, write_frame, FrameType};
 use serdab::net::TokenBucket;
@@ -36,19 +36,15 @@ fn worker(
 ) -> std::thread::JoinHandle<anyhow::Result<u64>> {
     std::thread::spawn(move || -> anyhow::Result<u64> {
         let man = load_manifest(default_artifacts_dir())?;
-        let backend = default_backend()?;
-        let chain = ChainExecutor::load_range(backend.as_ref(), &man, MODEL, range.clone())?;
-        let mut param_bytes = Vec::new();
-        for b in &man.model(MODEL)?.blocks[range.clone()] {
-            param_bytes.extend_from_slice(&std::fs::read(man.dir.join(&b.params))?);
-        }
-        let enclave = EnclaveSim::new("serdab-nn-service-v1", &param_bytes, [9u8; 32]);
-        let mut svc = NnService::new(
-            enclave,
-            chain,
-            Channel::new(&ingress_secret, false),
-            egress.as_ref().map(|(_, s)| Channel::new(s, true)),
-        );
+        // the same stage body the coordinator's deployment workers boot
+        let mut svc = NnService::for_stage(
+            &man,
+            MODEL,
+            range,
+            [9u8; 32],
+            &ingress_secret,
+            egress.as_ref().map(|(_, s)| s.as_slice()),
+        )?;
         let mut bucket = throttle_bps.map(|bps| TokenBucket::new(bps, 256.0 * 1024.0 * 8.0));
 
         let (mut conn, _) = listener.accept()?;

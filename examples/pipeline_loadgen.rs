@@ -1,0 +1,94 @@
+//! Multi-stream serving through the pipeline-parallel runtime: three
+//! synthetic cameras fan into one deployed placement via the load
+//! generator (Poisson arrivals), and the run prints the statistics the
+//! coordinator's monitor consumes — per-stage occupancy, queue wait,
+//! blocked (backpressure) time — next to the DES prediction for the same
+//! placement.
+//!
+//! Runs without model artifacts: the stage workers execute the cost
+//! model's service times for real (`Pipeline::synthetic`), which is
+//! exactly the configuration `tests/pipeline_vs_sim.rs` validates.
+//!
+//!     cargo run --release --example pipeline_loadgen
+
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::profiler::ModelProfile;
+use serdab::runtime::{LoadGen, LoadGenConfig, Pipeline, PipelineConfig};
+use serdab::sim::{simulate, SimConfig};
+
+fn main() -> anyhow::Result<()> {
+    // millisecond-scale stand-in profile (same cost shape as the paper's
+    // five CNNs) — the fixture the DES cross-validation test verifies
+    let prof = ModelProfile::millis_demo();
+    let cm = CostModel::new(&prof);
+
+    let streams = 3u32;
+    let per_stream = 40u64;
+    let n = streams as u64 * per_stream;
+
+    let p = plan(Strategy::Proposed, &cm, n);
+    let cost = cm.cost(&p.placement);
+    println!("placement: {}", p.placement.describe());
+    println!(
+        "predicted: period {:.1} ms, single-frame {:.1} ms, chunk({n}) {:.2}s",
+        cost.period_secs * 1e3,
+        cost.single_secs * 1e3,
+        cost.chunk_secs(n)
+    );
+
+    // offered load just under pipeline capacity: 3 cameras, Poisson
+    // arrivals at ~80% of the bottleneck service rate in aggregate
+    let interval = cost.period_secs * streams as f64 / 0.8;
+    let lg = LoadGen::new(&LoadGenConfig {
+        streams,
+        frames_per_stream: per_stream,
+        interval_secs: interval,
+        poisson: true,
+        seed: 2026,
+    });
+    println!(
+        "load: {streams} cameras × {per_stream} frames, Poisson, offered ≈{:.0} fps\n",
+        lg.offered_fps()
+    );
+
+    let mut per_stream_done = vec![0u64; streams as usize];
+    let pipe = Pipeline::synthetic(&p.placement, &cost, PipelineConfig::default());
+    let report = pipe.run(lg.frames(|_, _| vec![0u8; 256]), |out| {
+        per_stream_done[out.stream as usize] += 1;
+    })?;
+
+    println!(
+        "completed {} frames in {:.2}s ({:.1} fps), mean latency {:.1} ms, p99 {:.1} ms",
+        report.frames,
+        report.completion_secs,
+        report.throughput(),
+        report.mean_latency() * 1e3,
+        report.p99_latency() * 1e3
+    );
+    for (s, done) in per_stream_done.iter().enumerate() {
+        println!("  camera {s}: {done} frames");
+    }
+
+    // executed per-worker stats next to the DES for the same placement
+    let des_cfg =
+        SimConfig { frames: n, arrival_secs: interval / streams as f64, queue_cap: 4 };
+    let des = simulate(&cm, &p.placement, &des_cfg);
+    println!("\nper-worker (executed | DES utilization):");
+    let mut di = 0usize;
+    for w in &report.workers {
+        let sim_u = des.utilization.get(di).copied().unwrap_or(0.0);
+        di += 1;
+        println!(
+            "  {:<14} occupancy {:.2} | {:.2}   queue-wait {:>6.1} ms   blocked {:>6.1} ms   idle {:>6.1} ms",
+            w.label,
+            w.occupancy(report.completion_secs),
+            sim_u,
+            w.mean_queue_wait() * 1e3,
+            w.blocked_secs * 1e3,
+            w.idle_secs * 1e3
+        );
+    }
+    println!("\npipeline_loadgen OK");
+    Ok(())
+}

@@ -6,7 +6,7 @@
 //!   throttled WAN → PJRT execution of the AOT-compiled JAX/Pallas blocks
 //!   → latency/throughput report + privacy audit of the boundary tensor.
 //!
-//! Results are recorded in EXPERIMENTS.md §E2E.
+//! Results are printed as a markdown table (see README for the index).
 
 use serdab::coordinator::{Deployment, Monitor, MonitorVerdict, ResourceManager};
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};

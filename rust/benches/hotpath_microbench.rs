@@ -1,4 +1,4 @@
-//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the three components
+//! Hot-path microbenchmarks (§Perf notes in crypto/gcm.rs): the three components
 //! on the per-frame critical path of the live pipeline —
 //!   1. AES-128-GCM seal+open of boundary tensors (crypto),
 //!   2. Tensor ⇄ wire-bytes bridging + block execution (runtime, on the

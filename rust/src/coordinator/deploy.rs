@@ -3,50 +3,90 @@
 //! For each stage the manager (1) verifies the enclave's attestation quote
 //! against the expected measurement (code id + sealed-partition digest)
 //! before releasing the per-hop session secrets, (2) ships the partition
-//! description to the device, whose dataflow engine loads the block
+//! description to the device, whose worker thread loads the block
 //! executables *inside its own runtime* (each stage constructs its own
-//! execution backend — PJRT clients are per-device), and
-//! (3) wires bandwidth-throttled transmission operators on every
-//! cross-host edge. Frames then stream camera → TEE₁ → … → sink.
-
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::time::Instant;
+//! execution backend — PJRT clients are per-device), and (3) wires
+//! bandwidth-throttled transmission operators on every cross-host edge.
+//! Frames then stream camera → TEE₁ → … → sink through the
+//! pipeline-parallel engine ([`runtime::pipeline`](crate::runtime::pipeline)):
+//! one worker thread per stage, bounded queues with backpressure, every
+//! hop through the `net::framing` layer.
+//!
+//! The engine's per-worker statistics (occupancy, queue wait, blocked
+//! time, service open/compute/seal breakdown) come back in the
+//! [`DeploymentReport`], which is what the coordinator's
+//! [`Monitor`](crate::coordinator::Monitor) consumes to detect drift from
+//! the cost model's predictions.
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::resources::ResourceManager;
-use crate::crypto::channel::Channel;
 use crate::crypto::attest::Measurement;
+use crate::crypto::channel::Channel;
 use crate::crypto::sha256;
-use crate::dataflow::{spawn_stage, spawn_stage_builder, Operator, Packet, ServiceOperator,
-                      StageHandle, TransmitOperator};
-use crate::enclave::{attest_and_release, EnclaveSim, NnService};
+use crate::dataflow::{Operator, ServiceOperator, TransmitOperator};
+use crate::enclave::{attest_and_release, EnclaveSim, NnService, CODE_ID};
 use crate::model::Manifest;
 use crate::net::TokenBucket;
 use crate::placement::Placement;
-use crate::runtime::{default_backend, ChainExecutor, Tensor};
+use crate::runtime::pipeline::{
+    stage_occupancy_of, stage_workers, FrameIn, Pipeline, PipelineConfig, StageSpec, WorkerKind,
+    WorkerStats,
+};
+use crate::runtime::Tensor;
 
 /// A deployed pipeline, ready to accept frames.
 pub struct Deployment {
+    /// The placement this deployment realizes.
     pub placement: Placement,
-    source_tx: SyncSender<Packet>,
-    sink_rx: Receiver<Packet>,
-    stages: Vec<StageHandle>,
+    pipeline: Pipeline,
     /// Camera-side sealing channel (to the first stage).
     camera: Channel,
     out_shape: Vec<usize>,
 }
 
-/// Stream results.
+/// Stream results: end-to-end figures plus per-stage runtime statistics.
 #[derive(Debug, Clone)]
 pub struct DeploymentReport {
+    /// Frames that completed the final stage.
     pub frames: u64,
+    /// Wall-clock seconds from stream start to the last frame's exit.
     pub total_secs: f64,
+    /// Mean end-to-end latency (seal at camera → exit), seconds.
     pub mean_latency_secs: f64,
+    /// 99th-percentile end-to-end latency, seconds.
     pub p99_latency_secs: f64,
+    /// Completed frames per second.
     pub throughput_fps: f64,
     /// Sum over final outputs (reproducibility logging).
     pub output_checksum: f64,
+    /// Per-frame end-to-end latencies in sink arrival order, straight
+    /// from the engine (the scalar fields above summarize these).
+    pub latencies: Vec<f64>,
+    /// Per-worker statistics in pipeline order (compute stages and WAN
+    /// links interleaved), straight from the pipeline engine.
+    pub workers: Vec<WorkerStats>,
+}
+
+impl DeploymentReport {
+    /// Mean observed compute seconds per frame for each *compute* stage
+    /// (links excluded) — the observation vector the monitor compares
+    /// against the cost model's predicted `stage_secs`. Uses the
+    /// service-level compute breakdown when available (excludes crypto),
+    /// falling back to the worker's busy time.
+    pub fn stage_mean_compute(&self) -> Vec<f64> {
+        stage_workers(&self.workers)
+            .map(|w| match &w.service {
+                Some(s) => s.mean_compute(),
+                None => w.mean_busy(),
+            })
+            .collect()
+    }
+
+    /// Busy fraction of each compute stage over the run.
+    pub fn stage_occupancy(&self) -> Vec<f64> {
+        stage_occupancy_of(&self.workers, self.total_secs)
+    }
 }
 
 const CAMERA_SECRET: &[u8] = b"serdab-camera-hop";
@@ -61,6 +101,22 @@ impl Deployment {
         placement: &Placement,
         wan_bps: Option<f64>,
         queue_cap: usize,
+    ) -> Result<Self> {
+        let cfg = PipelineConfig { queue_cap, framed: true, tcp_hops: false };
+        Self::deploy_with_config(manifest, rm, model, placement, wan_bps, cfg)
+    }
+
+    /// [`deploy`](Deployment::deploy) with full control over the engine
+    /// configuration — e.g. `tcp_hops: true` to bridge every inter-stage
+    /// hop over a loopback TCP socket pair (socket-accurate deployment
+    /// shape: real reads/writes of the framed sealed records).
+    pub fn deploy_with_config(
+        manifest: &Manifest,
+        rm: &ResourceManager,
+        model: &str,
+        placement: &Placement,
+        wan_bps: Option<f64>,
+        cfg: PipelineConfig,
     ) -> Result<Self> {
         let info = manifest.model(model)?;
         placement.validate(info.m()).map_err(|e| anyhow::anyhow!("invalid placement: {e}"))?;
@@ -79,21 +135,19 @@ impl Deployment {
             for b in &info.blocks[stage.range.clone()] {
                 param_bytes.extend_from_slice(&std::fs::read(manifest.dir.join(&b.params))?);
             }
-            let expected =
-                Measurement::compute("serdab-nn-service-v1", &sha256(&param_bytes));
+            let expected = Measurement::compute(CODE_ID, &sha256(&param_bytes));
             // the "remote" enclave side produces its quote (simulated by
             // constructing the enclave identity the device would boot)
-            let remote = EnclaveSim::new("serdab-nn-service-v1", &param_bytes, dev.hw_key);
+            let remote = EnclaveSim::new(CODE_ID, &param_bytes, dev.hw_key);
             let secret = attest_and_release(expected, dev.hw_key, |ch| remote.quote(ch))
                 .with_context(|| format!("attestation failed for {}", stage.resource.name))?;
             hop_secrets.push(secret);
         }
 
-        // --- data plane: spawn stage threads, each loads its partition --
-        let (source_tx, mut rx) = sync_channel::<Packet>(queue_cap);
-        let mut stages = Vec::new();
+        // --- data plane: one pipeline worker per stage, WAN links on
+        // cross-host edges, bounded queues everywhere ---------------------
+        let mut pipeline = Pipeline::new(cfg);
         for (si, stage) in placement.stages.iter().enumerate() {
-            let (tx, next_rx) = sync_channel::<Packet>(queue_cap);
             let manifest2 = manifest.clone();
             let model2 = model.to_string();
             let range = stage.range.clone();
@@ -105,40 +159,25 @@ impl Deployment {
             };
             let egress_secret =
                 if si + 1 < n_stages { Some(hop_secrets[si].clone()) } else { None };
-            let label = format!("{}[{}..{}]", stage.resource.name, range.start, range.end);
-            stages.push(spawn_stage_builder(
-                label,
+            pipeline.add_stage(StageSpec::new(
+                stage.label(),
+                WorkerKind::Stage,
                 move || -> Result<Box<dyn Operator>> {
                     // device-local runtime: each stage constructs its own
-                    // backend + executables (mirrors the real deployment —
-                    // the enclave loads its own partition; and PJRT
-                    // clients are per-device anyway)
-                    let backend = default_backend()?;
-                    let chain = ChainExecutor::load_range(
-                        backend.as_ref(),
+                    // backend + executables inside its worker thread
+                    // (mirrors the real deployment — the enclave loads its
+                    // own partition; PJRT clients are per-device anyway)
+                    let service = NnService::for_stage(
                         &manifest2,
                         &model2,
                         range.clone(),
+                        hw_key,
+                        &ingress_secret,
+                        egress_secret.as_deref(),
                     )?;
-                    let mut param_bytes = Vec::new();
-                    let info = manifest2.model(&model2)?;
-                    for b in &info.blocks[range.clone()] {
-                        param_bytes
-                            .extend_from_slice(&std::fs::read(manifest2.dir.join(&b.params))?);
-                    }
-                    let enclave = EnclaveSim::new("serdab-nn-service-v1", &param_bytes, hw_key);
-                    let service = NnService::new(
-                        enclave,
-                        chain,
-                        Channel::new(&ingress_secret, false),
-                        egress_secret.as_deref().map(|s| Channel::new(s, true)),
-                    );
                     Ok(Box::new(ServiceOperator { service }))
                 },
-                rx,
-                tx,
             ));
-            rx = next_rx;
 
             // cross-host edge ⇒ throttled transmission operator
             let cross_host = placement
@@ -147,91 +186,63 @@ impl Deployment {
                 .map(|next| next.resource.host != stage.resource.host)
                 .unwrap_or(false);
             if cross_host {
-                let (tx2, next_rx2) = sync_channel::<Packet>(queue_cap);
                 let bucket = TokenBucket::new(wan_bps.unwrap_or(30e6), 256.0 * 1024.0 * 8.0);
-                stages.push(spawn_stage(
+                pipeline.add_stage(StageSpec::from_operator(
+                    WorkerKind::Link,
                     Box::new(TransmitOperator { label: format!("wan-after-{si}"), bucket }),
-                    rx,
-                    tx2,
                 ));
-                rx = next_rx2;
             }
         }
 
         let out_shape = info.blocks.last().unwrap().out_shape.clone();
         Ok(Deployment {
             placement: placement.clone(),
-            source_tx,
-            sink_rx: rx,
-            stages,
+            pipeline,
             camera: Channel::new(CAMERA_SECRET, true),
             out_shape,
         })
     }
 
-    /// Push one frame (seals it camera-side). Blocks under backpressure.
-    pub fn push_frame(&mut self, seq: u64, frame: &Tensor) -> Result<()> {
-        let sealed = self.camera.tx.seal_record(&frame.to_le_bytes());
-        self.source_tx
-            .send(Packet { seq, sealed, born: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("pipeline closed"))
-    }
-
     /// Stream `frames` through the pipeline and collect the report.
     ///
-    /// A feeder thread plays the camera: it seals frames and blocks on the
-    /// bounded source queue (backpressure reaches all the way to capture,
-    /// as in the paper's dataflow). The calling thread drains the sink.
+    /// The engine's source thread plays the camera: the iterator seals
+    /// each frame and blocks on the bounded first queue when the pipeline
+    /// is saturated (backpressure reaches all the way to capture, as in
+    /// the paper's dataflow). The calling thread drains the sink.
     pub fn run_stream<I>(self, frames: I) -> Result<DeploymentReport>
     where
         I: Iterator<Item = Tensor> + Send + 'static,
     {
-        let t0 = Instant::now();
-        let mut latencies = Vec::new();
+        let Deployment { placement: _, pipeline, camera, out_shape } = self;
+        let mut camera = camera;
+        let feed = frames
+            .map(move |f| FrameIn { stream: 0, payload: camera.tx.seal_record(&f.to_le_bytes()) });
+
         let mut checksum = 0f64;
-        let out_shape = self.out_shape.clone();
-
-        let source_tx = self.source_tx;
-        let mut camera = self.camera;
-        let feeder = std::thread::spawn(move || -> u64 {
-            let mut pushed = 0u64;
-            for f in frames {
-                let sealed = camera.tx.seal_record(&f.to_le_bytes());
-                if source_tx
-                    .send(Packet { seq: pushed, sealed, born: Instant::now() })
-                    .is_err()
-                {
-                    break;
+        let mut decode_err: Option<anyhow::Error> = None;
+        let report = pipeline.run(feed, |out| {
+            match Tensor::from_le_bytes(&out.payload, out_shape.clone()) {
+                Ok(t) => checksum += t.data.iter().map(|&v| v as f64).sum::<f64>(),
+                Err(e) => {
+                    if decode_err.is_none() {
+                        decode_err = Some(e);
+                    }
                 }
-                pushed += 1;
             }
-            pushed
-        });
-
-        let mut received = 0u64;
-        while let Ok(pkt) = self.sink_rx.recv() {
-            latencies.push(pkt.born.elapsed().as_secs_f64());
-            let out = Tensor::from_le_bytes(&pkt.sealed, out_shape.clone())?;
-            checksum += out.data.iter().map(|&v| v as f64).sum::<f64>();
-            received += 1;
-        }
-        let total = t0.elapsed().as_secs_f64();
-        let pushed = feeder.join().map_err(|_| anyhow::anyhow!("feeder panicked"))?;
-        anyhow::ensure!(pushed == received, "pushed {pushed} but received {received}");
-        drop(self.sink_rx);
-        for s in self.stages {
-            s.join()?;
+        })?;
+        if let Some(e) = decode_err {
+            return Err(e.context("decoding final-stage output"));
         }
 
-        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = latencies.len().max(1);
         Ok(DeploymentReport {
-            frames: received,
-            total_secs: total,
-            mean_latency_secs: latencies.iter().sum::<f64>() / n as f64,
-            p99_latency_secs: latencies[(n * 99 / 100).min(n - 1)],
-            throughput_fps: received as f64 / total,
+            frames: report.frames,
+            total_secs: report.completion_secs,
+            mean_latency_secs: report.mean_latency(),
+            p99_latency_secs: report.p99_latency(),
+            throughput_fps: report.throughput(),
             output_checksum: checksum,
+            latencies: report.latencies,
+            workers: report.workers,
         })
     }
 }

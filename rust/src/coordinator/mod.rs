@@ -1,10 +1,11 @@
 //! Edge-cloud orchestration (the paper's §III architecture): the Resource
 //! Manager tracks registered devices, the Application Manager consults the
 //! privacy-aware placement, attests every enclave, deploys the partition
-//! services onto per-device dataflow engines, wires the transmission
-//! operators, and runs the stream; the Monitor compares online profiling
-//! against the predicted stage times and triggers re-partitioning on
-//! drift (§V "Algorithm Steps").
+//! services onto the pipeline-parallel runtime
+//! ([`runtime::pipeline`](crate::runtime::pipeline)), wires the
+//! transmission operators, and runs the stream; the Monitor compares the
+//! executed pipeline's per-stage statistics against the predicted stage
+//! times and triggers re-partitioning on drift (§V "Algorithm Steps").
 
 pub mod deploy;
 pub mod monitor;

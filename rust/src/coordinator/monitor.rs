@@ -17,6 +17,7 @@ pub enum MonitorVerdict {
     Repartition { stage: usize, predicted: f64, observed: f64 },
 }
 
+/// Online drift detector over per-stage execution times.
 #[derive(Debug)]
 pub struct Monitor {
     predicted: Vec<f64>,
@@ -30,6 +31,7 @@ pub struct Monitor {
 }
 
 impl Monitor {
+    /// Start monitoring against the solver's predicted per-stage seconds.
     pub fn new(predicted_stage_secs: Vec<f64>) -> Self {
         let n = predicted_stage_secs.len();
         Monitor {
@@ -62,6 +64,16 @@ impl Monitor {
             }
         }
         MonitorVerdict::Healthy
+    }
+
+    /// Feed one finished stream's *executed* pipeline statistics: the
+    /// per-stage mean compute times the deployment report carries
+    /// ([`DeploymentReport::stage_mean_compute`]) count as one
+    /// observation window.
+    ///
+    /// [`DeploymentReport::stage_mean_compute`]: super::deploy::DeploymentReport::stage_mean_compute
+    pub fn observe_run(&mut self, report: &super::deploy::DeploymentReport) -> MonitorVerdict {
+        self.observe(&report.stage_mean_compute())
     }
 
     /// Adopt new predictions after a re-plan.
@@ -106,6 +118,55 @@ mod tests {
         for _ in 0..30 {
             assert_eq!(m.observe(&[1.0]), MonitorVerdict::Healthy);
         }
+    }
+
+    #[test]
+    fn observe_run_consumes_pipeline_stats() {
+        use crate::coordinator::deploy::DeploymentReport;
+        use crate::enclave::ServiceStats;
+        use crate::runtime::pipeline::{WorkerKind, WorkerStats};
+
+        let worker = |kind, busy: f64, compute: f64| WorkerStats {
+            label: "s".into(),
+            kind,
+            frames: 10,
+            busy_secs: busy * 10.0,
+            queue_wait_secs: 0.0,
+            blocked_secs: 0.0,
+            idle_secs: 0.0,
+            service: Some(ServiceStats {
+                frames: 10,
+                compute_secs: compute * 10.0,
+                open_secs: 0.1,
+                seal_secs: 0.1,
+            }),
+        };
+        // predicted 1.0s and 2.0s; links must be ignored by the monitor
+        let report = |c0: f64, c1: f64| DeploymentReport {
+            frames: 10,
+            total_secs: 30.0,
+            mean_latency_secs: 3.0,
+            p99_latency_secs: 3.5,
+            throughput_fps: 0.33,
+            output_checksum: 0.0,
+            latencies: vec![3.0; 10],
+            workers: vec![
+                worker(WorkerKind::Stage, c0 + 0.02, c0),
+                worker(WorkerKind::Link, 0.5, 0.5),
+                worker(WorkerKind::Stage, c1 + 0.02, c1),
+            ],
+        };
+        let mut m = Monitor::new(vec![1.0, 2.0]);
+        assert_eq!(m.observe_run(&report(1.0, 2.0)), MonitorVerdict::Healthy);
+        let mut fired = false;
+        for _ in 0..20 {
+            if let MonitorVerdict::Repartition { stage, .. } = m.observe_run(&report(1.0, 4.5)) {
+                assert_eq!(stage, 1, "drift must be attributed to the slow stage");
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "sustained real-pipeline drift never fired");
     }
 
     #[test]

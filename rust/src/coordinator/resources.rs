@@ -14,17 +14,22 @@ use crate::profiler::DeviceKind;
 /// simulated hardware key its quotes verify under.
 #[derive(Debug, Clone)]
 pub struct RegisteredDevice {
+    /// The placement-level resource this device realizes.
     pub resource: Resource,
+    /// Simulated hardware quoting key the device's attestations verify under.
     pub hw_key: [u8; 32],
+    /// Whether the device is currently accepting deployments.
     pub online: bool,
 }
 
+/// Registry of compute devices, keyed by resource name.
 #[derive(Debug, Default)]
 pub struct ResourceManager {
     devices: BTreeMap<&'static str, RegisteredDevice>,
 }
 
 impl ResourceManager {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -39,6 +44,7 @@ impl ResourceManager {
         rm
     }
 
+    /// Register a device (errors on duplicate names).
     pub fn register(&mut self, resource: Resource, hw_key: [u8; 32]) -> Result<()> {
         if self.devices.contains_key(resource.name) {
             bail!("device {} already registered", resource.name);
@@ -47,6 +53,7 @@ impl ResourceManager {
         Ok(())
     }
 
+    /// Mark a device offline (placements using it can no longer deploy).
     pub fn deregister(&mut self, name: &str) -> Result<()> {
         match self.devices.get_mut(name) {
             Some(d) => {
@@ -57,6 +64,7 @@ impl ResourceManager {
         }
     }
 
+    /// Look up an *online* device by resource name.
     pub fn get(&self, name: &str) -> Option<&RegisteredDevice> {
         self.devices.get(name).filter(|d| d.online)
     }
@@ -69,6 +77,7 @@ impl ResourceManager {
         v
     }
 
+    /// Number of online trusted enclaves.
     pub fn online_tees(&self) -> usize {
         self.online().iter().filter(|r| r.kind == DeviceKind::Tee).count()
     }

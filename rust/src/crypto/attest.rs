@@ -41,8 +41,11 @@ impl Measurement {
 /// A quote: measurement + challenge echo, signed by the hardware key.
 #[derive(Debug, Clone)]
 pub struct Quote {
+    /// The enclave's claimed measurement.
     pub measurement: Measurement,
+    /// Echo of the verifier's challenge (freshness).
     pub challenge: [u8; 32],
+    /// HMAC over measurement‖challenge under the hardware key.
     pub mac: [u8; 32],
 }
 
@@ -52,6 +55,7 @@ pub struct QuotingEnclave {
 }
 
 impl QuotingEnclave {
+    /// Bind a quoting enclave to an existing hardware key.
     pub fn new(hw_key: [u8; 32]) -> Self {
         QuotingEnclave { hw_key }
     }
@@ -63,6 +67,7 @@ impl QuotingEnclave {
         QuotingEnclave { hw_key: k }
     }
 
+    /// Sign a quote over `measurement` and the verifier's `challenge`.
     pub fn quote(&self, measurement: &Measurement, challenge: [u8; 32]) -> Quote {
         let mut msg = Vec::with_capacity(64);
         msg.extend_from_slice(&measurement.0);
@@ -79,12 +84,14 @@ impl QuotingEnclave {
 
 /// Verifier state: a fresh challenge per attestation round.
 pub struct Verifier {
+    /// The nonce this round's quote must echo.
     pub challenge: [u8; 32],
     expected: Measurement,
     hw_key: [u8; 32],
 }
 
 impl Verifier {
+    /// Start a round: draw a fresh challenge for `expected` under `hw_key`.
     pub fn new(expected: Measurement, hw_key: [u8; 32]) -> Self {
         let mut challenge = [0u8; 32];
         os_random(&mut challenge);

@@ -27,6 +27,7 @@ pub struct SealKey {
     seq: u64,
 }
 
+/// The receiving direction: opens records and enforces the sequence.
 pub struct OpenKey {
     gcm: AesGcm,
     expect_seq: u64,
@@ -35,11 +36,14 @@ pub struct OpenKey {
 /// Both endpoints derive the same pair of directional keys from the session
 /// secret; `initiator` decides which direction each side seals on.
 pub struct Channel {
+    /// Sealing (sending) direction.
     pub tx: SealKey,
+    /// Opening (receiving) direction.
     pub rx: OpenKey,
 }
 
 impl Channel {
+    /// Derive both directional keys from an attested session secret.
     pub fn new(session_secret: &[u8], initiator: bool) -> Self {
         let k_i2r = derive_key(session_secret, "serdab/i2r");
         let k_r2i = derive_key(session_secret, "serdab/r2i");

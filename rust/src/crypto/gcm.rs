@@ -120,6 +120,7 @@ pub struct AesGcm {
 }
 
 impl AesGcm {
+    /// Initialize a context from a 128-bit key (derives the GHASH subkey).
     pub fn new(key: &[u8; 16]) -> Self {
         let cipher = Aes128::new(key.into());
         let mut h = [0u8; 16];

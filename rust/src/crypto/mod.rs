@@ -15,6 +15,7 @@ pub mod gcm;
 use hmac::{Hmac, Mac};
 use sha2::{Digest, Sha256};
 
+/// HMAC over SHA-256 — the MAC used by the attestation quotes and KDF.
 pub type HmacSha256 = Hmac<Sha256>;
 
 /// SHA-256 convenience.

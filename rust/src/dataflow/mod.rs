@@ -1,90 +1,40 @@
-//! Per-device dataflow engine (the paper's Apache-NiFi role): a chain of
-//! operator threads connected by bounded channels (backpressure), moving
-//! sealed records from a source, through NN-service operators, across
-//! transmission operators (bandwidth-throttled), into a sink that records
-//! per-frame latency.
+//! Operator vocabulary for the per-device dataflow (the paper's
+//! Apache-NiFi role): NN-service operators that transform sealed records,
+//! transmission operators that charge a bandwidth shaper, and delay
+//! operators for modelled compute.
 //!
-//! The engine is deliberately synchronous-thread based: tokio is not in
-//! the offline vendor set, and one OS thread per pipeline stage matches
-//! the paper's deployment (one service container per device) anyway.
-
-use std::sync::mpsc::{Receiver, SyncSender};
-use std::time::Instant;
+//! The threading engine that runs these operators — one worker thread per
+//! stage, bounded channels (backpressure), framed hops, per-stage
+//! statistics — is [`runtime::pipeline`](crate::runtime::pipeline); this
+//! module only defines what a stage *does* to a payload, deliberately
+//! synchronous (tokio is not in the offline vendor set, and one OS thread
+//! per pipeline stage matches the paper's deployment of one service
+//! container per device anyway).
 
 use anyhow::Result;
 
-/// A frame in flight: sequence number + sealed payload + birth time.
-pub struct Packet {
-    pub seq: u64,
-    pub sealed: Vec<u8>,
-    pub born: Instant,
-}
-
 /// Operator trait: transform a packet payload (NN service, transmission).
 pub trait Operator {
+    /// Display name, used for thread names and error context.
     fn name(&self) -> String;
     /// Process a sealed payload into the next hop's sealed payload.
     fn process(&mut self, sealed: &[u8]) -> Result<Vec<u8>>;
-}
-
-/// Stage handle: joins the thread and collects the operator's final state.
-pub struct StageHandle {
-    pub name: String,
-    handle: std::thread::JoinHandle<Result<u64>>,
-}
-
-impl StageHandle {
-    pub fn join(self) -> Result<u64> {
-        self.handle.join().map_err(|_| anyhow::anyhow!("stage {} panicked", self.name))?
+    /// Service-level statistics (open/compute/seal breakdown) when the
+    /// operator wraps an NN service; `None` for plain operators. The
+    /// pipeline runtime collects this when the worker retires.
+    fn service_stats(&self) -> Option<crate::enclave::ServiceStats> {
+        None
     }
 }
 
-/// Spawn one stage: pull packets from `rx`, run `op`, push to `tx`.
-/// Bounded `SyncSender` gives backpressure exactly like the paper's
-/// queue-bound dataflow.
-pub fn spawn_stage(
-    op: Box<dyn Operator + Send>,
-    rx: Receiver<Packet>,
-    tx: SyncSender<Packet>,
-) -> StageHandle {
-    let name = op.name();
-    spawn_stage_builder(name, move || Ok(op as Box<dyn Operator>), rx, tx)
-}
-
-/// Spawn a stage whose operator is *constructed inside the stage thread*.
-/// Execution backends are per-device (block runners are not required to
-/// be `Send`; PJRT clients in particular are not), so NN-service stages
-/// build their backend + executor here — which also mirrors the real
-/// deployment: the enclave loads its own partition.
-pub fn spawn_stage_builder(
-    name: String,
-    builder: impl FnOnce() -> Result<Box<dyn Operator>> + Send + 'static,
-    rx: Receiver<Packet>,
-    tx: SyncSender<Packet>,
-) -> StageHandle {
-    let thread_name = name.clone();
-    let handle = std::thread::Builder::new()
-        .name(thread_name)
-        .spawn(move || -> Result<u64> {
-            let mut op = builder()?;
-            let mut processed = 0u64;
-            while let Ok(pkt) = rx.recv() {
-                let out = op.process(&pkt.sealed)?;
-                processed += 1;
-                if tx.send(Packet { seq: pkt.seq, sealed: out, born: pkt.born }).is_err() {
-                    break; // downstream closed
-                }
-            }
-            Ok(processed)
-        })
-        .expect("spawn stage thread");
-    StageHandle { name, handle }
-}
-
 /// Identity operator with an optional artificial service time — used for
-/// tests and for modelling a remote device's compute without PJRT.
+/// tests, for modelling a remote device's compute without PJRT, and by
+/// [`Pipeline::synthetic`](crate::runtime::pipeline::Pipeline::synthetic)
+/// to execute a cost model's stage times for real.
 pub struct DelayOperator {
+    /// Display label.
     pub label: String,
+    /// Service time charged per frame.
     pub delay: std::time::Duration,
 }
 
@@ -104,7 +54,9 @@ impl Operator for DelayOperator {
 /// Transmission operator: charges the payload against a token bucket
 /// before forwarding (the paper's inter-device transfer at 30 Mbps).
 pub struct TransmitOperator {
+    /// Display label (e.g. `wan-after-0`).
     pub label: String,
+    /// The bandwidth shaper every forwarded byte is charged against.
     pub bucket: crate::net::TokenBucket,
 }
 
@@ -121,6 +73,7 @@ impl Operator for TransmitOperator {
 
 /// NN service operator: wraps an enclave service as a dataflow stage.
 pub struct ServiceOperator {
+    /// The wrapped enclave inference service.
     pub service: crate::enclave::NnService,
 }
 
@@ -132,92 +85,47 @@ impl Operator for ServiceOperator {
     fn process(&mut self, sealed: &[u8]) -> Result<Vec<u8>> {
         self.service.process_record(sealed)
     }
+
+    fn service_stats(&self) -> Option<crate::enclave::ServiceStats> {
+        Some(self.service.stats.clone())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::sync_channel;
-    use std::time::Duration;
+    use crate::runtime::pipeline::{
+        FrameIn, Pipeline, PipelineConfig, StageSpec, WorkerKind,
+    };
+    use std::time::{Duration, Instant};
 
-    fn run_pipeline(ops: Vec<Box<dyn Operator + Send>>, n: u64, cap: usize) -> (Vec<u64>, f64) {
-        let (src_tx, mut rx) = sync_channel::<Packet>(cap);
-        let mut handles = Vec::new();
-        for op in ops {
-            let (tx, next_rx) = sync_channel::<Packet>(cap);
-            handles.push(spawn_stage(op, rx, tx));
-            rx = next_rx;
-        }
+    #[test]
+    fn delay_operator_sleeps_and_passes_payload_through() {
+        let mut op = DelayOperator { label: "d".into(), delay: Duration::from_millis(5) };
         let t0 = Instant::now();
-        let feeder = std::thread::spawn(move || {
-            for seq in 0..n {
-                src_tx
-                    .send(Packet { seq, sealed: vec![0u8; 64], born: Instant::now() })
-                    .unwrap();
-            }
-        });
-        let mut seen = Vec::new();
-        while let Ok(pkt) = rx.recv() {
-            seen.push(pkt.seq);
-            if seen.len() as u64 == n {
-                break;
-            }
-        }
-        feeder.join().unwrap();
-        let elapsed = t0.elapsed().as_secs_f64();
-        drop(rx);
-        for h in handles {
-            h.join().unwrap();
-        }
-        (seen, elapsed)
+        let out = op.process(&[1, 2, 3]).unwrap();
+        assert_eq!(out, vec![1, 2, 3]);
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert!(op.service_stats().is_none(), "plain operator has no service stats");
     }
 
     #[test]
-    fn frames_arrive_in_order_exactly_once() {
-        let ops: Vec<Box<dyn Operator + Send>> = vec![
-            Box::new(DelayOperator { label: "a".into(), delay: Duration::ZERO }),
-            Box::new(DelayOperator { label: "b".into(), delay: Duration::ZERO }),
-        ];
-        let (seen, _) = run_pipeline(ops, 100, 4);
-        assert_eq!(seen, (0..100).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn pipeline_overlaps_stages() {
-        // two stages of 5 ms each, 20 frames: serial would be 200 ms,
-        // pipelined ≈ 100 ms + 5 ms. Allow generous scheduling slack.
-        let ops: Vec<Box<dyn Operator + Send>> = vec![
-            Box::new(DelayOperator { label: "a".into(), delay: Duration::from_millis(5) }),
-            Box::new(DelayOperator { label: "b".into(), delay: Duration::from_millis(5) }),
-        ];
-        let (seen, elapsed) = run_pipeline(ops, 20, 4);
-        assert_eq!(seen.len(), 20);
-        assert!(elapsed < 0.18, "no pipelining visible: {elapsed}s");
-    }
-
-    #[test]
-    fn transmit_operator_throttles() {
-        let ops: Vec<Box<dyn Operator + Send>> = vec![Box::new(TransmitOperator {
-            label: "wan".into(),
-            bucket: crate::net::TokenBucket::new(8e6, 0.0), // 1 MB/s
-        })];
-        let (src_tx, rx) = std::sync::mpsc::sync_channel::<Packet>(4);
-        let (tx, out_rx) = std::sync::mpsc::sync_channel::<Packet>(4);
-        let h = spawn_stage(ops.into_iter().next().unwrap(), rx, tx);
+    fn transmit_operator_throttles_through_the_engine() {
+        let mut p = Pipeline::new(PipelineConfig::default());
+        p.add_stage(StageSpec::from_operator(
+            WorkerKind::Link,
+            Box::new(TransmitOperator {
+                label: "wan".into(),
+                bucket: crate::net::TokenBucket::new(8e6, 0.0), // 1 MB/s
+            }),
+        ));
+        let feed = (0..5u64).map(|_| FrameIn { stream: 0, payload: vec![0u8; 20_000] });
         let t0 = Instant::now();
-        for seq in 0..5 {
-            src_tx
-                .send(Packet { seq, sealed: vec![0u8; 20_000], born: Instant::now() })
-                .unwrap();
-        }
-        drop(src_tx);
-        let mut got = 0;
-        while out_rx.recv().is_ok() {
-            got += 1;
-        }
-        assert_eq!(got, 5);
+        let rep = p.run(feed, |_| {}).unwrap();
+        assert_eq!(rep.frames, 5);
         // 100 KB at 1 MB/s ⇒ ≥ ~80 ms
         assert!(t0.elapsed().as_secs_f64() > 0.08);
-        h.join().unwrap();
+        assert_eq!(rep.workers[0].kind, WorkerKind::Link);
+        assert_eq!(rep.workers[0].frames, 5);
     }
 }

@@ -13,6 +13,11 @@ pub mod service;
 
 pub use service::{NnService, ServiceStats};
 
+/// Code identity of the NN inference service build — the string every
+/// production enclave boots with and every verifier expects in the
+/// attestation measurement.
+pub const CODE_ID: &str = "serdab-nn-service-v1";
+
 use anyhow::Result;
 
 use crate::crypto::attest::{Measurement, Quote, QuotingEnclave};
@@ -36,6 +41,8 @@ pub struct EnclaveSim {
 }
 
 impl EnclaveSim {
+    /// Boot an enclave: hash the sealed partition parameters into its
+    /// identity and bind it to the device's hardware quoting key.
     pub fn new(code_id: &str, param_bytes: &[u8], hw_key: [u8; 32]) -> Self {
         EnclaveSim {
             code_id: code_id.to_string(),

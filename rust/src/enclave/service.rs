@@ -7,24 +7,32 @@
 
 use anyhow::{Context, Result};
 
-use super::EnclaveSim;
+use super::{EnclaveSim, CODE_ID};
 use crate::crypto::channel::Channel;
-use crate::runtime::{ChainExecutor, Tensor};
+use crate::model::Manifest;
+use crate::runtime::{default_backend, ChainExecutor, Tensor};
 
-/// Running statistics of one service instance.
+/// Running statistics of one service instance — the "online profiling
+/// information" the coordinator's monitor consumes (paper §V).
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
+    /// Frames processed.
     pub frames: u64,
+    /// Total seconds inside the model partition (block execution).
     pub compute_secs: f64,
+    /// Total seconds opening (decrypting) ingress records.
     pub open_secs: f64,
+    /// Total seconds sealing (encrypting) egress records.
     pub seal_secs: f64,
 }
 
 impl ServiceStats {
+    /// Mean compute seconds per frame.
     pub fn mean_compute(&self) -> f64 {
         if self.frames == 0 { 0.0 } else { self.compute_secs / self.frames as f64 }
     }
 
+    /// Mean crypto (open + seal) seconds per frame.
     pub fn mean_crypto(&self) -> f64 {
         if self.frames == 0 {
             0.0
@@ -36,18 +44,24 @@ impl ServiceStats {
 
 /// A deployed partition service: enclave identity + executor + channels.
 pub struct NnService {
+    /// The simulated enclave hosting this partition.
     pub enclave: EnclaveSim,
+    /// The loaded block range this service executes.
     pub chain: ChainExecutor,
     /// Channel from the upstream hop (camera or previous enclave).
     pub ingress: Channel,
     /// Channel to the downstream hop (None for the final stage).
     pub egress: Option<Channel>,
+    /// Input activation shape (first block's input).
     pub in_shape: Vec<usize>,
+    /// Output activation shape (last block's output).
     pub out_shape: Vec<usize>,
+    /// Running per-frame statistics.
     pub stats: ServiceStats,
 }
 
 impl NnService {
+    /// Assemble a service from already-constructed parts.
     pub fn new(
         enclave: EnclaveSim,
         chain: ChainExecutor,
@@ -57,6 +71,43 @@ impl NnService {
         let in_shape = chain.blocks.first().map(|b| b.in_shape.clone()).unwrap_or_default();
         let out_shape = chain.blocks.last().map(|b| b.out_shape.clone()).unwrap_or_default();
         NnService { enclave, chain, ingress, egress, in_shape, out_shape, stats: Default::default() }
+    }
+
+    /// Build the complete service for one placement stage, the way a
+    /// device boots it: construct the device-local execution backend
+    /// (`$SERDAB_BACKEND`), load the block range, seal the partition
+    /// parameters into the enclave identity (their digest is what
+    /// attestation measured), and derive the hop channels from the
+    /// session secrets the coordinator released.
+    ///
+    /// This is the shared stage body behind
+    /// [`Deployment`](crate::coordinator::Deployment) workers and the
+    /// standalone TCP serving example.
+    pub fn for_stage(
+        manifest: &Manifest,
+        model: &str,
+        range: std::ops::Range<usize>,
+        hw_key: [u8; 32],
+        ingress_secret: &[u8],
+        egress_secret: Option<&[u8]>,
+    ) -> Result<Self> {
+        let backend = default_backend()?;
+        let chain = ChainExecutor::load_range(backend.as_ref(), manifest, model, range.clone())?;
+        let info = manifest.model(model)?;
+        let mut param_bytes = Vec::new();
+        for b in &info.blocks[range] {
+            param_bytes.extend_from_slice(
+                &std::fs::read(manifest.dir.join(&b.params))
+                    .with_context(|| format!("reading sealed params for block {}", b.name))?,
+            );
+        }
+        let enclave = EnclaveSim::new(CODE_ID, &param_bytes, hw_key);
+        Ok(NnService::new(
+            enclave,
+            chain,
+            Channel::new(ingress_secret, false),
+            egress_secret.map(|s| Channel::new(s, true)),
+        ))
     }
 
     /// Process one sealed record: open → run partition → seal for the next

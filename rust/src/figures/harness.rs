@@ -6,14 +6,20 @@ use crate::util::fmt_secs;
 /// Repeated-measurement timer: warmup + N timed iterations, reports
 /// median and median-absolute-deviation (robust against scheduler noise).
 pub struct BenchTimer {
+    /// Untimed warmup iterations before measuring.
     pub warmup: usize,
+    /// Timed iterations.
     pub iters: usize,
 }
 
+/// A robust timing summary over the measured iterations.
 #[derive(Debug, Clone, Copy)]
 pub struct Measurement {
+    /// Median of the timed iterations, seconds.
     pub median_secs: f64,
+    /// Median absolute deviation, seconds.
     pub mad_secs: f64,
+    /// Fastest iteration, seconds.
     pub min_secs: f64,
 }
 
@@ -24,10 +30,12 @@ impl Default for BenchTimer {
 }
 
 impl BenchTimer {
+    /// A timer with explicit warmup/iteration counts.
     pub fn new(warmup: usize, iters: usize) -> Self {
         BenchTimer { warmup, iters }
     }
 
+    /// Time `f` (warmup first) and summarize the samples.
     pub fn measure<R>(&self, mut f: impl FnMut() -> R) -> Measurement {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
@@ -64,16 +72,19 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells);
         self
     }
 
+    /// Render as an aligned markdown table.
     pub fn render(&self) -> String {
         let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for r in &self.rows {

@@ -4,7 +4,8 @@
 //! Every bench binary under `rust/benches/` regenerates one figure of the
 //! paper as a markdown table plus a machine-readable JSON dump under
 //! `target/figures/`, and prints the paper's expected shape next to the
-//! measured one so EXPERIMENTS.md can quote both.
+//! measured one so the two can be quoted side by side (the README's
+//! figure→bench table is the index).
 
 pub mod harness;
 

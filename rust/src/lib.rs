@@ -11,9 +11,35 @@
 //! dependencies; the optional PJRT/XLA backend (`--features xla`)
 //! executes the compiled HLO artifacts.
 //!
-//! See DESIGN.md for the architecture, substitution table (SGX → enclave
-//! simulator, etc.), backend feature matrix, and experiment index;
-//! EXPERIMENTS.md records paper-vs-measured results for every figure.
+//! The serving path is pipeline-parallel ([`runtime::pipeline`]): one
+//! worker thread per placement stage, bounded channels with backpressure,
+//! framed inter-stage hand-offs, and per-stage statistics that the
+//! coordinator's monitor compares against the cost model — which the
+//! discrete-event simulator ([`sim`]) predicts and
+//! `tests/pipeline_vs_sim.rs` cross-validates.
+//!
+//! A placement is a chain of stages over the model's blocks; solving and
+//! validating one needs no artifacts:
+//!
+//! ```
+//! use serdab::placement::{Placement, Stage, TEE1, TEE2};
+//!
+//! let p = Placement {
+//!     stages: vec![
+//!         Stage { resource: TEE1, range: 0..3 },
+//!         Stage { resource: TEE2, range: 3..6 },
+//!     ],
+//! };
+//! assert!(p.validate(6).is_ok());
+//! assert_eq!(p.describe(), "TEE1[0..3] → TEE2[3..6]");
+//! ```
+//!
+//! See `README.md` for the quickstart and repo map, `DESIGN.md` for the
+//! architecture, substitution table (SGX → enclave simulator, etc.),
+//! backend feature matrix, and experiment index.
+
+#![warn(missing_docs)]
+
 pub mod coordinator;
 pub mod crypto;
 pub mod dataflow;

@@ -14,10 +14,15 @@ use crate::util::json::Json;
 /// (VMEM footprint and MXU utilization estimate; see DESIGN.md §6).
 #[derive(Debug, Clone, PartialEq)]
 pub struct KernelInfo {
+    /// Matmul M dimension (output rows).
     pub m: usize,
+    /// Matmul K dimension (contraction).
     pub k: usize,
+    /// Matmul N dimension (output cols).
     pub n: usize,
+    /// Estimated VMEM footprint of the tiled kernel.
     pub vmem_bytes: u64,
+    /// Estimated MXU utilization in [0, 1].
     pub mxu_utilization: f64,
 }
 
@@ -25,52 +30,84 @@ pub struct KernelInfo {
 /// plus the full-scale analytical profile.
 #[derive(Debug, Clone)]
 pub struct BlockInfo {
+    /// Block index within the model chain.
     pub idx: usize,
+    /// Block name (e.g. `conv1`, `fire2`).
     pub name: String,
-    /// artifact-relative paths
+    /// Artifact-relative path of the block's HLO text module.
     pub hlo: String,
+    /// Artifact-relative path of the flat f32 parameter file.
     pub params: String,
+    /// Artifact-relative path of the golden output activation.
     pub golden: String,
+    /// SHA-256 of the parameter file (integrity).
     pub params_sha256: String,
+    /// SHA-256 of the golden file (integrity).
     pub golden_sha256: String,
+    /// How to split `params`: weight/bias shapes in depth-first order.
     pub param_shapes: Vec<Vec<usize>>,
+    /// Total f32 count across `param_shapes`.
     pub param_floats: u64,
+    /// Input activation shape of the tiny executable block.
     pub in_shape: Vec<usize>,
+    /// Output activation shape of the tiny executable block.
     pub out_shape: Vec<usize>,
-    /// spatial resolution (grid-cell px) of the block input / output —
-    /// the paper's privacy metric
+    /// Spatial resolution (grid-cell px) of the block input —
+    /// the paper's privacy metric runs on this.
     pub in_res: u32,
+    /// Spatial resolution of the block output.
     pub out_res: u32,
-    /// full-scale analytical profile
+    /// Full-scale FLOPs (analytical profile).
     pub flops_full: u64,
+    /// Full-scale parameter bytes.
     pub param_bytes_full: u64,
+    /// Full-scale boundary (output) tensor bytes — the transmission term.
     pub out_bytes_full: u64,
+    /// Full-scale activation traffic bytes through the block.
     pub act_bytes_full: u64,
+    /// Full-scale peak live activation bytes (working-set model input).
     pub peak_act_bytes_full: u64,
+    /// Primitive op count (dispatch-overhead model input).
     pub n_ops: u32,
+    /// Kernel structure metrics of the dominant matmul, when present.
     pub kernel: Option<KernelInfo>,
 }
 
+/// One model: identity, tiny-instantiation metadata, full-scale totals,
+/// and the partitionable block chain.
 #[derive(Debug, Clone)]
 pub struct ModelInfo {
+    /// Model name (`googlenet`, `alexnet`, …).
     pub name: String,
+    /// Width multiplier of the tiny executable instantiation.
     pub tiny_width: f64,
+    /// Class count of the tiny instantiation.
     pub tiny_classes: u32,
+    /// Artifact-relative path of the golden input frame.
     pub golden_input: String,
+    /// Full-scale FLOPs over the whole model.
     pub total_flops_full: u64,
+    /// Full-scale parameter bytes over the whole model.
     pub model_bytes_full: u64,
+    /// The partitionable units L_x, in execution order.
     pub blocks: Vec<BlockInfo>,
 }
 
+/// The loaded artifact manifest: every model plus global metadata.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the artifact-relative paths resolve against.
     pub dir: PathBuf,
+    /// Input frame shape shared by all models (NHWC).
     pub input_shape: Vec<usize>,
+    /// Seed the artifacts were generated with (reproducibility).
     pub seed: u64,
+    /// Models by name.
     pub models: BTreeMap<String, ModelInfo>,
 }
 
 impl Manifest {
+    /// Look up a model by name (errors list the available ones).
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models
             .get(name)

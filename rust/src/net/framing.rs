@@ -32,6 +32,9 @@ impl FrameType {
 /// full-scale ~3.2 MB; the cap is a sanity bound against corrupt peers).
 pub const MAX_FRAME: usize = 64 << 20;
 
+/// Write one `[len][type][payload]` frame and flush. Rejects payloads over
+/// [`MAX_FRAME`]; a sink that stops accepting bytes surfaces as an error
+/// (short writes are never silent).
 pub fn write_frame(w: &mut impl Write, ty: FrameType, payload: &[u8]) -> Result<()> {
     anyhow::ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
     w.write_all(&(payload.len() as u32).to_be_bytes())?;
@@ -41,6 +44,9 @@ pub fn write_frame(w: &mut impl Write, ty: FrameType, payload: &[u8]) -> Result<
     Ok(())
 }
 
+/// Read one frame. Handles partial reads (loops via `read_exact`), rejects
+/// unknown types and length prefixes over [`MAX_FRAME`] *before*
+/// allocating, and errors on truncated payloads.
 pub fn read_frame(r: &mut impl Read) -> Result<(FrameType, Vec<u8>)> {
     let mut head = [0u8; 5];
     r.read_exact(&mut head).context("reading frame header")?;
@@ -54,17 +60,21 @@ pub fn read_frame(r: &mut impl Read) -> Result<(FrameType, Vec<u8>)> {
     Ok((ty, payload))
 }
 
-/// Convenience wrappers that own a stream half.
+/// Convenience wrapper owning the write half of a stream.
 pub struct FrameWriter<W: Write>(pub W);
+
+/// Convenience wrapper owning the read half of a stream.
 pub struct FrameReader<R: Read>(pub R);
 
 impl<W: Write> FrameWriter<W> {
+    /// Write one frame ([`write_frame`]).
     pub fn send(&mut self, ty: FrameType, payload: &[u8]) -> Result<()> {
         write_frame(&mut self.0, ty, payload)
     }
 }
 
 impl<R: Read> FrameReader<R> {
+    /// Read one frame ([`read_frame`]).
     pub fn recv(&mut self) -> Result<(FrameType, Vec<u8>)> {
         read_frame(&mut self.0)
     }
@@ -115,5 +125,86 @@ mod tests {
         write_frame(&mut buf, FrameType::Data, &[1, 2, 3, 4]).unwrap();
         buf.truncate(buf.len() - 2);
         assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    /// Reader that returns at most one byte per `read` call — the worst
+    /// legal TCP fragmentation.
+    struct OneByteReader<R>(R);
+
+    impl<R: Read> Read for OneByteReader<R> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(1);
+            self.0.read(&mut buf[..n])
+        }
+    }
+
+    #[test]
+    fn partial_reads_reassemble_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameType::Data, b"fragmented-payload").unwrap();
+        write_frame(&mut buf, FrameType::Eos, &[]).unwrap();
+        let mut r = OneByteReader(Cursor::new(buf));
+        let (t1, p1) = read_frame(&mut r).unwrap();
+        assert_eq!((t1, p1.as_slice()), (FrameType::Data, b"fragmented-payload".as_slice()));
+        let (t2, p2) = read_frame(&mut r).unwrap();
+        assert_eq!(t2, FrameType::Eos);
+        assert!(p2.is_empty());
+    }
+
+    /// Writer that accepts `budget` bytes then refuses (returns `Ok(0)`,
+    /// which `write_all` must turn into a `WriteZero` error) — a peer
+    /// whose socket buffer closed mid-frame.
+    struct ShortWriter {
+        budget: usize,
+        written: Vec<u8>,
+    }
+
+    impl Write for ShortWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.budget == 0 {
+                return Ok(0);
+            }
+            let n = buf.len().min(self.budget);
+            self.budget -= n;
+            self.written.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn short_write_surfaces_as_error() {
+        // budget covers the header but not the payload
+        let mut w = ShortWriter { budget: 7, written: Vec::new() };
+        assert!(write_frame(&mut w, FrameType::Data, &[0u8; 100]).is_err());
+        // a full budget succeeds and the bytes round-trip
+        let mut w2 = ShortWriter { budget: 105, written: Vec::new() };
+        write_frame(&mut w2, FrameType::Data, &[7u8; 100]).unwrap();
+        let (ty, p) = read_frame(&mut Cursor::new(w2.written)).unwrap();
+        assert_eq!(ty, FrameType::Data);
+        assert_eq!(p, vec![7u8; 100]);
+    }
+
+    #[test]
+    fn oversized_frame_rejected_on_write() {
+        let mut buf = Vec::new();
+        let huge = vec![0u8; MAX_FRAME + 1];
+        assert!(write_frame(&mut buf, FrameType::Data, &huge).is_err());
+        assert!(buf.is_empty(), "nothing may hit the wire for a rejected frame");
+        // exactly MAX_FRAME is the accepted boundary
+        let max = vec![0u8; MAX_FRAME];
+        assert!(write_frame(&mut buf, FrameType::Data, &max).is_ok());
+    }
+
+    #[test]
+    fn writer_reader_wrappers_roundtrip() {
+        let mut w = FrameWriter(Vec::<u8>::new());
+        w.send(FrameType::Control, b"{\"op\":\"ping\"}").unwrap();
+        w.send(FrameType::Data, &[9, 9, 9]).unwrap();
+        let mut r = FrameReader(Cursor::new(w.0));
+        assert_eq!(r.recv().unwrap().1, b"{\"op\":\"ping\"}");
+        assert_eq!(r.recv().unwrap().1, vec![9, 9, 9]);
     }
 }

@@ -14,6 +14,8 @@ pub struct TokenBucket {
 }
 
 impl TokenBucket {
+    /// A bucket refilling at `rate_bps` bits/second, holding at most
+    /// `burst_bits` (starts full).
     pub fn new(rate_bps: f64, burst_bits: f64) -> Self {
         TokenBucket { rate_bps, burst_bits, tokens: burst_bits, last: Instant::now() }
     }

@@ -46,11 +46,14 @@ impl PathCost {
 
 /// Cost model = profile (per-device block times + paging) + network.
 pub struct CostModel<'a> {
+    /// Per-device block timings and paging inputs.
     pub profile: &'a ModelProfile,
+    /// WAN bandwidth / RTT / crypto-rate parameters.
     pub net: NetworkParams,
 }
 
 impl<'a> CostModel<'a> {
+    /// A cost model over `profile` with the paper's default network.
     pub fn new(profile: &'a ModelProfile) -> Self {
         CostModel { profile, net: NetworkParams::default() }
     }

@@ -21,6 +21,7 @@ use crate::profiler::DeviceKind;
 /// A concrete compute resource in the resource graph G_R (paper Fig. 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Resource {
+    /// Device class (TEE / GPU / untrusted CPU).
     pub kind: DeviceKind,
     /// Which edge device hosts it (0 = E1, 1 = E2, ...). Transfers between
     /// different hosts pay the WAN cost; intra-host handoffs do not.
@@ -29,28 +30,45 @@ pub struct Resource {
     pub name: &'static str,
 }
 
-/// The paper's evaluation resource graph: two edge devices, one enclave
-/// each, plus a GPU on E2 (and the untrusted CPUs).
+/// Enclave on edge device E1 — the paper's evaluation resource graph: two
+/// edge devices, one enclave each, plus a GPU on E2 and the untrusted CPUs.
 pub const TEE1: Resource = Resource { kind: DeviceKind::Tee, host: 0, name: "TEE1" };
+/// Enclave on edge device E2.
 pub const TEE2: Resource = Resource { kind: DeviceKind::Tee, host: 1, name: "TEE2" };
+/// Untrusted host CPU of E1.
 pub const E1_CPU: Resource = Resource { kind: DeviceKind::UntrustedCpu, host: 0, name: "E1" };
+/// Untrusted host CPU of E2.
 pub const E2_CPU: Resource = Resource { kind: DeviceKind::UntrustedCpu, host: 1, name: "E2" };
+/// Untrusted GPU on E2.
 pub const E2_GPU: Resource = Resource { kind: DeviceKind::Gpu, host: 1, name: "GPU2" };
 
 /// One pipeline stage: a contiguous block range on one resource.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Stage {
+    /// The resource this stage is pinned to.
     pub resource: Resource,
+    /// The contiguous block range the stage executes.
     pub range: std::ops::Range<usize>,
+}
+
+impl Stage {
+    /// Canonical display label, e.g. `TEE1[0..4]` — the one convention
+    /// shared by [`Placement::describe`], deployment worker names, and
+    /// pipeline statistics.
+    pub fn label(&self) -> String {
+        format!("{}[{}..{}]", self.resource.name, self.range.start, self.range.end)
+    }
 }
 
 /// A placement path P_j (paper notation): ordered stages covering 0..M.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Placement {
+    /// The stages in pipeline order.
     pub stages: Vec<Stage>,
 }
 
 impl Placement {
+    /// The whole model on one resource (the 1-TEE baseline shape).
     pub fn single(resource: Resource, m: usize) -> Placement {
         Placement { stages: vec![Stage { resource, range: 0..m }] }
     }
@@ -97,11 +115,7 @@ impl Placement {
 
     /// Human-readable form, e.g. `TEE1[0..4] → TEE2[4..8] → GPU2[8..12]`.
     pub fn describe(&self) -> String {
-        self.stages
-            .iter()
-            .map(|s| format!("{}[{}..{}]", s.resource.name, s.range.start, s.range.end))
-            .collect::<Vec<_>>()
-            .join(" → ")
+        self.stages.iter().map(Stage::label).collect::<Vec<_>>().join(" → ")
     }
 }
 

@@ -26,6 +26,7 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// All five strategies, in the paper's figure order.
     pub const ALL: [Strategy; 5] = [
         Strategy::OneTee,
         Strategy::NoPipelining,
@@ -34,6 +35,7 @@ impl Strategy {
         Strategy::Proposed,
     ];
 
+    /// The figure legend name.
     pub fn name(self) -> &'static str {
         match self {
             Strategy::OneTee => "1 TEE",
@@ -63,8 +65,11 @@ impl Strategy {
 /// A solved plan: the chosen path and its cost.
 #[derive(Debug, Clone)]
 pub struct Plan {
+    /// The strategy that produced this plan.
     pub strategy: Strategy,
+    /// The argmin placement path.
     pub placement: Placement,
+    /// The winning path's cost breakdown.
     pub cost: PathCost,
     /// Number of candidate paths examined (tree size).
     pub examined: usize,

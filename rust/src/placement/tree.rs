@@ -18,8 +18,11 @@ use super::{Placement, Resource, Stage};
 /// Statistics of one enumeration (for the algorithm-analysis bench).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TreeStats {
+    /// Number of candidate paths the tree contains.
     pub paths: usize,
+    /// Number of partitionable blocks M.
     pub m: usize,
+    /// Number of resources in the ordered chain.
     pub resources: usize,
 }
 

@@ -7,20 +7,26 @@
 /// Grayscale f32 image (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Image {
+    /// Width in pixels.
     pub w: usize,
+    /// Height in pixels.
     pub h: usize,
+    /// Row-major pixel values.
     pub px: Vec<f32>,
 }
 
 impl Image {
+    /// A black (all-zero) image of the given size.
     pub fn new(w: usize, h: usize) -> Self {
         Image { w, h, px: vec![0.0; w * h] }
     }
 
+    /// Pixel at (x, y).
     pub fn at(&self, x: usize, y: usize) -> f32 {
         self.px[y * self.w + x]
     }
 
+    /// Set pixel at (x, y).
     pub fn set(&mut self, x: usize, y: usize, v: f32) {
         self.px[y * self.w + x] = v;
     }
@@ -72,10 +78,12 @@ impl Image {
         out
     }
 
+    /// Mean pixel value.
     pub fn mean(&self) -> f64 {
         self.px.iter().map(|&v| v as f64).sum::<f64>() / self.px.len() as f64
     }
 
+    /// Pixel variance.
     pub fn var(&self) -> f64 {
         let m = self.mean();
         self.px.iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / self.px.len() as f64

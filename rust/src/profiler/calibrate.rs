@@ -25,6 +25,7 @@ use crate::model::{ModelInfo, DELTA_RESOLUTION};
 /// Published targets per model (see module docs for provenance).
 #[derive(Debug, Clone, Copy)]
 pub struct CalibrationTarget {
+    /// Model name the target applies to.
     pub model: &'static str,
     /// Whole-model per-frame latency in one enclave (seconds).
     pub one_tee_secs: f64,
@@ -51,6 +52,7 @@ pub const PAPER_TARGETS: [CalibrationTarget; 5] = [
     CalibrationTarget { model: "squeezenet", one_tee_secs: 1.1, time_frac_at_delta: 0.80 },
 ];
 
+/// Look up the published calibration target for a model, if any.
 pub fn target_for(model: &str) -> Option<CalibrationTarget> {
     PAPER_TARGETS.iter().copied().find(|t| t.model == model)
 }

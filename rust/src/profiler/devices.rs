@@ -11,6 +11,7 @@
 
 use crate::model::BlockInfo;
 
+/// Device classes of the paper's resource graph.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DeviceKind {
     /// Untrusted host CPU (i7-9700k class).
@@ -22,10 +23,12 @@ pub enum DeviceKind {
 }
 
 impl DeviceKind {
+    /// Whether the device is inside the trust boundary.
     pub fn trusted(self) -> bool {
         matches!(self, DeviceKind::Tee)
     }
 
+    /// Lowercase display name.
     pub fn name(self) -> &'static str {
         match self {
             DeviceKind::UntrustedCpu => "cpu",
@@ -96,7 +99,9 @@ pub struct DeviceParams {
     pub tee_op_secs: f64,
     /// Per-op overhead on CPU / GPU (kernel launches).
     pub cpu_op_secs: f64,
+    /// Per-op kernel-launch overhead on the GPU.
     pub gpu_op_secs: f64,
+    /// The EPC capacity/paging model shared by the TEE estimates.
     pub epc: EpcModel,
 }
 
@@ -140,6 +145,7 @@ impl DeviceParams {
 /// the paper's testbed).
 #[derive(Debug, Clone)]
 pub struct NetworkParams {
+    /// Link bandwidth in bits/second.
     pub bandwidth_bps: f64,
     /// One-way latency.
     pub rtt_secs: f64,

@@ -21,8 +21,10 @@
 //!   what their own system does with its online profiler — and is what the
 //!   figure benches use by default.
 //!
-//! The third source is [`measured`]: wall-clock timing of the tiny
-//! executable blocks through the PJRT runtime, used by the live pipeline.
+//! The third source is *measured*: wall-clock per-block timing of the tiny
+//! executable blocks through the active backend
+//! ([`ChainExecutor::measure_blocks`](crate::runtime::ChainExecutor::measure_blocks)),
+//! which the live pipeline's monitor compares against predictions.
 
 pub mod calibrate;
 pub mod devices;
@@ -35,6 +37,7 @@ use crate::model::ModelInfo;
 /// Per-block cost table on one device class (seconds per frame).
 #[derive(Debug, Clone)]
 pub struct DeviceProfile {
+    /// Which device class this table is for.
     pub kind: DeviceKind,
     /// Base per-block time, *excluding* enclave paging (which depends on
     /// the partition's resident set, not the block alone).
@@ -45,10 +48,15 @@ pub struct DeviceProfile {
 /// the cost model needs (boundary sizes, paging inputs).
 #[derive(Debug, Clone)]
 pub struct ModelProfile {
+    /// Model name.
     pub model: String,
+    /// Number of partitionable blocks M.
     pub m: usize,
+    /// Per-block times on the untrusted CPU.
     pub cpu: DeviceProfile,
+    /// Per-block times on the GPU.
     pub gpu: DeviceProfile,
+    /// Per-block times inside the enclave (paging excluded).
     pub tee: DeviceProfile,
     /// per-block full-scale parameter bytes (paging model input)
     pub param_bytes: Vec<u64>,
@@ -58,10 +66,12 @@ pub struct ModelProfile {
     pub cut_bytes: Vec<u64>,
     /// input resolution per block (privacy constraint input)
     pub in_res: Vec<u32>,
+    /// EPC capacity/paging parameters for the TEE stage costs.
     pub epc: EpcModel,
 }
 
 impl ModelProfile {
+    /// The per-block table for a device class.
     pub fn device(&self, kind: DeviceKind) -> &DeviceProfile {
         match kind {
             DeviceKind::UntrustedCpu => &self.cpu,
@@ -93,10 +103,37 @@ impl ModelProfile {
     pub fn one_tee_secs(&self) -> f64 {
         self.stage_secs(DeviceKind::Tee, 0..self.m)
     }
+
+    /// A synthetic millisecond-scale 6-block profile with the paper's cost
+    /// *shape* (TEE ≫ CPU ≫ GPU per block: 9/5/2 ms; boundary tensors of
+    /// 2–8 ms at 30 Mbps; resolution crossing δ=20 at block 3 so the tail
+    /// may offload). Service times are big enough that `thread::sleep`
+    /// noise stays well inside the DES-agreement band, and small enough
+    /// that executed runs finish in ~1 s.
+    ///
+    /// This is the ONE fixture shared by the DES cross-validation test
+    /// (`tests/pipeline_vs_sim.rs`), the `pipeline_throughput` bench, and
+    /// the `pipeline_loadgen` example — so what the demos show is exactly
+    /// the configuration the 15% agreement test verifies.
+    pub fn millis_demo() -> ModelProfile {
+        ModelProfile {
+            model: "ms-demo".into(),
+            m: 6,
+            cpu: DeviceProfile { kind: DeviceKind::UntrustedCpu, block_secs: vec![5e-3; 6] },
+            gpu: DeviceProfile { kind: DeviceKind::Gpu, block_secs: vec![2e-3; 6] },
+            tee: DeviceProfile { kind: DeviceKind::Tee, block_secs: vec![9e-3; 6] },
+            param_bytes: vec![0; 6],
+            peak_act_bytes: vec![0; 6],
+            cut_bytes: vec![30_000, 22_500, 15_000, 7_500, 3_750, 0],
+            in_res: vec![224, 56, 28, 14, 7, 1],
+            epc: EpcModel::default(),
+        }
+    }
 }
 
 /// Analytical profiler: builds a [`ModelProfile`] from manifest metadata.
 pub struct AnalyticalProfiler {
+    /// The device rate parameters the physical model evaluates under.
     pub params: DeviceParams,
 }
 
@@ -107,6 +144,7 @@ impl Default for AnalyticalProfiler {
 }
 
 impl AnalyticalProfiler {
+    /// Evaluate the physical cost model over `model`'s manifest metadata.
     pub fn profile(&self, model: &ModelInfo) -> ModelProfile {
         let p = &self.params;
         let mk = |kind: DeviceKind| DeviceProfile {

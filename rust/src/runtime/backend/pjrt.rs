@@ -33,6 +33,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Construct a CPU PJRT client.
     pub fn new() -> Result<Self> {
         Ok(PjrtBackend { client: Arc::new(xla::PjRtClient::cpu()?) })
     }

@@ -13,9 +13,21 @@
 /// Spatial padding of a windowed op, mirroring the python `padding` field.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Pad {
+    /// XLA `SAME`: output spatial size = ceil(input / stride).
     Same,
+    /// XLA `VALID`: no padding.
     Valid,
-    Explicit { top: usize, bottom: usize, left: usize, right: usize },
+    /// Explicit per-edge padding.
+    Explicit {
+        /// Rows added above.
+        top: usize,
+        /// Rows added below.
+        bottom: usize,
+        /// Columns added left.
+        left: usize,
+        /// Columns added right.
+        right: usize,
+    },
 }
 
 /// How a [`Layer::Parallel`] merges its path outputs.
@@ -29,20 +41,30 @@ pub enum Combine {
 
 /// One primitive in a block's forward walk.
 #[derive(Debug, Clone)]
+#[allow(missing_docs)] // struct-variant fields mirror model.py's layer args
 pub enum Layer {
+    /// 2-D convolution consuming a (weight, bias) pair.
     Conv { kernel: usize, stride: usize, pad: Pad, relu: bool },
+    /// Depthwise 2-D convolution consuming a (weight, bias) pair.
     DwConv { kernel: usize, stride: usize, pad: Pad, relu: bool },
+    /// Max/avg pooling window.
     Pool { kernel: usize, stride: usize, max: bool, pad: Pad },
+    /// Global average pool over the spatial dims.
     GlobalAvgPool,
+    /// Fully connected layer (flattens a 4-D input first).
     Dense { relu: bool },
+    /// Pass-through (residual shortcut path).
     Identity,
+    /// Parallel paths over the same input, merged by `combine`.
     Parallel { paths: Vec<Vec<Layer>>, combine: Combine, post_relu: bool },
 }
 
 /// One partitionable unit L_x: name (must match the manifest) + layers.
 #[derive(Debug, Clone)]
 pub struct BlockDef {
+    /// Block name, identical to the manifest's.
     pub name: &'static str,
+    /// The forward walk, in depth-first parameter-consumption order.
     pub layers: Vec<Layer>,
 }
 

@@ -16,9 +16,13 @@ use crate::model::{Manifest, ModelInfo};
 
 /// One loaded block: manifest metadata + the backend's runner.
 pub struct BlockExecutable {
+    /// Block index within its model.
     pub idx: usize,
+    /// Block name (for error context).
     pub name: String,
+    /// Declared input activation shape.
     pub in_shape: Vec<usize>,
+    /// Declared output activation shape.
     pub out_shape: Vec<usize>,
     runner: Box<dyn super::backend::BlockRunner>,
 }
@@ -67,7 +71,9 @@ impl BlockExecutable {
 
 /// A chain executor: all loaded blocks of one model, runnable in order.
 pub struct ChainExecutor {
+    /// The model the blocks belong to.
     pub model: String,
+    /// The loaded blocks, in execution order.
     pub blocks: Vec<BlockExecutable>,
 }
 

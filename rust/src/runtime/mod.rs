@@ -1,6 +1,7 @@
 //! Execution runtime: host tensors, the pluggable block-execution
-//! backends ([`backend`]), and the backend-agnostic chain executor
-//! ([`executor`]).
+//! backends ([`backend`]), the backend-agnostic chain executor
+//! ([`executor`]), and the pipeline-parallel serving engine
+//! ([`pipeline`]) with its load generator ([`loadgen`]).
 //!
 //! The default [`backend::reference`] backend runs blocks with pure-Rust
 //! NHWC kernels (no native dependencies — hermetic tests). The optional
@@ -13,8 +14,15 @@
 
 pub mod backend;
 pub mod executor;
+pub mod loadgen;
+pub mod pipeline;
 pub mod tensor;
 
 pub use backend::{backend_by_name, default_backend, Backend, BlockRunner};
 pub use executor::{BlockExecutable, ChainExecutor};
+pub use loadgen::{LoadGen, LoadGenConfig};
+pub use pipeline::{
+    FrameIn, Pipeline, PipelineConfig, PipelineOutput, PipelineRunReport, StageSpec, WorkerKind,
+    WorkerStats,
+};
 pub use tensor::Tensor;

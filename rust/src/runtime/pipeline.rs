@@ -1,0 +1,816 @@
+//! Pipeline-parallel serving runtime: the *executed* counterpart of the
+//! discrete-event simulator (`sim::pipeline`).
+//!
+//! A [`Pipeline`] is an ordered list of [`StageSpec`]s. [`Pipeline::run`]
+//! spawns one OS worker thread per stage, connects consecutive workers
+//! with bounded SPSC channels, and streams frames through:
+//!
+//! ```text
+//!   feeder ──▸ [stage 0] ──▸ [link 0] ──▸ [stage 1] ──▸ … ──▸ sink
+//!             └ bounded queue between every pair (capacity = queue_cap) ┘
+//! ```
+//!
+//! Backpressure works exactly as the DES models it: a worker whose
+//! downstream queue is full blocks in `send` while *holding its completed
+//! frame* — it cannot pull new work, so the stall propagates upstream hop
+//! by hop until it reaches the source (the paper's "the enclave will
+//! become the bottleneck and the entire application will be slowed down
+//! by the queuing time"). Every hop carries the payload through the
+//! `net::framing` layer (a length-prefixed DATA frame), and hops can
+//! optionally be bridged over loopback TCP sockets
+//! ([`PipelineConfig::tcp_hops`]) for a wire-accurate deployment shape.
+//!
+//! Each worker records occupancy (busy fraction), per-frame queue wait,
+//! send-side blocked time, and idle time ([`WorkerStats`]); NN-service
+//! stages additionally surface their [`ServiceStats`] breakdown
+//! (open/compute/seal). These are the observations the coordinator's
+//! [`Monitor`](crate::coordinator::Monitor) compares against the cost
+//! model's predictions, and the quantities `tests/pipeline_vs_sim.rs`
+//! cross-validates against the simulator.
+//!
+//! A pipeline whose operators are real NN services is built by
+//! [`Deployment`](crate::coordinator::Deployment); a pipeline whose
+//! operators merely *cost* what the placement's cost model says
+//! ([`Pipeline::synthetic`]) runs without any model artifacts and is the
+//! vehicle for validating the DES as a planning oracle.
+//!
+//! ```
+//! use serdab::dataflow::DelayOperator;
+//! use serdab::runtime::pipeline::{FrameIn, Pipeline, PipelineConfig, StageSpec, WorkerKind};
+//! use std::time::Duration;
+//!
+//! let mut p = Pipeline::new(PipelineConfig::default());
+//! p.add_stage(StageSpec::from_operator(
+//!     WorkerKind::Stage,
+//!     Box::new(DelayOperator { label: "noop".into(), delay: Duration::ZERO }),
+//! ));
+//! let feed = (0..4u64).map(|_| FrameIn { stream: 0, payload: vec![0u8; 8] });
+//! let report = p.run(feed, |_out| {}).unwrap();
+//! assert_eq!(report.frames, 4);
+//! ```
+
+use std::io::Cursor;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::dataflow::Operator;
+use crate::enclave::ServiceStats;
+use crate::net::framing::{read_frame, write_frame, FrameType};
+use crate::placement::cost::PathCost;
+use crate::placement::Placement;
+
+/// What a pipeline worker stands for, mirroring the DES server kinds:
+/// compute stages alternate with boundary links (crypto + WAN transfer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerKind {
+    /// A compute stage (an enclave / device running a block range).
+    Stage,
+    /// A boundary server (seal/open + WAN transfer between stages).
+    Link,
+}
+
+/// One stage of a pipeline: a label, its kind, and a deferred operator
+/// constructor. The constructor runs *inside the worker thread* — backends
+/// are per-device and block runners are not required to be `Send`, which
+/// also mirrors the real deployment (each enclave loads its own
+/// partition).
+pub struct StageSpec {
+    label: String,
+    kind: WorkerKind,
+    builder: Box<dyn FnOnce() -> Result<Box<dyn Operator>> + Send>,
+}
+
+impl StageSpec {
+    /// Build a spec from a deferred operator constructor.
+    pub fn new(
+        label: impl Into<String>,
+        kind: WorkerKind,
+        builder: impl FnOnce() -> Result<Box<dyn Operator>> + Send + 'static,
+    ) -> Self {
+        StageSpec { label: label.into(), kind, builder: Box::new(builder) }
+    }
+
+    /// Build a spec from an already-constructed (Send) operator.
+    pub fn from_operator(kind: WorkerKind, op: Box<dyn Operator + Send>) -> Self {
+        let label = op.name();
+        StageSpec::new(label, kind, move || Ok(op as Box<dyn Operator>))
+    }
+
+    /// The stage's display label.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Whether this spec is a compute stage or a boundary link.
+    pub fn kind(&self) -> WorkerKind {
+        self.kind
+    }
+}
+
+/// Engine knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Bounded queue capacity between consecutive workers (frames). A full
+    /// queue blocks the producer — the backpressure the DES models.
+    pub queue_cap: usize,
+    /// Wrap every inter-stage payload in a `net::framing` DATA frame (the
+    /// same bytes that would travel a socket), so the framing layer is on
+    /// the hot path even in-process.
+    pub framed: bool,
+    /// Bridge every hop over a loopback TCP socket pair instead of handing
+    /// the buffer across directly. Wire-accurate (real `read`/`write`,
+    /// real framing), at the cost of the kernel socket buffer adding slack
+    /// beyond `queue_cap` to the effective queue bound.
+    pub tcp_hops: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { queue_cap: 4, framed: true, tcp_hops: false }
+    }
+}
+
+/// One frame entering the pipeline: a source stream id (for multi-camera
+/// fan-in) and the sealed payload bytes.
+pub struct FrameIn {
+    /// Source stream (camera) identifier.
+    pub stream: u32,
+    /// Sealed record bytes (or any opaque payload the stages understand).
+    pub payload: Vec<u8>,
+}
+
+/// One frame leaving the pipeline, delivered to the sink callback.
+pub struct PipelineOutput {
+    /// Global arrival sequence number (order is preserved end-to-end).
+    pub seq: u64,
+    /// Source stream the frame came from.
+    pub stream: u32,
+    /// Final-stage output payload.
+    pub payload: Vec<u8>,
+    /// End-to-end latency: source enqueue → sink arrival, seconds.
+    pub latency_secs: f64,
+}
+
+/// Per-worker counters gathered over one run — the executed analogue of
+/// the DES per-server utilization/queue statistics, plus the service-level
+/// breakdown when the operator is an NN service.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    /// Stage label (e.g. `TEE1[0..4]` or `wan-after-0`).
+    pub label: String,
+    /// Compute stage or boundary link.
+    pub kind: WorkerKind,
+    /// Frames processed.
+    pub frames: u64,
+    /// Seconds spent inside the operator (service time).
+    pub busy_secs: f64,
+    /// Seconds frames spent waiting in this worker's input queue (summed
+    /// over frames; includes the producer's blocked hand-off time, since a
+    /// finished frame waiting for queue space is already waiting on this
+    /// stage).
+    pub queue_wait_secs: f64,
+    /// Seconds this worker spent blocked pushing downstream (backpressure).
+    pub blocked_secs: f64,
+    /// Seconds spent idle waiting for input.
+    pub idle_secs: f64,
+    /// Open/compute/seal breakdown when the operator wraps an
+    /// [`NnService`](crate::enclave::NnService).
+    pub service: Option<ServiceStats>,
+}
+
+impl WorkerStats {
+    /// Busy fraction over a run horizon — comparable to the DES
+    /// `utilization` entries.
+    pub fn occupancy(&self, horizon_secs: f64) -> f64 {
+        if horizon_secs > 0.0 {
+            self.busy_secs / horizon_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean service time per frame (seconds).
+    pub fn mean_busy(&self) -> f64 {
+        if self.frames == 0 {
+            0.0
+        } else {
+            self.busy_secs / self.frames as f64
+        }
+    }
+
+    /// Mean time a frame waited in this worker's queue (seconds).
+    pub fn mean_queue_wait(&self) -> f64 {
+        if self.frames == 0 {
+            0.0
+        } else {
+            self.queue_wait_secs / self.frames as f64
+        }
+    }
+}
+
+/// Results of one executed stream — comparable with the simulator's
+/// [`PipelineReport`](crate::sim::PipelineReport) on `completion_secs`
+/// and per-server occupancy.
+///
+/// Latencies are NOT directly comparable for chunk workloads: the DES
+/// stamps every frame into an unbounded source buffer at its arrival
+/// time (camera-buffer backlog counts as latency), whereas here `born`
+/// is stamped when the feeder pushes the frame past the bounded source
+/// queue — source-side queueing is invisible. With a paced feed slower
+/// than the bottleneck (no source backlog) the two agree.
+#[derive(Debug, Clone)]
+pub struct PipelineRunReport {
+    /// Frames that completed the final stage.
+    pub frames: u64,
+    /// Wall-clock seconds from stream start to the last frame's exit.
+    pub completion_secs: f64,
+    /// Per-frame latencies (source-queue exit → sink), sink arrival order.
+    pub latencies: Vec<f64>,
+    /// Per-worker statistics, in pipeline order (stages and links
+    /// interleaved exactly like the DES server list).
+    pub workers: Vec<WorkerStats>,
+}
+
+impl PipelineRunReport {
+    /// Completed frames per second.
+    pub fn throughput(&self) -> f64 {
+        if self.completion_secs > 0.0 {
+            self.frames as f64 / self.completion_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean end-to-end latency (seconds).
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            0.0
+        } else {
+            self.latencies.iter().sum::<f64>() / self.latencies.len() as f64
+        }
+    }
+
+    /// 99th-percentile end-to-end latency (seconds).
+    pub fn p99_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((v.len() as f64 * 0.99) as usize).min(v.len() - 1)]
+    }
+
+    /// Stats of compute stages only (links filtered out), pipeline order.
+    pub fn stage_stats(&self) -> Vec<&WorkerStats> {
+        stage_workers(&self.workers).collect()
+    }
+
+    /// Busy fraction of each compute stage — the executed counterpart of
+    /// [`stage_utilization`](crate::sim::PipelineReport::stage_utilization).
+    pub fn stage_occupancy(&self) -> Vec<f64> {
+        stage_occupancy_of(&self.workers, self.completion_secs)
+    }
+
+    /// Mean observed service time per compute stage — what the monitor
+    /// compares against the cost model's predicted `stage_secs`.
+    pub fn stage_mean_busy(&self) -> Vec<f64> {
+        stage_workers(&self.workers).map(|w| w.mean_busy()).collect()
+    }
+}
+
+/// Compute-stage workers (links filtered out) of a worker list, in
+/// pipeline order — the one filter shared by every per-stage aggregation
+/// (this report, the deployment report).
+pub fn stage_workers(workers: &[WorkerStats]) -> impl Iterator<Item = &WorkerStats> {
+    workers.iter().filter(|w| w.kind == WorkerKind::Stage)
+}
+
+/// Busy fraction of each compute stage in `workers` over `horizon_secs`.
+pub fn stage_occupancy_of(workers: &[WorkerStats], horizon_secs: f64) -> Vec<f64> {
+    stage_workers(workers).map(|w| w.occupancy(horizon_secs)).collect()
+}
+
+/// A frame in flight between workers.
+struct WirePacket {
+    seq: u64,
+    stream: u32,
+    bytes: Vec<u8>,
+    born: Instant,
+    enqueued: Instant,
+}
+
+/// Wrap a payload in a length-prefixed DATA frame (the wire bytes).
+fn frame_data(payload: &[u8]) -> Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(payload.len() + 5);
+    write_frame(&mut buf, FrameType::Data, payload)?;
+    Ok(buf)
+}
+
+/// Unwrap a length-prefixed DATA frame back into its payload.
+fn unframe_data(bytes: &[u8]) -> Result<Vec<u8>> {
+    let (ty, payload) = read_frame(&mut Cursor::new(bytes))?;
+    anyhow::ensure!(ty == FrameType::Data, "expected DATA frame between stages, got {ty:?}");
+    Ok(payload)
+}
+
+/// An executable pipeline: ordered stage specs + engine configuration.
+pub struct Pipeline {
+    cfg: PipelineConfig,
+    specs: Vec<StageSpec>,
+}
+
+impl Pipeline {
+    /// An empty pipeline with the given configuration.
+    pub fn new(cfg: PipelineConfig) -> Self {
+        Pipeline { cfg, specs: Vec::new() }
+    }
+
+    /// Append a stage (workers run in insertion order).
+    pub fn add_stage(&mut self, spec: StageSpec) -> &mut Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// Number of stages added so far (compute stages + links).
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Whether no stages have been added yet.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Build a *synthetic* pipeline whose workers sleep exactly what the
+    /// cost model charges the placement: one [`WorkerKind::Stage`] worker
+    /// per placement stage (service = `stage_secs[i]`) and one
+    /// [`WorkerKind::Link`] worker per boundary (service = crypto +
+    /// transfer) — the same linearized server chain the DES simulates.
+    /// Runs without model artifacts; used to cross-validate the simulator
+    /// (`tests/pipeline_vs_sim.rs`).
+    pub fn synthetic(placement: &Placement, cost: &PathCost, cfg: PipelineConfig) -> Pipeline {
+        let mut p = Pipeline::new(cfg);
+        for (i, stage) in placement.stages.iter().enumerate() {
+            let delay = Duration::from_secs_f64(cost.stage_secs[i]);
+            p.add_stage(StageSpec::from_operator(
+                WorkerKind::Stage,
+                Box::new(crate::dataflow::DelayOperator { label: stage.label(), delay }),
+            ));
+            if i < cost.boundary_secs.len() {
+                let (crypto, transfer) = cost.boundary_secs[i];
+                p.add_stage(StageSpec::from_operator(
+                    WorkerKind::Link,
+                    Box::new(crate::dataflow::DelayOperator {
+                        label: format!("link-{i}"),
+                        delay: Duration::from_secs_f64(crypto + transfer),
+                    }),
+                ));
+            }
+        }
+        p
+    }
+
+    /// Execute the pipeline: spawn the workers, stream `feed` through, and
+    /// hand every completed frame to `sink` on the calling thread.
+    ///
+    /// The feed iterator is driven from a dedicated source thread and may
+    /// pace itself by sleeping in `next()` (what
+    /// [`LoadGen`](crate::runtime::loadgen::LoadGen) does); a full first
+    /// queue blocks the source, so backpressure reaches the camera. The
+    /// call returns when every fed frame has exited (or any worker
+    /// failed, in which case the first error is returned).
+    pub fn run<I, S>(self, feed: I, mut sink: S) -> Result<PipelineRunReport>
+    where
+        I: Iterator<Item = FrameIn> + Send + 'static,
+        S: FnMut(PipelineOutput),
+    {
+        anyhow::ensure!(!self.specs.is_empty(), "pipeline has no stages");
+        let cfg = self.cfg;
+        let cap = cfg.queue_cap.max(1);
+        let epoch = Instant::now();
+
+        let (source_tx, mut rx) = sync_channel::<WirePacket>(cap);
+        let n = self.specs.len();
+        let mut workers: Vec<(String, JoinHandle<Result<WorkerStats>>)> = Vec::new();
+        let mut bridges: Vec<JoinHandle<Result<()>>> = Vec::new();
+        for (i, spec) in self.specs.into_iter().enumerate() {
+            let (tx, next_rx) = sync_channel::<WirePacket>(cap);
+            let label = spec.label.clone();
+            workers.push((label, spawn_worker(spec, rx, tx, cfg.framed)));
+            rx = next_rx;
+            if cfg.tcp_hops && i + 1 < n {
+                let (btx, brx) = sync_channel::<WirePacket>(cap);
+                let (h_tx, h_rx) = spawn_tcp_hop(i, rx, btx, epoch)?;
+                bridges.push(h_tx);
+                bridges.push(h_rx);
+                rx = brx;
+            }
+        }
+
+        let framed = cfg.framed;
+        let t0 = Instant::now();
+        let feeder = std::thread::Builder::new()
+            .name("pipeline-source".into())
+            .spawn(move || -> Result<u64> {
+                let mut seq = 0u64;
+                for f in feed {
+                    let bytes = if framed { frame_data(&f.payload)? } else { f.payload };
+                    let now = Instant::now();
+                    let pkt =
+                        WirePacket { seq, stream: f.stream, bytes, born: now, enqueued: now };
+                    if source_tx.send(pkt).is_err() {
+                        break; // pipeline tore down (a worker failed)
+                    }
+                    seq += 1;
+                }
+                Ok(seq)
+            })
+            .expect("spawn pipeline source thread");
+
+        let mut latencies = Vec::new();
+        let mut received = 0u64;
+        let mut completion = 0.0f64;
+        let mut sink_err: Option<anyhow::Error> = None;
+        while let Ok(pkt) = rx.recv() {
+            completion = t0.elapsed().as_secs_f64();
+            let latency = pkt.born.elapsed().as_secs_f64();
+            match if framed { unframe_data(&pkt.bytes) } else { Ok(pkt.bytes) } {
+                Ok(payload) => {
+                    latencies.push(latency);
+                    received += 1;
+                    sink(PipelineOutput {
+                        seq: pkt.seq,
+                        stream: pkt.stream,
+                        payload,
+                        latency_secs: latency,
+                    });
+                }
+                Err(e) => {
+                    if sink_err.is_none() {
+                        sink_err = Some(e.context("unframing pipeline output"));
+                    }
+                }
+            }
+        }
+        drop(rx);
+
+        let pushed = feeder
+            .join()
+            .map_err(|_| anyhow!("pipeline source thread panicked"))??;
+
+        let mut stats = Vec::new();
+        let mut first_err: Option<anyhow::Error> = sink_err;
+        for (label, h) in workers {
+            match h.join() {
+                Ok(Ok(ws)) => stats.push(ws),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!("pipeline stage '{label}' failed")));
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("pipeline stage '{label}' panicked"));
+                    }
+                }
+            }
+        }
+        for h in bridges {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.context("loopback TCP hop failed"));
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("loopback TCP hop panicked"));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        anyhow::ensure!(
+            pushed == received,
+            "fed {pushed} frames but only {received} completed"
+        );
+        Ok(PipelineRunReport {
+            frames: received,
+            completion_secs: completion,
+            latencies,
+            workers: stats,
+        })
+    }
+}
+
+/// Spawn one instrumented worker thread.
+fn spawn_worker(
+    spec: StageSpec,
+    rx: Receiver<WirePacket>,
+    tx: SyncSender<WirePacket>,
+    framed: bool,
+) -> JoinHandle<Result<WorkerStats>> {
+    let StageSpec { label, kind, builder } = spec;
+    let thread_name = label.clone();
+    std::thread::Builder::new()
+        .name(thread_name)
+        .spawn(move || -> Result<WorkerStats> {
+            let mut op = builder()
+                .with_context(|| format!("constructing operator for stage '{label}'"))?;
+            let mut st = WorkerStats {
+                label: label.clone(),
+                kind,
+                frames: 0,
+                busy_secs: 0.0,
+                queue_wait_secs: 0.0,
+                blocked_secs: 0.0,
+                idle_secs: 0.0,
+                service: None,
+            };
+            loop {
+                let t_idle = Instant::now();
+                let pkt = match rx.recv() {
+                    Ok(p) => p,
+                    Err(_) => break, // upstream closed: stream finished
+                };
+                let now = Instant::now();
+                st.idle_secs += now.duration_since(t_idle).as_secs_f64();
+                st.queue_wait_secs +=
+                    now.saturating_duration_since(pkt.enqueued).as_secs_f64();
+
+                let payload =
+                    if framed { unframe_data(&pkt.bytes)? } else { pkt.bytes };
+                let t_busy = Instant::now();
+                let out = op
+                    .process(&payload)
+                    .with_context(|| format!("frame {} in stage '{label}'", pkt.seq))?;
+                st.busy_secs += t_busy.elapsed().as_secs_f64();
+                st.frames += 1;
+
+                let bytes = if framed { frame_data(&out)? } else { out };
+                let t_send = Instant::now();
+                let res = tx.send(WirePacket {
+                    seq: pkt.seq,
+                    stream: pkt.stream,
+                    bytes,
+                    born: pkt.born,
+                    enqueued: Instant::now(),
+                });
+                st.blocked_secs += t_send.elapsed().as_secs_f64();
+                if res.is_err() {
+                    break; // downstream closed
+                }
+            }
+            st.service = op.service_stats();
+            Ok(st)
+        })
+        .expect("spawn pipeline worker thread")
+}
+
+/// Bridge one hop over a loopback TCP socket pair: a sender thread drains
+/// the upstream channel into framed socket writes, a receiver thread reads
+/// frames back into the downstream bounded channel. Packet metadata (seq,
+/// stream, birth time as µs since the run epoch) rides in a fixed header
+/// inside the DATA payload. Socket teardown is treated as end-of-stream —
+/// integrity problems surface as a frame-count mismatch at the end of the
+/// run.
+fn spawn_tcp_hop(
+    idx: usize,
+    rx: Receiver<WirePacket>,
+    tx: SyncSender<WirePacket>,
+    epoch: Instant,
+) -> Result<(JoinHandle<Result<()>>, JoinHandle<Result<()>>)> {
+    const HDR: usize = 8 + 4 + 8;
+    // Establish the socket pair synchronously so bind/connect/accept
+    // failures surface as an error from `run` instead of leaving one
+    // bridge thread parked forever on an `accept` that never comes.
+    let listener =
+        TcpListener::bind("127.0.0.1:0").context("binding loopback hop listener")?;
+    let addr = listener.local_addr()?;
+    let conn_out = TcpStream::connect(addr).context("connecting loopback hop")?;
+    let (conn_in, _) = listener.accept().context("accepting loopback hop")?;
+    drop(listener);
+
+    let h_tx = std::thread::Builder::new()
+        .name(format!("tcp-hop-{idx}-tx"))
+        .spawn(move || -> Result<()> {
+            let mut conn = conn_out;
+            let _ = conn.set_nodelay(true);
+            while let Ok(pkt) = rx.recv() {
+                // an over-cap frame is a deterministic caller bug, not a
+                // teardown symptom — surface it instead of swallowing it
+                anyhow::ensure!(
+                    HDR + pkt.bytes.len() <= crate::net::framing::MAX_FRAME,
+                    "frame {} ({} bytes + {HDR}B hop header) exceeds the \
+                     framing cap on the loopback hop",
+                    pkt.seq,
+                    pkt.bytes.len()
+                );
+                let mut buf = Vec::with_capacity(HDR + pkt.bytes.len());
+                buf.extend_from_slice(&pkt.seq.to_be_bytes());
+                buf.extend_from_slice(&pkt.stream.to_be_bytes());
+                let born_us =
+                    pkt.born.saturating_duration_since(epoch).as_micros() as u64;
+                buf.extend_from_slice(&born_us.to_be_bytes());
+                buf.extend_from_slice(&pkt.bytes);
+                if write_frame(&mut conn, FrameType::Data, &buf).is_err() {
+                    break; // peer gone: pipeline is unwinding
+                }
+            }
+            let _ = write_frame(&mut conn, FrameType::Eos, &[]);
+            Ok(())
+        })
+        .expect("spawn tcp hop sender");
+
+    let h_rx = std::thread::Builder::new()
+        .name(format!("tcp-hop-{idx}-rx"))
+        .spawn(move || -> Result<()> {
+            let mut conn = conn_in;
+            loop {
+                let (ty, buf) = match read_frame(&mut conn) {
+                    Ok(f) => f,
+                    Err(_) => break, // connection closed: stream over
+                };
+                match ty {
+                    FrameType::Eos => break,
+                    FrameType::Data => {
+                        if buf.len() < HDR {
+                            break;
+                        }
+                        let seq = u64::from_be_bytes(buf[0..8].try_into().unwrap());
+                        let stream =
+                            u32::from_be_bytes(buf[8..12].try_into().unwrap());
+                        let born_us =
+                            u64::from_be_bytes(buf[12..20].try_into().unwrap());
+                        let pkt = WirePacket {
+                            seq,
+                            stream,
+                            bytes: buf[HDR..].to_vec(),
+                            born: epoch + Duration::from_micros(born_us),
+                            enqueued: Instant::now(),
+                        };
+                        if tx.send(pkt).is_err() {
+                            break; // downstream closed
+                        }
+                    }
+                    FrameType::Control => {}
+                }
+            }
+            Ok(())
+        })
+        .expect("spawn tcp hop receiver");
+
+    Ok((h_tx, h_rx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::DelayOperator;
+
+    fn delay_stage(label: &str, kind: WorkerKind, ms: u64) -> StageSpec {
+        StageSpec::from_operator(
+            kind,
+            Box::new(DelayOperator {
+                label: label.to_string(),
+                delay: Duration::from_millis(ms),
+            }),
+        )
+    }
+
+    fn feed(n: u64) -> impl Iterator<Item = FrameIn> + Send {
+        (0..n).map(|i| FrameIn { stream: 0, payload: vec![i as u8; 32] })
+    }
+
+    #[test]
+    fn frames_exit_in_order_exactly_once() {
+        let mut p = Pipeline::new(PipelineConfig::default());
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 0));
+        p.add_stage(delay_stage("l", WorkerKind::Link, 0));
+        p.add_stage(delay_stage("b", WorkerKind::Stage, 0));
+        let mut seqs = Vec::new();
+        let rep = p.run(feed(50), |out| seqs.push(out.seq)).unwrap();
+        assert_eq!(rep.frames, 50);
+        assert_eq!(seqs, (0..50).collect::<Vec<_>>());
+        assert_eq!(rep.workers.len(), 3);
+        assert!(rep.workers.iter().all(|w| w.frames == 50));
+    }
+
+    #[test]
+    fn stages_overlap_in_wall_clock() {
+        // two 5 ms stages, 30 frames: serial = 300 ms, pipelined ≈ 155 ms.
+        // The bound sits between the two with headroom on both sides so
+        // scheduler noise on loaded CI runners cannot flip it.
+        let mut p = Pipeline::new(PipelineConfig::default());
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 5));
+        p.add_stage(delay_stage("b", WorkerKind::Stage, 5));
+        let rep = p.run(feed(30), |_| {}).unwrap();
+        assert_eq!(rep.frames, 30);
+        assert!(rep.completion_secs < 0.25, "no overlap: {}", rep.completion_secs);
+        // both stages near-fully busy
+        for occ in rep.stage_occupancy() {
+            assert!(occ > 0.5, "occupancy {occ}");
+        }
+    }
+
+    #[test]
+    fn backpressure_charges_the_bottleneck_queue() {
+        // fast producer into a slow consumer: the consumer's queue wait
+        // dominates, and the producer reports blocked time
+        let mut p = Pipeline::new(PipelineConfig { queue_cap: 2, ..Default::default() });
+        p.add_stage(delay_stage("fast", WorkerKind::Stage, 1));
+        p.add_stage(delay_stage("slow", WorkerKind::Stage, 8));
+        let rep = p.run(feed(20), |_| {}).unwrap();
+        let fast = &rep.workers[0];
+        let slow = &rep.workers[1];
+        assert!(fast.blocked_secs > 0.01, "fast stage never blocked: {fast:?}");
+        assert!(slow.mean_queue_wait() > fast.mean_queue_wait());
+        assert!(slow.occupancy(rep.completion_secs) > 0.8);
+    }
+
+    #[test]
+    fn stage_error_propagates_and_does_not_hang() {
+        struct FailAfter {
+            left: u32,
+        }
+        impl Operator for FailAfter {
+            fn name(&self) -> String {
+                "fail-after".into()
+            }
+            fn process(&mut self, sealed: &[u8]) -> Result<Vec<u8>> {
+                anyhow::ensure!(self.left > 0, "injected stage failure");
+                self.left -= 1;
+                Ok(sealed.to_vec())
+            }
+        }
+        let mut p = Pipeline::new(PipelineConfig::default());
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 0));
+        p.add_stage(StageSpec::from_operator(
+            WorkerKind::Stage,
+            Box::new(FailAfter { left: 3 }),
+        ));
+        let err = p.run(feed(50), |_| {}).unwrap_err();
+        assert!(format!("{err:#}").contains("injected stage failure"), "{err:#}");
+    }
+
+    #[test]
+    fn tcp_hops_preserve_order_and_payloads() {
+        let mut p = Pipeline::new(PipelineConfig { tcp_hops: true, ..Default::default() });
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 0));
+        p.add_stage(delay_stage("b", WorkerKind::Stage, 0));
+        p.add_stage(delay_stage("c", WorkerKind::Stage, 0));
+        let mut got = Vec::new();
+        let rep = p
+            .run(feed(25), |out| got.push((out.seq, out.payload[0])))
+            .unwrap();
+        assert_eq!(rep.frames, 25);
+        for (i, (seq, b)) in got.iter().enumerate() {
+            assert_eq!(*seq, i as u64);
+            assert_eq!(*b, i as u8);
+        }
+    }
+
+    #[test]
+    fn synthetic_single_stage_costs_what_the_model_says() {
+        use crate::placement::{Placement, TEE1};
+        use crate::placement::cost::CostModel;
+        use crate::profiler::devices::EpcModel;
+        use crate::profiler::{DeviceKind, DeviceProfile, ModelProfile};
+        let prof = ModelProfile {
+            model: "tiny".into(),
+            m: 2,
+            cpu: DeviceProfile { kind: DeviceKind::UntrustedCpu, block_secs: vec![1e-3; 2] },
+            gpu: DeviceProfile { kind: DeviceKind::Gpu, block_secs: vec![1e-3; 2] },
+            tee: DeviceProfile { kind: DeviceKind::Tee, block_secs: vec![2e-3; 2] },
+            param_bytes: vec![0; 2],
+            peak_act_bytes: vec![0; 2],
+            cut_bytes: vec![0; 2],
+            in_res: vec![224, 7],
+            epc: EpcModel::default(),
+        };
+        let cm = CostModel::new(&prof);
+        let p = Placement::single(TEE1, 2);
+        let cost = cm.cost(&p);
+        let pipe = Pipeline::synthetic(&p, &cost, PipelineConfig::default());
+        let n = 20u64;
+        let rep = pipe.run(feed(n), |_| {}).unwrap();
+        let predicted = cost.chunk_secs(n);
+        assert!(
+            rep.completion_secs >= predicted * 0.9,
+            "completed impossibly fast: {} vs {predicted}",
+            rep.completion_secs
+        );
+        assert!(
+            rep.completion_secs <= predicted * 1.6 + 0.05,
+            "overhead too large: {} vs {predicted}",
+            rep.completion_secs
+        );
+    }
+}

@@ -7,11 +7,14 @@ use anyhow::{bail, Context, Result};
 /// A dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimensions (row-major).
     pub shape: Vec<usize>,
+    /// Flat element storage.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Build from shape + data (checked: element counts must agree).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -20,19 +23,23 @@ impl Tensor {
         Ok(Tensor { shape, data })
     }
 
+    /// An all-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Size of the wire encoding in bytes (4 per element).
     pub fn byte_len(&self) -> usize {
         self.data.len() * 4
     }

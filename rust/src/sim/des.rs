@@ -8,8 +8,11 @@ use std::collections::BinaryHeap;
 /// An event: fires at `at` (virtual seconds) carrying a payload.
 #[derive(Debug, Clone)]
 pub struct Event<T> {
+    /// Absolute virtual firing time, seconds.
     pub at: f64,
+    /// Insertion order (FIFO tie-break at equal times).
     pub seq: u64,
+    /// The scheduled payload.
     pub payload: T,
 }
 
@@ -40,6 +43,7 @@ impl<T> PartialOrd for Event<T> {
 pub struct EventQueue<T> {
     heap: BinaryHeap<Event<T>>,
     next_seq: u64,
+    /// Current virtual time (advanced by [`EventQueue::pop`]).
     pub now: f64,
 }
 
@@ -50,6 +54,7 @@ impl<T> Default for EventQueue<T> {
 }
 
 impl<T> EventQueue<T> {
+    /// An empty queue at virtual time 0.
     pub fn new() -> Self {
         Self::default()
     }
@@ -74,10 +79,12 @@ impl<T> EventQueue<T> {
         Some(e)
     }
 
+    /// Whether no events remain.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }

@@ -7,10 +7,14 @@
 //! (backpressure), compute occupancy, boundary crypto and WAN serialization
 //! — in *virtual time*, so a 10 800-frame run over a 7 s/frame enclave
 //! finishes in microseconds of wall clock. Agreement between the two is a
-//! correctness test of both (`tests/sim_vs_model.rs` and the props below).
+//! correctness test of both (`tests/sim_vs_model.rs` and the props below),
+//! and the executed pipeline runtime
+//! ([`runtime::pipeline`](crate::runtime::pipeline)) is cross-validated
+//! against this simulator in `tests/pipeline_vs_sim.rs` — which is what
+//! lets the coordinator use the DES as a verified planning oracle.
 
 pub mod des;
 pub mod pipeline;
 
 pub use des::{Event, EventQueue};
-pub use pipeline::{simulate, PipelineReport, SimConfig};
+pub use pipeline::{simulate, PipelineReport, ServerLabel, SimConfig};

@@ -32,6 +32,17 @@ impl Default for SimConfig {
     }
 }
 
+/// What a simulated server stands for — matches the executed runtime's
+/// [`WorkerKind`](crate::runtime::pipeline::WorkerKind) so real and
+/// simulated per-server statistics line up index-by-index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerLabel {
+    /// Compute stage `i` of the placement.
+    Stage(usize),
+    /// Boundary server after stage `i` (crypto + WAN transfer).
+    Link(usize),
+}
+
 /// Results of one simulated stream.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
@@ -44,21 +55,49 @@ pub struct PipelineReport {
     pub utilization: Vec<f64>,
     /// Max queue occupancy observed per server.
     pub max_queue: Vec<usize>,
+    /// What each server index stands for (same order as `utilization` /
+    /// `max_queue`).
+    pub servers: Vec<ServerLabel>,
 }
 
 impl PipelineReport {
+    /// Completed frames per virtual second.
     pub fn throughput(&self) -> f64 {
         self.latencies.len() as f64 / self.completion_secs
     }
 
+    /// Mean end-to-end latency (virtual seconds).
     pub fn mean_latency(&self) -> f64 {
         self.latencies.iter().sum::<f64>() / self.latencies.len() as f64
     }
 
+    /// 99th-percentile end-to-end latency (virtual seconds).
     pub fn p99_latency(&self) -> f64 {
         let mut v = self.latencies.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         v[((v.len() as f64 * 0.99) as usize).min(v.len() - 1)]
+    }
+
+    /// Utilization of the compute stages only (links filtered out), in
+    /// placement order — directly comparable to the executed runtime's
+    /// [`stage_occupancy`](crate::runtime::pipeline::PipelineRunReport::stage_occupancy).
+    pub fn stage_utilization(&self) -> Vec<f64> {
+        self.servers
+            .iter()
+            .zip(&self.utilization)
+            .filter(|(l, _)| matches!(l, ServerLabel::Stage(_)))
+            .map(|(_, &u)| u)
+            .collect()
+    }
+
+    /// Utilization of the boundary links only, in placement order.
+    pub fn link_utilization(&self) -> Vec<f64> {
+        self.servers
+            .iter()
+            .zip(&self.utilization)
+            .filter(|(l, _)| matches!(l, ServerLabel::Link(_)))
+            .map(|(_, &u)| u)
+            .collect()
     }
 }
 
@@ -91,6 +130,7 @@ pub fn simulate(cm: &CostModel<'_>, placement: &Placement, cfg: &SimConfig) -> P
     // Linearize: stage0, link0, stage1, link1, ... (links with zero cost
     // still exist but are skipped through instantly).
     let mut servers: Vec<Server> = Vec::new();
+    let mut labels: Vec<ServerLabel> = Vec::new();
     for (i, &s) in cost.stage_secs.iter().enumerate() {
         servers.push(Server {
             service: s,
@@ -101,6 +141,7 @@ pub fn simulate(cm: &CostModel<'_>, placement: &Placement, cfg: &SimConfig) -> P
             busy_total: 0.0,
             max_queue: 0,
         });
+        labels.push(ServerLabel::Stage(i));
         if i < cost.boundary_secs.len() {
             let (crypto, transfer) = cost.boundary_secs[i];
             servers.push(Server {
@@ -112,6 +153,7 @@ pub fn simulate(cm: &CostModel<'_>, placement: &Placement, cfg: &SimConfig) -> P
                 busy_total: 0.0,
                 max_queue: 0,
             });
+            labels.push(ServerLabel::Link(i));
         }
     }
     let n_servers = servers.len();
@@ -205,6 +247,7 @@ pub fn simulate(cm: &CostModel<'_>, placement: &Placement, cfg: &SimConfig) -> P
             .map(|s| if completion > 0.0 { s.busy_total / completion } else { 0.0 })
             .collect(),
         max_queue: servers.iter().map(|s| s.max_queue).collect(),
+        servers: labels,
     }
 }
 
@@ -315,6 +358,20 @@ mod tests {
             "worst={worst} single={}",
             cost.single_secs
         );
+    }
+
+    #[test]
+    fn server_labels_interleave_stages_and_links() {
+        let prof = toy_profile();
+        let cm = CostModel::new(&prof);
+        let p = place(vec![(TEE1, 0..2), (TEE2, 2..4)]);
+        let rep = simulate(&cm, &p, &SimConfig { frames: 10, ..Default::default() });
+        assert_eq!(
+            rep.servers,
+            vec![ServerLabel::Stage(0), ServerLabel::Link(0), ServerLabel::Stage(1)]
+        );
+        assert_eq!(rep.stage_utilization().len(), 2);
+        assert_eq!(rep.link_utilization().len(), 1);
     }
 
     #[test]

@@ -24,8 +24,11 @@ use crate::util::rng::Rng;
 /// agreeing with the resolution-based ranking.
 #[derive(Debug, Clone)]
 pub struct RankingReport {
+    /// Agreement fraction per rank position 1..=5.
     pub agreement_by_rank: [f64; 5],
+    /// Questions asked.
     pub questions: usize,
+    /// Simulated subjects.
     pub subjects: usize,
 }
 

@@ -12,10 +12,12 @@
 use crate::privacy::metrics::{pearson, Image};
 use crate::util::rng::Rng;
 
+/// Rendering resolution of the undegraded object templates (px).
 pub const BASE_RES: usize = 128;
 
 /// The paper's ten Imagenet classes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // the variants are the class names themselves
 pub enum ObjectClass {
     Cat,
     Dog,
@@ -30,6 +32,7 @@ pub enum ObjectClass {
 }
 
 impl ObjectClass {
+    /// All ten classes, in the paper's order.
     pub const ALL: [ObjectClass; 10] = [
         ObjectClass::Cat,
         ObjectClass::Dog,
@@ -43,6 +46,7 @@ impl ObjectClass {
         ObjectClass::Person,
     ];
 
+    /// Lowercase class name.
     pub fn name(self) -> &'static str {
         match self {
             ObjectClass::Cat => "cat",

@@ -6,48 +6,62 @@
 
 use std::collections::BTreeMap;
 
+/// One declared option: name, help text, default, and flag-ness.
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
+    /// Option name (without the `--`).
     pub name: &'static str,
+    /// Help text shown in usage.
     pub help: &'static str,
+    /// Default value (None = required).
     pub default: Option<&'static str>,
+    /// Whether the option is a value-less flag.
     pub is_flag: bool,
 }
 
-/// Declarative command: name + described options, parsed from argv.
+/// Parsed arguments: resolved values, set flags, and positionals.
 #[derive(Debug, Default)]
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Positional (non-option) arguments in order.
     pub positional: Vec<String>,
 }
 
+/// Declarative command: name + described options, parsed from argv.
 pub struct Command {
+    /// Command name shown in usage.
     pub name: &'static str,
+    /// One-line description shown in usage.
     pub about: &'static str,
     specs: Vec<ArgSpec>,
 }
 
 impl Command {
+    /// A command with no options yet.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Command { name, about, specs: Vec::new() }
     }
 
+    /// Add an optional `--name value` option with a default.
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
         self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
         self
     }
 
+    /// Add a required `--name value` option.
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
         self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
         self
     }
 
+    /// Add a boolean `--name` flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
         self
     }
 
+    /// Render the generated `--help` text.
     pub fn usage(&self) -> String {
         let mut out = format!("{} — {}\n\noptions:\n", self.name, self.about);
         for s in &self.specs {
@@ -120,22 +134,28 @@ impl Command {
 }
 
 impl Args {
+    /// Resolved value of an option ("" if absent — declared options always
+    /// resolve via their defaults).
     pub fn get(&self, key: &str) -> &str {
         self.values.get(key).map(|s| s.as_str()).unwrap_or("")
     }
 
+    /// Parse an option as `usize`.
     pub fn get_usize(&self, key: &str) -> Result<usize, String> {
         self.get(key).parse().map_err(|_| format!("--{key} must be an integer"))
     }
 
+    /// Parse an option as `u64`.
     pub fn get_u64(&self, key: &str) -> Result<u64, String> {
         self.get(key).parse().map_err(|_| format!("--{key} must be an integer"))
     }
 
+    /// Parse an option as `f64`.
     pub fn get_f64(&self, key: &str) -> Result<f64, String> {
         self.get(key).parse().map_err(|_| format!("--{key} must be a number"))
     }
 
+    /// Whether a declared flag was passed.
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

@@ -13,19 +13,27 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64 precision).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
-    /// BTreeMap keeps deterministic iteration order for serialization.
+    /// An object; BTreeMap keeps deterministic iteration order for
+    /// serialization.
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset and a short message.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -258,6 +266,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// Object field lookup (None on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -271,6 +280,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing json key '{key}'"))
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -278,14 +288,17 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, if this is a whole number.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
     }
 
+    /// Integer value, if this is a whole number.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().filter(|n| n.fract() == 0.0).map(|n| n as i64)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -293,6 +306,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -300,6 +314,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -307,6 +322,7 @@ impl Json {
         }
     }
 
+    /// Object map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -324,12 +340,14 @@ impl Json {
 
     // ---- serialization ---------------------------------------------------
 
+    /// Compact serialization.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None, 0);
         out
     }
 
+    /// Two-space-indented serialization (for dumps meant to be read).
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, Some(2), 0);
@@ -410,19 +428,22 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Builder helpers for emitting result JSON.
+/// Builder helper: an object from (key, value) pairs.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Builder helper: an array from values.
 pub fn arr(items: Vec<Json>) -> Json {
     Json::Arr(items)
 }
 
+/// Builder helper: a number.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// Builder helper: a string.
 pub fn s(v: impl Into<String>) -> Json {
     Json::Str(v.into())
 }

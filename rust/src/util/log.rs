@@ -6,7 +6,9 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
+/// Log severity, ordered.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[allow(missing_docs)] // variant names are self-describing severities
 pub enum Level {
     Debug = 0,
     Info = 1,
@@ -36,14 +38,17 @@ pub fn init() {
     }
 }
 
+/// Set the global minimum level programmatically.
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at level `l` would currently be emitted.
 pub fn enabled(l: Level) -> bool {
     l as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one line to stderr (used by the `log_*!` macros).
 pub fn emit(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
@@ -58,6 +63,7 @@ pub fn emit(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     eprintln!("[{t:9.3}s {tag} {target}] {msg}");
 }
 
+/// Log at [`Level::Debug`](crate::util::log::Level::Debug) under a target tag.
 #[macro_export]
 macro_rules! log_debug {
     ($target:expr, $($arg:tt)*) => {
@@ -65,6 +71,7 @@ macro_rules! log_debug {
     };
 }
 
+/// Log at [`Level::Info`](crate::util::log::Level::Info) under a target tag.
 #[macro_export]
 macro_rules! log_info {
     ($target:expr, $($arg:tt)*) => {
@@ -72,6 +79,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at [`Level::Warn`](crate::util::log::Level::Warn) under a target tag.
 #[macro_export]
 macro_rules! log_warn {
     ($target:expr, $($arg:tt)*) => {
@@ -79,6 +87,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at [`Level::Error`](crate::util::log::Level::Error) under a target tag.
 #[macro_export]
 macro_rules! log_error {
     ($target:expr, $($arg:tt)*) => {

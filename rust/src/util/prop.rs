@@ -11,11 +11,14 @@ use super::rng::Rng;
 
 /// A generator of values of type `T` plus a shrinker toward "smaller" cases.
 pub struct Gen<T> {
+    /// Draw one value from the PRNG.
     pub gen: Box<dyn Fn(&mut Rng) -> T>,
+    /// Candidate smaller values for a failing case.
     pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
 }
 
 impl<T: Clone + 'static> Gen<T> {
+    /// Build a generator from its draw and shrink functions.
     pub fn new(
         gen: impl Fn(&mut Rng) -> T + 'static,
         shrink: impl Fn(&T) -> Vec<T> + 'static,
@@ -113,9 +116,13 @@ pub fn pair<A: Clone + 'static, B: Clone + 'static>(ga: Gen<A>, gb: Gen<B>) -> G
 
 /// Result of a property run.
 pub struct Failure<T> {
+    /// Seed that reproduces the failure.
     pub seed: u64,
+    /// The original failing case.
     pub case: T,
+    /// The smallest failing case found by shrinking.
     pub shrunk: T,
+    /// The property's failure message.
     pub msg: String,
 }
 

@@ -8,7 +8,9 @@
 use crate::runtime::Tensor;
 use crate::util::rng::Rng;
 
+/// Frame width in pixels (the models' input resolution).
 pub const W: usize = 224;
+/// Frame height in pixels.
 pub const H: usize = 224;
 
 /// The paper's three dataset flavours.
@@ -23,8 +25,10 @@ pub enum SceneKind {
 }
 
 impl SceneKind {
+    /// The three scene kinds, in the paper's dataset order.
     pub const ALL: [SceneKind; 3] = [SceneKind::Street, SceneKind::Indoor, SceneKind::Harbour];
 
+    /// Lowercase scene name.
     pub fn name(self) -> &'static str {
         match self {
             SceneKind::Street => "street",
@@ -36,6 +40,7 @@ impl SceneKind {
 
 /// Deterministic frame stream for one camera.
 pub struct VideoSource {
+    /// The scene this camera watches.
     pub kind: SceneKind,
     rng: Rng,
     t: u64,
@@ -45,6 +50,7 @@ pub struct VideoSource {
 }
 
 impl VideoSource {
+    /// A camera of the given scene kind, deterministic per seed.
     pub fn new(kind: SceneKind, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ (kind as u64) << 32);
         let n_objects = match kind {

@@ -8,6 +8,7 @@ use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, Strategy};
 use serdab::placement::{Placement, Stage, TEE1, TEE2};
 use serdab::profiler::calibrated_profile;
+use serdab::runtime::pipeline::PipelineConfig;
 use serdab::runtime::{default_backend, ChainExecutor};
 use serdab::video::{SceneKind, VideoSource};
 
@@ -45,6 +46,48 @@ fn deployed_pipeline_matches_single_chain_numerics() {
     }
     let err = (rep.output_checksum - want).abs() / want.abs().max(1e-9);
     assert!(err < 1e-4, "checksum {} vs {}", rep.output_checksum, want);
+}
+
+#[test]
+fn tcp_bridged_deployment_matches_in_process_numerics() {
+    // same placement, same frames: hops over loopback TCP sockets must
+    // produce bit-identical outputs to the in-process channel hops
+    if !ready() {
+        return;
+    }
+    let man = load_manifest(default_artifacts_dir()).unwrap();
+    let model = "squeezenet";
+    let info = man.model(model).unwrap();
+    let cut = info.m() / 2;
+    let placement = Placement {
+        stages: vec![
+            Stage { resource: TEE1, range: 0..cut },
+            Stage { resource: TEE2, range: cut..info.m() },
+        ],
+    };
+    let rm = ResourceManager::paper_testbed();
+    let frames: Vec<_> = {
+        let mut cam = VideoSource::new(SceneKind::Harbour, 21);
+        (0..4).map(|_| cam.next_frame()).collect()
+    };
+
+    let dep = Deployment::deploy(&man, &rm, model, &placement, Some(1e9), 4).unwrap();
+    let in_process = dep.run_stream(frames.clone().into_iter()).unwrap();
+
+    let cfg = PipelineConfig { queue_cap: 4, framed: true, tcp_hops: true };
+    let dep_tcp =
+        Deployment::deploy_with_config(&man, &rm, model, &placement, Some(1e9), cfg).unwrap();
+    let over_tcp = dep_tcp.run_stream(frames.into_iter()).unwrap();
+
+    assert_eq!(over_tcp.frames, 4);
+    let err = (over_tcp.output_checksum - in_process.output_checksum).abs()
+        / in_process.output_checksum.abs().max(1e-9);
+    assert!(
+        err < 1e-9,
+        "TCP-bridged checksum {} vs in-process {}",
+        over_tcp.output_checksum,
+        in_process.output_checksum
+    );
 }
 
 #[test]
