@@ -98,7 +98,7 @@ fn main() -> anyhow::Result<()> {
     let man = load_manifest(default_artifacts_dir())?;
     let info = man.model(MODEL)?;
     let profile = calibrated_profile(info);
-    let p = plan(Strategy::TwoTees, &CostModel::new(&profile), FRAMES as u64);
+    let p = plan(Strategy::TwoTees, &CostModel::paper(&profile), FRAMES as u64);
     let cut = p.placement.stages[0].range.end;
     let m = info.m();
     println!("placement over TCP: TEE1[0..{cut}] → 30Mbps → TEE2[{cut}..{m}]");

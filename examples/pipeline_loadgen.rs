@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     // millisecond-scale stand-in profile (same cost shape as the paper's
     // five CNNs) — the fixture the DES cross-validation test verifies
     let prof = ModelProfile::millis_demo();
-    let cm = CostModel::new(&prof);
+    let cm = CostModel::paper(&prof);
 
     let streams = 3u32;
     let per_stream = 40u64;
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     let p = plan(Strategy::Proposed, &cm, n);
     let cost = cm.cost(&p.placement);
-    println!("placement: {}", p.placement.describe());
+    println!("placement: {}", p.placement.describe(cm.topology()));
     println!(
         "predicted: period {:.1} ms, single-frame {:.1} ms, chunk({n}) {:.2}s",
         cost.period_secs * 1e3,
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut per_stream_done = vec![0u64; streams as usize];
-    let pipe = Pipeline::synthetic(&p.placement, &cost, PipelineConfig::default());
+    let pipe = Pipeline::synthetic(cm.topology(), &p.placement, &cost, PipelineConfig::default());
     let report = pipe.run(lg.frames(|_, _| vec![0u8; 256]), |out| {
         per_stream_done[out.stream as usize] += 1;
     })?;

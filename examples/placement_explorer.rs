@@ -1,26 +1,30 @@
 //! Placement explorer: enumerate the full placement tree for each model,
 //! show the privacy-feasible frontier, the per-strategy winners, and how
 //! the optimum moves with chunk size n and WAN bandwidth — the design
-//! space of paper §V made inspectable.
+//! space of paper §V made inspectable. The tree is derived from the
+//! resource topology, so the same exploration runs on any graph (swap
+//! `Topology::paper_testbed()` for `Topology::load("file.json")`).
 
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::model::{DELTA_RESOLUTION, MODEL_NAMES};
 use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, Strategy};
-use serdab::placement::tree::paper_tree;
+use serdab::placement::tree::full_tree;
 use serdab::profiler::calibrated_profile;
+use serdab::topology::Topology;
 
 fn main() -> anyhow::Result<()> {
     let man = load_manifest(default_artifacts_dir())?;
+    let topo = Topology::paper_testbed();
 
     for name in MODEL_NAMES {
         let model = man.model(name)?;
         let profile = calibrated_profile(model);
-        let cm = CostModel::new(&profile);
-        let (paths, stats) = paper_tree(model.m());
+        let cm = CostModel::new(&profile, topo.clone());
+        let (paths, stats) = full_tree(&topo, model.m());
         let feasible = paths
             .iter()
-            .filter(|p| p.satisfies_privacy(&profile.in_res, DELTA_RESOLUTION))
+            .filter(|p| p.satisfies_privacy(&topo, &profile.in_res, DELTA_RESOLUTION))
             .count();
         println!(
             "== {name}: M={} blocks, tree={} paths ({} privacy-feasible, O(M²)={})",
@@ -36,19 +40,20 @@ fn main() -> anyhow::Result<()> {
             let p = plan(Strategy::Proposed, &cm, n);
             println!(
                 "   n={n:>6}: {}  chunk={:.1}s",
-                p.placement.describe(),
+                p.placement.describe(&topo),
                 p.cost.chunk_secs(n)
             );
         }
 
         // optimum vs bandwidth: starving the WAN pushes work back into TEE1
         for mbps in [30.0, 2.0, 0.5] {
-            let mut cm2 = CostModel::new(&profile);
-            cm2.net.bandwidth_bps = mbps * 1e6;
+            let mut topo2 = topo.clone();
+            topo2.default_link.bandwidth_bps = mbps * 1e6;
+            let cm2 = CostModel::new(&profile, topo2);
             let p = plan(Strategy::Proposed, &cm2, 10_800);
             println!(
                 "   wan={mbps:>4}Mbps: {}  period={:.2}s",
-                p.placement.describe(),
+                p.placement.describe(cm2.topology()),
                 p.cost.period_secs
             );
         }

@@ -25,9 +25,13 @@ fn main() -> anyhow::Result<()> {
     // 2. profile + solve: the paper's placement tree under the pipeline
     //    cost model, privacy-constrained
     let profile = calibrated_profile(model);
-    let cm = CostModel::new(&profile);
+    let cm = CostModel::paper(&profile);
     let p = plan(Strategy::Proposed, &cm, 1000);
-    println!("placement: {}  (period {:.3}s/frame)", p.placement.describe(), p.cost.period_secs);
+    println!(
+        "placement: {}  (period {:.3}s/frame)",
+        p.placement.describe(cm.topology()),
+        p.cost.period_secs
+    );
 
     // 3. deploy: attest each enclave, load partitions, wire sealed hops
     let rm = ResourceManager::paper_testbed();

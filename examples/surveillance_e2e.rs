@@ -25,12 +25,12 @@ fn main() -> anyhow::Result<()> {
     let man = load_manifest(default_artifacts_dir())?;
     let info = man.model(MODEL)?;
     let profile = calibrated_profile(info);
-    let cm = CostModel::new(&profile);
+    let cm = CostModel::paper(&profile);
 
     // --- plan ------------------------------------------------------------
     let p = plan(Strategy::Proposed, &cm, (3 * FRAMES_PER_SCENE) as u64);
-    println!("model={MODEL} placement={}", p.placement.describe());
-    assert!(p.placement.satisfies_privacy(&profile.in_res, DELTA_RESOLUTION));
+    println!("model={MODEL} placement={}", p.placement.describe(cm.topology()));
+    assert!(p.placement.satisfies_privacy(cm.topology(), &profile.in_res, DELTA_RESOLUTION));
 
     // --- privacy audit on a real tensor -----------------------------------
     // run the trusted prefix on a real frame and check that what would

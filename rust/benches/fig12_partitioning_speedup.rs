@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     for name in MODEL_NAMES {
         let model = man.model(name)?;
         let profile = calibrated_profile(model);
-        let cm = CostModel::new(&profile);
+        let cm = CostModel::paper(&profile);
 
         let base_plan = plan(Strategy::OneTee, &cm, FRAMES);
         let base_des = simulate(&cm, &base_plan.placement, &SimConfig {
@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
             cells.push(format!("{des_speedup:.2}x"));
             speedups.push((strat.name(), des_speedup));
             if strat == Strategy::Proposed {
-                proposed_desc = p.placement.describe();
+                proposed_desc = p.placement.describe(cm.topology());
             }
         }
         cells.push(proposed_desc.clone());

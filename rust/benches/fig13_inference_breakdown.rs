@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     for name in MODEL_NAMES {
         let model = man.model(name)?;
         let profile = calibrated_profile(model);
-        let cm = CostModel::new(&profile);
+        let cm = CostModel::paper(&profile);
 
         let one = plan(Strategy::OneTee, &cm, 1).cost.single_secs;
         let two = plan(Strategy::TwoTees, &cm, 10_800);
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         let t1 = two.cost.stage_secs[0];
         let t2 = two.cost.stage_secs[1];
         let crypto = measure_crypto_secs(boundary_bytes as usize);
-        let transmit = cm.net.transfer_secs(boundary_bytes);
+        let transmit = cm.topology().transfer_secs(0, 1, boundary_bytes);
         let sum2 = t1 + t2;
         let relief = one - sum2;
         if relief > 0.0 {

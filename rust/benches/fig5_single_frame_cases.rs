@@ -15,7 +15,6 @@ use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, Strategy};
 use serdab::placement::tree::enumerate_paths;
-use serdab::placement::{E2_CPU, TEE1};
 use serdab::profiler::calibrated_profile;
 use serdab::sim::{simulate, SimConfig};
 use serdab::util::json::{num, obj, s};
@@ -24,8 +23,10 @@ fn main() -> anyhow::Result<()> {
     let man = load_manifest(default_artifacts_dir())?;
     let model = man.model("googlenet")?;
     let profile = calibrated_profile(model);
-    let cm = CostModel::new(&profile);
+    let cm = CostModel::paper(&profile);
     let m = profile.m;
+    let tee1 = cm.topology().require("TEE1").unwrap();
+    let e2 = cm.topology().require("E2").unwrap();
 
     // case 1: all in TEE1
     let case1 = plan(Strategy::OneTee, &cm, 1000);
@@ -33,8 +34,9 @@ fn main() -> anyhow::Result<()> {
     // case 2: TEE1 + untrusted E2 CPU (privacy-constrained cut)
     let case2 = {
         let mut best: Option<serdab::placement::strategies::Plan> = None;
-        for p in enumerate_paths(&[TEE1, E2_CPU], m) {
-            if !p.satisfies_privacy(&profile.in_res, serdab::model::DELTA_RESOLUTION) {
+        for p in enumerate_paths(&[tee1, e2], m) {
+            if !p.satisfies_privacy(cm.topology(), &profile.in_res, serdab::model::DELTA_RESOLUTION)
+            {
                 continue;
             }
             let cost = cm.cost(&p);
@@ -63,14 +65,14 @@ fn main() -> anyhow::Result<()> {
         let des = simulate(&cm, &p.placement, &SimConfig { frames: 1000, ..Default::default() });
         table.row(vec![
             label.into(),
-            p.placement.describe(),
+            p.placement.describe(cm.topology()),
             format!("{:.3}s", p.cost.single_secs),
             format!("{:.1}s", des.completion_secs),
             format!("{:.3}s", p.cost.period_secs),
         ]);
         json_rows.push(obj(vec![
             ("case", s(label)),
-            ("placement", s(p.placement.describe())),
+            ("placement", s(p.placement.describe(cm.topology()))),
             ("single_secs", num(p.cost.single_secs)),
             ("stream_secs", num(des.completion_secs)),
             ("period_secs", num(p.cost.period_secs)),

@@ -17,7 +17,7 @@ use serdab::figures::{dump_json, Table};
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, Strategy};
-use serdab::placement::{Placement, Stage, TEE1, TEE2};
+use serdab::placement::{Placement, Stage};
 use serdab::profiler::{calibrated_profile, ModelProfile};
 use serdab::runtime::pipeline::{FrameIn, Pipeline, PipelineConfig};
 use serdab::sim::{simulate, SimConfig};
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
 fn synthetic_bench() -> anyhow::Result<()> {
     // the same fixture tests/pipeline_vs_sim.rs validates against the DES
     let prof = ModelProfile::millis_demo();
-    let cm = CostModel::new(&prof);
+    let cm = CostModel::paper(&prof);
 
     let mut table = Table::new(&[
         "strategy",
@@ -60,7 +60,8 @@ fn synthetic_bench() -> anyhow::Result<()> {
         let p = plan(strat, &cm, FRAMES);
         let cost = cm.cost(&p.placement);
         let des = simulate(&cm, &p.placement, &SimConfig { frames: FRAMES, ..Default::default() });
-        let pipe = Pipeline::synthetic(&p.placement, &cost, PipelineConfig::default());
+        let pipe =
+            Pipeline::synthetic(cm.topology(), &p.placement, &cost, PipelineConfig::default());
         let feed = (0..FRAMES).map(|_| FrameIn { stream: 0, payload: vec![0u8; 64] });
         let rep = pipe.run(feed, |_| {})?;
         if strat == Strategy::OneTee {
@@ -69,7 +70,7 @@ fn synthetic_bench() -> anyhow::Result<()> {
         let speedup = baseline / rep.completion_secs;
         table.row(vec![
             strat.name().to_string(),
-            p.placement.describe(),
+            p.placement.describe(cm.topology()),
             format!("{:.3}s", rep.completion_secs),
             format!("{:.3}s", des.completion_secs),
             format!("{:.1} fps", rep.throughput()),
@@ -77,7 +78,7 @@ fn synthetic_bench() -> anyhow::Result<()> {
         ]);
         rows.push(obj(vec![
             ("strategy", s(strat.name())),
-            ("placement", s(p.placement.describe())),
+            ("placement", s(p.placement.describe(cm.topology()))),
             ("executed_chunk_secs", num(rep.completion_secs)),
             ("des_chunk_secs", num(des.completion_secs)),
             ("speedup", num(speedup)),
@@ -111,7 +112,7 @@ fn reference_backend_bench(man: &serdab::model::Manifest) -> anyhow::Result<()> 
     let m = info.m();
     let rm = ResourceManager::paper_testbed();
     let profile = calibrated_profile(info);
-    let cm = CostModel::new(&profile);
+    let cm = CostModel::paper(&profile);
 
     let frames = || {
         let mut cam = VideoSource::new(SceneKind::Street, 11);
@@ -119,7 +120,9 @@ fn reference_backend_bench(man: &serdab::model::Manifest) -> anyhow::Result<()> 
     };
 
     // sequential baseline: everything in one enclave
-    let one = Placement::single(TEE1, m);
+    let tee1 = rm.topology().require("TEE1").unwrap();
+    let tee2 = rm.topology().require("TEE2").unwrap();
+    let one = Placement::single(tee1, m);
     let dep1 = Deployment::deploy(man, &rm, model, &one, Some(1e9), 4)?;
     let r1 = dep1.run_stream(frames())?;
 
@@ -128,8 +131,8 @@ fn reference_backend_bench(man: &serdab::model::Manifest) -> anyhow::Result<()> 
     let cut = two_plan.placement.stages[0].range.end;
     let two = Placement {
         stages: vec![
-            Stage { resource: TEE1, range: 0..cut },
-            Stage { resource: TEE2, range: cut..m },
+            Stage { resource: tee1, range: 0..cut },
+            Stage { resource: tee2, range: cut..m },
         ],
     };
     let dep2 = Deployment::deploy(man, &rm, model, &two, Some(1e9), 4)?;
@@ -137,14 +140,14 @@ fn reference_backend_bench(man: &serdab::model::Manifest) -> anyhow::Result<()> 
 
     let mut table = Table::new(&["placement", "chunk", "throughput", "p99 latency", "speedup"]);
     table.row(vec![
-        one.describe(),
+        one.describe(rm.topology()),
         format!("{:.3}s", r1.total_secs),
         format!("{:.1} fps", r1.throughput_fps),
         format!("{:.1}ms", r1.p99_latency_secs * 1e3),
         "1.00x".into(),
     ]);
     table.row(vec![
-        two.describe(),
+        two.describe(rm.topology()),
         format!("{:.3}s", r2.total_secs),
         format!("{:.1} fps", r2.throughput_fps),
         format!("{:.1}ms", r2.p99_latency_secs * 1e3),

@@ -18,6 +18,8 @@
 //! [`Monitor`](crate::coordinator::Monitor) consumes to detect drift from
 //! the cost model's predictions.
 
+use std::time::Duration;
+
 use anyhow::{Context, Result};
 
 use crate::coordinator::resources::ResourceManager;
@@ -93,7 +95,9 @@ const CAMERA_SECRET: &[u8] = b"serdab-camera-hop";
 
 impl Deployment {
     /// Deploy `placement` of `model` onto the registered devices.
-    /// `wan_bps` throttles every cross-host edge (None = paper's 30 Mbps).
+    /// `wan_bps` overrides every cross-host edge with bandwidth-only
+    /// shaping; `None` makes each link faithful to the registry's
+    /// topology (that host pair's bandwidth *and* rtt).
     pub fn deploy(
         manifest: &Manifest,
         rm: &ResourceManager,
@@ -118,17 +122,20 @@ impl Deployment {
         wan_bps: Option<f64>,
         cfg: PipelineConfig,
     ) -> Result<Self> {
+        let topo = rm.topology();
         let info = manifest.model(model)?;
-        placement.validate(info.m()).map_err(|e| anyhow::anyhow!("invalid placement: {e}"))?;
+        placement
+            .validate(topo, info.m())
+            .map_err(|e| anyhow::anyhow!("invalid placement: {e}"))?;
 
         let n_stages = placement.stages.len();
         let mut hop_secrets: Vec<Vec<u8>> = Vec::with_capacity(n_stages);
 
         // --- control plane: attestation gate per stage, key release -----
         for stage in &placement.stages {
-            let dev = rm
-                .get(stage.resource.name)
-                .with_context(|| format!("device {} not registered/online", stage.resource.name))?;
+            let dev = rm.get_id(stage.resource).with_context(|| {
+                format!("device {} not registered/online", topo.name_of(stage.resource))
+            })?;
             // parameter bytes the enclave will seal — their digest is the
             // expected measurement the verifier checks
             let mut param_bytes = Vec::new();
@@ -140,7 +147,9 @@ impl Deployment {
             // constructing the enclave identity the device would boot)
             let remote = EnclaveSim::new(CODE_ID, &param_bytes, dev.hw_key);
             let secret = attest_and_release(expected, dev.hw_key, |ch| remote.quote(ch))
-                .with_context(|| format!("attestation failed for {}", stage.resource.name))?;
+                .with_context(|| {
+                    format!("attestation failed for {}", topo.name_of(stage.resource))
+                })?;
             hop_secrets.push(secret);
         }
 
@@ -151,7 +160,7 @@ impl Deployment {
             let manifest2 = manifest.clone();
             let model2 = model.to_string();
             let range = stage.range.clone();
-            let hw_key = rm.get(stage.resource.name).unwrap().hw_key;
+            let hw_key = rm.get_id(stage.resource).unwrap().hw_key;
             let ingress_secret = if si == 0 {
                 CAMERA_SECRET.to_vec()
             } else {
@@ -160,7 +169,7 @@ impl Deployment {
             let egress_secret =
                 if si + 1 < n_stages { Some(hop_secrets[si].clone()) } else { None };
             pipeline.add_stage(StageSpec::new(
-                stage.label(),
+                stage.label(topo),
                 WorkerKind::Stage,
                 move || -> Result<Box<dyn Operator>> {
                     // device-local runtime: each stage constructs its own
@@ -179,17 +188,26 @@ impl Deployment {
                 },
             ));
 
-            // cross-host edge ⇒ throttled transmission operator
-            let cross_host = placement
-                .stages
-                .get(si + 1)
-                .map(|next| next.resource.host != stage.resource.host)
-                .unwrap_or(false);
-            if cross_host {
-                let bucket = TokenBucket::new(wan_bps.unwrap_or(30e6), 256.0 * 1024.0 * 8.0);
+            // cross-host edge ⇒ transmission operator. With no override the
+            // link is faithful to the topology (bandwidth shaping + rtt —
+            // what the cost model and DES charge); an explicit `wan_bps`
+            // keeps the legacy bandwidth-only shaping.
+            let host = topo.host_of(stage.resource);
+            let next_host = placement.stages.get(si + 1).map(|next| topo.host_of(next.resource));
+            if let Some(next_host) = next_host.filter(|&h| h != host) {
+                let link = topo.link(host, next_host);
+                let (bps, latency) = match wan_bps {
+                    Some(bps) => (bps, Duration::ZERO),
+                    None => (link.bandwidth_bps, Duration::from_secs_f64(link.rtt_secs)),
+                };
+                let bucket = TokenBucket::new(bps, 256.0 * 1024.0 * 8.0);
                 pipeline.add_stage(StageSpec::from_operator(
                     WorkerKind::Link,
-                    Box::new(TransmitOperator { label: format!("wan-after-{si}"), bucket }),
+                    Box::new(TransmitOperator {
+                        label: format!("wan-after-{si}"),
+                        bucket,
+                        latency,
+                    }),
                 ));
             }
         }

@@ -1,21 +1,26 @@
 //! Resource Manager: the registry of compute devices available to execute
-//! NN layers (paper §III). Devices register dynamically (the provider
-//! "reports the available resources correctly" per the threat model) and
-//! the placement solver draws its resource graph from here.
+//! NN layers (paper §III). The registry is born from a [`Topology`] — one
+//! registered device per topology resource, each with the simulated
+//! hardware quoting key its attestation quotes verify under — and tracks
+//! per-device liveness (the provider "reports the available resources
+//! correctly" per the threat model). The deployment layer resolves every
+//! placement stage's [`ResourceId`] through here.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::placement::Resource;
 use crate::profiler::DeviceKind;
+use crate::topology::{ResourceId, ResourceSpec, Topology};
 
-/// A registered device: the placement-level resource plus liveness and the
-/// simulated hardware key its quotes verify under.
+/// A registered device: the topology resource it realizes plus liveness
+/// and the simulated hardware key its quotes verify under.
 #[derive(Debug, Clone)]
 pub struct RegisteredDevice {
-    /// The placement-level resource this device realizes.
-    pub resource: Resource,
+    /// Which topology resource this device realizes.
+    pub id: ResourceId,
+    /// The resource's spec (name, kind, host, cost overrides).
+    pub spec: ResourceSpec,
     /// Simulated hardware quoting key the device's attestations verify under.
     pub hw_key: [u8; 32],
     /// Whether the device is currently accepting deployments.
@@ -23,34 +28,41 @@ pub struct RegisteredDevice {
 }
 
 /// Registry of compute devices, keyed by resource name.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ResourceManager {
-    devices: BTreeMap<&'static str, RegisteredDevice>,
+    topo: Topology,
+    devices: BTreeMap<String, RegisteredDevice>,
 }
 
 impl ResourceManager {
-    /// An empty registry.
-    pub fn new() -> Self {
-        Self::default()
+    /// A registry with one online device per resource of `topo`. Hardware
+    /// keys are derived from the resource index (deterministic, so the
+    /// attestation flow is reproducible across runs).
+    pub fn for_topology(topo: &Topology) -> Self {
+        let mut devices = BTreeMap::new();
+        for (i, spec) in topo.resources().iter().enumerate() {
+            devices.insert(
+                spec.name.clone(),
+                RegisteredDevice {
+                    id: ResourceId(i),
+                    spec: spec.clone(),
+                    hw_key: [(i as u8).wrapping_add(1); 32],
+                    online: true,
+                },
+            );
+        }
+        ResourceManager { topo: topo.clone(), devices }
     }
 
     /// The paper's evaluation testbed: two edges, a TEE on each, GPU on E2.
     pub fn paper_testbed() -> Self {
-        use crate::placement::{E1_CPU, E2_CPU, E2_GPU, TEE1, TEE2};
-        let mut rm = Self::new();
-        for (i, r) in [TEE1, TEE2, E1_CPU, E2_CPU, E2_GPU].into_iter().enumerate() {
-            rm.register(r, [i as u8 + 1; 32]).unwrap();
-        }
-        rm
+        Self::for_topology(&Topology::paper_testbed())
     }
 
-    /// Register a device (errors on duplicate names).
-    pub fn register(&mut self, resource: Resource, hw_key: [u8; 32]) -> Result<()> {
-        if self.devices.contains_key(resource.name) {
-            bail!("device {} already registered", resource.name);
-        }
-        self.devices.insert(resource.name, RegisteredDevice { resource, hw_key, online: true });
-        Ok(())
+    /// The topology this registry realizes (deployments resolve stage
+    /// ids, hosts, and link parameters through it).
+    pub fn topology(&self) -> &Topology {
+        &self.topo
     }
 
     /// Mark a device offline (placements using it can no longer deploy).
@@ -64,57 +76,92 @@ impl ResourceManager {
         }
     }
 
+    /// Mark a previously deregistered device online again.
+    pub fn reregister(&mut self, name: &str) -> Result<()> {
+        match self.devices.get_mut(name) {
+            Some(d) => {
+                d.online = true;
+                Ok(())
+            }
+            None => bail!("unknown device {name}"),
+        }
+    }
+
     /// Look up an *online* device by resource name.
     pub fn get(&self, name: &str) -> Option<&RegisteredDevice> {
         self.devices.get(name).filter(|d| d.online)
     }
 
-    /// Online resources, trusted first (the solver expects TEE1 first).
-    pub fn online(&self) -> Vec<Resource> {
-        let mut v: Vec<Resource> =
-            self.devices.values().filter(|d| d.online).map(|d| d.resource).collect();
-        v.sort_by_key(|r| (!r.kind.trusted(), r.host, r.name));
+    /// Look up an *online* device by resource id.
+    pub fn get_id(&self, id: ResourceId) -> Option<&RegisteredDevice> {
+        self.devices.values().find(|d| d.id == id && d.online)
+    }
+
+    /// Online resource ids, in topology declaration order (the solver's
+    /// entry enclave comes first in the paper graph).
+    pub fn online(&self) -> Vec<ResourceId> {
+        let mut v: Vec<ResourceId> =
+            self.devices.values().filter(|d| d.online).map(|d| d.id).collect();
+        v.sort();
         v
     }
 
     /// Number of online trusted enclaves.
     pub fn online_tees(&self) -> usize {
-        self.online().iter().filter(|r| r.kind == DeviceKind::Tee).count()
+        self.devices
+            .values()
+            .filter(|d| d.online && d.spec.kind == DeviceKind::Tee)
+            .count()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::placement::{E2_GPU, TEE1, TEE2};
 
     #[test]
-    fn register_and_lookup() {
-        let mut rm = ResourceManager::new();
-        rm.register(TEE1, [1u8; 32]).unwrap();
-        assert!(rm.get("TEE1").is_some());
-        assert!(rm.get("TEE2").is_none());
-        assert!(rm.register(TEE1, [1u8; 32]).is_err(), "double registration");
+    fn registry_mirrors_topology() {
+        let topo = Topology::paper_testbed();
+        let rm = ResourceManager::for_topology(&topo);
+        assert_eq!(rm.online().len(), 5);
+        assert_eq!(rm.online_tees(), 2);
+        let tee1 = rm.get("TEE1").unwrap();
+        assert_eq!(tee1.id, topo.require("TEE1").unwrap());
+        assert_eq!(rm.get_id(tee1.id).unwrap().spec.name, "TEE1");
+        assert!(rm.get("TEE9").is_none());
+        // ids come back in topology order: TEE1 first
+        assert_eq!(rm.online()[0], topo.entry());
     }
 
     #[test]
-    fn deregister_marks_offline() {
-        let mut rm = ResourceManager::new();
-        rm.register(TEE1, [1u8; 32]).unwrap();
-        rm.register(E2_GPU, [2u8; 32]).unwrap();
+    fn deregister_marks_offline_and_reregister_restores() {
+        let mut rm = ResourceManager::paper_testbed();
         rm.deregister("TEE1").unwrap();
         assert!(rm.get("TEE1").is_none());
-        assert_eq!(rm.online().len(), 1);
+        assert!(rm.get_id(rm.topology().require("TEE1").unwrap()).is_none());
+        assert_eq!(rm.online().len(), 4);
+        assert_eq!(rm.online_tees(), 1);
         assert!(rm.deregister("nope").is_err());
+        rm.reregister("TEE1").unwrap();
+        assert_eq!(rm.online_tees(), 2);
     }
 
     #[test]
-    fn paper_testbed_has_two_tees() {
-        let rm = ResourceManager::paper_testbed();
-        assert_eq!(rm.online_tees(), 2);
+    fn works_for_non_paper_topologies() {
+        let topo = Topology::builder("quad")
+            .resource("T0", DeviceKind::Tee, 0)
+            .resource("T1", DeviceKind::Tee, 1)
+            .resource("T2", DeviceKind::Tee, 2)
+            .resource("T3", DeviceKind::Tee, 3)
+            .resource("G3", DeviceKind::Gpu, 3)
+            .build()
+            .unwrap();
+        let rm = ResourceManager::for_topology(&topo);
         assert_eq!(rm.online().len(), 5);
-        // trusted resources sort first
-        assert_eq!(rm.online()[0], TEE1);
-        assert_eq!(rm.online()[1], TEE2);
+        assert_eq!(rm.online_tees(), 4);
+        // per-resource hardware keys are distinct
+        let k0 = rm.get("T0").unwrap().hw_key;
+        let k3 = rm.get("T3").unwrap().hw_key;
+        assert_ne!(k0, k3);
     }
 }

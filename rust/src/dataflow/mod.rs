@@ -58,6 +58,9 @@ pub struct TransmitOperator {
     pub label: String,
     /// The bandwidth shaper every forwarded byte is charged against.
     pub bucket: crate::net::TokenBucket,
+    /// Fixed one-way link latency added to every forwarded frame (the
+    /// topology link's rtt; zero when the caller models bandwidth only).
+    pub latency: std::time::Duration,
 }
 
 impl Operator for TransmitOperator {
@@ -67,6 +70,9 @@ impl Operator for TransmitOperator {
 
     fn process(&mut self, sealed: &[u8]) -> Result<Vec<u8>> {
         self.bucket.consume(sealed.len());
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
         Ok(sealed.to_vec())
     }
 }
@@ -117,6 +123,7 @@ mod tests {
             Box::new(TransmitOperator {
                 label: "wan".into(),
                 bucket: crate::net::TokenBucket::new(8e6, 0.0), // 1 MB/s
+                latency: Duration::ZERO,
             }),
         ));
         let feed = (0..5u64).map(|_| FrameIn { stream: 0, payload: vec![0u8; 20_000] });

@@ -18,21 +18,30 @@
 //! discrete-event simulator ([`sim`]) predicts and
 //! `tests/pipeline_vs_sim.rs` cross-validates.
 //!
-//! A placement is a chain of stages over the model's blocks; solving and
-//! validating one needs no artifacts:
+//! The resource graph is data ([`topology`]): a [`Topology`] names the
+//! devices, hosts, links, and camera/sink attachment points, and every
+//! layer — solver, simulator, serving runtime — consumes it, so a new
+//! evaluation scenario is a JSON file (`serdab plan --topology f.json`),
+//! not a code change. A placement is a chain of stages over the model's
+//! blocks, referencing topology resources by id; solving and validating
+//! one needs no artifacts:
 //!
 //! ```
-//! use serdab::placement::{Placement, Stage, TEE1, TEE2};
+//! use serdab::placement::{Placement, Stage};
+//! use serdab::topology::Topology;
 //!
+//! let topo = Topology::paper_testbed();
 //! let p = Placement {
 //!     stages: vec![
-//!         Stage { resource: TEE1, range: 0..3 },
-//!         Stage { resource: TEE2, range: 3..6 },
+//!         Stage { resource: topo.require("TEE1").unwrap(), range: 0..3 },
+//!         Stage { resource: topo.require("TEE2").unwrap(), range: 3..6 },
 //!     ],
 //! };
-//! assert!(p.validate(6).is_ok());
-//! assert_eq!(p.describe(), "TEE1[0..3] → TEE2[3..6]");
+//! assert!(p.validate(&topo, 6).is_ok());
+//! assert_eq!(p.describe(&topo), "TEE1[0..3] → TEE2[3..6]");
 //! ```
+//!
+//! [`Topology`]: topology::Topology
 //!
 //! See `README.md` for the quickstart and repo map, `DESIGN.md` for the
 //! architecture, substitution table (SGX → enclave simulator, etc.),
@@ -53,5 +62,6 @@ pub mod profiler;
 pub mod runtime;
 pub mod sim;
 pub mod study;
+pub mod topology;
 pub mod util;
 pub mod video;

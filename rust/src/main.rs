@@ -6,6 +6,10 @@
 //!   serve  — deploy a placement and stream synthetic surveillance video
 //!   sweep  — strategy × model speedup table (Fig. 12 shape, cost model)
 //!   study  — run the user-study simulators (Fig. 10 / Fig. 11)
+//!
+//! `plan`, `serve`, and `sweep` accept `--topology <file.json>` to run on
+//! an arbitrary resource graph instead of the paper's two-edge testbed
+//! (see `examples/topologies/` for the schema and ready-made graphs).
 
 use anyhow::Result;
 use serdab::coordinator::{Deployment, ResourceManager};
@@ -14,8 +18,9 @@ use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::model::MODEL_NAMES;
 use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, speedup_table, Strategy};
-use serdab::profiler::calibrated_profile;
-use serdab::util::cli::Command;
+use serdab::profiler::{calibrated_profile, ModelProfile};
+use serdab::topology::Topology;
+use serdab::util::cli::{Args, Command};
 use serdab::util::log;
 use serdab::video::{SceneKind, VideoSource};
 
@@ -52,10 +57,10 @@ fn main() {
 fn usage() -> &'static str {
     "serdab — privacy-aware NN partitioning across enclaves\n\n\
      subcommands:\n\
-     \x20 plan   --model <name> [--frames N] [--strategy s]   solve placement\n\
-     \x20 serve  --model <name> [--frames N] [--scene s]      deploy + stream\n\
-     \x20 sweep  [--frames N]                                 Fig.12-style table\n\
-     \x20 study  [--subjects N]                               Fig.10/11 simulators\n\
+     \x20 plan   --model <name> [--topology f.json] [--frames N] [--strategy s]  solve placement\n\
+     \x20 serve  --model <name> [--topology f.json] [--frames N] [--scene s]     deploy + stream\n\
+     \x20 sweep  [--topology f.json] [--frames N]                                Fig.12-style table\n\
+     \x20 study  [--subjects N]                                                  Fig.10/11 simulators\n\
      run any with --help for options"
 }
 
@@ -72,28 +77,60 @@ fn strategy_from(name: &str) -> Result<Strategy> {
     })
 }
 
+/// Resolve `--topology`: empty = the paper testbed, otherwise a JSON file.
+fn topology_from(a: &Args) -> Result<Topology> {
+    let path = a.get("topology");
+    if path.is_empty() {
+        Ok(Topology::paper_testbed())
+    } else {
+        Topology::load(path)
+    }
+}
+
+/// Resolve `--model` into named profiles. With compiled artifacts present
+/// this calibrates the real model zoo; `--model demo` (or a missing
+/// artifacts directory) falls back to the built-in millisecond-scale
+/// profile so planning works on a bare checkout.
+fn profiles_from(model_arg: &str) -> Result<Vec<(String, ModelProfile)>> {
+    let dir = default_artifacts_dir();
+    if model_arg == "demo" || !dir.join("manifest.json").exists() {
+        if model_arg != "demo" {
+            eprintln!(
+                "note: no artifacts at {} — using the built-in demo profile \
+                 (run `make artifacts` for the model zoo)",
+                dir.display()
+            );
+        }
+        return Ok(vec![("demo".to_string(), ModelProfile::millis_demo())]);
+    }
+    let man = load_manifest(&dir)?;
+    let names: Vec<&str> =
+        if model_arg == "all" { MODEL_NAMES.to_vec() } else { vec![model_arg] };
+    let mut out = Vec::new();
+    for n in names {
+        out.push((n.to_string(), calibrated_profile(man.model(n)?)));
+    }
+    Ok(out)
+}
+
 fn cmd_plan(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serdab plan", "solve the privacy-aware placement")
-        .opt("model", "googlenet", "model name (or 'all')")
+        .opt("model", "googlenet", "model name ('all', or 'demo' for the artifact-free profile)")
+        .opt("topology", "", "topology JSON file (default: the paper testbed)")
         .opt("frames", "10800", "chunk size n")
         .opt("strategy", "proposed", "strategy to solve");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let man = load_manifest(default_artifacts_dir())?;
     let n: u64 = a.get_u64("frames").map_err(|e| anyhow::anyhow!(e))?;
     let strat = strategy_from(a.get("strategy"))?;
-    let models: Vec<&str> = if a.get("model") == "all" {
-        MODEL_NAMES.to_vec()
-    } else {
-        vec![a.get("model")]
-    };
-    for m in models {
-        let model = man.model(m)?;
-        let profile = calibrated_profile(model);
-        let cm = CostModel::new(&profile);
+    let topo = topology_from(&a)?;
+    println!("topology: {}", topo.summary());
+    for (name, profile) in profiles_from(a.get("model"))? {
+        let cm = CostModel::new(&profile, topo.clone());
         let p = plan(strat, &cm, n);
         println!(
-            "{m}: {}\n  chunk({n}) = {:.1}s  period = {:.3}s  single-frame = {:.3}s  (examined {} paths)",
-            p.placement.describe(),
+            "{name}: {}\n  chunk({n}) = {:.1}s  period = {:.3}s  single-frame = {:.3}s  \
+             (examined {} paths)",
+            p.placement.describe(cm.topology()),
             p.cost.chunk_secs(n),
             p.cost.period_secs,
             p.cost.single_secs,
@@ -105,17 +142,17 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
 
 fn cmd_sweep(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serdab sweep", "strategy × model speedups (cost model)")
+        .opt("topology", "", "topology JSON file (default: the paper testbed)")
         .opt("frames", "10800", "chunk size n");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     let n: u64 = a.get_u64("frames").map_err(|e| anyhow::anyhow!(e))?;
-    let man = load_manifest(default_artifacts_dir())?;
+    let topo = topology_from(&a)?;
+    println!("topology: {}", topo.summary());
     let mut table = Table::new(&["model", "1 TEE", "No pipe", "TEE+GPU", "2 TEEs", "Proposed"]);
-    for m in MODEL_NAMES {
-        let model = man.model(m)?;
-        let profile = calibrated_profile(model);
-        let cm = CostModel::new(&profile);
+    for (name, profile) in profiles_from("all")? {
+        let cm = CostModel::new(&profile, topo.clone());
         let rows = speedup_table(&cm, n);
-        let mut cells = vec![m.to_string()];
+        let mut cells = vec![name];
         for (_, _, sp) in rows {
             cells.push(format!("{sp:.2}x"));
         }
@@ -128,11 +165,12 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serdab serve", "deploy a placement and stream video")
         .opt("model", "squeezenet", "model name")
+        .opt("topology", "", "topology JSON file (default: the paper testbed)")
         .opt("frames", "20", "frames to stream")
         .opt("scene", "street", "street|indoor|harbour")
         .opt("strategy", "proposed", "placement strategy")
         .opt("backend", "", "execution backend (reference|xla; default $SERDAB_BACKEND)")
-        .opt("wan-mbps", "30", "inter-edge bandwidth")
+        .opt("wan-mbps", "", "override inter-edge bandwidth (default: per-link topology values)")
         .opt("seed", "7", "video seed");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     if !a.get("backend").is_empty() {
@@ -156,23 +194,25 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "harbour" => SceneKind::Harbour,
         s => anyhow::bail!("unknown scene '{s}'"),
     };
+    let topo = topology_from(&a)?;
+    println!("topology: {}", topo.summary());
 
     let info = man.model(&model)?;
     let profile = calibrated_profile(info);
-    let cm = CostModel::new(&profile);
+    let cm = CostModel::new(&profile, topo.clone());
     let strat = strategy_from(a.get("strategy"))?;
     let p = plan(strat, &cm, frames as u64);
-    println!("placement: {}", p.placement.describe());
+    println!("placement: {}", p.placement.describe(cm.topology()));
 
-    let rm = ResourceManager::paper_testbed();
-    let dep = Deployment::deploy(
-        &man,
-        &rm,
-        &model,
-        &p.placement,
-        Some(a.get_f64("wan-mbps").map_err(|e| anyhow::anyhow!(e))? * 1e6),
-        4,
-    )?;
+    let wan_bps = match a.get("wan-mbps") {
+        "" => None,
+        mbps => Some(
+            mbps.parse::<f64>().map_err(|_| anyhow::anyhow!("--wan-mbps must be a number"))?
+                * 1e6,
+        ),
+    };
+    let rm = ResourceManager::for_topology(&topo);
+    let dep = Deployment::deploy(&man, &rm, &model, &p.placement, wan_bps, 4)?;
     let mut src = VideoSource::new(scene, a.get_u64("seed").map_err(|e| anyhow::anyhow!(e))?);
     let frames_vec: Vec<_> = (0..frames).map(|_| src.next_frame()).collect();
     let rep = dep.run_stream(frames_vec.into_iter())?;

@@ -1,8 +1,9 @@
-//! Pipeline cost model: the paper's Eq. 1/2 generalized to any stage chain.
+//! Pipeline cost model: the paper's Eq. 1/2 generalized to any stage chain
+//! over any [`Topology`].
 //!
 //! For a placement with stages s₁..s_k, per-frame stage times e_i (including
 //! enclave paging for the stage's resident set) and boundary costs
-//! b_i = crypto + WAN transfer after stage i:
+//! b_i = crypto + link transfer after stage i:
 //!
 //!   t_single     = Σ e_i + Σ b_i                       (latency, n = 1)
 //!   t_chunk(n)   = t_single + (n-1) · period            (pipelined stream)
@@ -11,12 +12,15 @@
 //! The WAN link is itself a pipeline stage (transfers of frame f overlap
 //! with compute of frame f+1 — paper Fig. 6), hence `period` includes the
 //! boundary terms. Eq. 2's `n · (slowest TEE)` is the special case where a
-//! TEE dominates. The discrete-event simulator (`sim/`) validates this
-//! closed form event-by-event, including bounded queues.
+//! TEE dominates. Per-stage times, crypto rate, and per-link
+//! bandwidth/latency all come from the topology (speed grades and EPC
+//! overrides included), so the same model scores the paper testbed and
+//! any loaded resource graph. The discrete-event simulator (`sim/`)
+//! validates this closed form event-by-event, including bounded queues.
 
 use super::Placement;
-use crate::profiler::devices::NetworkParams;
 use crate::profiler::{DeviceKind, ModelProfile};
+use crate::topology::Topology;
 
 /// Scored placement path.
 #[derive(Debug, Clone)]
@@ -44,27 +48,41 @@ impl PathCost {
     }
 }
 
-/// Cost model = profile (per-device block times + paging) + network.
+/// Cost model = profile (per-device-class block times + paging inputs) +
+/// the resource topology (which resource is where, link parameters,
+/// per-resource speed/EPC overrides).
 pub struct CostModel<'a> {
-    /// Per-device block timings and paging inputs.
+    /// Per-device-class block timings and paging inputs.
     pub profile: &'a ModelProfile,
-    /// WAN bandwidth / RTT / crypto-rate parameters.
-    pub net: NetworkParams,
+    /// The resource graph placements are scored against.
+    pub topo: Topology,
 }
 
 impl<'a> CostModel<'a> {
-    /// A cost model over `profile` with the paper's default network.
-    pub fn new(profile: &'a ModelProfile) -> Self {
-        CostModel { profile, net: NetworkParams::default() }
+    /// A cost model over `profile` and an explicit topology.
+    pub fn new(profile: &'a ModelProfile, topo: Topology) -> Self {
+        CostModel { profile, topo }
+    }
+
+    /// Convenience: a cost model over the paper's evaluation testbed
+    /// ([`Topology::paper_testbed`]).
+    pub fn paper(profile: &'a ModelProfile) -> Self {
+        CostModel::new(profile, Topology::paper_testbed())
+    }
+
+    /// The topology this model scores against.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
     }
 
     /// Score a placement. The placement must be valid for the model.
     pub fn cost(&self, p: &Placement) -> PathCost {
         let prof = self.profile;
+        let topo = &self.topo;
         let stage_secs: Vec<f64> = p
             .stages
             .iter()
-            .map(|s| prof.stage_secs(s.resource.kind, s.range.clone()))
+            .map(|s| topo.stage_secs(prof, s.resource, s.range.clone()))
             .collect();
 
         let mut boundary_secs = Vec::new();
@@ -73,19 +91,16 @@ impl<'a> CostModel<'a> {
             let cut = a.range.end - 1;
             let bytes = prof.cut_bytes[cut];
             // leaving or entering a TEE ⇒ seal/open the boundary tensor
-            let crypto = if a.resource.kind == DeviceKind::Tee
-                || b.resource.kind == DeviceKind::Tee
+            let crypto = if topo.kind_of(a.resource) == DeviceKind::Tee
+                || topo.kind_of(b.resource) == DeviceKind::Tee
             {
-                self.net.crypto_secs(bytes)
+                topo.crypto_secs(bytes)
             } else {
                 0.0
             };
-            // cross-host hop ⇒ WAN transfer at the controlled bandwidth
-            let transfer = if a.resource.host != b.resource.host {
-                self.net.transfer_secs(bytes)
-            } else {
-                0.0
-            };
+            // cross-host hop ⇒ transfer at that link's bandwidth/latency
+            let transfer =
+                topo.transfer_secs(topo.host_of(a.resource), topo.host_of(b.resource), bytes);
             boundary_secs.push((crypto, transfer));
         }
 
@@ -104,7 +119,7 @@ impl<'a> CostModel<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::placement::{Stage, E2_GPU, TEE1, TEE2};
+    use crate::placement::{ResourceId, Stage};
     use crate::profiler::devices::EpcModel;
     use crate::profiler::DeviceProfile;
 
@@ -124,7 +139,7 @@ mod tests {
         }
     }
 
-    fn place(stages: Vec<(crate::placement::Resource, std::ops::Range<usize>)>) -> Placement {
+    fn place(stages: Vec<(ResourceId, std::ops::Range<usize>)>) -> Placement {
         Placement {
             stages: stages
                 .into_iter()
@@ -133,11 +148,15 @@ mod tests {
         }
     }
 
+    fn rid(cm: &CostModel<'_>, name: &str) -> ResourceId {
+        cm.topology().require(name).unwrap()
+    }
+
     #[test]
     fn single_stage_cost_is_stage_time() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let c = cm.cost(&Placement::single(TEE1, 4));
+        let cm = CostModel::paper(&prof);
+        let c = cm.cost(&Placement::single(rid(&cm, "TEE1"), 4));
         assert!((c.single_secs - 4.0).abs() < 1e-9);
         assert!((c.period_secs - 4.0).abs() < 1e-9);
         assert!((c.chunk_secs(10) - 4.0 * 10.0).abs() < 1e-9);
@@ -146,10 +165,10 @@ mod tests {
     #[test]
     fn pipeline_period_is_bottleneck_stage() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
+        let cm = CostModel::paper(&prof);
         // TEE1 3 blocks (3s), TEE2 1 block (1s); boundary after block 2:
         // crypto (2*3.75MB/400MBps ≈ 0.019s) + transfer (1.01s)
-        let c = cm.cost(&place(vec![(TEE1, 0..3), (TEE2, 3..4)]));
+        let c = cm.cost(&place(vec![(rid(&cm, "TEE1"), 0..3), (rid(&cm, "TEE2"), 3..4)]));
         assert!((c.stage_secs[0] - 3.0).abs() < 1e-9);
         assert!((c.period_secs - 3.0).abs() < 1e-9, "TEE1 is the bottleneck");
         let expected_single = 3.0 + 1.0 + c.boundary_secs[0].0 + c.boundary_secs[0].1;
@@ -160,8 +179,8 @@ mod tests {
     fn network_can_be_the_bottleneck() {
         let mut prof = toy_profile();
         prof.cut_bytes = vec![40_000_000, 0, 0, 0]; // ~10.7s at 30 Mbps
-        let cm = CostModel::new(&prof);
-        let c = cm.cost(&place(vec![(TEE1, 0..1), (TEE2, 1..4)]));
+        let cm = CostModel::paper(&prof);
+        let c = cm.cost(&place(vec![(rid(&cm, "TEE1"), 0..1), (rid(&cm, "TEE2"), 1..4)]));
         assert!(c.period_secs > 10.0, "transfer dominates: {}", c.period_secs);
     }
 
@@ -169,8 +188,8 @@ mod tests {
     fn chunk_time_matches_paper_equation_shape() {
         // Eq. 2: t_chunk(n) ≈ n * slowest-stage for large n
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let c = cm.cost(&place(vec![(TEE1, 0..2), (TEE2, 2..4)]));
+        let cm = CostModel::paper(&prof);
+        let c = cm.cost(&place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "TEE2"), 2..4)]));
         let n = 10_000u64;
         let t = c.chunk_secs(n);
         let bound = n as f64 * c.period_secs;
@@ -180,9 +199,9 @@ mod tests {
     #[test]
     fn intra_host_handoff_free_of_transfer() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
+        let cm = CostModel::paper(&prof);
         // TEE2 and GPU2 share host 1: crypto yes (leaving TEE), transfer no
-        let c = cm.cost(&place(vec![(TEE2, 0..2), (E2_GPU, 2..4)]));
+        let c = cm.cost(&place(vec![(rid(&cm, "TEE2"), 0..2), (rid(&cm, "GPU2"), 2..4)]));
         let (crypto, transfer) = c.boundary_secs[0];
         assert!(crypto > 0.0);
         assert_eq!(transfer, 0.0);
@@ -191,9 +210,22 @@ mod tests {
     #[test]
     fn gpu_offload_shrinks_period() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let solo = cm.cost(&Placement::single(TEE1, 4));
-        let split = cm.cost(&place(vec![(TEE1, 0..2), (E2_GPU, 2..4)]));
+        let cm = CostModel::paper(&prof);
+        let solo = cm.cost(&Placement::single(rid(&cm, "TEE1"), 4));
+        let split = cm.cost(&place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "GPU2"), 2..4)]));
         assert!(split.period_secs < solo.period_secs);
+    }
+
+    #[test]
+    fn per_link_bandwidth_is_respected() {
+        // starving one link makes its boundary the bottleneck; other host
+        // pairs keep the default
+        let prof = toy_profile();
+        let mut topo = Topology::paper_testbed();
+        topo.set_link(0, 1, crate::topology::LinkParams { bandwidth_bps: 1e6, rtt_secs: 0.0 });
+        let cm = CostModel::new(&prof, topo);
+        let c = cm.cost(&place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "TEE2"), 2..4)]));
+        // 3.75 MB at 1 Mbit/s = 30 s
+        assert!(c.boundary_secs[0].1 > 29.0, "{:?}", c.boundary_secs);
     }
 }

@@ -1,12 +1,18 @@
 //! Privacy-aware placement — the paper's algorithmic contribution (§IV–V).
 //!
-//! A *placement path* P assigns every block L_x to a resource; because the
-//! NN is a chain and data flows forward once, any feasible P is a sequence
-//! of contiguous **stages**, each pinned to one resource. The solver
-//! enumerates the paper's placement tree ([`tree`]), scores every path
-//! under the pipeline cost model ([`cost`]), filters by the privacy
-//! constraint (C1/C2), and picks the argmin. [`strategies`] packages the
-//! five comparison strategies of Fig. 12.
+//! A *placement path* P assigns every block L_x to a resource of a
+//! [`Topology`]; because the NN is a chain and data flows forward once,
+//! any feasible P is a sequence of contiguous **stages**, each pinned to
+//! one resource. The solver enumerates the paper's placement tree
+//! ([`tree`]) over the topology's resources, scores every path under the
+//! pipeline cost model ([`cost`]), filters by the privacy constraint
+//! (C1/C2), and picks the argmin. [`strategies`] packages the five
+//! comparison strategies of Fig. 12.
+//!
+//! Stages reference resources by [`ResourceId`]; names, hosts, and device
+//! classes resolve through the topology, so the same solver runs on the
+//! paper's two-edge testbed ([`Topology::paper_testbed`]) or any graph
+//! loaded from a JSON file (`serdab plan --topology file.json`).
 
 pub mod cost;
 pub mod strategies;
@@ -14,39 +20,15 @@ pub mod tree;
 
 pub use cost::{CostModel, PathCost};
 pub use strategies::{plan, Strategy};
-pub use tree::{enumerate_paths, TreeStats};
+pub use tree::{enumerate_paths, full_tree, TreeStats};
 
-use crate::profiler::DeviceKind;
-
-/// A concrete compute resource in the resource graph G_R (paper Fig. 3).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct Resource {
-    /// Device class (TEE / GPU / untrusted CPU).
-    pub kind: DeviceKind,
-    /// Which edge device hosts it (0 = E1, 1 = E2, ...). Transfers between
-    /// different hosts pay the WAN cost; intra-host handoffs do not.
-    pub host: usize,
-    /// Display name, e.g. "TEE1".
-    pub name: &'static str,
-}
-
-/// Enclave on edge device E1 — the paper's evaluation resource graph: two
-/// edge devices, one enclave each, plus a GPU on E2 and the untrusted CPUs.
-pub const TEE1: Resource = Resource { kind: DeviceKind::Tee, host: 0, name: "TEE1" };
-/// Enclave on edge device E2.
-pub const TEE2: Resource = Resource { kind: DeviceKind::Tee, host: 1, name: "TEE2" };
-/// Untrusted host CPU of E1.
-pub const E1_CPU: Resource = Resource { kind: DeviceKind::UntrustedCpu, host: 0, name: "E1" };
-/// Untrusted host CPU of E2.
-pub const E2_CPU: Resource = Resource { kind: DeviceKind::UntrustedCpu, host: 1, name: "E2" };
-/// Untrusted GPU on E2.
-pub const E2_GPU: Resource = Resource { kind: DeviceKind::Gpu, host: 1, name: "GPU2" };
+pub use crate::topology::{ResourceId, ResourceSpec, Topology};
 
 /// One pipeline stage: a contiguous block range on one resource.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Stage {
     /// The resource this stage is pinned to.
-    pub resource: Resource,
+    pub resource: ResourceId,
     /// The contiguous block range the stage executes.
     pub range: std::ops::Range<usize>,
 }
@@ -55,8 +37,8 @@ impl Stage {
     /// Canonical display label, e.g. `TEE1[0..4]` — the one convention
     /// shared by [`Placement::describe`], deployment worker names, and
     /// pipeline statistics.
-    pub fn label(&self) -> String {
-        format!("{}[{}..{}]", self.resource.name, self.range.start, self.range.end)
+    pub fn label(&self, topo: &Topology) -> String {
+        format!("{}[{}..{}]", topo.name_of(self.resource), self.range.start, self.range.end)
     }
 }
 
@@ -69,27 +51,36 @@ pub struct Placement {
 
 impl Placement {
     /// The whole model on one resource (the 1-TEE baseline shape).
-    pub fn single(resource: Resource, m: usize) -> Placement {
+    pub fn single(resource: ResourceId, m: usize) -> Placement {
         Placement { stages: vec![Stage { resource, range: 0..m }] }
     }
 
-    /// Validity: stages tile 0..M contiguously, none empty, and no resource
-    /// is used twice (a resource cannot appear in two pipeline positions).
-    pub fn validate(&self, m: usize) -> Result<(), String> {
+    /// Validity: every stage names a resource of `topo`, stages tile 0..M
+    /// contiguously, none empty, and no resource is used twice (a
+    /// resource cannot appear in two pipeline positions).
+    pub fn validate(&self, topo: &Topology, m: usize) -> Result<(), String> {
         if self.stages.is_empty() {
             return Err("no stages".into());
         }
         let mut next = 0usize;
         let mut seen = std::collections::HashSet::new();
         for s in &self.stages {
+            if topo.get(s.resource).is_none() {
+                return Err(format!(
+                    "resource id {} not in topology '{}' ({} resources)",
+                    s.resource.index(),
+                    topo.name,
+                    topo.len()
+                ));
+            }
             if s.range.start != next {
                 return Err(format!("gap/overlap at block {next}"));
             }
             if s.range.is_empty() {
-                return Err(format!("empty stage on {}", s.resource.name));
+                return Err(format!("empty stage on {}", topo.name_of(s.resource)));
             }
-            if !seen.insert(s.resource.name) {
-                return Err(format!("resource {} used twice", s.resource.name));
+            if !seen.insert(s.resource) {
+                return Err(format!("resource {} used twice", topo.name_of(s.resource)));
             }
             next = s.range.end;
         }
@@ -100,22 +91,22 @@ impl Placement {
     }
 
     /// Indices of blocks placed on untrusted resources.
-    pub fn offloaded(&self) -> impl Iterator<Item = usize> + '_ {
+    pub fn offloaded<'a>(&'a self, topo: &'a Topology) -> impl Iterator<Item = usize> + 'a {
         self.stages
             .iter()
-            .filter(|s| !s.resource.kind.trusted())
+            .filter(move |s| !topo.kind_of(s.resource).trusted())
             .flat_map(|s| s.range.clone())
     }
 
     /// Privacy constraint (C1 ∨ C2): every block on an untrusted resource
     /// must have a private input (input resolution ≤ δ).
-    pub fn satisfies_privacy(&self, in_res: &[u32], delta: u32) -> bool {
-        self.offloaded().all(|i| in_res[i] <= delta)
+    pub fn satisfies_privacy(&self, topo: &Topology, in_res: &[u32], delta: u32) -> bool {
+        self.offloaded(topo).all(|i| in_res[i] <= delta)
     }
 
     /// Human-readable form, e.g. `TEE1[0..4] → TEE2[4..8] → GPU2[8..12]`.
-    pub fn describe(&self) -> String {
-        self.stages.iter().map(Stage::label).collect::<Vec<_>>().join(" → ")
+    pub fn describe(&self, topo: &Topology) -> String {
+        self.stages.iter().map(|s| s.label(topo)).collect::<Vec<_>>().join(" → ")
     }
 }
 
@@ -123,7 +114,7 @@ impl Placement {
 mod tests {
     use super::*;
 
-    fn p(stages: Vec<(Resource, std::ops::Range<usize>)>) -> Placement {
+    fn p(stages: Vec<(ResourceId, std::ops::Range<usize>)>) -> Placement {
         Placement {
             stages: stages
                 .into_iter()
@@ -134,29 +125,43 @@ mod tests {
 
     #[test]
     fn valid_three_stage_path() {
-        let pl = p(vec![(TEE1, 0..3), (TEE2, 3..6), (E2_GPU, 6..10)]);
-        assert!(pl.validate(10).is_ok());
-        assert_eq!(pl.describe(), "TEE1[0..3] → TEE2[3..6] → GPU2[6..10]");
+        let topo = Topology::paper_testbed();
+        let t1 = topo.require("TEE1").unwrap();
+        let t2 = topo.require("TEE2").unwrap();
+        let gpu = topo.require("GPU2").unwrap();
+        let pl = p(vec![(t1, 0..3), (t2, 3..6), (gpu, 6..10)]);
+        assert!(pl.validate(&topo, 10).is_ok());
+        assert_eq!(pl.describe(&topo), "TEE1[0..3] → TEE2[3..6] → GPU2[6..10]");
     }
 
     #[test]
-    fn rejects_gap_overlap_empty_and_reuse() {
-        assert!(p(vec![(TEE1, 0..3), (TEE2, 4..10)]).validate(10).is_err());
-        assert!(p(vec![(TEE1, 0..5), (TEE2, 3..10)]).validate(10).is_err());
-        assert!(p(vec![(TEE1, 0..0), (TEE2, 0..10)]).validate(10).is_err());
-        assert!(p(vec![(TEE1, 0..5), (TEE1, 5..10)]).validate(10).is_err());
-        assert!(p(vec![(TEE1, 0..5)]).validate(10).is_err());
+    fn rejects_gap_overlap_empty_reuse_and_foreign_ids() {
+        let topo = Topology::paper_testbed();
+        let t1 = topo.require("TEE1").unwrap();
+        let t2 = topo.require("TEE2").unwrap();
+        assert!(p(vec![(t1, 0..3), (t2, 4..10)]).validate(&topo, 10).is_err());
+        assert!(p(vec![(t1, 0..5), (t2, 3..10)]).validate(&topo, 10).is_err());
+        assert!(p(vec![(t1, 0..0), (t2, 0..10)]).validate(&topo, 10).is_err());
+        assert!(p(vec![(t1, 0..5), (t1, 5..10)]).validate(&topo, 10).is_err());
+        assert!(p(vec![(t1, 0..5)]).validate(&topo, 10).is_err());
+        // an id that exists only in a larger topology
+        let err = p(vec![(ResourceId(99), 0..10)]).validate(&topo, 10).unwrap_err();
+        assert!(err.contains("not in topology"), "{err}");
     }
 
     #[test]
     fn privacy_constraint_checks_untrusted_inputs_only() {
+        let topo = Topology::paper_testbed();
+        let t1 = topo.require("TEE1").unwrap();
+        let t2 = topo.require("TEE2").unwrap();
+        let gpu = topo.require("GPU2").unwrap();
         // resolutions: block inputs 224,56,28,14,7,1
         let in_res = [224, 56, 28, 14, 7, 1];
-        let ok = p(vec![(TEE1, 0..3), (E2_GPU, 3..6)]);
-        assert!(ok.satisfies_privacy(&in_res, 20)); // GPU sees res 14 ✓
-        let bad = p(vec![(TEE1, 0..2), (E2_GPU, 2..6)]);
-        assert!(!bad.satisfies_privacy(&in_res, 20)); // GPU sees res 28 ✗
-        let all_trusted = p(vec![(TEE1, 0..2), (TEE2, 2..6)]);
-        assert!(all_trusted.satisfies_privacy(&in_res, 20)); // C1
+        let ok = p(vec![(t1, 0..3), (gpu, 3..6)]);
+        assert!(ok.satisfies_privacy(&topo, &in_res, 20)); // GPU sees res 14 ✓
+        let bad = p(vec![(t1, 0..2), (gpu, 2..6)]);
+        assert!(!bad.satisfies_privacy(&topo, &in_res, 20)); // GPU sees res 28 ✗
+        let all_trusted = p(vec![(t1, 0..2), (t2, 2..6)]);
+        assert!(all_trusted.satisfies_privacy(&topo, &in_res, 20)); // C1
     }
 }

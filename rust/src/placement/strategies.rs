@@ -1,12 +1,14 @@
 //! The five partitioning strategies compared in the paper's Fig. 12,
 //! plus the generic solver (Step 2 + Step 3 of §V: evaluate every path in
 //! the placement tree, filter by privacy, argmin the chunk completion
-//! time).
+//! time). Each strategy derives its resource chains from the cost model's
+//! [`Topology`], so the same five comparisons run on any resource graph.
 
 use super::cost::{CostModel, PathCost};
-use super::tree::enumerate_paths;
-use super::{Placement, Resource, E1_CPU, E2_CPU, E2_GPU, TEE1, TEE2};
+use super::tree::{enumerate_paths, solver_chains, trusted_spine};
+use super::Placement;
 use crate::model::DELTA_RESOLUTION;
+use crate::topology::{ResourceId, Topology};
 
 /// Fig. 12 strategy set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -16,11 +18,11 @@ pub enum Strategy {
     /// Neurosurgeon-style: minimize single-frame latency (n = 1), ignoring
     /// pipeline parallelism; same resource set as `Proposed`.
     NoPipelining,
-    /// One enclave + the GPU on the other edge (no second TEE available).
+    /// The entry enclave + a GPU (no second TEE available).
     TeeGpu,
-    /// Two enclaves only (no untrusted offload).
+    /// Trusted enclaves only (no untrusted offload).
     TwoTees,
-    /// The paper's approach: all resources (2 TEEs + GPU + CPUs),
+    /// The paper's approach: all resources of the topology,
     /// pipeline-aware chunk-time objective.
     Proposed,
 }
@@ -46,18 +48,27 @@ impl Strategy {
         }
     }
 
-    /// Ordered resource chains this strategy may draw from.
-    fn chains(self) -> Vec<Vec<Resource>> {
+    /// Ordered resource chains this strategy may draw from, derived from
+    /// the topology: `OneTee` pins everything to the entry enclave,
+    /// `TwoTees` walks the trusted spine, `TeeGpu` pairs the entry
+    /// enclave with each GPU, and `NoPipelining`/`Proposed` search the
+    /// full solver family ([`solver_chains`]). Strategies degrade
+    /// gracefully on sparse topologies (no GPU ⇒ `TeeGpu` falls back to
+    /// the entry enclave alone).
+    pub fn chains(self, topo: &Topology) -> Vec<Vec<ResourceId>> {
+        let entry = topo.entry();
         match self {
-            Strategy::OneTee => vec![vec![TEE1]],
-            Strategy::TeeGpu => vec![vec![TEE1, E2_GPU]],
-            Strategy::TwoTees => vec![vec![TEE1, TEE2]],
-            Strategy::NoPipelining | Strategy::Proposed => vec![
-                vec![TEE1, TEE2, E2_GPU],
-                vec![TEE1, TEE2, E2_CPU],
-                vec![TEE1, E2_GPU],
-                vec![TEE1, E1_CPU],
-            ],
+            Strategy::OneTee => vec![vec![entry]],
+            Strategy::TeeGpu => {
+                let gpus = topo.gpus();
+                if gpus.is_empty() {
+                    vec![vec![entry]]
+                } else {
+                    gpus.into_iter().map(|g| vec![entry, g]).collect()
+                }
+            }
+            Strategy::TwoTees => vec![trusted_spine(topo)],
+            Strategy::NoPipelining | Strategy::Proposed => solver_chains(topo),
         }
     }
 }
@@ -75,20 +86,22 @@ pub struct Plan {
     pub examined: usize,
 }
 
-/// Solve one strategy: enumerate its tree, keep privacy-feasible paths,
-/// pick the argmin of the objective (chunk time for pipelined strategies,
-/// single-frame latency for NoPipelining), with `n` the chunk size.
+/// Solve one strategy: enumerate its tree over the model's topology, keep
+/// privacy-feasible paths, pick the argmin of the objective (chunk time
+/// for pipelined strategies, single-frame latency for NoPipelining), with
+/// `n` the chunk size.
 pub fn plan(strategy: Strategy, cm: &CostModel<'_>, n: u64) -> Plan {
     let m = cm.profile.m;
     let in_res = &cm.profile.in_res;
+    let topo = cm.topology();
     let mut best: Option<(f64, Placement, PathCost)> = None;
     let mut examined = 0usize;
 
-    for chain in strategy.chains() {
+    for chain in strategy.chains(topo) {
         for p in enumerate_paths(&chain, m) {
             examined += 1;
-            debug_assert!(p.validate(m).is_ok());
-            if !p.satisfies_privacy(in_res, DELTA_RESOLUTION) {
+            debug_assert!(p.validate(topo, m).is_ok());
+            if !p.satisfies_privacy(topo, in_res, DELTA_RESOLUTION) {
                 continue;
             }
             let cost = cm.cost(&p);
@@ -106,7 +119,7 @@ pub fn plan(strategy: Strategy, cm: &CostModel<'_>, n: u64) -> Plan {
         }
     }
     let (_, placement, cost) =
-        best.expect("at least the all-TEE1 path is always privacy-feasible");
+        best.expect("at least the all-entry-TEE path is always privacy-feasible");
     Plan { strategy, placement, cost, examined }
 }
 
@@ -141,7 +154,7 @@ mod tests {
         for name in MODEL_NAMES {
             let model = man.model(name).unwrap();
             let profile = calibrated_profile(model);
-            f(model, &CostModel::new(&profile));
+            f(model, &CostModel::paper(&profile));
         }
     }
 
@@ -160,10 +173,14 @@ mod tests {
             for s in Strategy::ALL {
                 let p = plan(s, cm, 10_800);
                 assert!(
-                    p.placement.satisfies_privacy(&cm.profile.in_res, DELTA_RESOLUTION),
+                    p.placement.satisfies_privacy(
+                        cm.topology(),
+                        &cm.profile.in_res,
+                        DELTA_RESOLUTION
+                    ),
                     "{:?}: {}",
                     s,
-                    p.placement.describe()
+                    p.placement.describe(cm.topology())
                 );
             }
         });
@@ -213,8 +230,13 @@ mod tests {
             let p = plan(Strategy::TeeGpu, cm, 10_800);
             let crossing = m.privacy_crossing(DELTA_RESOLUTION);
             for s in &p.placement.stages {
-                if s.resource.kind == DeviceKind::Gpu {
-                    assert!(s.range.start >= crossing, "{}: {}", m.name, p.placement.describe());
+                if cm.topology().kind_of(s.resource) == DeviceKind::Gpu {
+                    assert!(
+                        s.range.start >= crossing,
+                        "{}: {}",
+                        m.name,
+                        p.placement.describe(cm.topology())
+                    );
                 }
             }
         });
@@ -239,5 +261,21 @@ mod tests {
             let proposed = table.iter().find(|(s, _, _)| *s == Strategy::Proposed).unwrap();
             assert!(proposed.2 >= 1.0);
         });
+    }
+
+    #[test]
+    fn strategies_degrade_gracefully_without_gpus_or_second_tee() {
+        // a 1-host, 1-TEE topology: every strategy still returns a plan
+        let topo = crate::topology::Topology::builder("solo")
+            .resource("TEE", DeviceKind::Tee, 0)
+            .build()
+            .unwrap();
+        let prof = crate::profiler::ModelProfile::millis_demo();
+        let cm = CostModel::new(&prof, topo);
+        for s in Strategy::ALL {
+            let p = plan(s, &cm, 100);
+            p.placement.validate(cm.topology(), prof.m).unwrap();
+            assert_eq!(p.placement.stages.len(), 1, "{s:?}");
+        }
     }
 }

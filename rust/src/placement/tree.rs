@@ -1,19 +1,23 @@
-//! Placement-tree enumeration (paper §V, Fig. 7).
+//! Placement-tree enumeration (paper §V, Fig. 7), generalized to any
+//! [`Topology`].
 //!
-//! Level 1: processing starts in TEE₁ (trusted source side), which takes
-//! blocks `0..c1` for every cut `c1 ∈ 1..=M` — `deg₁ = M`.
-//! Level 2: the remainder runs on E₁, E₂ (CPU or GPU), or goes to TEE₂ —
-//! either entirely, or TEE₂ takes `c2` blocks and level 3 puts the rest on
-//! E₂/GPU₂ — `deg₂ = M + 1` shapes.
-//! Total paths N = O(M²) for the paper's two-TEE resource graph, and
-//! O(M^R) in general; [`enumerate_paths`] is the generalized recursive
-//! enumerator over an ordered resource list with exactly the same shape.
+//! Level 1: processing starts in the entry enclave (trusted source side),
+//! which takes blocks `0..c1` for every cut `c1 ∈ 1..=M` — `deg₁ = M`.
+//! Level k: the remainder runs on the next resource of the chain — either
+//! entirely, or that resource takes `c_k` blocks and level k+1 places the
+//! rest. Total paths N = O(M²) for the paper's two-TEE resource graph,
+//! and O(M^R) in general; [`enumerate_paths`] is the recursive enumerator
+//! over one ordered resource chain, and [`solver_chains`] derives the
+//! chain family the solver searches from the topology: the trusted spine
+//! (entry enclave, then every other enclave) with an optional terminal
+//! offload to each untrusted resource.
 //!
 //! Enumeration yields *candidate* paths; privacy filtering and cost
 //! scoring happen in the caller (`strategies::plan`), mirroring the
 //! paper's Step 1 (construct) / Step 2 (evaluate) / Step 3 (choose).
 
-use super::{Placement, Resource, Stage};
+use super::{Placement, Stage};
+use crate::topology::{ResourceId, Topology};
 
 /// Statistics of one enumeration (for the algorithm-analysis bench).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,16 +26,17 @@ pub struct TreeStats {
     pub paths: usize,
     /// Number of partitionable blocks M.
     pub m: usize,
-    /// Number of resources in the ordered chain.
+    /// Number of resources in the topology.
     pub resources: usize,
 }
 
-/// Enumerate every placement path over `resources` (in pipeline order:
-/// the first resource hosts block 0). Each resource takes a non-empty
-/// contiguous range; not every resource must be used, but the *first* must
-/// (processing starts there), and relative order is fixed — exactly the
-/// paper's tree where level k decides where the k-th remainder goes.
-pub fn enumerate_paths(resources: &[Resource], m: usize) -> Vec<Placement> {
+/// Enumerate every placement path over the ordered chain `resources`
+/// (in pipeline order: the first resource hosts block 0). Each resource
+/// takes a non-empty contiguous range; not every resource must be used,
+/// but the *first* must (processing starts there), and relative order is
+/// fixed — exactly the paper's tree where level k decides where the k-th
+/// remainder goes.
+pub fn enumerate_paths(resources: &[ResourceId], m: usize) -> Vec<Placement> {
     let mut out = Vec::new();
     let mut stages: Vec<Stage> = Vec::new();
     recurse(resources, 0, m, &mut stages, &mut out);
@@ -39,7 +44,7 @@ pub fn enumerate_paths(resources: &[Resource], m: usize) -> Vec<Placement> {
 }
 
 fn recurse(
-    resources: &[Resource],
+    resources: &[ResourceId],
     start: usize,
     m: usize,
     stages: &mut Vec<Stage>,
@@ -62,50 +67,80 @@ fn recurse(
         stages.pop();
     }
     // head skipped entirely — allowed for every resource except the first
-    // (the paper's level 1 always starts in TEE1)
+    // (the paper's level 1 always starts in the entry enclave)
     if start > 0 {
         recurse(rest, start, m, stages, out);
     }
 }
 
-/// The paper's resource-graph enumeration for Fig. 7: TEE1 → TEE2 → GPU2,
-/// plus the E1/E2-CPU variants. Returns candidates + tree stats.
-pub fn paper_tree(m: usize) -> (Vec<Placement>, TreeStats) {
-    use super::{E1_CPU, E2_CPU, E2_GPU, TEE1, TEE2};
-    // Each ordered resource chain is one family of tree branches; dedupe
-    // identical placements that arise from shared prefixes.
-    let chains: [&[Resource]; 4] = [
-        &[TEE1, TEE2, E2_GPU],
-        &[TEE1, TEE2, E2_CPU],
-        &[TEE1, E2_GPU],
-        &[TEE1, E1_CPU],
-    ];
-    let mut all = Vec::new();
-    for chain in chains {
-        all.extend(enumerate_paths(chain, m));
+/// The trusted spine: the entry enclave first, then every other enclave
+/// in declaration order — the chain `TwoTees` walks, and the prefix of
+/// every full-solver chain ([`solver_chains`]).
+pub fn trusted_spine(topo: &Topology) -> Vec<ResourceId> {
+    let entry = topo.entry();
+    let mut spine: Vec<ResourceId> = vec![entry];
+    spine.extend(topo.tees().into_iter().filter(|&t| t != entry));
+    spine
+}
+
+/// The chain family the full solver searches over `topo`: the trusted
+/// spine (entry enclave first, then every other enclave in declaration
+/// order), both on its own and with each untrusted resource appended as a
+/// terminal offload target. Because non-first chain members may be
+/// skipped during enumeration, this family covers every "trusted prefix,
+/// optional untrusted tail" placement — the shape of the paper's tree —
+/// for arbitrarily many enclaves and offload devices.
+pub fn solver_chains(topo: &Topology) -> Vec<Vec<ResourceId>> {
+    let spine = trusted_spine(topo);
+    let mut out = vec![spine.clone()];
+    for u in topo.untrusted() {
+        let mut chain = spine.clone();
+        chain.push(u);
+        out.push(chain);
     }
-    all.sort_by_key(|p| p.describe());
-    all.dedup_by_key(|p| p.describe());
-    let stats = TreeStats { paths: all.len(), m, resources: 5 };
+    out
+}
+
+/// The full placement tree of a topology: every candidate path of every
+/// solver chain, deduplicated (shared chain prefixes yield identical
+/// placements). Returns candidates + tree stats.
+pub fn full_tree(topo: &Topology, m: usize) -> (Vec<Placement>, TreeStats) {
+    let mut all = Vec::new();
+    for chain in solver_chains(topo) {
+        all.extend(enumerate_paths(&chain, m));
+    }
+    let key = |p: &Placement| {
+        p.stages
+            .iter()
+            .map(|s| (s.resource.index(), s.range.start, s.range.end))
+            .collect::<Vec<_>>()
+    };
+    all.sort_by_key(key);
+    all.dedup_by_key(|p| key(p));
+    let stats = TreeStats { paths: all.len(), m, resources: topo.len() };
     (all, stats)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::placement::{E2_GPU, TEE1, TEE2};
     use crate::util::prop;
+
+    fn ids(topo: &Topology, names: &[&str]) -> Vec<ResourceId> {
+        names.iter().map(|n| topo.require(n).unwrap()).collect()
+    }
 
     #[test]
     fn two_resources_yield_m_plus_cuts() {
         // TEE1 alone (1 path: all blocks) + TEE1/TEE2 cut at 1..m-? :
         // cuts c1 in 1..=m-1 with TEE2 taking the rest, plus all-TEE1
+        let topo = Topology::paper_testbed();
         let m = 6;
-        let paths = enumerate_paths(&[TEE1, TEE2], m);
+        let paths = enumerate_paths(&ids(&topo, &["TEE1", "TEE2"]), m);
         assert_eq!(paths.len(), m); // m-1 split points + 1 unsplit
         for p in &paths {
-            p.validate(m).unwrap();
-            assert_eq!(p.stages[0].resource.name, "TEE1");
+            p.validate(&topo, m).unwrap();
+            assert_eq!(topo.name_of(p.stages[0].resource), "TEE1");
         }
     }
 
@@ -114,8 +149,9 @@ mod tests {
         // chains over (TEE1, TEE2, GPU): full 3-way splits = C(m-1,2),
         // 2-way = 2(m-1)... exact: paths that use TEE1 only: 1; TEE1+TEE2 or
         // TEE1+GPU: 2(m-1); all three: C(m-1,2).
+        let topo = Topology::paper_testbed();
         let m = 8;
-        let paths = enumerate_paths(&[TEE1, TEE2, E2_GPU], m);
+        let paths = enumerate_paths(&ids(&topo, &["TEE1", "TEE2", "GPU2"]), m);
         let expect = 1 + 2 * (m - 1) + (m - 1) * (m - 2) / 2;
         assert_eq!(paths.len(), expect);
     }
@@ -123,8 +159,9 @@ mod tests {
     #[test]
     fn complexity_is_o_m_squared_for_two_tees() {
         // paper: N = O(M²) with R = 2 TEEs
+        let topo = Topology::paper_testbed();
         for m in [4usize, 8, 16, 32] {
-            let (_, stats) = paper_tree(m);
+            let (_, stats) = full_tree(&topo, m);
             assert!(
                 stats.paths <= 2 * m * m,
                 "m={m}: {} paths exceeds 2M²",
@@ -135,24 +172,38 @@ mod tests {
 
     #[test]
     fn every_enumerated_path_is_valid_and_ordered() {
+        let topo = Topology::paper_testbed();
         let m = 9;
-        let (paths, _) = paper_tree(m);
+        let (paths, _) = full_tree(&topo, m);
         for p in &paths {
-            p.validate(m).unwrap();
-            // stages appear in resource-chain order with TEE1 first
-            assert_eq!(p.stages[0].resource.name, "TEE1");
+            p.validate(&topo, m).unwrap();
+            // stages appear in resource-chain order with the entry first
+            assert_eq!(p.stages[0].resource, topo.entry());
+        }
+    }
+
+    #[test]
+    fn solver_chains_start_at_the_entry_enclave() {
+        let topo = Topology::paper_testbed();
+        let chains = solver_chains(&topo);
+        // spine + one chain per untrusted resource (E1, E2, GPU2)
+        assert_eq!(chains.len(), 1 + topo.untrusted().len());
+        for c in &chains {
+            assert_eq!(c[0], topo.entry());
         }
     }
 
     #[test]
     fn prop_enumeration_valid_for_random_m() {
+        let topo = Topology::paper_testbed();
         prop::forall("tree-paths-valid", &prop::usize_in(1, 24), 30, |&m| {
-            let (paths, _) = paper_tree(m);
+            let (paths, _) = full_tree(&topo, m);
             if paths.is_empty() {
                 return Err("no paths".into());
             }
             for p in &paths {
-                p.validate(m).map_err(|e| format!("m={m}: {e} ({})", p.describe()))?;
+                p.validate(&topo, m)
+                    .map_err(|e| format!("m={m}: {e} ({})", p.describe(&topo)))?;
             }
             // the all-in-TEE1 path must always be present (C1 fallback)
             if !paths.iter().any(|p| p.stages.len() == 1) {

@@ -39,7 +39,7 @@ impl DeviceKind {
 }
 
 /// Enclave Page Cache model (the SGX 128 MB limit, §II-A).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EpcModel {
     /// Total protected memory.
     pub epc_bytes: u64,
@@ -141,40 +141,8 @@ impl DeviceParams {
     }
 }
 
-/// Wide-area network between the two edge devices (controlled to 30 Mbps in
-/// the paper's testbed).
-#[derive(Debug, Clone)]
-pub struct NetworkParams {
-    /// Link bandwidth in bits/second.
-    pub bandwidth_bps: f64,
-    /// One-way latency.
-    pub rtt_secs: f64,
-    /// AES-GCM throughput for the boundary tensor (measured class value;
-    /// the live pipeline measures the real thing — see crypto::gcm).
-    pub crypto_bytes_per_sec: f64,
-}
-
-impl Default for NetworkParams {
-    fn default() -> Self {
-        NetworkParams {
-            bandwidth_bps: 30e6, // 30 Mbit/s (paper's controlled WAN)
-            rtt_secs: 10e-3,
-            crypto_bytes_per_sec: 400e6,
-        }
-    }
-}
-
-impl NetworkParams {
-    /// tr(E1 --D--> E2) = D/B (+ fixed latency), paper §IV.
-    pub fn transfer_secs(&self, bytes: u64) -> f64 {
-        bytes as f64 * 8.0 / self.bandwidth_bps + self.rtt_secs
-    }
-
-    /// Encrypt + decrypt cost for a boundary tensor.
-    pub fn crypto_secs(&self, bytes: u64) -> f64 {
-        2.0 * bytes as f64 / self.crypto_bytes_per_sec
-    }
-}
+// Network parameters live on the topology now: per-link bandwidth/latency
+// in `topology::LinkParams`, crypto rate on `Topology` itself.
 
 #[cfg(test)]
 mod tests {
@@ -196,19 +164,4 @@ mod tests {
         assert_eq!(big, (320u64 - 93) << 20);
     }
 
-    #[test]
-    fn transfer_matches_30mbps() {
-        let n = NetworkParams::default();
-        // 3.75 MB at 30 Mbit/s = 1 s (+rtt)
-        let t = n.transfer_secs(3_750_000);
-        assert!((t - 1.01).abs() < 1e-6, "{t}");
-    }
-
-    #[test]
-    fn crypto_secs_well_under_paper_bound() {
-        // paper §VI-D: AES-128 enc+dec < 2.5 ms/frame for boundary tensors
-        let n = NetworkParams::default();
-        // largest boundary tensor ~ 400 KB full-scale
-        assert!(n.crypto_secs(400_000) < 2.5e-3);
-    }
 }

@@ -25,6 +25,13 @@
 //! executable blocks through the active backend
 //! ([`ChainExecutor::measure_blocks`](crate::runtime::ChainExecutor::measure_blocks)),
 //! which the live pipeline's monitor compares against predictions.
+//!
+//! Profiles are keyed by device *class* (TEE / CPU / GPU); per-*resource*
+//! costs — a 4× cloud GPU, an enclave with a different EPC budget — are
+//! expressed by the topology (speed grades and EPC overrides on
+//! [`ResourceSpec`](crate::topology::ResourceSpec)) and applied by
+//! [`Topology::stage_secs`](crate::topology::Topology::stage_secs), which
+//! is what the cost model scores placements with.
 
 pub mod calibrate;
 pub mod devices;
@@ -93,10 +100,18 @@ impl ModelProfile {
 
     /// Extra seconds per frame spent paging EPC for a TEE running `range`.
     pub fn paging_secs(&self, range: std::ops::Range<usize>) -> f64 {
+        self.paging_secs_with(&self.epc, range)
+    }
+
+    /// [`paging_secs`](ModelProfile::paging_secs) under an explicit EPC
+    /// model — the one copy of the working-set formula, shared with
+    /// [`Topology::paging_secs`](crate::topology::Topology::paging_secs)
+    /// (which substitutes a resource's per-enclave EPC override).
+    pub fn paging_secs_with(&self, epc: &EpcModel, range: std::ops::Range<usize>) -> f64 {
         let params: u64 = self.param_bytes[range.clone()].iter().sum();
-        let peak_act: u64 = self.peak_act_bytes[range.clone()].iter().copied().max().unwrap_or(0);
-        let overflow = self.epc.overflow_bytes(params, peak_act);
-        overflow as f64 * self.epc.page_secs_per_byte
+        let peak_act: u64 = self.peak_act_bytes[range].iter().copied().max().unwrap_or(0);
+        let overflow = epc.overflow_bytes(params, peak_act);
+        overflow as f64 * epc.page_secs_per_byte
     }
 
     /// Single-enclave whole-model latency (the paper's 1-TEE baseline).

@@ -62,6 +62,7 @@ use crate::enclave::ServiceStats;
 use crate::net::framing::{read_frame, write_frame, FrameType};
 use crate::placement::cost::PathCost;
 use crate::placement::Placement;
+use crate::topology::Topology;
 
 /// What a pipeline worker stands for, mirroring the DES server kinds:
 /// compute stages alternate with boundary links (crypto + WAN transfer).
@@ -352,13 +353,18 @@ impl Pipeline {
     /// transfer) — the same linearized server chain the DES simulates.
     /// Runs without model artifacts; used to cross-validate the simulator
     /// (`tests/pipeline_vs_sim.rs`).
-    pub fn synthetic(placement: &Placement, cost: &PathCost, cfg: PipelineConfig) -> Pipeline {
+    pub fn synthetic(
+        topo: &Topology,
+        placement: &Placement,
+        cost: &PathCost,
+        cfg: PipelineConfig,
+    ) -> Pipeline {
         let mut p = Pipeline::new(cfg);
         for (i, stage) in placement.stages.iter().enumerate() {
             let delay = Duration::from_secs_f64(cost.stage_secs[i]);
             p.add_stage(StageSpec::from_operator(
                 WorkerKind::Stage,
-                Box::new(crate::dataflow::DelayOperator { label: stage.label(), delay }),
+                Box::new(crate::dataflow::DelayOperator { label: stage.label(topo), delay }),
             ));
             if i < cost.boundary_secs.len() {
                 let (crypto, transfer) = cost.boundary_secs[i];
@@ -779,8 +785,8 @@ mod tests {
 
     #[test]
     fn synthetic_single_stage_costs_what_the_model_says() {
-        use crate::placement::{Placement, TEE1};
         use crate::placement::cost::CostModel;
+        use crate::placement::Placement;
         use crate::profiler::devices::EpcModel;
         use crate::profiler::{DeviceKind, DeviceProfile, ModelProfile};
         let prof = ModelProfile {
@@ -795,10 +801,10 @@ mod tests {
             in_res: vec![224, 7],
             epc: EpcModel::default(),
         };
-        let cm = CostModel::new(&prof);
-        let p = Placement::single(TEE1, 2);
+        let cm = CostModel::paper(&prof);
+        let p = Placement::single(cm.topology().require("TEE1").unwrap(), 2);
         let cost = cm.cost(&p);
-        let pipe = Pipeline::synthetic(&p, &cost, PipelineConfig::default());
+        let pipe = Pipeline::synthetic(cm.topology(), &p, &cost, PipelineConfig::default());
         let n = 20u64;
         let rep = pipe.run(feed(n), |_| {}).unwrap();
         let predicted = cost.chunk_secs(n);

@@ -254,7 +254,7 @@ pub fn simulate(cm: &CostModel<'_>, placement: &Placement, cfg: &SimConfig) -> P
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::placement::{Placement, Stage, E2_GPU, TEE1, TEE2};
+    use crate::placement::{Placement, ResourceId, Stage};
     use crate::profiler::devices::EpcModel;
     use crate::profiler::{DeviceKind, DeviceProfile, ModelProfile};
 
@@ -273,7 +273,11 @@ mod tests {
         }
     }
 
-    fn place(stages: Vec<(crate::placement::Resource, std::ops::Range<usize>)>) -> Placement {
+    fn rid(cm: &CostModel<'_>, name: &str) -> ResourceId {
+        cm.topology().require(name).unwrap()
+    }
+
+    fn place(stages: Vec<(ResourceId, std::ops::Range<usize>)>) -> Placement {
         Placement {
             stages: stages
                 .into_iter()
@@ -285,8 +289,8 @@ mod tests {
     #[test]
     fn single_stage_completion_is_n_times_service() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let p = Placement::single(TEE1, 4);
+        let cm = CostModel::paper(&prof);
+        let p = Placement::single(rid(&cm, "TEE1"), 4);
         let rep = simulate(&cm, &p, &SimConfig { frames: 50, ..Default::default() });
         assert!((rep.completion_secs - 50.0 * 4.0).abs() < 1e-6);
         assert!((rep.utilization[0] - 1.0).abs() < 1e-9);
@@ -295,8 +299,8 @@ mod tests {
     #[test]
     fn des_matches_closed_form_for_two_stages() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let p = place(vec![(TEE1, 0..2), (TEE2, 2..4)]);
+        let cm = CostModel::paper(&prof);
+        let p = place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "TEE2"), 2..4)]);
         let cost = cm.cost(&p);
         let n = 500;
         let rep = simulate(&cm, &p, &SimConfig { frames: n, ..Default::default() });
@@ -308,8 +312,12 @@ mod tests {
     #[test]
     fn des_matches_closed_form_three_stages_with_links() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let p = place(vec![(TEE1, 0..1), (TEE2, 1..3), (E2_GPU, 3..4)]);
+        let cm = CostModel::paper(&prof);
+        let p = place(vec![
+            (rid(&cm, "TEE1"), 0..1),
+            (rid(&cm, "TEE2"), 1..3),
+            (rid(&cm, "GPU2"), 3..4),
+        ]);
         let n = 1000;
         let cost = cm.cost(&p);
         let rep = simulate(&cm, &p, &SimConfig { frames: n, ..Default::default() });
@@ -321,8 +329,8 @@ mod tests {
     #[test]
     fn bottleneck_stage_fully_utilized_others_not() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let p = place(vec![(TEE1, 0..3), (TEE2, 3..4)]); // 3s vs 1s stages
+        let cm = CostModel::paper(&prof);
+        let p = place(vec![(rid(&cm, "TEE1"), 0..3), (rid(&cm, "TEE2"), 3..4)]); // 3s vs 1s stages
         let rep = simulate(&cm, &p, &SimConfig { frames: 200, ..Default::default() });
         assert!(rep.utilization[0] > 0.99, "bottleneck busy");
         // stage 2 (index 2 after link) roughly 1/3 utilized
@@ -332,9 +340,9 @@ mod tests {
     #[test]
     fn queues_respect_capacity_bound() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
+        let cm = CostModel::paper(&prof);
         // fast producer into slow consumer
-        let p = place(vec![(E2_GPU, 0..2), (TEE2, 2..4)]);
+        let p = place(vec![(rid(&cm, "GPU2"), 0..2), (rid(&cm, "TEE2"), 2..4)]);
         let cfg = SimConfig { frames: 300, queue_cap: 4, ..Default::default() };
         let rep = simulate(&cm, &p, &cfg);
         for (i, &mq) in rep.max_queue.iter().enumerate().skip(1) {
@@ -347,8 +355,8 @@ mod tests {
         // arrivals slower than the bottleneck ⇒ no queueing ⇒ per-frame
         // latency ≈ single-frame latency
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let p = place(vec![(TEE1, 0..2), (TEE2, 2..4)]);
+        let cm = CostModel::paper(&prof);
+        let p = place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "TEE2"), 2..4)]);
         let cost = cm.cost(&p);
         let cfg = SimConfig { frames: 100, arrival_secs: cost.period_secs * 1.05, queue_cap: 4 };
         let rep = simulate(&cm, &p, &cfg);
@@ -363,8 +371,8 @@ mod tests {
     #[test]
     fn server_labels_interleave_stages_and_links() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let p = place(vec![(TEE1, 0..2), (TEE2, 2..4)]);
+        let cm = CostModel::paper(&prof);
+        let p = place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "TEE2"), 2..4)]);
         let rep = simulate(&cm, &p, &SimConfig { frames: 10, ..Default::default() });
         assert_eq!(
             rep.servers,
@@ -377,8 +385,8 @@ mod tests {
     #[test]
     fn all_frames_complete_exactly_once() {
         let prof = toy_profile();
-        let cm = CostModel::new(&prof);
-        let p = place(vec![(TEE1, 0..1), (TEE2, 1..4)]);
+        let cm = CostModel::paper(&prof);
+        let p = place(vec![(rid(&cm, "TEE1"), 0..1), (rid(&cm, "TEE2"), 1..4)]);
         let rep = simulate(&cm, &p, &SimConfig { frames: 77, ..Default::default() });
         assert_eq!(rep.latencies.len(), 77);
         assert!(rep.latencies.iter().all(|&l| l > 0.0));

@@ -1,0 +1,961 @@
+//! Data-driven resource topology: the paper's resource graph G_R (§IV,
+//! Fig. 3) as a first-class *value* instead of compile-time constants.
+//!
+//! A [`Topology`] names a set of compute resources (device class, hosting
+//! edge device, optional per-enclave EPC parameters, optional speed
+//! grade), the network links between hosts (bandwidth / latency), the
+//! crypto rate for sealed boundary tensors, and the camera/sink
+//! attachment points. Everything downstream — the placement tree, the
+//! cost model, the discrete-event simulator, and the deployed pipeline —
+//! consumes the graph through this type, so a new evaluation scenario
+//! (an N-device cluster, a GPU-rich cloud, heterogeneous enclaves) is a
+//! **data file**, not a code change:
+//!
+//! ```
+//! use serdab::topology::Topology;
+//!
+//! let topo = Topology::paper_testbed();
+//! assert_eq!(topo.len(), 5);
+//! assert_eq!(topo.name_of(topo.entry()), "TEE1");
+//! // JSON round-trip: the schema `serdab plan --topology file.json` loads
+//! let json = topo.to_json().to_string_pretty();
+//! let back = Topology::from_json(&serdab::util::json::Json::parse(&json).unwrap()).unwrap();
+//! assert_eq!(topo, back);
+//! ```
+//!
+//! Resources are referenced by [`ResourceId`] — a dense index into the
+//! topology — everywhere a placement, simulator server, or deployment
+//! worker needs to say *which* device it means; display names live only
+//! here. [`Topology::paper_testbed`] reproduces the paper's evaluation
+//! graph (two edge devices, one SGX enclave each, a GPU on E2, untrusted
+//! CPUs, a 30 Mbps WAN), byte-identical to the five constants it
+//! replaced (`tests/topology_golden.rs` guards that parity).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::profiler::devices::EpcModel;
+use crate::profiler::{DeviceKind, ModelProfile};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Index of a resource within its [`Topology`] (dense, 0-based).
+///
+/// Placements, simulator servers, and deployment workers all refer to
+/// resources by id; names and device parameters are resolved through the
+/// topology the id indexes into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceId(pub usize);
+
+impl ResourceId {
+    /// The raw index into [`Topology::resources`].
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// One compute resource in the graph: a device class pinned to a host,
+/// with optional per-resource cost overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceSpec {
+    /// Display name, unique within the topology (e.g. `"TEE1"`).
+    pub name: String,
+    /// Device class (TEE / GPU / untrusted CPU).
+    pub kind: DeviceKind,
+    /// Which edge device hosts it (0-based). Transfers between different
+    /// hosts pay the link cost; intra-host handoffs do not.
+    pub host: usize,
+    /// Speed grade relative to the profiled device class (block times are
+    /// divided by this; 1.0 = the profile's reference hardware). Lets one
+    /// topology mix e.g. a weak edge GPU and a fast cloud GPU.
+    pub speed: f64,
+    /// Per-enclave EPC capacity/paging override (TEEs only). `None` uses
+    /// the model profile's EPC parameters.
+    pub epc: Option<EpcModel>,
+}
+
+impl ResourceSpec {
+    /// A resource with default cost parameters (speed 1.0, profile EPC).
+    pub fn new(name: impl Into<String>, kind: DeviceKind, host: usize) -> Self {
+        ResourceSpec { name: name.into(), kind, host, speed: 1.0, epc: None }
+    }
+}
+
+/// Point-to-point network parameters of one host-pair link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkParams {
+    /// Link bandwidth in bits/second.
+    pub bandwidth_bps: f64,
+    /// One-way latency added to every transfer.
+    pub rtt_secs: f64,
+}
+
+impl Default for LinkParams {
+    /// The paper's controlled WAN: 30 Mbit/s, 10 ms latency.
+    fn default() -> Self {
+        LinkParams { bandwidth_bps: 30e6, rtt_secs: 10e-3 }
+    }
+}
+
+impl LinkParams {
+    /// tr(E_a --D--> E_b) = D/B + fixed latency (paper §IV).
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 / self.bandwidth_bps + self.rtt_secs
+    }
+}
+
+/// AES-GCM seal/open throughput used for boundary tensors crossing a
+/// trust boundary (bytes/second; the default matches the measured class
+/// value the paper reports — see `crypto::gcm` for the real thing).
+pub const DEFAULT_CRYPTO_BYTES_PER_SEC: f64 = 400e6;
+
+/// A named resource graph: resources, links, crypto rate, and the
+/// camera/sink attachment points. Construct via [`Topology::builder`],
+/// [`Topology::paper_testbed`], or [`Topology::load`] (JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Topology display name (e.g. `"paper-testbed"`).
+    pub name: String,
+    resources: Vec<ResourceSpec>,
+    /// Link parameters for host pairs without an explicit entry.
+    pub default_link: LinkParams,
+    links: BTreeMap<(usize, usize), LinkParams>,
+    /// Seal+open throughput for boundary tensors (bytes/second).
+    pub crypto_bytes_per_sec: f64,
+    /// Host the camera (frame source) attaches to.
+    pub camera_host: usize,
+    /// Host the result sink attaches to.
+    pub sink_host: usize,
+}
+
+impl Topology {
+    /// Start building a topology with the given name.
+    pub fn builder(name: impl Into<String>) -> TopologyBuilder {
+        TopologyBuilder {
+            name: name.into(),
+            resources: Vec::new(),
+            default_link: LinkParams::default(),
+            links: Vec::new(),
+            crypto_bytes_per_sec: DEFAULT_CRYPTO_BYTES_PER_SEC,
+            camera_host: 0,
+            sink_host: 0,
+        }
+    }
+
+    /// The paper's evaluation testbed: two edge devices, one enclave
+    /// each, a GPU on E2, untrusted CPUs on both, 30 Mbps WAN, camera and
+    /// sink on E1. Reproduces the five-resource graph the solver was
+    /// originally hardcoded to.
+    pub fn paper_testbed() -> Topology {
+        Topology::builder("paper-testbed")
+            .resource("TEE1", DeviceKind::Tee, 0)
+            .resource("TEE2", DeviceKind::Tee, 1)
+            .resource("E1", DeviceKind::UntrustedCpu, 0)
+            .resource("E2", DeviceKind::UntrustedCpu, 1)
+            .resource("GPU2", DeviceKind::Gpu, 1)
+            .camera(0)
+            .sink(0)
+            .build()
+            .expect("paper testbed is a valid topology")
+    }
+
+    // ---- graph accessors -------------------------------------------------
+
+    /// All resources, in declaration order (the order ids index).
+    pub fn resources(&self) -> &[ResourceSpec] {
+        &self.resources
+    }
+
+    /// Number of resources.
+    pub fn len(&self) -> usize {
+        self.resources.len()
+    }
+
+    /// Whether the topology has no resources (never true for a built
+    /// topology — construction requires at least one enclave).
+    pub fn is_empty(&self) -> bool {
+        self.resources.is_empty()
+    }
+
+    /// All resource ids, in declaration order.
+    pub fn ids(&self) -> Vec<ResourceId> {
+        (0..self.resources.len()).map(ResourceId).collect()
+    }
+
+    /// The spec of a resource (panics on an id from another topology).
+    pub fn resource(&self, id: ResourceId) -> &ResourceSpec {
+        &self.resources[id.0]
+    }
+
+    /// The spec of a resource, `None` if the id is out of range.
+    pub fn get(&self, id: ResourceId) -> Option<&ResourceSpec> {
+        self.resources.get(id.0)
+    }
+
+    /// Look up a resource id by name.
+    pub fn id(&self, name: &str) -> Option<ResourceId> {
+        self.resources.iter().position(|r| r.name == name).map(ResourceId)
+    }
+
+    /// Look up a resource id by name, erroring with the available names.
+    pub fn require(&self, name: &str) -> Result<ResourceId> {
+        self.id(name).ok_or_else(|| {
+            anyhow!(
+                "no resource '{name}' in topology '{}' (have: {:?})",
+                self.name,
+                self.resources.iter().map(|r| r.name.as_str()).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Display name of a resource.
+    pub fn name_of(&self, id: ResourceId) -> &str {
+        &self.resources[id.0].name
+    }
+
+    /// Host index of a resource.
+    pub fn host_of(&self, id: ResourceId) -> usize {
+        self.resources[id.0].host
+    }
+
+    /// Device class of a resource.
+    pub fn kind_of(&self, id: ResourceId) -> DeviceKind {
+        self.resources[id.0].kind
+    }
+
+    /// Number of hosts (max host index + 1).
+    pub fn hosts(&self) -> usize {
+        self.resources.iter().map(|r| r.host + 1).max().unwrap_or(0)
+    }
+
+    /// Trusted enclaves, in declaration order.
+    pub fn tees(&self) -> Vec<ResourceId> {
+        self.of_kind(|k| k == DeviceKind::Tee)
+    }
+
+    /// GPUs, in declaration order.
+    pub fn gpus(&self) -> Vec<ResourceId> {
+        self.of_kind(|k| k == DeviceKind::Gpu)
+    }
+
+    /// Untrusted resources (CPUs and GPUs), in declaration order.
+    pub fn untrusted(&self) -> Vec<ResourceId> {
+        self.of_kind(|k| !k.trusted())
+    }
+
+    fn of_kind(&self, pred: impl Fn(DeviceKind) -> bool) -> Vec<ResourceId> {
+        self.resources
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| pred(r.kind))
+            .map(|(i, _)| ResourceId(i))
+            .collect()
+    }
+
+    /// Where processing starts: the first enclave on the camera host, or
+    /// the first enclave overall (the paper's "processing starts in
+    /// TEE₁, the trusted source side"). Valid topologies always have at
+    /// least one TEE, so this never fails.
+    pub fn entry(&self) -> ResourceId {
+        let tees = self.tees();
+        for &t in &tees {
+            if self.host_of(t) == self.camera_host {
+                return t;
+            }
+        }
+        tees[0]
+    }
+
+    /// One-line summary for logs: name, resource/TEE/host counts.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ({} resources, {} TEEs, {} hosts)",
+            self.name,
+            self.len(),
+            self.tees().len(),
+            self.hosts()
+        )
+    }
+
+    // ---- network ---------------------------------------------------------
+
+    /// Link parameters between two hosts (order-insensitive; falls back
+    /// to [`Topology::default_link`] for pairs without an explicit entry).
+    pub fn link(&self, a: usize, b: usize) -> LinkParams {
+        let key = (a.min(b), a.max(b));
+        self.links.get(&key).copied().unwrap_or(self.default_link)
+    }
+
+    /// Set (or override) the link parameters of one host pair.
+    pub fn set_link(&mut self, a: usize, b: usize, params: LinkParams) {
+        self.links.insert((a.min(b), a.max(b)), params);
+    }
+
+    /// Transfer seconds for `bytes` between two hosts (0 for intra-host).
+    pub fn transfer_secs(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        if a == b {
+            0.0
+        } else {
+            self.link(a, b).transfer_secs(bytes)
+        }
+    }
+
+    /// Encrypt + decrypt cost for a boundary tensor crossing a trust
+    /// boundary.
+    pub fn crypto_secs(&self, bytes: u64) -> f64 {
+        2.0 * bytes as f64 / self.crypto_bytes_per_sec
+    }
+
+    // ---- per-resource cost -----------------------------------------------
+
+    /// Execution seconds of a contiguous block `range` on resource `id`
+    /// under `prof`: the profile's per-class block times scaled by the
+    /// resource's speed grade, plus the enclave paging penalty for TEEs
+    /// (using the resource's EPC override when present — how a topology
+    /// expresses heterogeneous enclaves).
+    pub fn stage_secs(
+        &self,
+        prof: &ModelProfile,
+        id: ResourceId,
+        range: std::ops::Range<usize>,
+    ) -> f64 {
+        let spec = &self.resources[id.0];
+        let base: f64 =
+            prof.device(spec.kind).block_secs[range.clone()].iter().sum::<f64>() / spec.speed;
+        match spec.kind {
+            DeviceKind::Tee => base + self.paging_secs(prof, id, range),
+            _ => base,
+        }
+    }
+
+    /// Extra seconds per frame spent paging EPC for enclave `id` running
+    /// `range` (0 for non-TEE resources).
+    pub fn paging_secs(
+        &self,
+        prof: &ModelProfile,
+        id: ResourceId,
+        range: std::ops::Range<usize>,
+    ) -> f64 {
+        let spec = &self.resources[id.0];
+        if spec.kind != DeviceKind::Tee {
+            return 0.0;
+        }
+        prof.paging_secs_with(spec.epc.as_ref().unwrap_or(&prof.epc), range)
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    /// Serialize to the topology JSON schema (see DESIGN.md §12).
+    pub fn to_json(&self) -> Json {
+        let resources = self
+            .resources
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("name", s(r.name.clone())),
+                    ("kind", s(r.kind.name())),
+                    ("host", num(r.host as f64)),
+                ];
+                if (r.speed - 1.0).abs() > 1e-12 {
+                    fields.push(("speed", num(r.speed)));
+                }
+                if let Some(e) = &r.epc {
+                    fields.push(("epc", epc_to_json(e)));
+                }
+                obj(fields)
+            })
+            .collect();
+        let links = self
+            .links
+            .iter()
+            .map(|(&(a, b), l)| {
+                obj(vec![
+                    ("a", num(a as f64)),
+                    ("b", num(b as f64)),
+                    ("bandwidth_bps", num(l.bandwidth_bps)),
+                    ("rtt_secs", num(l.rtt_secs)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("name", s(self.name.clone())),
+            ("camera_host", num(self.camera_host as f64)),
+            ("sink_host", num(self.sink_host as f64)),
+            ("crypto_bytes_per_sec", num(self.crypto_bytes_per_sec)),
+            (
+                "default_link",
+                obj(vec![
+                    ("bandwidth_bps", num(self.default_link.bandwidth_bps)),
+                    ("rtt_secs", num(self.default_link.rtt_secs)),
+                ]),
+            ),
+            ("resources", arr(resources)),
+            ("links", arr(links)),
+        ])
+    }
+
+    /// Parse the topology JSON schema. Link endpoints (`a`/`b`) and the
+    /// camera/sink attachment points may be host indices or resource
+    /// names (resolved to the resource's host). Rejects malformed graphs:
+    /// missing fields, duplicate resource names, unknown hosts/resources,
+    /// no enclave, non-positive rates.
+    pub fn from_json(j: &Json) -> Result<Topology> {
+        let name = match j.get("name") {
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow!("topology 'name' must be a string"))?
+                .to_string(),
+            None => "topology".to_string(),
+        };
+        for key in j.as_obj().map(|m| m.keys()).into_iter().flatten() {
+            match key.as_str() {
+                "name" | "camera" | "camera_host" | "sink" | "sink_host"
+                | "crypto_bytes_per_sec" | "default_link" | "resources" | "links" => {}
+                other => bail!("unknown topology key '{other}'"),
+            }
+        }
+        let mut b = Topology::builder(name);
+
+        let mut default_link = LinkParams::default();
+        if let Some(dl) = j.get("default_link") {
+            default_link = parse_link_params(dl, LinkParams::default(), false)
+                .context("default_link")?;
+            b = b.default_link(default_link);
+        }
+        if let Some(c) = j.get("crypto_bytes_per_sec") {
+            b = b.crypto_rate(
+                c.as_f64().ok_or_else(|| anyhow!("crypto_bytes_per_sec must be a number"))?,
+            );
+        }
+
+        let rs = j
+            .req("resources")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'resources' must be an array"))?;
+        let mut specs: Vec<ResourceSpec> = Vec::new();
+        for (i, r) in rs.iter().enumerate() {
+            let spec = parse_resource(r).with_context(|| format!("resource [{i}]"))?;
+            specs.push(spec.clone());
+            b = b.resource_spec(spec);
+        }
+
+        // camera/sink: host index, or a resource name resolved to its host
+        let host_ref = |v: &Json, what: &str| -> Result<usize> {
+            if let Some(h) = v.as_u64() {
+                return Ok(h as usize);
+            }
+            if let Some(n) = v.as_str() {
+                return match specs.iter().find(|r| r.name == n) {
+                    Some(r) => Ok(r.host),
+                    None => bail!("{what} refers to unknown resource '{n}'"),
+                };
+            }
+            bail!("{what} must be a host index or a resource name")
+        };
+        if let Some(v) = j.get("camera_host").or_else(|| j.get("camera")) {
+            b = b.camera(host_ref(v, "camera attachment")?);
+        }
+        if let Some(v) = j.get("sink_host").or_else(|| j.get("sink")) {
+            b = b.sink(host_ref(v, "sink attachment")?);
+        }
+
+        if let Some(ls) = j.get("links") {
+            let ls = ls.as_arr().ok_or_else(|| anyhow!("'links' must be an array"))?;
+            for (i, l) in ls.iter().enumerate() {
+                let a = host_ref(l.req("a")?, "link endpoint 'a'")
+                    .with_context(|| format!("link [{i}]"))?;
+                let bb = host_ref(l.req("b")?, "link endpoint 'b'")
+                    .with_context(|| format!("link [{i}]"))?;
+                // unspecified link fields inherit the file's default link,
+                // not the hardcoded paper constants
+                let params = parse_link_params(l, default_link, true)
+                    .with_context(|| format!("link [{i}]"))?;
+                b = b.link(a, bb, params);
+            }
+        }
+        b.build()
+    }
+
+    /// Load a topology from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Topology> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading topology file {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Topology::from_json(&j).with_context(|| format!("topology file {}", path.display()))
+    }
+
+    /// Write the topology to a JSON file (pretty-printed).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+            .with_context(|| format!("writing topology file {}", path.display()))
+    }
+}
+
+fn parse_resource(r: &Json) -> Result<ResourceSpec> {
+    let o = r.as_obj().ok_or_else(|| anyhow!("resource must be an object"))?;
+    for key in o.keys() {
+        match key.as_str() {
+            "name" | "kind" | "host" | "speed" | "epc" => {}
+            other => bail!("unknown resource key '{other}' (name|kind|host|speed|epc)"),
+        }
+    }
+    let name = r
+        .req("name")?
+        .as_str()
+        .ok_or_else(|| anyhow!("resource 'name' must be a string"))?
+        .to_string();
+    let kind_txt = r
+        .req("kind")?
+        .as_str()
+        .ok_or_else(|| anyhow!("resource 'kind' must be a string"))?;
+    let kind = match kind_txt {
+        "tee" => DeviceKind::Tee,
+        "cpu" => DeviceKind::UntrustedCpu,
+        "gpu" => DeviceKind::Gpu,
+        other => bail!("unknown device kind '{other}' (tee|cpu|gpu)"),
+    };
+    let host = r
+        .req("host")?
+        .as_u64()
+        .ok_or_else(|| anyhow!("resource 'host' must be a non-negative integer"))?
+        as usize;
+    let mut spec = ResourceSpec::new(name, kind, host);
+    if let Some(v) = r.get("speed") {
+        spec.speed = v.as_f64().ok_or_else(|| anyhow!("resource 'speed' must be a number"))?;
+    }
+    if let Some(e) = r.get("epc") {
+        spec.epc = Some(epc_from_json(e)?);
+    }
+    Ok(spec)
+}
+
+/// Accepts raw units (`bandwidth_bps` / `rtt_secs` — what [`Topology::to_json`]
+/// emits, exact round-trip) or human units (`bandwidth_mbps` / `rtt_ms` —
+/// convenient in hand-written files). Fields left unspecified keep `base`;
+/// unknown keys are rejected so a typo'd field cannot silently fall back.
+fn parse_link_params(j: &Json, base: LinkParams, allow_endpoints: bool) -> Result<LinkParams> {
+    let o = j.as_obj().ok_or_else(|| anyhow!("link parameters must be an object"))?;
+    for key in o.keys() {
+        match key.as_str() {
+            "bandwidth_bps" | "bandwidth_mbps" | "rtt_secs" | "rtt_ms" => {}
+            "a" | "b" if allow_endpoints => {}
+            other => bail!(
+                "unknown link key '{other}' (bandwidth_bps|bandwidth_mbps|rtt_secs|rtt_ms)"
+            ),
+        }
+    }
+    let mut p = base;
+    if let Some(v) = j.get("bandwidth_bps") {
+        p.bandwidth_bps = v.as_f64().ok_or_else(|| anyhow!("'bandwidth_bps' must be a number"))?;
+    } else if let Some(v) = j.get("bandwidth_mbps") {
+        p.bandwidth_bps =
+            v.as_f64().ok_or_else(|| anyhow!("'bandwidth_mbps' must be a number"))? * 1e6;
+    }
+    if let Some(v) = j.get("rtt_secs") {
+        p.rtt_secs = v.as_f64().ok_or_else(|| anyhow!("'rtt_secs' must be a number"))?;
+    } else if let Some(v) = j.get("rtt_ms") {
+        p.rtt_secs = v.as_f64().ok_or_else(|| anyhow!("'rtt_ms' must be a number"))? * 1e-3;
+    }
+    Ok(p)
+}
+
+fn epc_to_json(e: &EpcModel) -> Json {
+    obj(vec![
+        ("epc_bytes", num(e.epc_bytes as f64)),
+        ("runtime_bytes", num(e.runtime_bytes as f64)),
+        ("act_factor", num(e.act_factor)),
+        ("page_secs_per_byte", num(e.page_secs_per_byte)),
+    ])
+}
+
+fn epc_from_json(j: &Json) -> Result<EpcModel> {
+    let o = j.as_obj().ok_or_else(|| anyhow!("'epc' must be an object"))?;
+    for key in o.keys() {
+        match key.as_str() {
+            "epc_bytes" | "runtime_bytes" | "act_factor" | "page_secs_per_byte" => {}
+            other => bail!(
+                "unknown epc key '{other}' (epc_bytes|runtime_bytes|act_factor|page_secs_per_byte)"
+            ),
+        }
+    }
+    let mut e = EpcModel::default();
+    if let Some(v) = j.get("epc_bytes") {
+        e.epc_bytes = v.as_u64().ok_or_else(|| anyhow!("'epc_bytes' must be an integer"))?;
+    }
+    if let Some(v) = j.get("runtime_bytes") {
+        e.runtime_bytes =
+            v.as_u64().ok_or_else(|| anyhow!("'runtime_bytes' must be an integer"))?;
+    }
+    if let Some(v) = j.get("act_factor") {
+        e.act_factor = v.as_f64().ok_or_else(|| anyhow!("'act_factor' must be a number"))?;
+    }
+    if let Some(v) = j.get("page_secs_per_byte") {
+        e.page_secs_per_byte =
+            v.as_f64().ok_or_else(|| anyhow!("'page_secs_per_byte' must be a number"))?;
+    }
+    Ok(e)
+}
+
+/// Builder for [`Topology`] — chain resource/link/attachment calls, then
+/// [`TopologyBuilder::build`] validates the whole graph.
+pub struct TopologyBuilder {
+    name: String,
+    resources: Vec<ResourceSpec>,
+    default_link: LinkParams,
+    links: Vec<(usize, usize, LinkParams)>,
+    crypto_bytes_per_sec: f64,
+    camera_host: usize,
+    sink_host: usize,
+}
+
+impl TopologyBuilder {
+    /// Add a resource with default cost parameters.
+    pub fn resource(self, name: impl Into<String>, kind: DeviceKind, host: usize) -> Self {
+        self.resource_spec(ResourceSpec::new(name, kind, host))
+    }
+
+    /// Add a fully-specified resource (speed grade / EPC override).
+    pub fn resource_spec(mut self, spec: ResourceSpec) -> Self {
+        self.resources.push(spec);
+        self
+    }
+
+    /// Set explicit link parameters between two hosts.
+    pub fn link(mut self, a: usize, b: usize, params: LinkParams) -> Self {
+        self.links.push((a, b, params));
+        self
+    }
+
+    /// Set the fallback link parameters for host pairs without an entry.
+    pub fn default_link(mut self, params: LinkParams) -> Self {
+        self.default_link = params;
+        self
+    }
+
+    /// Set the seal+open crypto throughput (bytes/second).
+    pub fn crypto_rate(mut self, bytes_per_sec: f64) -> Self {
+        self.crypto_bytes_per_sec = bytes_per_sec;
+        self
+    }
+
+    /// Attach the camera (frame source) to a host.
+    pub fn camera(mut self, host: usize) -> Self {
+        self.camera_host = host;
+        self
+    }
+
+    /// Attach the result sink to a host.
+    pub fn sink(mut self, host: usize) -> Self {
+        self.sink_host = host;
+        self
+    }
+
+    /// Validate and build the topology.
+    ///
+    /// Rejected graphs: no resources, duplicate/empty resource names, no
+    /// enclave (processing must be able to start in a TEE), non-positive
+    /// speed/bandwidth/crypto rates, camera/sink/link endpoints naming a
+    /// host no resource lives on.
+    pub fn build(self) -> Result<Topology> {
+        if self.resources.is_empty() {
+            bail!("topology '{}' has no resources", self.name);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &self.resources {
+            if r.name.is_empty() {
+                bail!("topology '{}' has a resource with an empty name", self.name);
+            }
+            if !seen.insert(r.name.clone()) {
+                bail!("duplicate resource name '{}'", r.name);
+            }
+            if !(r.speed.is_finite() && r.speed > 0.0) {
+                bail!("resource '{}' has non-positive speed {}", r.name, r.speed);
+            }
+        }
+        if !self.resources.iter().any(|r| r.kind == DeviceKind::Tee) {
+            bail!("topology '{}' has no enclave (need at least one tee resource)", self.name);
+        }
+        // attachment points and links must name hosts some resource lives
+        // on — a host index inside a numbering gap is almost certainly a
+        // typo, so reject it instead of planning against a ghost host
+        let occupied: std::collections::BTreeSet<usize> =
+            self.resources.iter().map(|r| r.host).collect();
+        if !occupied.contains(&self.camera_host) {
+            bail!("camera host {} does not exist (no resource lives there)", self.camera_host);
+        }
+        if !occupied.contains(&self.sink_host) {
+            bail!("sink host {} does not exist (no resource lives there)", self.sink_host);
+        }
+        if !(self.crypto_bytes_per_sec.is_finite() && self.crypto_bytes_per_sec > 0.0) {
+            bail!("crypto_bytes_per_sec must be positive");
+        }
+        let check_link = |p: &LinkParams| -> Result<()> {
+            if !(p.bandwidth_bps.is_finite() && p.bandwidth_bps > 0.0) {
+                bail!("link bandwidth must be positive");
+            }
+            if !(p.rtt_secs.is_finite() && p.rtt_secs >= 0.0) {
+                bail!("link rtt must be non-negative");
+            }
+            Ok(())
+        };
+        check_link(&self.default_link)?;
+        let mut links = BTreeMap::new();
+        for (a, b, p) in self.links {
+            if !occupied.contains(&a) || !occupied.contains(&b) {
+                bail!("link ({a}, {b}) references a host that does not exist");
+            }
+            if a == b {
+                bail!("link ({a}, {b}) connects a host to itself");
+            }
+            check_link(&p)?;
+            links.insert((a.min(b), a.max(b)), p);
+        }
+        Ok(Topology {
+            name: self.name,
+            resources: self.resources,
+            default_link: self.default_link,
+            links,
+            crypto_bytes_per_sec: self.crypto_bytes_per_sec,
+            camera_host: self.camera_host,
+            sink_host: self.sink_host,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_matches_seed_graph() {
+        let t = Topology::paper_testbed();
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.hosts(), 2);
+        let names: Vec<&str> = t.resources().iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, ["TEE1", "TEE2", "E1", "E2", "GPU2"]);
+        assert_eq!(t.tees().len(), 2);
+        assert_eq!(t.gpus().len(), 1);
+        assert_eq!(t.untrusted().len(), 3);
+        assert_eq!(t.name_of(t.entry()), "TEE1");
+        assert_eq!(t.host_of(t.require("GPU2").unwrap()), 1);
+        assert_eq!(t.kind_of(t.require("E2").unwrap()), DeviceKind::UntrustedCpu);
+    }
+
+    #[test]
+    fn link_lookup_is_symmetric_with_default_fallback() {
+        let mut t = Topology::paper_testbed();
+        assert_eq!(t.link(0, 1), LinkParams::default());
+        t.set_link(1, 0, LinkParams { bandwidth_bps: 5e6, rtt_secs: 0.02 });
+        assert_eq!(t.link(0, 1).bandwidth_bps, 5e6);
+        assert_eq!(t.link(1, 0).bandwidth_bps, 5e6);
+        // intra-host transfers are free, cross-host pay bandwidth + rtt
+        assert_eq!(t.transfer_secs(1, 1, 1_000_000), 0.0);
+        let tr = t.transfer_secs(0, 1, 5_000_000);
+        assert!((tr - (5_000_000.0 * 8.0 / 5e6 + 0.02)).abs() < 1e-9, "{tr}");
+    }
+
+    #[test]
+    fn transfer_matches_paper_30mbps() {
+        let t = Topology::paper_testbed();
+        // 3.75 MB at 30 Mbit/s = 1 s (+10 ms latency)
+        let tr = t.transfer_secs(0, 1, 3_750_000);
+        assert!((tr - 1.01).abs() < 1e-6, "{tr}");
+    }
+
+    #[test]
+    fn crypto_secs_well_under_paper_bound() {
+        // paper §VI-D: AES-128 enc+dec < 2.5 ms/frame for boundary tensors
+        let t = Topology::paper_testbed();
+        assert!(t.crypto_secs(400_000) < 2.5e-3);
+    }
+
+    #[test]
+    fn stage_secs_applies_speed_and_epc_override() {
+        let prof = ModelProfile::millis_demo();
+        let base = Topology::paper_testbed();
+        let tee = base.require("TEE1").unwrap();
+        let gpu = base.require("GPU2").unwrap();
+        let t_tee = base.stage_secs(&prof, tee, 0..3);
+        let t_gpu = base.stage_secs(&prof, gpu, 0..3);
+        assert!((t_tee - 27e-3).abs() < 1e-12, "{t_tee}");
+        assert!((t_gpu - 6e-3).abs() < 1e-12, "{t_gpu}");
+
+        // a 2x-speed GPU halves the stage time
+        let mut fast = ResourceSpec::new("GPUX", DeviceKind::Gpu, 1);
+        fast.speed = 2.0;
+        let t2 = Topology::builder("x")
+            .resource("TEE1", DeviceKind::Tee, 0)
+            .resource_spec(fast)
+            .build()
+            .unwrap();
+        let gx = t2.require("GPUX").unwrap();
+        assert!((t2.stage_secs(&prof, gx, 0..3) - 3e-3).abs() < 1e-12);
+
+        // a tiny per-enclave EPC forces paging where the default does not
+        let mut small = ResourceSpec::new("TEEX", DeviceKind::Tee, 0);
+        small.epc = Some(EpcModel {
+            epc_bytes: 1 << 20,
+            runtime_bytes: 1 << 20,
+            act_factor: 1.0,
+            page_secs_per_byte: 1e-6,
+        });
+        let t3 = Topology::builder("y").resource_spec(small).build().unwrap();
+        let tx = t3.require("TEEX").unwrap();
+        let mut prof2 = prof.clone();
+        prof2.param_bytes = vec![1 << 20; 6];
+        assert!(t3.paging_secs(&prof2, tx, 0..3) > 0.0);
+        assert_eq!(base.paging_secs(&prof2, gpu, 0..3), 0.0);
+    }
+
+    #[test]
+    fn builder_rejects_malformed_graphs() {
+        let e = Topology::builder("t").build().unwrap_err();
+        assert!(e.to_string().contains("no resources"), "{e}");
+
+        let e = Topology::builder("t")
+            .resource("A", DeviceKind::Tee, 0)
+            .resource("A", DeviceKind::Gpu, 0)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("duplicate resource name 'A'"), "{e}");
+
+        let e = Topology::builder("t")
+            .resource("GPU", DeviceKind::Gpu, 0)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("no enclave"), "{e}");
+
+        let e = Topology::builder("t")
+            .resource("T", DeviceKind::Tee, 0)
+            .camera(3)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("camera host"), "{e}");
+
+        let e = Topology::builder("t")
+            .resource("T", DeviceKind::Tee, 0)
+            .resource("U", DeviceKind::Tee, 1)
+            .link(0, 7, LinkParams::default())
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("does not exist"), "{e}");
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let mut custom = Topology::builder("rt")
+            .resource("TEE1", DeviceKind::Tee, 0)
+            .resource("TEE2", DeviceKind::Tee, 1)
+            .resource("GPU", DeviceKind::Gpu, 1)
+            .link(0, 1, LinkParams { bandwidth_bps: 12.5e6, rtt_secs: 3e-3 })
+            .crypto_rate(123e6)
+            .camera(0)
+            .sink(1)
+            .build()
+            .unwrap();
+        custom.default_link = LinkParams { bandwidth_bps: 1e9, rtt_secs: 1e-4 };
+        for topo in [Topology::paper_testbed(), custom] {
+            let text = topo.to_json().to_string_pretty();
+            let back = Topology::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(topo, back, "round trip changed the topology:\n{text}");
+        }
+    }
+
+    #[test]
+    fn json_resolves_names_and_rejects_unknowns() {
+        // camera/link endpoints as resource names
+        let j = Json::parse(
+            r#"{
+              "name": "named",
+              "resources": [
+                {"name": "T1", "kind": "tee", "host": 0},
+                {"name": "G", "kind": "gpu", "host": 1}
+              ],
+              "camera": "T1",
+              "links": [{"a": "T1", "b": "G", "bandwidth_mbps": 100, "rtt_ms": 1}]
+            }"#,
+        )
+        .unwrap();
+        let t = Topology::from_json(&j).unwrap();
+        assert_eq!(t.camera_host, 0);
+        assert!((t.link(0, 1).bandwidth_bps - 100e6).abs() < 1e-6);
+
+        // link to a resource that does not exist
+        let j = Json::parse(
+            r#"{
+              "resources": [{"name": "T1", "kind": "tee", "host": 0}],
+              "links": [{"a": "T1", "b": "NOPE"}]
+            }"#,
+        )
+        .unwrap();
+        let e = Topology::from_json(&j).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown resource 'NOPE'"), "{e:#}");
+
+        // missing host
+        let j = Json::parse(r#"{"resources": [{"name": "T1", "kind": "tee"}]}"#).unwrap();
+        let e = Topology::from_json(&j).unwrap_err();
+        assert!(format!("{e:#}").contains("missing json key 'host'"), "{e:#}");
+
+        // duplicate resource name
+        let j = Json::parse(
+            r#"{"resources": [
+                 {"name": "T1", "kind": "tee", "host": 0},
+                 {"name": "T1", "kind": "tee", "host": 1}
+               ]}"#,
+        )
+        .unwrap();
+        let e = Topology::from_json(&j).unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate resource name"), "{e:#}");
+
+        // unknown kind
+        let j =
+            Json::parse(r#"{"resources": [{"name": "Q", "kind": "quantum", "host": 0}]}"#).unwrap();
+        assert!(Topology::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn json_rejects_typoed_keys_and_inherits_file_default_link() {
+        // a typo'd link field must not silently fall back to defaults
+        let j = Json::parse(
+            r#"{
+              "resources": [
+                {"name": "T1", "kind": "tee", "host": 0},
+                {"name": "T2", "kind": "tee", "host": 1}
+              ],
+              "links": [{"a": 0, "b": 1, "bandwith_mbps": 100}]
+            }"#,
+        )
+        .unwrap();
+        let e = Topology::from_json(&j).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown link key 'bandwith_mbps'"), "{e:#}");
+
+        // unknown top-level / resource keys are rejected too
+        let j = Json::parse(r#"{"resources": [], "topologee": 1}"#).unwrap();
+        assert!(format!("{:#}", Topology::from_json(&j).unwrap_err()).contains("topologee"));
+        let j = Json::parse(
+            r#"{"resources": [{"name": "T", "kind": "tee", "host": 0, "hosty": 2}]}"#,
+        )
+        .unwrap();
+        assert!(format!("{:#}", Topology::from_json(&j).unwrap_err()).contains("hosty"));
+
+        // fields a link leaves unspecified inherit the file's default_link
+        let j = Json::parse(
+            r#"{
+              "resources": [
+                {"name": "T1", "kind": "tee", "host": 0},
+                {"name": "T2", "kind": "tee", "host": 1}
+              ],
+              "default_link": {"bandwidth_mbps": 50, "rtt_ms": 5},
+              "links": [{"a": 0, "b": 1, "bandwidth_mbps": 100}]
+            }"#,
+        )
+        .unwrap();
+        let t = Topology::from_json(&j).unwrap();
+        assert!((t.link(0, 1).bandwidth_bps - 100e6).abs() < 1e-6);
+        assert!((t.link(0, 1).rtt_secs - 5e-3).abs() < 1e-12, "rtt inherits default_link");
+    }
+}

@@ -111,6 +111,11 @@ impl Command {
                     };
                     args.values.insert(key, val);
                 }
+            } else if looks_like_option(tok) {
+                // a single-dash token that is not a declared option: reject
+                // it loudly instead of letting a typo'd `-frames 10` slip
+                // through as two positionals
+                return Err(format!("unknown option {tok}\n\n{}", self.usage()));
             } else {
                 args.positional.push(tok.clone());
             }
@@ -130,6 +135,15 @@ impl Command {
             }
         }
         Ok(args)
+    }
+}
+
+/// A token that starts with `-` and is not a negative number is an
+/// (unknown) option, not a positional.
+fn looks_like_option(tok: &str) -> bool {
+    match tok.strip_prefix('-') {
+        Some(rest) => !rest.is_empty() && !rest.starts_with(|c: char| c.is_ascii_digit()),
+        None => false,
     }
 }
 
@@ -213,5 +227,37 @@ mod tests {
     #[test]
     fn flag_with_value_rejected() {
         assert!(cmd().parse(&sv(&["--verbose=1", "--frames", "2"])).is_err());
+    }
+
+    #[test]
+    fn single_dash_unknowns_no_longer_slip_through_as_positionals() {
+        let e = cmd().parse(&sv(&["-frames", "10"])).unwrap_err();
+        assert!(e.contains("unknown option -frames"), "{e}");
+        let e = cmd().parse(&sv(&["--frames", "2", "-x"])).unwrap_err();
+        assert!(e.contains("unknown option -x"), "{e}");
+    }
+
+    #[test]
+    fn negative_numbers_and_bare_dash_are_positionals() {
+        let a = cmd().parse(&sv(&["--frames", "2", "-5", "-1.5", "-"])).unwrap();
+        assert_eq!(a.positional, vec!["-5", "-1.5", "-"]);
+    }
+
+    #[test]
+    fn equals_form_with_unknown_key_errors() {
+        let e = cmd().parse(&sv(&["--nope=3", "--frames", "2"])).unwrap_err();
+        assert!(e.contains("unknown option --nope"), "{e}");
+    }
+
+    #[test]
+    fn equals_form_keeps_value_with_equals_inside() {
+        let a = cmd().parse(&sv(&["--frames", "2", "--model=a=b"])).unwrap();
+        assert_eq!(a.get("model"), "a=b");
+    }
+
+    #[test]
+    fn missing_value_at_end_errors() {
+        let e = cmd().parse(&sv(&["--frames"])).unwrap_err();
+        assert!(e.contains("requires a value"), "{e}");
     }
 }

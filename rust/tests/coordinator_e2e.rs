@@ -6,7 +6,7 @@ use serdab::coordinator::{Deployment, ResourceManager};
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, Strategy};
-use serdab::placement::{Placement, Stage, TEE1, TEE2};
+use serdab::placement::{Placement, Stage};
 use serdab::profiler::calibrated_profile;
 use serdab::runtime::pipeline::PipelineConfig;
 use serdab::runtime::{default_backend, ChainExecutor};
@@ -26,7 +26,7 @@ fn deployed_pipeline_matches_single_chain_numerics() {
     let model = "squeezenet";
     let info = man.model(model).unwrap();
     let profile = calibrated_profile(info);
-    let cm = CostModel::new(&profile);
+    let cm = CostModel::paper(&profile);
     let p = plan(Strategy::TwoTees, &cm, 4);
 
     let rm = ResourceManager::paper_testbed();
@@ -58,14 +58,16 @@ fn tcp_bridged_deployment_matches_in_process_numerics() {
     let man = load_manifest(default_artifacts_dir()).unwrap();
     let model = "squeezenet";
     let info = man.model(model).unwrap();
+    let rm = ResourceManager::paper_testbed();
+    let tee1 = rm.topology().require("TEE1").unwrap();
+    let tee2 = rm.topology().require("TEE2").unwrap();
     let cut = info.m() / 2;
     let placement = Placement {
         stages: vec![
-            Stage { resource: TEE1, range: 0..cut },
-            Stage { resource: TEE2, range: cut..info.m() },
+            Stage { resource: tee1, range: 0..cut },
+            Stage { resource: tee2, range: cut..info.m() },
         ],
     };
-    let rm = ResourceManager::paper_testbed();
     let frames: Vec<_> = {
         let mut cam = VideoSource::new(SceneKind::Harbour, 21);
         (0..4).map(|_| cam.next_frame()).collect()
@@ -98,11 +100,13 @@ fn deploy_fails_for_unregistered_device() {
     let man = load_manifest(default_artifacts_dir()).unwrap();
     let mut rm = ResourceManager::paper_testbed();
     rm.deregister("TEE2").unwrap();
+    let tee1 = rm.topology().require("TEE1").unwrap();
+    let tee2 = rm.topology().require("TEE2").unwrap();
     let info = man.model("squeezenet").unwrap();
     let placement = Placement {
         stages: vec![
-            Stage { resource: TEE1, range: 0..5 },
-            Stage { resource: TEE2, range: 5..info.m() },
+            Stage { resource: tee1, range: 0..5 },
+            Stage { resource: tee2, range: 5..info.m() },
         ],
     };
     let err = Deployment::deploy(&man, &rm, "squeezenet", &placement, None, 4);
@@ -116,11 +120,13 @@ fn deploy_rejects_invalid_placement() {
     }
     let man = load_manifest(default_artifacts_dir()).unwrap();
     let rm = ResourceManager::paper_testbed();
+    let tee1 = rm.topology().require("TEE1").unwrap();
+    let tee2 = rm.topology().require("TEE2").unwrap();
     // gap in coverage
     let placement = Placement {
         stages: vec![
-            Stage { resource: TEE1, range: 0..2 },
-            Stage { resource: TEE2, range: 3..man.model("squeezenet").unwrap().m() },
+            Stage { resource: tee1, range: 0..2 },
+            Stage { resource: tee2, range: 3..man.model("squeezenet").unwrap().m() },
         ],
     };
     assert!(Deployment::deploy(&man, &rm, "squeezenet", &placement, None, 4).is_err());
@@ -142,15 +148,17 @@ fn pipelined_two_stage_not_slower_than_single_stage() {
         (0..8).map(|_| cam.next_frame()).collect()
     };
 
-    let one = Placement::single(TEE1, info.m());
+    let tee1 = rm.topology().require("TEE1").unwrap();
+    let tee2 = rm.topology().require("TEE2").unwrap();
+    let one = Placement::single(tee1, info.m());
     let dep1 = Deployment::deploy(&man, &rm, model, &one, Some(1e9), 4).unwrap();
     let r1 = dep1.run_stream(frames.clone().into_iter()).unwrap();
 
     let cut = info.m() / 2;
     let two = Placement {
         stages: vec![
-            Stage { resource: TEE1, range: 0..cut },
-            Stage { resource: TEE2, range: cut..info.m() },
+            Stage { resource: tee1, range: 0..cut },
+            Stage { resource: tee2, range: cut..info.m() },
         ],
     };
     let dep2 = Deployment::deploy(&man, &rm, model, &two, Some(1e9), 4).unwrap();

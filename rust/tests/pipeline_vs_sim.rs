@@ -24,20 +24,20 @@ use serdab::sim::{simulate, SimConfig};
 /// the executed runtime (wall clock); assert agreement.
 fn cross_validate(strategy: Strategy, frames: u64) {
     let prof = ModelProfile::millis_demo();
-    let cm = CostModel::new(&prof);
+    let cm = CostModel::paper(&prof);
     let p = plan(strategy, &cm, frames);
     let cost = cm.cost(&p.placement);
     eprintln!(
         "{:?}: {} (period {:.1} ms)",
         strategy,
-        p.placement.describe(),
+        p.placement.describe(cm.topology()),
         cost.period_secs * 1e3
     );
 
     let cfg = SimConfig { frames, arrival_secs: 0.0, queue_cap: 4 };
     let sim_rep = simulate(&cm, &p.placement, &cfg);
 
-    let pipe = Pipeline::synthetic(&p.placement, &cost, PipelineConfig::default());
+    let pipe = Pipeline::synthetic(cm.topology(), &p.placement, &cost, PipelineConfig::default());
     let feed = (0..frames).map(|_| FrameIn { stream: 0, payload: vec![0u8; 64] });
     let real = pipe.run(feed, |_| {}).expect("pipeline run");
 
@@ -97,12 +97,13 @@ fn executed_pipeline_matches_des_and_beats_sequential_baseline() {
     // and the paper's core claim, executed: pipelining the chunk through
     // the 2-TEE placement completes it faster than the 1-TEE baseline
     let prof = ModelProfile::millis_demo();
-    let cm = CostModel::new(&prof);
+    let cm = CostModel::paper(&prof);
     let frames = 30u64;
     let run = |strategy: Strategy| {
         let p = plan(strategy, &cm, frames);
         let cost = cm.cost(&p.placement);
-        let pipe = Pipeline::synthetic(&p.placement, &cost, PipelineConfig::default());
+        let pipe =
+            Pipeline::synthetic(cm.topology(), &p.placement, &cost, PipelineConfig::default());
         let feed = (0..frames).map(|_| FrameIn { stream: 0, payload: vec![0u8; 64] });
         pipe.run(feed, |_| {}).expect("pipeline run").completion_secs
     };

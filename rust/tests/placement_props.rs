@@ -5,7 +5,7 @@ use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::model::{DELTA_RESOLUTION, MODEL_NAMES};
 use serdab::placement::cost::CostModel;
 use serdab::placement::strategies::{plan, Strategy};
-use serdab::placement::tree::paper_tree;
+use serdab::placement::tree::full_tree;
 use serdab::profiler::calibrated_profile;
 use serdab::util::prop;
 
@@ -28,14 +28,18 @@ fn prop_solver_output_always_valid_and_private() {
         let gen = prop::pair(prop::usize_in(0, 4), prop::usize_in(1, 20_000));
         prop::forall("solver-valid", &gen, 40, |&(mi, n)| {
             let profile = &profiles[mi];
-            let cm = CostModel::new(profile);
+            let cm = CostModel::paper(profile);
             for strat in Strategy::ALL {
                 let p = plan(strat, &cm, n as u64);
                 p.placement
-                    .validate(profile.m)
+                    .validate(cm.topology(), profile.m)
                     .map_err(|e| format!("{strat:?}: {e}"))?;
-                if !p.placement.satisfies_privacy(&profile.in_res, DELTA_RESOLUTION) {
-                    return Err(format!("{strat:?} leaked: {}", p.placement.describe()));
+                if !p.placement.satisfies_privacy(cm.topology(), &profile.in_res, DELTA_RESOLUTION)
+                {
+                    return Err(format!(
+                        "{strat:?} leaked: {}",
+                        p.placement.describe(cm.topology())
+                    ));
                 }
             }
             Ok(())
@@ -50,19 +54,19 @@ fn prop_solver_is_argmin_over_its_tree() {
     with_manifest(|man| {
         let model = man.model("mobilenet").unwrap();
         let profile = calibrated_profile(model);
-        let cm = CostModel::new(&profile);
+        let cm = CostModel::paper(&profile);
         let n = 10_800;
         let best = plan(Strategy::Proposed, &cm, n);
-        let (paths, _) = paper_tree(profile.m);
+        let (paths, _) = full_tree(cm.topology(), profile.m);
         for p in paths {
-            if !p.satisfies_privacy(&profile.in_res, DELTA_RESOLUTION) {
+            if !p.satisfies_privacy(cm.topology(), &profile.in_res, DELTA_RESOLUTION) {
                 continue;
             }
             let c = cm.cost(&p).chunk_secs(n);
             assert!(
                 best.cost.chunk_secs(n) <= c * (1.0 + 1e-9),
                 "solver missed better path {} ({c}s)",
-                p.describe()
+                p.describe(cm.topology())
             );
         }
     });
@@ -75,7 +79,7 @@ fn prop_speedup_monotone_in_chunk_size_for_pipelined_strategies() {
     with_manifest(|man| {
         for name in MODEL_NAMES {
             let profile = calibrated_profile(man.model(name).unwrap());
-            let cm = CostModel::new(&profile);
+            let cm = CostModel::paper(&profile);
             for strat in [Strategy::TwoTees, Strategy::Proposed] {
                 let base1 = plan(Strategy::OneTee, &cm, 1).cost.chunk_secs(1);
                 let basen = plan(Strategy::OneTee, &cm, 10_800).cost.chunk_secs(10_800);

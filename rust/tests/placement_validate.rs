@@ -1,100 +1,148 @@
 //! Placement::validate edge cases — the deployment gate every placement
 //! passes through before attestation/key release, so its rejection
-//! surface (empty stage, gap, overlap, duplicate resource, bad coverage)
-//! must be exact.
+//! surface (foreign resource id, empty stage, gap, overlap, duplicate
+//! resource, bad coverage) must be exact.
 
-use serdab::placement::{Placement, Stage, E1_CPU, E2_CPU, E2_GPU, TEE1, TEE2};
+use serdab::placement::{Placement, ResourceId, Stage};
+use serdab::topology::Topology;
 
-fn p(stages: Vec<(serdab::placement::Resource, std::ops::Range<usize>)>) -> Placement {
+fn topo() -> Topology {
+    Topology::paper_testbed()
+}
+
+fn rid(topo: &Topology, name: &str) -> ResourceId {
+    topo.require(name).unwrap()
+}
+
+fn p(topo: &Topology, stages: Vec<(&str, std::ops::Range<usize>)>) -> Placement {
     Placement {
         stages: stages
             .into_iter()
-            .map(|(resource, range)| Stage { resource, range })
+            .map(|(name, range)| Stage { resource: rid(topo, name), range })
             .collect(),
     }
 }
 
 #[test]
 fn accepts_single_and_full_multistage_coverage() {
-    assert!(Placement::single(TEE1, 10).validate(10).is_ok());
-    assert!(p(vec![(TEE1, 0..1), (TEE2, 1..2)]).validate(2).is_ok());
-    let five = p(vec![
-        (TEE1, 0..2),
-        (E1_CPU, 2..4),
-        (TEE2, 4..6),
-        (E2_CPU, 6..8),
-        (E2_GPU, 8..12),
-    ]);
-    assert!(five.validate(12).is_ok());
+    let t = topo();
+    assert!(Placement::single(rid(&t, "TEE1"), 10).validate(&t, 10).is_ok());
+    assert!(p(&t, vec![("TEE1", 0..1), ("TEE2", 1..2)]).validate(&t, 2).is_ok());
+    let five = p(
+        &t,
+        vec![
+            ("TEE1", 0..2),
+            ("E1", 2..4),
+            ("TEE2", 4..6),
+            ("E2", 6..8),
+            ("GPU2", 8..12),
+        ],
+    );
+    assert!(five.validate(&t, 12).is_ok());
 }
 
 #[test]
 fn rejects_no_stages_at_all() {
-    let err = Placement { stages: vec![] }.validate(5).unwrap_err();
+    let t = topo();
+    let err = Placement { stages: vec![] }.validate(&t, 5).unwrap_err();
     assert!(err.contains("no stages"), "{err}");
 }
 
 #[test]
+fn rejects_foreign_resource_id() {
+    let t = topo();
+    let alien = Placement { stages: vec![Stage { resource: ResourceId(42), range: 0..5 }] };
+    let err = alien.validate(&t, 5).unwrap_err();
+    assert!(err.contains("not in topology"), "{err}");
+}
+
+#[test]
 fn rejects_empty_stage() {
+    let t = topo();
     // an empty range on a resource is not a real pipeline position
-    let err = p(vec![(TEE1, 0..0), (TEE2, 0..5)]).validate(5).unwrap_err();
+    let err = p(&t, vec![("TEE1", 0..0), ("TEE2", 0..5)]).validate(&t, 5).unwrap_err();
     assert!(err.contains("empty stage"), "{err}");
     assert!(err.contains("TEE1"), "{err}");
     // empty stage in the middle
-    let err = p(vec![(TEE1, 0..3), (E2_GPU, 3..3), (TEE2, 3..5)])
-        .validate(5)
+    let err = p(&t, vec![("TEE1", 0..3), ("GPU2", 3..3), ("TEE2", 3..5)])
+        .validate(&t, 5)
         .unwrap_err();
     assert!(err.contains("empty stage"), "{err}");
 }
 
 #[test]
 fn rejects_gap_and_overlap() {
-    let err = p(vec![(TEE1, 0..2), (TEE2, 3..6)]).validate(6).unwrap_err();
+    let t = topo();
+    let err = p(&t, vec![("TEE1", 0..2), ("TEE2", 3..6)]).validate(&t, 6).unwrap_err();
     assert!(err.contains("gap/overlap at block 2"), "{err}");
-    let err = p(vec![(TEE1, 0..4), (TEE2, 3..6)]).validate(6).unwrap_err();
+    let err = p(&t, vec![("TEE1", 0..4), ("TEE2", 3..6)]).validate(&t, 6).unwrap_err();
     assert!(err.contains("gap/overlap"), "{err}");
     // stages out of order are a gap at block 0's successor
-    let err = p(vec![(TEE2, 3..6), (TEE1, 0..3)]).validate(6).unwrap_err();
+    let err = p(&t, vec![("TEE2", 3..6), ("TEE1", 0..3)]).validate(&t, 6).unwrap_err();
     assert!(err.contains("gap/overlap"), "{err}");
 }
 
 #[test]
 fn rejects_duplicate_resource() {
+    let t = topo();
     // a resource cannot occupy two pipeline positions
-    let err = p(vec![(TEE1, 0..3), (TEE1, 3..6)]).validate(6).unwrap_err();
+    let err = p(&t, vec![("TEE1", 0..3), ("TEE1", 3..6)]).validate(&t, 6).unwrap_err();
     assert!(err.contains("used twice"), "{err}");
-    let err = p(vec![(TEE1, 0..2), (TEE2, 2..4), (TEE1, 4..6)])
-        .validate(6)
+    let err = p(&t, vec![("TEE1", 0..2), ("TEE2", 2..4), ("TEE1", 4..6)])
+        .validate(&t, 6)
         .unwrap_err();
     assert!(err.contains("TEE1 used twice"), "{err}");
 }
 
 #[test]
 fn rejects_wrong_total_coverage() {
+    let t = topo();
     // undershoot: covers 0..4 of 6
-    let err = p(vec![(TEE1, 0..4)]).validate(6).unwrap_err();
+    let err = p(&t, vec![("TEE1", 0..4)]).validate(&t, 6).unwrap_err();
     assert!(err.contains("covers 0..4"), "{err}");
     // overshoot: covers 0..8 of 6
-    let err = p(vec![(TEE1, 0..5), (TEE2, 5..8)]).validate(6).unwrap_err();
+    let err = p(&t, vec![("TEE1", 0..5), ("TEE2", 5..8)]).validate(&t, 6).unwrap_err();
     assert!(err.contains("covers 0..8"), "{err}");
 }
 
 #[test]
 fn zero_block_model_is_never_coverable() {
-    assert!(Placement { stages: vec![] }.validate(0).is_err());
-    assert!(p(vec![(TEE1, 0..1)]).validate(0).is_err());
+    let t = topo();
+    assert!(Placement { stages: vec![] }.validate(&t, 0).is_err());
+    assert!(p(&t, vec![("TEE1", 0..1)]).validate(&t, 0).is_err());
 }
 
 #[test]
 fn validity_is_a_precondition_of_privacy_check() {
+    let t = topo();
     // satisfies_privacy only inspects untrusted stages; a valid placement
     // with the cut exactly at the δ crossing passes, one block earlier
     // fails — the C2 boundary is inclusive on the private side
     let in_res = [224, 56, 28, 20, 7, 1];
-    let at_crossing = p(vec![(TEE1, 0..3), (E2_GPU, 3..6)]);
-    assert!(at_crossing.validate(6).is_ok());
-    assert!(at_crossing.satisfies_privacy(&in_res, 20)); // GPU first sees 20 ≤ δ
-    let too_early = p(vec![(TEE1, 0..2), (E2_GPU, 2..6)]);
-    assert!(too_early.validate(6).is_ok());
-    assert!(!too_early.satisfies_privacy(&in_res, 20)); // GPU sees 28 > δ
+    let at_crossing = p(&t, vec![("TEE1", 0..3), ("GPU2", 3..6)]);
+    assert!(at_crossing.validate(&t, 6).is_ok());
+    assert!(at_crossing.satisfies_privacy(&t, &in_res, 20)); // GPU first sees 20 ≤ δ
+    let too_early = p(&t, vec![("TEE1", 0..2), ("GPU2", 2..6)]);
+    assert!(too_early.validate(&t, 6).is_ok());
+    assert!(!too_early.satisfies_privacy(&t, &in_res, 20)); // GPU sees 28 > δ
+}
+
+#[test]
+fn validates_against_non_paper_topologies() {
+    use serdab::profiler::DeviceKind;
+    let quad = Topology::builder("quad")
+        .resource("T0", DeviceKind::Tee, 0)
+        .resource("T1", DeviceKind::Tee, 1)
+        .resource("T2", DeviceKind::Tee, 2)
+        .resource("T3", DeviceKind::Tee, 3)
+        .build()
+        .unwrap();
+    let pl = p(&quad, vec![("T0", 0..2), ("T1", 2..4), ("T2", 4..6), ("T3", 6..8)]);
+    assert!(pl.validate(&quad, 8).is_ok());
+    assert_eq!(pl.describe(&quad), "T0[0..2] → T1[2..4] → T2[4..6] → T3[6..8]");
+    // the same placement is meaningless against the (smaller) paper graph
+    // only if an id is out of range — id reuse across topologies is the
+    // caller's responsibility, the bounds check is ours
+    let oob = Placement { stages: vec![Stage { resource: ResourceId(9), range: 0..8 }] };
+    assert!(oob.validate(&quad, 8).is_err());
 }

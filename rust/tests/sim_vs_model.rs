@@ -23,7 +23,7 @@ fn des_matches_closed_form_for_all_models_and_strategies() {
     for name in MODEL_NAMES {
         let model = man.model(name).unwrap();
         let profile = calibrated_profile(model);
-        let cm = CostModel::new(&profile);
+        let cm = CostModel::paper(&profile);
         for strat in Strategy::ALL {
             let p = plan(strat, &cm, 1000);
             let predicted = p.cost.chunk_secs(1000);
@@ -42,8 +42,13 @@ fn des_matches_closed_form_for_all_models_and_strategies() {
 /// stage-time structure, not just the calibrated zoo.
 #[test]
 fn prop_des_matches_closed_form_on_random_profiles() {
-    use serdab::placement::{Placement, Stage, E2_GPU, TEE1, TEE2};
+    use serdab::placement::{Placement, Stage};
+    use serdab::topology::Topology;
 
+    let topo = Topology::paper_testbed();
+    let tee1 = topo.require("TEE1").unwrap();
+    let tee2 = topo.require("TEE2").unwrap();
+    let gpu2 = topo.require("GPU2").unwrap();
     let gen = prop::pair(
         prop::vec_of(|| prop::f64_in(0.01, 2.0), 3, 9),
         prop::pair(prop::usize_in(1, 2), prop::usize_in(0, 1_000_000)),
@@ -68,22 +73,22 @@ fn prop_des_matches_closed_form_on_random_profiles() {
             in_res: (0..m).map(|i| if i < m / 2 { 224 } else { 14 }).collect(),
             epc: EpcModel::default(),
         };
-        let cm = CostModel::new(&profile);
+        let cm = CostModel::new(&profile, topo.clone());
         // placement: split at 1..m across TEE1/TEE2(/GPU for 3 stages)
         let cut1 = (1 + (*cuts % (m - 1).max(1))).min(m - 1);
         let placement = if m > cut1 + 1 && cuts % 2 == 1 {
             Placement {
                 stages: vec![
-                    Stage { resource: TEE1, range: 0..cut1 },
-                    Stage { resource: TEE2, range: cut1..cut1 + 1 },
-                    Stage { resource: E2_GPU, range: cut1 + 1..m },
+                    Stage { resource: tee1, range: 0..cut1 },
+                    Stage { resource: tee2, range: cut1..cut1 + 1 },
+                    Stage { resource: gpu2, range: cut1 + 1..m },
                 ],
             }
         } else {
             Placement {
                 stages: vec![
-                    Stage { resource: TEE1, range: 0..cut1 },
-                    Stage { resource: TEE2, range: cut1..m },
+                    Stage { resource: tee1, range: 0..cut1 },
+                    Stage { resource: tee2, range: cut1..m },
                 ],
             }
         };
@@ -111,7 +116,7 @@ fn paced_arrival_reduces_latency_not_throughput_below_capacity() {
     let man = load_manifest(dir).unwrap();
     let model = man.model("googlenet").unwrap();
     let profile = calibrated_profile(model);
-    let cm = CostModel::new(&profile);
+    let cm = CostModel::paper(&profile);
     let p = plan(Strategy::TwoTees, &cm, 500);
 
     let burst = simulate(&cm, &p.placement, &SimConfig { frames: 200, ..Default::default() });

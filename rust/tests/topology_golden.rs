@@ -1,0 +1,132 @@
+//! Golden parity: the data-driven topology solver must reproduce the
+//! placements the hardcoded five-resource testbed produced — byte-
+//! identical placement descriptions and strategy labels, bit-identical
+//! costs. The "old" side of the comparison is the seed's chain family,
+//! restated literally (TEE1→TEE2→GPU2, TEE1→TEE2→E2, TEE1→GPU2,
+//! TEE1→E1), solved with exactly the seed's argmin loop; the "new" side
+//! is `plan()` over `Topology::paper_testbed()`. This guards the API
+//! redesign: if the generalized chain derivation ever drifts from the
+//! paper's tree on the paper's graph, this fails.
+
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::model::{DELTA_RESOLUTION, MODEL_NAMES};
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, speedup_table, Strategy};
+use serdab::placement::tree::enumerate_paths;
+use serdab::placement::{Placement, ResourceId};
+use serdab::profiler::{calibrated_profile, ModelProfile};
+
+/// The seed's hardcoded chain family for one strategy, as resource names.
+fn seed_chains(strategy: Strategy) -> Vec<Vec<&'static str>> {
+    match strategy {
+        Strategy::OneTee => vec![vec!["TEE1"]],
+        Strategy::TeeGpu => vec![vec!["TEE1", "GPU2"]],
+        Strategy::TwoTees => vec![vec!["TEE1", "TEE2"]],
+        Strategy::NoPipelining | Strategy::Proposed => vec![
+            vec!["TEE1", "TEE2", "GPU2"],
+            vec!["TEE1", "TEE2", "E2"],
+            vec!["TEE1", "GPU2"],
+            vec!["TEE1", "E1"],
+        ],
+    }
+}
+
+/// The seed's solver loop, verbatim: enumerate each chain, filter by
+/// privacy, strict-argmin the strategy objective.
+fn seed_plan(strategy: Strategy, cm: &CostModel<'_>, n: u64) -> (Placement, f64) {
+    let topo = cm.topology();
+    let m = cm.profile.m;
+    let mut best: Option<(f64, Placement)> = None;
+    for chain in seed_chains(strategy) {
+        let ids: Vec<ResourceId> = chain.iter().map(|r| topo.require(r).unwrap()).collect();
+        for p in enumerate_paths(&ids, m) {
+            if !p.satisfies_privacy(topo, &cm.profile.in_res, DELTA_RESOLUTION) {
+                continue;
+            }
+            let cost = cm.cost(&p);
+            let objective = match strategy {
+                Strategy::NoPipelining => cost.single_secs,
+                _ => cost.chunk_secs(n),
+            };
+            let better = match &best {
+                None => true,
+                Some((obj, _)) => objective < *obj,
+            };
+            if better {
+                best = Some((objective, p));
+            }
+        }
+    }
+    let (obj, placement) = best.expect("seed solver found a path");
+    (placement, obj)
+}
+
+fn assert_parity(cm: &CostModel<'_>, what: &str) {
+    let topo = cm.topology();
+    for n in [1u64, 10, 40, 1000, 10_800] {
+        for strategy in Strategy::ALL {
+            let new = plan(strategy, cm, n);
+            let (old_placement, old_obj) = seed_plan(strategy, cm, n);
+            assert_eq!(
+                new.placement.describe(topo),
+                old_placement.describe(topo),
+                "{what}/{strategy:?}/n={n}: placement drifted from the seed graph"
+            );
+            let new_obj = match strategy {
+                Strategy::NoPipelining => new.cost.single_secs,
+                _ => new.cost.chunk_secs(n),
+            };
+            assert!(
+                new_obj == old_obj,
+                "{what}/{strategy:?}/n={n}: objective {new_obj} != seed {old_obj}"
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_testbed_reproduces_hardcoded_solver_on_demo_profile() {
+    let prof = ModelProfile::millis_demo();
+    let cm = CostModel::paper(&prof);
+    assert_parity(&cm, "millis-demo");
+}
+
+#[test]
+fn paper_testbed_reproduces_hardcoded_solver_on_calibrated_models() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping calibrated parity: run `make artifacts`");
+        return;
+    }
+    let man = load_manifest(dir).unwrap();
+    for name in MODEL_NAMES {
+        let profile = calibrated_profile(man.model(name).unwrap());
+        let cm = CostModel::paper(&profile);
+        assert_parity(&cm, name);
+    }
+}
+
+#[test]
+fn strategy_labels_are_the_figure_legend() {
+    let labels: Vec<&str> = Strategy::ALL.iter().map(|s| s.name()).collect();
+    assert_eq!(labels, ["1 TEE", "No pipelining", "1 TEE & 1 GPU", "2 TEEs", "Proposed"]);
+}
+
+#[test]
+fn speedup_table_keeps_strategy_order_and_baseline() {
+    let prof = ModelProfile::millis_demo();
+    let cm = CostModel::paper(&prof);
+    let table = speedup_table(&cm, 10_800);
+    let order: Vec<Strategy> = table.iter().map(|(s, _, _)| *s).collect();
+    assert_eq!(order, Strategy::ALL.to_vec());
+    let one_tee = &table[0];
+    assert!((one_tee.2 - 1.0).abs() < 1e-12, "baseline speedup must be 1.0");
+    // every strategy's placement matches the seed solver too
+    for (strategy, p, _) in &table {
+        let (old_placement, _) = seed_plan(*strategy, &cm, 10_800);
+        assert_eq!(
+            p.placement.describe(cm.topology()),
+            old_placement.describe(cm.topology())
+        );
+    }
+}

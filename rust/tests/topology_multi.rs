@@ -1,0 +1,136 @@
+//! Acceptance for the data-driven topology API: a non-paper resource
+//! graph (4 edge devices, one enclave each, plus an offload GPU) must
+//! solve, simulate, and serve end-to-end — the scenario class the
+//! hardcoded five-resource testbed could never express.
+//!
+//! The serving side uses the synthetic pipeline (workers execute the cost
+//! model's service times for real) so the test runs without model
+//! artifacts; with artifacts present, it additionally deploys a real
+//! 4-enclave partition through the attested coordinator path.
+
+use serdab::coordinator::{Deployment, ResourceManager};
+use serdab::model::manifest::{default_artifacts_dir, load_manifest};
+use serdab::model::DELTA_RESOLUTION;
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::placement::{Placement, Stage};
+use serdab::profiler::{DeviceKind, ModelProfile};
+use serdab::runtime::pipeline::{FrameIn, Pipeline, PipelineConfig};
+use serdab::sim::{simulate, SimConfig};
+use serdab::topology::{LinkParams, Topology};
+use serdab::video::{SceneKind, VideoSource};
+
+/// 4 edge devices with one enclave each on a fast LAN, plus a GPU and a
+/// CPU on the last device — a DistPrivacy-style surveillance cluster.
+fn quad_topology() -> Topology {
+    Topology::builder("quad-edge")
+        .resource("T0", DeviceKind::Tee, 0)
+        .resource("T1", DeviceKind::Tee, 1)
+        .resource("T2", DeviceKind::Tee, 2)
+        .resource("T3", DeviceKind::Tee, 3)
+        .resource("G3", DeviceKind::Gpu, 3)
+        .resource("C3", DeviceKind::UntrustedCpu, 3)
+        .default_link(LinkParams { bandwidth_bps: 1e9, rtt_secs: 1e-4 })
+        .camera(0)
+        .sink(0)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn quad_cluster_solves_simulates_and_serves() {
+    let prof = ModelProfile::millis_demo();
+    let topo = quad_topology();
+    let cm = CostModel::new(&prof, topo.clone());
+    let frames = 40u64;
+
+    // --- solve: the 4-TEE spine actually gets used ----------------------
+    let two = plan(Strategy::TwoTees, &cm, frames);
+    two.placement.validate(&topo, prof.m).unwrap();
+    assert!(
+        two.placement.stages.len() >= 3,
+        "fast links should spread the chain over ≥3 enclaves: {}",
+        two.placement.describe(&topo)
+    );
+    let proposed = plan(Strategy::Proposed, &cm, frames);
+    proposed.placement.validate(&topo, prof.m).unwrap();
+    assert!(proposed.placement.satisfies_privacy(&topo, &prof.in_res, DELTA_RESOLUTION));
+    let one = plan(Strategy::OneTee, &cm, frames);
+    let speedup = one.cost.chunk_secs(frames) / proposed.cost.chunk_secs(frames);
+    assert!(speedup > 2.0, "multi-enclave speedup only {speedup:.2}x");
+
+    // --- simulate: the DES agrees with the closed form on this graph ----
+    for p in [&two, &proposed] {
+        let des = simulate(&cm, &p.placement, &SimConfig { frames, ..Default::default() });
+        let predicted = p.cost.chunk_secs(frames);
+        let err = (des.completion_secs - predicted).abs() / predicted;
+        assert!(
+            err < 0.02,
+            "{}: DES {} vs model {predicted}",
+            p.placement.describe(&topo),
+            des.completion_secs
+        );
+    }
+
+    // --- serve: executed pipeline (real threads, queues, backpressure) --
+    let cost = cm.cost(&proposed.placement);
+    let des = simulate(&cm, &proposed.placement, &SimConfig { frames, ..Default::default() });
+    let pipe = Pipeline::synthetic(&topo, &proposed.placement, &cost, PipelineConfig::default());
+    let feed = (0..frames).map(|_| FrameIn { stream: 0, payload: vec![0u8; 64] });
+    let rep = pipe.run(feed, |_| {}).expect("pipeline run");
+    assert_eq!(rep.frames, frames, "frames lost in the executed pipeline");
+    let err = (rep.completion_secs - des.completion_secs).abs() / des.completion_secs;
+    assert!(
+        err < 0.15,
+        "executed {:.4}s vs DES {:.4}s ({:.1}% off) for {}",
+        rep.completion_secs,
+        des.completion_secs,
+        err * 100.0,
+        proposed.placement.describe(&topo)
+    );
+    // worker labels carry the topology's resource names
+    let labels: Vec<&str> = rep.workers.iter().map(|w| w.label.as_str()).collect();
+    assert!(
+        labels.iter().any(|l| l.starts_with("T0[")),
+        "stage labels should name topology resources: {labels:?}"
+    );
+}
+
+#[test]
+fn quad_cluster_deploys_real_partitions_when_artifacts_exist() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = load_manifest(dir).unwrap();
+    let model = "squeezenet";
+    let info = man.model(model).unwrap();
+    let m = info.m();
+    assert!(m >= 4, "squeezenet chain too short to split 4 ways");
+
+    let topo = quad_topology();
+    let rm = ResourceManager::for_topology(&topo);
+    // an explicit 4-enclave split — a placement shape the old five-const
+    // graph could not even name
+    let cuts = [m / 4, m / 2, 3 * m / 4];
+    let placement = Placement {
+        stages: vec![
+            Stage { resource: topo.require("T0").unwrap(), range: 0..cuts[0] },
+            Stage { resource: topo.require("T1").unwrap(), range: cuts[0]..cuts[1] },
+            Stage { resource: topo.require("T2").unwrap(), range: cuts[1]..cuts[2] },
+            Stage { resource: topo.require("T3").unwrap(), range: cuts[2]..m },
+        ],
+    };
+    placement.validate(&topo, m).unwrap();
+
+    let dep = Deployment::deploy(&man, &rm, model, &placement, Some(1e9), 4).unwrap();
+    let mut cam = VideoSource::new(SceneKind::Street, 17);
+    let frames: Vec<_> = (0..4).map(|_| cam.next_frame()).collect();
+    let rep = dep.run_stream(frames.into_iter()).unwrap();
+    assert_eq!(rep.frames, 4);
+    assert!(rep.output_checksum.is_finite());
+    // four compute stages + three links between distinct hosts
+    let stages = rep.workers.iter().filter(|w| w.label.contains('[')).count();
+    assert_eq!(stages, 4, "expected 4 enclave stages");
+}

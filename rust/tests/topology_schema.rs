@@ -1,0 +1,84 @@
+//! The shipped topology JSON files and the schema's save/load round-trip:
+//! `examples/topologies/paper.json` must load to exactly
+//! `Topology::paper_testbed()` (the file is the data form of the seed
+//! graph), and every shipped example must be a valid, solvable topology.
+
+use std::path::PathBuf;
+
+use serdab::profiler::DeviceKind;
+use serdab::topology::{LinkParams, Topology};
+
+fn topologies_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/topologies")
+}
+
+#[test]
+fn shipped_paper_json_is_the_paper_testbed() {
+    let loaded = Topology::load(topologies_dir().join("paper.json")).unwrap();
+    assert_eq!(loaded, Topology::paper_testbed());
+}
+
+#[test]
+fn shipped_edge4_is_a_four_tee_cluster() {
+    let t = Topology::load(topologies_dir().join("edge4.json")).unwrap();
+    assert_eq!(t.tees().len(), 4);
+    assert!(t.len() >= 6);
+    assert_eq!(t.hosts(), 4);
+    // camera attaches by resource name ("TEE-A" on host 0)
+    assert_eq!(t.camera_host, 0);
+    assert_eq!(t.name_of(t.entry()), "TEE-A");
+    // explicit links resolve by resource name, others use the default
+    assert!((t.link(0, 1).bandwidth_bps - 100e6).abs() < 1e-6);
+    assert!((t.link(0, 3).bandwidth_bps - 50e6).abs() < 1e-6);
+}
+
+#[test]
+fn shipped_gpu_cloud_has_speed_and_epc_overrides() {
+    let t = Topology::load(topologies_dir().join("gpu_cloud.json")).unwrap();
+    let gpu = t.require("CLOUD-GPU").unwrap();
+    assert_eq!(t.kind_of(gpu), DeviceKind::Gpu);
+    assert!((t.resource(gpu).speed - 4.0).abs() < 1e-12);
+    let tee = t.require("EDGE-TEE").unwrap();
+    let epc = t.resource(tee).epc.as_ref().expect("per-enclave EPC override");
+    assert_eq!(epc.epc_bytes, 97_517_568);
+}
+
+#[test]
+fn save_then_load_round_trips_every_shipped_example() {
+    let dir = std::env::temp_dir().join(format!("serdab-topo-rt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for file in ["paper.json", "edge4.json", "gpu_cloud.json"] {
+        let t = Topology::load(topologies_dir().join(file)).unwrap();
+        let out = dir.join(file);
+        t.save(&out).unwrap();
+        let back = Topology::load(&out).unwrap();
+        assert_eq!(t, back, "{file} changed across save/load");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn load_reports_file_context_on_errors() {
+    let missing = topologies_dir().join("nope.json");
+    let e = Topology::load(&missing).unwrap_err();
+    assert!(format!("{e:#}").contains("nope.json"), "{e:#}");
+
+    // a malformed file errors with its path and the json position
+    let dir = std::env::temp_dir().join(format!("serdab-topo-bad-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "{ not json").unwrap();
+    let e = Topology::load(&bad).unwrap_err();
+    assert!(format!("{e:#}").contains("bad.json"), "{e:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn custom_link_params_survive_round_trip() {
+    let mut t = Topology::paper_testbed();
+    t.set_link(0, 1, LinkParams { bandwidth_bps: 2.5e6, rtt_secs: 0.042 });
+    t.crypto_bytes_per_sec = 123e6;
+    let json = t.to_json().to_string();
+    let back = Topology::from_json(&serdab::util::json::Json::parse(&json).unwrap()).unwrap();
+    assert_eq!(t, back);
+}
