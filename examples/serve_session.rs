@@ -1,0 +1,117 @@
+//! Operate a live serving session: three cameras attach to a
+//! `coordinator::Server` over a 4-enclave topology, the online monitor
+//! watches windowed pipeline statistics, and halfway through the demo the
+//! entry enclave "degrades" 3× (injected slowdown) — the monitor issues a
+//! `Repartition` verdict, the server re-solves against the observed stage
+//! times and hot-swaps the pipeline, and the cameras never notice.
+//!
+//! Runs without model artifacts (synthetic stage bodies execute the cost
+//! model's service times for real):
+//!
+//!     cargo run --release --example serve_session
+
+use std::time::Duration;
+
+use serdab::coordinator::{Server, ServerConfig, ServerEvent, StreamSpec, SyntheticBuilder};
+use serdab::placement::strategies::Strategy;
+use serdab::profiler::{DeviceKind, ModelProfile};
+use serdab::topology::{LinkParams, Topology};
+
+fn main() -> anyhow::Result<()> {
+    let profile = ModelProfile::millis_demo();
+    let topo = Topology::builder("quad-live")
+        .resource("T0", DeviceKind::Tee, 0)
+        .resource("T1", DeviceKind::Tee, 1)
+        .resource("T2", DeviceKind::Tee, 2)
+        .resource("T3", DeviceKind::Tee, 3)
+        .default_link(LinkParams { bandwidth_bps: 1e9, rtt_secs: 1e-4 })
+        .camera(0)
+        .sink(0)
+        .build()?;
+    println!("topology: {}", topo.summary());
+
+    let mut builder = SyntheticBuilder::new(profile.clone(), topo.clone());
+    let entry_slowdown = builder.slowdown("T0");
+
+    let mut server = Server::launch(
+        profile,
+        topo,
+        Box::new(builder),
+        ServerConfig {
+            strategy: Strategy::Proposed,
+            window_secs: 0.2,
+            patience: 2,
+            ..ServerConfig::default()
+        },
+    )?;
+    let events = server.events().expect("event feed");
+    println!("placement: {}\n", server.status().placement);
+
+    for i in 0..3u32 {
+        server.attach(StreamSpec::synthetic(format!("cam-{i}"), 0.12, 128))?;
+    }
+
+    // phase 1: healthy serving
+    drain_events(&events, Duration::from_millis(1200));
+
+    // phase 2: the entry enclave throttles — drift, verdict, hot-swap
+    println!("\n*** injecting 3x slowdown on T0 ***\n");
+    *entry_slowdown.lock().unwrap() = 3.0;
+    drain_events(&events, Duration::from_millis(3500));
+
+    let report = server.shutdown()?;
+    println!(
+        "\nserved {} frames over {} generation(s), {} hot-swap(s)",
+        report.frames,
+        report.segments.len(),
+        report.swaps.len()
+    );
+    for s in &report.streams {
+        println!(
+            "  {:<8} fed={:>3} completed={:>3} mean-latency={:.1} ms",
+            s.label,
+            s.fed,
+            s.completed,
+            s.mean_latency_secs * 1e3
+        );
+    }
+    for sw in &report.swaps {
+        println!(
+            "  swap @ {:.2}s: stage {} drifted {:.1}ms → {:.1}ms\n    {}  →  {}",
+            sw.at_secs,
+            sw.stage,
+            sw.predicted * 1e3,
+            sw.observed * 1e3,
+            sw.from,
+            sw.to
+        );
+    }
+    println!("\nserve_session OK");
+    Ok(())
+}
+
+/// Print server events for `dur`, then return.
+fn drain_events(events: &std::sync::mpsc::Receiver<ServerEvent>, dur: Duration) {
+    let deadline = std::time::Instant::now() + dur;
+    loop {
+        let left = deadline.saturating_duration_since(std::time::Instant::now());
+        if left.is_zero() {
+            return;
+        }
+        match events.recv_timeout(left) {
+            Ok(ServerEvent::Window { at_secs, throughput_fps, verdict, .. }) => {
+                println!("t={at_secs:5.2}s  {throughput_fps:5.1} fps  {verdict:?}")
+            }
+            Ok(ServerEvent::SwapStarted { stage, observed, predicted, .. }) => println!(
+                ">>> drift on stage {stage} ({:.1}ms vs {:.1}ms) — re-partitioning",
+                observed * 1e3,
+                predicted * 1e3
+            ),
+            Ok(ServerEvent::SwapCompleted(sw)) => {
+                println!(">>> hot-swapped: {} → {}", sw.from, sw.to)
+            }
+            Ok(ev) => println!("{ev:?}"),
+            Err(_) => {}
+        }
+    }
+}

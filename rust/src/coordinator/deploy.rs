@@ -62,6 +62,12 @@ pub struct DeploymentReport {
     pub throughput_fps: f64,
     /// Sum over final outputs (reproducibility logging).
     pub output_checksum: f64,
+    /// Frames that exited the pipeline but whose final-stage output
+    /// failed to decode. A long-lived stream tolerates per-frame decode
+    /// corruption (the frame is counted here and skipped);
+    /// [`run_stream`](Deployment::run_stream) only errors when *every*
+    /// frame fails.
+    pub decode_failures: u64,
     /// Per-frame end-to-end latencies in sink arrival order, straight
     /// from the engine (the scalar fields above summarize these).
     pub latencies: Vec<f64>,
@@ -191,7 +197,9 @@ impl Deployment {
             // cross-host edge ⇒ transmission operator. With no override the
             // link is faithful to the topology (bandwidth shaping + rtt —
             // what the cost model and DES charge); an explicit `wan_bps`
-            // keeps the legacy bandwidth-only shaping.
+            // keeps the legacy bandwidth-only shaping. The worker is named
+            // after the link it crosses (`E1→E2`) so reports and the
+            // server's live monitor output read as the topology does.
             let host = topo.host_of(stage.resource);
             let next_host = placement.stages.get(si + 1).map(|next| topo.host_of(next.resource));
             if let Some(next_host) = next_host.filter(|&h| h != host) {
@@ -204,7 +212,7 @@ impl Deployment {
                 pipeline.add_stage(StageSpec::from_operator(
                     WorkerKind::Link,
                     Box::new(TransmitOperator {
-                        label: format!("wan-after-{si}"),
+                        label: topo.link_label(host, next_host),
                         bucket,
                         latency,
                     }),
@@ -221,12 +229,25 @@ impl Deployment {
         })
     }
 
-    /// Stream `frames` through the pipeline and collect the report.
+    /// Decompose into the session pieces the coordinator's
+    /// [`Server`](super::Server) rebuilds around on a hot-swap: the
+    /// realized placement, the built (not yet started) pipeline, the
+    /// camera-side sealing channel, and the final-stage output shape.
+    pub fn into_parts(self) -> (Placement, Pipeline, Channel, Vec<usize>) {
+        (self.placement, self.pipeline, self.camera, self.out_shape)
+    }
+
+    /// Stream `frames` through the pipeline and collect the report —
+    /// the one-shot convenience over the session machinery (the engine's
+    /// [`run`](Pipeline::run) wrapper over start → inject → drain).
     ///
     /// The engine's source thread plays the camera: the iterator seals
     /// each frame and blocks on the bounded first queue when the pipeline
     /// is saturated (backpressure reaches all the way to capture, as in
     /// the paper's dataflow). The calling thread drains the sink.
+    /// Per-frame decode failures of final outputs are tolerated and
+    /// counted ([`DeploymentReport::decode_failures`]); the run only
+    /// errors when every frame failed.
     pub fn run_stream<I>(self, frames: I) -> Result<DeploymentReport>
     where
         I: Iterator<Item = Tensor> + Send + 'static,
@@ -236,21 +257,9 @@ impl Deployment {
         let feed = frames
             .map(move |f| FrameIn { stream: 0, payload: camera.tx.seal_record(&f.to_le_bytes()) });
 
-        let mut checksum = 0f64;
-        let mut decode_err: Option<anyhow::Error> = None;
-        let report = pipeline.run(feed, |out| {
-            match Tensor::from_le_bytes(&out.payload, out_shape.clone()) {
-                Ok(t) => checksum += t.data.iter().map(|&v| v as f64).sum::<f64>(),
-                Err(e) => {
-                    if decode_err.is_none() {
-                        decode_err = Some(e);
-                    }
-                }
-            }
-        })?;
-        if let Some(e) = decode_err {
-            return Err(e.context("decoding final-stage output"));
-        }
+        let mut tally = SinkTally::new(out_shape);
+        let report = pipeline.run(feed, |out| tally.absorb(&out.payload))?;
+        let (checksum, decode_failures) = tally.into_result(report.frames)?;
 
         Ok(DeploymentReport {
             frames: report.frames,
@@ -259,8 +268,91 @@ impl Deployment {
             p99_latency_secs: report.p99_latency(),
             throughput_fps: report.throughput(),
             output_checksum: checksum,
+            decode_failures,
             latencies: report.latencies,
             workers: report.workers,
         })
+    }
+}
+
+/// Decode-and-checksum accumulator for final-stage outputs. A long-lived
+/// stream must survive one corrupt frame — each failure is counted and
+/// the frame skipped — but a sink where *every* frame fails to decode is
+/// a deployment bug (wrong output shape, mismatched hop secret) and
+/// surfaces as an error.
+#[derive(Debug, Default)]
+pub(crate) struct SinkTally {
+    out_shape: Vec<usize>,
+    checksum: f64,
+    decoded: u64,
+    failures: u64,
+    first_err: Option<anyhow::Error>,
+}
+
+impl SinkTally {
+    pub(crate) fn new(out_shape: Vec<usize>) -> Self {
+        SinkTally { out_shape, ..Default::default() }
+    }
+
+    /// Absorb one final-stage payload: checksum on success, count on
+    /// decode failure.
+    pub(crate) fn absorb(&mut self, payload: &[u8]) {
+        match Tensor::from_le_bytes(payload, self.out_shape.clone()) {
+            Ok(t) => {
+                self.checksum += t.data.iter().map(|&v| v as f64).sum::<f64>();
+                self.decoded += 1;
+            }
+            Err(e) => {
+                self.failures += 1;
+                if self.first_err.is_none() {
+                    self.first_err = Some(e);
+                }
+            }
+        }
+    }
+
+    /// Resolve the tally for a stream of `frames` completed frames:
+    /// `(checksum, decode_failures)` unless every frame failed.
+    pub(crate) fn into_result(self, frames: u64) -> Result<(f64, u64)> {
+        if frames > 0 && self.decoded == 0 {
+            let e = self
+                .first_err
+                .unwrap_or_else(|| anyhow::anyhow!("no output decoded"));
+            return Err(e.context(format!(
+                "decoding final-stage output (all {frames} frames failed)"
+            )));
+        }
+        Ok((self.checksum, self.failures))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_tally_counts_failures_and_only_errors_when_all_fail() {
+        // regression for the one-shot path killing a whole run on a
+        // single corrupt final-stage frame: shape [2] wants 8 bytes
+        let good: Vec<u8> =
+            [1.0f32.to_le_bytes(), 2.0f32.to_le_bytes()].concat();
+        let mut t = SinkTally::new(vec![2]);
+        t.absorb(&good);
+        t.absorb(&[0u8; 5]); // wrong length ⇒ decode failure, not fatal
+        t.absorb(&good);
+        let (checksum, failures) = t.into_result(3).unwrap();
+        assert_eq!(failures, 1);
+        assert!((checksum - 6.0).abs() < 1e-6);
+
+        // every frame failing IS fatal (wrong shape / mismatched secret)
+        let mut t = SinkTally::new(vec![2]);
+        t.absorb(&[0u8; 5]);
+        t.absorb(&[0u8; 3]);
+        let err = t.into_result(2).unwrap_err();
+        assert!(format!("{err:#}").contains("all 2 frames failed"), "{err:#}");
+
+        // zero completed frames: nothing decoded, nothing fatal
+        let (c, f) = SinkTally::new(vec![2]).into_result(0).unwrap();
+        assert_eq!((c, f), (0.0, 0));
     }
 }

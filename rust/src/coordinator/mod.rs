@@ -2,15 +2,29 @@
 //! Manager tracks registered devices, the Application Manager consults the
 //! privacy-aware placement, attests every enclave, deploys the partition
 //! services onto the pipeline-parallel runtime
-//! ([`runtime::pipeline`](crate::runtime::pipeline)), wires the
-//! transmission operators, and runs the stream; the Monitor compares the
-//! executed pipeline's per-stage statistics against the predicted stage
-//! times and triggers re-partitioning on drift (§V "Algorithm Steps").
+//! ([`runtime::pipeline`](crate::runtime::pipeline)), and wires the
+//! transmission operators. Serving is session-oriented: the [`Server`]
+//! owns a deployed pipeline for as long as the operator keeps it up,
+//! multiplexes camera streams that [`attach`](Server::attach) and
+//! [`detach`](Server::detach) at runtime, feeds live windowed pipeline
+//! statistics to the [`Monitor`] (§V "the system keeps monitoring the
+//! online profiling information"), and on a
+//! [`Repartition`](MonitorVerdict::Repartition) verdict re-solves the
+//! placement against the observed stage times and hot-swaps the pipeline
+//! — drain, redeploy, resume — without the caller rebuilding anything.
+//! The one-shot [`Deployment::run_stream`] remains as a thin wrapper over
+//! the same engine lifecycle for batch experiments.
 
 pub mod deploy;
 pub mod monitor;
 pub mod resources;
+pub mod server;
 
 pub use deploy::{Deployment, DeploymentReport};
 pub use monitor::{Monitor, MonitorVerdict};
 pub use resources::{RegisteredDevice, ResourceManager};
+pub use server::{
+    BuiltPipeline, DeployBuilder, SegmentReport, Server, ServerConfig, ServerEvent, ServerReport,
+    ServerStatus, StageBuilder, StreamHandle, StreamId, StreamReport, StreamSpec, SwapEvent,
+    SyntheticBuilder,
+};

@@ -5,7 +5,14 @@
 //!
 //! The monitor keeps an exponentially-weighted mean of observed per-stage
 //! times and compares against the cost model's predictions; sustained
-//! relative drift beyond the threshold yields `Repartition`.
+//! relative drift beyond the threshold yields `Repartition`. Observations
+//! arrive either as whole finished runs ([`Monitor::observe_run`]) or —
+//! the serving path — as live windowed deltas from a running pipeline
+//! ([`Monitor::observe_window`], fed by
+//! [`RunningPipeline::snapshot`](crate::runtime::pipeline::RunningPipeline::snapshot)
+//! diffs inside [`Server`](super::Server)).
+
+use crate::runtime::pipeline::WindowStats;
 
 /// Verdict after feeding an observation window.
 #[derive(Debug, Clone, PartialEq)]
@@ -14,7 +21,26 @@ pub enum MonitorVerdict {
     Healthy,
     /// Sustained drift on the named stage: re-run the placement solver
     /// with the observed times.
-    Repartition { stage: usize, predicted: f64, observed: f64 },
+    Repartition {
+        /// Index of the drifting compute stage (placement order).
+        stage: usize,
+        /// The cost model's predicted per-frame seconds for that stage.
+        predicted: f64,
+        /// The EWMA of observed per-frame seconds that breached the
+        /// threshold.
+        observed: f64,
+    },
+    /// The observation's stage arity does not match the predictions this
+    /// monitor was armed with. Re-partitioning changes stage arity *by
+    /// design*, so a stale observation window crossing a hot-swap is an
+    /// expected race — the caller should [`reset`](Monitor::reset) with
+    /// the new plan (or drop the window), never crash.
+    ArityMismatch {
+        /// Stage count the monitor was armed with.
+        expected: usize,
+        /// Stage count of the offending observation.
+        got: usize,
+    },
 }
 
 /// Online drift detector over per-stage execution times.
@@ -44,23 +70,75 @@ impl Monitor {
         }
     }
 
-    /// Feed one frame's observed per-stage times.
+    /// The predictions the monitor is currently armed with.
+    pub fn predicted(&self) -> &[f64] {
+        &self.predicted
+    }
+
+    /// The EWMA of observations so far — the "observed profile" a
+    /// re-solve calibrates against (equals `predicted` until the first
+    /// observation of each stage arrives).
+    pub fn observed(&self) -> &[f64] {
+        &self.ewma
+    }
+
+    /// Fold one stage's observation into the EWMA and strike counters;
+    /// `Some` when this observation tips the stage over the patience.
+    fn observe_stage(&mut self, i: usize, obs: f64) -> Option<MonitorVerdict> {
+        self.ewma[i] = self.alpha * obs + (1.0 - self.alpha) * self.ewma[i];
+        let drift = (self.ewma[i] - self.predicted[i]).abs() / self.predicted[i].max(1e-9);
+        if drift > self.threshold {
+            self.strikes[i] += 1;
+            if self.strikes[i] >= self.patience {
+                return Some(MonitorVerdict::Repartition {
+                    stage: i,
+                    predicted: self.predicted[i],
+                    observed: self.ewma[i],
+                });
+            }
+        } else {
+            self.strikes[i] = 0;
+        }
+        None
+    }
+
+    /// Feed one observation window of per-stage times. A window whose
+    /// arity differs from the armed predictions yields
+    /// [`MonitorVerdict::ArityMismatch`] (never a panic — arity changes
+    /// are what re-partitioning *does*).
     pub fn observe(&mut self, stage_secs: &[f64]) -> MonitorVerdict {
-        assert_eq!(stage_secs.len(), self.predicted.len(), "stage arity changed");
+        if stage_secs.len() != self.predicted.len() {
+            return MonitorVerdict::ArityMismatch {
+                expected: self.predicted.len(),
+                got: stage_secs.len(),
+            };
+        }
         for (i, &obs) in stage_secs.iter().enumerate() {
-            self.ewma[i] = self.alpha * obs + (1.0 - self.alpha) * self.ewma[i];
-            let drift = (self.ewma[i] - self.predicted[i]).abs() / self.predicted[i].max(1e-9);
-            if drift > self.threshold {
-                self.strikes[i] += 1;
-                if self.strikes[i] >= self.patience {
-                    return MonitorVerdict::Repartition {
-                        stage: i,
-                        predicted: self.predicted[i],
-                        observed: self.ewma[i],
-                    };
+            if let Some(v) = self.observe_stage(i, obs) {
+                return v;
+            }
+        }
+        MonitorVerdict::Healthy
+    }
+
+    /// Feed one *live* windowed observation from a running pipeline
+    /// (counter deltas between two snapshots). Stages that retired no
+    /// frames in the window contribute nothing — their EWMA and strikes
+    /// carry over unchanged — so a freshly attached stream or a starved
+    /// tail stage cannot fake a recovery or a drift.
+    pub fn observe_window(&mut self, window: &WindowStats) -> MonitorVerdict {
+        let obs = window.stage_mean_compute();
+        if obs.len() != self.predicted.len() {
+            return MonitorVerdict::ArityMismatch {
+                expected: self.predicted.len(),
+                got: obs.len(),
+            };
+        }
+        for (i, o) in obs.iter().enumerate() {
+            if let Some(x) = o {
+                if let Some(v) = self.observe_stage(i, *x) {
+                    return v;
                 }
-            } else {
-                self.strikes[i] = 0;
             }
         }
         MonitorVerdict::Healthy
@@ -121,6 +199,87 @@ mod tests {
     }
 
     #[test]
+    fn arity_change_yields_structured_verdict_not_panic() {
+        // regression: this used to assert_eq!-panic, but re-partitioning
+        // changes stage arity by design (a 2-stage plan can hot-swap to 3
+        // stages while a stale window is still in flight)
+        let mut m = Monitor::new(vec![1.0, 2.0]);
+        assert_eq!(
+            m.observe(&[1.0, 2.0, 3.0]),
+            MonitorVerdict::ArityMismatch { expected: 2, got: 3 }
+        );
+        assert_eq!(
+            m.observe(&[1.0]),
+            MonitorVerdict::ArityMismatch { expected: 2, got: 1 }
+        );
+        // the monitor state survives: a matching window still works, and
+        // the mismatch left no strikes behind
+        assert_eq!(m.observe(&[1.0, 2.0]), MonitorVerdict::Healthy);
+        // adopting the new plan clears the mismatch
+        m.reset(vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.observe(&[1.0, 2.0, 3.0]), MonitorVerdict::Healthy);
+    }
+
+    #[test]
+    fn windowed_observation_skips_frameless_stages() {
+        use crate::runtime::pipeline::{WindowStats, WorkerKind, WorkerStats};
+        let worker = |kind, frames: u64, busy_per_frame: f64| WorkerStats {
+            label: "w".into(),
+            kind,
+            frames,
+            busy_secs: busy_per_frame * frames as f64,
+            queue_wait_secs: 0.0,
+            blocked_secs: 0.0,
+            idle_secs: 0.0,
+            service: None,
+        };
+        let mut m = Monitor::new(vec![1.0, 2.0]);
+        // stage 1 drifted 3x but retired no frames in this window — the
+        // starved stage must not be scored (carry-forward, no strike)
+        let win = WindowStats {
+            span_secs: 1.0,
+            workers: vec![
+                worker(WorkerKind::Stage, 10, 1.0),
+                worker(WorkerKind::Link, 10, 0.1),
+                worker(WorkerKind::Stage, 0, 0.0),
+            ],
+        };
+        for _ in 0..10 {
+            assert_eq!(m.observe_window(&win), MonitorVerdict::Healthy);
+        }
+        assert!((m.observed()[1] - 2.0).abs() < 1e-12, "starved stage EWMA must not move");
+
+        // once it does retire frames at 3x, sustained windows fire
+        let hot = WindowStats {
+            span_secs: 1.0,
+            workers: vec![
+                worker(WorkerKind::Stage, 10, 1.0),
+                worker(WorkerKind::Link, 10, 0.1),
+                worker(WorkerKind::Stage, 10, 6.0),
+            ],
+        };
+        let mut fired = false;
+        for _ in 0..20 {
+            if let MonitorVerdict::Repartition { stage, .. } = m.observe_window(&hot) {
+                assert_eq!(stage, 1, "drift attributed to the slow compute stage");
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "sustained windowed drift never fired");
+
+        // a window with the wrong arity reports, not panics
+        let odd = WindowStats {
+            span_secs: 1.0,
+            workers: vec![worker(WorkerKind::Stage, 5, 1.0)],
+        };
+        assert_eq!(
+            m.observe_window(&odd),
+            MonitorVerdict::ArityMismatch { expected: 2, got: 1 }
+        );
+    }
+
+    #[test]
     fn observe_run_consumes_pipeline_stats() {
         use crate::coordinator::deploy::DeploymentReport;
         use crate::enclave::ServiceStats;
@@ -149,6 +308,7 @@ mod tests {
             p99_latency_secs: 3.5,
             throughput_fps: 0.33,
             output_checksum: 0.0,
+            decode_failures: 0,
             latencies: vec![3.0; 10],
             workers: vec![
                 worker(WorkerKind::Stage, c0 + 0.02, c0),

@@ -1,0 +1,1035 @@
+//! Session-oriented serving: a long-lived [`Server`] that *operates* a
+//! deployed pipeline instead of running one batch.
+//!
+//! The paper's §V algorithm is a continuous loop — "the system keeps
+//! monitoring the online profiling information … and issues a
+//! re-partitioning when the profiling information deviates from the
+//! predicted execution times" — and this type is that loop made
+//! operational:
+//!
+//! ```text
+//!   attach(cam₁) ─┐                       ┌─▸ windowed WorkerStats
+//!   attach(cam₂) ─┼─▸ mux ─▸ feeder ─▸ pipeline ─▸ sink (per-stream stats)
+//!   detach(cam₁) ─┘             ▲           │
+//!                               │           ▼
+//!                        hot-swap ◂── Monitor::observe_window
+//!                     (drain → recalibrate → re-solve → redeploy)
+//! ```
+//!
+//! * **Streams join and leave at runtime.** [`Server::attach`] registers a
+//!   camera ([`StreamSpec`]: fixed-rate or Poisson arrivals via
+//!   [`Arrivals`], a payload generator, an optional frame budget) and
+//!   spawns its pacing thread; frames are multiplexed over the engine's
+//!   `FrameIn.stream` tag through one bounded mux channel, so offered
+//!   load beyond capacity back-pressures each camera individually.
+//!   [`Server::detach`] stops one stream without disturbing the rest.
+//! * **One feeder owns the intake.** Camera-side sealing is strictly
+//!   sequential (the channel authenticates record sequence numbers), so a
+//!   single feeder thread seals and injects in mux order. During a
+//!   hot-swap the feeder parks on an empty gate; attached streams queue
+//!   into the mux and resume without losing their identity.
+//! * **Monitoring is online.** A control thread samples the running
+//!   pipeline every [`ServerConfig::window_secs`]
+//!   ([`RunningPipeline::snapshot`]), diffs consecutive snapshots into
+//!   [`WindowStats`](crate::runtime::pipeline::WindowStats), and feeds
+//!   them to [`Monitor::observe_window`] while
+//!   the system serves — the verdict can change the live system, not just
+//!   post-mortem a finished one.
+//! * **`Repartition` verdicts hot-swap.** The server drains in-flight
+//!   frames from the old pipeline, folds the observed per-stage times
+//!   into the topology's speed grades
+//!   ([`recalibrate_speeds`]), re-solves the placement against those
+//!   observed times, rebuilds through its [`StageBuilder`], and resumes
+//!   every attached stream — the caller never rebuilds anything.
+//!
+//! Two builders cover the two serving modes: [`DeployBuilder`] realizes
+//! placements through the attested [`Deployment`](super::Deployment) path
+//! (real NN partitions, sealed records), and [`SyntheticBuilder`] executes
+//! the cost model's nominal service times with injectable per-resource
+//! slowdowns — the artifact-free configuration the DES cross-validates,
+//! and the chaos harness `tests/server_session.rs` drives end-to-end.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::monitor::{Monitor, MonitorVerdict};
+use super::resources::ResourceManager;
+use crate::crypto::channel::Channel;
+use crate::model::Manifest;
+use crate::placement::cost::{recalibrate_speeds, CostModel, PathCost};
+use crate::placement::strategies::{plan, Strategy};
+use crate::placement::Placement;
+use crate::profiler::ModelProfile;
+use crate::runtime::loadgen::Arrivals;
+use crate::runtime::pipeline::{
+    FrameIn, FrameInjector, Pipeline, PipelineConfig, PipelineRunReport, PipelineSnapshot,
+    RunningPipeline,
+};
+use crate::topology::Topology;
+
+/// Identifier of an attached stream (unique for the server's lifetime).
+pub type StreamId = u32;
+
+/// How a pipeline generation is realized for a placement. The server
+/// calls this at launch and again on every hot-swap, so implementations
+/// must be re-entrant: anything that should survive a swap (an injected
+/// hardware slowdown, a device registry) lives in the builder, not in the
+/// pipeline it returns.
+pub trait StageBuilder: Send {
+    /// Build an executable (not yet started) pipeline realizing
+    /// `placement` over `topo`. `cost` is the *planner's* cost breakdown
+    /// for the placement (its predicted stage/boundary seconds — possibly
+    /// recalibrated from observations); builders that execute modelled
+    /// times should charge their own notion of ground truth instead.
+    fn build(
+        &mut self,
+        topo: &Topology,
+        placement: &Placement,
+        cost: &PathCost,
+        cfg: PipelineConfig,
+    ) -> Result<BuiltPipeline>;
+}
+
+/// What a [`StageBuilder`] hands back: the pipeline plus the camera-side
+/// sealing channel when stage 0 expects sealed records (the attested NN
+/// path; `None` for synthetic pipelines that take raw payloads).
+pub struct BuiltPipeline {
+    /// The built pipeline, ready to [`start`](Pipeline::start).
+    pub pipeline: Pipeline,
+    /// Camera-side sealer for the first hop, if the stages speak sealed
+    /// records.
+    pub camera: Option<Channel>,
+}
+
+/// Builder realizing placements through the attested deployment path:
+/// every swap re-attests the enclaves and reloads the partitions, exactly
+/// like the initial deploy (PJRT clients and block executables are
+/// per-device, so there is nothing to migrate — redeploying *is* the
+/// hot-swap).
+pub struct DeployBuilder {
+    manifest: Manifest,
+    model: String,
+    wan_bps: Option<f64>,
+}
+
+impl DeployBuilder {
+    /// A builder deploying `model` from `manifest`; `wan_bps` as in
+    /// [`Deployment::deploy`](super::Deployment::deploy).
+    pub fn new(manifest: Manifest, model: impl Into<String>, wan_bps: Option<f64>) -> Self {
+        DeployBuilder { manifest, model: model.into(), wan_bps }
+    }
+}
+
+impl StageBuilder for DeployBuilder {
+    fn build(
+        &mut self,
+        topo: &Topology,
+        placement: &Placement,
+        _cost: &PathCost,
+        cfg: PipelineConfig,
+    ) -> Result<BuiltPipeline> {
+        let rm = ResourceManager::for_topology(topo);
+        let dep = super::Deployment::deploy_with_config(
+            &self.manifest,
+            &rm,
+            &self.model,
+            placement,
+            self.wan_bps,
+            cfg,
+        )?;
+        let (_placement, pipeline, camera, _out_shape) = dep.into_parts();
+        Ok(BuiltPipeline { pipeline, camera: Some(camera) })
+    }
+}
+
+/// Builder whose stages *execute* the cost model's nominal service times
+/// (like [`Pipeline::synthetic`]) with a per-resource slowdown factor
+/// read at process time.
+///
+/// The factors are the chaos-injection surface: `slowdown("TEE1")`
+/// returns a shared cell; setting it to 3.0 makes every stage placed on
+/// `TEE1` run 3× its nominal time — in this generation *and every future
+/// one*, because slow hardware stays slow across a redeploy. Ground
+/// truth is always `nominal × factor`: the builder deliberately ignores
+/// the planner's (possibly recalibrated) cost so that planning estimates
+/// and world behavior stay distinct, which is what makes the
+/// monitor → re-solve → hot-swap loop honest to validate.
+pub struct SyntheticBuilder {
+    profile: ModelProfile,
+    nominal: Topology,
+    factors: HashMap<String, Arc<Mutex<f64>>>,
+}
+
+impl SyntheticBuilder {
+    /// A synthetic builder charging `profile` over the *nominal* (as
+    /// commissioned) `topo`.
+    pub fn new(profile: ModelProfile, topo: Topology) -> Self {
+        SyntheticBuilder { profile, nominal: topo, factors: HashMap::new() }
+    }
+
+    /// The shared slowdown cell of a resource (created at 1.0 on first
+    /// use). Writing it changes the resource's executed service times
+    /// immediately, across pipeline generations.
+    pub fn slowdown(&mut self, resource: &str) -> Arc<Mutex<f64>> {
+        self.factors
+            .entry(resource.to_string())
+            .or_insert_with(|| Arc::new(Mutex::new(1.0)))
+            .clone()
+    }
+}
+
+impl StageBuilder for SyntheticBuilder {
+    fn build(
+        &mut self,
+        topo: &Topology,
+        placement: &Placement,
+        _cost: &PathCost,
+        cfg: PipelineConfig,
+    ) -> Result<BuiltPipeline> {
+        // ground truth: the nominal cost of this placement (NOT the
+        // planner's recalibrated estimate), scaled live by the factors.
+        // The temporary CostModel must not outlive this statement — the
+        // factor-cell collection below needs `&mut self`.
+        let truth = CostModel::new(&self.profile, self.nominal.clone()).cost(placement);
+        let factors: Vec<Arc<Mutex<f64>>> = placement
+            .stages
+            .iter()
+            .map(|s| self.slowdown(topo.name_of(s.resource)))
+            .collect();
+        let pipeline =
+            Pipeline::synthetic_with(topo, placement, &truth, cfg, &mut |i, label, base| {
+                Box::new(crate::dataflow::ScaledDelayOperator {
+                    label,
+                    base,
+                    factor: factors[i].clone(),
+                })
+            });
+        Ok(BuiltPipeline { pipeline, camera: None })
+    }
+}
+
+/// Server knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Placement strategy the solver runs (at launch and on re-solve).
+    pub strategy: Strategy,
+    /// Chunk size `n` for the solver's chunk-time objective.
+    pub chunk: u64,
+    /// Engine configuration for every pipeline generation.
+    pub engine: PipelineConfig,
+    /// Monitoring window length (seconds between snapshots).
+    pub window_secs: f64,
+    /// Relative drift that counts as a strike (see [`Monitor`]).
+    pub drift_threshold: f64,
+    /// Consecutive drifting windows before a re-partition fires.
+    pub patience: u32,
+    /// Mux channel depth (frames buffered between cameras and feeder);
+    /// when full, cameras block — per-stream backpressure.
+    pub mux_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            strategy: Strategy::Proposed,
+            chunk: 10_800,
+            engine: PipelineConfig::default(),
+            window_secs: 0.25,
+            drift_threshold: 0.5,
+            patience: 2,
+            mux_depth: 16,
+        }
+    }
+}
+
+/// One camera stream to attach: an arrival process plus a payload
+/// generator (frame index → payload bytes; the feeder seals them when the
+/// pipeline speaks sealed records).
+pub struct StreamSpec {
+    /// Display label (e.g. `cam-3`).
+    pub label: String,
+    /// Mean inter-arrival seconds (0 = as fast as backpressure allows).
+    pub interval_secs: f64,
+    /// Exponential inter-arrivals (Poisson process) instead of fixed rate.
+    pub poisson: bool,
+    /// Seed of this stream's arrival process.
+    pub seed: u64,
+    /// Stop after this many frames (`None` = until detach/shutdown).
+    pub frames: Option<u64>,
+    /// Produces frame `k`'s payload bytes.
+    pub payload: Box<dyn FnMut(u64) -> Vec<u8> + Send>,
+}
+
+impl StreamSpec {
+    /// A fixed-rate stream of constant synthetic payloads.
+    pub fn synthetic(label: impl Into<String>, interval_secs: f64, bytes: usize) -> Self {
+        StreamSpec {
+            label: label.into(),
+            interval_secs,
+            poisson: false,
+            seed: 7,
+            frames: None,
+            payload: Box::new(move |_| vec![0u8; bytes]),
+        }
+    }
+}
+
+/// Handle to an attached stream: identity plus live feed counter. Detach
+/// through [`Server::detach`] with [`StreamHandle::id`].
+pub struct StreamHandle {
+    id: StreamId,
+    label: String,
+    fed: Arc<AtomicU64>,
+}
+
+impl StreamHandle {
+    /// The stream's server-unique id.
+    pub fn id(&self) -> StreamId {
+        self.id
+    }
+
+    /// The stream's display label.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Frames this stream has fed into the mux so far.
+    pub fn fed(&self) -> u64 {
+        self.fed.load(Ordering::SeqCst)
+    }
+}
+
+/// One completed hot-swap.
+#[derive(Debug, Clone)]
+pub struct SwapEvent {
+    /// Server-relative time the swap completed (seconds).
+    pub at_secs: f64,
+    /// Drifting stage index that triggered it.
+    pub stage: usize,
+    /// Its predicted per-frame seconds at trigger time.
+    pub predicted: f64,
+    /// Its observed (EWMA) per-frame seconds at trigger time.
+    pub observed: f64,
+    /// Placement before the swap (display form).
+    pub from: String,
+    /// Placement after the swap (display form).
+    pub to: String,
+    /// Steady-state throughput the re-solved plan predicts (frames/sec,
+    /// 1/period — the closed form the DES validates).
+    pub predicted_throughput_fps: f64,
+    /// Frames the old generation completed before retiring.
+    pub drained_frames: u64,
+}
+
+/// Live feed the server emits (take it once with [`Server::events`]).
+#[derive(Debug, Clone)]
+pub enum ServerEvent {
+    /// A stream joined.
+    Attached {
+        /// Stream id.
+        stream: StreamId,
+        /// Stream label.
+        label: String,
+    },
+    /// A stream left (final counters included).
+    Detached {
+        /// Stream id.
+        stream: StreamId,
+        /// Stream label.
+        label: String,
+        /// Frames it fed.
+        fed: u64,
+        /// Frames of its that completed.
+        completed: u64,
+    },
+    /// One monitoring window was observed.
+    Window {
+        /// Server-relative time (seconds).
+        at_secs: f64,
+        /// Exit throughput over the window (frames/sec).
+        throughput_fps: f64,
+        /// Observed mean compute seconds per stage (`None` = starved).
+        stage_means: Vec<Option<f64>>,
+        /// The monitor's verdict for the window.
+        verdict: MonitorVerdict,
+    },
+    /// A drift verdict fired; the hot-swap is starting.
+    SwapStarted {
+        /// Server-relative time (seconds).
+        at_secs: f64,
+        /// Drifting stage index.
+        stage: usize,
+        /// Predicted per-frame seconds.
+        predicted: f64,
+        /// Observed (EWMA) per-frame seconds.
+        observed: f64,
+    },
+    /// The hot-swap finished; streams resumed.
+    SwapCompleted(SwapEvent),
+    /// The hot-swap failed. Terminal: no pipeline generation is live and
+    /// nothing retries, so from here the feeder drains the mux and drops
+    /// frames (counted in `ServerReport::frames_dropped`) — cameras never
+    /// wedge, but nothing is served until shutdown.
+    SwapFailed {
+        /// Display form of the failure.
+        error: String,
+    },
+}
+
+/// Per-stream serving totals.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    /// Stream id.
+    pub id: StreamId,
+    /// Stream label.
+    pub label: String,
+    /// Frames the stream fed.
+    pub fed: u64,
+    /// Frames of this stream that completed the pipeline.
+    pub completed: u64,
+    /// Mean end-to-end latency of its completed frames (seconds).
+    pub mean_latency_secs: f64,
+}
+
+/// One pipeline generation's final statistics.
+#[derive(Debug, Clone)]
+pub struct SegmentReport {
+    /// The placement this generation realized (display form).
+    pub placement: String,
+    /// The engine's end-of-generation report.
+    pub report: PipelineRunReport,
+}
+
+/// Point-in-time server status.
+#[derive(Debug, Clone)]
+pub struct ServerStatus {
+    /// Current placement (display form; empty if a swap failed and no
+    /// generation is live).
+    pub placement: String,
+    /// Seconds since launch.
+    pub elapsed_secs: f64,
+    /// Frames completed across all generations.
+    pub frames_completed: u64,
+    /// Hot-swaps performed.
+    pub swaps: u32,
+    /// Per-stream live counters (attached and detached).
+    pub streams: Vec<StreamReport>,
+}
+
+/// Everything the server did, assembled at shutdown.
+#[derive(Debug, Clone)]
+pub struct ServerReport {
+    /// One entry per pipeline generation, launch order.
+    pub segments: Vec<SegmentReport>,
+    /// Per-stream totals (attach order).
+    pub streams: Vec<StreamReport>,
+    /// Hot-swaps performed.
+    pub swaps: Vec<SwapEvent>,
+    /// Final-hop outputs that failed to unframe.
+    pub sink_errors: u64,
+    /// Frames the feeder had to drop because no pipeline generation was
+    /// live to take them (only after a failed swap, or frames caught
+    /// mid-teardown). 0 on every healthy run — the hot-swap path drains,
+    /// it does not drop.
+    pub frames_dropped: u64,
+    /// Frames completed across all generations.
+    pub frames: u64,
+}
+
+/// A frame queued between a camera thread and the feeder.
+struct MuxFrame {
+    stream: StreamId,
+    payload: Vec<u8>,
+}
+
+/// What the feeder needs to push one frame: the current generation's
+/// intake and (for sealed pipelines) the camera-side sealer. Absent
+/// during a hot-swap — the feeder parks on the condvar.
+struct FeedGate {
+    injector: FrameInjector,
+    camera: Option<Channel>,
+}
+
+/// A live pipeline generation, owned by the control/shutdown paths.
+struct GenState {
+    handle: Arc<RunningPipeline>,
+    sink: JoinHandle<()>,
+    placement: Placement,
+    desc: String,
+}
+
+/// The planner state the control thread re-solves with.
+struct Planner {
+    topo: Topology,
+    builder: Box<dyn StageBuilder>,
+    monitor: Monitor,
+}
+
+/// Per-stream accounting, filled by the sink thread.
+#[derive(Debug, Clone, Default)]
+struct StreamAcct {
+    label: String,
+    /// Final fed count (written at detach; live count lives in the
+    /// stream thread's atomic until then).
+    fed: u64,
+    completed: u64,
+    latency_sum: f64,
+}
+
+/// An attached stream's control block.
+struct StreamEntry {
+    label: String,
+    stop: Arc<AtomicBool>,
+    fed: Arc<AtomicU64>,
+    thread: Option<JoinHandle<()>>,
+}
+
+struct ServerInner {
+    cfg: ServerConfig,
+    profile: ModelProfile,
+    t0: Instant,
+    shutting_down: AtomicBool,
+    /// Set when a hot-swap fails: no generation is coming, so the feeder
+    /// drains-and-drops instead of parking (cameras must never wedge).
+    broken: AtomicBool,
+    planner: Mutex<Planner>,
+    gen: Mutex<Option<GenState>>,
+    feed_gate: Mutex<Option<FeedGate>>,
+    feed_cv: Condvar,
+    streams: Mutex<HashMap<StreamId, StreamEntry>>,
+    acct: Mutex<HashMap<StreamId, StreamAcct>>,
+    attach_order: Mutex<Vec<StreamId>>,
+    segments: Mutex<Vec<SegmentReport>>,
+    swaps: Mutex<Vec<SwapEvent>>,
+    frames_past: AtomicU64,
+    frames_dropped: AtomicU64,
+    sink_errors: AtomicU64,
+    events: Mutex<Sender<ServerEvent>>,
+}
+
+impl ServerInner {
+    fn emit(&self, ev: ServerEvent) {
+        // receiver may never be taken or already dropped — both fine
+        let _ = self.events.lock().unwrap().send(ev);
+    }
+}
+
+/// The session-oriented serving surface (see the module docs). Construct
+/// with [`Server::launch`]; drive with [`attach`](Server::attach) /
+/// [`detach`](Server::detach); observe with [`status`](Server::status) /
+/// [`events`](Server::events); retire with [`shutdown`](Server::shutdown).
+pub struct Server {
+    inner: Arc<ServerInner>,
+    /// `None` once shutdown begins (closing the mux retires the feeder).
+    mux_tx: Option<SyncSender<MuxFrame>>,
+    feeder: Option<JoinHandle<()>>,
+    control: Option<JoinHandle<()>>,
+    events_rx: Option<Receiver<ServerEvent>>,
+    next_stream: StreamId,
+}
+
+impl Server {
+    /// Solve the initial placement of `profile` over `topo`, realize it
+    /// through `builder`, start serving, and start the online monitor.
+    pub fn launch(
+        profile: ModelProfile,
+        topo: Topology,
+        mut builder: Box<dyn StageBuilder>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let cm = CostModel::new(&profile, topo.clone());
+        let p = plan(cfg.strategy, &cm, cfg.chunk);
+        let built = builder
+            .build(&topo, &p.placement, &p.cost, cfg.engine)
+            .context("building the initial pipeline generation")?;
+        let rp = Arc::new(built.pipeline.start()?);
+        let injector = rp.injector()?;
+
+        let mut monitor = Monitor::new(p.cost.stage_secs.clone());
+        monitor.threshold = cfg.drift_threshold;
+        monitor.patience = cfg.patience;
+
+        let (ev_tx, ev_rx) = channel();
+        let desc = p.placement.describe(&topo);
+        let inner = Arc::new(ServerInner {
+            cfg: cfg.clone(),
+            profile,
+            t0: Instant::now(),
+            shutting_down: AtomicBool::new(false),
+            broken: AtomicBool::new(false),
+            planner: Mutex::new(Planner { topo, builder, monitor }),
+            gen: Mutex::new(None),
+            feed_gate: Mutex::new(Some(FeedGate { injector, camera: built.camera })),
+            feed_cv: Condvar::new(),
+            streams: Mutex::new(HashMap::new()),
+            acct: Mutex::new(HashMap::new()),
+            attach_order: Mutex::new(Vec::new()),
+            segments: Mutex::new(Vec::new()),
+            swaps: Mutex::new(Vec::new()),
+            frames_past: AtomicU64::new(0),
+            frames_dropped: AtomicU64::new(0),
+            sink_errors: AtomicU64::new(0),
+            events: Mutex::new(ev_tx),
+        });
+
+        let sink = spawn_sink(inner.clone(), rp.clone());
+        *inner.gen.lock().unwrap() =
+            Some(GenState { handle: rp, sink, placement: p.placement, desc });
+
+        let (mux_tx, mux_rx) = sync_channel::<MuxFrame>(cfg.mux_depth.max(1));
+        let feeder = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("server-feeder".into())
+                .spawn(move || feeder_loop(inner, mux_rx))
+                .expect("spawn server feeder")
+        };
+        let control = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("server-control".into())
+                .spawn(move || control_loop(inner))
+                .expect("spawn server control")
+        };
+
+        Ok(Server {
+            inner,
+            mux_tx: Some(mux_tx),
+            feeder: Some(feeder),
+            control: Some(control),
+            events_rx: Some(ev_rx),
+            next_stream: 0,
+        })
+    }
+
+    /// Take the live event feed (once). Events accumulate unread until
+    /// taken; dropping the receiver silently discards further events.
+    pub fn events(&mut self) -> Option<Receiver<ServerEvent>> {
+        self.events_rx.take()
+    }
+
+    /// Attach a camera stream: spawn its pacing thread and start feeding.
+    pub fn attach(&mut self, spec: StreamSpec) -> Result<StreamHandle> {
+        anyhow::ensure!(
+            !self.inner.shutting_down.load(Ordering::SeqCst),
+            "server is shutting down"
+        );
+        let id = self.next_stream;
+        self.next_stream += 1;
+        let StreamSpec { label, interval_secs, poisson, seed, frames, mut payload } = spec;
+        let stop = Arc::new(AtomicBool::new(false));
+        let fed = Arc::new(AtomicU64::new(0));
+        let mux = self
+            .mux_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server is shutting down"))?
+            .clone();
+        let mut arrivals = Arrivals::new(interval_secs, poisson, seed);
+        let thread = {
+            let stop = stop.clone();
+            let fed = fed.clone();
+            std::thread::Builder::new()
+                .name(format!("stream-{id}"))
+                .spawn(move || {
+                    let mut k = 0u64;
+                    loop {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        if let Some(n) = frames {
+                            if k >= n {
+                                break;
+                            }
+                        }
+                        let gap = arrivals.next_gap();
+                        if gap > 0.0 {
+                            sleep_interruptible(Duration::from_secs_f64(gap), &stop);
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                        }
+                        let bytes = payload(k);
+                        if mux.send(MuxFrame { stream: id, payload: bytes }).is_err() {
+                            break; // server gone
+                        }
+                        fed.fetch_add(1, Ordering::SeqCst);
+                        k += 1;
+                    }
+                })
+                .expect("spawn stream thread")
+        };
+        self.inner.acct.lock().unwrap().insert(
+            id,
+            StreamAcct { label: label.clone(), ..Default::default() },
+        );
+        self.inner.attach_order.lock().unwrap().push(id);
+        self.inner.streams.lock().unwrap().insert(
+            id,
+            StreamEntry { label: label.clone(), stop, fed: fed.clone(), thread: Some(thread) },
+        );
+        self.inner.emit(ServerEvent::Attached { stream: id, label: label.clone() });
+        Ok(StreamHandle { id, label, fed })
+    }
+
+    /// Detach a stream: stop its pacing thread and freeze its counters.
+    /// Frames it already fed keep flowing to completion.
+    pub fn detach(&mut self, id: StreamId) -> Result<StreamReport> {
+        let mut entry = self
+            .inner
+            .streams
+            .lock()
+            .unwrap()
+            .remove(&id)
+            .ok_or_else(|| anyhow!("no attached stream {id}"))?;
+        entry.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = entry.thread.take() {
+            let _ = t.join();
+        }
+        let fed = entry.fed.load(Ordering::SeqCst);
+        let report = {
+            let mut acct = self.inner.acct.lock().unwrap();
+            let a = acct.entry(id).or_default();
+            a.fed = fed;
+            stream_report(id, a, fed)
+        };
+        self.inner.emit(ServerEvent::Detached {
+            stream: id,
+            label: entry.label,
+            fed,
+            completed: report.completed,
+        });
+        Ok(report)
+    }
+
+    /// Point-in-time status: current placement, totals, per-stream
+    /// counters.
+    pub fn status(&self) -> ServerStatus {
+        let (placement, current) = match self.inner.gen.lock().unwrap().as_ref() {
+            Some(g) => (g.desc.clone(), g.handle.received()),
+            None => (String::new(), 0),
+        };
+        let streams = self.stream_reports();
+        ServerStatus {
+            placement,
+            elapsed_secs: self.inner.t0.elapsed().as_secs_f64(),
+            frames_completed: self.inner.frames_past.load(Ordering::SeqCst) + current,
+            swaps: self.inner.swaps.lock().unwrap().len() as u32,
+            streams,
+        }
+    }
+
+    /// Hot-swaps performed so far.
+    pub fn swaps(&self) -> Vec<SwapEvent> {
+        self.inner.swaps.lock().unwrap().clone()
+    }
+
+    /// The placement the live generation realizes (`None` only after a
+    /// failed swap left the server without a pipeline).
+    pub fn placement(&self) -> Option<Placement> {
+        self.inner.gen.lock().unwrap().as_ref().map(|g| g.placement.clone())
+    }
+
+    fn stream_reports(&self) -> Vec<StreamReport> {
+        let acct = self.inner.acct.lock().unwrap();
+        let streams = self.inner.streams.lock().unwrap();
+        self.inner
+            .attach_order
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|id| {
+                let a = acct.get(id)?;
+                // live streams report the thread's running feed counter
+                let fed = match streams.get(id) {
+                    Some(e) => e.fed.load(Ordering::SeqCst),
+                    None => a.fed,
+                };
+                Some(stream_report(*id, a, fed))
+            })
+            .collect()
+    }
+
+    /// Retire the server: detach every stream, drain the mux and the live
+    /// pipeline generation, join all threads, and assemble the final
+    /// report.
+    pub fn shutdown(mut self) -> Result<ServerReport> {
+        self.inner.shutting_down.store(true, Ordering::SeqCst);
+        // 1. stop the cameras (joins their threads; queued frames remain)
+        let ids: Vec<StreamId> =
+            self.inner.streams.lock().unwrap().keys().copied().collect();
+        for id in ids {
+            let _ = self.detach(id);
+        }
+        // 2. close the mux: the feeder drains what is queued, then exits
+        drop(self.mux_tx.take());
+        if let Some(f) = self.feeder.take() {
+            f.join().map_err(|_| anyhow!("server feeder panicked"))?;
+        }
+        // 3. join the control thread: it exits via the shutting_down flag
+        //    (checked in its interruptible sleep) after finishing any
+        //    in-flight swap
+        if let Some(c) = self.control.take() {
+            c.join().map_err(|_| anyhow!("server control thread panicked"))?;
+        }
+        // 4. drain the final generation
+        drop(self.inner.feed_gate.lock().unwrap().take());
+        let final_gen = self.inner.gen.lock().unwrap().take();
+        if let Some(g) = final_gen {
+            let report = drain_generation(g)?;
+            self.inner.frames_past.fetch_add(report.report.frames, Ordering::SeqCst);
+            self.inner.segments.lock().unwrap().push(report);
+        }
+        // 5. assemble
+        let streams = self.stream_reports();
+        let segments = self.inner.segments.lock().unwrap().clone();
+        let frames = segments.iter().map(|s| s.report.frames).sum();
+        Ok(ServerReport {
+            segments,
+            streams,
+            swaps: self.inner.swaps.lock().unwrap().clone(),
+            sink_errors: self.inner.sink_errors.load(Ordering::SeqCst),
+            frames_dropped: self.inner.frames_dropped.load(Ordering::SeqCst),
+            frames,
+        })
+    }
+}
+
+fn stream_report(id: StreamId, a: &StreamAcct, fed: u64) -> StreamReport {
+    StreamReport {
+        id,
+        label: a.label.clone(),
+        fed,
+        completed: a.completed,
+        mean_latency_secs: if a.completed > 0 {
+            a.latency_sum / a.completed as f64
+        } else {
+            0.0
+        },
+    }
+}
+
+/// Sleep up to `total`, waking early when `stop` flips.
+fn sleep_interruptible(total: Duration, stop: &AtomicBool) {
+    let deadline = Instant::now() + total;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return;
+        }
+        std::thread::sleep(left.min(Duration::from_millis(20)));
+    }
+}
+
+/// The feeder: single owner of camera sealing + pipeline intake. Frames
+/// arrive in mux order from every attached stream; during a hot-swap the
+/// gate is empty and the feeder parks until the new generation is up.
+///
+/// The feeder NEVER stops draining the mux: once the server is broken (a
+/// failed swap, no generation coming) or shutting down with no gate,
+/// frames are counted as dropped instead of fed — a full mux would
+/// otherwise leave camera threads blocked in `send` forever and hang
+/// `detach`/`shutdown` joins.
+fn feeder_loop(inner: Arc<ServerInner>, mux_rx: Receiver<MuxFrame>) {
+    while let Ok(mf) = mux_rx.recv() {
+        let mut gate = inner.feed_gate.lock().unwrap();
+        while gate.is_none() {
+            if inner.shutting_down.load(Ordering::SeqCst)
+                || inner.broken.load(Ordering::SeqCst)
+            {
+                break; // no generation will come for this frame
+            }
+            // timed wait: immune to missed wakeups
+            let (g, _timeout) = inner
+                .feed_cv
+                .wait_timeout(gate, Duration::from_millis(25))
+                .unwrap();
+            gate = g;
+        }
+        if gate.is_none() {
+            drop(gate);
+            inner.frames_dropped.fetch_add(1, Ordering::SeqCst);
+            continue; // keep draining so cameras never wedge in send
+        }
+        let g = gate.as_mut().unwrap();
+        let payload = match &mut g.camera {
+            Some(ch) => ch.tx.seal_record(&mf.payload),
+            None => mf.payload,
+        };
+        // a send error means the generation died; the control thread (or
+        // shutdown) will drain it — the frame is dropped, the loop goes on
+        if g.injector.send(FrameIn { stream: mf.stream, payload }).is_err() {
+            inner.frames_dropped.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// The per-generation sink: attributes completions to streams.
+fn spawn_sink(inner: Arc<ServerInner>, handle: Arc<RunningPipeline>) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("server-sink".into())
+        .spawn(move || {
+            while let Some(out) = handle.next_output() {
+                match out {
+                    Ok(o) => {
+                        let mut acct = inner.acct.lock().unwrap();
+                        let a = acct.entry(o.stream).or_default();
+                        a.completed += 1;
+                        a.latency_sum += o.latency_secs;
+                    }
+                    Err(_) => {
+                        inner.sink_errors.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }
+        })
+        .expect("spawn server sink")
+}
+
+/// Join a generation's sink, unwrap its handle, and finish it.
+fn drain_generation(g: GenState) -> Result<SegmentReport> {
+    let GenState { handle, sink, placement: _, desc } = g;
+    handle.close_intake();
+    sink.join().map_err(|_| anyhow!("server sink thread panicked"))?;
+    // transient strong refs (control-thread snapshots) may linger briefly
+    let mut handle = handle;
+    let handle = loop {
+        match Arc::try_unwrap(handle) {
+            Ok(h) => break h,
+            Err(again) => {
+                handle = again;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    };
+    let report = handle.finish()?;
+    Ok(SegmentReport { placement: desc, report })
+}
+
+/// The control thread: windowed online monitoring + drift-triggered
+/// hot-swaps (paper §V's continuous loop).
+fn control_loop(inner: Arc<ServerInner>) {
+    let mut prev: Option<PipelineSnapshot> = None;
+    let window = Duration::from_secs_f64(inner.cfg.window_secs.max(0.01));
+    loop {
+        sleep_interruptible(window, &inner.shutting_down);
+        if inner.shutting_down.load(Ordering::SeqCst) {
+            return;
+        }
+        let handle = match inner.gen.lock().unwrap().as_ref() {
+            Some(g) => g.handle.clone(),
+            None => continue, // a failed swap left no generation
+        };
+        let snap = handle.snapshot();
+        drop(handle); // release before a potential swap drains it
+        let win = match &prev {
+            Some(p) => snap.window_since(p),
+            None => {
+                prev = Some(snap);
+                continue;
+            }
+        };
+        prev = Some(snap);
+        let verdict = inner.planner.lock().unwrap().monitor.observe_window(&win);
+        // event timestamps are server-relative (snapshots are relative to
+        // their own generation's start and would jump back after a swap)
+        inner.emit(ServerEvent::Window {
+            at_secs: inner.t0.elapsed().as_secs_f64(),
+            throughput_fps: win.throughput(),
+            stage_means: win.stage_mean_compute(),
+            verdict: verdict.clone(),
+        });
+        if let MonitorVerdict::Repartition { stage, predicted, observed } = verdict {
+            inner.emit(ServerEvent::SwapStarted {
+                at_secs: inner.t0.elapsed().as_secs_f64(),
+                stage,
+                predicted,
+                observed,
+            });
+            match hot_swap(&inner, stage, predicted, observed) {
+                Ok(ev) => inner.emit(ServerEvent::SwapCompleted(ev)),
+                Err(e) => {
+                    // terminal: no generation is live and nothing retries;
+                    // flip `broken` so the feeder drains-and-drops instead
+                    // of parking (cameras would wedge in a full mux)
+                    inner.broken.store(true, Ordering::SeqCst);
+                    inner.emit(ServerEvent::SwapFailed { error: format!("{e:#}") });
+                }
+            }
+            prev = None; // snapshots of the old generation are history
+        }
+    }
+}
+
+/// Drain → recalibrate → re-solve → rebuild → resume.
+fn hot_swap(
+    inner: &Arc<ServerInner>,
+    stage: usize,
+    predicted: f64,
+    observed: f64,
+) -> Result<SwapEvent> {
+    // 1. pause intake: streams keep queueing in the bounded mux, the
+    //    feeder parks once the gate is empty
+    drop(inner.feed_gate.lock().unwrap().take());
+    // 2. drain the old generation (in-flight frames complete)
+    let old = inner
+        .gen
+        .lock()
+        .unwrap()
+        .take()
+        .ok_or_else(|| anyhow!("no live generation to swap"))?;
+    let old_placement = old.placement.clone();
+    let segment = drain_generation(old)?;
+    let drained_frames = segment.report.frames;
+    inner.frames_past.fetch_add(drained_frames, Ordering::SeqCst);
+    inner.segments.lock().unwrap().push(segment);
+
+    // 3. fold the observed profile into the topology and re-solve
+    let mut planner = inner.planner.lock().unwrap();
+    let Planner { topo, builder, monitor } = &mut *planner;
+    recalibrate_speeds(topo, &old_placement, monitor.predicted(), monitor.observed());
+    let cm = CostModel::new(&inner.profile, topo.clone());
+    let p = plan(inner.cfg.strategy, &cm, inner.cfg.chunk);
+    let from = old_placement.describe(topo);
+    let to = p.placement.describe(topo);
+
+    // 4. rebuild and restart through the builder
+    let built = builder
+        .build(topo, &p.placement, &p.cost, inner.cfg.engine)
+        .context("rebuilding the pipeline for the re-solved placement")?;
+    let rp = Arc::new(built.pipeline.start()?);
+    let injector = rp.injector()?;
+    monitor.reset(p.cost.stage_secs.clone());
+    let predicted_throughput_fps = 1.0 / p.cost.period_secs.max(1e-12);
+    let desc = to.clone();
+    drop(planner);
+
+    // 5. resume: new generation live, feeder unparked
+    let sink = spawn_sink(inner.clone(), rp.clone());
+    *inner.gen.lock().unwrap() =
+        Some(GenState { handle: rp, sink, placement: p.placement, desc });
+    *inner.feed_gate.lock().unwrap() =
+        Some(FeedGate { injector, camera: built.camera });
+    inner.feed_cv.notify_all();
+
+    let ev = SwapEvent {
+        at_secs: inner.t0.elapsed().as_secs_f64(),
+        stage,
+        predicted,
+        observed,
+        from,
+        to,
+        predicted_throughput_fps,
+        drained_frames,
+    };
+    inner.swaps.lock().unwrap().push(ev.clone());
+    Ok(ev)
+}

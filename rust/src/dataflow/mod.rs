@@ -51,10 +51,46 @@ impl Operator for DelayOperator {
     }
 }
 
+/// Delay operator whose per-frame service time is `base × factor`, the
+/// factor read from a shared cell at process time.
+///
+/// This is the chaos-injection operator behind the coordinator's
+/// synthetic server builder
+/// ([`SyntheticBuilder`](crate::coordinator::SyntheticBuilder)): scaling
+/// a resource's cell mid-run makes its stages measurably slower *without
+/// redeploying* — exactly the real-world drift (thermal throttling, a
+/// co-tenant stealing the enclave's cores) the online monitor exists to
+/// catch. The cell outlives any one pipeline generation, so a hot-swap
+/// does not "un-break" the slowed hardware.
+pub struct ScaledDelayOperator {
+    /// Display label.
+    pub label: String,
+    /// Nominal service time per frame.
+    pub base: std::time::Duration,
+    /// Shared slowdown multiplier (1.0 = nominal hardware).
+    pub factor: std::sync::Arc<std::sync::Mutex<f64>>,
+}
+
+impl Operator for ScaledDelayOperator {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn process(&mut self, sealed: &[u8]) -> Result<Vec<u8>> {
+        let f = (*self.factor.lock().unwrap()).max(0.0);
+        let d = self.base.mul_f64(f);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+        Ok(sealed.to_vec())
+    }
+}
+
 /// Transmission operator: charges the payload against a token bucket
 /// before forwarding (the paper's inter-device transfer at 30 Mbps).
 pub struct TransmitOperator {
-    /// Display label (e.g. `wan-after-0`).
+    /// Display label (e.g. `E1→E2`, the topology link this operator
+    /// realizes).
     pub label: String,
     /// The bandwidth shaper every forwarded byte is charged against.
     pub bucket: crate::net::TokenBucket,

@@ -11,12 +11,17 @@
 //! dependencies; the optional PJRT/XLA backend (`--features xla`)
 //! executes the compiled HLO artifacts.
 //!
-//! The serving path is pipeline-parallel ([`runtime::pipeline`]): one
-//! worker thread per placement stage, bounded channels with backpressure,
-//! framed inter-stage hand-offs, and per-stage statistics that the
-//! coordinator's monitor compares against the cost model — which the
-//! discrete-event simulator ([`sim`]) predicts and
-//! `tests/pipeline_vs_sim.rs` cross-validates.
+//! The serving path is pipeline-parallel and session-oriented
+//! ([`runtime::pipeline`], [`coordinator::Server`]): one worker thread
+//! per placement stage, bounded channels with backpressure, framed
+//! inter-stage hand-offs, camera streams that attach and detach at
+//! runtime, and live windowed per-stage statistics that the
+//! coordinator's monitor compares against the cost model *while the
+//! system serves* — sustained drift re-solves the placement against the
+//! observed times and hot-swaps the pipeline. The discrete-event
+//! simulator ([`sim`]) predicts the same quantities and
+//! `tests/pipeline_vs_sim.rs` / `tests/server_session.rs` cross-validate
+//! them.
 //!
 //! The resource graph is data ([`topology`]): a [`Topology`] names the
 //! devices, hosts, links, and camera/sink attachment points, and every

@@ -3,7 +3,8 @@
 //!
 //! Subcommands:
 //!   plan   — run the privacy-aware placement solver for a model
-//!   serve  — deploy a placement and stream synthetic surveillance video
+//!   serve  — operate a serving session: attach camera streams, watch the
+//!            online drift monitor, hot-swap on re-partition verdicts
 //!   sweep  — strategy × model speedup table (Fig. 12 shape, cost model)
 //!   study  — run the user-study simulators (Fig. 10 / Fig. 11)
 //!
@@ -11,8 +12,12 @@
 //! an arbitrary resource graph instead of the paper's two-edge testbed
 //! (see `examples/topologies/` for the schema and ready-made graphs).
 
+use std::time::{Duration, Instant};
+
 use anyhow::Result;
-use serdab::coordinator::{Deployment, ResourceManager};
+use serdab::coordinator::{
+    DeployBuilder, Server, ServerConfig, ServerEvent, StageBuilder, StreamSpec, SyntheticBuilder,
+};
 use serdab::figures::Table;
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::model::MODEL_NAMES;
@@ -58,7 +63,9 @@ fn usage() -> &'static str {
     "serdab — privacy-aware NN partitioning across enclaves\n\n\
      subcommands:\n\
      \x20 plan   --model <name> [--topology f.json] [--frames N] [--strategy s]  solve placement\n\
-     \x20 serve  --model <name> [--topology f.json] [--frames N] [--scene s]     deploy + stream\n\
+     \x20 serve  [--streams N] [--duration S] [--rate FPS] [--topology f.json]   serving session\n\
+     \x20        (multi-stream fan-in, online drift monitor, hot re-partitioning;\n\
+     \x20         uses real NN partitions with artifacts, synthetic stages without)\n\
      \x20 sweep  [--topology f.json] [--frames N]                                Fig.12-style table\n\
      \x20 study  [--subjects N]                                                  Fig.10/11 simulators\n\
      run any with --help for options"
@@ -162,11 +169,26 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse an optional f64 flag (empty = None).
+fn opt_f64(a: &Args, name: &str) -> Result<Option<f64>> {
+    match a.get(name) {
+        "" => Ok(None),
+        v => v
+            .parse::<f64>()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("--{name} must be a number")),
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let cmd = Command::new("serdab serve", "deploy a placement and stream video")
-        .opt("model", "squeezenet", "model name")
+    let cmd = Command::new("serdab serve", "operate a serving session over camera streams")
+        .opt("model", "squeezenet", "model name ('demo' forces the synthetic profile)")
         .opt("topology", "", "topology JSON file (default: the paper testbed)")
-        .opt("frames", "20", "frames to stream")
+        .opt("streams", "1", "camera streams to attach")
+        .opt("frames", "20", "frames per stream (when no --duration)")
+        .opt("duration", "", "serve for this many seconds instead of a frame budget")
+        .opt("rate", "", "per-stream frame rate, fps (default ~80% of pipeline capacity)")
+        .opt("window", "0.5", "online-monitor window, seconds")
         .opt("scene", "street", "street|indoor|harbour")
         .opt("strategy", "proposed", "placement strategy")
         .opt("backend", "", "execution backend (reference|xla; default $SERDAB_BACKEND)")
@@ -185,47 +207,170 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         );
         std::env::set_var("SERDAB_BACKEND", a.get("backend"));
     }
-    let man = load_manifest(default_artifacts_dir())?;
     let model = a.get("model").to_string();
-    let frames: usize = a.get_usize("frames").map_err(|e| anyhow::anyhow!(e))?;
+    let streams: u32 = a.get_usize("streams").map_err(|e| anyhow::anyhow!(e))? as u32;
+    anyhow::ensure!(streams >= 1, "--streams must be at least 1");
+    let frames_per_stream: u64 = a.get_u64("frames").map_err(|e| anyhow::anyhow!(e))?;
+    let duration = opt_f64(&a, "duration")?;
+    let rate = opt_f64(&a, "rate")?;
+    let window = opt_f64(&a, "window")?.unwrap_or(0.5);
+    let seed = a.get_u64("seed").map_err(|e| anyhow::anyhow!(e))?;
     let scene = match a.get("scene") {
         "street" => SceneKind::Street,
         "indoor" => SceneKind::Indoor,
         "harbour" => SceneKind::Harbour,
         s => anyhow::bail!("unknown scene '{s}'"),
     };
+    let strat = strategy_from(a.get("strategy"))?;
+    let wan_bps = opt_f64(&a, "wan-mbps")?.map(|mbps| mbps * 1e6);
     let topo = topology_from(&a)?;
     println!("topology: {}", topo.summary());
 
-    let info = man.model(&model)?;
-    let profile = calibrated_profile(info);
-    let cm = CostModel::new(&profile, topo.clone());
-    let strat = strategy_from(a.get("strategy"))?;
-    let p = plan(strat, &cm, frames as u64);
-    println!("placement: {}", p.placement.describe(cm.topology()));
-
-    let wan_bps = match a.get("wan-mbps") {
-        "" => None,
-        mbps => Some(
-            mbps.parse::<f64>().map_err(|_| anyhow::anyhow!("--wan-mbps must be a number"))?
-                * 1e6,
-        ),
+    // Serving mode: real NN partitions through the attested deployment
+    // path when the compiled artifacts exist; otherwise the synthetic
+    // builder executes the demo profile's modelled service times — same
+    // Server, same monitor loop, no artifacts required.
+    let artifacts = default_artifacts_dir();
+    let real = model != "demo" && artifacts.join("manifest.json").exists();
+    let (profile, builder): (ModelProfile, Box<dyn StageBuilder>) = if real {
+        let man = load_manifest(&artifacts)?;
+        let profile = calibrated_profile(man.model(&model)?);
+        (profile, Box::new(DeployBuilder::new(man, model.clone(), wan_bps)))
+    } else {
+        if model != "demo" {
+            eprintln!(
+                "note: no artifacts at {} — serving the built-in demo profile \
+                 synthetically (run `make artifacts` for the model zoo)",
+                artifacts.display()
+            );
+        }
+        let profile = ModelProfile::millis_demo();
+        (profile.clone(), Box::new(SyntheticBuilder::new(profile, topo.clone())))
     };
-    let rm = ResourceManager::for_topology(&topo);
-    let dep = Deployment::deploy(&man, &rm, &model, &p.placement, wan_bps, 4)?;
-    let mut src = VideoSource::new(scene, a.get_u64("seed").map_err(|e| anyhow::anyhow!(e))?);
-    let frames_vec: Vec<_> = (0..frames).map(|_| src.next_frame()).collect();
-    let rep = dep.run_stream(frames_vec.into_iter())?;
+
+    // Default per-stream rate: aggregate ≈ 80% of the planned pipeline
+    // capacity, so the session is busy but not saturated.
+    let interval_secs = match rate {
+        Some(fps) => {
+            anyhow::ensure!(fps > 0.0, "--rate must be positive");
+            1.0 / fps
+        }
+        None => {
+            let cm = CostModel::new(&profile, topo.clone());
+            let p = plan(strat, &cm, 10_800);
+            p.cost.period_secs * streams as f64 / 0.8
+        }
+    };
+
+    let cfg = ServerConfig {
+        strategy: strat,
+        window_secs: window,
+        ..ServerConfig::default()
+    };
+    let mut server = Server::launch(profile, topo, builder, cfg)?;
+    let events = server.events().expect("fresh server has its event feed");
+    println!("placement: {}", server.status().placement);
     println!(
-        "frames={} total={:.2}s throughput={:.2} fps mean-latency={:.3}s p99={:.3}s checksum={:.3}",
-        rep.frames,
-        rep.total_secs,
-        rep.throughput_fps,
-        rep.mean_latency_secs,
-        rep.p99_latency_secs,
-        rep.output_checksum
+        "serving: {streams} stream(s), {:.1} fps each{}",
+        1.0 / interval_secs,
+        match duration {
+            Some(d) => format!(", for {d:.1}s"),
+            None => format!(", {frames_per_stream} frames each"),
+        }
     );
+
+    for i in 0..streams {
+        let budget = if duration.is_some() { None } else { Some(frames_per_stream) };
+        let payload: Box<dyn FnMut(u64) -> Vec<u8> + Send> = if real {
+            let mut src = VideoSource::new(scene, seed.wrapping_add(i as u64));
+            Box::new(move |_| src.next_frame().to_le_bytes())
+        } else {
+            Box::new(|_| vec![0u8; 256])
+        };
+        server.attach(StreamSpec {
+            label: format!("cam-{i}"),
+            interval_secs,
+            poisson: false,
+            seed: seed.wrapping_add(i as u64),
+            frames: budget,
+            payload,
+        })?;
+    }
+
+    // Live monitor output until the deadline / frame budget is met (with
+    // a stall guard so lost frames cannot hang the CLI).
+    let deadline = duration.map(|d| Instant::now() + Duration::from_secs_f64(d));
+    let total_target = streams as u64 * frames_per_stream;
+    let mut last_progress = (0u64, Instant::now());
+    loop {
+        if let Ok(ev) = events.recv_timeout(Duration::from_millis(200)) {
+            print_server_event(&ev);
+        }
+        if let Some(dl) = deadline {
+            if Instant::now() >= dl {
+                break;
+            }
+            continue;
+        }
+        let st = server.status();
+        let fed: u64 = st.streams.iter().map(|s| s.fed).sum();
+        if fed >= total_target && st.frames_completed >= fed {
+            break;
+        }
+        if st.frames_completed != last_progress.0 {
+            last_progress = (st.frames_completed, Instant::now());
+        } else if last_progress.1.elapsed() > Duration::from_secs(15) {
+            eprintln!("warning: no serving progress for 15s — shutting down");
+            break;
+        }
+    }
+
+    let rep = server.shutdown()?;
+    println!(
+        "served {} frames over {} generation(s), {} hot-swap(s), {} sink error(s), {} dropped",
+        rep.frames,
+        rep.segments.len(),
+        rep.swaps.len(),
+        rep.sink_errors,
+        rep.frames_dropped
+    );
+    for s in &rep.streams {
+        println!(
+            "  {:<8} fed={} completed={} mean-latency={:.3}s",
+            s.label, s.fed, s.completed, s.mean_latency_secs
+        );
+    }
+    for (i, seg) in rep.segments.iter().enumerate() {
+        println!(
+            "  gen {i}: {} — {} frames, {:.2} fps",
+            seg.placement,
+            seg.report.frames,
+            seg.report.throughput()
+        );
+    }
     Ok(())
+}
+
+/// One line per server event, CLI form.
+fn print_server_event(ev: &ServerEvent) {
+    match ev {
+        ServerEvent::Attached { stream, label } => println!("+ stream {stream} ({label})"),
+        ServerEvent::Detached { stream, label, fed, completed } => {
+            println!("- stream {stream} ({label}): fed {fed}, completed {completed}")
+        }
+        ServerEvent::Window { at_secs, throughput_fps, verdict, .. } => {
+            println!("t={at_secs:7.2}s  window: {throughput_fps:7.2} fps  {verdict:?}")
+        }
+        ServerEvent::SwapStarted { at_secs, stage, predicted, observed } => println!(
+            "t={at_secs:7.2}s  DRIFT stage {stage}: predicted {predicted:.4}s observed \
+             {observed:.4}s — re-partitioning"
+        ),
+        ServerEvent::SwapCompleted(ev) => println!(
+            "t={:7.2}s  SWAPPED {} → {} (predicted {:.1} fps, drained {} frames)",
+            ev.at_secs, ev.from, ev.to, ev.predicted_throughput_fps, ev.drained_frames
+        ),
+        ServerEvent::SwapFailed { error } => println!("swap FAILED: {error}"),
+    }
 }
 
 fn cmd_study(argv: &[String]) -> Result<()> {

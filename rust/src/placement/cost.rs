@@ -116,6 +116,40 @@ impl<'a> CostModel<'a> {
     }
 }
 
+/// Fold an *observed* per-stage profile back into the topology's speed
+/// grades — the paper §V step where re-partitioning is issued "with the
+/// observed times". For each stage of `placement` whose observed mean
+/// per-frame seconds deviates from the prediction, the stage's resource
+/// speed is divided by the observed/predicted ratio, so every subsequent
+/// [`CostModel`] solve over the returned topology charges the measured
+/// rate. Stages without a meaningful pair (zero/absent entries) keep
+/// their grade. Returns the per-stage ratios applied.
+///
+/// For enclaves with a non-zero EPC paging term the correction is
+/// approximate (paging seconds do not scale with the speed grade), which
+/// is fine for drift *detection-driven* re-solves: the solver only needs
+/// the slowed resource charged roughly its measured cost to route work
+/// around it.
+pub fn recalibrate_speeds(
+    topo: &mut Topology,
+    placement: &Placement,
+    predicted: &[f64],
+    observed: &[f64],
+) -> Vec<f64> {
+    let mut ratios = Vec::with_capacity(placement.stages.len());
+    for (i, stage) in placement.stages.iter().enumerate() {
+        let p = predicted.get(i).copied().unwrap_or(0.0);
+        let o = observed.get(i).copied().unwrap_or(0.0);
+        let ratio = if p > 0.0 && o > 0.0 { o / p } else { 1.0 };
+        if (ratio - 1.0).abs() > 1e-9 {
+            let s = topo.speed_of(stage.resource);
+            topo.set_speed(stage.resource, s / ratio);
+        }
+        ratios.push(ratio);
+    }
+    ratios
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +248,36 @@ mod tests {
         let solo = cm.cost(&Placement::single(rid(&cm, "TEE1"), 4));
         let split = cm.cost(&place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "GPU2"), 2..4)]));
         assert!(split.period_secs < solo.period_secs);
+    }
+
+    #[test]
+    fn recalibrate_speeds_makes_the_model_charge_observed_times() {
+        let prof = toy_profile(); // TEE blocks 1s, no paging
+        let mut topo = Topology::paper_testbed();
+        let t1 = topo.require("TEE1").unwrap();
+        let t2 = topo.require("TEE2").unwrap();
+        let placement = place(vec![(t1, 0..2), (t2, 2..4)]);
+        let predicted = CostModel::new(&prof, topo.clone()).cost(&placement).stage_secs.clone();
+        assert!((predicted[0] - 2.0).abs() < 1e-9);
+
+        // TEE1 measured 3x slower, TEE2 on prediction
+        let observed = vec![predicted[0] * 3.0, predicted[1]];
+        let ratios = recalibrate_speeds(&mut topo, &placement, &predicted, &observed);
+        assert!((ratios[0] - 3.0).abs() < 1e-9 && (ratios[1] - 1.0).abs() < 1e-9);
+        assert!((topo.speed_of(t1) - 1.0 / 3.0).abs() < 1e-9);
+        assert!((topo.speed_of(t2) - 1.0).abs() < 1e-9);
+
+        // a fresh solve over the recalibrated topology charges what was
+        // measured — this is what "re-solve against observed stage times"
+        // means mechanically
+        let cost = CostModel::new(&prof, topo.clone()).cost(&placement);
+        assert!((cost.stage_secs[0] - observed[0]).abs() < 1e-9);
+        assert!((cost.stage_secs[1] - observed[1]).abs() < 1e-9);
+
+        // degenerate inputs leave grades alone
+        let before = topo.speed_of(t1);
+        recalibrate_speeds(&mut topo, &placement, &[0.0, 0.0], &[1.0, 1.0]);
+        assert_eq!(topo.speed_of(t1), before);
     }
 
     #[test]

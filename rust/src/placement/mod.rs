@@ -18,7 +18,7 @@ pub mod cost;
 pub mod strategies;
 pub mod tree;
 
-pub use cost::{CostModel, PathCost};
+pub use cost::{recalibrate_speeds, CostModel, PathCost};
 pub use strategies::{plan, Strategy};
 pub use tree::{enumerate_paths, full_tree, TreeStats};
 

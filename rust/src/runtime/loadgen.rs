@@ -47,6 +47,43 @@ impl Default for LoadGenConfig {
     }
 }
 
+/// One stream's inter-arrival process (fixed-rate or Poisson),
+/// deterministic from its RNG state — the shared core behind
+/// [`LoadGen`]'s precomputed schedules and the live pacing of
+/// [`coordinator::Server`](crate::coordinator::Server) streams, so an
+/// attached camera and a simulated one draw identical gap sequences.
+#[derive(Debug, Clone)]
+pub struct Arrivals {
+    interval_secs: f64,
+    poisson: bool,
+    rng: Rng,
+}
+
+impl Arrivals {
+    /// An arrival process seeded independently of any other stream.
+    pub fn new(interval_secs: f64, poisson: bool, seed: u64) -> Self {
+        Arrivals { interval_secs, poisson, rng: Rng::new(seed) }
+    }
+
+    /// An arrival process over an already-forked RNG (how [`LoadGen`]
+    /// derives per-stream processes from one seed).
+    pub fn from_rng(interval_secs: f64, poisson: bool, rng: Rng) -> Self {
+        Arrivals { interval_secs, poisson, rng }
+    }
+
+    /// Draw the next inter-arrival gap in seconds (0 when the configured
+    /// rate is unbounded — every frame available immediately).
+    pub fn next_gap(&mut self) -> f64 {
+        if self.interval_secs <= 0.0 {
+            0.0
+        } else if self.poisson {
+            -(1.0 - self.rng.f64()).ln() * self.interval_secs
+        } else {
+            self.interval_secs
+        }
+    }
+}
+
 /// A precomputed, merged arrival schedule over all streams.
 pub struct LoadGen {
     streams: u32,
@@ -62,17 +99,11 @@ impl LoadGen {
             (cfg.streams as u64 * cfg.frames_per_stream) as usize,
         );
         for s in 0..cfg.streams {
-            let mut srng = rng.fork(s as u64 + 1);
+            let mut arr =
+                Arrivals::from_rng(cfg.interval_secs, cfg.poisson, rng.fork(s as u64 + 1));
             let mut t = 0.0f64;
             for _ in 0..cfg.frames_per_stream {
-                let dt = if cfg.interval_secs <= 0.0 {
-                    0.0
-                } else if cfg.poisson {
-                    -(1.0 - srng.f64()).ln() * cfg.interval_secs
-                } else {
-                    cfg.interval_secs
-                };
-                t += dt;
+                t += arr.next_gap();
                 schedule.push((t, s));
             }
         }
@@ -160,6 +191,43 @@ mod tests {
                 40
             );
         }
+    }
+
+    #[test]
+    fn arrivals_process_matches_loadgen_schedule() {
+        // a live Arrivals process forked the way LoadGen forks must draw
+        // the exact gap sequence the precomputed schedule contains — this
+        // is what makes a Server stream reproducible by the DES
+        let cfg = LoadGenConfig {
+            streams: 2,
+            frames_per_stream: 25,
+            interval_secs: 0.03,
+            poisson: true,
+            seed: 99,
+        };
+        let lg = LoadGen::new(&cfg);
+        // fork order matters: replay the same parent-RNG fork sequence
+        let mut rng = crate::util::rng::Rng::new(cfg.seed);
+        for s in 0..cfg.streams {
+            let mut arr = Arrivals::from_rng(cfg.interval_secs, cfg.poisson, rng.fork(s as u64 + 1));
+            let mut t = 0.0;
+            let mine: Vec<f64> = (0..cfg.frames_per_stream)
+                .map(|_| {
+                    t += arr.next_gap();
+                    t
+                })
+                .collect();
+            let theirs: Vec<f64> = lg
+                .arrivals()
+                .iter()
+                .filter(|&&(_, x)| x == s)
+                .map(|&(t, _)| t)
+                .collect();
+            assert_eq!(mine, theirs, "stream {s} diverged");
+        }
+        // zero interval = unbounded rate
+        let mut a = Arrivals::new(0.0, true, 1);
+        assert_eq!(a.next_gap(), 0.0);
     }
 
     #[test]

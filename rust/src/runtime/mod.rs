@@ -20,9 +20,10 @@ pub mod tensor;
 
 pub use backend::{backend_by_name, default_backend, Backend, BlockRunner};
 pub use executor::{BlockExecutable, ChainExecutor};
-pub use loadgen::{LoadGen, LoadGenConfig};
+pub use loadgen::{Arrivals, LoadGen, LoadGenConfig};
 pub use pipeline::{
-    FrameIn, Pipeline, PipelineConfig, PipelineOutput, PipelineRunReport, StageSpec, WorkerKind,
+    stats_channel, FrameIn, FrameInjector, Pipeline, PipelineConfig, PipelineOutput,
+    PipelineRunReport, PipelineSnapshot, RunningPipeline, StageSpec, WindowStats, WorkerKind,
     WorkerStats,
 };
 pub use tensor::Tensor;

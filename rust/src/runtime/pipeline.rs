@@ -1,9 +1,17 @@
 //! Pipeline-parallel serving runtime: the *executed* counterpart of the
 //! discrete-event simulator (`sim::pipeline`).
 //!
-//! A [`Pipeline`] is an ordered list of [`StageSpec`]s. [`Pipeline::run`]
+//! A [`Pipeline`] is an ordered list of [`StageSpec`]s. [`Pipeline::start`]
 //! spawns one OS worker thread per stage, connects consecutive workers
-//! with bounded SPSC channels, and streams frames through:
+//! with bounded channels, and hands back a [`RunningPipeline`] session
+//! handle: frames enter through cloneable [`FrameInjector`]s (multi-camera
+//! fan-in over [`FrameIn::stream`]), completed frames leave through
+//! [`RunningPipeline::next_output`], live windowed statistics come from
+//! [`RunningPipeline::snapshot`] / [`stats_channel`] (what the
+//! coordinator's online monitor consumes), and
+//! [`RunningPipeline::finish`] drains in-flight frames and joins the
+//! workers — the drain step of the coordinator's hot-swap. The one-shot
+//! [`Pipeline::run`] is a thin wrapper over that lifecycle:
 //!
 //! ```text
 //!   feeder ──▸ [stage 0] ──▸ [link 0] ──▸ [stage 1] ──▸ … ──▸ sink
@@ -51,7 +59,9 @@
 
 use std::io::Cursor;
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -161,7 +171,8 @@ pub struct PipelineOutput {
 /// breakdown when the operator is an NN service.
 #[derive(Debug, Clone)]
 pub struct WorkerStats {
-    /// Stage label (e.g. `TEE1[0..4]` or `wan-after-0`).
+    /// Stage label (e.g. `TEE1[0..4]` for a compute stage, `E1→E2` for a
+    /// cross-host link).
     pub label: String,
     /// Compute stage or boundary link.
     pub kind: WorkerKind,
@@ -295,6 +306,103 @@ pub fn stage_occupancy_of(workers: &[WorkerStats], horizon_secs: f64) -> Vec<f64
     stage_workers(workers).map(|w| w.occupancy(horizon_secs)).collect()
 }
 
+/// A point-in-time sample of every worker's cumulative counters, taken
+/// from a live [`RunningPipeline`] — the "online profiling information"
+/// of paper §V, available *while the pipeline serves* instead of only in
+/// the end-of-run report. Two snapshots subtract into a [`WindowStats`].
+#[derive(Debug, Clone)]
+pub struct PipelineSnapshot {
+    /// Seconds since the pipeline started.
+    pub at_secs: f64,
+    /// Cumulative per-worker counters, pipeline order.
+    pub workers: Vec<WorkerStats>,
+}
+
+impl PipelineSnapshot {
+    /// Counter deltas since `prev` — the per-window observation the
+    /// coordinator's [`Monitor`](crate::coordinator::Monitor) consumes
+    /// online. `prev` must come from the same pipeline (same worker
+    /// arity); the window spans `prev.at_secs..self.at_secs`.
+    pub fn window_since(&self, prev: &PipelineSnapshot) -> WindowStats {
+        debug_assert_eq!(
+            self.workers.len(),
+            prev.workers.len(),
+            "snapshots from different pipelines"
+        );
+        let workers = self
+            .workers
+            .iter()
+            .zip(&prev.workers)
+            .map(|(cur, old)| WorkerStats {
+                label: cur.label.clone(),
+                kind: cur.kind,
+                frames: cur.frames.saturating_sub(old.frames),
+                busy_secs: (cur.busy_secs - old.busy_secs).max(0.0),
+                queue_wait_secs: (cur.queue_wait_secs - old.queue_wait_secs).max(0.0),
+                blocked_secs: (cur.blocked_secs - old.blocked_secs).max(0.0),
+                idle_secs: (cur.idle_secs - old.idle_secs).max(0.0),
+                service: match (&cur.service, &old.service) {
+                    (Some(c), Some(o)) => Some(ServiceStats {
+                        frames: c.frames.saturating_sub(o.frames),
+                        compute_secs: (c.compute_secs - o.compute_secs).max(0.0),
+                        open_secs: (c.open_secs - o.open_secs).max(0.0),
+                        seal_secs: (c.seal_secs - o.seal_secs).max(0.0),
+                    }),
+                    (Some(c), None) => Some(c.clone()),
+                    _ => None,
+                },
+            })
+            .collect();
+        WindowStats { span_secs: (self.at_secs - prev.at_secs).max(0.0), workers }
+    }
+}
+
+/// Per-worker counter deltas over one observation window.
+#[derive(Debug, Clone)]
+pub struct WindowStats {
+    /// Window length in seconds.
+    pub span_secs: f64,
+    /// Per-worker deltas (frames retired, busy/wait/blocked/idle seconds,
+    /// service breakdown), pipeline order.
+    pub workers: Vec<WorkerStats>,
+}
+
+impl WindowStats {
+    /// Observed mean *compute* seconds per frame for each compute stage
+    /// over the window (`None` for stages that retired no frames — e.g.
+    /// right after a stream attached, or a starved tail stage). Uses the
+    /// NN service breakdown (crypto excluded) when available, the
+    /// worker's busy time otherwise — the same convention as
+    /// `DeploymentReport::stage_mean_compute`.
+    pub fn stage_mean_compute(&self) -> Vec<Option<f64>> {
+        stage_workers(&self.workers)
+            .map(|w| {
+                if w.frames == 0 {
+                    return None;
+                }
+                Some(match &w.service {
+                    Some(s) if s.frames > 0 => s.compute_secs / s.frames as f64,
+                    _ => w.busy_secs / w.frames as f64,
+                })
+            })
+            .collect()
+    }
+
+    /// Frames that left the final worker during the window.
+    pub fn frames_out(&self) -> u64 {
+        self.workers.last().map(|w| w.frames).unwrap_or(0)
+    }
+
+    /// Exit throughput over the window (frames/sec).
+    pub fn throughput(&self) -> f64 {
+        if self.span_secs > 0.0 {
+            self.frames_out() as f64 / self.span_secs
+        } else {
+            0.0
+        }
+    }
+}
+
 /// A frame in flight between workers.
 struct WirePacket {
     seq: u64,
@@ -359,19 +467,45 @@ impl Pipeline {
         cost: &PathCost,
         cfg: PipelineConfig,
     ) -> Pipeline {
+        Self::synthetic_with(topo, placement, cost, cfg, &mut |_i, label, delay| {
+            Box::new(crate::dataflow::DelayOperator { label, delay })
+        })
+    }
+
+    /// [`Pipeline::synthetic`] with a custom compute-stage operator
+    /// factory (`(stage index, label, modelled service time) → operator`)
+    /// — the shared chassis behind the plain synthetic pipeline and the
+    /// coordinator's chaos-injecting synthetic server builder. Link
+    /// workers are always plain delays; cross-host boundaries are named
+    /// after the link they cross (`E1→E2`), intra-host (crypto-only)
+    /// boundaries `seal-{i}`.
+    pub fn synthetic_with(
+        topo: &Topology,
+        placement: &Placement,
+        cost: &PathCost,
+        cfg: PipelineConfig,
+        stage_op: &mut dyn FnMut(usize, String, Duration) -> Box<dyn Operator + Send>,
+    ) -> Pipeline {
         let mut p = Pipeline::new(cfg);
         for (i, stage) in placement.stages.iter().enumerate() {
             let delay = Duration::from_secs_f64(cost.stage_secs[i]);
             p.add_stage(StageSpec::from_operator(
                 WorkerKind::Stage,
-                Box::new(crate::dataflow::DelayOperator { label: stage.label(topo), delay }),
+                stage_op(i, stage.label(topo), delay),
             ));
             if i < cost.boundary_secs.len() {
                 let (crypto, transfer) = cost.boundary_secs[i];
+                let host = topo.host_of(stage.resource);
+                let next_host = topo.host_of(placement.stages[i + 1].resource);
+                let label = if host == next_host {
+                    format!("seal-{i}")
+                } else {
+                    topo.link_label(host, next_host)
+                };
                 p.add_stage(StageSpec::from_operator(
                     WorkerKind::Link,
                     Box::new(crate::dataflow::DelayOperator {
-                        label: format!("link-{i}"),
+                        label,
                         delay: Duration::from_secs_f64(crypto + transfer),
                     }),
                 ));
@@ -380,20 +514,70 @@ impl Pipeline {
         p
     }
 
-    /// Execute the pipeline: spawn the workers, stream `feed` through, and
-    /// hand every completed frame to `sink` on the calling thread.
+    /// Execute the pipeline end-to-end: spawn the workers, stream `feed`
+    /// through, and hand every completed frame to `sink` on the calling
+    /// thread.
     ///
-    /// The feed iterator is driven from a dedicated source thread and may
-    /// pace itself by sleeping in `next()` (what
-    /// [`LoadGen`](crate::runtime::loadgen::LoadGen) does); a full first
-    /// queue blocks the source, so backpressure reaches the camera. The
-    /// call returns when every fed frame has exited (or any worker
-    /// failed, in which case the first error is returned).
+    /// This is the one-shot convenience over the session lifecycle
+    /// ([`Pipeline::start`] → inject → drain): it starts the pipeline,
+    /// drives the feed from a dedicated source thread (the iterator may
+    /// pace itself by sleeping in `next()`, as
+    /// [`LoadGen`](crate::runtime::loadgen::LoadGen) does; a full first
+    /// queue blocks the source, so backpressure reaches the camera),
+    /// drains the sink, and finishes. The call returns when every fed
+    /// frame has exited (or any worker failed, in which case the first
+    /// error is returned).
     pub fn run<I, S>(self, feed: I, mut sink: S) -> Result<PipelineRunReport>
     where
         I: Iterator<Item = FrameIn> + Send + 'static,
         S: FnMut(PipelineOutput),
     {
+        let rp = self.start()?;
+        let inj = rp.injector()?;
+        rp.close_intake(); // the feeder's clone is the only sender left
+        let feeder = std::thread::Builder::new()
+            .name("pipeline-source".into())
+            .spawn(move || {
+                for f in feed {
+                    if inj.send(f).is_err() {
+                        break; // pipeline tore down (a worker failed)
+                    }
+                }
+            })
+            .expect("spawn pipeline source thread");
+
+        let mut sink_err: Option<anyhow::Error> = None;
+        while let Some(out) = rp.next_output() {
+            match out {
+                Ok(o) => sink(o),
+                Err(e) => {
+                    if sink_err.is_none() {
+                        sink_err = Some(e);
+                    }
+                }
+            }
+        }
+        feeder.join().map_err(|_| anyhow!("pipeline source thread panicked"))?;
+        let report = rp.finish();
+        if let Some(e) = sink_err {
+            return Err(e);
+        }
+        report
+    }
+
+    /// Start the pipeline as a long-lived session: spawn the workers and
+    /// return a [`RunningPipeline`] handle.
+    ///
+    /// Frames enter through cloneable [`FrameInjector`]s
+    /// ([`RunningPipeline::injector`]), completed frames leave through
+    /// [`RunningPipeline::next_output`], live per-worker counters are
+    /// sampled with [`RunningPipeline::snapshot`] (or pushed on a
+    /// [`stats_channel`]), and [`RunningPipeline::finish`] drains
+    /// in-flight frames and joins everything into the final
+    /// [`PipelineRunReport`]. This is the serving surface the
+    /// coordinator's `Server` multiplexes camera streams onto and
+    /// hot-swaps behind.
+    pub fn start(self) -> Result<RunningPipeline> {
         anyhow::ensure!(!self.specs.is_empty(), "pipeline has no stages");
         let cfg = self.cfg;
         let cap = cfg.queue_cap.max(1);
@@ -401,12 +585,24 @@ impl Pipeline {
 
         let (source_tx, mut rx) = sync_channel::<WirePacket>(cap);
         let n = self.specs.len();
-        let mut workers: Vec<(String, JoinHandle<Result<WorkerStats>>)> = Vec::new();
+        let mut workers: Vec<(String, JoinHandle<Result<()>>)> = Vec::new();
+        let mut cells: Vec<StatsCell> = Vec::new();
         let mut bridges: Vec<JoinHandle<Result<()>>> = Vec::new();
         for (i, spec) in self.specs.into_iter().enumerate() {
             let (tx, next_rx) = sync_channel::<WirePacket>(cap);
             let label = spec.label.clone();
-            workers.push((label, spawn_worker(spec, rx, tx, cfg.framed)));
+            let cell: StatsCell = Arc::new(Mutex::new(WorkerStats {
+                label: label.clone(),
+                kind: spec.kind,
+                frames: 0,
+                busy_secs: 0.0,
+                queue_wait_secs: 0.0,
+                blocked_secs: 0.0,
+                idle_secs: 0.0,
+                service: None,
+            }));
+            workers.push((label, spawn_worker(spec, rx, tx, cfg.framed, cell.clone())));
+            cells.push(cell);
             rx = next_rx;
             if cfg.tcp_hops && i + 1 < n {
                 let (btx, brx) = sync_channel::<WirePacket>(cap);
@@ -417,62 +613,207 @@ impl Pipeline {
             }
         }
 
-        let framed = cfg.framed;
-        let t0 = Instant::now();
-        let feeder = std::thread::Builder::new()
-            .name("pipeline-source".into())
-            .spawn(move || -> Result<u64> {
-                let mut seq = 0u64;
-                for f in feed {
-                    let bytes = if framed { frame_data(&f.payload)? } else { f.payload };
-                    let now = Instant::now();
-                    let pkt =
-                        WirePacket { seq, stream: f.stream, bytes, born: now, enqueued: now };
-                    if source_tx.send(pkt).is_err() {
-                        break; // pipeline tore down (a worker failed)
-                    }
-                    seq += 1;
-                }
-                Ok(seq)
-            })
-            .expect("spawn pipeline source thread");
+        let pushed = Arc::new(AtomicU64::new(0));
+        let injector = FrameInjector {
+            tx: source_tx,
+            seq: Arc::new(AtomicU64::new(0)),
+            pushed: pushed.clone(),
+            framed: cfg.framed,
+        };
+        Ok(RunningPipeline {
+            framed: cfg.framed,
+            t0: Instant::now(),
+            intake: Mutex::new(Some(injector)),
+            outputs: Mutex::new(rx),
+            pushed,
+            cells,
+            workers: Mutex::new(workers),
+            bridges: Mutex::new(bridges),
+            acct: Mutex::new(SinkAcct {
+                latencies: Vec::new(),
+                received: 0,
+                errors: 0,
+                completion_secs: 0.0,
+            }),
+        })
+    }
+}
 
-        let mut latencies = Vec::new();
-        let mut received = 0u64;
-        let mut completion = 0.0f64;
+/// Cloneable intake handle of a [`RunningPipeline`]: frames sent here
+/// enter the source queue (blocking while it is full — backpressure
+/// reaches the caller, i.e. the camera). Dropping every injector clone
+/// (plus [`RunningPipeline::close_intake`]) ends the stream and lets the
+/// workers retire.
+///
+/// Sequence numbers are assigned at `send`; with several injector clones
+/// feeding concurrently the interleaving (and therefore the seq ↔ channel
+/// order correspondence) is racy, so multiplexers that care about order —
+/// like the coordinator's `Server`, whose camera sealing is strictly
+/// sequential — funnel all streams through one feeding thread.
+#[derive(Clone)]
+pub struct FrameInjector {
+    tx: SyncSender<WirePacket>,
+    seq: Arc<AtomicU64>,
+    pushed: Arc<AtomicU64>,
+    framed: bool,
+}
+
+impl FrameInjector {
+    /// Push one frame into the pipeline; blocks while the source queue is
+    /// full. Returns the frame's sequence number, or an error when the
+    /// pipeline has torn down (a worker failed or the run was drained).
+    pub fn send(&self, frame: FrameIn) -> Result<u64> {
+        let bytes = if self.framed { frame_data(&frame.payload)? } else { frame.payload };
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let now = Instant::now();
+        let pkt = WirePacket { seq, stream: frame.stream, bytes, born: now, enqueued: now };
+        self.tx
+            .send(pkt)
+            .map_err(|_| anyhow!("pipeline intake closed (workers gone or run drained)"))?;
+        self.pushed.fetch_add(1, Ordering::SeqCst);
+        Ok(seq)
+    }
+}
+
+/// Per-worker cumulative counters shared between the worker thread (which
+/// updates them after every frame) and snapshot readers.
+type StatsCell = Arc<Mutex<WorkerStats>>;
+
+/// Sink-side accounting, filled in by whoever consumes
+/// [`RunningPipeline::next_output`].
+struct SinkAcct {
+    latencies: Vec<f64>,
+    received: u64,
+    /// Frames that exited but failed to unframe (consumed as `Err` items;
+    /// they still count against `pushed` in the finish invariant — a
+    /// tolerated sink error must not read as a lost frame).
+    errors: u64,
+    completion_secs: f64,
+}
+
+/// A started pipeline session (see [`Pipeline::start`]).
+///
+/// The handle is shareable behind an `Arc`: one thread feeds through
+/// [`FrameInjector`]s, one consumes [`RunningPipeline::next_output`]
+/// (single-consumer — concurrent callers serialize on an internal lock),
+/// and any thread may [`RunningPipeline::snapshot`] live statistics.
+/// Lifecycle: `injector()`/`next_output()` while serving →
+/// `close_intake()` (stop accepting frames; in-flight frames keep
+/// draining) → `finish()` (drain the tail, join workers, final report).
+pub struct RunningPipeline {
+    framed: bool,
+    t0: Instant,
+    intake: Mutex<Option<FrameInjector>>,
+    outputs: Mutex<Receiver<WirePacket>>,
+    pushed: Arc<AtomicU64>,
+    cells: Vec<StatsCell>,
+    workers: Mutex<Vec<(String, JoinHandle<Result<()>>)>>,
+    bridges: Mutex<Vec<JoinHandle<Result<()>>>>,
+    acct: Mutex<SinkAcct>,
+}
+
+impl RunningPipeline {
+    /// A new intake handle. Errors once [`RunningPipeline::close_intake`]
+    /// has been called (the stream is ending; no new frames may enter).
+    pub fn injector(&self) -> Result<FrameInjector> {
+        self.intake
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| anyhow!("pipeline intake already closed"))
+    }
+
+    /// Stop accepting new frames: drop the handle's own injector. Frames
+    /// already inside keep flowing; once every externally held
+    /// [`FrameInjector`] clone is dropped too, the workers see
+    /// end-of-stream and retire.
+    pub fn close_intake(&self) {
+        *self.intake.lock().unwrap() = None;
+    }
+
+    /// Frames successfully injected so far.
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::SeqCst)
+    }
+
+    /// Frames that have exited the final stage so far.
+    pub fn received(&self) -> u64 {
+        self.acct.lock().unwrap().received
+    }
+
+    /// Seconds since the session started.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Receive the next completed frame, blocking until one exits or the
+    /// pipeline ends (`None`). An `Err` item is a frame that exited but
+    /// failed to unframe (counted nowhere else — the caller decides
+    /// whether that is fatal). Single-consumer: concurrent callers
+    /// serialize on an internal lock.
+    pub fn next_output(&self) -> Option<Result<PipelineOutput>> {
+        let pkt = match self.outputs.lock().unwrap().recv() {
+            Ok(p) => p,
+            Err(_) => return None, // workers retired: stream over
+        };
+        let completion = self.t0.elapsed().as_secs_f64();
+        let latency = pkt.born.elapsed().as_secs_f64();
+        match if self.framed { unframe_data(&pkt.bytes) } else { Ok(pkt.bytes) } {
+            Ok(payload) => {
+                let mut a = self.acct.lock().unwrap();
+                a.latencies.push(latency);
+                a.received += 1;
+                a.completion_secs = completion;
+                Some(Ok(PipelineOutput {
+                    seq: pkt.seq,
+                    stream: pkt.stream,
+                    payload,
+                    latency_secs: latency,
+                }))
+            }
+            Err(e) => {
+                let mut a = self.acct.lock().unwrap();
+                a.errors += 1;
+                a.completion_secs = completion;
+                Some(Err(e.context("unframing pipeline output")))
+            }
+        }
+    }
+
+    /// Sample every worker's live cumulative counters. Cheap (one lock per
+    /// worker); safe from any thread, any time between `start` and
+    /// `finish`. Subtract two snapshots ([`PipelineSnapshot::window_since`])
+    /// for a windowed observation.
+    pub fn snapshot(&self) -> PipelineSnapshot {
+        PipelineSnapshot {
+            at_secs: self.elapsed_secs(),
+            workers: self.cells.iter().map(|c| c.lock().unwrap().clone()).collect(),
+        }
+    }
+
+    /// Drain and retire the session: close the intake, consume any
+    /// outputs the caller has not taken, join workers and bridges, and
+    /// assemble the final [`PipelineRunReport`].
+    ///
+    /// Every externally held [`FrameInjector`] clone must have been
+    /// dropped (or be dropped concurrently) — the workers only retire
+    /// once the source channel fully closes.
+    pub fn finish(self) -> Result<PipelineRunReport> {
+        self.close_intake();
+        // drain the tail the consumer did not take (errors recorded)
         let mut sink_err: Option<anyhow::Error> = None;
-        while let Ok(pkt) = rx.recv() {
-            completion = t0.elapsed().as_secs_f64();
-            let latency = pkt.born.elapsed().as_secs_f64();
-            match if framed { unframe_data(&pkt.bytes) } else { Ok(pkt.bytes) } {
-                Ok(payload) => {
-                    latencies.push(latency);
-                    received += 1;
-                    sink(PipelineOutput {
-                        seq: pkt.seq,
-                        stream: pkt.stream,
-                        payload,
-                        latency_secs: latency,
-                    });
-                }
-                Err(e) => {
-                    if sink_err.is_none() {
-                        sink_err = Some(e.context("unframing pipeline output"));
-                    }
+        while let Some(out) = self.next_output() {
+            if let Err(e) = out {
+                if sink_err.is_none() {
+                    sink_err = Some(e);
                 }
             }
         }
-        drop(rx);
-
-        let pushed = feeder
-            .join()
-            .map_err(|_| anyhow!("pipeline source thread panicked"))??;
-
-        let mut stats = Vec::new();
-        let mut first_err: Option<anyhow::Error> = sink_err;
-        for (label, h) in workers {
+        let RunningPipeline { pushed, cells, workers, bridges, acct, .. } = self;
+        let mut first_err = sink_err;
+        for (label, h) in workers.into_inner().unwrap() {
             match h.join() {
-                Ok(Ok(ws)) => stats.push(ws),
+                Ok(Ok(())) => {}
                 Ok(Err(e)) => {
                     if first_err.is_none() {
                         first_err = Some(e.context(format!("pipeline stage '{label}' failed")));
@@ -485,7 +826,7 @@ impl Pipeline {
                 }
             }
         }
-        for h in bridges {
+        for h in bridges.into_inner().unwrap() {
             match h.join() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => {
@@ -503,42 +844,87 @@ impl Pipeline {
         if let Some(e) = first_err {
             return Err(e);
         }
+        let acct = acct.into_inner().unwrap();
+        let pushed = pushed.load(Ordering::SeqCst);
+        // errored outputs were consumed (and surfaced to the caller, who
+        // decided to tolerate them) — they are accounted, not lost
         anyhow::ensure!(
-            pushed == received,
-            "fed {pushed} frames but only {received} completed"
+            pushed == acct.received + acct.errors,
+            "fed {pushed} frames but only {} completed ({} sink errors)",
+            acct.received,
+            acct.errors
         );
         Ok(PipelineRunReport {
-            frames: received,
-            completion_secs: completion,
-            latencies,
-            workers: stats,
+            frames: acct.received,
+            completion_secs: acct.completion_secs,
+            latencies: acct.latencies,
+            workers: cells.iter().map(|c| c.lock().unwrap().clone()).collect(),
         })
     }
 }
 
-/// Spawn one instrumented worker thread.
+/// Periodic stats channel over a running pipeline: spawns a sampler
+/// thread that emits a [`PipelineSnapshot`] every `every` until the
+/// pipeline retires (its `Arc` is consumed by
+/// [`RunningPipeline::finish`] / dropped) or the receiver is dropped.
+/// The sampler holds only a `Weak` reference, so it never keeps the
+/// session alive.
+pub fn stats_channel(
+    rp: &Arc<RunningPipeline>,
+    every: Duration,
+) -> std::sync::mpsc::Receiver<PipelineSnapshot> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let weak = Arc::downgrade(rp);
+    std::thread::Builder::new()
+        .name("pipeline-stats".into())
+        .spawn(move || loop {
+            std::thread::sleep(every);
+            let snap = match weak.upgrade() {
+                Some(rp) => rp.snapshot(),
+                None => break,
+            };
+            if tx.send(snap).is_err() {
+                break;
+            }
+        })
+        .expect("spawn pipeline stats sampler");
+    rx
+}
+
+/// Spawn one instrumented worker thread. The worker owns local counters
+/// and publishes them into the shared `cell` after every frame — that is
+/// what makes live [`RunningPipeline::snapshot`]s (and therefore the
+/// coordinator's *online* monitoring) possible; the same cell yields the
+/// end-of-run statistics. A long blocked `send` is only charged once it
+/// completes, so a snapshot taken mid-block reads slightly stale
+/// counters — windowed consumers tolerate that by construction.
 fn spawn_worker(
     spec: StageSpec,
     rx: Receiver<WirePacket>,
     tx: SyncSender<WirePacket>,
     framed: bool,
-) -> JoinHandle<Result<WorkerStats>> {
-    let StageSpec { label, kind, builder } = spec;
+    cell: StatsCell,
+) -> JoinHandle<Result<()>> {
+    let StageSpec { label, kind: _, builder } = spec;
     let thread_name = label.clone();
     std::thread::Builder::new()
         .name(thread_name)
-        .spawn(move || -> Result<WorkerStats> {
+        .spawn(move || -> Result<()> {
             let mut op = builder()
                 .with_context(|| format!("constructing operator for stage '{label}'"))?;
-            let mut st = WorkerStats {
-                label: label.clone(),
-                kind,
-                frames: 0,
-                busy_secs: 0.0,
-                queue_wait_secs: 0.0,
-                blocked_secs: 0.0,
-                idle_secs: 0.0,
-                service: None,
+            let mut frames = 0u64;
+            let mut busy = 0.0f64;
+            let mut queue_wait = 0.0f64;
+            let mut blocked = 0.0f64;
+            let mut idle = 0.0f64;
+            let publish = |frames, busy, queue_wait, blocked, idle, service| {
+                let mut c = cell.lock().unwrap();
+                c.frames = frames;
+                c.busy_secs = busy;
+                c.queue_wait_secs = queue_wait;
+                c.blocked_secs = blocked;
+                c.idle_secs = idle;
+                c.service = service;
             };
             loop {
                 let t_idle = Instant::now();
@@ -547,9 +933,8 @@ fn spawn_worker(
                     Err(_) => break, // upstream closed: stream finished
                 };
                 let now = Instant::now();
-                st.idle_secs += now.duration_since(t_idle).as_secs_f64();
-                st.queue_wait_secs +=
-                    now.saturating_duration_since(pkt.enqueued).as_secs_f64();
+                idle += now.duration_since(t_idle).as_secs_f64();
+                queue_wait += now.saturating_duration_since(pkt.enqueued).as_secs_f64();
 
                 let payload =
                     if framed { unframe_data(&pkt.bytes)? } else { pkt.bytes };
@@ -557,8 +942,8 @@ fn spawn_worker(
                 let out = op
                     .process(&payload)
                     .with_context(|| format!("frame {} in stage '{label}'", pkt.seq))?;
-                st.busy_secs += t_busy.elapsed().as_secs_f64();
-                st.frames += 1;
+                busy += t_busy.elapsed().as_secs_f64();
+                frames += 1;
 
                 let bytes = if framed { frame_data(&out)? } else { out };
                 let t_send = Instant::now();
@@ -569,13 +954,14 @@ fn spawn_worker(
                     born: pkt.born,
                     enqueued: Instant::now(),
                 });
-                st.blocked_secs += t_send.elapsed().as_secs_f64();
+                blocked += t_send.elapsed().as_secs_f64();
+                publish(frames, busy, queue_wait, blocked, idle, op.service_stats());
                 if res.is_err() {
                     break; // downstream closed
                 }
             }
-            st.service = op.service_stats();
-            Ok(st)
+            publish(frames, busy, queue_wait, blocked, idle, op.service_stats());
+            Ok(())
         })
         .expect("spawn pipeline worker thread")
 }
@@ -780,6 +1166,150 @@ mod tests {
         for (i, (seq, b)) in got.iter().enumerate() {
             assert_eq!(*seq, i as u64);
             assert_eq!(*b, i as u8);
+        }
+    }
+
+    #[test]
+    fn session_lifecycle_inject_snapshot_drain() {
+        // start → inject live → snapshot mid-run → close → finish: the
+        // session API the Server builds on, exercised directly
+        let mut p = Pipeline::new(PipelineConfig::default());
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 2));
+        p.add_stage(delay_stage("b", WorkerKind::Stage, 2));
+        let rp = p.start().unwrap();
+        let inj = rp.injector().unwrap();
+
+        for i in 0..10u64 {
+            inj.send(FrameIn { stream: (i % 2) as u32, payload: vec![i as u8; 16] }).unwrap();
+        }
+        // consume a few outputs live
+        let mut streams_seen = Vec::new();
+        for _ in 0..10 {
+            let out = rp.next_output().expect("pipeline ended early").unwrap();
+            streams_seen.push(out.stream);
+        }
+        assert_eq!(rp.received(), 10);
+        assert_eq!(rp.pushed(), 10);
+
+        // live snapshot: both stages have retired all 10 frames by now
+        let snap = rp.snapshot();
+        assert_eq!(snap.workers.len(), 2);
+        assert!(snap.workers.iter().all(|w| w.frames == 10), "{snap:?}");
+        assert!(snap.at_secs > 0.0);
+
+        // inject a second batch, then window the delta
+        for i in 0..5u64 {
+            inj.send(FrameIn { stream: 0, payload: vec![i as u8; 16] }).unwrap();
+        }
+        for _ in 0..5 {
+            rp.next_output().expect("pipeline ended early").unwrap();
+        }
+        let snap2 = rp.snapshot();
+        let win = snap2.window_since(&snap);
+        assert_eq!(win.frames_out(), 5, "window counts only the delta");
+        assert!(win.span_secs > 0.0);
+        let means = win.stage_mean_compute();
+        assert_eq!(means.len(), 2);
+        for m in &means {
+            let m = m.expect("both stages retired frames in the window");
+            assert!(m >= 0.001 && m < 0.05, "windowed mean service {m}");
+        }
+
+        drop(inj);
+        let rep = rp.finish().unwrap();
+        assert_eq!(rep.frames, 15);
+        assert_eq!(rep.workers.len(), 2);
+        assert!(rep.workers.iter().all(|w| w.frames == 15));
+        // per-frame latencies all recorded through the live consumer
+        assert_eq!(rep.latencies.len(), 15);
+    }
+
+    #[test]
+    fn finish_drains_unconsumed_tail() {
+        // caller never consumes outputs: finish must drain them itself,
+        // keep the accounting, and not deadlock. Queue capacity must
+        // cover the un-consumed frames (source q + in-worker + final q),
+        // since nothing drains until finish.
+        let mut p = Pipeline::new(PipelineConfig { queue_cap: 16, ..Default::default() });
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 0));
+        let rp = p.start().unwrap();
+        let inj = rp.injector().unwrap();
+        rp.close_intake();
+        for i in 0..8u64 {
+            inj.send(FrameIn { stream: 0, payload: vec![i as u8; 8] }).unwrap();
+        }
+        drop(inj);
+        let rep = rp.finish().unwrap();
+        assert_eq!(rep.frames, 8);
+        assert_eq!(rep.latencies.len(), 8);
+    }
+
+    #[test]
+    fn injector_rejects_after_close_and_stats_channel_ticks() {
+        let mut p = Pipeline::new(PipelineConfig::default());
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 1));
+        let rp = std::sync::Arc::new(p.start().unwrap());
+        let ticks = stats_channel(&rp, Duration::from_millis(5));
+        let inj = rp.injector().unwrap();
+        inj.send(FrameIn { stream: 3, payload: vec![1; 8] }).unwrap();
+        let out = rp.next_output().unwrap().unwrap();
+        assert_eq!(out.stream, 3, "stream tag rides end-to-end");
+
+        // at least one live snapshot arrives on the channel
+        let snap = ticks.recv_timeout(Duration::from_secs(2)).expect("no stats tick");
+        assert_eq!(snap.workers.len(), 1);
+
+        rp.close_intake();
+        assert!(rp.injector().is_err(), "intake must reject after close");
+        drop(inj);
+        // the sampler may hold a transient strong ref mid-snapshot; spin
+        let mut rp = rp;
+        let rp = loop {
+            match std::sync::Arc::try_unwrap(rp) {
+                Ok(p) => break p,
+                Err(again) => {
+                    rp = again;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        };
+        let rep = rp.finish().unwrap();
+        assert_eq!(rep.frames, 1);
+        // sampler notices the pipeline is gone and hangs up
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            match ticks.recv_timeout(Duration::from_millis(50)) {
+                Ok(_) => {
+                    assert!(Instant::now() < deadline, "stats sampler never stopped");
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    #[test]
+    fn per_stream_attribution_through_the_engine() {
+        // three interleaved streams: outputs carry the right stream tag
+        // and per-stream counts/latency can be attributed at the sink
+        let mut p = Pipeline::new(PipelineConfig::default());
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 1));
+        p.add_stage(delay_stage("b", WorkerKind::Stage, 1));
+        let feed = (0..30u64).map(|i| FrameIn {
+            stream: (i % 3) as u32,
+            payload: vec![i as u8; 8],
+        });
+        let mut count = [0u64; 3];
+        let mut lat = [0.0f64; 3];
+        let rep = p
+            .run(feed, |out| {
+                count[out.stream as usize] += 1;
+                lat[out.stream as usize] += out.latency_secs;
+            })
+            .unwrap();
+        assert_eq!(rep.frames, 30);
+        assert_eq!(count, [10, 10, 10]);
+        for s in 0..3 {
+            assert!(lat[s] / count[s] as f64 > 0.001, "stream {s} latency untracked");
         }
     }
 

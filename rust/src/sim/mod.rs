@@ -17,4 +17,4 @@ pub mod des;
 pub mod pipeline;
 
 pub use des::{Event, EventQueue};
-pub use pipeline::{simulate, PipelineReport, ServerLabel, SimConfig};
+pub use pipeline::{simulate, simulate_schedule, PipelineReport, ServerLabel, SimConfig};

@@ -229,6 +229,28 @@ impl Topology {
         self.resources.iter().map(|r| r.host + 1).max().unwrap_or(0)
     }
 
+    /// Human-readable label for a host: the name of the host's untrusted
+    /// CPU resource when it has exactly one (the resource that *is* the
+    /// edge device in the paper graph — `E1`, `E2`), otherwise `host{h}`.
+    /// Used to label cross-host link workers (`E1→E2`) so deployment
+    /// reports and monitor output name the actual edge devices.
+    pub fn host_label(&self, host: usize) -> String {
+        let mut cpus = self
+            .resources
+            .iter()
+            .filter(|r| r.host == host && r.kind == DeviceKind::UntrustedCpu);
+        match (cpus.next(), cpus.next()) {
+            (Some(r), None) => r.name.clone(),
+            _ => format!("host{host}"),
+        }
+    }
+
+    /// Display label for the directed link a placement hop crosses,
+    /// e.g. `E1→E2`.
+    pub fn link_label(&self, from_host: usize, to_host: usize) -> String {
+        format!("{}→{}", self.host_label(from_host), self.host_label(to_host))
+    }
+
     /// Trusted enclaves, in declaration order.
     pub fn tees(&self) -> Vec<ResourceId> {
         self.of_kind(|k| k == DeviceKind::Tee)
@@ -290,6 +312,21 @@ impl Topology {
     /// Set (or override) the link parameters of one host pair.
     pub fn set_link(&mut self, a: usize, b: usize, params: LinkParams) {
         self.links.insert((a.min(b), a.max(b)), params);
+    }
+
+    /// Speed grade of a resource (block times are divided by this).
+    pub fn speed_of(&self, id: ResourceId) -> f64 {
+        self.resources[id.0].speed
+    }
+
+    /// Re-grade a resource's speed. This is how online re-partitioning
+    /// folds *observed* stage times back into the planning inputs: if a
+    /// stage measured ρ× slower than predicted, dividing its resource's
+    /// speed by ρ makes every subsequent solve charge the observed rate
+    /// (see [`placement::cost::recalibrate_speeds`](crate::placement::cost::recalibrate_speeds)).
+    pub fn set_speed(&mut self, id: ResourceId, speed: f64) {
+        assert!(speed > 0.0, "speed grade must be positive");
+        self.resources[id.0].speed = speed;
     }
 
     /// Transfer seconds for `bytes` between two hosts (0 for intra-host).

@@ -1,0 +1,253 @@
+//! Acceptance for the session-oriented `Server`: a multi-enclave
+//! deployment serves live camera streams, a mid-run stage slowdown is
+//! observed by the *online* monitor (`MonitorVerdict::Repartition`), and
+//! the server re-solves against the observed stage times and hot-swaps to
+//! a placement whose measured post-swap throughput recovers — with the
+//! DES (fed the same arrival schedule and the ground-truth slowdown)
+//! agreeing on what that throughput should be.
+//!
+//! Everything runs on the synthetic builder (workers execute the cost
+//! model's nominal service times × an injectable per-resource factor), so
+//! the test needs no model artifacts — the configuration
+//! `tests/pipeline_vs_sim.rs` validates against the DES. Both scenarios
+//! live in ONE #[test] so the sleep-based worker threads never compete
+//! with a sibling test for cores.
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use serdab::coordinator::{
+    Server, ServerConfig, ServerEvent, StreamSpec, SwapEvent, SyntheticBuilder,
+};
+use serdab::placement::cost::CostModel;
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::profiler::{DeviceKind, ModelProfile};
+use serdab::runtime::{LoadGen, LoadGenConfig};
+use serdab::sim::simulate_schedule;
+use serdab::topology::{LinkParams, Topology};
+
+/// Four edge devices, one enclave each, fast LAN — a placement-rich
+/// graph where re-solving has somewhere to move work.
+fn quad_topology() -> Topology {
+    Topology::builder("quad-live")
+        .resource("T0", DeviceKind::Tee, 0)
+        .resource("T1", DeviceKind::Tee, 1)
+        .resource("T2", DeviceKind::Tee, 2)
+        .resource("T3", DeviceKind::Tee, 3)
+        .default_link(LinkParams { bandwidth_bps: 1e9, rtt_secs: 1e-4 })
+        .camera(0)
+        .sink(0)
+        .build()
+        .unwrap()
+}
+
+/// Drain events until a completed swap (panicking on failure/timeout).
+fn wait_for_swap(events: &Receiver<ServerEvent>, timeout: Duration) -> (SwapEvent, Vec<ServerEvent>) {
+    let deadline = Instant::now() + timeout;
+    let mut seen = Vec::new();
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        assert!(!left.is_zero(), "no hot-swap within {timeout:?}; events: {seen:?}");
+        match events.recv_timeout(left) {
+            Ok(ServerEvent::SwapCompleted(ev)) => return (ev, seen),
+            Ok(ServerEvent::SwapFailed { error }) => panic!("hot-swap failed: {error}"),
+            Ok(ev) => seen.push(ev),
+            Err(_) => panic!("event feed closed before a hot-swap; events: {seen:?}"),
+        }
+    }
+}
+
+#[test]
+fn server_sessions_attach_detach_and_hot_swap_on_drift() {
+    attach_detach_mid_run();
+    drift_triggers_repartition_and_throughput_recovers();
+}
+
+/// Streams join and leave a live server without disturbing each other,
+/// and every frame fed is attributed back to its stream.
+fn attach_detach_mid_run() {
+    let profile = ModelProfile::millis_demo();
+    let topo = quad_topology();
+    let builder = SyntheticBuilder::new(profile.clone(), topo.clone());
+    let mut server = Server::launch(
+        profile,
+        topo,
+        Box::new(builder),
+        ServerConfig { window_secs: 0.1, ..ServerConfig::default() },
+    )
+    .unwrap();
+
+    // two long-lived cameras at a comfortable rate (~25 fps aggregate
+    // against a ≥50 fps pipeline)
+    let s0 = server.attach(StreamSpec::synthetic("cam-0", 0.08, 64)).unwrap();
+    let s1 = server.attach(StreamSpec::synthetic("cam-1", 0.08, 64)).unwrap();
+    std::thread::sleep(Duration::from_millis(400));
+
+    // a third camera joins mid-run...
+    let s2 = server.attach(StreamSpec::synthetic("cam-2", 0.05, 64)).unwrap();
+    std::thread::sleep(Duration::from_millis(400));
+    // ...and leaves again; its frames completed, the others kept serving
+    let r2 = server.detach(s2.id()).unwrap();
+    assert!(r2.fed >= 4, "cam-2 barely fed: {r2:?}");
+
+    std::thread::sleep(Duration::from_millis(300));
+    let report = server.shutdown().unwrap();
+
+    assert_eq!(report.swaps.len(), 0, "healthy serve must not repartition");
+    assert_eq!(report.sink_errors, 0);
+    assert_eq!(report.frames_dropped, 0, "healthy serve must not drop frames");
+    let total_fed: u64 = report.streams.iter().map(|s| s.fed).sum();
+    assert_eq!(
+        report.frames, total_fed,
+        "every fed frame must drain to the sink across generations"
+    );
+    for s in &report.streams {
+        assert_eq!(s.completed, s.fed, "stream {} lost frames: {s:?}", s.label);
+        assert!(s.mean_latency_secs > 0.0, "stream {} latency untracked", s.label);
+    }
+    // all three streams are on record with their identities intact, and
+    // the long-lived ones kept serving after cam-2 left
+    let by_id = |id: u32| report.streams.iter().find(|s| s.id == id).unwrap();
+    assert_eq!(by_id(s2.id()).label, "cam-2");
+    assert!(by_id(s0.id()).fed > r2.fed / 2, "cam-0 starved: {report:?}");
+    assert!(by_id(s1.id()).fed > 0, "cam-1 starved: {report:?}");
+}
+
+/// The §V loop end-to-end: slowdown → online Repartition verdict →
+/// re-solve from observed times → hot-swap → measured throughput
+/// recovers, agreeing with the DES run on the same arrival schedule.
+fn drift_triggers_repartition_and_throughput_recovers() {
+    let profile = ModelProfile::millis_demo();
+    let topo = quad_topology();
+    let mut builder = SyntheticBuilder::new(profile.clone(), topo.clone());
+    let slow = builder.slowdown("T0");
+
+    // reference plan (the server solves the same inputs the same way)
+    let cm = CostModel::new(&profile, topo.clone());
+    let p0 = plan(Strategy::Proposed, &cm, 10_800);
+    let stage0_nominal = p0.cost.stage_secs[0];
+    let block0 = profile.tee.block_secs[0];
+    const FACTOR: f64 = 4.0;
+    // offered load sits between the slowed capacity (entry stage × 4
+    // bottlenecks the old placement) and the post-swap capacity (T0
+    // shrunk to one block, still 4× slow): degradation is visible, and
+    // recovery is possible — but only through a re-partition.
+    let slowed_cap = 1.0 / (stage0_nominal * FACTOR);
+    let post_cap = 1.0 / (block0 * FACTOR);
+    assert!(post_cap > slowed_cap * 1.5, "test topology lost its headroom");
+    let offered = 0.5 * (slowed_cap + post_cap);
+    let streams = 2u32;
+    let interval = streams as f64 / offered;
+
+    let mut server = Server::launch(
+        profile.clone(),
+        topo.clone(),
+        Box::new(builder),
+        ServerConfig {
+            strategy: Strategy::Proposed,
+            window_secs: 0.15,
+            drift_threshold: 0.5,
+            patience: 2,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let events = server.events().unwrap();
+    let placement_before = server.placement().expect("live generation");
+    assert!(placement_before.stages.len() >= 3, "multi-enclave placement expected");
+
+    for i in 0..streams {
+        let mut spec = StreamSpec::synthetic(format!("cam-{i}"), interval, 64);
+        spec.seed = 100 + i as u64;
+        server.attach(spec).unwrap();
+    }
+
+    // phase 1: healthy serving — windows observe, nothing fires
+    std::thread::sleep(Duration::from_millis(700));
+    assert_eq!(server.swaps().len(), 0, "no drift yet, no swap");
+
+    // phase 2: the entry enclave degrades 4× (thermal throttling, a noisy
+    // co-tenant — the hardware is slow from now on, including after any
+    // redeploy)
+    *slow.lock().unwrap() = FACTOR;
+    let (swap, pre_events) = wait_for_swap(&events, Duration::from_secs(15));
+
+    // the verdict attributed the drift and the re-solve moved work off T0
+    assert!(
+        swap.observed > swap.predicted * 2.0,
+        "observed {:.4}s should dwarf predicted {:.4}s",
+        swap.observed,
+        swap.predicted
+    );
+    assert_ne!(swap.from, swap.to, "re-solve must change the placement");
+    let placement_after = server.placement().expect("post-swap generation");
+    assert!(
+        placement_after.stages[0].range.len() < placement_before.stages[0].range.len(),
+        "re-solve should shrink the slowed entry enclave's share: {} → {}",
+        swap.from,
+        swap.to
+    );
+    // degradation was visible online before the swap fired
+    let degraded = pre_events.iter().any(|ev| match ev {
+        ServerEvent::Window { throughput_fps, .. } => *throughput_fps < 0.85 * offered,
+        _ => false,
+    });
+    assert!(degraded, "no pre-swap window showed degraded throughput: {pre_events:?}");
+
+    // phase 3: recovery — let the backlog drain, then measure a window
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let st = server.status();
+        let fed: u64 = st.streams.iter().map(|s| s.fed).sum();
+        if fed.saturating_sub(st.frames_completed) <= 8 || Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let t1 = (server.status().frames_completed, Instant::now());
+    std::thread::sleep(Duration::from_millis(1200));
+    let t2 = (server.status().frames_completed, Instant::now());
+    let measured = (t2.0 - t1.0) as f64 / (t2.1 - t1.1).as_secs_f64();
+
+    // the DES, given the same arrival schedule and the ground-truth
+    // slowdown (T0 four times slower), predicts the post-swap throughput;
+    // the measured window must agree (and must have recovered to the
+    // offered rate, which the slowed placement could not carry)
+    let mut true_topo = topo.clone();
+    let t0 = true_topo.require("T0").unwrap();
+    true_topo.set_speed(t0, 1.0 / FACTOR);
+    let cm_true = CostModel::new(&profile, true_topo);
+    let lg = LoadGen::new(&LoadGenConfig {
+        streams,
+        frames_per_stream: 40,
+        interval_secs: interval,
+        poisson: false,
+        seed: 9,
+    });
+    let des = simulate_schedule(&cm_true, &placement_after, lg.arrivals(), 4);
+    let des_throughput = des.throughput();
+    assert!(
+        measured > 0.8 * offered,
+        "post-swap throughput did not recover: measured {measured:.1} fps, offered {offered:.1} \
+         fps (slowed capacity was {slowed_cap:.1})"
+    );
+    let rel = (measured - des_throughput).abs() / des_throughput;
+    assert!(
+        rel < 0.30,
+        "measured {measured:.1} fps vs DES {des_throughput:.1} fps ({:.0}% off)",
+        rel * 100.0
+    );
+
+    let report = server.shutdown().unwrap();
+    assert!(!report.swaps.is_empty(), "the swap must be on record");
+    assert_eq!(report.segments.len(), report.swaps.len() + 1, "one generation per swap + final");
+    assert_eq!(report.frames_dropped, 0, "hot-swap must drain, not drop");
+    let total_fed: u64 = report.streams.iter().map(|s| s.fed).sum();
+    assert_eq!(
+        report.frames, total_fed,
+        "hot-swap must drain in-flight frames, not drop them"
+    );
+    for s in &report.streams {
+        assert_eq!(s.completed, s.fed, "stream {} lost frames across the swap", s.label);
+    }
+}
