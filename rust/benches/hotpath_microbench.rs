@@ -1,23 +1,53 @@
-//! Hot-path microbenchmarks (§Perf notes in crypto/gcm.rs): the three components
-//! on the per-frame critical path of the live pipeline —
+//! Hot-path microbenchmarks (DESIGN.md §15 Perf log): the components on
+//! the per-frame critical path of the live pipeline —
 //!   1. AES-128-GCM seal+open of boundary tensors (crypto),
-//!   2. Tensor ⇄ wire-bytes bridging + block execution (runtime, on the
-//!      backend `SERDAB_BACKEND` selects — reference by default),
-//!   3. record framing + channel sealing (net + channel).
+//!   2. secure-channel record sealing + coalesced framing (net + channel),
+//!   3. block execution on the reference backend's GEMM core, measured
+//!      against the retained pre-GEMM `naive` kernels *in the same run*
+//!      (the before/after pair the ≥3× block-exec target is judged on),
+//!   4. tensor ⇄ wire-bytes bridging and real artifact blocks when the
+//!      artifacts directory exists.
 //!
-//! Run before/after each optimization; the table is the §Perf log's input.
+//! `--json` additionally writes `BENCH_hotpath.json` at the repo root
+//! (component → payload → median ns + throughput, plus the block-exec
+//! speedup), so the perf trajectory is machine-readable PR-over-PR; CI
+//! uploads it as a build artifact.
 
 use serdab::crypto::channel::Channel;
 use serdab::crypto::gcm::AesGcm;
-use serdab::figures::{BenchTimer, Table};
+use serdab::figures::{BenchTimer, Measurement, Table};
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
-use serdab::runtime::{default_backend, ChainExecutor, Tensor};
+use serdab::net::framing::{FrameType, FrameWriter};
+use serdab::runtime::backend::reference::ops::{self, naive};
+use serdab::runtime::backend::reference::zoo::Pad;
+use serdab::runtime::{default_backend, ChainExecutor, Scratch, Tensor};
 use serdab::util::fmt_bytes;
+use serdab::util::json::{arr, num, obj, s, Json};
+use serdab::util::rng::Rng;
+
+/// One report row: component, payload label, measurement, throughput.
+struct Row {
+    component: String,
+    payload: String,
+    m: Measurement,
+    throughput: String,
+}
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    Tensor::new(shape.to_vec(), data).unwrap()
+}
+
+fn gflops(flops: usize, m: &Measurement) -> String {
+    format!("{:.2} GFLOP/s", flops as f64 / m.median_secs / 1e9)
+}
 
 fn main() -> anyhow::Result<()> {
+    let json_mode = std::env::args().any(|a| a == "--json");
     println!("# hot-path microbench\n");
     let timer = BenchTimer::new(3, 21);
-    let mut table = Table::new(&["component", "payload", "median", "throughput"]);
+    let mut rows: Vec<Row> = Vec::new();
 
     // --- 1. GCM on representative boundary-tensor sizes -------------------
     let gcm = AesGcm::new(b"hotpath-bench-ke");
@@ -28,28 +58,140 @@ fn main() -> anyhow::Result<()> {
             let tag = gcm.seal(&[1u8; 12], b"bench", &mut buf);
             gcm.open(&[1u8; 12], b"bench", &mut buf, &tag).unwrap();
         });
-        table.row(vec![
-            "gcm seal+open".into(),
-            fmt_bytes(bytes as u64),
-            format!("{m}"),
-            format!("{:.0} MB/s", 2.0 * bytes as f64 / m.median_secs / 1e6),
-        ]);
+        rows.push(Row {
+            component: "gcm seal+open".into(),
+            payload: fmt_bytes(bytes as u64),
+            m,
+            throughput: format!("{:.0} MB/s", 2.0 * bytes as f64 / m.median_secs / 1e6),
+        });
     }
 
-    // --- 2. channel record seal (incl. nonce + framing) -------------------
+    // --- 2. channel record seal (reused buffer) + coalesced framing -------
     {
         let mut ch = Channel::new(b"bench-secret", true);
         let payload = vec![7u8; 400 * 1024];
-        let m = timer.measure(|| std::hint::black_box(ch.tx.seal_record(&payload)));
-        table.row(vec![
-            "channel seal_record".into(),
-            fmt_bytes(payload.len() as u64),
-            format!("{m}"),
-            format!("{:.0} MB/s", payload.len() as f64 / m.median_secs / 1e6),
-        ]);
+        let mut rec = Vec::new();
+        let m = timer.measure(|| {
+            ch.tx.seal_record_into(&payload, &mut rec);
+            std::hint::black_box(rec.len());
+        });
+        rows.push(Row {
+            component: "channel seal_record".into(),
+            payload: fmt_bytes(payload.len() as u64),
+            m,
+            throughput: format!("{:.0} MB/s", payload.len() as f64 / m.median_secs / 1e6),
+        });
+
+        let mut fw = FrameWriter::new(std::io::sink());
+        let m = timer.measure(|| fw.send(FrameType::Data, &payload).unwrap());
+        rows.push(Row {
+            component: "framed write (coalesced)".into(),
+            payload: fmt_bytes(payload.len() as u64),
+            m,
+            throughput: format!("{:.0} MB/s", payload.len() as f64 / m.median_secs / 1e6),
+        });
     }
 
-    // --- 3. tensor bridge + block execution --------------------------------
+    // --- 3. block execution: GEMM core vs retained naive kernels ----------
+    // Synthetic workloads (no artifacts needed) sized like mid-chain
+    // blocks; naive and GEMM run on identical tensors in the same
+    // process, so the speedup is measured, not remembered. The headline
+    // comparison pins the GEMM side to ONE worker — the naive baseline is
+    // inherently single-threaded, and the JSON trajectory must not shift
+    // with the CI runner's core count; an extra row shows the env-thread
+    // scaling on top.
+    let mut rng = Rng::new(7);
+    let mut scratch = Scratch::with_threads(1);
+    let mut scratch_par = Scratch::new();
+    let slow_timer = BenchTimer::new(2, 11);
+
+    let x = rand_tensor(&mut rng, &[1, 28, 28, 32]);
+    let w = rand_tensor(&mut rng, &[3, 3, 32, 64]);
+    let b = rand_tensor(&mut rng, &[64]);
+    let conv_flops = 2 * 28 * 28 * (3 * 3 * 32) * 64;
+    let m_naive = slow_timer.measure(|| {
+        std::hint::black_box(naive::conv2d(&x, &w, &b, 1, &Pad::Same, true).unwrap());
+    });
+    rows.push(Row {
+        component: "block-exec conv3x3 (naive)".into(),
+        payload: "1×28×28×32→64".into(),
+        m: m_naive,
+        throughput: gflops(conv_flops, &m_naive),
+    });
+    let m_gemm = slow_timer.measure(|| {
+        let t = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut scratch).unwrap();
+        scratch.give(std::hint::black_box(t));
+    });
+    rows.push(Row {
+        component: "block-exec conv3x3 (gemm, 1 worker)".into(),
+        payload: "1×28×28×32→64".into(),
+        m: m_gemm,
+        throughput: gflops(conv_flops, &m_gemm),
+    });
+    let block_exec_speedup = m_naive.median_secs / m_gemm.median_secs;
+    let m_par = slow_timer.measure(|| {
+        let t = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut scratch_par).unwrap();
+        scratch_par.give(std::hint::black_box(t));
+    });
+    rows.push(Row {
+        component: format!(
+            "block-exec conv3x3 (gemm, {} workers)",
+            serdab::runtime::scratch::env_threads()
+        ),
+        payload: "1×28×28×32→64".into(),
+        m: m_par,
+        throughput: gflops(conv_flops, &m_par),
+    });
+
+    let xd = rand_tensor(&mut rng, &[1, 4096]);
+    let wd = rand_tensor(&mut rng, &[4096, 512]);
+    let bd = rand_tensor(&mut rng, &[512]);
+    let dense_flops = 2 * 4096 * 512;
+    let m_dn = slow_timer.measure(|| {
+        std::hint::black_box(naive::dense(&xd, &wd, &bd, true).unwrap());
+    });
+    rows.push(Row {
+        component: "block-exec dense (naive)".into(),
+        payload: "4096→512".into(),
+        m: m_dn,
+        throughput: gflops(dense_flops, &m_dn),
+    });
+    let m_dg = slow_timer.measure(|| {
+        let t = ops::dense_scratch(&xd, &wd, &bd, true, &mut scratch).unwrap();
+        scratch.give(std::hint::black_box(t));
+    });
+    rows.push(Row {
+        component: "block-exec dense (gemm, 1 worker)".into(),
+        payload: "4096→512".into(),
+        m: m_dg,
+        throughput: gflops(dense_flops, &m_dg),
+    });
+
+    let xw = rand_tensor(&mut rng, &[1, 56, 56, 64]);
+    let ww = rand_tensor(&mut rng, &[3, 3, 64]);
+    let bw = rand_tensor(&mut rng, &[64]);
+    let dw_flops = 2 * 56 * 56 * 9 * 64;
+    let m_wn = slow_timer.measure(|| {
+        std::hint::black_box(naive::dwconv2d(&xw, &ww, &bw, 1, &Pad::Same, true).unwrap());
+    });
+    rows.push(Row {
+        component: "block-exec dwconv3x3 (naive)".into(),
+        payload: "1×56×56×64".into(),
+        m: m_wn,
+        throughput: gflops(dw_flops, &m_wn),
+    });
+    let m_wg = slow_timer.measure(|| {
+        let t = ops::dwconv2d_scratch(&xw, &ww, &bw, 1, &Pad::Same, true, &mut scratch).unwrap();
+        scratch.give(std::hint::black_box(t));
+    });
+    rows.push(Row {
+        component: "block-exec dwconv3x3 (gemm-core, 1 worker)".into(),
+        payload: "1×56×56×64".into(),
+        m: m_wg,
+        throughput: gflops(dw_flops, &m_wg),
+    });
+
+    // --- 4. tensor bridge + real artifact blocks (when present) -----------
     let dir = default_artifacts_dir();
     if dir.join("manifest.json").exists() {
         let man = load_manifest(&dir)?;
@@ -66,34 +208,86 @@ fn main() -> anyhow::Result<()> {
             let wire = input.to_le_bytes();
             std::hint::black_box(Tensor::from_le_bytes(&wire, shape.clone()).unwrap())
         });
-        table.row(vec![
-            "tensor→wire→tensor".into(),
-            fmt_bytes(input.byte_len() as u64),
-            format!("{m}"),
-            format!("{:.0} MB/s", 2.0 * input.byte_len() as f64 / m.median_secs / 1e6),
-        ]);
+        rows.push(Row {
+            component: "tensor→wire→tensor".into(),
+            payload: fmt_bytes(input.byte_len() as u64),
+            m,
+            throughput: format!("{:.0} MB/s", 2.0 * input.byte_len() as f64 / m.median_secs / 1e6),
+        });
 
         let b0 = &chain.blocks[0];
-        let m = timer.measure(|| std::hint::black_box(b0.run(&input).unwrap()));
-        table.row(vec![
-            format!("block run [{}]", b0.name),
-            fmt_bytes(input.byte_len() as u64),
-            format!("{m}"),
-            String::new(),
-        ]);
+        let m = timer.measure(|| {
+            let t = b0.run_scratch(&input, &mut scratch).unwrap();
+            scratch.give(std::hint::black_box(t));
+        });
+        rows.push(Row {
+            component: format!("block run [{}]", b0.name),
+            payload: fmt_bytes(input.byte_len() as u64),
+            m,
+            throughput: String::new(),
+        });
 
         let slow = BenchTimer::new(1, 5);
-        let m = slow.measure(|| std::hint::black_box(chain.run(&input).unwrap()));
-        table.row(vec![
-            "full chain (10 blocks)".into(),
-            fmt_bytes(input.byte_len() as u64),
-            format!("{m}"),
-            String::new(),
-        ]);
+        let m = slow.measure(|| {
+            let t = chain.run_scratch(&input, &mut scratch).unwrap();
+            scratch.give(std::hint::black_box(t));
+        });
+        rows.push(Row {
+            component: "full chain (10 blocks)".into(),
+            payload: fmt_bytes(input.byte_len() as u64),
+            m,
+            throughput: String::new(),
+        });
     } else {
-        eprintln!("(artifacts missing — runtime rows skipped)");
+        eprintln!("(artifacts missing — artifact-backed rows skipped)");
     }
 
+    let mut table = Table::new(&["component", "payload", "median", "throughput"]);
+    for r in &rows {
+        table.row(vec![
+            r.component.clone(),
+            r.payload.clone(),
+            format!("{}", r.m),
+            r.throughput.clone(),
+        ]);
+    }
     println!("{}", table.render());
+    println!("\nblock-exec speedup (gemm vs naive conv3x3): {block_exec_speedup:.2}×");
+
+    if json_mode {
+        let json = obj(vec![
+            ("bench", s("hotpath_microbench")),
+            ("generator", s("cargo bench --bench hotpath_microbench -- --json")),
+            ("threads", num(serdab::runtime::scratch::env_threads() as f64)),
+            (
+                "rows",
+                arr(rows
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("component", s(r.component.clone())),
+                            ("payload", s(r.payload.clone())),
+                            ("median_ns", num((r.m.median_secs * 1e9).round())),
+                            ("throughput", s(r.throughput.clone())),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "block_exec",
+                obj(vec![
+                    ("naive_ns", num((m_naive.median_secs * 1e9).round())),
+                    ("gemm_ns", num((m_gemm.median_secs * 1e9).round())),
+                    ("speedup", Json::Num(block_exec_speedup)),
+                ]),
+            ),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ has a parent")
+            .join("BENCH_hotpath.json");
+        std::fs::write(&path, json.to_string_pretty() + "\n")?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }

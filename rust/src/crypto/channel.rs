@@ -58,12 +58,23 @@ impl Channel {
 impl SealKey {
     /// Encrypt `plain` into a self-contained record.
     pub fn seal_record(&mut self, plain: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(RECORD_OVERHEAD + plain.len());
+        self.seal_record_into(plain, &mut out);
+        out
+    }
+
+    /// Encrypt `plain` into `out` (cleared first). Reusing one buffer
+    /// across frames makes the steady-state seal path allocation-free
+    /// (the record size is fixed per hop, so the capacity stabilizes
+    /// after the first frame).
+    pub fn seal_record_into(&mut self, plain: &[u8], out: &mut Vec<u8>) {
         let mut nonce = [0u8; 12];
         os_random(&mut nonce);
         let seq = self.seq;
         self.seq += 1;
 
-        let mut out = Vec::with_capacity(RECORD_OVERHEAD + plain.len());
+        out.clear();
+        out.reserve(RECORD_OVERHEAD + plain.len());
         out.extend_from_slice(&seq.to_be_bytes());
         out.extend_from_slice(&(plain.len() as u32).to_be_bytes());
         out.extend_from_slice(&nonce);
@@ -74,13 +85,22 @@ impl SealKey {
         let (_, body) = out.split_at_mut(RECORD_OVERHEAD);
         let tag = self.gcm.seal(&nonce, &aad, body);
         out[24..40].copy_from_slice(&tag);
-        out
     }
 }
 
 impl OpenKey {
     /// Verify + decrypt one record; enforces strictly sequential delivery.
     pub fn open_record(&mut self, record: &[u8]) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.open_record_into(record, &mut out)?;
+        Ok(out)
+    }
+
+    /// Verify + decrypt one record into `out` (cleared first) — the
+    /// reusable-buffer twin of [`OpenKey::open_record`]. On error `out`
+    /// holds unspecified bytes (never authenticated plaintext) and the
+    /// expected sequence number is unchanged.
+    pub fn open_record_into(&mut self, record: &[u8], out: &mut Vec<u8>) -> Result<()> {
         if record.len() < RECORD_OVERHEAD {
             bail!("record truncated: {} bytes", record.len());
         }
@@ -94,12 +114,13 @@ impl OpenKey {
         if seq != self.expect_seq {
             bail!("replay/reorder detected: expected seq {}, got {seq}", self.expect_seq);
         }
-        let mut body = record[RECORD_OVERHEAD..].to_vec();
+        out.clear();
+        out.extend_from_slice(&record[RECORD_OVERHEAD..]);
         self.gcm
-            .open(&nonce, &seq.to_be_bytes(), &mut body, &tag)
+            .open(&nonce, &seq.to_be_bytes(), out, &tag)
             .context("record authentication failed")?;
         self.expect_seq += 1;
-        Ok(body)
+        Ok(())
     }
 }
 
@@ -119,6 +140,29 @@ mod tests {
         assert_eq!(b.rx.open_record(&r).unwrap(), b"frame-0 tensor bytes");
         let r2 = b.tx.seal_record(b"ack");
         assert_eq!(a.rx.open_record(&r2).unwrap(), b"ack");
+    }
+
+    #[test]
+    fn into_variants_roundtrip_with_reused_buffers() {
+        let (mut a, mut b) = pair();
+        let mut rec = Vec::new();
+        let mut plain = Vec::new();
+        for i in 0..4u32 {
+            let msg = vec![i as u8; 64 + i as usize];
+            a.tx.seal_record_into(&msg, &mut rec);
+            b.rx.open_record_into(&rec, &mut plain).unwrap();
+            assert_eq!(plain, msg);
+        }
+        // a tampered record leaves the sequence untouched, so the next
+        // good record still opens
+        let msg = b"after-tamper".to_vec();
+        a.tx.seal_record_into(&msg, &mut rec);
+        let mut bad = rec.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 1;
+        assert!(b.rx.open_record_into(&bad, &mut plain).is_err());
+        b.rx.open_record_into(&rec, &mut plain).unwrap();
+        assert_eq!(plain, msg);
     }
 
     #[test]

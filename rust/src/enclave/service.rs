@@ -10,7 +10,7 @@ use anyhow::{Context, Result};
 use super::{EnclaveSim, CODE_ID};
 use crate::crypto::channel::Channel;
 use crate::model::Manifest;
-use crate::runtime::{default_backend, ChainExecutor, Tensor};
+use crate::runtime::{default_backend, ChainExecutor, Scratch};
 
 /// Running statistics of one service instance — the "online profiling
 /// information" the coordinator's monitor consumes (paper §V).
@@ -58,6 +58,14 @@ pub struct NnService {
     pub out_shape: Vec<usize>,
     /// Running per-frame statistics.
     pub stats: ServiceStats,
+    /// Per-service scratch arena: recycled activation tensors + kernel
+    /// panel buffers. One service = one pipeline worker thread, so the
+    /// arena is never shared (DESIGN.md §14 ownership rules).
+    scratch: Scratch,
+    /// Reused staging buffer for opened ingress plaintext.
+    plain_buf: Vec<u8>,
+    /// Reused staging buffer for serialized egress plaintext.
+    out_buf: Vec<u8>,
 }
 
 impl NnService {
@@ -70,7 +78,18 @@ impl NnService {
     ) -> Self {
         let in_shape = chain.blocks.first().map(|b| b.in_shape.clone()).unwrap_or_default();
         let out_shape = chain.blocks.last().map(|b| b.out_shape.clone()).unwrap_or_default();
-        NnService { enclave, chain, ingress, egress, in_shape, out_shape, stats: Default::default() }
+        NnService {
+            enclave,
+            chain,
+            ingress,
+            egress,
+            in_shape,
+            out_shape,
+            stats: Default::default(),
+            scratch: Scratch::new(),
+            plain_buf: Vec::new(),
+            out_buf: Vec::new(),
+        }
     }
 
     /// Build the complete service for one placement stage, the way a
@@ -113,27 +132,35 @@ impl NnService {
     /// Process one sealed record: open → run partition → seal for the next
     /// hop (or return plaintext bytes for a trusted local sink when this is
     /// the final stage and `egress` is None).
+    ///
+    /// Every intermediate buffer — opened plaintext, activation tensors
+    /// (through the [`Scratch`] arena), serialized egress bytes — is
+    /// reused frame over frame; steady state performs exactly one
+    /// allocation per frame, the returned record whose ownership leaves
+    /// the service.
     pub fn process_record(&mut self, record: &[u8]) -> Result<Vec<u8>> {
         let t0 = std::time::Instant::now();
-        let plain = self
-            .ingress
+        self.ingress
             .rx
-            .open_record(record)
+            .open_record_into(record, &mut self.plain_buf)
             .context("opening ingress record inside enclave")?;
         let t_open = t0.elapsed().as_secs_f64();
 
-        let input = Tensor::from_le_bytes(&plain, self.in_shape.clone())?;
+        let mut input = self.scratch.take(&self.in_shape);
+        input.fill_from_le_bytes(&self.plain_buf)?;
         self.enclave.note_activation(input.byte_len() as u64);
         let t1 = std::time::Instant::now();
-        let out = self.chain.run(&input)?;
+        let out = self.chain.run_scratch(&input, &mut self.scratch)?;
         let t_compute = t1.elapsed().as_secs_f64();
         self.enclave.note_activation(out.byte_len() as u64);
+        self.scratch.give(input);
 
         let t2 = std::time::Instant::now();
-        let out_bytes = out.to_le_bytes();
+        out.to_le_bytes_into(&mut self.out_buf);
+        self.scratch.give(out);
         let sealed = match &mut self.egress {
-            Some(ch) => ch.tx.seal_record(&out_bytes),
-            None => out_bytes,
+            Some(ch) => ch.tx.seal_record(&self.out_buf),
+            None => self.out_buf.clone(),
         };
         let t_seal = t2.elapsed().as_secs_f64();
 
@@ -149,7 +176,7 @@ impl NnService {
 mod tests {
     use super::*;
     use crate::model::manifest::{default_artifacts_dir, load_manifest};
-    use crate::runtime::default_backend;
+    use crate::runtime::{default_backend, Tensor};
 
     #[test]
     fn two_chained_services_reproduce_the_full_model() {

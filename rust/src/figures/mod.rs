@@ -9,7 +9,7 @@
 
 pub mod harness;
 
-pub use harness::{BenchTimer, Table};
+pub use harness::{BenchTimer, Measurement, Table};
 
 use crate::util::json::Json;
 

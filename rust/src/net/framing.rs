@@ -32,22 +32,42 @@ impl FrameType {
 /// full-scale ~3.2 MB; the cap is a sanity bound against corrupt peers).
 pub const MAX_FRAME: usize = 64 << 20;
 
-/// Write one `[len][type][payload]` frame and flush. Rejects payloads over
-/// [`MAX_FRAME`]; a sink that stops accepting bytes surfaces as an error
-/// (short writes are never silent).
-pub fn write_frame(w: &mut impl Write, ty: FrameType, payload: &[u8]) -> Result<()> {
+/// Encode one `[len][type][payload]` record into `buf` (cleared first).
+/// Rejects payloads over [`MAX_FRAME`] before touching `buf`. This is the
+/// shared serializer behind [`write_frame`] and the pipeline engine's
+/// in-process framing — header and payload land in one contiguous buffer
+/// so the record hits the wire as a **single** `write` (one syscall per
+/// record on a TCP hop, instead of the three separate `write_all` calls
+/// the pre-coalescing code issued).
+pub fn encode_frame_into(buf: &mut Vec<u8>, ty: FrameType, payload: &[u8]) -> Result<()> {
     anyhow::ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
-    w.write_all(&(payload.len() as u32).to_be_bytes())?;
-    w.write_all(&[ty as u8])?;
-    w.write_all(payload)?;
+    buf.clear();
+    buf.reserve(5 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.push(ty as u8);
+    buf.extend_from_slice(payload);
+    Ok(())
+}
+
+/// Write one `[len][type][payload]` frame as a single coalesced write and
+/// flush. Rejects payloads over [`MAX_FRAME`] before anything hits the
+/// wire; a sink that stops accepting bytes surfaces as an error (short
+/// writes are never silent). Allocates a staging buffer per call — use
+/// [`FrameWriter`] on a hot path to reuse one.
+pub fn write_frame(w: &mut impl Write, ty: FrameType, payload: &[u8]) -> Result<()> {
+    let mut buf = Vec::new();
+    encode_frame_into(&mut buf, ty, payload)?;
+    w.write_all(&buf)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one frame. Handles partial reads (loops via `read_exact`), rejects
-/// unknown types and length prefixes over [`MAX_FRAME`] *before*
-/// allocating, and errors on truncated payloads.
-pub fn read_frame(r: &mut impl Read) -> Result<(FrameType, Vec<u8>)> {
+/// Read one frame into `payload` (cleared first). Handles partial reads
+/// (loops via `read_exact`), rejects unknown types and length prefixes
+/// over [`MAX_FRAME`] *before* growing the buffer, and errors on
+/// truncated payloads. Reusing one buffer across records makes the
+/// steady-state read path allocation-free.
+pub fn read_frame_into(r: &mut impl Read, payload: &mut Vec<u8>) -> Result<FrameType> {
     let mut head = [0u8; 5];
     r.read_exact(&mut head).context("reading frame header")?;
     let len = u32::from_be_bytes([head[0], head[1], head[2], head[3]]) as usize;
@@ -55,21 +75,52 @@ pub fn read_frame(r: &mut impl Read) -> Result<(FrameType, Vec<u8>)> {
         bail!("frame length {len} exceeds cap");
     }
     let ty = FrameType::from_u8(head[4])?;
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("reading frame payload")?;
+    // resize without a full re-zero: read_exact overwrites every byte,
+    // and on the steady-state hop the length is stable frame-over-frame
+    if payload.len() > len {
+        payload.truncate(len);
+    } else {
+        payload.resize(len, 0);
+    }
+    r.read_exact(payload).context("reading frame payload")?;
+    Ok(ty)
+}
+
+/// Read one frame ([`read_frame_into`] with a fresh buffer).
+pub fn read_frame(r: &mut impl Read) -> Result<(FrameType, Vec<u8>)> {
+    let mut payload = Vec::new();
+    let ty = read_frame_into(r, &mut payload)?;
     Ok((ty, payload))
 }
 
-/// Convenience wrapper owning the write half of a stream.
-pub struct FrameWriter<W: Write>(pub W);
+/// Convenience wrapper owning the write half of a stream plus a reused
+/// staging buffer: every [`FrameWriter::send`] is one coalesced write
+/// with zero steady-state allocation.
+pub struct FrameWriter<W: Write> {
+    w: W,
+    buf: Vec<u8>,
+}
 
 /// Convenience wrapper owning the read half of a stream.
 pub struct FrameReader<R: Read>(pub R);
 
 impl<W: Write> FrameWriter<W> {
-    /// Write one frame ([`write_frame`]).
+    /// Wrap the write half of a stream.
+    pub fn new(w: W) -> Self {
+        FrameWriter { w, buf: Vec::new() }
+    }
+
+    /// Write one frame as a single coalesced write (buffer reused).
     pub fn send(&mut self, ty: FrameType, payload: &[u8]) -> Result<()> {
-        write_frame(&mut self.0, ty, payload)
+        encode_frame_into(&mut self.buf, ty, payload)?;
+        self.w.write_all(&self.buf)?;
+        self.w.flush()?;
+        Ok(())
+    }
+
+    /// Consume the wrapper, returning the underlying writer.
+    pub fn into_inner(self) -> W {
+        self.w
     }
 }
 
@@ -77,6 +128,11 @@ impl<R: Read> FrameReader<R> {
     /// Read one frame ([`read_frame`]).
     pub fn recv(&mut self) -> Result<(FrameType, Vec<u8>)> {
         read_frame(&mut self.0)
+    }
+
+    /// Read one frame into a reused buffer ([`read_frame_into`]).
+    pub fn recv_into(&mut self, payload: &mut Vec<u8>) -> Result<FrameType> {
+        read_frame_into(&mut self.0, payload)
     }
 }
 
@@ -200,11 +256,46 @@ mod tests {
 
     #[test]
     fn writer_reader_wrappers_roundtrip() {
-        let mut w = FrameWriter(Vec::<u8>::new());
+        let mut w = FrameWriter::new(Vec::<u8>::new());
         w.send(FrameType::Control, b"{\"op\":\"ping\"}").unwrap();
         w.send(FrameType::Data, &[9, 9, 9]).unwrap();
-        let mut r = FrameReader(Cursor::new(w.0));
+        let mut r = FrameReader(Cursor::new(w.into_inner()));
         assert_eq!(r.recv().unwrap().1, b"{\"op\":\"ping\"}");
-        assert_eq!(r.recv().unwrap().1, vec![9, 9, 9]);
+        let mut buf = Vec::new();
+        assert_eq!(r.recv_into(&mut buf).unwrap(), FrameType::Data);
+        assert_eq!(buf, vec![9, 9, 9]);
+    }
+
+    /// Writer that counts `write` calls — proves header + payload reach
+    /// the sink as one coalesced record.
+    struct CountingWriter {
+        writes: usize,
+        bytes: Vec<u8>,
+    }
+
+    impl Write for CountingWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.writes += 1;
+            self.bytes.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn frames_are_one_write_per_record() {
+        let mut w = CountingWriter { writes: 0, bytes: Vec::new() };
+        write_frame(&mut w, FrameType::Data, &[5u8; 1000]).unwrap();
+        assert_eq!(w.writes, 1, "header and payload must coalesce");
+        let mut fw = FrameWriter::new(CountingWriter { writes: 0, bytes: Vec::new() });
+        fw.send(FrameType::Data, &[6u8; 64]).unwrap();
+        fw.send(FrameType::Eos, &[]).unwrap();
+        let inner = fw.into_inner();
+        assert_eq!(inner.writes, 2, "one write per record through the wrapper");
+        let mut cur = Cursor::new(inner.bytes);
+        assert_eq!(read_frame(&mut cur).unwrap().1, vec![6u8; 64]);
+        assert_eq!(read_frame(&mut cur).unwrap().0, FrameType::Eos);
     }
 }

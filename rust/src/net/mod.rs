@@ -5,5 +5,7 @@
 pub mod framing;
 pub mod throttle;
 
-pub use framing::{read_frame, write_frame, FrameReader, FrameWriter};
+pub use framing::{
+    encode_frame_into, read_frame, read_frame_into, write_frame, FrameReader, FrameWriter,
+};
 pub use throttle::TokenBucket;

@@ -24,13 +24,22 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use super::scratch::Scratch;
 use super::tensor::Tensor;
 use crate::model::ModelInfo;
 
 /// One loaded, runnable model block.
 pub trait BlockRunner {
-    /// Execute the block on one activation tensor.
-    fn run(&self, activation: &Tensor) -> Result<Tensor>;
+    /// Execute the block on one activation tensor, drawing every
+    /// intermediate buffer from the caller's [`Scratch`] arena — the
+    /// allocation-free steady-state path (DESIGN.md §14). The arena also
+    /// carries the worker-thread budget for intra-op parallelism.
+    fn run_scratch(&self, activation: &Tensor, scratch: &mut Scratch) -> Result<Tensor>;
+
+    /// Convenience: execute with a throwaway arena (env worker count).
+    fn run(&self, activation: &Tensor) -> Result<Tensor> {
+        self.run_scratch(activation, &mut Scratch::new())
+    }
 }
 
 /// A block-execution engine: loads manifest blocks into runnable form.

@@ -115,7 +115,13 @@ impl PjrtBlock {
 }
 
 impl BlockRunner for PjrtBlock {
-    fn run(&self, activation: &Tensor) -> Result<Tensor> {
+    // PJRT owns its device buffers — the host-side scratch arena has
+    // nothing to pool here, so the parameter is unused.
+    fn run_scratch(
+        &self,
+        activation: &Tensor,
+        _scratch: &mut crate::runtime::scratch::Scratch,
+    ) -> Result<Tensor> {
         // execute borrows literals — params stay resident, only the
         // activation converts per call
         let act_lit = activation.to_literal()?;

@@ -1,0 +1,431 @@
+//! Cache-blocked, register-tiled f32 GEMM — the single compute core the
+//! reference backend lowers `conv2d` (via im2col) and `dense` onto
+//! (DESIGN.md §14).
+//!
+//! The microkernel computes an `MR×NR` output tile in `MR·NR` scalar
+//! accumulators that LLVM keeps in vector registers (`NR = 16` f32 = two
+//! AVX2 lanes; `MR = 4` rows → 8 accumulator registers), streaming one
+//! row of B per `k` step — B is loaded once per tile row-pass instead of
+//! once per output element, and there is **no data-dependent branch** in
+//! the inner loop (the old `xv == 0.0` skip made timing input-dependent
+//! and blocked autovectorization).
+//!
+//! Numerical contract: every output element is `bias[j] + Σ_k a·b` with
+//! the reduction over `k` in strictly ascending order through a single
+//! accumulator that starts at zero. The edge paths (partial tiles, the
+//! batch-1 column-split `gemv_cols`) follow the *same* per-element
+//! operation order, so results are **bit-identical no matter how the
+//! matrices are tiled or split across worker threads** — this is what
+//! makes `SERDAB_THREADS=1` and `=N` produce byte-identical tensors.
+
+/// Microkernel tile height (output rows per register tile).
+pub const MR: usize = 4;
+/// Microkernel tile width (output columns per register tile).
+pub const NR: usize = 16;
+/// im2col panel height: patch-matrix rows materialized per GEMM call.
+/// Bounds the scratch footprint to `PANEL_ROWS · KH·KW·Cin` floats per
+/// worker while keeping the A-panel hot in L1 across the tile sweep.
+pub const PANEL_ROWS: usize = 32;
+
+/// `c[i·n+j] = bias[j] + Σ_k a[i·k+kk] · b[kk·n+j]`, optional ReLU.
+///
+/// `a` is `m×k` row-major, `b` is `k×n` row-major, `c` (`m×n`) is fully
+/// overwritten. `bias` (length `n`) is added after the reduction; pass
+/// `None` for a plain product.
+///
+/// On x86-64 with AVX2 available at runtime, the same body is dispatched
+/// through a `#[target_feature(enable = "avx2")]` wrapper so the
+/// autovectorizer emits 8-wide ymm code instead of the SSE2 baseline.
+/// Rust never contracts `mul + add` into FMA, so the AVX2 and baseline
+/// paths execute the identical abstract float operations — results are
+/// bit-identical across ISAs, exactly as they are across worker counts.
+pub fn gemm_bias(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            // SAFETY: guarded by the runtime AVX2 check above.
+            unsafe { gemm_bias_avx2(m, k, n, a, b, bias, relu, c) };
+            return;
+        }
+    }
+    gemm_bias_body(m, k, n, a, b, bias, relu, c);
+}
+
+/// The generic body recompiled with AVX2 codegen (see [`gemm_bias`]).
+///
+/// # Safety
+/// Callers must have verified AVX2 support at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_bias_avx2(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    gemm_bias_body(m, k, n, a, b, bias, relu, c);
+}
+
+/// Tile sweep: `j` blocks outermost so one `k×NR` column block of B stays
+/// hot in L1 across every row tile of the A panel (B is the weight
+/// matrix — the big operand). Per-element accumulation order is
+/// independent of the sweep order, so this is purely a locality choice.
+#[inline(always)]
+fn gemm_bias_body(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k, "A is m×k");
+    debug_assert_eq!(b.len(), k * n, "B is k×n");
+    debug_assert_eq!(c.len(), m * n, "C is m×n");
+    let mt = m - (m % MR);
+    let mut j0 = 0;
+    while j0 + NR <= n {
+        let mut i0 = 0;
+        while i0 < mt {
+            tile(i0, j0, k, n, a, b, bias, relu, c);
+            i0 += MR;
+        }
+        j0 += NR;
+    }
+    if j0 < n {
+        edge(0, mt, j0, n, k, n, a, b, bias, relu, c);
+    }
+    if mt < m {
+        edge(mt, m, 0, n, k, n, a, b, bias, relu, c);
+    }
+}
+
+/// Full MR×NR register tile (see module docs for the accumulation order).
+#[inline(always)]
+fn tile(
+    i0: usize,
+    j0: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    let mut acc = [[0f32; NR]; MR];
+    let arows = [
+        &a[i0 * k..(i0 + 1) * k],
+        &a[(i0 + 1) * k..(i0 + 2) * k],
+        &a[(i0 + 2) * k..(i0 + 3) * k],
+        &a[(i0 + 3) * k..(i0 + 4) * k],
+    ];
+    for kk in 0..k {
+        let bb = &b[kk * n + j0..kk * n + j0 + NR];
+        for r in 0..MR {
+            let av = arows[r][kk];
+            let accr = &mut acc[r];
+            for j in 0..NR {
+                accr[j] += av * bb[j];
+            }
+        }
+    }
+    for r in 0..MR {
+        let row = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+        for j in 0..NR {
+            let mut v = acc[r][j];
+            if let Some(bs) = bias {
+                v += bs[j0 + j];
+            }
+            row[j] = if relu { v.max(0.0) } else { v };
+        }
+    }
+}
+
+/// Partial-tile cleanup: scalar per element, same per-element operation
+/// order as [`tile`] (zero-init accumulator, ascending `k`, then bias).
+#[inline(always)]
+fn edge(
+    ri0: usize,
+    ri1: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    for i in ri0..ri1 {
+        let arow = &a[i * k..i * k + k];
+        for j in j0..j1 {
+            let mut acc = 0f32;
+            for (kk, &av) in arow.iter().enumerate() {
+                acc += av * b[kk * n + j];
+            }
+            if let Some(bs) = bias {
+                acc += bs[j];
+            }
+            c[i * n + j] = if relu { acc.max(0.0) } else { acc };
+        }
+    }
+}
+
+/// Batch-1 dense fast path over a column range: `out[j]` (the caller's
+/// disjoint slice, columns `j0..j0+out.len()`) becomes
+/// `bias[j0+j] + Σ_k x[kk]·w[kk·n + j0+j]` with the same per-element
+/// order as [`gemm_bias`] — the memory accumulator sees the identical
+/// addition sequence, so column-splitting across workers cannot change a
+/// single bit of the result. Dispatches to AVX2 codegen like
+/// [`gemm_bias`].
+pub fn gemv_cols(
+    k: usize,
+    n: usize,
+    j0: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            // SAFETY: guarded by the runtime AVX2 check above.
+            unsafe { gemv_cols_avx2(k, n, j0, x, w, bias, relu, out) };
+            return;
+        }
+    }
+    gemv_cols_body(k, n, j0, x, w, bias, relu, out);
+}
+
+/// [`gemv_cols`] body recompiled with AVX2 codegen.
+///
+/// # Safety
+/// Callers must have verified AVX2 support at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_cols_avx2(
+    k: usize,
+    n: usize,
+    j0: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    gemv_cols_body(k, n, j0, x, w, bias, relu, out);
+}
+
+#[inline(always)]
+fn gemv_cols_body(
+    k: usize,
+    n: usize,
+    j0: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert!(j0 + out.len() <= n);
+    debug_assert_eq!(x.len(), k);
+    out.fill(0.0);
+    let width = out.len();
+    for (kk, &xv) in x.iter().enumerate() {
+        let wrow = &w[kk * n + j0..kk * n + j0 + width];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += xv * wv;
+        }
+    }
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut v = *o + bias[j0 + j];
+        if relu {
+            v = v.max(0.0);
+        }
+        *o = v;
+    }
+}
+
+/// Materialize rows `r0..r0+rows` of the im2col patch matrix into
+/// `panel` (`rows × KH·KW·Cin`, row-major). Patch row index `r` maps to
+/// output pixel `(ni, oy, ox)` with `r = (ni·OH + oy)·OW + ox`; the
+/// column index is `(ky·KW + kx)·Cin + ci` — exactly the HWIO weight
+/// layout, so the weight tensor is the GEMM's B operand with **no**
+/// reshaping. Out-of-bounds taps are materialized as zero runs (adding
+/// `0·w` is exact, so this matches the naive loops' tap skipping).
+pub fn im2col_panel(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    top: usize,
+    left: usize,
+    oh: usize,
+    ow: usize,
+    r0: usize,
+    rows: usize,
+    panel: &mut [f32],
+) {
+    let kcol = kh * kw * cin;
+    debug_assert_eq!(panel.len(), rows * kcol);
+    for r in 0..rows {
+        let pix = r0 + r;
+        let ox = pix % ow;
+        let rest = pix / ow;
+        let oy = rest % oh;
+        let ni = rest / oh;
+        let dst = &mut panel[r * kcol..(r + 1) * kcol];
+        let ix0 = (ox * stride) as isize - left as isize;
+        for ky in 0..kh {
+            let iy = (oy * stride + ky) as isize - top as isize;
+            let seg = &mut dst[ky * kw * cin..(ky + 1) * kw * cin];
+            if iy < 0 || iy >= h as isize {
+                seg.fill(0.0);
+                continue;
+            }
+            let row_base = (ni * h + iy as usize) * w;
+            if ix0 >= 0 && ix0 as usize + kw <= w {
+                // fully interior row: one contiguous copy of kw·cin floats
+                let src = (row_base + ix0 as usize) * cin;
+                seg.copy_from_slice(&x[src..src + kw * cin]);
+            } else {
+                for kx in 0..kw {
+                    let ix = ix0 + kx as isize;
+                    let cell = &mut seg[kx * cin..(kx + 1) * cin];
+                    if ix < 0 || ix >= w as isize {
+                        cell.fill(0.0);
+                    } else {
+                        let src = (row_base + ix as usize) * cin;
+                        cell.copy_from_slice(&x[src..src + cin]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive triple loop with the tile path's per-element order.
+    fn gemm_ref(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        bias: Option<&[f32]>,
+    ) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                if let Some(bs) = bias {
+                    acc += bs[j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn fill(seed: u64, len: usize) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gemm_matches_reference_on_awkward_shapes() {
+        // deliberately not multiples of MR/NR
+        let shapes = [(1, 1, 1), (3, 7, 5), (4, 16, 16), (5, 23, 17), (13, 9, 33), (8, 40, 48)];
+        for &(m, k, n) in &shapes {
+            let a = fill(m as u64, m * k);
+            let b = fill(n as u64 + 99, k * n);
+            let bias = fill(7, n);
+            let mut c = vec![0f32; m * n];
+            gemm_bias(m, k, n, &a, &b, Some(&bias), false, &mut c);
+            let want = gemm_ref(m, k, n, &a, &b, Some(&bias));
+            for (got, want) in c.iter().zip(&want) {
+                assert_eq!(got, want, "tile and edge paths must agree bit-for-bit");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_relu_clamps() {
+        let a = [1.0f32, -2.0];
+        let b = [1.0f32, 1.0];
+        let mut c = [0f32; 2];
+        gemm_bias(2, 1, 1, &a, &b, None, true, &mut c);
+        assert_eq!(c, [1.0, 0.0]);
+    }
+
+    #[test]
+    fn gemv_cols_bitwise_matches_gemm_rows() {
+        let (k, n) = (37, 53);
+        let x = fill(1, k);
+        let w = fill(2, k * n);
+        let bias = fill(3, n);
+        let mut full = vec![0f32; n];
+        gemm_bias(1, k, n, &x, &w, Some(&bias), true, &mut full);
+        // split columns at an awkward boundary
+        let mut split = vec![0f32; n];
+        let (lo, hi) = split.split_at_mut(19);
+        gemv_cols(k, n, 0, &x, &w, &bias, true, lo);
+        gemv_cols(k, n, 19, &x, &w, &bias, true, hi);
+        for (a, b) in full.iter().zip(&split) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn im2col_identity_for_1x1() {
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect(); // 1×2×2×3
+        let mut panel = vec![0f32; 4 * 3];
+        im2col_panel(&x, 2, 2, 3, 1, 1, 1, 0, 0, 2, 2, 0, 4, &mut panel);
+        assert_eq!(panel, x);
+    }
+
+    #[test]
+    fn im2col_zero_pads_borders() {
+        // 3×3 window over a 2×2 single-channel input, SAME-style pad 1:
+        // row 0 (pixel 0,0) has the top row + left column zeroed
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut panel = vec![9f32; 9];
+        im2col_panel(&x, 2, 2, 1, 3, 3, 1, 1, 1, 2, 2, 0, 1, &mut panel);
+        assert_eq!(panel, vec![0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+}

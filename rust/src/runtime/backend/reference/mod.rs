@@ -6,6 +6,7 @@
 //! `python/compile/kernels/ref.py`, the oracle the golden activations
 //! were generated against.
 
+pub mod gemm;
 pub mod ops;
 pub mod zoo;
 
@@ -16,6 +17,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use self::zoo::{BlockDef, Combine, Layer};
 use super::{Backend, BlockRunner};
 use crate::model::ModelInfo;
+use crate::runtime::scratch::Scratch;
 use crate::runtime::tensor::Tensor;
 
 /// Pure-Rust reference backend (always available).
@@ -98,9 +100,10 @@ struct RefBlock {
 }
 
 impl BlockRunner for RefBlock {
-    fn run(&self, activation: &Tensor) -> Result<Tensor> {
+    fn run_scratch(&self, activation: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
         let mut cursor = 0usize;
-        let out = forward_layers(&self.layers, activation.clone(), &self.params, &mut cursor)
+        let x = scratch.take_copy(activation);
+        let out = forward_layers(&self.layers, x, &self.params, &mut cursor, scratch)
             .with_context(|| format!("reference forward of block {}", self.name))?;
         ensure!(
             cursor == self.params.len(),
@@ -125,14 +128,19 @@ fn take_pair<'a>(params: &'a [Tensor], cursor: &mut usize) -> Result<(&'a Tensor
 /// Depth-first forward walk, mirroring `model.py::_fwd_layers` with
 /// `use_ref=True`: each conv/dense consumes (weight, bias) in order;
 /// parallel paths all read the same input and consume params path by path.
+///
+/// `x` is owned (taken from the arena); every intermediate activation is
+/// returned to `scratch` as soon as its consumer has produced the next
+/// one, so the steady-state walk allocates nothing.
 fn forward_layers(
     layers: &[Layer],
     mut x: Tensor,
     params: &[Tensor],
     cursor: &mut usize,
+    scratch: &mut Scratch,
 ) -> Result<Tensor> {
     for layer in layers {
-        x = match layer {
+        match layer {
             Layer::Conv { kernel, stride, pad, relu } => {
                 ensure!(x.shape.len() == 4, "conv after flatten (shape {:?})", x.shape);
                 let (w, b) = take_pair(params, cursor)?;
@@ -141,7 +149,8 @@ fn forward_layers(
                     "conv weight {:?} does not match declared {kernel}x{kernel} kernel",
                     w.shape
                 );
-                ops::conv2d(&x, w, b, *stride, pad, *relu)?
+                let out = ops::conv2d_scratch(&x, w, b, *stride, pad, *relu, scratch)?;
+                scratch.give(std::mem::replace(&mut x, out));
             }
             Layer::DwConv { kernel, stride, pad, relu } => {
                 let (w, b) = take_pair(params, cursor)?;
@@ -150,35 +159,63 @@ fn forward_layers(
                     "depthwise weight {:?} does not match declared {kernel}x{kernel} kernel",
                     w.shape
                 );
-                ops::dwconv2d(&x, w, b, *stride, pad, *relu)?
+                let out = ops::dwconv2d_scratch(&x, w, b, *stride, pad, *relu, scratch)?;
+                scratch.give(std::mem::replace(&mut x, out));
             }
-            Layer::Pool { kernel, stride, max, pad } => ops::pool2d(&x, *kernel, *stride, *max, pad)?,
-            Layer::GlobalAvgPool => ops::global_avg_pool(&x)?,
+            Layer::Pool { kernel, stride, max, pad } => {
+                let out = ops::pool2d_scratch(&x, *kernel, *stride, *max, pad, scratch)?;
+                scratch.give(std::mem::replace(&mut x, out));
+            }
+            Layer::GlobalAvgPool => {
+                let out = ops::global_avg_pool_scratch(&x, scratch)?;
+                scratch.give(std::mem::replace(&mut x, out));
+            }
             Layer::Dense { relu } => {
                 let (w, b) = take_pair(params, cursor)?;
-                let flat = if x.shape.len() == 4 { ops::flatten(&x)? } else { x };
-                ops::dense(&flat, w, b, *relu)?
+                if x.shape.len() == 4 {
+                    // flatten is a pure reshape on the owned activation
+                    let (n, flat) = (x.shape[0], x.shape[1] * x.shape[2] * x.shape[3]);
+                    x.reshape_in_place(&[n, flat])?;
+                }
+                let out = ops::dense_scratch(&x, w, b, *relu, scratch)?;
+                scratch.give(std::mem::replace(&mut x, out));
             }
-            Layer::Identity => x,
+            Layer::Identity => {}
             Layer::Parallel { paths, combine, post_relu } => {
-                let mut outs = Vec::with_capacity(paths.len());
+                ensure!(!paths.is_empty(), "parallel layer with zero paths");
+                // recycled holding pen for the path outputs (taken
+                // wholesale so the recursion below can reuse the arena;
+                // a *nested* Parallel would fall back to a fresh vec)
+                let mut outs = std::mem::take(&mut scratch.parts);
+                outs.clear();
                 for path in paths {
-                    outs.push(forward_layers(path, x.clone(), params, cursor)?);
+                    let xi = scratch.take_copy(&x);
+                    let o = forward_layers(path, xi, params, cursor, scratch)?;
+                    outs.push(o);
                 }
                 let mut merged = match combine {
-                    Combine::Concat => ops::concat_channels(&outs)?,
+                    Combine::Concat => {
+                        let t = ops::concat_channels_scratch(&outs, scratch)?;
+                        for o in outs.drain(..) {
+                            scratch.give(o);
+                        }
+                        t
+                    }
                     Combine::Add => {
-                        let mut acc = outs[0].clone();
-                        for o in &outs[1..] {
-                            acc = ops::add(&acc, o)?;
+                        let mut it = outs.drain(..);
+                        let mut acc = it.next().expect("checked non-empty above");
+                        for o in it {
+                            ops::add_assign(&mut acc, &o)?;
+                            scratch.give(o);
                         }
                         acc
                     }
                 };
+                scratch.parts = outs;
                 if *post_relu {
                     ops::relu_in_place(&mut merged);
                 }
-                merged
+                scratch.give(std::mem::replace(&mut x, merged));
             }
         };
     }
@@ -207,7 +244,7 @@ mod tests {
             t(&[1], vec![0.5]),                // expand 3x3 b
         ];
         let mut cursor = 0;
-        let out = forward_layers(&layers, x, &params, &mut cursor).unwrap();
+        let out = forward_layers(&layers, x, &params, &mut cursor, &mut Scratch::new()).unwrap();
         assert_eq!(cursor, 6);
         assert_eq!(out.shape, vec![1, 2, 2, 2]);
         // squeeze: ch0 = x (relu), ch1 = -x → relu → 0.
@@ -233,7 +270,7 @@ mod tests {
             t(&[1], vec![0.0]),
         ];
         let mut cursor = 0;
-        let out = forward_layers(&layers, x, &params, &mut cursor).unwrap();
+        let out = forward_layers(&layers, x, &params, &mut cursor, &mut Scratch::new()).unwrap();
         assert_eq!(cursor, 6);
         // main 2.0 + identity shortcut 2.0, post-ReLU
         assert_eq!(out.data, vec![4.0]);
@@ -246,7 +283,7 @@ mod tests {
         // GAP → [2.5, 25.0]; dense 2→2 identity, no relu
         let params = vec![t(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]), t(&[2], vec![0.0, 0.0])];
         let mut cursor = 0;
-        let out = forward_layers(&layers, x, &params, &mut cursor).unwrap();
+        let out = forward_layers(&layers, x, &params, &mut cursor, &mut Scratch::new()).unwrap();
         assert_eq!(out.shape, vec![1, 2]);
         assert_eq!(out.data, vec![2.5, 25.0]);
     }
@@ -256,6 +293,6 @@ mod tests {
         let layers = vec![Layer::Dense { relu: false }];
         let x = t(&[1, 2], vec![1.0, 2.0]);
         let mut cursor = 0;
-        assert!(forward_layers(&layers, x, &[], &mut cursor).is_err());
+        assert!(forward_layers(&layers, x, &[], &mut cursor, &mut Scratch::new()).is_err());
     }
 }

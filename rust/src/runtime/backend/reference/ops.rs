@@ -4,6 +4,19 @@
 //! batch-first; conv weights are HWIO `(KH, KW, Cin, Cout)`, depthwise
 //! weights `(KH, KW, C)`, dense weights `(Fin, Fout)`.
 //!
+//! Since the GEMM rewrite (DESIGN.md §14) the compute core is
+//! [`gemm`](super::gemm): `conv2d` lowers to im2col panels + a blocked,
+//! register-tiled matmul, `dense` calls the same GEMM (a column-split
+//! AXPY for batch 1), and `dwconv2d`/`pool2d` run channel-innermost loops
+//! that autovectorize over the contiguous NHWC channel axis. Kernels can
+//! split output rows across `std::thread::scope` workers
+//! (`SERDAB_THREADS`, see [`Scratch`]); results are bit-identical for
+//! every worker count. The `*_scratch` entry points reuse buffers from a
+//! per-worker [`Scratch`] arena so the steady-state frame path performs
+//! no heap allocation; the plain-named wrappers keep the old signatures
+//! with a throwaway arena. The pre-GEMM scalar loops live on in
+//! [`naive`] as the parity baseline and microbench reference.
+//!
 //! Padding follows XLA/TF conventions: `SAME` pads
 //! `max((ceil(H/s)-1)·s + K - H, 0)` split floor-before / rest-after;
 //! `VALID` pads nothing. Max-pool padding is identity-valued (skipped
@@ -12,7 +25,9 @@
 
 use anyhow::{bail, ensure, Result};
 
+use super::gemm;
 use super::zoo::Pad;
+use crate::runtime::scratch::Scratch;
 use crate::runtime::tensor::Tensor;
 
 /// Resolved padding: (top, left) offsets plus output height/width.
@@ -59,8 +74,79 @@ fn dims4(x: &Tensor, what: &str) -> Result<(usize, usize, usize, usize)> {
     Ok((x.shape[0], x.shape[1], x.shape[2], x.shape[3]))
 }
 
-/// 2-D convolution, NHWC × HWIO → NHWC, bias add, optional ReLU.
-pub fn conv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: usize, pad: &Pad, relu: bool) -> Result<Tensor> {
+/// Below this many FLOPs a kernel runs single-threaded — scoped-thread
+/// spawn costs tens of µs, which would dominate tiny ops.
+const MIN_PAR_FLOPS: usize = 1 << 21;
+
+/// Worker count for a kernel invocation: the arena's thread budget,
+/// clamped to the row count, and 1 when the op is too small to amortize
+/// thread spawns.
+fn effective_workers(threads: usize, rows: usize, flops: usize) -> usize {
+    if threads <= 1 || rows < 2 || flops < MIN_PAR_FLOPS {
+        1
+    } else {
+        threads.min(rows)
+    }
+}
+
+/// Split `rows` output rows (each `row_elems` elements wide) across
+/// `workers` scoped threads. `f(r0, r1, chunk, panel)` runs once per
+/// worker on its disjoint output chunk with its private panel buffer; the
+/// last chunk runs inline on the calling thread. Single-worker calls
+/// never spawn. `panels` must have at least `workers` entries.
+fn par_rows<F>(
+    workers: usize,
+    rows: usize,
+    row_elems: usize,
+    out: &mut [f32],
+    panels: &mut [Vec<f32>],
+    f: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert!(!panels.is_empty() && panels.len() >= workers);
+    let w = workers.max(1);
+    let chunk = (rows + w - 1) / w;
+    if w == 1 || chunk >= rows {
+        f(0, rows, out, panels[0].as_mut_slice());
+        return;
+    }
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut rest: &mut [f32] = out;
+        let mut start = 0usize;
+        for p in panels.iter_mut() {
+            if start >= rows {
+                break;
+            }
+            let end = (start + chunk).min(rows);
+            let cur = std::mem::take(&mut rest);
+            let (mine, tail) = cur.split_at_mut((end - start) * row_elems);
+            rest = tail;
+            let pslice = p.as_mut_slice();
+            if end == rows {
+                // last chunk on the calling thread (others already spawned)
+                fr(start, end, mine, pslice);
+            } else {
+                s.spawn(move || fr(start, end, mine, pslice));
+            }
+            start = end;
+        }
+    });
+}
+
+/// 2-D convolution, NHWC × HWIO → NHWC, bias add, optional ReLU —
+/// lowered to im2col panels + the blocked GEMM, output rows split across
+/// the arena's worker threads. Output comes from the arena pool.
+pub fn conv2d_scratch(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    stride: usize,
+    pad: &Pad,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
     let (n, h, wd, cin) = dims4(x, "conv2d input")?;
     ensure!(
         w.shape.len() == 4 && w.shape[2] == cin,
@@ -71,50 +157,84 @@ pub fn conv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: usize, pad: &Pad, relu
     ensure!(kh == kw, "conv2d kernels are square here, got {kh}x{kw}");
     ensure!(b.shape == [cout], "conv2d bias {:?} vs {cout} output channels", b.shape);
     let win = resolve(h, wd, kh, stride, pad)?;
+    let (top, left, oh, ow) = (win.top, win.left, win.oh, win.ow);
 
-    let mut out = vec![0f32; n * win.oh * win.ow * cout];
-    let mut acc = vec![0f32; cout];
-    for ni in 0..n {
-        for oy in 0..win.oh {
-            for ox in 0..win.ow {
-                acc.copy_from_slice(&b.data);
-                for ky in 0..kh {
-                    let iy = (oy * stride + ky) as isize - win.top as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kx in 0..kw {
-                        let ix = (ox * stride + kx) as isize - win.left as isize;
-                        if ix < 0 || ix >= wd as isize {
-                            continue;
-                        }
-                        let x_base = (((ni * h + iy as usize) * wd) + ix as usize) * cin;
-                        let w_base = ((ky * kw) + kx) * cin * cout;
-                        for ci in 0..cin {
-                            let xv = x.data[x_base + ci];
-                            if xv == 0.0 {
-                                continue;
-                            }
-                            let w_row = w_base + ci * cout;
-                            for (co, a) in acc.iter_mut().enumerate() {
-                                *a += xv * w.data[w_row + co];
-                            }
-                        }
-                    }
-                }
-                let o_base = (((ni * win.oh + oy) * win.ow) + ox) * cout;
-                for (co, &a) in acc.iter().enumerate() {
-                    out[o_base + co] = if relu { a.max(0.0) } else { a };
-                }
+    let mut out = scratch.take(&[n, oh, ow, cout]);
+    let m = n * oh * ow;
+    let kcol = kh * kw * cin;
+    let workers = effective_workers(scratch.threads(), m, 2 * m * kcol * cout);
+    let (data_x, data_w, bias) = (&x.data[..], &w.data[..], &b.data[..]);
+
+    // 1×1 stride-1 convs (fire squeeze/expand, inception reducers) are a
+    // plain GEMM on the input as-is: skip im2col entirely.
+    let is_1x1 = kh == 1 && stride == 1 && top == 0 && left == 0 && oh == h && ow == wd;
+    if is_1x1 {
+        let panels = scratch.panels_for(workers, 0);
+        par_rows(workers, m, cout, &mut out.data, panels, |m0, m1, c_chunk, _p| {
+            gemm::gemm_bias(
+                m1 - m0,
+                cin,
+                cout,
+                &data_x[m0 * cin..m1 * cin],
+                data_w,
+                Some(bias),
+                relu,
+                c_chunk,
+            );
+        });
+    } else {
+        let panel_rows = gemm::PANEL_ROWS.min(m.max(1));
+        let panels = scratch.panels_for(workers, panel_rows * kcol);
+        par_rows(workers, m, cout, &mut out.data, panels, |m0, m1, c_chunk, panel| {
+            let mut p0 = m0;
+            while p0 < m1 {
+                let pr = panel_rows.min(m1 - p0);
+                gemm::im2col_panel(
+                    data_x,
+                    h,
+                    wd,
+                    cin,
+                    kh,
+                    kw,
+                    stride,
+                    top,
+                    left,
+                    oh,
+                    ow,
+                    p0,
+                    pr,
+                    &mut panel[..pr * kcol],
+                );
+                let c_off = (p0 - m0) * cout;
+                gemm::gemm_bias(
+                    pr,
+                    kcol,
+                    cout,
+                    &panel[..pr * kcol],
+                    data_w,
+                    Some(bias),
+                    relu,
+                    &mut c_chunk[c_off..c_off + pr * cout],
+                );
+                p0 += pr;
             }
-        }
+        });
     }
-    Tensor::new(vec![n, win.oh, win.ow, cout], out)
+    Ok(out)
 }
 
 /// Depthwise 2-D convolution (MobileNet): weight `(KH, KW, C)`, one
-/// filter per input channel, channel count preserved.
-pub fn dwconv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: usize, pad: &Pad, relu: bool) -> Result<Tensor> {
+/// filter per input channel — channel-innermost AXPY over the contiguous
+/// NHWC channel axis, rows split across workers.
+pub fn dwconv2d_scratch(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    stride: usize,
+    pad: &Pad,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
     let (n, h, wd, c) = dims4(x, "dwconv2d input")?;
     ensure!(
         w.shape.len() == 3 && w.shape[2] == c,
@@ -125,97 +245,146 @@ pub fn dwconv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: usize, pad: &Pad, re
     ensure!(kh == kw, "dwconv2d kernels are square here, got {kh}x{kw}");
     ensure!(b.shape == [c], "dwconv2d bias {:?} vs {c} channels", b.shape);
     let win = resolve(h, wd, kh, stride, pad)?;
+    let (top, left, oh, ow) = (win.top, win.left, win.oh, win.ow);
 
-    let mut out = vec![0f32; n * win.oh * win.ow * c];
-    for ni in 0..n {
-        for oy in 0..win.oh {
-            for ox in 0..win.ow {
-                let o_base = (((ni * win.oh + oy) * win.ow) + ox) * c;
-                for ch in 0..c {
-                    let mut a = b.data[ch];
-                    for ky in 0..kh {
-                        let iy = (oy * stride + ky) as isize - win.top as isize;
-                        if iy < 0 || iy >= h as isize {
+    let mut out = scratch.take(&[n, oh, ow, c]);
+    let rows = n * oh;
+    let workers = effective_workers(scratch.threads(), rows, 2 * n * oh * ow * kh * kw * c);
+    let (data_x, data_w, bias) = (&x.data[..], &w.data[..], &b.data[..]);
+    let panels = scratch.panels_for(workers, 0);
+    par_rows(workers, rows, ow * c, &mut out.data, panels, |r0, r1, chunk, _p| {
+        for r in r0..r1 {
+            let oy = r % oh;
+            let ni = r / oh;
+            let orow = &mut chunk[(r - r0) * ow * c..(r - r0 + 1) * ow * c];
+            for ox in 0..ow {
+                let opix = &mut orow[ox * c..(ox + 1) * c];
+                opix.copy_from_slice(bias);
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - left as isize;
+                        if ix < 0 || ix >= wd as isize {
                             continue;
                         }
-                        for kx in 0..kw {
-                            let ix = (ox * stride + kx) as isize - win.left as isize;
-                            if ix < 0 || ix >= wd as isize {
-                                continue;
-                            }
-                            let xi = (((ni * h + iy as usize) * wd) + ix as usize) * c + ch;
-                            a += x.data[xi] * w.data[((ky * kw) + kx) * c + ch];
+                        let xs_base = (((ni * h + iy as usize) * wd) + ix as usize) * c;
+                        let xs = &data_x[xs_base..xs_base + c];
+                        let ws_base = ((ky * kw) + kx) * c;
+                        let ws = &data_w[ws_base..ws_base + c];
+                        for ((o, &xv), &wv) in opix.iter_mut().zip(xs).zip(ws) {
+                            *o += xv * wv;
                         }
                     }
-                    out[o_base + ch] = if relu { a.max(0.0) } else { a };
+                }
+                if relu {
+                    for o in opix.iter_mut() {
+                        *o = o.max(0.0);
+                    }
                 }
             }
         }
-    }
-    Tensor::new(vec![n, win.oh, win.ow, c], out)
+    });
+    Ok(out)
 }
 
-/// Max / average pooling. Average divides by K² (exactly `ref.py`:
-/// zero-padded sum over the window divided by the full window size).
-pub fn pool2d(x: &Tensor, kernel: usize, stride: usize, max: bool, pad: &Pad) -> Result<Tensor> {
+/// Max / average pooling, channel-innermost (vectorizes over the NHWC
+/// channel axis), rows split across workers. Average divides by K²
+/// (exactly `ref.py`: zero-padded sum over the window divided by the full
+/// window size); max-pool padding contributes nothing (skipped taps).
+pub fn pool2d_scratch(
+    x: &Tensor,
+    kernel: usize,
+    stride: usize,
+    max: bool,
+    pad: &Pad,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
     let (n, h, wd, c) = dims4(x, "pool2d input")?;
     let win = resolve(h, wd, kernel, stride, pad)?;
-    let mut out = vec![0f32; n * win.oh * win.ow * c];
-    for ni in 0..n {
-        for oy in 0..win.oh {
-            for ox in 0..win.ow {
-                let o_base = (((ni * win.oh + oy) * win.ow) + ox) * c;
-                for ch in 0..c {
-                    let mut a = if max { f32::NEG_INFINITY } else { 0.0 };
-                    for ky in 0..kernel {
-                        let iy = (oy * stride + ky) as isize - win.top as isize;
-                        if iy < 0 || iy >= h as isize {
+    let (top, left, oh, ow) = (win.top, win.left, win.oh, win.ow);
+
+    let mut out = scratch.take(&[n, oh, ow, c]);
+    let rows = n * oh;
+    let workers = effective_workers(scratch.threads(), rows, n * oh * ow * kernel * kernel * c);
+    let data_x = &x.data[..];
+    let panels = scratch.panels_for(workers, 0);
+    par_rows(workers, rows, ow * c, &mut out.data, panels, |r0, r1, chunk, _p| {
+        for r in r0..r1 {
+            let oy = r % oh;
+            let ni = r / oh;
+            let orow = &mut chunk[(r - r0) * ow * c..(r - r0 + 1) * ow * c];
+            for ox in 0..ow {
+                let opix = &mut orow[ox * c..(ox + 1) * c];
+                opix.fill(if max { f32::NEG_INFINITY } else { 0.0 });
+                for ky in 0..kernel {
+                    let iy = (oy * stride + ky) as isize - top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kernel {
+                        let ix = (ox * stride + kx) as isize - left as isize;
+                        if ix < 0 || ix >= wd as isize {
                             continue;
                         }
-                        for kx in 0..kernel {
-                            let ix = (ox * stride + kx) as isize - win.left as isize;
-                            if ix < 0 || ix >= wd as isize {
-                                continue;
+                        let xs_base = (((ni * h + iy as usize) * wd) + ix as usize) * c;
+                        let xs = &data_x[xs_base..xs_base + c];
+                        if max {
+                            for (o, &v) in opix.iter_mut().zip(xs) {
+                                *o = o.max(v);
                             }
-                            let v = x.data[(((ni * h + iy as usize) * wd) + ix as usize) * c + ch];
-                            if max {
-                                a = a.max(v);
-                            } else {
-                                a += v;
+                        } else {
+                            for (o, &v) in opix.iter_mut().zip(xs) {
+                                *o += v;
                             }
                         }
                     }
-                    out[o_base + ch] = if max { a } else { a / (kernel * kernel) as f32 };
+                }
+                if !max {
+                    let denom = (kernel * kernel) as f32;
+                    for o in opix.iter_mut() {
+                        *o /= denom;
+                    }
                 }
             }
         }
-    }
-    Tensor::new(vec![n, win.oh, win.ow, c], out)
+    });
+    Ok(out)
 }
 
-/// Global average pool: `(N, H, W, C)` → `(N, C)`.
-pub fn global_avg_pool(x: &Tensor) -> Result<Tensor> {
+/// Global average pool: `(N, H, W, C)` → `(N, C)`, output from the arena.
+pub fn global_avg_pool_scratch(x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
     let (n, h, w, c) = dims4(x, "global_avg_pool input")?;
-    let mut out = vec![0f32; n * c];
+    let mut out = scratch.take(&[n, c]);
+    out.data.fill(0.0);
     for ni in 0..n {
-        for y in 0..h {
-            for xx in 0..w {
-                let base = (((ni * h + y) * w) + xx) * c;
-                for ch in 0..c {
-                    out[ni * c + ch] += x.data[base + ch];
-                }
+        let acc = &mut out.data[ni * c..(ni + 1) * c];
+        for pixel in 0..h * w {
+            let base = (ni * h * w + pixel) * c;
+            for (o, &v) in acc.iter_mut().zip(&x.data[base..base + c]) {
+                *o += v;
             }
         }
     }
     let denom = (h * w) as f32;
-    for v in &mut out {
+    for v in &mut out.data {
         *v /= denom;
     }
-    Tensor::new(vec![n, c], out)
+    Ok(out)
 }
 
-/// Dense layer: `(N, Fin) × (Fin, Fout) + bias`, optional ReLU.
-pub fn dense(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Result<Tensor> {
+/// Dense layer: `(N, Fin) × (Fin, Fout) + bias`, optional ReLU. Batch 1
+/// (the serving path) runs the column-split AXPY; larger batches split
+/// rows over the blocked GEMM. Output comes from the arena pool.
+pub fn dense_scratch(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
     ensure!(x.shape.len() == 2, "dense wants a rank-2 input, got {:?}", x.shape);
     let (n, fin) = (x.shape[0], x.shape[1]);
     ensure!(
@@ -225,38 +394,36 @@ pub fn dense(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Result<Tensor> {
     );
     let fout = w.shape[1];
     ensure!(b.shape == [fout], "dense bias {:?} vs {fout} outputs", b.shape);
-    let mut out = vec![0f32; n * fout];
-    for ni in 0..n {
-        let row = &mut out[ni * fout..(ni + 1) * fout];
-        row.copy_from_slice(&b.data);
-        for fi in 0..fin {
-            let xv = x.data[ni * fin + fi];
-            if xv == 0.0 {
-                continue;
-            }
-            let w_row = &w.data[fi * fout..(fi + 1) * fout];
-            for (o, wv) in row.iter_mut().zip(w_row) {
-                *o += xv * wv;
-            }
-        }
-        if relu {
-            for o in row.iter_mut() {
-                *o = o.max(0.0);
-            }
-        }
+
+    let mut out = scratch.take(&[n, fout]);
+    let (data_x, data_w, bias) = (&x.data[..], &w.data[..], &b.data[..]);
+    if n == 1 {
+        let workers = effective_workers(scratch.threads(), fout, 2 * fin * fout);
+        let panels = scratch.panels_for(workers, 0);
+        par_rows(workers, fout, 1, &mut out.data, panels, |j0, _j1, chunk, _p| {
+            gemm::gemv_cols(fin, fout, j0, data_x, data_w, bias, relu, chunk);
+        });
+    } else {
+        let workers = effective_workers(scratch.threads(), n, 2 * n * fin * fout);
+        let panels = scratch.panels_for(workers, 0);
+        par_rows(workers, n, fout, &mut out.data, panels, |r0, r1, chunk, _p| {
+            gemm::gemm_bias(
+                r1 - r0,
+                fin,
+                fout,
+                &data_x[r0 * fin..r1 * fin],
+                data_w,
+                Some(bias),
+                relu,
+                chunk,
+            );
+        });
     }
-    Tensor::new(vec![n, fout], out)
+    Ok(out)
 }
 
-/// Flatten `(N, H, W, C)` → `(N, H·W·C)` (row-major, matching
-/// `jnp.reshape(1, -1)` in the python forward).
-pub fn flatten(x: &Tensor) -> Result<Tensor> {
-    let (n, h, w, c) = dims4(x, "flatten input")?;
-    Tensor::new(vec![n, h * w * c], x.data.clone())
-}
-
-/// Concatenate along the channel axis (axis 3).
-pub fn concat_channels(parts: &[Tensor]) -> Result<Tensor> {
+/// Concatenate along the channel axis (axis 3), output from the arena.
+pub fn concat_channels_scratch(parts: &[Tensor], scratch: &mut Scratch) -> Result<Tensor> {
     ensure!(!parts.is_empty(), "concat of zero tensors");
     let (n, h, w, _) = dims4(&parts[0], "concat input")?;
     let mut c_total = 0usize;
@@ -270,30 +437,288 @@ pub fn concat_channels(parts: &[Tensor]) -> Result<Tensor> {
         );
         c_total += pc;
     }
-    let mut out = vec![0f32; n * h * w * c_total];
+    let mut out = scratch.take(&[n, h, w, c_total]);
     for pixel in 0..n * h * w {
         let mut off = 0usize;
         for p in parts {
             let pc = p.shape[3];
-            out[pixel * c_total + off..pixel * c_total + off + pc]
+            out.data[pixel * c_total + off..pixel * c_total + off + pc]
                 .copy_from_slice(&p.data[pixel * pc..(pixel + 1) * pc]);
             off += pc;
         }
     }
-    Tensor::new(vec![n, h, w, c_total], out)
+    Ok(out)
 }
 
-/// Elementwise sum (residual merge).
+/// Elementwise in-place sum (residual merge): `acc += b`.
+pub fn add_assign(acc: &mut Tensor, b: &Tensor) -> Result<()> {
+    ensure!(acc.shape == b.shape, "add shape mismatch: {:?} vs {:?}", acc.shape, b.shape);
+    for (a, &v) in acc.data.iter_mut().zip(&b.data) {
+        *a += v;
+    }
+    Ok(())
+}
+
+// --- allocation-per-call wrappers (the pre-scratch signatures) ----------
+
+/// [`conv2d_scratch`] with a throwaway arena (env worker count).
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    stride: usize,
+    pad: &Pad,
+    relu: bool,
+) -> Result<Tensor> {
+    conv2d_scratch(x, w, b, stride, pad, relu, &mut Scratch::new())
+}
+
+/// [`dwconv2d_scratch`] with a throwaway arena.
+pub fn dwconv2d(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    stride: usize,
+    pad: &Pad,
+    relu: bool,
+) -> Result<Tensor> {
+    dwconv2d_scratch(x, w, b, stride, pad, relu, &mut Scratch::new())
+}
+
+/// [`pool2d_scratch`] with a throwaway arena.
+pub fn pool2d(x: &Tensor, kernel: usize, stride: usize, max: bool, pad: &Pad) -> Result<Tensor> {
+    pool2d_scratch(x, kernel, stride, max, pad, &mut Scratch::new())
+}
+
+/// [`global_avg_pool_scratch`] with a throwaway arena.
+pub fn global_avg_pool(x: &Tensor) -> Result<Tensor> {
+    global_avg_pool_scratch(x, &mut Scratch::new())
+}
+
+/// [`dense_scratch`] with a throwaway arena.
+pub fn dense(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Result<Tensor> {
+    dense_scratch(x, w, b, relu, &mut Scratch::new())
+}
+
+/// [`concat_channels_scratch`] with a throwaway arena.
+pub fn concat_channels(parts: &[Tensor]) -> Result<Tensor> {
+    concat_channels_scratch(parts, &mut Scratch::new())
+}
+
+/// Elementwise sum (residual merge) into a fresh tensor.
 pub fn add(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     ensure!(a.shape == b.shape, "add shape mismatch: {:?} vs {:?}", a.shape, b.shape);
     let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
     Tensor::new(a.shape.clone(), data)
 }
 
+/// Flatten `(N, H, W, C)` → `(N, H·W·C)` (row-major, matching
+/// `jnp.reshape(1, -1)` in the python forward).
+pub fn flatten(x: &Tensor) -> Result<Tensor> {
+    let (n, h, w, c) = dims4(x, "flatten input")?;
+    Tensor::new(vec![n, h * w * c], x.data.clone())
+}
+
 /// In-place ReLU.
 pub fn relu_in_place(t: &mut Tensor) {
     for v in &mut t.data {
         *v = v.max(0.0);
+    }
+}
+
+/// The pre-GEMM scalar reference kernels, retained verbatim (including
+/// the data-dependent `xv == 0.0` skip the GEMM rewrite deleted). These
+/// are the parity baseline for `tests/gemm_parity.rs` and the "before"
+/// side of the hot-path microbench — **do not optimize**.
+pub mod naive {
+    use super::*;
+
+    /// Pre-GEMM scalar `conv2d` (7-deep loops, zero-skip).
+    pub fn conv2d(
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        stride: usize,
+        pad: &Pad,
+        relu: bool,
+    ) -> Result<Tensor> {
+        let (n, h, wd, cin) = dims4(x, "conv2d input")?;
+        ensure!(
+            w.shape.len() == 4 && w.shape[2] == cin,
+            "conv2d weight {:?} does not match input channels {cin}",
+            w.shape
+        );
+        let (kh, kw, _, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+        ensure!(kh == kw, "conv2d kernels are square here, got {kh}x{kw}");
+        ensure!(b.shape == [cout], "conv2d bias {:?} vs {cout} output channels", b.shape);
+        let win = resolve(h, wd, kh, stride, pad)?;
+
+        let mut out = vec![0f32; n * win.oh * win.ow * cout];
+        let mut acc = vec![0f32; cout];
+        for ni in 0..n {
+            for oy in 0..win.oh {
+                for ox in 0..win.ow {
+                    acc.copy_from_slice(&b.data);
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - win.top as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - win.left as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            let x_base = (((ni * h + iy as usize) * wd) + ix as usize) * cin;
+                            let w_base = ((ky * kw) + kx) * cin * cout;
+                            for ci in 0..cin {
+                                let xv = x.data[x_base + ci];
+                                if xv == 0.0 {
+                                    continue;
+                                }
+                                let w_row = w_base + ci * cout;
+                                for (co, a) in acc.iter_mut().enumerate() {
+                                    *a += xv * w.data[w_row + co];
+                                }
+                            }
+                        }
+                    }
+                    let o_base = (((ni * win.oh + oy) * win.ow) + ox) * cout;
+                    for (co, &a) in acc.iter().enumerate() {
+                        out[o_base + co] = if relu { a.max(0.0) } else { a };
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![n, win.oh, win.ow, cout], out)
+    }
+
+    /// Pre-GEMM scalar depthwise conv (channel-outermost loops).
+    pub fn dwconv2d(
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        stride: usize,
+        pad: &Pad,
+        relu: bool,
+    ) -> Result<Tensor> {
+        let (n, h, wd, c) = dims4(x, "dwconv2d input")?;
+        ensure!(
+            w.shape.len() == 3 && w.shape[2] == c,
+            "dwconv2d weight {:?} does not match input channels {c}",
+            w.shape
+        );
+        let (kh, kw) = (w.shape[0], w.shape[1]);
+        ensure!(kh == kw, "dwconv2d kernels are square here, got {kh}x{kw}");
+        ensure!(b.shape == [c], "dwconv2d bias {:?} vs {c} channels", b.shape);
+        let win = resolve(h, wd, kh, stride, pad)?;
+
+        let mut out = vec![0f32; n * win.oh * win.ow * c];
+        for ni in 0..n {
+            for oy in 0..win.oh {
+                for ox in 0..win.ow {
+                    let o_base = (((ni * win.oh + oy) * win.ow) + ox) * c;
+                    for ch in 0..c {
+                        let mut a = b.data[ch];
+                        for ky in 0..kh {
+                            let iy = (oy * stride + ky) as isize - win.top as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = (ox * stride + kx) as isize - win.left as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                let xi = (((ni * h + iy as usize) * wd) + ix as usize) * c + ch;
+                                a += x.data[xi] * w.data[((ky * kw) + kx) * c + ch];
+                            }
+                        }
+                        out[o_base + ch] = if relu { a.max(0.0) } else { a };
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![n, win.oh, win.ow, c], out)
+    }
+
+    /// Pre-GEMM scalar pooling (channel-outermost loops).
+    pub fn pool2d(
+        x: &Tensor,
+        kernel: usize,
+        stride: usize,
+        max: bool,
+        pad: &Pad,
+    ) -> Result<Tensor> {
+        let (n, h, wd, c) = dims4(x, "pool2d input")?;
+        let win = resolve(h, wd, kernel, stride, pad)?;
+        let mut out = vec![0f32; n * win.oh * win.ow * c];
+        for ni in 0..n {
+            for oy in 0..win.oh {
+                for ox in 0..win.ow {
+                    let o_base = (((ni * win.oh + oy) * win.ow) + ox) * c;
+                    for ch in 0..c {
+                        let mut a = if max { f32::NEG_INFINITY } else { 0.0 };
+                        for ky in 0..kernel {
+                            let iy = (oy * stride + ky) as isize - win.top as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..kernel {
+                                let ix = (ox * stride + kx) as isize - win.left as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                let xi =
+                                    (((ni * h + iy as usize) * wd) + ix as usize) * c + ch;
+                                let v = x.data[xi];
+                                if max {
+                                    a = a.max(v);
+                                } else {
+                                    a += v;
+                                }
+                            }
+                        }
+                        out[o_base + ch] = if max { a } else { a / (kernel * kernel) as f32 };
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![n, win.oh, win.ow, c], out)
+    }
+
+    /// Pre-GEMM scalar dense (zero-skip AXPY rows).
+    pub fn dense(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Result<Tensor> {
+        ensure!(x.shape.len() == 2, "dense wants a rank-2 input, got {:?}", x.shape);
+        let (n, fin) = (x.shape[0], x.shape[1]);
+        ensure!(
+            w.shape.len() == 2 && w.shape[0] == fin,
+            "dense weight {:?} does not match input features {fin}",
+            w.shape
+        );
+        let fout = w.shape[1];
+        ensure!(b.shape == [fout], "dense bias {:?} vs {fout} outputs", b.shape);
+        let mut out = vec![0f32; n * fout];
+        for ni in 0..n {
+            let row = &mut out[ni * fout..(ni + 1) * fout];
+            row.copy_from_slice(&b.data);
+            for fi in 0..fin {
+                let xv = x.data[ni * fin + fi];
+                if xv == 0.0 {
+                    continue;
+                }
+                let w_row = &w.data[fi * fout..(fi + 1) * fout];
+                for (o, wv) in row.iter_mut().zip(w_row) {
+                    *o += xv * wv;
+                }
+            }
+            if relu {
+                for o in row.iter_mut() {
+                    *o = o.max(0.0);
+                }
+            }
+        }
+        Tensor::new(vec![n, fout], out)
     }
 }
 
@@ -412,6 +837,10 @@ mod tests {
         let s = add(&a, &a).unwrap();
         assert_eq!(s.data, vec![2.0, 4.0]);
 
+        let mut acc = a.clone();
+        add_assign(&mut acc, &a).unwrap();
+        assert_eq!(acc.data, s.data);
+
         let f = flatten(&y).unwrap();
         assert_eq!(f.shape, vec![1, 6]);
     }
@@ -425,5 +854,37 @@ mod tests {
         let flat = t(&[1, 4], &[0.0; 4]);
         assert!(dense(&flat, &t(&[3, 2], &[0.0; 6]), &t(&[2], &[0.0; 2]), true).is_err());
         assert!(pool2d(&x, 3, 1, true, &Pad::Valid).is_err()); // window > input
+    }
+
+    #[test]
+    fn gemm_path_agrees_with_naive_kernels() {
+        // pseudo-random 5×5 conv over a 6×7 input, stride 2, SAME — the
+        // full parity property suite lives in tests/gemm_parity.rs
+        let mut seed = 0x5eedu64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            ((seed >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        };
+        let x = t(&[1, 6, 7, 3], &(0..126).map(|_| next()).collect::<Vec<_>>());
+        let w = t(&[5, 5, 3, 4], &(0..300).map(|_| next()).collect::<Vec<_>>());
+        let b = t(&[4], &(0..4).map(|_| next()).collect::<Vec<_>>());
+        let fast = conv2d(&x, &w, &b, 2, &Pad::Same, true).unwrap();
+        let slow = naive::conv2d(&x, &w, &b, 2, &Pad::Same, true).unwrap();
+        assert_eq!(fast.shape, slow.shape);
+        assert!(fast.max_abs_diff(&slow) < 1e-5, "diff {}", fast.max_abs_diff(&slow));
+    }
+
+    #[test]
+    fn worker_split_is_bit_identical() {
+        let x = t(&[1, 9, 9, 3], &(0..243).map(|v| (v as f32 * 0.37).sin()).collect::<Vec<_>>());
+        let w = t(&[3, 3, 3, 5], &(0..135).map(|v| (v as f32 * 0.11).cos()).collect::<Vec<_>>());
+        let b = t(&[5], &[0.1, -0.2, 0.3, -0.4, 0.5]);
+        let mut s1 = Scratch::with_threads(1);
+        let mut s3 = Scratch::with_threads(3);
+        let y1 = conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut s1).unwrap();
+        let y3 = conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut s3).unwrap();
+        assert_eq!(y1.to_le_bytes(), y3.to_le_bytes());
     }
 }

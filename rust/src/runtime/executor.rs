@@ -11,6 +11,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::backend::Backend;
+use super::scratch::Scratch;
 use super::tensor::Tensor;
 use crate::model::{Manifest, ModelInfo};
 
@@ -48,8 +49,15 @@ impl BlockExecutable {
         })
     }
 
-    /// Run the block on one activation.
+    /// Run the block on one activation (throwaway scratch arena).
     pub fn run(&self, activation: &Tensor) -> Result<Tensor> {
+        self.run_scratch(activation, &mut Scratch::new())
+    }
+
+    /// Run the block on one activation, drawing intermediate buffers
+    /// from the caller's per-worker [`Scratch`] arena (the
+    /// allocation-free steady-state path).
+    pub fn run_scratch(&self, activation: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
         anyhow::ensure!(
             activation.shape == self.in_shape,
             "block {}: input shape {:?}, want {:?}",
@@ -57,7 +65,7 @@ impl BlockExecutable {
             activation.shape,
             self.in_shape
         );
-        let out = self.runner.run(activation)?;
+        let out = self.runner.run_scratch(activation, scratch)?;
         anyhow::ensure!(
             out.shape == self.out_shape,
             "block {}: backend produced shape {:?}, manifest declares {:?}",
@@ -101,25 +109,40 @@ impl ChainExecutor {
         Ok(ChainExecutor { model: model.to_string(), blocks })
     }
 
-    /// Execute consecutive loaded blocks on `input`.
+    /// Execute consecutive loaded blocks on `input` (throwaway arena).
     pub fn run(&self, input: &Tensor) -> Result<Tensor> {
-        let mut act = input.clone();
+        self.run_scratch(input, &mut Scratch::new())
+    }
+
+    /// Execute consecutive loaded blocks on `input`, recycling every
+    /// intermediate activation through the caller's [`Scratch`] arena —
+    /// after the first frame the chain performs no heap allocation.
+    pub fn run_scratch(&self, input: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        let mut act = scratch.take_copy(input);
         for b in &self.blocks {
-            act = b.run(&act).with_context(|| format!("block {}", b.name))?;
+            let out = b
+                .run_scratch(&act, scratch)
+                .with_context(|| format!("block {}", b.name))?;
+            scratch.give(std::mem::replace(&mut act, out));
         }
         Ok(act)
     }
 
     /// Wall-clock per-block timing over `reps` runs (measured profile).
+    /// Uses one warm scratch arena so allocation noise does not pollute
+    /// the per-block times after the first repetition.
     pub fn measure_blocks(&self, input: &Tensor, reps: usize) -> Result<Vec<f64>> {
+        let mut scratch = Scratch::new();
         let mut times = vec![f64::MAX; self.blocks.len()];
         for _ in 0..reps.max(1) {
-            let mut act = input.clone();
+            let mut act = scratch.take_copy(input);
             for (i, b) in self.blocks.iter().enumerate() {
                 let t0 = std::time::Instant::now();
-                act = b.run(&act)?;
+                let out = b.run_scratch(&act, &mut scratch)?;
                 times[i] = times[i].min(t0.elapsed().as_secs_f64());
+                scratch.give(std::mem::replace(&mut act, out));
             }
+            scratch.give(act);
         }
         Ok(times)
     }

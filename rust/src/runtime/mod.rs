@@ -16,10 +16,12 @@ pub mod backend;
 pub mod executor;
 pub mod loadgen;
 pub mod pipeline;
+pub mod scratch;
 pub mod tensor;
 
 pub use backend::{backend_by_name, default_backend, Backend, BlockRunner};
 pub use executor::{BlockExecutable, ChainExecutor};
+pub use scratch::Scratch;
 pub use loadgen::{Arrivals, LoadGen, LoadGenConfig};
 pub use pipeline::{
     stats_channel, FrameIn, FrameInjector, Pipeline, PipelineConfig, PipelineOutput,

@@ -57,7 +57,7 @@
 //! assert_eq!(report.frames, 4);
 //! ```
 
-use std::io::Cursor;
+use std::io::{Cursor, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -69,7 +69,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::dataflow::Operator;
 use crate::enclave::ServiceStats;
-use crate::net::framing::{read_frame, write_frame, FrameType};
+use crate::net::framing::{encode_frame_into, read_frame, read_frame_into, write_frame, FrameType};
 use crate::placement::cost::PathCost;
 use crate::placement::Placement;
 use crate::topology::Topology;
@@ -412,10 +412,12 @@ struct WirePacket {
     enqueued: Instant,
 }
 
-/// Wrap a payload in a length-prefixed DATA frame (the wire bytes).
+/// Wrap a payload in a length-prefixed DATA frame (the wire bytes),
+/// serialized directly into the packet's owned buffer — no intermediate
+/// staging copy.
 fn frame_data(payload: &[u8]) -> Result<Vec<u8>> {
     let mut buf = Vec::with_capacity(payload.len() + 5);
-    write_frame(&mut buf, FrameType::Data, payload)?;
+    encode_frame_into(&mut buf, FrameType::Data, payload)?;
     Ok(buf)
 }
 
@@ -995,6 +997,10 @@ fn spawn_tcp_hop(
         .spawn(move || -> Result<()> {
             let mut conn = conn_out;
             let _ = conn.set_nodelay(true);
+            // record staging buffer, reused frame over frame: the
+            // [len][type][hop header][payload] record is assembled once
+            // and hits the socket as a single coalesced write
+            let mut wire: Vec<u8> = Vec::new();
             while let Ok(pkt) = rx.recv() {
                 // an over-cap frame is a deterministic caller bug, not a
                 // teardown symptom — surface it instead of swallowing it
@@ -1005,14 +1011,17 @@ fn spawn_tcp_hop(
                     pkt.seq,
                     pkt.bytes.len()
                 );
-                let mut buf = Vec::with_capacity(HDR + pkt.bytes.len());
-                buf.extend_from_slice(&pkt.seq.to_be_bytes());
-                buf.extend_from_slice(&pkt.stream.to_be_bytes());
+                wire.clear();
+                wire.reserve(5 + HDR + pkt.bytes.len());
+                wire.extend_from_slice(&((HDR + pkt.bytes.len()) as u32).to_be_bytes());
+                wire.push(FrameType::Data as u8);
+                wire.extend_from_slice(&pkt.seq.to_be_bytes());
+                wire.extend_from_slice(&pkt.stream.to_be_bytes());
                 let born_us =
                     pkt.born.saturating_duration_since(epoch).as_micros() as u64;
-                buf.extend_from_slice(&born_us.to_be_bytes());
-                buf.extend_from_slice(&pkt.bytes);
-                if write_frame(&mut conn, FrameType::Data, &buf).is_err() {
+                wire.extend_from_slice(&born_us.to_be_bytes());
+                wire.extend_from_slice(&pkt.bytes);
+                if conn.write_all(&wire).is_err() || conn.flush().is_err() {
                     break; // peer gone: pipeline is unwinding
                 }
             }
@@ -1025,9 +1034,12 @@ fn spawn_tcp_hop(
         .name(format!("tcp-hop-{idx}-rx"))
         .spawn(move || -> Result<()> {
             let mut conn = conn_in;
+            // reused record buffer: the only steady-state allocation left
+            // is the payload copy into the owned packet handed downstream
+            let mut buf: Vec<u8> = Vec::new();
             loop {
-                let (ty, buf) = match read_frame(&mut conn) {
-                    Ok(f) => f,
+                let ty = match read_frame_into(&mut conn, &mut buf) {
+                    Ok(t) => t,
                     Err(_) => break, // connection closed: stream over
                 };
                 match ty {

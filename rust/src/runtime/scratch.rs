@@ -1,0 +1,178 @@
+//! Per-worker scratch arena: recycled tensors, im2col panel buffers, and
+//! the parallel-path holding pen that together make the steady-state
+//! frame path allocation-free (DESIGN.md §14).
+//!
+//! Ownership rules:
+//!
+//! * One [`Scratch`] per worker (one per [`NnService`](crate::enclave::NnService),
+//!   one per pipeline stage thread). Arenas are never shared across
+//!   threads — the intra-op worker threads get disjoint *panel* slices
+//!   from the same arena, handed out by the kernel that spawned them.
+//! * [`Scratch::take`] pops a recycled tensor (contents **unspecified** —
+//!   callers must fully overwrite) and [`Scratch::give`] returns one.
+//!   The pool is a LIFO free list: a frame path that takes/gives in the
+//!   same order every frame reaches a fixed point after the first frame
+//!   and never allocates again.
+//! * Worker count comes from `SERDAB_THREADS` (default: available
+//!   parallelism, capped at 8). Results are **bit-identical for every
+//!   worker count**: each output element is produced by exactly one
+//!   worker with the same accumulation order regardless of how rows are
+//!   split (see `backend::reference::gemm`).
+
+use crate::runtime::tensor::Tensor;
+
+/// Hard cap on the auto-detected worker count (diminishing returns past
+/// this for the tiny-model block sizes; `SERDAB_THREADS` overrides).
+const AUTO_THREAD_CAP: usize = 8;
+
+/// Worker count the environment asks for: `SERDAB_THREADS` if it parses
+/// to a positive integer, otherwise the machine's available parallelism
+/// capped at 8.
+pub fn env_threads() -> usize {
+    match std::env::var("SERDAB_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => auto_threads(),
+        },
+        Err(_) => auto_threads(),
+    }
+}
+
+fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(AUTO_THREAD_CAP)
+}
+
+/// Reusable buffer arena for one execution worker (see module docs).
+pub struct Scratch {
+    threads: usize,
+    /// LIFO free list of recycled tensors.
+    pool: Vec<Tensor>,
+    /// Per-worker im2col panel buffers (index = worker slot).
+    pub(crate) panels: Vec<Vec<f32>>,
+    /// Recycled holding pen for parallel-path outputs (fire/inception
+    /// merges). Taken wholesale (`std::mem::take`) by the forward walk.
+    pub(crate) parts: Vec<Tensor>,
+}
+
+impl Scratch {
+    /// An empty arena with the environment's worker count ([`env_threads`]).
+    pub fn new() -> Self {
+        Self::with_threads(env_threads())
+    }
+
+    /// An empty arena pinned to an explicit worker count (tests use this
+    /// to assert thread-count determinism without touching the env).
+    pub fn with_threads(threads: usize) -> Self {
+        Scratch { threads: threads.max(1), pool: Vec::new(), panels: Vec::new(), parts: Vec::new() }
+    }
+
+    /// Worker threads kernels run with (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Pop a recycled tensor shaped `shape`. Contents are **unspecified**
+    /// (stale values from a previous use) — the caller must overwrite
+    /// every element. Allocation-free once the pool is warm.
+    pub fn take(&mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut t = self
+            .pool
+            .pop()
+            .unwrap_or(Tensor { shape: Vec::new(), data: Vec::new() });
+        t.shape.clear();
+        t.shape.extend_from_slice(shape);
+        if t.data.len() > n {
+            t.data.truncate(n);
+        } else {
+            t.data.resize(n, 0.0);
+        }
+        t
+    }
+
+    /// Pop a recycled tensor and fill it with a copy of `src`.
+    pub fn take_copy(&mut self, src: &Tensor) -> Tensor {
+        let mut t = self
+            .pool
+            .pop()
+            .unwrap_or(Tensor { shape: Vec::new(), data: Vec::new() });
+        t.shape.clear();
+        t.shape.extend_from_slice(&src.shape);
+        t.data.clear();
+        t.data.extend_from_slice(&src.data);
+        t
+    }
+
+    /// Return a tensor to the pool for reuse.
+    pub fn give(&mut self, t: Tensor) {
+        self.pool.push(t);
+    }
+
+    /// Hand out `workers` panel buffers, each resized to `len` elements
+    /// (contents unspecified). The returned slice has exactly `workers`
+    /// entries; kernels zip it against their disjoint output chunks.
+    pub(crate) fn panels_for(&mut self, workers: usize, len: usize) -> &mut [Vec<f32>] {
+        if self.panels.len() < workers {
+            self.panels.resize_with(workers, Vec::new);
+        }
+        for p in &mut self.panels[..workers] {
+            if p.len() > len {
+                p.truncate(len);
+            } else {
+                p.resize(len, 0.0);
+            }
+        }
+        &mut self.panels[..workers]
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_give_recycles_capacity() {
+        let mut s = Scratch::with_threads(1);
+        let t = s.take(&[2, 3]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.data.len(), 6);
+        let ptr = t.data.as_ptr();
+        s.give(t);
+        // smaller request reuses the same allocation (LIFO pop)
+        let t2 = s.take(&[1, 4]);
+        assert_eq!(t2.data.len(), 4);
+        assert_eq!(t2.data.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn take_copy_matches_source() {
+        let mut s = Scratch::with_threads(1);
+        let src = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let c = s.take_copy(&src);
+        assert_eq!(c.shape, src.shape);
+        assert_eq!(c.data, src.data);
+    }
+
+    #[test]
+    fn panels_are_per_worker() {
+        let mut s = Scratch::with_threads(4);
+        let ps = s.panels_for(3, 10);
+        assert_eq!(ps.len(), 3);
+        assert!(ps.iter().all(|p| p.len() == 10));
+    }
+
+    #[test]
+    fn threads_floor_is_one() {
+        assert_eq!(Scratch::with_threads(0).threads(), 1);
+        assert!(Scratch::new().threads() >= 1);
+    }
+}

@@ -51,6 +51,37 @@ impl Tensor {
         Self::from_le_bytes(&bytes, shape)
     }
 
+    /// Re-shape in place (element count must be preserved). Allocation
+    /// free once the shape vector's capacity suffices — the flatten step
+    /// on the zero-alloc frame path (DESIGN.md §14).
+    pub fn reshape_in_place(&mut self, shape: &[usize]) -> Result<()> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} wants {n} elems, tensor has {}", shape, self.data.len());
+        }
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        Ok(())
+    }
+
+    /// Overwrite the elements from little-endian f32 bytes without
+    /// changing the shape (the wire-decode step of the zero-alloc frame
+    /// path; the byte length must match exactly).
+    pub fn fill_from_le_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() != self.data.len() * 4 {
+            bail!(
+                "payload is {} bytes, tensor {:?} wants {}",
+                bytes.len(),
+                self.shape,
+                self.data.len() * 4
+            );
+        }
+        for (dst, c) in self.data.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
+    }
+
     /// Decode from little-endian f32 bytes.
     pub fn from_le_bytes(bytes: &[u8], shape: Vec<usize>) -> Result<Self> {
         if bytes.len() % 4 != 0 {
@@ -66,10 +97,19 @@ impl Tensor {
     /// Encode to little-endian bytes (the wire/artifact format).
     pub fn to_le_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.byte_len());
+        self.to_le_bytes_into(&mut out);
+        out
+    }
+
+    /// Encode to little-endian bytes into `out` (cleared first) — the
+    /// write-side twin of [`Tensor::fill_from_le_bytes`]; reusing one
+    /// buffer keeps the steady-state serialize step allocation-free.
+    pub fn to_le_bytes_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.byte_len());
         for v in &self.data {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        out
     }
 
     /// Convert into an `xla::Literal` with this shape (PJRT backend only).
@@ -117,6 +157,23 @@ mod tests {
     #[test]
     fn rejects_ragged_bytes() {
         assert!(Tensor::from_le_bytes(&[0u8; 7], vec![1]).is_err());
+    }
+
+    #[test]
+    fn reshape_in_place_checks_count() {
+        let mut t = Tensor::new(vec![2, 3], vec![0.0; 6]).unwrap();
+        t.reshape_in_place(&[1, 6]).unwrap();
+        assert_eq!(t.shape, vec![1, 6]);
+        assert!(t.reshape_in_place(&[4]).is_err());
+    }
+
+    #[test]
+    fn fill_from_le_bytes_overwrites_in_place() {
+        let src = Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.25]).unwrap();
+        let mut dst = Tensor::zeros(vec![2, 2]);
+        dst.fill_from_le_bytes(&src.to_le_bytes()).unwrap();
+        assert_eq!(dst.data, src.data);
+        assert!(dst.fill_from_le_bytes(&[0u8; 12]).is_err());
     }
 
     #[test]

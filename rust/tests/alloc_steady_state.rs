@@ -1,0 +1,211 @@
+//! Steady-state zero-allocation guarantee (DESIGN.md §14): after one
+//! warm-up frame has sized every pool and staging buffer, the per-frame
+//! hot path — conv/dwconv/dense/pool through the scratch arena, a full
+//! reference-block forward (including a parallel merge), GCM
+//! seal+open, channel record sealing/opening into reused buffers, and
+//! coalesced framing — performs **zero** heap allocations.
+//!
+//! A counting `#[global_allocator]` (test-binary only) measures it
+//! directly. Everything runs inside ONE test function so parallel test
+//! threads cannot pollute the counter, and kernels are pinned to one
+//! worker (`Scratch::with_threads(1)`) because spawning scoped threads
+//! allocates stacks — the zero-alloc contract is per *worker*, the
+//! thread-split fan-out is amortized separately.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Cursor;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use serdab::crypto::channel::Channel;
+use serdab::crypto::gcm::AesGcm;
+use serdab::model::{BlockInfo, ModelInfo};
+use serdab::net::framing::{read_frame_into, FrameType, FrameWriter};
+use serdab::runtime::backend::reference::ops;
+use serdab::runtime::backend::reference::zoo::{self, Pad};
+use serdab::runtime::backend::reference::ReferenceBackend;
+use serdab::runtime::{Backend, BlockRunner, Scratch, Tensor};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; only adds a relaxed
+// counter bump on the allocating entry points.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn rand_tensor(seed: u64, shape: &[usize]) -> Tensor {
+    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+    let n: usize = shape.iter().product();
+    let data = (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect();
+    Tensor::new(shape.to_vec(), data).unwrap()
+}
+
+/// A loaded squeezenet fire block (exercises conv, the parallel concat
+/// merge, and the params walk) built from a temp params file — the same
+/// synthetic-manifest trick `backend_parity.rs` uses.
+fn fire_runner() -> Box<dyn BlockRunner> {
+    let dir = std::env::temp_dir().join("serdab_alloc_fire");
+    std::fs::create_dir_all(&dir).unwrap();
+    let params = [
+        rand_tensor(1, &[1, 1, 1, 2]),
+        rand_tensor(2, &[2]),
+        rand_tensor(3, &[1, 1, 2, 1]),
+        rand_tensor(4, &[1]),
+        rand_tensor(5, &[3, 3, 2, 1]),
+        rand_tensor(6, &[1]),
+    ];
+    let mut bytes = Vec::new();
+    for t in &params {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    std::fs::write(dir.join("fire2.params.bin"), bytes).unwrap();
+
+    let defs = zoo::arch_blocks("squeezenet").unwrap();
+    let blocks: Vec<BlockInfo> = defs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            let mut b = BlockInfo {
+                idx: i,
+                name: d.name.to_string(),
+                hlo: String::new(),
+                params: String::new(),
+                golden: String::new(),
+                params_sha256: String::new(),
+                golden_sha256: String::new(),
+                param_shapes: vec![],
+                param_floats: 0,
+                in_shape: vec![],
+                out_shape: vec![],
+                in_res: 1,
+                out_res: 1,
+                flops_full: 1,
+                param_bytes_full: 1,
+                out_bytes_full: 1,
+                act_bytes_full: 1,
+                peak_act_bytes_full: 1,
+                n_ops: 1,
+                kernel: None,
+            };
+            if i == 1 {
+                b.params = "fire2.params.bin".into();
+                b.param_shapes = params.iter().map(|p| p.shape.clone()).collect();
+                b.param_floats = params.iter().map(|p| p.len() as u64).sum();
+                b.in_shape = vec![1, 4, 4, 1];
+                b.out_shape = vec![1, 4, 4, 2];
+            }
+            b
+        })
+        .collect();
+    let model = ModelInfo {
+        name: "squeezenet".to_string(),
+        tiny_width: 0.125,
+        tiny_classes: 10,
+        golden_input: String::new(),
+        total_flops_full: 1,
+        model_bytes_full: 1,
+        blocks,
+    };
+    ReferenceBackend.load_block(&dir, &model, 1).unwrap()
+}
+
+#[test]
+fn steady_state_frame_path_allocates_nothing() {
+    // ---- setup (allocations here are fine) ---------------------------
+    let mut scratch = Scratch::with_threads(1);
+    let x = rand_tensor(10, &[1, 8, 9, 5]);
+    let w = rand_tensor(11, &[3, 3, 5, 7]);
+    let b = rand_tensor(12, &[7]);
+    let xw = rand_tensor(13, &[1, 7, 7, 6]);
+    let ww = rand_tensor(14, &[3, 3, 6]);
+    let bw = rand_tensor(15, &[6]);
+    let xd = rand_tensor(16, &[1, 40]);
+    let wd = rand_tensor(17, &[40, 23]);
+    let bd = rand_tensor(18, &[23]);
+
+    let runner = fire_runner();
+    let fire_in = rand_tensor(19, &[1, 4, 4, 1]);
+
+    let gcm = AesGcm::new(b"alloc-bench-key!");
+    let mut gcm_buf = vec![9u8; 4096];
+
+    let mut chan_a = Channel::new(b"alloc-secret", true);
+    let mut chan_b = Channel::new(b"alloc-secret", false);
+    let payload = vec![5u8; 2048];
+    let mut rec_buf = Vec::new();
+    let mut plain_buf = Vec::new();
+
+    let mut fw = FrameWriter::new(std::io::sink());
+    let mut frame_bytes = Vec::new();
+    serdab::net::framing::encode_frame_into(&mut frame_bytes, FrameType::Data, &payload).unwrap();
+    let mut read_buf = Vec::new();
+
+    // one steady-state "frame" over every hot-path primitive
+    let mut frame = |scratch: &mut Scratch| {
+        let c = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, scratch).unwrap();
+        scratch.give(c);
+        let c = ops::dwconv2d_scratch(&xw, &ww, &bw, 2, &Pad::Same, true, scratch).unwrap();
+        scratch.give(c);
+        let c = ops::dense_scratch(&xd, &wd, &bd, true, scratch).unwrap();
+        scratch.give(c);
+        let c = ops::pool2d_scratch(&x, 2, 2, true, &Pad::Valid, scratch).unwrap();
+        scratch.give(c);
+        let c = runner.run_scratch(&fire_in, scratch).unwrap();
+        scratch.give(c);
+
+        let tag = gcm.seal(&[1u8; 12], b"aad", &mut gcm_buf);
+        gcm.open(&[1u8; 12], b"aad", &mut gcm_buf, &tag).unwrap();
+
+        chan_a.tx.seal_record_into(&payload, &mut rec_buf);
+        chan_b.rx.open_record_into(&rec_buf, &mut plain_buf).unwrap();
+
+        fw.send(FrameType::Data, &payload).unwrap();
+        let ty = read_frame_into(&mut Cursor::new(&frame_bytes[..]), &mut read_buf).unwrap();
+        assert_eq!(ty, FrameType::Data);
+    };
+
+    // ---- warm up: size every pool and staging buffer -----------------
+    frame(&mut scratch);
+    frame(&mut scratch);
+
+    // ---- measure: a steady-state frame must allocate nothing ---------
+    let before = allocs();
+    frame(&mut scratch);
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state frame path allocated {} times (conv/dense/crypt/framing must be alloc-free)",
+        after - before
+    );
+}

@@ -1,0 +1,198 @@
+//! GEMM-vs-naive parity property tests: the blocked GEMM compute core
+//! (im2col conv, column-split dense, channel-inner dwconv) must agree
+//! with the retained pre-GEMM scalar kernels over randomized shapes —
+//! odd H/W, stride 2, SAME/VALID padding, channel counts that are not
+//! multiples of the register-tile sizes — plus a worker-count
+//! determinism check: `SERDAB_THREADS=1` and `=4` (pinned through
+//! `Scratch::with_threads`, same mechanism) must produce bit-identical
+//! outputs, because every output element is computed by exactly one
+//! worker with the same accumulation order.
+
+use serdab::runtime::backend::reference::ops::{self, naive};
+use serdab::runtime::backend::reference::zoo::Pad;
+use serdab::runtime::{Scratch, Tensor};
+use serdab::util::rng::Rng;
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    Tensor::new(shape.to_vec(), data).unwrap()
+}
+
+/// Reordering the f32 reduction moves results by ~K·ε; inputs are in
+/// [-1, 1] and K ≤ a few hundred, so 1e-4 has orders of magnitude slack
+/// while still catching any real indexing bug.
+const TOL: f32 = 1e-4;
+
+#[test]
+fn conv2d_gemm_matches_naive_over_random_shapes() {
+    let mut rng = Rng::new(0xc011ec7);
+    // (h, w, cin, k, cout, stride, pad) — deliberately awkward: odd
+    // spatial dims, stride 2, channels not multiples of MR/NR
+    let pads = [Pad::Same, Pad::Valid];
+    for case in 0..24 {
+        let k = [1usize, 3, 5][rng.range(0, 3)];
+        let h = rng.range(k, k + 11); // ≥ k so VALID stays legal
+        let w = rng.range(k, k + 11);
+        let cin = rng.range(1, 21);
+        let cout = rng.range(1, 37);
+        let stride = rng.range(1, 3);
+        let pad = &pads[rng.range(0, 2)];
+        let relu = rng.bool(0.5);
+        let n = rng.range(1, 3);
+
+        let x = rand_tensor(&mut rng, &[n, h, w, cin]);
+        let wt = rand_tensor(&mut rng, &[k, k, cin, cout]);
+        let b = rand_tensor(&mut rng, &[cout]);
+
+        let fast = ops::conv2d(&x, &wt, &b, stride, pad, relu).unwrap();
+        let slow = naive::conv2d(&x, &wt, &b, stride, pad, relu).unwrap();
+        assert_eq!(fast.shape, slow.shape, "case {case}: shape mismatch");
+        let diff = fast.max_abs_diff(&slow);
+        assert!(
+            diff < TOL,
+            "case {case} (h={h} w={w} cin={cin} k={k} cout={cout} s={stride} {pad:?} relu={relu} n={n}): diff {diff}"
+        );
+    }
+}
+
+#[test]
+fn conv2d_explicit_padding_matches_naive() {
+    // the zoo's alexnet entry conv uses Pad::Explicit{2,2,2,2}
+    let mut rng = Rng::new(0xa1e);
+    let pad = Pad::Explicit { top: 2, bottom: 2, left: 2, right: 2 };
+    let x = rand_tensor(&mut rng, &[1, 11, 13, 3]);
+    let wt = rand_tensor(&mut rng, &[5, 5, 3, 8]);
+    let b = rand_tensor(&mut rng, &[8]);
+    for stride in [1usize, 2, 4] {
+        let fast = ops::conv2d(&x, &wt, &b, stride, &pad, true).unwrap();
+        let slow = naive::conv2d(&x, &wt, &b, stride, &pad, true).unwrap();
+        assert_eq!(fast.shape, slow.shape);
+        let diff = fast.max_abs_diff(&slow);
+        assert!(diff < TOL, "stride {stride}: diff {diff}");
+    }
+}
+
+#[test]
+fn dwconv2d_matches_naive_over_random_shapes() {
+    let mut rng = Rng::new(0xd3adbeef);
+    for case in 0..16 {
+        let k = [1usize, 3, 5][rng.range(0, 3)];
+        let h = rng.range(k, k + 9);
+        let w = rng.range(k, k + 9);
+        let c = rng.range(1, 35);
+        let stride = rng.range(1, 3);
+        let pad = if rng.bool(0.5) { Pad::Same } else { Pad::Valid };
+        let relu = rng.bool(0.5);
+
+        let x = rand_tensor(&mut rng, &[1, h, w, c]);
+        let wt = rand_tensor(&mut rng, &[k, k, c]);
+        let b = rand_tensor(&mut rng, &[c]);
+
+        let fast = ops::dwconv2d(&x, &wt, &b, stride, &pad, relu).unwrap();
+        let slow = naive::dwconv2d(&x, &wt, &b, stride, &pad, relu).unwrap();
+        assert_eq!(fast.shape, slow.shape);
+        // identical tap order → the channel-inner rewrite is bit-exact
+        let diff = fast.max_abs_diff(&slow);
+        assert!(diff == 0.0, "case {case}: dwconv diff {diff}");
+    }
+}
+
+#[test]
+fn pool2d_matches_naive_over_random_shapes() {
+    let mut rng = Rng::new(0x9001);
+    for _ in 0..12 {
+        let k = [2usize, 3][rng.range(0, 2)];
+        let h = rng.range(k, k + 8);
+        let w = rng.range(k, k + 8);
+        let c = rng.range(1, 20);
+        let stride = rng.range(1, 3);
+        let pad = if rng.bool(0.5) { Pad::Same } else { Pad::Valid };
+        let max = rng.bool(0.5);
+        let x = rand_tensor(&mut rng, &[1, h, w, c]);
+        let fast = ops::pool2d(&x, k, stride, max, &pad).unwrap();
+        let slow = naive::pool2d(&x, k, stride, max, &pad).unwrap();
+        assert_eq!(fast.shape, slow.shape);
+        assert!(fast.max_abs_diff(&slow) == 0.0, "pool must be bit-exact");
+    }
+}
+
+#[test]
+fn dense_matches_naive_over_random_shapes() {
+    let mut rng = Rng::new(0xfeed);
+    for case in 0..12 {
+        let fin = rng.range(1, 300);
+        let fout = rng.range(1, 70);
+        let n = [1usize, 1, 3][rng.range(0, 3)]; // mostly batch 1 (serving)
+        let relu = rng.bool(0.5);
+        let x = rand_tensor(&mut rng, &[n, fin]);
+        let w = rand_tensor(&mut rng, &[fin, fout]);
+        let b = rand_tensor(&mut rng, &[fout]);
+        let fast = ops::dense(&x, &w, &b, relu).unwrap();
+        let slow = naive::dense(&x, &w, &b, relu).unwrap();
+        assert_eq!(fast.shape, slow.shape);
+        let diff = fast.max_abs_diff(&slow);
+        assert!(diff < TOL, "case {case} (fin={fin} fout={fout} n={n}): diff {diff}");
+    }
+}
+
+#[test]
+fn thread_count_is_bit_invisible() {
+    // big enough to clear the parallelism threshold (~21 MFLOP conv,
+    // ~4 MFLOP dense/dwconv), so the 4-worker run really splits rows
+    let mut rng = Rng::new(0x7117);
+    let x = rand_tensor(&mut rng, &[1, 24, 24, 16]);
+    let w = rand_tensor(&mut rng, &[3, 3, 16, 32]);
+    let b = rand_tensor(&mut rng, &[32]);
+    let xd = rand_tensor(&mut rng, &[1, 2048]);
+    let wd = rand_tensor(&mut rng, &[2048, 768]);
+    let bd = rand_tensor(&mut rng, &[768]);
+    let xw = rand_tensor(&mut rng, &[1, 56, 56, 64]);
+    let ww = rand_tensor(&mut rng, &[3, 3, 64]);
+    let bw = rand_tensor(&mut rng, &[64]);
+
+    let mut s1 = Scratch::with_threads(1);
+    let mut s4 = Scratch::with_threads(4);
+
+    let c1 = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut s1).unwrap();
+    let c4 = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut s4).unwrap();
+    assert_eq!(c1.to_le_bytes(), c4.to_le_bytes(), "conv must be thread-count invariant");
+
+    let d1 = ops::dense_scratch(&xd, &wd, &bd, false, &mut s1).unwrap();
+    let d4 = ops::dense_scratch(&xd, &wd, &bd, false, &mut s4).unwrap();
+    assert_eq!(d1.to_le_bytes(), d4.to_le_bytes(), "dense must be thread-count invariant");
+
+    let w1 = ops::dwconv2d_scratch(&xw, &ww, &bw, 1, &Pad::Same, true, &mut s1).unwrap();
+    let w4 = ops::dwconv2d_scratch(&xw, &ww, &bw, 1, &Pad::Same, true, &mut s4).unwrap();
+    assert_eq!(w1.to_le_bytes(), w4.to_le_bytes(), "dwconv must be thread-count invariant");
+
+    // 1×1 fast path (no im2col) at a split-unfriendly size, big enough
+    // to clear the parallelism threshold (2·M·Cin·Cout ≈ 5.6 MFLOP)
+    let x1 = rand_tensor(&mut rng, &[1, 49, 47, 25]);
+    let k1 = rand_tensor(&mut rng, &[1, 1, 25, 49]);
+    let b1 = rand_tensor(&mut rng, &[49]);
+    let a1 = ops::conv2d_scratch(&x1, &k1, &b1, 1, &Pad::Same, false, &mut s1).unwrap();
+    let a4 = ops::conv2d_scratch(&x1, &k1, &b1, 1, &Pad::Same, false, &mut s4).unwrap();
+    assert_eq!(a1.to_le_bytes(), a4.to_le_bytes(), "1×1 path must be thread-count invariant");
+}
+
+#[test]
+fn scratch_reuse_does_not_corrupt_results() {
+    // run two different convs back to back through ONE arena; the second
+    // result must be independent of the first's stale buffers
+    let mut rng = Rng::new(0xab);
+    let mut scratch = Scratch::with_threads(2);
+    let xa = rand_tensor(&mut rng, &[1, 9, 9, 7]);
+    let wa = rand_tensor(&mut rng, &[3, 3, 7, 11]);
+    let ba = rand_tensor(&mut rng, &[11]);
+    let xb = rand_tensor(&mut rng, &[1, 6, 5, 3]);
+    let wb = rand_tensor(&mut rng, &[5, 5, 3, 2]);
+    let bb = rand_tensor(&mut rng, &[2]);
+
+    let first = ops::conv2d_scratch(&xa, &wa, &ba, 1, &Pad::Same, true, &mut scratch).unwrap();
+    scratch.give(first);
+    let second = ops::conv2d_scratch(&xb, &wb, &bb, 2, &Pad::Same, false, &mut scratch).unwrap();
+    let clean = naive::conv2d(&xb, &wb, &bb, 2, &Pad::Same, false).unwrap();
+    assert_eq!(second.shape, clean.shape);
+    assert!(second.max_abs_diff(&clean) < TOL);
+}
