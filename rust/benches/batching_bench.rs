@@ -1,0 +1,211 @@
+//! Micro-batching density bench (DESIGN.md §16): serving throughput and
+//! tail latency of the live pipeline engine as the stage-intake batch
+//! size grows.
+//!
+//! One real pipeline stage (conv block on the reference GEMM core, no
+//! artifacts needed) is saturated with frames at batch sizes 1, 2, 4, 8;
+//! each configuration reports completed frames/sec and p99 end-to-end
+//! latency. The same run also proves the determinism contract the
+//! batched path promises: `process_batch` over N frames must be
+//! *bitwise* identical to N sequential `process` calls.
+//!
+//! `--json` writes `BENCH_batching.json` at the repo root — the CI
+//! perf-trend lane (`scripts/check_bench.sh`) gates on it: parity must
+//! hold and fps at B=8 must stay ≥ 1.2× the batch-1 baseline.
+
+use anyhow::Result;
+use serdab::dataflow::Operator;
+use serdab::figures::Table;
+use serdab::runtime::backend::reference::ops;
+use serdab::runtime::backend::reference::zoo::Pad;
+use serdab::runtime::pipeline::{
+    FrameIn, Pipeline, PipelineConfig, PipelineRunReport, StageSpec, WorkerKind,
+};
+use serdab::runtime::{Scratch, Tensor};
+use serdab::util::json::{arr, num, obj, s, Json};
+use serdab::util::rng::Rng;
+
+/// Frame geometry: small enough that per-invocation costs (worker-pool
+/// coordination, packing, loop bookkeeping) are a visible share of the
+/// per-frame time — exactly the regime micro-batching exists to amortize.
+const IN_SHAPE: [usize; 4] = [1, 8, 8, 8];
+const KERNEL: [usize; 4] = [3, 3, 8, 16];
+const FRAMES: usize = 4096;
+const BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+/// The benched stage: one conv block on the reference GEMM core. Its
+/// batched path stacks the frames along dim 0 into a single GEMM — the
+/// same folding `NnService::process_batch` does, minus the crypto.
+struct ConvStage {
+    w: Tensor,
+    b: Tensor,
+    scratch: Scratch,
+}
+
+impl ConvStage {
+    fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        ConvStage {
+            w: rand_tensor(&mut rng, &KERNEL),
+            b: rand_tensor(&mut rng, &[KERNEL[3]]),
+            scratch: Scratch::new(),
+        }
+    }
+
+    /// Run `n` stacked frames (raw little-endian f32 bytes) through the
+    /// conv and return the stacked output bytes.
+    fn run_stacked(&mut self, n: usize, bytes: &[u8]) -> Result<Vec<u8>> {
+        let mut shape = IN_SHAPE.to_vec();
+        shape[0] = n;
+        let x = Tensor::from_le_bytes(bytes, shape)?;
+        let y = ops::conv2d_scratch(&x, &self.w, &self.b, 1, &Pad::Same, true, &mut self.scratch)?;
+        let out = y.to_le_bytes();
+        self.scratch.give(y);
+        Ok(out)
+    }
+}
+
+impl Operator for ConvStage {
+    fn name(&self) -> String {
+        "bench-conv".into()
+    }
+
+    fn process(&mut self, sealed: &[u8]) -> Result<Vec<u8>> {
+        self.run_stacked(1, sealed)
+    }
+
+    fn process_batch(&mut self, sealed: &[Vec<u8>], outs: &mut Vec<Vec<u8>>) -> Result<()> {
+        if sealed.len() == 1 {
+            outs.push(self.process(&sealed[0])?);
+            return Ok(());
+        }
+        let mut stacked = Vec::with_capacity(sealed.iter().map(|p| p.len()).sum());
+        for p in sealed {
+            stacked.extend_from_slice(p);
+        }
+        let out = self.run_stacked(sealed.len(), &stacked)?;
+        let per = out.len() / sealed.len();
+        for i in 0..sealed.len() {
+            outs.push(out[i * per..(i + 1) * per].to_vec());
+        }
+        Ok(())
+    }
+}
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    Tensor::new(shape.to_vec(), data).unwrap()
+}
+
+fn rand_payload(rng: &mut Rng) -> Vec<u8> {
+    rand_tensor(rng, &IN_SHAPE).to_le_bytes()
+}
+
+/// Saturate one pipeline stage with `frames` identical-shape frames at
+/// the given intake batch size and return the engine's run report.
+fn run_at(batch: usize, frames: usize) -> Result<PipelineRunReport> {
+    let cfg = PipelineConfig {
+        queue_cap: 64,
+        batch,
+        batch_wait_us: 5_000,
+        ..PipelineConfig::default()
+    };
+    let mut p = Pipeline::new(cfg);
+    p.add_stage(StageSpec::new("bench-conv", WorkerKind::Stage, || {
+        Ok(Box::new(ConvStage::new(7)))
+    }));
+    let mut rng = Rng::new(11);
+    let payload = rand_payload(&mut rng);
+    let feed = (0..frames).map(move |_| FrameIn { stream: 0, payload: payload.clone() });
+    p.run(feed, |_| {})
+}
+
+/// Bitwise batch-vs-sequential parity on distinct random frames: the
+/// determinism contract the JSON gate refuses to trade for throughput.
+fn parity_holds() -> Result<bool> {
+    let mut rng = Rng::new(23);
+    let frames: Vec<Vec<u8>> = (0..8).map(|_| rand_payload(&mut rng)).collect();
+    let mut seq = ConvStage::new(7);
+    let mut bat = ConvStage::new(7);
+    for take in [2usize, 3, 8] {
+        let slice = &frames[..take];
+        let expect: Vec<Vec<u8>> =
+            slice.iter().map(|f| seq.process(f)).collect::<Result<_>>()?;
+        let mut got = Vec::new();
+        bat.process_batch(slice, &mut got)?;
+        if got != expect {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+fn main() -> Result<()> {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    println!("# micro-batching density bench\n");
+
+    let parity = parity_holds()?;
+    println!(
+        "batched-vs-sequential parity (B ∈ {{2,3,8}}): {}",
+        if parity { "bitwise identical" } else { "MISMATCH" }
+    );
+
+    // warm-up: page in the code paths and the worker pool once
+    run_at(1, 256)?;
+
+    let mut rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &b in &BATCHES {
+        let rep = run_at(b, FRAMES)?;
+        anyhow::ensure!(rep.frames == FRAMES as u64, "lost frames at batch {b}");
+        rows.push((b, rep.throughput(), rep.p99_latency() * 1e3, rep.mean_latency() * 1e3));
+    }
+
+    let mut table = Table::new(&["batch", "frames/sec", "p99 latency", "mean latency"]);
+    for &(b, fps, p99, mean) in &rows {
+        table.row(vec![
+            format!("{b}"),
+            format!("{fps:.0}"),
+            format!("{p99:.3} ms"),
+            format!("{mean:.3} ms"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let fps1 = rows[0].1;
+    let fps8 = rows.last().unwrap().1;
+    let speedup = fps8 / fps1;
+    println!("serving-density speedup (B=8 vs B=1): {speedup:.2}×");
+
+    if json_mode {
+        let json = obj(vec![
+            ("bench", s("batching_bench")),
+            ("generator", s("cargo bench --bench batching_bench -- --json")),
+            ("threads", num(serdab::runtime::scratch::env_threads() as f64)),
+            ("frames", num(FRAMES as f64)),
+            ("parity", Json::Bool(parity)),
+            (
+                "rows",
+                arr(rows
+                    .iter()
+                    .map(|&(b, fps, p99, mean)| {
+                        obj(vec![
+                            ("batch", num(b as f64)),
+                            ("fps", Json::Num(fps)),
+                            ("p99_ms", Json::Num(p99)),
+                            ("mean_ms", Json::Num(mean)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            ("speedup_b8", Json::Num(speedup)),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ has a parent")
+            .join("BENCH_batching.json");
+        std::fs::write(&path, json.to_string_pretty() + "\n")?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}

@@ -112,7 +112,7 @@ impl Deployment {
         wan_bps: Option<f64>,
         queue_cap: usize,
     ) -> Result<Self> {
-        let cfg = PipelineConfig { queue_cap, framed: true, tcp_hops: false };
+        let cfg = PipelineConfig { queue_cap, ..PipelineConfig::default() };
         Self::deploy_with_config(manifest, rm, model, placement, wan_bps, cfg)
     }
 
@@ -161,6 +161,7 @@ impl Deployment {
 
         // --- data plane: one pipeline worker per stage, WAN links on
         // cross-host edges, bounded queues everywhere ---------------------
+        let batch = cfg.batch;
         let mut pipeline = Pipeline::new(cfg);
         for (si, stage) in placement.stages.iter().enumerate() {
             let manifest2 = manifest.clone();
@@ -182,7 +183,7 @@ impl Deployment {
                     // backend + executables inside its worker thread
                     // (mirrors the real deployment — the enclave loads its
                     // own partition; PJRT clients are per-device anyway)
-                    let service = NnService::for_stage(
+                    let mut service = NnService::for_stage(
                         &manifest2,
                         &model2,
                         range.clone(),
@@ -190,6 +191,9 @@ impl Deployment {
                         &ingress_secret,
                         egress_secret.as_deref(),
                     )?;
+                    // pre-warm scratch for the engine's max micro-batch so
+                    // the first coalesced invocation allocates nothing new
+                    service.reserve_batch(batch);
                     Ok(Box::new(ServiceOperator { service }))
                 },
             ));

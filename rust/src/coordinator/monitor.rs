@@ -227,6 +227,7 @@ mod tests {
             label: "w".into(),
             kind,
             frames,
+            batches: frames,
             busy_secs: busy_per_frame * frames as f64,
             queue_wait_secs: 0.0,
             blocked_secs: 0.0,
@@ -280,6 +281,49 @@ mod tests {
     }
 
     #[test]
+    fn windowed_observation_counts_frames_not_batches() {
+        use crate::runtime::pipeline::{WindowStats, WorkerKind, WorkerStats};
+        // regression: windowed stats once divided by stage *completions*
+        // (operator invocations), which under micro-batching undercounts
+        // frames by the batch factor and inflates the per-frame mean —
+        // an on-prediction stage would read as B× slow and misfire drift.
+        // 12 frames retired in 3 batches of 4, each batch busy 4×1.0s:
+        // the per-frame mean must be 1.0 (busy/frames), never 4.0
+        // (busy/batches).
+        let worker = |kind, frames: u64, batches: u64, busy: f64| WorkerStats {
+            label: "w".into(),
+            kind,
+            frames,
+            batches,
+            busy_secs: busy,
+            queue_wait_secs: 0.0,
+            blocked_secs: 0.0,
+            idle_secs: 0.0,
+            service: None,
+        };
+        let win = WindowStats {
+            span_secs: 1.0,
+            workers: vec![
+                worker(WorkerKind::Stage, 12, 3, 12.0),
+                worker(WorkerKind::Link, 12, 12, 1.2),
+            ],
+        };
+        let means = win.stage_mean_compute();
+        assert_eq!(means.len(), 1);
+        assert!(
+            (means[0].unwrap() - 1.0).abs() < 1e-12,
+            "batched window mean must be per-frame, got {:?}",
+            means[0]
+        );
+        // armed with the true per-frame prediction, a monitor fed batched
+        // windows must stay healthy forever
+        let mut m = Monitor::new(vec![1.0]);
+        for _ in 0..50 {
+            assert_eq!(m.observe_window(&win), MonitorVerdict::Healthy);
+        }
+    }
+
+    #[test]
     fn observe_run_consumes_pipeline_stats() {
         use crate::coordinator::deploy::DeploymentReport;
         use crate::enclave::ServiceStats;
@@ -289,6 +333,7 @@ mod tests {
             label: "s".into(),
             kind,
             frames: 10,
+            batches: 10,
             busy_secs: busy * 10.0,
             queue_wait_secs: 0.0,
             blocked_secs: 0.0,

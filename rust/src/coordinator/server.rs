@@ -551,7 +551,7 @@ impl Server {
         let rp = Arc::new(built.pipeline.start()?);
         let injector = rp.injector()?;
 
-        let mut monitor = Monitor::new(p.cost.stage_secs.clone());
+        let mut monitor = Monitor::new(armed_predictions(&p.cost, cfg.engine.batch));
         monitor.threshold = cfg.drift_threshold;
         monitor.patience = cfg.patience;
 
@@ -800,6 +800,21 @@ impl Server {
     }
 }
 
+/// Per-stage per-frame predictions the monitor is armed with. With
+/// micro-batching off these are the planner's plain stage times; at
+/// `batch > 1` they are the amortized per-frame times at the configured
+/// batch size ([`PathCost::stage_frame_secs`]) — fixed invocation
+/// overheads spread across the batch shrink the *observed* per-frame
+/// compute, and the monitor must not read that amortization as drift
+/// (nor miss real drift hidden under an unamortized prediction).
+fn armed_predictions(cost: &PathCost, batch: usize) -> Vec<f64> {
+    if batch > 1 {
+        (0..cost.stage_secs.len()).map(|i| cost.stage_frame_secs(i, batch)).collect()
+    } else {
+        cost.stage_secs.clone()
+    }
+}
+
 fn stream_report(id: StreamId, a: &StreamAcct, fed: u64) -> StreamReport {
     StreamReport {
         id,
@@ -1007,8 +1022,9 @@ fn hot_swap(
         .context("rebuilding the pipeline for the re-solved placement")?;
     let rp = Arc::new(built.pipeline.start()?);
     let injector = rp.injector()?;
-    monitor.reset(p.cost.stage_secs.clone());
-    let predicted_throughput_fps = 1.0 / p.cost.period_secs.max(1e-12);
+    let batch = inner.cfg.engine.batch;
+    monitor.reset(armed_predictions(&p.cost, batch));
+    let predicted_throughput_fps = 1.0 / p.cost.period_secs_batched(batch).max(1e-12);
     let desc = to.clone();
     drop(planner);
 

@@ -19,6 +19,23 @@ pub trait Operator {
     fn name(&self) -> String;
     /// Process a sealed payload into the next hop's sealed payload.
     fn process(&mut self, sealed: &[u8]) -> Result<Vec<u8>>;
+    /// Process a coalesced micro-batch of payloads in arrival order,
+    /// appending one output per input to `outs`. The default runs
+    /// [`process`](Operator::process) sequentially — semantically
+    /// identical to the frames never having been coalesced — so plain
+    /// operators (delays, transmitters) need no batching awareness.
+    /// Operators that can amortize fixed per-invocation work across the
+    /// batch (the NN service: one stacked GEMM instead of N) override it.
+    ///
+    /// Ordering is part of the contract: output `i` corresponds to input
+    /// `i`, and stateful operators (sequence-authenticated channels)
+    /// consume the inputs strictly in slice order.
+    fn process_batch(&mut self, sealed: &[Vec<u8>], outs: &mut Vec<Vec<u8>>) -> Result<()> {
+        for payload in sealed {
+            outs.push(self.process(payload)?);
+        }
+        Ok(())
+    }
     /// Service-level statistics (open/compute/seal breakdown) when the
     /// operator wraps an NN service; `None` for plain operators. The
     /// pipeline runtime collects this when the worker retires.
@@ -126,6 +143,10 @@ impl Operator for ServiceOperator {
 
     fn process(&mut self, sealed: &[u8]) -> Result<Vec<u8>> {
         self.service.process_record(sealed)
+    }
+
+    fn process_batch(&mut self, sealed: &[Vec<u8>], outs: &mut Vec<Vec<u8>>) -> Result<()> {
+        self.service.process_batch(sealed, outs)
     }
 
     fn service_stats(&self) -> Option<crate::enclave::ServiceStats> {

@@ -170,6 +170,96 @@ impl NnService {
         self.stats.seal_secs += t_seal;
         Ok(sealed)
     }
+
+    /// Process a coalesced micro-batch of sealed records in arrival
+    /// order: open all N (the channel authenticates record *sequence*,
+    /// so opening must follow arrival order), stack the activations into
+    /// one `[N·n, …]` tensor, run the partition **once** — one stacked
+    /// GEMM per layer instead of N, amortizing weight streaming, panel
+    /// setup, and the thread fan-out — then split, serialize, and seal
+    /// the N outputs in the same order.
+    ///
+    /// Batched execution is bit-identical to N sequential
+    /// [`process_record`](NnService::process_record) calls: every output
+    /// element's accumulation order in the GEMM core is fixed per
+    /// element, independent of how many rows the call carries
+    /// (DESIGN.md §16), and `tests/batched_parity.rs` pins it.
+    ///
+    /// `stats.frames` counts *frames*, not batches, so per-frame means
+    /// stay comparable across batch sizes.
+    pub fn process_batch(&mut self, records: &[Vec<u8>], outs: &mut Vec<Vec<u8>>) -> Result<()> {
+        if records.len() <= 1 || self.in_shape.is_empty() {
+            for rec in records {
+                outs.push(self.process_record(rec)?);
+            }
+            return Ok(());
+        }
+        let b = records.len();
+        let in_elems: usize = self.in_shape.iter().product();
+        let mut shape = self.in_shape.clone();
+        shape[0] *= b;
+
+        let t0 = std::time::Instant::now();
+        let mut input = self.scratch.take(&shape);
+        for (i, rec) in records.iter().enumerate() {
+            self.ingress
+                .rx
+                .open_record_into(rec, &mut self.plain_buf)
+                .context("opening ingress record inside enclave")?;
+            anyhow::ensure!(
+                self.plain_buf.len() == in_elems * 4,
+                "batched frame {i}: payload {} bytes, expected {}",
+                self.plain_buf.len(),
+                in_elems * 4
+            );
+            let dst = &mut input.data[i * in_elems..(i + 1) * in_elems];
+            for (d, ch) in dst.iter_mut().zip(self.plain_buf.chunks_exact(4)) {
+                *d = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+        }
+        self.enclave.note_activation(input.byte_len() as u64);
+        let t_open = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let out = self.chain.run_scratch(&input, &mut self.scratch)?;
+        let t_compute = t1.elapsed().as_secs_f64();
+        self.enclave.note_activation(out.byte_len() as u64);
+        self.scratch.give(input);
+
+        let t2 = std::time::Instant::now();
+        let out_elems = out.len() / b;
+        for i in 0..b {
+            self.out_buf.clear();
+            self.out_buf.reserve(out_elems * 4);
+            for v in &out.data[i * out_elems..(i + 1) * out_elems] {
+                self.out_buf.extend_from_slice(&v.to_le_bytes());
+            }
+            outs.push(match &mut self.egress {
+                Some(ch) => ch.tx.seal_record(&self.out_buf),
+                None => self.out_buf.clone(),
+            });
+        }
+        self.scratch.give(out);
+        let t_seal = t2.elapsed().as_secs_f64();
+
+        self.stats.frames += b as u64;
+        self.stats.open_secs += t_open;
+        self.stats.compute_secs += t_compute;
+        self.stats.seal_secs += t_seal;
+        Ok(())
+    }
+
+    /// Pre-size the scratch arena for micro-batches up to `max_batch`
+    /// frames, so the first full batch does not grow any pool tensor
+    /// mid-flight (the zero-alloc steady state then covers the batched
+    /// path too — DESIGN.md §16 sizing rules).
+    pub fn reserve_batch(&mut self, max_batch: usize) {
+        if max_batch > 1 && !self.in_shape.is_empty() {
+            let mut shape = self.in_shape.clone();
+            shape[0] *= max_batch;
+            self.scratch.reserve(&shape, 1);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -193,6 +193,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("strategy", "proposed", "placement strategy")
         .opt("backend", "", "execution backend (reference|xla; default $SERDAB_BACKEND)")
         .opt("wan-mbps", "", "override inter-edge bandwidth (default: per-link topology values)")
+        .opt("batch", "1", "max frames coalesced per stage invocation (1 = no micro-batching)")
+        .opt("batch-wait-us", "200", "micro-batch gather deadline after the first frame, µs")
         .opt("seed", "7", "video seed");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     if !a.get("backend").is_empty() {
@@ -223,6 +225,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     let strat = strategy_from(a.get("strategy"))?;
     let wan_bps = opt_f64(&a, "wan-mbps")?.map(|mbps| mbps * 1e6);
+    let batch = a.get_usize("batch").map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    let batch_wait_us = a.get_u64("batch-wait-us").map_err(|e| anyhow::anyhow!(e))?;
     let topo = topology_from(&a)?;
     println!("topology: {}", topo.summary());
 
@@ -262,11 +267,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         }
     };
 
-    let cfg = ServerConfig {
+    let mut cfg = ServerConfig {
         strategy: strat,
         window_secs: window,
         ..ServerConfig::default()
     };
+    cfg.engine.batch = batch;
+    cfg.engine.batch_wait_us = batch_wait_us;
+    if batch > 1 {
+        println!("micro-batching: up to {batch} frames per invocation, {batch_wait_us}µs gather");
+    }
     let mut server = Server::launch(profile, topo, builder, cfg)?;
     let events = server.events().expect("fresh server has its event feed");
     println!("placement: {}", server.status().placement);

@@ -29,8 +29,17 @@ pub struct PathCost {
     pub single_secs: f64,
     /// Pipeline period (bottleneck stage), seconds per frame.
     pub period_secs: f64,
-    /// Per-stage compute seconds.
+    /// Per-stage compute seconds for a batch-1 invocation (fixed
+    /// per-invocation overhead *included* — this is the per-frame time the
+    /// unbatched pipeline actually charges).
     pub stage_secs: Vec<f64>,
+    /// Fixed per-invocation seconds of each stage (the resource's
+    /// `invoke_overhead_secs`: enclave ecall/ocall transitions, kernel
+    /// launch, record dispatch). Amortized across the batch under
+    /// micro-batching: a batch-`B` invocation costs
+    /// `fixed + B · (stage_secs − fixed)`. Zero everywhere unless the
+    /// topology declares overheads.
+    pub stage_fixed_secs: Vec<f64>,
     /// Per-boundary (crypto, transfer) seconds after each stage except last.
     pub boundary_secs: Vec<(f64, f64)>,
 }
@@ -45,6 +54,43 @@ impl PathCost {
     /// Steady-state throughput (frames/sec).
     pub fn throughput(&self) -> f64 {
         1.0 / self.period_secs
+    }
+
+    /// Service seconds for one batch-`b` invocation of stage `i`:
+    /// `fixed + b · per_frame`, where `per_frame = stage_secs[i] − fixed`
+    /// (the marginal per-frame compute). `b = 1` reproduces
+    /// `stage_secs[i]` exactly.
+    pub fn stage_secs_batched(&self, i: usize, b: usize) -> f64 {
+        let fixed = self.stage_fixed_secs.get(i).copied().unwrap_or(0.0);
+        let per_frame = (self.stage_secs[i] - fixed).max(0.0);
+        fixed + b.max(1) as f64 * per_frame
+    }
+
+    /// Amortized per-frame service seconds of stage `i` when it executes
+    /// full batches of `b` — what the online monitor arms against under
+    /// micro-batching (windowed means are per-frame, so predictions must
+    /// be too).
+    pub fn stage_frame_secs(&self, i: usize, b: usize) -> f64 {
+        self.stage_secs_batched(i, b) / b.max(1) as f64
+    }
+
+    /// Pipeline period per frame when every compute stage coalesces full
+    /// batches of `b` (boundaries still move frame-by-frame). With no
+    /// fixed overheads this equals `period_secs` for every `b`; with
+    /// overheads it shrinks toward the pure per-frame bottleneck as `b`
+    /// grows — the throughput/latency trade the solver weighs against
+    /// the SLO (batching adds up to `(b−1) · period` of gather wait to
+    /// a frame's latency).
+    pub fn period_secs_batched(&self, b: usize) -> f64 {
+        (0..self.stage_secs.len())
+            .map(|i| self.stage_frame_secs(i, b))
+            .chain(self.boundary_secs.iter().map(|&(c, t)| c + t))
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Steady-state throughput (frames/sec) at batch `b`.
+    pub fn throughput_batched(&self, b: usize) -> f64 {
+        1.0 / self.period_secs_batched(b)
     }
 }
 
@@ -79,10 +125,15 @@ impl<'a> CostModel<'a> {
     pub fn cost(&self, p: &Placement) -> PathCost {
         let prof = self.profile;
         let topo = &self.topo;
+        let stage_fixed_secs: Vec<f64> =
+            p.stages.iter().map(|s| topo.invoke_overhead_of(s.resource)).collect();
+        // stage_secs stays the per-frame batch-1 total: marginal compute
+        // plus the resource's fixed per-invocation overhead
         let stage_secs: Vec<f64> = p
             .stages
             .iter()
-            .map(|s| topo.stage_secs(prof, s.resource, s.range.clone()))
+            .zip(&stage_fixed_secs)
+            .map(|(s, fixed)| topo.stage_secs(prof, s.resource, s.range.clone()) + fixed)
             .collect();
 
         let mut boundary_secs = Vec::new();
@@ -112,7 +163,7 @@ impl<'a> CostModel<'a> {
             .chain(boundary_secs.iter().map(|&(c, t)| c + t))
             .fold(0.0f64, f64::max);
 
-        PathCost { single_secs, period_secs, stage_secs, boundary_secs }
+        PathCost { single_secs, period_secs, stage_secs, stage_fixed_secs, boundary_secs }
     }
 }
 
@@ -248,6 +299,47 @@ mod tests {
         let solo = cm.cost(&Placement::single(rid(&cm, "TEE1"), 4));
         let split = cm.cost(&place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "GPU2"), 2..4)]));
         assert!(split.period_secs < solo.period_secs);
+    }
+
+    #[test]
+    fn batched_cost_amortizes_fixed_overhead() {
+        let prof = toy_profile();
+        let mut topo = Topology::paper_testbed();
+        let t1 = topo.require("TEE1").unwrap();
+        topo.set_invoke_overhead(t1, 0.5);
+        let cm = CostModel::new(&prof, topo);
+        let c = cm.cost(&Placement::single(rid(&cm, "TEE1"), 4));
+
+        // batch-1 per-frame total = 4 blocks · 1s + 0.5s fixed
+        assert!((c.stage_secs[0] - 4.5).abs() < 1e-9);
+        assert!((c.stage_fixed_secs[0] - 0.5).abs() < 1e-9);
+        assert!((c.stage_secs_batched(0, 1) - 4.5).abs() < 1e-9, "b=1 reproduces stage_secs");
+        // one batch-4 invocation: 0.5 + 4·4.0
+        assert!((c.stage_secs_batched(0, 4) - 16.5).abs() < 1e-9);
+        // amortized per-frame: 16.5/4
+        assert!((c.stage_frame_secs(0, 4) - 4.125).abs() < 1e-9);
+        // throughput grows monotonically with batch toward 1/per_frame
+        let t1fps = c.throughput_batched(1);
+        let t8fps = c.throughput_batched(8);
+        assert!((t1fps - c.throughput()).abs() < 1e-9);
+        assert!(t8fps > t1fps, "batching must amortize the fixed term");
+        assert!(t8fps < 1.0 / 4.0 + 1e-9, "cannot beat the pure per-frame bound");
+    }
+
+    #[test]
+    fn batched_cost_is_identity_without_overheads() {
+        // no declared invoke overheads ⇒ the batched model degenerates to
+        // the paper's closed form for every batch size
+        let prof = toy_profile();
+        let cm = CostModel::paper(&prof);
+        let c = cm.cost(&place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "TEE2"), 2..4)]));
+        assert!(c.stage_fixed_secs.iter().all(|&f| f == 0.0));
+        for b in [1usize, 2, 8, 64] {
+            assert!((c.period_secs_batched(b) - c.period_secs).abs() < 1e-12);
+            for i in 0..c.stage_secs.len() {
+                assert!((c.stage_frame_secs(i, b) - c.stage_secs[i]).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

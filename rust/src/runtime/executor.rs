@@ -57,24 +57,58 @@ impl BlockExecutable {
     /// Run the block on one activation, drawing intermediate buffers
     /// from the caller's per-worker [`Scratch`] arena (the
     /// allocation-free steady-state path).
+    ///
+    /// Shape contract is *batch-aware*: the activation may stack `k ≥ 1`
+    /// frames along dim 0 (shape `[k·n, …]` for a declared `[n, …]`),
+    /// and the output must then scale its dim 0 by the same factor — the
+    /// micro-batched stage path (DESIGN.md §16) runs k coalesced frames
+    /// through one call.
     pub fn run_scratch(&self, activation: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
-        anyhow::ensure!(
-            activation.shape == self.in_shape,
-            "block {}: input shape {:?}, want {:?}",
-            self.name,
-            activation.shape,
-            self.in_shape
-        );
+        let k = batch_factor(&activation.shape, &self.in_shape).ok_or_else(|| {
+            anyhow::anyhow!(
+                "block {}: input shape {:?}, want {:?} (or a whole batch multiple of dim 0)",
+                self.name,
+                activation.shape,
+                self.in_shape
+            )
+        })?;
         let out = self.runner.run_scratch(activation, scratch)?;
+        let want_out: Vec<usize> = scale_dim0(&self.out_shape, k);
         anyhow::ensure!(
-            out.shape == self.out_shape,
-            "block {}: backend produced shape {:?}, manifest declares {:?}",
+            out.shape == want_out,
+            "block {}: backend produced shape {:?}, manifest declares {:?} (batch {k})",
             self.name,
             out.shape,
-            self.out_shape
+            want_out
         );
         Ok(out)
     }
+}
+
+/// The batch factor `k` when `got` is `declared` with dim 0 scaled by a
+/// whole `k ≥ 1` (tail dims equal); `None` when the shapes are
+/// incompatible.
+fn batch_factor(got: &[usize], declared: &[usize]) -> Option<usize> {
+    if got == declared {
+        return Some(1); // covers degenerate declared shapes too
+    }
+    if got.len() != declared.len() || declared.is_empty() || got[1..] != declared[1..] {
+        return None;
+    }
+    let n = declared[0];
+    if n == 0 || got[0] == 0 || got[0] % n != 0 {
+        return None;
+    }
+    Some(got[0] / n)
+}
+
+/// `shape` with dim 0 multiplied by `k`.
+fn scale_dim0(shape: &[usize], k: usize) -> Vec<usize> {
+    let mut s = shape.to_vec();
+    if let Some(d0) = s.first_mut() {
+        *d0 *= k;
+    }
+    s
 }
 
 /// A chain executor: all loaded blocks of one model, runnable in order.

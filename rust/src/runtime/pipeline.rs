@@ -137,11 +137,22 @@ pub struct PipelineConfig {
     /// real framing), at the cost of the kernel socket buffer adding slack
     /// beyond `queue_cap` to the effective queue bound.
     pub tcp_hops: bool,
+    /// Micro-batch size `B`: each worker coalesces up to this many queued
+    /// frames (across *all* attached streams — frames keep their stream
+    /// id and seq through the batch) into one
+    /// [`Operator::process_batch`](crate::dataflow::Operator::process_batch)
+    /// call. `1` disables batching (the exact pre-batching frame path).
+    pub batch: usize,
+    /// Micro-batch gather deadline `T` in microseconds: after the first
+    /// frame of a batch arrives, the worker waits at most this long for
+    /// the batch to fill before executing what it has (batch-of-`B` *or*
+    /// `T` µs, whichever first). Irrelevant when `batch == 1`.
+    pub batch_wait_us: u64,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { queue_cap: 4, framed: true, tcp_hops: false }
+        PipelineConfig { queue_cap: 4, framed: true, tcp_hops: false, batch: 1, batch_wait_us: 200 }
     }
 }
 
@@ -176,8 +187,15 @@ pub struct WorkerStats {
     pub label: String,
     /// Compute stage or boundary link.
     pub kind: WorkerKind,
-    /// Frames processed.
+    /// Frames processed. Always counts *frames*, never operator
+    /// invocations — under micro-batching one invocation retires many
+    /// frames (see [`WorkerStats::batches`]), and every per-frame mean
+    /// derived from this field stays per-frame.
     pub frames: u64,
+    /// Operator invocations. Equal to `frames` when batching is off
+    /// (`batch == 1`); under micro-batching `frames / batches` is the
+    /// achieved mean batch size.
+    pub batches: u64,
     /// Seconds spent inside the operator (service time).
     pub busy_secs: f64,
     /// Seconds frames spent waiting in this worker's input queue (summed
@@ -337,6 +355,7 @@ impl PipelineSnapshot {
                 label: cur.label.clone(),
                 kind: cur.kind,
                 frames: cur.frames.saturating_sub(old.frames),
+                batches: cur.batches.saturating_sub(old.batches),
                 busy_secs: (cur.busy_secs - old.busy_secs).max(0.0),
                 queue_wait_secs: (cur.queue_wait_secs - old.queue_wait_secs).max(0.0),
                 blocked_secs: (cur.blocked_secs - old.blocked_secs).max(0.0),
@@ -597,13 +616,14 @@ impl Pipeline {
                 label: label.clone(),
                 kind: spec.kind,
                 frames: 0,
+                batches: 0,
                 busy_secs: 0.0,
                 queue_wait_secs: 0.0,
                 blocked_secs: 0.0,
                 idle_secs: 0.0,
                 service: None,
             }));
-            workers.push((label, spawn_worker(spec, rx, tx, cfg.framed, cell.clone())));
+            workers.push((label, spawn_worker(spec, rx, tx, cfg, cell.clone())));
             cells.push(cell);
             rx = next_rx;
             if cfg.tcp_hops && i + 1 < n {
@@ -894,17 +914,29 @@ pub fn stats_channel(
 }
 
 /// Spawn one instrumented worker thread. The worker owns local counters
-/// and publishes them into the shared `cell` after every frame — that is
+/// and publishes them into the shared `cell` after every batch — that is
 /// what makes live [`RunningPipeline::snapshot`]s (and therefore the
 /// coordinator's *online* monitoring) possible; the same cell yields the
 /// end-of-run statistics. A long blocked `send` is only charged once it
 /// completes, so a snapshot taken mid-block reads slightly stale
 /// counters — windowed consumers tolerate that by construction.
+///
+/// Micro-batching ([`PipelineConfig::batch`] > 1): after a blocking
+/// `recv` delivers the first frame, the worker keeps gathering with
+/// `recv_timeout` until it holds `batch` frames or
+/// [`PipelineConfig::batch_wait_us`] elapses since the first arrival,
+/// then executes the whole inbox as one
+/// [`Operator::process_batch`](crate::dataflow::Operator::process_batch)
+/// call and re-emits one packet per frame *in arrival order*, each
+/// keeping its own `seq`, `stream`, and `born` stamp — sealing order,
+/// framing, and per-stream attribution survive coalescing. `frames`
+/// counts frames, `batches` counts invocations; gather waiting is
+/// charged to `idle`, per-frame time in the queue to `queue_wait`.
 fn spawn_worker(
     spec: StageSpec,
     rx: Receiver<WirePacket>,
     tx: SyncSender<WirePacket>,
-    framed: bool,
+    cfg: PipelineConfig,
     cell: StatsCell,
 ) -> JoinHandle<Result<()>> {
     let StageSpec { label, kind: _, builder } = spec;
@@ -914,55 +946,103 @@ fn spawn_worker(
         .spawn(move || -> Result<()> {
             let mut op = builder()
                 .with_context(|| format!("constructing operator for stage '{label}'"))?;
+            let batch_cap = cfg.batch.max(1);
+            let gather_wait = Duration::from_micros(cfg.batch_wait_us);
             let mut frames = 0u64;
+            let mut batches = 0u64;
             let mut busy = 0.0f64;
             let mut queue_wait = 0.0f64;
             let mut blocked = 0.0f64;
             let mut idle = 0.0f64;
-            let publish = |frames, busy, queue_wait, blocked, idle, service| {
+            let publish = |frames, batches, busy, queue_wait, blocked, idle, service| {
                 let mut c = cell.lock().unwrap();
                 c.frames = frames;
+                c.batches = batches;
                 c.busy_secs = busy;
                 c.queue_wait_secs = queue_wait;
                 c.blocked_secs = blocked;
                 c.idle_secs = idle;
                 c.service = service;
             };
+            let mut inbox: Vec<WirePacket> = Vec::with_capacity(batch_cap);
+            let mut payloads: Vec<Vec<u8>> = Vec::with_capacity(batch_cap);
+            let mut outs: Vec<Vec<u8>> = Vec::with_capacity(batch_cap);
             loop {
                 let t_idle = Instant::now();
-                let pkt = match rx.recv() {
+                let first = match rx.recv() {
                     Ok(p) => p,
                     Err(_) => break, // upstream closed: stream finished
                 };
                 let now = Instant::now();
                 idle += now.duration_since(t_idle).as_secs_f64();
-                queue_wait += now.saturating_duration_since(pkt.enqueued).as_secs_f64();
+                queue_wait += now.saturating_duration_since(first.enqueued).as_secs_f64();
+                inbox.push(first);
+                if batch_cap > 1 {
+                    // batch-of-B or T µs since the first arrival, whichever
+                    // first; a closed upstream just serves what is gathered
+                    let deadline = now + gather_wait;
+                    while inbox.len() < batch_cap {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        let t_gather = Instant::now();
+                        let got = rx.recv_timeout(left);
+                        idle += t_gather.elapsed().as_secs_f64();
+                        match got {
+                            Ok(p) => {
+                                queue_wait += Instant::now()
+                                    .saturating_duration_since(p.enqueued)
+                                    .as_secs_f64();
+                                inbox.push(p);
+                            }
+                            Err(_) => break, // deadline hit or upstream closed
+                        }
+                    }
+                }
 
-                let payload =
-                    if framed { unframe_data(&pkt.bytes)? } else { pkt.bytes };
+                payloads.clear();
+                for pkt in inbox.iter_mut() {
+                    let bytes = std::mem::take(&mut pkt.bytes);
+                    payloads.push(if cfg.framed { unframe_data(&bytes)? } else { bytes });
+                }
+                let (first_seq, last_seq) = (inbox[0].seq, inbox[inbox.len() - 1].seq);
+                outs.clear();
                 let t_busy = Instant::now();
-                let out = op
-                    .process(&payload)
-                    .with_context(|| format!("frame {} in stage '{label}'", pkt.seq))?;
+                op.process_batch(&payloads, &mut outs).with_context(|| {
+                    format!("frames {first_seq}..={last_seq} in stage '{label}'")
+                })?;
                 busy += t_busy.elapsed().as_secs_f64();
-                frames += 1;
+                anyhow::ensure!(
+                    outs.len() == inbox.len(),
+                    "stage '{label}': operator returned {} outputs for {} frames",
+                    outs.len(),
+                    inbox.len()
+                );
+                frames += inbox.len() as u64;
+                batches += 1;
 
-                let bytes = if framed { frame_data(&out)? } else { out };
-                let t_send = Instant::now();
-                let res = tx.send(WirePacket {
-                    seq: pkt.seq,
-                    stream: pkt.stream,
-                    bytes,
-                    born: pkt.born,
-                    enqueued: Instant::now(),
-                });
-                blocked += t_send.elapsed().as_secs_f64();
-                publish(frames, busy, queue_wait, blocked, idle, op.service_stats());
-                if res.is_err() {
-                    break; // downstream closed
+                let mut downstream_closed = false;
+                for (pkt, out) in inbox.drain(..).zip(outs.drain(..)) {
+                    let bytes = if cfg.framed { frame_data(&out)? } else { out };
+                    let t_send = Instant::now();
+                    let res = tx.send(WirePacket {
+                        seq: pkt.seq,
+                        stream: pkt.stream,
+                        bytes,
+                        born: pkt.born,
+                        enqueued: Instant::now(),
+                    });
+                    blocked += t_send.elapsed().as_secs_f64();
+                    if res.is_err() {
+                        downstream_closed = true;
+                        break;
+                    }
+                }
+                inbox.clear(); // a broken send may leave drained-but-unsent tail state
+                publish(frames, batches, busy, queue_wait, blocked, idle, op.service_stats());
+                if downstream_closed {
+                    break;
                 }
             }
-            publish(frames, busy, queue_wait, blocked, idle, op.service_stats());
+            publish(frames, batches, busy, queue_wait, blocked, idle, op.service_stats());
             Ok(())
         })
         .expect("spawn pipeline worker thread")
@@ -1323,6 +1403,60 @@ mod tests {
         for s in 0..3 {
             assert!(lat[s] / count[s] as f64 > 0.001, "stream {s} latency untracked");
         }
+    }
+
+    #[test]
+    fn micro_batching_coalesces_and_preserves_frames() {
+        // queue up all frames before the worker can drain them, so the
+        // gather loop actually sees full batches; generous deadline keeps
+        // slow CI runners from splitting batches on the timer
+        let mut p = Pipeline::new(PipelineConfig {
+            queue_cap: 32,
+            batch: 4,
+            batch_wait_us: 200_000,
+            ..Default::default()
+        });
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 1));
+        let rp = p.start().unwrap();
+        let inj = rp.injector().unwrap();
+        rp.close_intake();
+        for i in 0..16u64 {
+            inj.send(FrameIn { stream: (i % 2) as u32, payload: vec![i as u8; 8] }).unwrap();
+        }
+        drop(inj);
+        let mut got = Vec::new();
+        while let Some(out) = rp.next_output() {
+            let out = out.unwrap();
+            got.push((out.seq, out.stream, out.payload[0]));
+        }
+        let rep = rp.finish().unwrap();
+        assert_eq!(rep.frames, 16);
+        // every frame exits exactly once, in order, with its own stream
+        // tag and payload — coalescing must not blur frame identity
+        for (i, (seq, stream, b)) in got.iter().enumerate() {
+            assert_eq!(*seq, i as u64);
+            assert_eq!(*stream, (i % 2) as u32);
+            assert_eq!(*b, i as u8);
+        }
+        let w = &rep.workers[0];
+        assert_eq!(w.frames, 16, "frames counts frames, not invocations");
+        assert!(
+            w.batches < w.frames,
+            "no coalescing happened: {} batches for {} frames",
+            w.batches,
+            w.frames
+        );
+        assert_eq!(rep.latencies.len(), 16);
+    }
+
+    #[test]
+    fn batch_one_counts_one_invocation_per_frame() {
+        let mut p = Pipeline::new(PipelineConfig::default());
+        p.add_stage(delay_stage("a", WorkerKind::Stage, 0));
+        let rep = p.run(feed(12), |_| {}).unwrap();
+        let w = &rep.workers[0];
+        assert_eq!(w.frames, 12);
+        assert_eq!(w.batches, 12, "batch=1 is the exact pre-batching path");
     }
 
     #[test]

@@ -111,6 +111,21 @@ impl Scratch {
         self.pool.push(t);
     }
 
+    /// Pre-warm the pool with `count` tensors holding capacity for
+    /// `shape` — the batched-path sizing rule (DESIGN.md §16): size the
+    /// arena for the *maximum* micro-batch up front so the first full
+    /// batch hits the steady state instead of growing buffers mid-frame.
+    /// Warming never shrinks anything; with a warm pool it is a no-op.
+    pub fn reserve(&mut self, shape: &[usize], count: usize) {
+        let n: usize = shape.iter().product();
+        // hold all `count` out before returning any, so each take grows
+        // a distinct pool slot instead of recycling the same one
+        let mut held: Vec<Tensor> = (0..count).map(|_| self.take(&[n])).collect();
+        while let Some(t) = held.pop() {
+            self.give(t);
+        }
+    }
+
     /// Hand out `workers` panel buffers, each resized to `len` elements
     /// (contents unspecified). The returned slice has exactly `workers`
     /// entries; kernels zip it against their disjoint output chunks.
@@ -168,6 +183,22 @@ mod tests {
         let ps = s.panels_for(3, 10);
         assert_eq!(ps.len(), 3);
         assert!(ps.iter().all(|p| p.len() == 10));
+    }
+
+    #[test]
+    fn reserve_prewarms_distinct_slots() {
+        let mut s = Scratch::with_threads(1);
+        s.reserve(&[4, 8], 3);
+        // three takes at the reserved size must all come from the pool
+        // with full capacity already in place
+        let a = s.take(&[4, 8]);
+        let b = s.take(&[4, 8]);
+        let c = s.take(&[4, 8]);
+        assert!(a.data.capacity() >= 32);
+        assert!(b.data.capacity() >= 32);
+        assert!(c.data.capacity() >= 32);
+        assert_ne!(a.data.as_ptr(), b.data.as_ptr());
+        assert_ne!(b.data.as_ptr(), c.data.as_ptr());
     }
 
     #[test]

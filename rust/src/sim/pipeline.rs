@@ -128,16 +128,32 @@ impl PipelineReport {
 }
 
 /// Server in the linearized pipeline: alternating compute stages and links.
+///
+/// Batching model (compute stages under `batch > 1`): when the server goes
+/// idle it *greedily* takes `b = min(queued, batch)` frames and serves them
+/// as one invocation costing `fixed + b · service` — the take-what's-
+/// available behavior the executed micro-batcher converges to under load
+/// (its gather deadline only matters when the queue is drier than the
+/// batch, where service time is not the bottleneck anyway). Finished
+/// frames hand downstream one by one in order; a full downstream queue
+/// holds the remainder (`done`) and back-pressures exactly like the
+/// unbatched model. `batch = 1, fixed = 0` reproduces the original serial
+/// server event-for-event.
 #[derive(Debug, Clone)]
 struct Server {
-    /// Service time per frame (seconds).
+    /// Marginal service time per frame (seconds).
     service: f64,
+    /// Fixed seconds per invocation, amortized across the batch.
+    fixed: f64,
+    /// Max frames per invocation (1 = unbatched).
+    batch: usize,
     /// Frames waiting (enqueue virtual times for latency accounting).
     queue: std::collections::VecDeque<u64>,
+    /// Frames inside the current invocation, arrival order.
+    busy: Vec<u64>,
+    /// Finished frames not yet handed downstream (non-empty = blocked).
+    done: std::collections::VecDeque<u64>,
     busy_until: f64,
-    busy_frame: Option<u64>,
-    /// Output blocked waiting for downstream space.
-    blocked: bool,
     busy_total: f64,
     max_queue: usize,
 }
@@ -173,33 +189,48 @@ pub fn simulate_schedule(
     schedule: &[(f64, u32)],
     queue_cap: usize,
 ) -> PipelineReport {
+    simulate_schedule_batched(cm, placement, schedule, queue_cap, 1)
+}
+
+/// [`simulate_schedule`] with micro-batching at every compute stage: each
+/// stage serves up to `batch` queued frames per invocation at
+/// `fixed + b · per_frame` seconds (the cost model's
+/// [`stage_secs_batched`](crate::placement::cost::PathCost::stage_secs_batched)
+/// decomposition), while boundary links stay frame-by-frame — the DES
+/// counterpart of [`PipelineConfig::batch`](crate::runtime::pipeline::PipelineConfig::batch),
+/// letting the solver trade the latency SLO against batch throughput
+/// before deploying anything. `batch = 1` is exactly [`simulate_schedule`].
+pub fn simulate_schedule_batched(
+    cm: &CostModel<'_>,
+    placement: &Placement,
+    schedule: &[(f64, u32)],
+    queue_cap: usize,
+    batch: usize,
+) -> PipelineReport {
     let cost = cm.cost(placement);
+    let batch = batch.max(1);
     // Linearize: stage0, link0, stage1, link1, ... (links with zero cost
     // still exist but are skipped through instantly).
     let mut servers: Vec<Server> = Vec::new();
     let mut labels: Vec<ServerLabel> = Vec::new();
+    let server = |service: f64, fixed: f64, batch: usize| Server {
+        service,
+        fixed,
+        batch,
+        queue: Default::default(),
+        busy: Vec::new(),
+        done: Default::default(),
+        busy_until: 0.0,
+        busy_total: 0.0,
+        max_queue: 0,
+    };
     for (i, &s) in cost.stage_secs.iter().enumerate() {
-        servers.push(Server {
-            service: s,
-            queue: Default::default(),
-            busy_until: 0.0,
-            busy_frame: None,
-            blocked: false,
-            busy_total: 0.0,
-            max_queue: 0,
-        });
+        let fixed = cost.stage_fixed_secs[i];
+        servers.push(server((s - fixed).max(0.0), fixed, batch));
         labels.push(ServerLabel::Stage(i));
         if i < cost.boundary_secs.len() {
             let (crypto, transfer) = cost.boundary_secs[i];
-            servers.push(Server {
-                service: crypto + transfer,
-                queue: Default::default(),
-                busy_until: 0.0,
-                busy_frame: None,
-                blocked: false,
-                busy_total: 0.0,
-                max_queue: 0,
-            });
+            servers.push(server(crypto + transfer, 0.0, 1));
             labels.push(ServerLabel::Link(i));
         }
     }
@@ -215,17 +246,23 @@ pub fn simulate_schedule(
         q.schedule(t, Ev::Arrive { frame: f as u64 });
     }
 
-    // Try to start service on server s at the current virtual time.
+    // Try to start service on server s at the current virtual time: take
+    // up to `batch` queued frames as one invocation. A server holding
+    // undelivered outputs (`done`) is blocked and cannot start.
     fn try_start(servers: &mut [Server], q: &mut EventQueue<Ev>, s: usize) {
         let now = q.now;
         let srv = &mut servers[s];
-        if srv.busy_frame.is_some() || srv.blocked || srv.queue.is_empty() {
+        if !srv.busy.is_empty() || !srv.done.is_empty() || srv.queue.is_empty() {
             return;
         }
-        let frame = srv.queue.pop_front().unwrap();
-        srv.busy_frame = Some(frame);
-        srv.busy_until = now + srv.service;
-        srv.busy_total += srv.service;
+        let b = srv.queue.len().min(srv.batch);
+        for _ in 0..b {
+            let frame = srv.queue.pop_front().unwrap();
+            srv.busy.push(frame);
+        }
+        let service = srv.fixed + b as f64 * srv.service;
+        srv.busy_until = now + service;
+        srv.busy_total += service;
         q.schedule(srv.busy_until, Ev::Done { server: s });
     }
 
@@ -234,6 +271,39 @@ pub fn simulate_schedule(
         let srv = &mut servers[s];
         srv.queue.push_back(frame);
         srv.max_queue = srv.max_queue.max(srv.queue.len());
+    }
+
+    // Hand server s's finished frames downstream in order while there is
+    // space (frames exiting the last server complete), then let s start
+    // its next invocation if it delivered everything. The backpressure
+    // invariant lives here: a remainder in `done` keeps s blocked.
+    fn flush_done(
+        servers: &mut [Server],
+        q: &mut EventQueue<Ev>,
+        s: usize,
+        queue_cap: usize,
+        entered: &[f64],
+        latencies: &mut [f64],
+        completed: &mut u64,
+    ) {
+        let n_servers = servers.len();
+        loop {
+            if servers[s].done.is_empty() {
+                break;
+            }
+            if s + 1 == n_servers {
+                let frame = servers[s].done.pop_front().unwrap();
+                latencies[frame as usize] = q.now - entered[frame as usize];
+                *completed += 1;
+            } else if servers[s + 1].queue.len() < queue_cap {
+                let frame = servers[s].done.pop_front().unwrap();
+                enqueue(servers, s + 1, frame);
+                try_start(servers, q, s + 1);
+            } else {
+                break; // backpressure: hold the remainder, stay blocked
+            }
+        }
+        try_start(servers, q, s);
     }
 
     while let Some(ev) = q.pop() {
@@ -245,45 +315,38 @@ pub fn simulate_schedule(
                 try_start(&mut servers, &mut q, 0);
             }
             Ev::Done { server } => {
-                let frame = servers[server].busy_frame.expect("done without frame");
-                if server + 1 == n_servers {
-                    // frame exits the pipeline
-                    servers[server].busy_frame = None;
-                    latencies[frame as usize] = q.now - entered[frame as usize];
-                    completed += 1;
-                    try_start(&mut servers, &mut q, server);
-                } else if servers[server + 1].queue.len() < queue_cap {
-                    servers[server].busy_frame = None;
-                    servers[server].blocked = false;
-                    enqueue(&mut servers, server + 1, frame);
-                    try_start(&mut servers, &mut q, server + 1);
-                    try_start(&mut servers, &mut q, server);
-                    // a downstream dequeue may unblock upstream chain
-                    unblock_chain(&mut servers, &mut q, server);
-                } else {
-                    // backpressure: hold the frame, stay blocked
-                    servers[server].blocked = true;
-                }
+                // the whole invocation finishes at once; outputs hand
+                // downstream one by one in arrival order
+                let finished = std::mem::take(&mut servers[server].busy);
+                debug_assert!(!finished.is_empty(), "done without frames");
+                servers[server].done.extend(finished);
+                flush_done(
+                    &mut servers,
+                    &mut q,
+                    server,
+                    queue_cap,
+                    &entered,
+                    &mut latencies,
+                    &mut completed,
+                );
             }
         }
         // after every event, re-check blocked producers whose downstream
         // gained space (frame exits create space transitively)
-        for s in (0..n_servers - 1).rev() {
-            if servers[s].blocked && servers[s + 1].queue.len() < queue_cap {
-                let frame = servers[s].busy_frame.take().unwrap();
-                servers[s].blocked = false;
-                enqueue(&mut servers, s + 1, frame);
-                try_start(&mut servers, &mut q, s + 1);
-                try_start(&mut servers, &mut q, s);
-            }
+        for s in (0..n_servers).rev() {
+            flush_done(
+                &mut servers,
+                &mut q,
+                s,
+                queue_cap,
+                &entered,
+                &mut latencies,
+                &mut completed,
+            );
         }
         if completed == n_frames {
             break;
         }
-    }
-
-    fn unblock_chain(_servers: &mut [Server], _q: &mut EventQueue<Ev>, _from: usize) {
-        // handled by the global blocked sweep in the main loop
     }
 
     let completion = q.now;
@@ -481,6 +544,83 @@ mod tests {
         let predicted = cost.chunk_secs(90);
         let err = (rep0.completion_secs - predicted).abs() / predicted;
         assert!(err < 0.01, "des={} model={predicted}", rep0.completion_secs);
+    }
+
+    #[test]
+    fn batched_single_stage_matches_closed_form() {
+        // one stage with a fixed per-invocation overhead, saturated
+        // arrivals: n frames in n/B invocations of (fixed + B·s) each
+        let prof = toy_profile();
+        let mut topo = crate::topology::Topology::paper_testbed();
+        let t1 = topo.require("TEE1").unwrap();
+        topo.set_invoke_overhead(t1, 0.5);
+        let cm = CostModel::new(&prof, topo);
+        let p = Placement::single(rid(&cm, "TEE1"), 4);
+        let cost = cm.cost(&p);
+        let n = 64u64;
+        let schedule: Vec<(f64, u32)> = (0..n).map(|_| (0.0, 0u32)).collect();
+        for b in [1usize, 4, 8] {
+            let rep = simulate_schedule_batched(&cm, &p, &schedule, 4, b);
+            let invocations = (n as f64) / b as f64; // n divisible by b
+            let predicted = invocations * cost.stage_secs_batched(0, b);
+            let err = (rep.completion_secs - predicted).abs() / predicted;
+            assert!(
+                err < 1e-9,
+                "batch {b}: des={} closed form={predicted}",
+                rep.completion_secs
+            );
+            assert_eq!(rep.latencies.len(), n as usize);
+            // steady-state throughput approaches the batched cost model
+            let fps = rep.throughput();
+            let model_fps = cost.throughput_batched(b);
+            assert!(
+                (fps - model_fps).abs() / model_fps < 0.05,
+                "batch {b}: fps {fps} vs model {model_fps}"
+            );
+        }
+        // amortization is real: batch-8 finishes the chunk faster
+        let t1s = simulate_schedule_batched(&cm, &p, &schedule, 4, 1).completion_secs;
+        let t8s = simulate_schedule_batched(&cm, &p, &schedule, 4, 8).completion_secs;
+        assert!(t8s < t1s, "batching did not amortize: b1={t1s} b8={t8s}");
+    }
+
+    #[test]
+    fn batched_multi_stage_keeps_frames_and_backpressure() {
+        // no declared overheads ⇒ batch-B must complete the chunk in the
+        // unbatched closed form's time (service is purely per-frame), and
+        // every frame still completes exactly once through the bounded
+        // queues
+        let prof = toy_profile();
+        let cm = CostModel::paper(&prof);
+        let p = place(vec![(rid(&cm, "TEE1"), 0..2), (rid(&cm, "TEE2"), 2..4)]);
+        let cost = cm.cost(&p);
+        let n = 240u64;
+        let b = 8usize;
+        let schedule: Vec<(f64, u32)> = (0..n).map(|f| (0.0, (f % 3) as u32)).collect();
+        let rep = simulate_schedule_batched(&cm, &p, &schedule, b, b);
+        assert_eq!(rep.latencies.len(), n as usize);
+        assert!(rep.latencies.iter().all(|&l| l > 0.0));
+        for s in 0..3u32 {
+            assert_eq!(rep.stream_frames(s), 80, "stream {s} lost frames under batching");
+        }
+        // per-frame service is unchanged, so batching cannot beat the
+        // closed form, and costs at most one extra batch bubble per stage
+        let predicted = cost.chunk_secs(n);
+        let bubble = 2.0 * b as f64 * cost.period_secs;
+        assert!(
+            rep.completion_secs >= predicted * 0.99,
+            "des={} beat the closed form {predicted}",
+            rep.completion_secs
+        );
+        assert!(
+            rep.completion_secs <= predicted + bubble,
+            "des={} exceeds closed form {predicted} + bubble {bubble}",
+            rep.completion_secs
+        );
+        // queue bound still honored downstream of the source
+        for (i, &mq) in rep.max_queue.iter().enumerate().skip(1) {
+            assert!(mq <= b, "server {i} queue {mq} exceeded cap");
+        }
     }
 
     #[test]

@@ -70,6 +70,14 @@ pub struct ResourceSpec {
     /// divided by this; 1.0 = the profile's reference hardware). Lets one
     /// topology mix e.g. a weak edge GPU and a fast cloud GPU.
     pub speed: f64,
+    /// Fixed seconds charged per *invocation* of a stage on this resource
+    /// (enclave ecall/ocall transitions, kernel launch, record dispatch) —
+    /// independent of how many frames the invocation carries. Micro-
+    /// batching amortizes it: a batch-`B` call pays it once instead of
+    /// `B` times (see `placement::cost::PathCost::stage_secs_batched`).
+    /// Default 0.0, which keeps every cost identical to the pre-batching
+    /// model.
+    pub invoke_overhead_secs: f64,
     /// Per-enclave EPC capacity/paging override (TEEs only). `None` uses
     /// the model profile's EPC parameters.
     pub epc: Option<EpcModel>,
@@ -78,7 +86,14 @@ pub struct ResourceSpec {
 impl ResourceSpec {
     /// A resource with default cost parameters (speed 1.0, profile EPC).
     pub fn new(name: impl Into<String>, kind: DeviceKind, host: usize) -> Self {
-        ResourceSpec { name: name.into(), kind, host, speed: 1.0, epc: None }
+        ResourceSpec {
+            name: name.into(),
+            kind,
+            host,
+            speed: 1.0,
+            invoke_overhead_secs: 0.0,
+            epc: None,
+        }
     }
 }
 
@@ -329,6 +344,17 @@ impl Topology {
         self.resources[id.0].speed = speed;
     }
 
+    /// Fixed per-invocation seconds of a resource (0.0 unless declared).
+    pub fn invoke_overhead_of(&self, id: ResourceId) -> f64 {
+        self.resources[id.0].invoke_overhead_secs
+    }
+
+    /// Set a resource's fixed per-invocation overhead.
+    pub fn set_invoke_overhead(&mut self, id: ResourceId, secs: f64) {
+        assert!(secs.is_finite() && secs >= 0.0, "invoke overhead must be non-negative");
+        self.resources[id.0].invoke_overhead_secs = secs;
+    }
+
     /// Transfer seconds for `bytes` between two hosts (0 for intra-host).
     pub fn transfer_secs(&self, a: usize, b: usize, bytes: u64) -> f64 {
         if a == b {
@@ -396,6 +422,9 @@ impl Topology {
                 ];
                 if (r.speed - 1.0).abs() > 1e-12 {
                     fields.push(("speed", num(r.speed)));
+                }
+                if r.invoke_overhead_secs > 0.0 {
+                    fields.push(("invoke_overhead_secs", num(r.invoke_overhead_secs)));
                 }
                 if let Some(e) = &r.epc {
                     fields.push(("epc", epc_to_json(e)));
@@ -536,8 +565,10 @@ fn parse_resource(r: &Json) -> Result<ResourceSpec> {
     let o = r.as_obj().ok_or_else(|| anyhow!("resource must be an object"))?;
     for key in o.keys() {
         match key.as_str() {
-            "name" | "kind" | "host" | "speed" | "epc" => {}
-            other => bail!("unknown resource key '{other}' (name|kind|host|speed|epc)"),
+            "name" | "kind" | "host" | "speed" | "invoke_overhead_secs" | "epc" => {}
+            other => bail!(
+                "unknown resource key '{other}' (name|kind|host|speed|invoke_overhead_secs|epc)"
+            ),
         }
     }
     let name = r
@@ -563,6 +594,11 @@ fn parse_resource(r: &Json) -> Result<ResourceSpec> {
     let mut spec = ResourceSpec::new(name, kind, host);
     if let Some(v) = r.get("speed") {
         spec.speed = v.as_f64().ok_or_else(|| anyhow!("resource 'speed' must be a number"))?;
+    }
+    if let Some(v) = r.get("invoke_overhead_secs") {
+        spec.invoke_overhead_secs = v
+            .as_f64()
+            .ok_or_else(|| anyhow!("resource 'invoke_overhead_secs' must be a number"))?;
     }
     if let Some(e) = r.get("epc") {
         spec.epc = Some(epc_from_json(e)?);
@@ -711,6 +747,13 @@ impl TopologyBuilder {
             }
             if !(r.speed.is_finite() && r.speed > 0.0) {
                 bail!("resource '{}' has non-positive speed {}", r.name, r.speed);
+            }
+            if !(r.invoke_overhead_secs.is_finite() && r.invoke_overhead_secs >= 0.0) {
+                bail!(
+                    "resource '{}' has negative invoke overhead {}",
+                    r.name,
+                    r.invoke_overhead_secs
+                );
             }
         }
         if !self.resources.iter().any(|r| r.kind == DeviceKind::Tee) {
@@ -880,6 +923,30 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(e.to_string().contains("does not exist"), "{e}");
+    }
+
+    #[test]
+    fn invoke_overhead_round_trips_and_validates() {
+        let mut spec = ResourceSpec::new("TEE1", DeviceKind::Tee, 0);
+        spec.invoke_overhead_secs = 2.5e-3;
+        let topo = Topology::builder("oh").resource_spec(spec).build().unwrap();
+        let text = topo.to_json().to_string_pretty();
+        assert!(text.contains("invoke_overhead_secs"), "{text}");
+        let back = Topology::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(topo, back);
+        let id = back.require("TEE1").unwrap();
+        assert!((back.invoke_overhead_of(id) - 2.5e-3).abs() < 1e-15);
+
+        // default stays implicit: no key emitted, 0.0 on load
+        let plain = Topology::paper_testbed();
+        assert!(!plain.to_json().to_string_pretty().contains("invoke_overhead_secs"));
+        assert_eq!(plain.invoke_overhead_of(plain.entry()), 0.0);
+
+        // negative overhead is rejected
+        let mut bad = ResourceSpec::new("T", DeviceKind::Tee, 0);
+        bad.invoke_overhead_secs = -1.0;
+        let e = Topology::builder("bad").resource_spec(bad).build().unwrap_err();
+        assert!(e.to_string().contains("negative invoke overhead"), "{e}");
     }
 
     #[test]

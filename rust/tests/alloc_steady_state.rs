@@ -1,6 +1,7 @@
 //! Steady-state zero-allocation guarantee (DESIGN.md §14): after one
 //! warm-up frame has sized every pool and staging buffer, the per-frame
-//! hot path — conv/dwconv/dense/pool through the scratch arena, a full
+//! hot path — conv/dwconv/dense/pool through the scratch arena (batch-1
+//! AND a stacked micro-batch, per DESIGN.md §16's sizing rule), a full
 //! reference-block forward (including a parallel merge), GCM
 //! seal+open, channel record sealing/opening into reused buffers, and
 //! coalesced framing — performs **zero** heap allocations.
@@ -152,6 +153,10 @@ fn steady_state_frame_path_allocates_nothing() {
     let xd = rand_tensor(16, &[1, 40]);
     let wd = rand_tensor(17, &[40, 23]);
     let bd = rand_tensor(18, &[23]);
+    // the micro-batched shapes: 3 frames stacked along dim 0, same
+    // weights — the pipeline's coalesced path through the same arena
+    let xb = rand_tensor(20, &[3, 8, 9, 5]);
+    let xdb = rand_tensor(21, &[3, 40]);
 
     let runner = fire_runner();
     let fire_in = rand_tensor(19, &[1, 4, 4, 1]);
@@ -177,6 +182,12 @@ fn steady_state_frame_path_allocates_nothing() {
         let c = ops::dwconv2d_scratch(&xw, &ww, &bw, 2, &Pad::Same, true, scratch).unwrap();
         scratch.give(c);
         let c = ops::dense_scratch(&xd, &wd, &bd, true, scratch).unwrap();
+        scratch.give(c);
+        // batched path: a 3-frame micro-batch must be as alloc-free as
+        // batch 1 once the pool is sized for the max batch
+        let c = ops::conv2d_scratch(&xb, &w, &b, 1, &Pad::Same, true, scratch).unwrap();
+        scratch.give(c);
+        let c = ops::dense_scratch(&xdb, &wd, &bd, true, scratch).unwrap();
         scratch.give(c);
         let c = ops::pool2d_scratch(&x, 2, 2, true, &Pad::Valid, scratch).unwrap();
         scratch.give(c);

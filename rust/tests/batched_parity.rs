@@ -1,0 +1,163 @@
+//! Batched-GEMM determinism: running N frames stacked along dim 0 in ONE
+//! conv/dense call must be **bitwise** identical to the N batch-1 runs it
+//! coalesces — per frame, byte for byte.
+//!
+//! This is the contract the micro-batching scheduler
+//! (`runtime::pipeline`) leans on: it may coalesce any frames that happen
+//! to be queued, so serving results must not depend on *which* batch a
+//! frame landed in. It holds structurally — im2col rows are
+//! frame-independent and every output element is bias + a fixed
+//! ascending-k accumulation computed by exactly one worker — and this
+//! suite enforces it over randomized shapes, batch sizes 2/3/8, and
+//! worker counts 1/4 (CI runs the whole file under `SERDAB_THREADS=1`
+//! and `=4` as an explicit matrix).
+
+use serdab::runtime::backend::reference::ops;
+use serdab::runtime::backend::reference::zoo::Pad;
+use serdab::runtime::{Scratch, Tensor};
+use serdab::util::rng::Rng;
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    Tensor::new(shape.to_vec(), data).unwrap()
+}
+
+/// Stack batch-1 frames along dim 0 — what the service's batched path
+/// does before its single GEMM.
+fn stack(frames: &[Tensor]) -> Tensor {
+    let mut shape = frames[0].shape.clone();
+    shape[0] = frames.len();
+    let mut data = Vec::with_capacity(frames.iter().map(|f| f.data.len()).sum());
+    for f in frames {
+        data.extend_from_slice(&f.data);
+    }
+    Tensor::new(shape, data).unwrap()
+}
+
+/// Split a batch-N output into its per-frame byte images.
+fn per_frame_bytes(out: &Tensor, n: usize) -> Vec<Vec<u8>> {
+    let bytes = out.to_le_bytes();
+    let per = bytes.len() / n;
+    (0..n).map(|i| bytes[i * per..(i + 1) * per].to_vec()).collect()
+}
+
+#[test]
+fn batched_conv_is_bitwise_equal_to_sequential() {
+    let mut rng = Rng::new(0xba7c4);
+    for &threads in &[1usize, 4] {
+        let mut scratch = Scratch::with_threads(threads);
+        for &batch in &[2usize, 3, 8] {
+            for case in 0..6 {
+                let k = [1usize, 3, 5][rng.range(0, 3)];
+                let h = rng.range(k, k + 11);
+                let w = rng.range(k, k + 11);
+                let cin = rng.range(1, 17);
+                let cout = rng.range(1, 33);
+                let stride = rng.range(1, 3);
+                let pad = if rng.bool(0.5) { Pad::Same } else { Pad::Valid };
+                let relu = rng.bool(0.5);
+
+                let wt = rand_tensor(&mut rng, &[k, k, cin, cout]);
+                let b = rand_tensor(&mut rng, &[cout]);
+                let frames: Vec<Tensor> =
+                    (0..batch).map(|_| rand_tensor(&mut rng, &[1, h, w, cin])).collect();
+
+                let solo: Vec<Vec<u8>> = frames
+                    .iter()
+                    .map(|f| {
+                        let y = ops::conv2d_scratch(f, &wt, &b, stride, &pad, relu, &mut scratch)
+                            .unwrap();
+                        let bytes = y.to_le_bytes();
+                        scratch.give(y);
+                        bytes
+                    })
+                    .collect();
+
+                let y = ops::conv2d_scratch(
+                    &stack(&frames),
+                    &wt,
+                    &b,
+                    stride,
+                    &pad,
+                    relu,
+                    &mut scratch,
+                )
+                .unwrap();
+                assert_eq!(y.shape[0], batch, "batch dim must survive conv");
+                let coalesced = per_frame_bytes(&y, batch);
+                scratch.give(y);
+
+                for (i, (got, want)) in coalesced.iter().zip(&solo).enumerate() {
+                    assert_eq!(
+                        got, want,
+                        "conv frame {i} diverged (threads={threads} B={batch} case {case} \
+                         h={h} w={w} cin={cin} k={k} cout={cout} s={stride} {pad:?} relu={relu})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_dense_is_bitwise_equal_to_sequential() {
+    let mut rng = Rng::new(0xd0_5e);
+    for &threads in &[1usize, 4] {
+        let mut scratch = Scratch::with_threads(threads);
+        for &batch in &[2usize, 3, 8] {
+            for case in 0..6 {
+                let fin = rng.range(1, 300);
+                let fout = rng.range(1, 70);
+                let relu = rng.bool(0.5);
+                let w = rand_tensor(&mut rng, &[fin, fout]);
+                let b = rand_tensor(&mut rng, &[fout]);
+                let frames: Vec<Tensor> =
+                    (0..batch).map(|_| rand_tensor(&mut rng, &[1, fin])).collect();
+
+                let solo: Vec<Vec<u8>> = frames
+                    .iter()
+                    .map(|f| {
+                        let y = ops::dense_scratch(f, &w, &b, relu, &mut scratch).unwrap();
+                        let bytes = y.to_le_bytes();
+                        scratch.give(y);
+                        bytes
+                    })
+                    .collect();
+
+                let y = ops::dense_scratch(&stack(&frames), &w, &b, relu, &mut scratch).unwrap();
+                assert_eq!(y.shape, vec![batch, fout]);
+                let coalesced = per_frame_bytes(&y, batch);
+                scratch.give(y);
+
+                for (i, (got, want)) in coalesced.iter().zip(&solo).enumerate() {
+                    assert_eq!(
+                        got, want,
+                        "dense frame {i} diverged (threads={threads} B={batch} case {case} \
+                         fin={fin} fout={fout} relu={relu})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn env_thread_count_is_bit_invisible_for_batched_runs() {
+    // `Scratch::new()` reads SERDAB_THREADS — the CI matrix runs this
+    // file at 1 and 4 workers, and the batched results must not move.
+    let mut rng = Rng::new(0x5ead);
+    let x = rand_tensor(&mut rng, &[8, 14, 14, 12]);
+    let w = rand_tensor(&mut rng, &[3, 3, 12, 24]);
+    let b = rand_tensor(&mut rng, &[24]);
+
+    let mut env_scratch = Scratch::new();
+    let mut one = Scratch::with_threads(1);
+    let ye = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut env_scratch).unwrap();
+    let y1 = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut one).unwrap();
+    assert_eq!(
+        ye.to_le_bytes(),
+        y1.to_le_bytes(),
+        "batched conv must be identical under any SERDAB_THREADS"
+    );
+}

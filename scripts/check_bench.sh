@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Perf-trend gate over BENCH_batching.json (written by
+# `cargo bench --bench batching_bench -- --json`).
+#
+# The gate is deliberately coarse — it fails only on order-of-magnitude
+# wrongness, not run-to-run jitter:
+#   1. parity must be true: the batched path is worthless the moment it
+#      stops being bitwise identical to sequential execution;
+#   2. frames/sec at B=8 must be at least MIN_SPEEDUP (default 1.2×) of
+#      the batch-1 baseline: if coalescing stops paying for itself the
+#      batching machinery has regressed into pure overhead.
+#
+# Usage: scripts/check_bench.sh [path/to/BENCH_batching.json]
+set -euo pipefail
+
+bench="${1:-BENCH_batching.json}"
+min_speedup="${MIN_SPEEDUP:-1.2}"
+
+if [[ ! -f "$bench" ]]; then
+    echo "check_bench: $bench not found (run: cargo bench --bench batching_bench -- --json)" >&2
+    exit 1
+fi
+
+python3 - "$bench" "$min_speedup" <<'PY'
+import json, sys
+
+path, min_speedup = sys.argv[1], float(sys.argv[2])
+with open(path) as f:
+    bench = json.load(f)
+
+rows = {int(r["batch"]): r for r in bench["rows"]}
+fps1, fps8 = rows[1]["fps"], rows[8]["fps"]
+speedup = fps8 / fps1
+print(f"parity={bench['parity']}  fps@1={fps1:.0f}  fps@8={fps8:.0f}  "
+      f"speedup={speedup:.2f}x (floor {min_speedup}x)")
+
+failed = False
+if bench["parity"] is not True:
+    print("FAIL: batched execution is not bitwise identical to sequential", file=sys.stderr)
+    failed = True
+if speedup < min_speedup:
+    print(f"FAIL: fps@8 is only {speedup:.2f}x fps@1 (< {min_speedup}x)", file=sys.stderr)
+    failed = True
+for r in bench["rows"]:
+    if r["fps"] <= 0 or r["p99_ms"] <= 0:
+        print(f"FAIL: degenerate row {r}", file=sys.stderr)
+        failed = True
+
+sys.exit(1 if failed else 0)
+PY
+echo "check_bench: OK"
