@@ -178,9 +178,15 @@ fn main() -> Result<()> {
     println!("serving-density speedup (B=8 vs B=1): {speedup:.2}×");
 
     if json_mode {
+        // machine class stamp: scripts/check_bench.sh only enforces the
+        // speedup floor when the recorded class matches the checking host
+        // (`$(uname -m)-$(nproc)cpu`), so a laptop artifact never fails CI
+        let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+        let machine = format!("{}-{ncpu}cpu", std::env::consts::ARCH);
         let json = obj(vec![
             ("bench", s("batching_bench")),
             ("generator", s("cargo bench --bench batching_bench -- --json")),
+            ("machine", s(&machine)),
             ("threads", num(serdab::runtime::scratch::env_threads() as f64)),
             ("frames", num(FRAMES as f64)),
             ("parity", Json::Bool(parity)),

@@ -25,6 +25,6 @@ pub use monitor::{Monitor, MonitorVerdict};
 pub use resources::{RegisteredDevice, ResourceManager};
 pub use server::{
     BuiltPipeline, DeployBuilder, SegmentReport, Server, ServerConfig, ServerEvent, ServerReport,
-    ServerStatus, StageBuilder, StreamHandle, StreamId, StreamReport, StreamSpec, SwapEvent,
-    SyntheticBuilder,
+    ServerStatus, SessionPolicy, StageBuilder, StreamHandle, StreamId, StreamReport, StreamSpec,
+    SwapEvent, SyntheticBuilder,
 };

@@ -18,11 +18,25 @@
 //!
 //! * **Streams join and leave at runtime.** [`Server::attach`] registers a
 //!   camera ([`StreamSpec`]: fixed-rate or Poisson arrivals via
-//!   [`Arrivals`], a payload generator, an optional frame budget) and
-//!   spawns its pacing thread; frames are multiplexed over the engine's
-//!   `FrameIn.stream` tag through one bounded mux channel, so offered
-//!   load beyond capacity back-pressures each camera individually.
-//!   [`Server::detach`] stops one stream without disturbing the rest.
+//!   [`Arrivals`], a payload generator, an optional frame budget) with the
+//!   shared **pacer** — one thread scheduling every paced stream off a
+//!   deadline heap, not one thread per camera. Frames are multiplexed
+//!   over the engine's `FrameIn.stream` tag through one bounded mux
+//!   channel; a full mux defers only the stream that hit it (the pacer
+//!   re-arms that stream's deadline), so offered load beyond capacity
+//!   still back-pressures each camera individually. [`Server::detach`]
+//!   stops one stream without disturbing the rest.
+//! * **Socket sessions ride the reactor.** [`Server::serve_sockets`]
+//!   attaches a TCP listener to the single-threaded session reactor
+//!   ([`crate::net::reactor`]): thousands of camera sockets multiplex
+//!   over one poller thread with admission control, per-session
+//!   in-flight caps, frame-rate limiting, and evidence-based eviction
+//!   ([`SessionPolicy`]). An ingest thread maps reactor sessions onto
+//!   stream ids and feeds the same mux; the sink completes each frame
+//!   back to the reactor, which acks the camera. When a configured
+//!   uplink's circuit breaker trips, the server emits
+//!   [`ServerEvent::Degraded`] and (policy-gated) requests a
+//!   re-partition through the hot-swap path instead of wedging.
 //! * **One feeder owns the intake.** Camera-side sealing is strictly
 //!   sequential (the channel authenticates record sequence numbers), so a
 //!   single feeder thread seals and injects in mux order. During a
@@ -49,9 +63,11 @@
 //! slowdowns — the artifact-free configuration the DES cross-validates,
 //! and the chaos harness `tests/server_session.rs` drives end-to-end.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -62,6 +78,10 @@ use super::monitor::{Monitor, MonitorVerdict};
 use super::resources::ResourceManager;
 use crate::crypto::channel::Channel;
 use crate::model::Manifest;
+use crate::net::reactor::{
+    self, ConnId, ReactorConfig, ReactorEvent, ReactorHandle, ReactorStats, UplinkPolicy,
+};
+use crate::net::resilience::CircuitState;
 use crate::placement::cost::{recalibrate_speeds, CostModel, PathCost};
 use crate::placement::strategies::{plan, Strategy};
 use crate::placement::Placement;
@@ -248,6 +268,52 @@ impl Default for ServerConfig {
     }
 }
 
+/// Knobs of the socket session plane ([`Server::serve_sockets`]): the
+/// reactor's admission/backpressure limits plus the server-side
+/// resilience policy for inter-site uplinks.
+#[derive(Debug, Clone)]
+pub struct SessionPolicy {
+    /// Admission control: sessions beyond this are rejected at accept.
+    pub max_sessions: usize,
+    /// Per-session in-flight frame cap; reads pause (TCP backpressure)
+    /// until the sink completes earlier frames.
+    pub max_inflight: u32,
+    /// Per-session token-bucket rate limit, frames/sec (0 = unlimited).
+    pub rate_limit_fps: f64,
+    /// Evidence-based eviction deadline, seconds: a session that shows
+    /// a stall symptom (half-received frame, unread ack backlog) for
+    /// this long is evicted. 0 disables idle eviction.
+    pub idle_timeout_secs: f64,
+    /// Ack every completed frame back to the camera (an empty `Data`
+    /// frame). Cameras use acks for end-to-end loss accounting.
+    pub ack_frames: bool,
+    /// Inter-site uplink addresses the reactor maintains resilient
+    /// connections to (reconnect with backoff + jitter, circuit
+    /// breaking). Empty = no uplinks.
+    pub uplinks: Vec<String>,
+    /// Backoff/breaker policy for every uplink.
+    pub uplink_policy: UplinkPolicy,
+    /// When an uplink's circuit breaker trips, degrade gracefully by
+    /// requesting a re-partition through the hot-swap path (the §V loop
+    /// treats a dead hop like catastrophic drift).
+    pub repartition_on_trip: bool,
+}
+
+impl Default for SessionPolicy {
+    fn default() -> Self {
+        SessionPolicy {
+            max_sessions: 1024,
+            max_inflight: 8,
+            rate_limit_fps: 0.0,
+            idle_timeout_secs: 10.0,
+            ack_frames: true,
+            uplinks: Vec::new(),
+            uplink_policy: UplinkPolicy::default(),
+            repartition_on_trip: true,
+        }
+    }
+}
+
 /// One camera stream to attach: an arrival process plus a payload
 /// generator (frame index → payload bytes; the feeder seals them when the
 /// pipeline speaks sealed records).
@@ -380,6 +446,37 @@ pub enum ServerEvent {
         /// Display form of the failure.
         error: String,
     },
+    /// A socket session ended (socket plane only; an accounting
+    /// `Detached` is emitted alongside). Carries the reactor's close
+    /// verdict so harnesses can assert every session either completed
+    /// cleanly or was evicted with a reason.
+    SessionClosed {
+        /// Stream id the session was mapped to.
+        stream: StreamId,
+        /// Close reason (display form of `net::reactor::CloseReason`).
+        reason: String,
+        /// `true` for the clean EOS detach handshake.
+        clean: bool,
+        /// Frames the session delivered into the server.
+        fed: u64,
+        /// Completion acks written back to the camera.
+        acked: u64,
+    },
+    /// A connection was refused at the admission cap
+    /// ([`SessionPolicy::max_sessions`]).
+    SessionRejected {
+        /// Peer address of the refused connection.
+        peer: String,
+    },
+    /// Production resilience tripped (an uplink circuit breaker opened):
+    /// the server is degraded and — policy permitting — will request a
+    /// re-partition instead of wedging on the dead hop.
+    Degraded {
+        /// Server-relative time (seconds).
+        at_secs: f64,
+        /// What degraded (display form).
+        reason: String,
+    },
 }
 
 /// Per-stream serving totals.
@@ -440,9 +537,12 @@ pub struct ServerReport {
     pub frames_dropped: u64,
     /// Frames completed across all generations.
     pub frames: u64,
+    /// Socket-plane counters (`None` when [`Server::serve_sockets`] was
+    /// never called).
+    pub session_stats: Option<ReactorStats>,
 }
 
-/// A frame queued between a camera thread and the feeder.
+/// A frame queued between a camera stream and the feeder.
 struct MuxFrame {
     stream: StreamId,
     payload: Vec<u8>,
@@ -482,12 +582,53 @@ struct StreamAcct {
     latency_sum: f64,
 }
 
-/// An attached stream's control block.
+/// An attached stream's control block. The pacing state itself lives in
+/// the shared pacer thread; this is the server-side view.
 struct StreamEntry {
     label: String,
     stop: Arc<AtomicBool>,
     fed: Arc<AtomicU64>,
-    thread: Option<JoinHandle<()>>,
+}
+
+/// A paced stream's state inside the shared pacer thread.
+struct PacedStream {
+    id: StreamId,
+    arrivals: Arrivals,
+    frames: Option<u64>,
+    payload: Box<dyn FnMut(u64) -> Vec<u8> + Send>,
+    stop: Arc<AtomicBool>,
+    fed: Arc<AtomicU64>,
+    /// Frames sent so far (next payload index).
+    k: u64,
+    /// A generated frame deferred by a full mux; retried before
+    /// generating the next one, so nothing is ever dropped by pacing.
+    pending: Option<Vec<u8>>,
+}
+
+/// Control messages into the shared pacer thread.
+enum PacerCmd {
+    Add(Box<PacedStream>),
+    Remove {
+        id: StreamId,
+        /// Acked once the pacer forgot the stream: after the ack, no
+        /// further frames of this stream enter the mux.
+        ack: Sender<()>,
+    },
+}
+
+/// Sink-side egress back to the socket plane: complete each attributed
+/// frame to the reactor so it acks the camera.
+struct Egress {
+    reactor: ReactorHandle,
+    conn_of: Arc<Mutex<HashMap<StreamId, ConnId>>>,
+}
+
+/// The running socket session plane.
+struct SocketPlane {
+    reactor: ReactorHandle,
+    reactor_join: JoinHandle<ReactorStats>,
+    ingest: JoinHandle<()>,
+    addr: SocketAddr,
 }
 
 struct ServerInner {
@@ -511,6 +652,15 @@ struct ServerInner {
     frames_dropped: AtomicU64,
     sink_errors: AtomicU64,
     events: Mutex<Sender<ServerEvent>>,
+    /// Next stream id (shared: `attach` and the socket ingest thread
+    /// both allocate from it).
+    next_stream: AtomicU32,
+    /// A degradation-triggered re-partition request (reason), polled by
+    /// the control loop each window.
+    repartition_request: Mutex<Option<String>>,
+    /// Present while the socket plane serves: lets the sink complete
+    /// frames back to the reactor.
+    egress: Mutex<Option<Egress>>,
 }
 
 impl ServerInner {
@@ -528,10 +678,12 @@ pub struct Server {
     inner: Arc<ServerInner>,
     /// `None` once shutdown begins (closing the mux retires the feeder).
     mux_tx: Option<SyncSender<MuxFrame>>,
+    pacer_tx: Option<Sender<PacerCmd>>,
+    pacer: Option<JoinHandle<()>>,
     feeder: Option<JoinHandle<()>>,
     control: Option<JoinHandle<()>>,
     events_rx: Option<Receiver<ServerEvent>>,
-    next_stream: StreamId,
+    socket: Option<SocketPlane>,
 }
 
 impl Server {
@@ -576,6 +728,9 @@ impl Server {
             frames_dropped: AtomicU64::new(0),
             sink_errors: AtomicU64::new(0),
             events: Mutex::new(ev_tx),
+            next_stream: AtomicU32::new(0),
+            repartition_request: Mutex::new(None),
+            egress: Mutex::new(None),
         });
 
         let sink = spawn_sink(inner.clone(), rp.clone());
@@ -597,14 +752,24 @@ impl Server {
                 .spawn(move || control_loop(inner))
                 .expect("spawn server control")
         };
+        let (pacer_tx, pacer_rx) = channel::<PacerCmd>();
+        let pacer = {
+            let mux = mux_tx.clone();
+            std::thread::Builder::new()
+                .name("server-pacer".into())
+                .spawn(move || pacer_loop(mux, pacer_rx))
+                .expect("spawn server pacer")
+        };
 
         Ok(Server {
             inner,
             mux_tx: Some(mux_tx),
+            pacer_tx: Some(pacer_tx),
+            pacer: Some(pacer),
             feeder: Some(feeder),
             control: Some(control),
             events_rx: Some(ev_rx),
-            next_stream: 0,
+            socket: None,
         })
     }
 
@@ -614,56 +779,32 @@ impl Server {
         self.events_rx.take()
     }
 
-    /// Attach a camera stream: spawn its pacing thread and start feeding.
+    /// Attach a camera stream: register it with the shared pacer and
+    /// start feeding.
     pub fn attach(&mut self, spec: StreamSpec) -> Result<StreamHandle> {
         anyhow::ensure!(
             !self.inner.shutting_down.load(Ordering::SeqCst),
             "server is shutting down"
         );
-        let id = self.next_stream;
-        self.next_stream += 1;
-        let StreamSpec { label, interval_secs, poisson, seed, frames, mut payload } = spec;
+        let id = self.inner.next_stream.fetch_add(1, Ordering::SeqCst);
+        let StreamSpec { label, interval_secs, poisson, seed, frames, payload } = spec;
         let stop = Arc::new(AtomicBool::new(false));
         let fed = Arc::new(AtomicU64::new(0));
-        let mux = self
-            .mux_tx
+        let paced = Box::new(PacedStream {
+            id,
+            arrivals: Arrivals::new(interval_secs, poisson, seed),
+            frames,
+            payload,
+            stop: stop.clone(),
+            fed: fed.clone(),
+            k: 0,
+            pending: None,
+        });
+        self.pacer_tx
             .as_ref()
             .ok_or_else(|| anyhow!("server is shutting down"))?
-            .clone();
-        let mut arrivals = Arrivals::new(interval_secs, poisson, seed);
-        let thread = {
-            let stop = stop.clone();
-            let fed = fed.clone();
-            std::thread::Builder::new()
-                .name(format!("stream-{id}"))
-                .spawn(move || {
-                    let mut k = 0u64;
-                    loop {
-                        if stop.load(Ordering::SeqCst) {
-                            break;
-                        }
-                        if let Some(n) = frames {
-                            if k >= n {
-                                break;
-                            }
-                        }
-                        let gap = arrivals.next_gap();
-                        if gap > 0.0 {
-                            sleep_interruptible(Duration::from_secs_f64(gap), &stop);
-                            if stop.load(Ordering::SeqCst) {
-                                break;
-                            }
-                        }
-                        let bytes = payload(k);
-                        if mux.send(MuxFrame { stream: id, payload: bytes }).is_err() {
-                            break; // server gone
-                        }
-                        fed.fetch_add(1, Ordering::SeqCst);
-                        k += 1;
-                    }
-                })
-                .expect("spawn stream thread")
-        };
+            .send(PacerCmd::Add(paced))
+            .map_err(|_| anyhow!("server pacer thread is gone"))?;
         self.inner.acct.lock().unwrap().insert(
             id,
             StreamAcct { label: label.clone(), ..Default::default() },
@@ -671,16 +812,17 @@ impl Server {
         self.inner.attach_order.lock().unwrap().push(id);
         self.inner.streams.lock().unwrap().insert(
             id,
-            StreamEntry { label: label.clone(), stop, fed: fed.clone(), thread: Some(thread) },
+            StreamEntry { label: label.clone(), stop, fed: fed.clone() },
         );
         self.inner.emit(ServerEvent::Attached { stream: id, label: label.clone() });
         Ok(StreamHandle { id, label, fed })
     }
 
-    /// Detach a stream: stop its pacing thread and freeze its counters.
-    /// Frames it already fed keep flowing to completion.
+    /// Detach a stream: deregister it from the pacer (synchronously — no
+    /// frame of it enters the mux after this returns) and freeze its
+    /// counters. Frames it already fed keep flowing to completion.
     pub fn detach(&mut self, id: StreamId) -> Result<StreamReport> {
-        let mut entry = self
+        let entry = self
             .inner
             .streams
             .lock()
@@ -688,8 +830,13 @@ impl Server {
             .remove(&id)
             .ok_or_else(|| anyhow!("no attached stream {id}"))?;
         entry.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = entry.thread.take() {
-            let _ = t.join();
+        if let Some(tx) = &self.pacer_tx {
+            let (ack_tx, ack_rx) = channel();
+            if tx.send(PacerCmd::Remove { id, ack: ack_tx }).is_ok() {
+                // the pacer never blocks (try_send intake), so the ack is
+                // prompt; the timeout only guards a panicked pacer
+                let _ = ack_rx.recv_timeout(Duration::from_secs(5));
+            }
         }
         let fed = entry.fed.load(Ordering::SeqCst);
         let report = {
@@ -735,6 +882,75 @@ impl Server {
         self.inner.gen.lock().unwrap().as_ref().map(|g| g.placement.clone())
     }
 
+    /// Attach a TCP listener to the session reactor: every camera socket
+    /// accepted on it becomes a server stream, multiplexed — alongside
+    /// thousands of others — over **one** reactor thread with the
+    /// admission, rate-limit, and eviction rules of `policy`. Returns
+    /// the bound address (useful with port 0).
+    ///
+    /// Wire protocol per session: the camera writes `Data` frames
+    /// (payload = frame bytes); the server acks each completed frame
+    /// with an empty `Data` frame (when [`SessionPolicy::ack_frames`]);
+    /// the camera sends `Eos` to detach cleanly and the server answers
+    /// `Eos` once everything in flight has completed.
+    pub fn serve_sockets(
+        &mut self,
+        listener: TcpListener,
+        policy: SessionPolicy,
+    ) -> Result<SocketAddr> {
+        anyhow::ensure!(self.socket.is_none(), "socket plane is already serving");
+        anyhow::ensure!(
+            !self.inner.shutting_down.load(Ordering::SeqCst),
+            "server is shutting down"
+        );
+        let addr = listener.local_addr()?;
+        let cfg = ReactorConfig {
+            max_sessions: policy.max_sessions,
+            max_inflight: policy.max_inflight,
+            rate_limit_fps: policy.rate_limit_fps,
+            idle_timeout: Duration::from_secs_f64(policy.idle_timeout_secs.max(0.0)),
+            ack_frames: policy.ack_frames,
+        };
+        let (handle, ev_rx, reactor_join) = reactor::spawn(listener, cfg)?;
+        for (i, uplink) in policy.uplinks.iter().enumerate() {
+            let mut up = policy.uplink_policy.clone();
+            up.seed = up.seed.wrapping_add(i as u64);
+            handle.add_uplink(i, uplink.clone(), up);
+        }
+        let conn_of = Arc::new(Mutex::new(HashMap::new()));
+        *self.inner.egress.lock().unwrap() =
+            Some(Egress { reactor: handle.clone(), conn_of: conn_of.clone() });
+        let mux = self
+            .mux_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server is shutting down"))?
+            .clone();
+        let ingest = {
+            let inner = self.inner.clone();
+            let repartition_on_trip = policy.repartition_on_trip;
+            std::thread::Builder::new()
+                .name("server-ingest".into())
+                .spawn(move || ingest_loop(inner, ev_rx, mux, conn_of, repartition_on_trip))
+                .expect("spawn server ingest")
+        };
+        self.socket = Some(SocketPlane { reactor: handle, reactor_join, ingest, addr });
+        Ok(addr)
+    }
+
+    /// Address the socket plane listens on (`None` before
+    /// [`serve_sockets`](Server::serve_sockets)).
+    pub fn session_addr(&self) -> Option<SocketAddr> {
+        self.socket.as_ref().map(|s| s.addr)
+    }
+
+    /// Request a re-partition out of band (graceful degradation: some
+    /// external signal — a tripped breaker, an operator — decided the
+    /// current placement is no longer viable). The control thread picks
+    /// it up on its next window tick and runs the ordinary hot-swap.
+    pub fn request_repartition(&self, reason: impl Into<String>) {
+        *self.inner.repartition_request.lock().unwrap() = Some(reason.into());
+    }
+
     fn stream_reports(&self) -> Vec<StreamReport> {
         let acct = self.inner.acct.lock().unwrap();
         let streams = self.inner.streams.lock().unwrap();
@@ -760,24 +976,49 @@ impl Server {
     /// report.
     pub fn shutdown(mut self) -> Result<ServerReport> {
         self.inner.shutting_down.store(true, Ordering::SeqCst);
-        // 1. stop the cameras (joins their threads; queued frames remain)
+        // 1. retire the socket plane first: the reactor flushes + closes
+        //    every session, its event channel drains, the ingest thread
+        //    exits (the feeder is still alive to absorb queued frames)
+        let session_stats = match self.socket.take() {
+            Some(sp) => {
+                sp.reactor.shutdown();
+                let stats = sp
+                    .reactor_join
+                    .join()
+                    .map_err(|_| anyhow!("session reactor thread panicked"))?;
+                sp.ingest
+                    .join()
+                    .map_err(|_| anyhow!("server ingest thread panicked"))?;
+                *self.inner.egress.lock().unwrap() = None;
+                Some(stats)
+            }
+            None => None,
+        };
+        // 2. stop the paced cameras (queued frames remain in the mux)
         let ids: Vec<StreamId> =
             self.inner.streams.lock().unwrap().keys().copied().collect();
         for id in ids {
             let _ = self.detach(id);
         }
-        // 2. close the mux: the feeder drains what is queued, then exits
+        // 3. retire the pacer (detach must still be able to ack above,
+        //    so this comes after; it holds a mux clone, so before the
+        //    feeder can see the channel close)
+        drop(self.pacer_tx.take());
+        if let Some(p) = self.pacer.take() {
+            p.join().map_err(|_| anyhow!("server pacer panicked"))?;
+        }
+        // 4. close the mux: the feeder drains what is queued, then exits
         drop(self.mux_tx.take());
         if let Some(f) = self.feeder.take() {
             f.join().map_err(|_| anyhow!("server feeder panicked"))?;
         }
-        // 3. join the control thread: it exits via the shutting_down flag
+        // 5. join the control thread: it exits via the shutting_down flag
         //    (checked in its interruptible sleep) after finishing any
         //    in-flight swap
         if let Some(c) = self.control.take() {
             c.join().map_err(|_| anyhow!("server control thread panicked"))?;
         }
-        // 4. drain the final generation
+        // 6. drain the final generation
         drop(self.inner.feed_gate.lock().unwrap().take());
         let final_gen = self.inner.gen.lock().unwrap().take();
         if let Some(g) = final_gen {
@@ -785,7 +1026,7 @@ impl Server {
             self.inner.frames_past.fetch_add(report.report.frames, Ordering::SeqCst);
             self.inner.segments.lock().unwrap().push(report);
         }
-        // 5. assemble
+        // 7. assemble
         let streams = self.stream_reports();
         let segments = self.inner.segments.lock().unwrap().clone();
         let frames = segments.iter().map(|s| s.report.frames).sum();
@@ -796,6 +1037,7 @@ impl Server {
             sink_errors: self.inner.sink_errors.load(Ordering::SeqCst),
             frames_dropped: self.inner.frames_dropped.load(Ordering::SeqCst),
             frames,
+            session_stats,
         })
     }
 }
@@ -887,6 +1129,209 @@ fn feeder_loop(inner: Arc<ServerInner>, mux_rx: Receiver<MuxFrame>) {
     }
 }
 
+/// The shared pacer: ONE thread schedules every paced stream off a
+/// deadline min-heap (replacing the old thread-per-stream intake).
+/// Intake into the mux is `try_send`: a full mux defers only the stream
+/// that hit it (its generated frame is parked in `pending` and the
+/// deadline re-armed 1 ms out), so per-stream backpressure survives the
+/// consolidation — other streams keep their schedules.
+///
+/// Slots are never reused: a removed stream's heap entries go stale and
+/// are skipped, which keeps removal O(1) without heap surgery.
+fn pacer_loop(mux: SyncSender<MuxFrame>, cmds: Receiver<PacerCmd>) {
+    let mut slots: Vec<Option<PacedStream>> = Vec::new();
+    let mut index: HashMap<StreamId, usize> = HashMap::new();
+    let mut heap: BinaryHeap<Reverse<(Instant, usize)>> = BinaryHeap::new();
+    loop {
+        // earliest live deadline (discarding stale entries lazily)
+        let next_due = loop {
+            match heap.peek() {
+                None => break None,
+                Some(&Reverse((at, idx))) => {
+                    if slots[idx].is_none() {
+                        heap.pop();
+                        continue;
+                    }
+                    break Some(at);
+                }
+            }
+        };
+        // wait for a command until the next deadline (or park when idle)
+        let wait = match next_due {
+            Some(at) => at.saturating_duration_since(Instant::now()),
+            None => Duration::from_millis(250),
+        };
+        if !wait.is_zero() {
+            match cmds.recv_timeout(wait) {
+                Ok(cmd) => pacer_handle(cmd, &mut slots, &mut index, &mut heap),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        loop {
+            match cmds.try_recv() {
+                Ok(cmd) => pacer_handle(cmd, &mut slots, &mut index, &mut heap),
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+            }
+        }
+        // dispatch everything due
+        let now = Instant::now();
+        loop {
+            let (at, idx) = match heap.peek() {
+                Some(&Reverse(entry)) => entry,
+                None => break,
+            };
+            if at > now {
+                break;
+            }
+            heap.pop();
+            let s = match slots[idx].as_mut() {
+                Some(s) => s,
+                None => continue, // stale entry of a removed stream
+            };
+            let sid = s.id;
+            let mut done = s.stop.load(Ordering::SeqCst)
+                || s.frames.is_some_and(|n| s.k >= n);
+            if !done {
+                let bytes = match s.pending.take() {
+                    Some(b) => b,
+                    None => (s.payload)(s.k),
+                };
+                match mux.try_send(MuxFrame { stream: sid, payload: bytes }) {
+                    Ok(()) => {
+                        s.fed.fetch_add(1, Ordering::SeqCst);
+                        s.k += 1;
+                        if s.frames.is_some_and(|n| s.k >= n) {
+                            done = true;
+                        } else {
+                            let gap = s.arrivals.next_gap().max(0.0);
+                            let due = Instant::now() + Duration::from_secs_f64(gap);
+                            heap.push(Reverse((due, idx)));
+                        }
+                    }
+                    Err(TrySendError::Full(mf)) => {
+                        // only this stream defers; retry shortly
+                        s.pending = Some(mf.payload);
+                        heap.push(Reverse((now + Duration::from_millis(1), idx)));
+                    }
+                    Err(TrySendError::Disconnected(_)) => done = true,
+                }
+            }
+            if done {
+                slots[idx] = None;
+                index.remove(&sid);
+            }
+        }
+    }
+}
+
+/// Apply one pacer control message.
+fn pacer_handle(
+    cmd: PacerCmd,
+    slots: &mut Vec<Option<PacedStream>>,
+    index: &mut HashMap<StreamId, usize>,
+    heap: &mut BinaryHeap<Reverse<(Instant, usize)>>,
+) {
+    match cmd {
+        PacerCmd::Add(mut s) => {
+            let idx = slots.len();
+            let gap = s.arrivals.next_gap().max(0.0);
+            index.insert(s.id, idx);
+            heap.push(Reverse((Instant::now() + Duration::from_secs_f64(gap), idx)));
+            slots.push(Some(*s));
+        }
+        PacerCmd::Remove { id, ack } => {
+            if let Some(idx) = index.remove(&id) {
+                slots[idx] = None;
+            }
+            // ack after the state is gone: post-ack, no frame of this
+            // stream can enter the mux
+            let _ = ack.send(());
+        }
+    }
+}
+
+/// The socket-plane ingest: maps reactor sessions onto server streams
+/// and pushes their frames into the same mux the paced streams use. The
+/// blocking `mux.send` here IS the backpressure chain: a full mux stalls
+/// ingest, the reactor's in-flight caps then pause the session reads,
+/// and TCP pushes back to the cameras — frames are delayed, not dropped.
+fn ingest_loop(
+    inner: Arc<ServerInner>,
+    events: Receiver<ReactorEvent>,
+    mux: SyncSender<MuxFrame>,
+    conn_of: Arc<Mutex<HashMap<StreamId, ConnId>>>,
+    repartition_on_trip: bool,
+) {
+    let mut stream_of: HashMap<ConnId, StreamId> = HashMap::new();
+    while let Ok(ev) = events.recv() {
+        match ev {
+            ReactorEvent::Opened { conn, peer } => {
+                let id = inner.next_stream.fetch_add(1, Ordering::SeqCst);
+                let label = format!("sess-{id}@{peer}");
+                stream_of.insert(conn, id);
+                conn_of.lock().unwrap().insert(id, conn);
+                inner
+                    .acct
+                    .lock()
+                    .unwrap()
+                    .insert(id, StreamAcct { label: label.clone(), ..Default::default() });
+                inner.attach_order.lock().unwrap().push(id);
+                inner.emit(ServerEvent::Attached { stream: id, label });
+            }
+            ReactorEvent::Frame { conn, payload } => {
+                let id = match stream_of.get(&conn) {
+                    Some(&id) => id,
+                    None => continue,
+                };
+                if mux.send(MuxFrame { stream: id, payload }).is_err() {
+                    return; // server tearing down
+                }
+                if let Some(a) = inner.acct.lock().unwrap().get_mut(&id) {
+                    a.fed += 1;
+                }
+            }
+            ReactorEvent::Closed { conn, reason, frames_in, acked, clean } => {
+                let id = match stream_of.remove(&conn) {
+                    Some(id) => id,
+                    None => continue,
+                };
+                conn_of.lock().unwrap().remove(&id);
+                let (label, completed) = {
+                    let mut acct = inner.acct.lock().unwrap();
+                    let a = acct.entry(id).or_default();
+                    a.fed = frames_in;
+                    (a.label.clone(), a.completed)
+                };
+                inner.emit(ServerEvent::SessionClosed {
+                    stream: id,
+                    reason: format!("{reason:?}"),
+                    clean,
+                    fed: frames_in,
+                    acked,
+                });
+                inner.emit(ServerEvent::Detached { stream: id, label, fed: frames_in, completed });
+            }
+            ReactorEvent::Rejected { peer } => {
+                inner.emit(ServerEvent::SessionRejected { peer: peer.to_string() });
+            }
+            ReactorEvent::UplinkState { uplink, state, detail } => {
+                if state == CircuitState::Open {
+                    let reason = format!("uplink {uplink} circuit opened: {detail}");
+                    inner.emit(ServerEvent::Degraded {
+                        at_secs: inner.t0.elapsed().as_secs_f64(),
+                        reason: reason.clone(),
+                    });
+                    if repartition_on_trip {
+                        *inner.repartition_request.lock().unwrap() = Some(reason);
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// The per-generation sink: attributes completions to streams.
 fn spawn_sink(inner: Arc<ServerInner>, handle: Arc<RunningPipeline>) -> JoinHandle<()> {
     std::thread::Builder::new()
@@ -895,10 +1340,20 @@ fn spawn_sink(inner: Arc<ServerInner>, handle: Arc<RunningPipeline>) -> JoinHand
             while let Some(out) = handle.next_output() {
                 match out {
                     Ok(o) => {
-                        let mut acct = inner.acct.lock().unwrap();
-                        let a = acct.entry(o.stream).or_default();
-                        a.completed += 1;
-                        a.latency_sum += o.latency_secs;
+                        {
+                            let mut acct = inner.acct.lock().unwrap();
+                            let a = acct.entry(o.stream).or_default();
+                            a.completed += 1;
+                            a.latency_sum += o.latency_secs;
+                        }
+                        // socket stream: complete the frame back to the
+                        // reactor so it acks the camera (a session that
+                        // already closed simply has no conn mapping left)
+                        if let Some(eg) = inner.egress.lock().unwrap().as_ref() {
+                            if let Some(conn) = eg.conn_of.lock().unwrap().get(&o.stream) {
+                                eg.reactor.complete(*conn);
+                            }
+                        }
                     }
                     Err(_) => {
                         inner.sink_errors.fetch_add(1, Ordering::SeqCst);
@@ -938,6 +1393,27 @@ fn control_loop(inner: Arc<ServerInner>) {
         sleep_interruptible(window, &inner.shutting_down);
         if inner.shutting_down.load(Ordering::SeqCst) {
             return;
+        }
+        // graceful degradation: an out-of-band request (tripped uplink
+        // breaker, operator) runs the ordinary hot-swap path — stage 0
+        // with zero drift numbers, since no stage profile triggered it
+        let degraded = inner.repartition_request.lock().unwrap().take();
+        if degraded.is_some() && inner.gen.lock().unwrap().is_some() {
+            inner.emit(ServerEvent::SwapStarted {
+                at_secs: inner.t0.elapsed().as_secs_f64(),
+                stage: 0,
+                predicted: 0.0,
+                observed: 0.0,
+            });
+            match hot_swap(&inner, 0, 0.0, 0.0) {
+                Ok(ev) => inner.emit(ServerEvent::SwapCompleted(ev)),
+                Err(e) => {
+                    inner.broken.store(true, Ordering::SeqCst);
+                    inner.emit(ServerEvent::SwapFailed { error: format!("{e:#}") });
+                }
+            }
+            prev = None;
+            continue;
         }
         let handle = match inner.gen.lock().unwrap().as_ref() {
             Some(g) => g.handle.clone(),

@@ -16,7 +16,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use serdab::coordinator::{
-    DeployBuilder, Server, ServerConfig, ServerEvent, StageBuilder, StreamSpec, SyntheticBuilder,
+    DeployBuilder, Server, ServerConfig, ServerEvent, SessionPolicy, StageBuilder, StreamSpec,
+    SyntheticBuilder,
 };
 use serdab::figures::Table;
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
@@ -195,6 +196,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("wan-mbps", "", "override inter-edge bandwidth (default: per-link topology values)")
         .opt("batch", "1", "max frames coalesced per stage invocation (1 = no micro-batching)")
         .opt("batch-wait-us", "200", "micro-batch gather deadline after the first frame, µs")
+        .opt("listen", "", "also accept camera sockets on this address (e.g. 127.0.0.1:0)")
+        .opt("max-sessions", "1024", "socket admission cap (with --listen)")
+        .opt("max-inflight", "8", "per-session in-flight frame cap (with --listen)")
+        .opt("rate-limit", "0", "per-session rate limit, fps (0 = unlimited; with --listen)")
+        .opt("idle-timeout", "10", "evict stalled sessions after this many seconds (with --listen)")
         .opt("seed", "7", "video seed");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     if !a.get("backend").is_empty() {
@@ -211,9 +217,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     let model = a.get("model").to_string();
     let streams: u32 = a.get_usize("streams").map_err(|e| anyhow::anyhow!(e))? as u32;
-    anyhow::ensure!(streams >= 1, "--streams must be at least 1");
+    let listen = a.get("listen").to_string();
+    anyhow::ensure!(
+        streams >= 1 || !listen.is_empty(),
+        "--streams must be at least 1 (or pass --listen to serve sockets only)"
+    );
     let frames_per_stream: u64 = a.get_u64("frames").map_err(|e| anyhow::anyhow!(e))?;
     let duration = opt_f64(&a, "duration")?;
+    anyhow::ensure!(
+        listen.is_empty() || streams >= 1 || duration.is_some(),
+        "--listen without paced streams needs --duration (no frame budget to wait for)"
+    );
     let rate = opt_f64(&a, "rate")?;
     let window = opt_f64(&a, "window")?.unwrap_or(0.5);
     let seed = a.get_u64("seed").map_err(|e| anyhow::anyhow!(e))?;
@@ -280,14 +294,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut server = Server::launch(profile, topo, builder, cfg)?;
     let events = server.events().expect("fresh server has its event feed");
     println!("placement: {}", server.status().placement);
-    println!(
-        "serving: {streams} stream(s), {:.1} fps each{}",
-        1.0 / interval_secs,
-        match duration {
-            Some(d) => format!(", for {d:.1}s"),
-            None => format!(", {frames_per_stream} frames each"),
-        }
-    );
+    if !listen.is_empty() {
+        let policy = SessionPolicy {
+            max_sessions: a.get_usize("max-sessions").map_err(|e| anyhow::anyhow!(e))?,
+            max_inflight: a.get_usize("max-inflight").map_err(|e| anyhow::anyhow!(e))? as u32,
+            rate_limit_fps: opt_f64(&a, "rate-limit")?.unwrap_or(0.0),
+            idle_timeout_secs: opt_f64(&a, "idle-timeout")?.unwrap_or(10.0),
+            ..SessionPolicy::default()
+        };
+        let listener = std::net::TcpListener::bind(&listen)
+            .map_err(|e| anyhow::anyhow!("binding {listen}: {e}"))?;
+        let bound = server.serve_sockets(listener, policy)?;
+        println!("listening: {bound} (camera sockets, length-prefixed frames)");
+    }
+    if streams >= 1 {
+        println!(
+            "serving: {streams} stream(s), {:.1} fps each{}",
+            1.0 / interval_secs,
+            match duration {
+                Some(d) => format!(", for {d:.1}s"),
+                None => format!(", {frames_per_stream} frames each"),
+            }
+        );
+    }
 
     for i in 0..streams {
         let budget = if duration.is_some() { None } else { Some(frames_per_stream) };
@@ -380,6 +409,16 @@ fn print_server_event(ev: &ServerEvent) {
             ev.at_secs, ev.from, ev.to, ev.predicted_throughput_fps, ev.drained_frames
         ),
         ServerEvent::SwapFailed { error } => println!("swap FAILED: {error}"),
+        ServerEvent::SessionClosed { stream, reason, clean, fed, acked } => {
+            let verdict = if *clean { "clean" } else { "evicted" };
+            println!("~ session {stream}: {verdict} ({reason}), fed {fed}, acked {acked}")
+        }
+        ServerEvent::SessionRejected { peer } => {
+            println!("! rejected {peer} (admission cap)")
+        }
+        ServerEvent::Degraded { at_secs, reason } => {
+            println!("t={at_secs:7.2}s  DEGRADED: {reason}")
+        }
     }
 }
 

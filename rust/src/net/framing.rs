@@ -136,6 +136,113 @@ impl<R: Read> FrameReader<R> {
     }
 }
 
+/// Incremental, push-based frame decoder for readiness-driven I/O
+/// ([`crate::net::reactor`]): a non-blocking socket delivers bytes in
+/// arbitrary fragments, [`FrameDecoder::feed`] appends them to a
+/// reassembly buffer, and [`FrameDecoder::next_into`] pops complete
+/// frames as they materialize — byte-identical to what
+/// [`read_frame_into`] would return over the concatenated stream.
+///
+/// The header is validated the moment its 5 bytes exist: an oversize
+/// length or unknown type is rejected *before* any payload is buffered,
+/// so a corrupt peer cannot balloon the reassembly buffer. A protocol
+/// error poisons the decoder permanently — framing has lost sync and no
+/// later bytes can be trusted — and every subsequent call re-reports it.
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf`; compacted lazily so steady-state
+    /// decoding is one `extend_from_slice` + one `drain` per few frames.
+    pos: usize,
+    poisoned: bool,
+}
+
+impl FrameDecoder {
+    /// Empty decoder.
+    pub fn new() -> Self {
+        FrameDecoder { buf: Vec::new(), pos: 0, poisoned: false }
+    }
+
+    /// Append freshly-read bytes to the reassembly buffer. A poisoned
+    /// decoder drops input on the floor (the connection is already dead
+    /// to the protocol; buffering more would only grow memory).
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if !self.poisoned {
+            self.buf.extend_from_slice(bytes);
+        }
+    }
+
+    /// Bytes buffered past the last completed frame. Non-zero after the
+    /// caller has drained every decodable frame means the peer stopped
+    /// mid-frame — the reactor's slow-loris eviction keys off this.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when undecodable bytes are pending (a partial frame), or the
+    /// decoder is poisoned.
+    pub fn has_partial(&self) -> bool {
+        self.poisoned || self.buffered() > 0
+    }
+
+    /// Pop the next complete frame into `payload` (cleared first).
+    /// `Ok(None)` means "need more bytes" — never an error; truncation
+    /// is indistinguishable from in-flight data until the peer closes,
+    /// which is the *caller's* signal (EOF with [`Self::has_partial`]
+    /// = dirty close mid-frame).
+    pub fn next_into(&mut self, payload: &mut Vec<u8>) -> Result<Option<FrameType>> {
+        if self.poisoned {
+            bail!("frame decoder poisoned by earlier protocol error");
+        }
+        let avail = self.buf.len() - self.pos;
+        if avail < 5 {
+            self.compact();
+            return Ok(None);
+        }
+        let head = &self.buf[self.pos..self.pos + 5];
+        let len = u32::from_be_bytes([head[0], head[1], head[2], head[3]]) as usize;
+        if len > MAX_FRAME {
+            self.poisoned = true;
+            bail!("frame length {len} exceeds cap");
+        }
+        let ty = match FrameType::from_u8(head[4]) {
+            Ok(t) => t,
+            Err(e) => {
+                self.poisoned = true;
+                return Err(e);
+            }
+        };
+        if avail < 5 + len {
+            return Ok(None);
+        }
+        payload.clear();
+        payload.extend_from_slice(&self.buf[self.pos + 5..self.pos + 5 + len]);
+        self.pos += 5 + len;
+        self.compact();
+        Ok(Some(ty))
+    }
+
+    /// Pop the next complete frame ([`Self::next_into`] with a fresh
+    /// buffer).
+    pub fn next_frame(&mut self) -> Result<Option<(FrameType, Vec<u8>)>> {
+        let mut payload = Vec::new();
+        Ok(self.next_into(&mut payload)?.map(|ty| (ty, payload)))
+    }
+
+    /// Reclaim the consumed prefix. Cheap when the buffer drained
+    /// completely (the common case: whole frames per readiness event);
+    /// otherwise only once the dead prefix dominates, so cost stays
+    /// amortized O(1) per byte.
+    fn compact(&mut self) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= 4096 && self.pos * 2 >= self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,5 +404,198 @@ mod tests {
         let mut cur = Cursor::new(inner.bytes);
         assert_eq!(read_frame(&mut cur).unwrap().1, vec![6u8; 64]);
         assert_eq!(read_frame(&mut cur).unwrap().0, FrameType::Eos);
+    }
+
+    // ---- incremental decoder --------------------------------------------
+
+    /// Reference stream: a few frames of varied type/size with
+    /// position-dependent payload bytes (so any reordering or
+    /// off-by-one shows up as a byte mismatch, not just a length one).
+    fn sample_stream() -> (Vec<u8>, Vec<(FrameType, Vec<u8>)>) {
+        let frames = vec![
+            (FrameType::Control, b"{\"op\":\"attach\"}".to_vec()),
+            (FrameType::Data, (0..37u8).map(|i| i.wrapping_mul(31)).collect()),
+            (FrameType::Data, Vec::new()),
+            (FrameType::Data, (0..5u8).collect()),
+            (FrameType::Eos, Vec::new()),
+        ];
+        let mut bytes = Vec::new();
+        for (ty, p) in &frames {
+            write_frame(&mut bytes, *ty, p).unwrap();
+        }
+        (bytes, frames)
+    }
+
+    fn drain_decoder(d: &mut FrameDecoder) -> Vec<(FrameType, Vec<u8>)> {
+        let mut out = Vec::new();
+        while let Some(f) = d.next_frame().unwrap() {
+            out.push(f);
+        }
+        out
+    }
+
+    /// Splitting the byte stream at EVERY possible boundary must decode
+    /// identically to the whole-buffer decode — the incremental decoder
+    /// can never depend on how TCP fragments a record.
+    #[test]
+    fn decoder_split_at_every_boundary_matches_whole_buffer() {
+        let (bytes, expect) = sample_stream();
+        for cut in 0..=bytes.len() {
+            let mut d = FrameDecoder::new();
+            let mut got = Vec::new();
+            d.feed(&bytes[..cut]);
+            got.extend(drain_decoder(&mut d));
+            d.feed(&bytes[cut..]);
+            got.extend(drain_decoder(&mut d));
+            assert_eq!(got, expect, "split at byte {cut} diverged");
+            assert!(!d.has_partial(), "split at byte {cut} left residue");
+        }
+    }
+
+    /// Worst legal fragmentation: one byte per feed.
+    #[test]
+    fn decoder_byte_at_a_time() {
+        let (bytes, expect) = sample_stream();
+        let mut d = FrameDecoder::new();
+        let mut got = Vec::new();
+        for b in &bytes {
+            d.feed(std::slice::from_ref(b));
+            got.extend(drain_decoder(&mut d));
+        }
+        assert_eq!(got, expect);
+        assert!(!d.has_partial());
+    }
+
+    /// Random multi-frame coalescings (many frames arriving in one feed,
+    /// frames torn across feeds) — property-tested against the blocking
+    /// reader as the oracle, with seed replay on failure.
+    #[test]
+    fn decoder_random_coalescings_match_reader() {
+        use crate::util::prop::{forall, pair, usize_in, vec_of};
+
+        let frame_gen = || pair(usize_in(0, 2), usize_in(0, 200));
+        let gen = pair(vec_of(frame_gen, 0, 12), usize_in(0, u32::MAX as usize));
+        forall("incremental-decode == whole-buffer-decode", &gen, 150, |(specs, chunk_seed)| {
+            let frames: Vec<(FrameType, Vec<u8>)> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, &(ty, len))| {
+                    let ty = match ty {
+                        0 => FrameType::Control,
+                        1 => FrameType::Data,
+                        _ => FrameType::Eos,
+                    };
+                    let payload =
+                        (0..len).map(|j| (i.wrapping_mul(131) + j) as u8).collect::<Vec<u8>>();
+                    (ty, payload)
+                })
+                .collect();
+            let mut bytes = Vec::new();
+            for (ty, p) in &frames {
+                write_frame(&mut bytes, *ty, p).unwrap();
+            }
+
+            // oracle: the blocking reader over the whole buffer
+            let mut cur = Cursor::new(&bytes[..]);
+            let mut oracle = Vec::new();
+            while (cur.position() as usize) < bytes.len() {
+                oracle.push(read_frame(&mut cur).map_err(|e| e.to_string())?);
+            }
+
+            // random chunking driven by the generated seed
+            let mut rng = crate::util::rng::Rng::new(*chunk_seed as u64);
+            let mut d = FrameDecoder::new();
+            let mut got = Vec::new();
+            let mut off = 0;
+            while off < bytes.len() {
+                let n = rng.range(1, (bytes.len() - off).min(64) + 1);
+                d.feed(&bytes[off..off + n]);
+                off += n;
+                while let Some(f) = d.next_frame().map_err(|e| e.to_string())? {
+                    got.push(f);
+                }
+            }
+            if got != oracle {
+                return Err(format!("decoded {} frames, oracle {}", got.len(), oracle.len()));
+            }
+            if d.has_partial() {
+                return Err("residue after full stream".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// An oversize length prefix is rejected as soon as the header is
+    /// complete — before any payload is buffered — and poisons the
+    /// decoder permanently.
+    #[test]
+    fn decoder_rejects_oversize_header_early_and_poisons() {
+        let mut d = FrameDecoder::new();
+        // one good frame first: errors must not destroy prior frames
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, FrameType::Data, &[1, 2]).unwrap();
+        d.feed(&bytes);
+        assert_eq!(d.next_frame().unwrap().unwrap().1, vec![1, 2]);
+
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&(MAX_FRAME as u32 + 1).to_be_bytes());
+        bad.push(FrameType::Data as u8);
+        d.feed(&bad); // header only, zero payload bytes
+        assert!(d.next_frame().is_err(), "oversize must fail with no payload buffered");
+        assert!(d.has_partial());
+        // poisoned: later feeds are ignored, later pops keep failing
+        d.feed(&bytes);
+        assert!(d.next_frame().is_err());
+    }
+
+    #[test]
+    fn decoder_rejects_unknown_type_and_poisons() {
+        let mut d = FrameDecoder::new();
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&1u32.to_be_bytes());
+        bad.push(9); // bad type
+        bad.push(0);
+        d.feed(&bad);
+        assert!(d.next_frame().is_err());
+        assert!(d.next_frame().is_err(), "poisoning is permanent");
+    }
+
+    /// A truncated header or payload is *pending*, not an error: only
+    /// the caller knows whether the peer is slow or gone (EOF).
+    #[test]
+    fn decoder_truncation_is_pending_not_error() {
+        let (bytes, _) = sample_stream();
+        let mut d = FrameDecoder::new();
+        d.feed(&bytes[..3]); // torn header
+        assert!(d.next_frame().unwrap().is_none());
+        assert!(d.has_partial());
+        assert_eq!(d.buffered(), 3);
+
+        let mut d2 = FrameDecoder::new();
+        d2.feed(&bytes[..7]); // full header, torn payload
+        assert!(d2.next_frame().unwrap().is_none());
+        assert!(d2.has_partial());
+    }
+
+    /// `next_into` reuses the caller's buffer (the reactor's per-event
+    /// scratch) and the compaction keeps the reassembly buffer bounded
+    /// across a long stream.
+    #[test]
+    fn decoder_long_stream_stays_compact() {
+        let mut one = Vec::new();
+        write_frame(&mut one, FrameType::Data, &[7u8; 300]).unwrap();
+        let mut d = FrameDecoder::new();
+        let mut payload = Vec::new();
+        for _ in 0..200 {
+            d.feed(&one);
+            assert_eq!(d.next_into(&mut payload).unwrap(), Some(FrameType::Data));
+            assert_eq!(payload.len(), 300);
+        }
+        assert!(!d.has_partial());
+        assert!(
+            d.buf.capacity() < 64 * one.len(),
+            "reassembly buffer grew unboundedly: {}",
+            d.buf.capacity()
+        );
     }
 }

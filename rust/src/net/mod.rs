@@ -1,11 +1,25 @@
-//! Network substrate: length-prefixed message framing over TCP and a
-//! token-bucket bandwidth shaper reproducing the paper's controlled
-//! 30 Mbps WAN between the two edge devices.
+//! Network substrate: length-prefixed message framing over TCP (both
+//! blocking and incremental push-based decoding), a token-bucket
+//! bandwidth shaper reproducing the paper's controlled 30 Mbps WAN
+//! between the two edge devices, a readiness poller (epoll with a
+//! portable poll(2) fallback), resilience primitives (backoff with
+//! jitter, circuit breaker), and the single-threaded session reactor
+//! that multiplexes every camera socket over them.
 
 pub mod framing;
+pub mod poller;
+pub mod reactor;
+pub mod resilience;
 pub mod throttle;
 
 pub use framing::{
-    encode_frame_into, read_frame, read_frame_into, write_frame, FrameReader, FrameWriter,
+    encode_frame_into, read_frame, read_frame_into, write_frame, FrameDecoder, FrameReader,
+    FrameType, FrameWriter,
 };
+pub use poller::{PollEvent, Poller, PollerBackend};
+pub use reactor::{
+    CloseReason, ConnId, ReactorConfig, ReactorEvent, ReactorHandle, ReactorStats, UplinkId,
+    UplinkPolicy,
+};
+pub use resilience::{Backoff, CircuitBreaker, CircuitState};
 pub use throttle::TokenBucket;

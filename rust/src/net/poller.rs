@@ -1,0 +1,395 @@
+//! Readiness polling over the vendored `libc` bindings: epoll on Linux
+//! (O(ready) dispatch — the production backend for thousands of
+//! sessions) with a `poll(2)` fallback every unix has. The backend is
+//! runtime-selectable (`SERDAB_POLLER=poll`) so the fallback stays
+//! exercised on Linux CI instead of rotting behind a cfg.
+//!
+//! This is deliberately the mio-shaped *bottom* of the async plane:
+//! register/modify/deregister an fd under a caller-chosen [`Token`],
+//! then [`Poller::wait`] for readiness batches. Everything stateful —
+//! reassembly buffers, egress queues, admission — lives one layer up in
+//! [`crate::net::reactor`].
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+use anyhow::{bail, Context, Result};
+
+/// Caller-chosen cookie identifying a registered fd; returned verbatim
+/// with every readiness event.
+pub type Token = u64;
+
+/// One readiness record from [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    /// The token the fd was registered under.
+    pub token: Token,
+    /// Reading will not block (data, EOF, or a pending error to reap).
+    pub readable: bool,
+    /// Writing will not block.
+    pub writable: bool,
+    /// Error/hang-up condition (`EPOLLERR`/`EPOLLHUP`); the fd should be
+    /// read to collect the error or EOF, then dropped.
+    pub error: bool,
+}
+
+/// Which readiness backend a [`Poller`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollerBackend {
+    /// Linux `epoll(7)` — O(ready), scales to thousands of fds.
+    Epoll,
+    /// Portable `poll(2)` — O(registered) per wait; the fallback.
+    Poll,
+}
+
+enum Impl {
+    #[cfg(target_os = "linux")]
+    Epoll {
+        epfd: RawFd,
+        /// Reused kernel-fill buffer (one syscall fills many events).
+        buf: Vec<libc::epoll_event>,
+        /// Registration count (epoll does not expose its interest size).
+        registered: usize,
+    },
+    Poll {
+        fds: Vec<libc::pollfd>,
+        tokens: Vec<Token>,
+    },
+}
+
+/// Level-triggered readiness poller (see module docs).
+pub struct Poller {
+    imp: Impl,
+}
+
+fn last_err(what: &str) -> anyhow::Error {
+    anyhow::Error::new(io::Error::last_os_error()).context(format!("{what} failed"))
+}
+
+impl Poller {
+    /// Default backend: epoll on Linux, `poll(2)` elsewhere. Setting
+    /// `SERDAB_POLLER=poll` forces the fallback (CI runs the session
+    /// suite under both).
+    pub fn new() -> Result<Poller> {
+        let forced_poll = std::env::var("SERDAB_POLLER").map(|v| v == "poll").unwrap_or(false);
+        if cfg!(target_os = "linux") && !forced_poll {
+            Poller::with_backend(PollerBackend::Epoll)
+        } else {
+            Poller::with_backend(PollerBackend::Poll)
+        }
+    }
+
+    /// Construct with an explicit backend. `Epoll` errors off-Linux.
+    pub fn with_backend(backend: PollerBackend) -> Result<Poller> {
+        match backend {
+            PollerBackend::Epoll => {
+                #[cfg(target_os = "linux")]
+                {
+                    let epfd = unsafe { libc::epoll_create1(0) };
+                    if epfd < 0 {
+                        return Err(last_err("epoll_create1"));
+                    }
+                    let buf = vec![libc::epoll_event { events: 0, u64: 0 }; 1024];
+                    Ok(Poller { imp: Impl::Epoll { epfd, buf, registered: 0 } })
+                }
+                #[cfg(not(target_os = "linux"))]
+                {
+                    bail!("epoll backend requires Linux");
+                }
+            }
+            PollerBackend::Poll => {
+                Ok(Poller { imp: Impl::Poll { fds: Vec::new(), tokens: Vec::new() } })
+            }
+        }
+    }
+
+    /// Which backend this poller runs on.
+    pub fn backend(&self) -> PollerBackend {
+        match self.imp {
+            #[cfg(target_os = "linux")]
+            Impl::Epoll { .. } => PollerBackend::Epoll,
+            Impl::Poll { .. } => PollerBackend::Poll,
+        }
+    }
+
+    /// Number of registered fds.
+    pub fn len(&self) -> usize {
+        match &self.imp {
+            #[cfg(target_os = "linux")]
+            Impl::Epoll { registered, .. } => *registered,
+            Impl::Poll { fds, .. } => fds.len(),
+        }
+    }
+
+    fn interest_epoll(read: bool, write: bool) -> u32 {
+        let mut ev = 0;
+        if read {
+            ev |= libc::EPOLLIN;
+        }
+        if write {
+            ev |= libc::EPOLLOUT;
+        }
+        ev
+    }
+
+    fn interest_poll(read: bool, write: bool) -> i16 {
+        let mut ev = 0;
+        if read {
+            ev |= libc::POLLIN;
+        }
+        if write {
+            ev |= libc::POLLOUT;
+        }
+        ev
+    }
+
+    /// Start watching `fd` under `token` with the given interest set.
+    /// The fd must outlive its registration (call [`Self::deregister`]
+    /// before closing it — required for the poll backend, and keeps the
+    /// epoll interest list honest).
+    pub fn register(&mut self, fd: RawFd, token: Token, read: bool, write: bool) -> Result<()> {
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Impl::Epoll { epfd, registered, .. } => {
+                let mut ev =
+                    libc::epoll_event { events: Self::interest_epoll(read, write), u64: token };
+                let rc = unsafe { libc::epoll_ctl(*epfd, libc::EPOLL_CTL_ADD, fd, &mut ev) };
+                if rc != 0 {
+                    return Err(last_err("epoll_ctl(ADD)"));
+                }
+                *registered += 1;
+                Ok(())
+            }
+            Impl::Poll { fds, tokens } => {
+                if fds.iter().any(|p| p.fd == fd) {
+                    bail!("fd {fd} already registered");
+                }
+                fds.push(libc::pollfd {
+                    fd,
+                    events: Self::interest_poll(read, write),
+                    revents: 0,
+                });
+                tokens.push(token);
+                Ok(())
+            }
+        }
+    }
+
+    /// Change the interest set (and token) of a registered fd. Interest
+    /// gating is the reactor's backpressure primitive: dropping read
+    /// interest on a session socket stops consuming, which fills the
+    /// kernel buffer and stalls the sender — TCP flow control does the
+    /// actual throttling.
+    pub fn modify(&mut self, fd: RawFd, token: Token, read: bool, write: bool) -> Result<()> {
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Impl::Epoll { epfd, .. } => {
+                let mut ev =
+                    libc::epoll_event { events: Self::interest_epoll(read, write), u64: token };
+                let rc = unsafe { libc::epoll_ctl(*epfd, libc::EPOLL_CTL_MOD, fd, &mut ev) };
+                if rc != 0 {
+                    return Err(last_err("epoll_ctl(MOD)"));
+                }
+                Ok(())
+            }
+            Impl::Poll { fds, tokens } => {
+                let i = fds
+                    .iter()
+                    .position(|p| p.fd == fd)
+                    .with_context(|| format!("fd {fd} not registered"))?;
+                fds[i].events = Self::interest_poll(read, write);
+                tokens[i] = token;
+                Ok(())
+            }
+        }
+    }
+
+    /// Stop watching `fd`. Must be called before the fd is closed.
+    pub fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Impl::Epoll { epfd, registered, .. } => {
+                let rc =
+                    unsafe { libc::epoll_ctl(*epfd, libc::EPOLL_CTL_DEL, fd, std::ptr::null_mut()) };
+                if rc != 0 {
+                    return Err(last_err("epoll_ctl(DEL)"));
+                }
+                *registered = registered.saturating_sub(1);
+                Ok(())
+            }
+            Impl::Poll { fds, tokens } => {
+                let i = fds
+                    .iter()
+                    .position(|p| p.fd == fd)
+                    .with_context(|| format!("fd {fd} not registered"))?;
+                fds.swap_remove(i);
+                tokens.swap_remove(i);
+                Ok(())
+            }
+        }
+    }
+
+    /// Block until at least one registered fd is ready or `timeout_ms`
+    /// elapses (`None` = wait forever). Ready events are appended to
+    /// `events` (cleared first); returns the count. EINTR retries
+    /// transparently.
+    pub fn wait(&mut self, events: &mut Vec<PollEvent>, timeout_ms: Option<u64>) -> Result<usize> {
+        events.clear();
+        let timeout: i32 = match timeout_ms {
+            Some(ms) => ms.min(i32::MAX as u64) as i32,
+            None => -1,
+        };
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Impl::Epoll { epfd, buf, .. } => loop {
+                let n = unsafe {
+                    libc::epoll_wait(*epfd, buf.as_mut_ptr(), buf.len() as i32, timeout)
+                };
+                if n < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(anyhow::Error::new(err).context("epoll_wait failed"));
+                }
+                for e in buf.iter().take(n as usize) {
+                    // copy out of the (possibly packed) ABI struct first
+                    let (bits, token) = (e.events, e.u64);
+                    events.push(PollEvent {
+                        token,
+                        readable: bits & libc::EPOLLIN != 0,
+                        writable: bits & libc::EPOLLOUT != 0,
+                        error: bits & (libc::EPOLLERR | libc::EPOLLHUP) != 0,
+                    });
+                }
+                return Ok(events.len());
+            },
+            Impl::Poll { fds, tokens } => loop {
+                for p in fds.iter_mut() {
+                    p.revents = 0;
+                }
+                let n = unsafe { libc::poll(fds.as_mut_ptr(), fds.len() as libc::nfds_t, timeout) };
+                if n < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(anyhow::Error::new(err).context("poll failed"));
+                }
+                for (p, &token) in fds.iter().zip(tokens.iter()) {
+                    if p.revents == 0 {
+                        continue;
+                    }
+                    events.push(PollEvent {
+                        token,
+                        readable: p.revents & libc::POLLIN != 0,
+                        writable: p.revents & libc::POLLOUT != 0,
+                        error: p.revents & (libc::POLLERR | libc::POLLHUP | libc::POLLNVAL) != 0,
+                    });
+                }
+                return Ok(events.len());
+            },
+        }
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Impl::Epoll { epfd, .. } = &self.imp {
+            unsafe { libc::close(*epfd) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream, UdpSocket};
+    use std::os::unix::io::AsRawFd;
+
+    fn backends() -> Vec<PollerBackend> {
+        if cfg!(target_os = "linux") {
+            vec![PollerBackend::Epoll, PollerBackend::Poll]
+        } else {
+            vec![PollerBackend::Poll]
+        }
+    }
+
+    #[test]
+    fn readable_event_carries_token() {
+        for be in backends() {
+            let mut p = Poller::with_backend(be).unwrap();
+            let rx = UdpSocket::bind("127.0.0.1:0").unwrap();
+            let tx = UdpSocket::bind("127.0.0.1:0").unwrap();
+            p.register(rx.as_raw_fd(), 7, true, false).unwrap();
+
+            let mut evs = Vec::new();
+            // nothing pending: bounded wait returns empty
+            assert_eq!(p.wait(&mut evs, Some(10)).unwrap(), 0, "{be:?}");
+
+            tx.send_to(b"ping", rx.local_addr().unwrap()).unwrap();
+            assert_eq!(p.wait(&mut evs, Some(1000)).unwrap(), 1, "{be:?}");
+            assert_eq!(evs[0].token, 7);
+            assert!(evs[0].readable);
+
+            p.deregister(rx.as_raw_fd()).unwrap();
+            assert_eq!(p.wait(&mut evs, Some(10)).unwrap(), 0, "{be:?} after deregister");
+        }
+    }
+
+    #[test]
+    fn write_interest_and_modify() {
+        for be in backends() {
+            let mut p = Poller::with_backend(be).unwrap();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (_server, _) = listener.accept().unwrap();
+
+            // a fresh TCP socket with empty send buffer is writable
+            p.register(client.as_raw_fd(), 1, false, true).unwrap();
+            let mut evs = Vec::new();
+            assert_eq!(p.wait(&mut evs, Some(1000)).unwrap(), 1, "{be:?}");
+            assert!(evs[0].writable);
+
+            // drop write interest: level-triggered wait goes quiet
+            p.modify(client.as_raw_fd(), 1, false, false).unwrap();
+            assert_eq!(p.wait(&mut evs, Some(10)).unwrap(), 0, "{be:?} interest cleared");
+            p.deregister(client.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn peer_close_reports_readable_eof() {
+        for be in backends() {
+            let mut p = Poller::with_backend(be).unwrap();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (mut server, _) = listener.accept().unwrap();
+            server.write_all(b"bye").unwrap();
+            drop(server); // FIN after 3 bytes
+
+            p.register(client.as_raw_fd(), 9, true, false).unwrap();
+            let mut evs = Vec::new();
+            assert!(p.wait(&mut evs, Some(1000)).unwrap() >= 1, "{be:?}");
+            assert!(evs[0].readable || evs[0].error, "{be:?}: close must wake the reader");
+            let mut got = Vec::new();
+            let mut c = client.try_clone().unwrap();
+            c.read_to_end(&mut got).unwrap();
+            assert_eq!(got, b"bye");
+            p.deregister(client.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn env_forces_poll_backend() {
+        // run in-process without mutating the test env: with_backend is
+        // the env's target; here we just pin the default on Linux.
+        assert_eq!(Poller::with_backend(PollerBackend::Epoll).unwrap().backend(),
+                   PollerBackend::Epoll);
+        assert_eq!(Poller::with_backend(PollerBackend::Poll).unwrap().backend(),
+                   PollerBackend::Poll);
+    }
+}

@@ -1,0 +1,1422 @@
+//! The session reactor: ONE thread multiplexing every camera socket the
+//! server owns — accept, read, incremental decode, admission, rate
+//! limiting, egress (acks), eviction, and resilient uplinks — over the
+//! readiness [`Poller`](crate::net::poller::Poller). This replaces the
+//! thread-per-socket model whose stack-per-stream cost capped a
+//! coordinator at tens of sessions (ROADMAP item 2); the reactor holds
+//! per-connection state in plain structs, so a session costs a
+//! [`FrameDecoder`] buffer plus an egress queue instead of an OS thread.
+//!
+//! Design rules, in the order they bite:
+//!
+//! * **Backpressure is interest gating, never dropping.** A session at
+//!   its in-flight cap or out of rate tokens simply loses read
+//!   interest; its kernel receive buffer fills and TCP flow control
+//!   stalls the camera. Frames are only ever *delayed*, preserving the
+//!   lossless semantics the DES cross-validation
+//!   (`tests/pipeline_vs_sim.rs`) assumes.
+//! * **Admission is checked at accept.** Beyond
+//!   [`ReactorConfig::max_sessions`] the socket is closed immediately
+//!   ([`ReactorEvent::Rejected`]) — a full server sheds load at the
+//!   door instead of degrading everyone.
+//! * **Eviction needs evidence.** Idle-but-healthy cameras are left
+//!   alone; only a connection stuck *mid-frame* (slow-loris) or with
+//!   unflushable egress (stalled reader) for
+//!   [`ReactorConfig::idle_timeout`] is evicted, with the reason on the
+//!   [`ReactorEvent::Closed`] event.
+//! * **Clean detach is a handshake.** The camera sends EOS and keeps
+//!   reading; the reactor drains that session's in-flight frames,
+//!   flushes its acks, answers EOS, and closes — `clean: true` means
+//!   every fed frame was processed and acknowledged.
+//! * **Uplinks carry the resilience patterns.** An uplink (a downstream
+//!   TCP hop the reactor forwards to) reconnects under exponential
+//!   backoff + jitter and trips a [`CircuitBreaker`] after repeated
+//!   failures: trip → reject fast (no connect storms) → half-open probe
+//!   → recover. State transitions surface as
+//!   [`ReactorEvent::UplinkState`] so the coordinator can degrade
+//!   gracefully (hot-swap to a lighter plan) instead of wedging.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, UdpSocket};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::framing::{encode_frame_into, FrameDecoder, FrameType};
+use super::poller::Poller;
+use super::resilience::{Backoff, CircuitBreaker, CircuitState};
+
+/// Reactor-unique id of an accepted session connection.
+pub type ConnId = u64;
+
+/// Reactor-unique id of a registered uplink.
+pub type UplinkId = usize;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+/// Uplink tokens live in the top half of the token space so a session
+/// token can be used directly as a [`ConnId`].
+const UPLINK_TOKEN_BASE: u64 = 1 << 48;
+
+/// Reactor knobs (per-server; every limit is per-session except
+/// `max_sessions`).
+#[derive(Debug, Clone)]
+pub struct ReactorConfig {
+    /// Admission cap: connections beyond this are closed at accept.
+    pub max_sessions: usize,
+    /// Per-session in-flight frame cap: frames delivered to the server
+    /// but not yet completed. At the cap the session's reads pause.
+    pub max_inflight: u32,
+    /// Per-session rate limit in frames/sec (0 = unlimited). Enforced
+    /// by pacing reads, not by dropping.
+    pub rate_limit_fps: f64,
+    /// Evict a session stuck mid-frame or with unflushable egress for
+    /// this long. Idle-but-healthy sessions are never evicted.
+    pub idle_timeout: Duration,
+    /// Acknowledge each completed frame with an empty DATA frame back
+    /// to the camera (the soak harness counts these).
+    pub ack_frames: bool,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            max_sessions: 1024,
+            max_inflight: 8,
+            rate_limit_fps: 0.0,
+            idle_timeout: Duration::from_secs(10),
+            ack_frames: true,
+        }
+    }
+}
+
+/// Reconnect/breaker policy of one uplink.
+#[derive(Debug, Clone)]
+pub struct UplinkPolicy {
+    /// Per-attempt connect timeout.
+    pub connect_timeout: Duration,
+    /// First reconnect delay (doubles per attempt, jittered).
+    pub backoff_base: Duration,
+    /// Reconnect delay ceiling.
+    pub backoff_cap: Duration,
+    /// Consecutive connect/write failures that trip the breaker.
+    pub breaker_threshold: u32,
+    /// Cooldown before the half-open probe.
+    pub breaker_cooldown: Duration,
+    /// Jitter seed (deterministic schedules for tests).
+    pub seed: u64,
+    /// Egress queue cap while disconnected; beyond it the oldest
+    /// droppable frame is shed (counted in
+    /// [`ReactorStats::uplink_dropped`]).
+    pub queue_cap: usize,
+}
+
+impl Default for UplinkPolicy {
+    fn default() -> Self {
+        UplinkPolicy {
+            connect_timeout: Duration::from_millis(250),
+            backoff_base: Duration::from_millis(20),
+            backoff_cap: Duration::from_secs(2),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(300),
+            seed: 7,
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// Why a session closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// EOS handshake completed: all frames processed and acked.
+    CleanDetach,
+    /// Peer closed or reset without the EOS handshake.
+    PeerDisconnect,
+    /// Undecodable bytes (oversize frame, unknown type).
+    ProtocolError,
+    /// Stuck mid-frame past the idle timeout (slow-loris).
+    IdleTimeout,
+    /// Egress unflushable past the idle timeout (peer stopped reading).
+    WriteStalled,
+    /// Reactor shut down with the session still open.
+    Shutdown,
+}
+
+/// What the reactor reports to its owner (the coordinator's ingest
+/// loop). Frames carry decoded payloads; everything else is lifecycle.
+#[derive(Debug)]
+pub enum ReactorEvent {
+    /// A session was accepted and admitted.
+    Opened {
+        /// Session id (stable until `Closed`).
+        conn: ConnId,
+        /// Peer address.
+        peer: SocketAddr,
+    },
+    /// One decoded DATA frame from a session (already counted against
+    /// its in-flight budget — pair with [`ReactorHandle::complete`]).
+    Frame {
+        /// Source session.
+        conn: ConnId,
+        /// Decoded payload.
+        payload: Vec<u8>,
+    },
+    /// A session ended.
+    Closed {
+        /// Session id.
+        conn: ConnId,
+        /// Why it closed.
+        reason: CloseReason,
+        /// DATA frames it delivered.
+        frames_in: u64,
+        /// Acks queued back to it.
+        acked: u64,
+        /// True only for a completed EOS handshake.
+        clean: bool,
+    },
+    /// A connection was refused at the admission cap.
+    Rejected {
+        /// Peer address.
+        peer: SocketAddr,
+    },
+    /// An uplink's circuit breaker changed state.
+    UplinkState {
+        /// Which uplink.
+        uplink: UplinkId,
+        /// New breaker state.
+        state: CircuitState,
+        /// Human-readable transition note.
+        detail: String,
+    },
+}
+
+/// Counters the reactor thread returns at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct ReactorStats {
+    /// Sessions accepted and admitted.
+    pub accepted: u64,
+    /// Connections refused at the admission cap.
+    pub rejected: u64,
+    /// DATA frames decoded and delivered.
+    pub frames_in: u64,
+    /// Ack frames queued to cameras.
+    pub acks_out: u64,
+    /// Sessions that completed the EOS handshake.
+    pub clean_closes: u64,
+    /// Sessions evicted (idle/stall/protocol).
+    pub evictions: u64,
+    /// Sessions whose peer vanished without EOS.
+    pub peer_disconnects: u64,
+    /// Bytes read off session sockets.
+    pub bytes_in: u64,
+    /// Bytes written to session sockets.
+    pub bytes_out: u64,
+    /// Uplink breaker trips (to Open).
+    pub uplink_trips: u64,
+    /// Uplink connects (initial, reconnect, or half-open probe).
+    pub uplink_connects: u64,
+    /// Frames queued for uplinks.
+    pub uplink_frames: u64,
+    /// Uplink frames shed at the disconnected-queue cap.
+    pub uplink_dropped: u64,
+}
+
+enum Cmd {
+    /// The server finished processing one frame of `conn` (frees one
+    /// in-flight slot; queues an ack when configured).
+    Complete { conn: ConnId },
+    /// Force-close a session.
+    Evict { conn: ConnId, reason: CloseReason },
+    /// Register an uplink to `addr`.
+    AddUplink { id: UplinkId, addr: String, policy: Box<UplinkPolicy> },
+    /// Forward a payload over an uplink as a DATA frame.
+    UplinkSend { id: UplinkId, payload: Vec<u8> },
+    /// Stop: close every session and return stats.
+    Shutdown,
+}
+
+/// Cloneable handle for driving the reactor from other threads. Every
+/// call enqueues a command and wakes the reactor via its UDP waker
+/// pair; none of them block.
+#[derive(Clone)]
+pub struct ReactorHandle {
+    cmd: Sender<Cmd>,
+    waker: Arc<UdpSocket>,
+}
+
+impl ReactorHandle {
+    fn push(&self, cmd: Cmd) {
+        // a dead reactor means shutdown already happened — benign
+        if self.cmd.send(cmd).is_ok() {
+            let _ = self.waker.send(&[1]);
+        }
+    }
+
+    /// Report one frame of `conn` fully processed: frees an in-flight
+    /// slot (possibly resuming its reads) and queues an ack frame when
+    /// [`ReactorConfig::ack_frames`] is set.
+    pub fn complete(&self, conn: ConnId) {
+        self.push(Cmd::Complete { conn });
+    }
+
+    /// Force-close a session with an explicit reason.
+    pub fn evict(&self, conn: ConnId, reason: CloseReason) {
+        self.push(Cmd::Evict { conn, reason });
+    }
+
+    /// Register uplink `id` to `addr` (connect + reconnect managed by
+    /// the reactor under the policy's backoff/breaker).
+    pub fn add_uplink(&self, id: UplinkId, addr: impl Into<String>, policy: UplinkPolicy) {
+        self.push(Cmd::AddUplink { id, addr: addr.into(), policy: Box::new(policy) });
+    }
+
+    /// Queue `payload` as a DATA frame on uplink `id`.
+    pub fn uplink_send(&self, id: UplinkId, payload: Vec<u8>) {
+        self.push(Cmd::UplinkSend { id, payload });
+    }
+
+    /// Ask the reactor to close every session and exit (join the spawn
+    /// handle for the final [`ReactorStats`]).
+    pub fn shutdown(&self) {
+        self.push(Cmd::Shutdown);
+    }
+}
+
+/// Frames-per-second token bucket with a small burst allowance. Unlike
+/// [`crate::net::throttle::TokenBucket`] (bandwidth pacing for blocking
+/// writers) this one answers the reactor's two non-blocking questions:
+/// may this frame pass *now*, and if not, when to re-arm the timer.
+struct FrameBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl FrameBucket {
+    fn new(rate_fps: f64, now: Instant) -> FrameBucket {
+        let burst = rate_fps.clamp(1.0, 4.0);
+        FrameBucket { rate: rate_fps, burst, tokens: burst, last: now }
+    }
+
+    fn refill(&mut self, now: Instant) {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+    }
+
+    /// Take one token if available.
+    fn try_take(&mut self, now: Instant) -> bool {
+        self.refill(now);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A charged decode attempt produced no DATA frame: give the token
+    /// back so pacing only counts actual frames.
+    fn refund(&mut self) {
+        self.tokens = (self.tokens + 1.0).min(self.burst);
+    }
+
+    /// Time until one token will be available.
+    fn next_ready(&self) -> Duration {
+        if self.tokens >= 1.0 || self.rate <= 0.0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64((1.0 - self.tokens) / self.rate)
+        }
+    }
+}
+
+/// Per-session state.
+struct Conn {
+    sock: TcpStream,
+    decoder: FrameDecoder,
+    /// Encoded-but-unsent egress frames; the head may be partially
+    /// written (`out_off` into `outbound[0]`).
+    outbound: VecDeque<Vec<u8>>,
+    out_off: usize,
+    inflight: u32,
+    frames_in: u64,
+    acked: u64,
+    bucket: Option<FrameBucket>,
+    /// Timer to re-enable reads after a rate-limit pause.
+    resume_at: Option<Instant>,
+    /// EOS received: no more reads; close cleanly once drained.
+    draining: bool,
+    /// Peer's write half closed (EOF seen).
+    peer_eof: bool,
+    /// Close once the egress queue flushes.
+    closing: Option<CloseReason>,
+    /// Last time this session made forward progress (bytes moved).
+    last_progress: Instant,
+    /// Current poller interest, to skip redundant `modify` syscalls.
+    interest: (bool, bool),
+}
+
+impl Conn {
+    /// Reads stay enabled until EOS, the in-flight cap, or an empty
+    /// rate bucket; writes only while there is egress to flush.
+    fn desired_interest(&self, cfg: &ReactorConfig) -> (bool, bool) {
+        let read = !self.draining
+            && !self.peer_eof
+            && self.closing.is_none()
+            && self.inflight < cfg.max_inflight
+            && self.resume_at.is_none();
+        let write = !self.outbound.is_empty();
+        (read, write)
+    }
+}
+
+/// One resilient downstream hop.
+struct Uplink {
+    addr: String,
+    policy: UplinkPolicy,
+    sock: Option<TcpStream>,
+    token: u64,
+    outbound: VecDeque<Vec<u8>>,
+    out_off: usize,
+    backoff: Backoff,
+    breaker: CircuitBreaker,
+    retry_at: Instant,
+    staging: Vec<u8>,
+}
+
+/// Spawn the reactor thread (named `serdab-reactor` — the soak test
+/// asserts exactly one exists) serving `listener` under `cfg`. Returns
+/// the command handle, the event stream, and the join handle yielding
+/// final [`ReactorStats`].
+pub fn spawn(
+    listener: TcpListener,
+    cfg: ReactorConfig,
+) -> Result<(ReactorHandle, Receiver<ReactorEvent>, JoinHandle<ReactorStats>)> {
+    let (cmd_tx, cmd_rx) = channel::<Cmd>();
+    let (ev_tx, ev_rx) = channel::<ReactorEvent>();
+
+    // UDP waker pair: `wake_tx` is shared by every handle clone; the rx
+    // side sits in the poller so cross-thread commands interrupt waits.
+    let wake_rx = UdpSocket::bind("127.0.0.1:0").context("binding waker rx")?;
+    let wake_tx = UdpSocket::bind("127.0.0.1:0").context("binding waker tx")?;
+    wake_tx.connect(wake_rx.local_addr()?).context("connecting waker pair")?;
+    wake_rx.set_nonblocking(true)?;
+
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+
+    let handle = ReactorHandle { cmd: cmd_tx, waker: Arc::new(wake_tx) };
+    let join = std::thread::Builder::new()
+        .name("serdab-reactor".into())
+        .spawn(move || {
+            let mut r = Reactor::new(listener, wake_rx, cfg, cmd_rx, ev_tx);
+            r.run()
+        })
+        .context("spawning reactor thread")?;
+    Ok((handle, ev_rx, join))
+}
+
+struct Reactor {
+    listener: TcpListener,
+    wake_rx: UdpSocket,
+    cfg: ReactorConfig,
+    cmd_rx: Receiver<Cmd>,
+    ev_tx: Sender<ReactorEvent>,
+    poller: Poller,
+    conns: HashMap<u64, Conn>,
+    uplinks: HashMap<UplinkId, Uplink>,
+    next_token: u64,
+    stats: ReactorStats,
+    running: bool,
+    /// Reused read scratch (one per reactor, not per session).
+    scratch: Vec<u8>,
+    /// Reused frame-encode staging buffer.
+    staging: Vec<u8>,
+    /// Reused decode target for session payloads.
+    payload: Vec<u8>,
+}
+
+impl Reactor {
+    fn new(
+        listener: TcpListener,
+        wake_rx: UdpSocket,
+        cfg: ReactorConfig,
+        cmd_rx: Receiver<Cmd>,
+        ev_tx: Sender<ReactorEvent>,
+    ) -> Reactor {
+        use std::os::unix::io::AsRawFd;
+        let mut poller = Poller::new().expect("creating poller");
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)
+            .expect("registering listener");
+        poller
+            .register(wake_rx.as_raw_fd(), TOKEN_WAKER, true, false)
+            .expect("registering waker");
+        Reactor {
+            listener,
+            wake_rx,
+            cfg,
+            cmd_rx,
+            ev_tx,
+            poller,
+            conns: HashMap::new(),
+            uplinks: HashMap::new(),
+            next_token: 2,
+            stats: ReactorStats::default(),
+            running: true,
+            scratch: vec![0u8; 64 * 1024],
+            staging: Vec::new(),
+            payload: Vec::new(),
+        }
+    }
+
+    fn emit(&self, ev: ReactorEvent) {
+        let _ = self.ev_tx.send(ev);
+    }
+
+    fn run(&mut self) -> ReactorStats {
+        let mut events = Vec::new();
+        while self.running {
+            let timeout = self.next_timeout();
+            if self.poller.wait(&mut events, timeout).is_err() {
+                break;
+            }
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.drain_waker(),
+                    t if t >= UPLINK_TOKEN_BASE => {
+                        self.uplink_ready(t, ev.readable || ev.error, ev.writable)
+                    }
+                    t => self.conn_ready(t, ev.readable || ev.error, ev.writable),
+                }
+                if !self.running {
+                    break;
+                }
+            }
+            if self.running {
+                self.drain_cmds();
+            }
+            if self.running {
+                self.tick(Instant::now());
+            }
+        }
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Next poller timeout: the nearest rate-resume or uplink-retry
+    /// timer, capped by the idle scan period while sessions exist.
+    fn next_timeout(&self) -> Option<u64> {
+        let now = Instant::now();
+        let mut nearest: Option<Duration> = None;
+        let mut consider = |d: Duration| match nearest {
+            Some(n) if n <= d => {}
+            _ => nearest = Some(d),
+        };
+        for c in self.conns.values() {
+            if let Some(at) = c.resume_at {
+                consider(at.saturating_duration_since(now));
+            }
+        }
+        for u in self.uplinks.values() {
+            if u.sock.is_none() {
+                consider(u.retry_at.saturating_duration_since(now));
+            }
+        }
+        if !self.conns.is_empty() {
+            // idle-eviction scan cadence
+            consider(Duration::from_millis(50));
+        }
+        // round up so a timer 0.4ms out doesn't busy-spin at timeout 0
+        nearest.map(|d| d.as_micros().div_ceil(1000) as u64)
+    }
+
+    // ---- accept / admission -------------------------------------------
+
+    fn accept_ready(&mut self) {
+        use std::os::unix::io::AsRawFd;
+        loop {
+            match self.listener.accept() {
+                Ok((sock, peer)) => {
+                    if self.conns.len() >= self.cfg.max_sessions {
+                        self.stats.rejected += 1;
+                        self.emit(ReactorEvent::Rejected { peer });
+                        drop(sock); // closes at the door
+                        continue;
+                    }
+                    if sock.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = sock.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    let now = Instant::now();
+                    let bucket = if self.cfg.rate_limit_fps > 0.0 {
+                        Some(FrameBucket::new(self.cfg.rate_limit_fps, now))
+                    } else {
+                        None
+                    };
+                    if self.poller.register(sock.as_raw_fd(), token, true, false).is_err() {
+                        continue;
+                    }
+                    let conn = Conn {
+                        sock,
+                        decoder: FrameDecoder::new(),
+                        outbound: VecDeque::new(),
+                        out_off: 0,
+                        inflight: 0,
+                        frames_in: 0,
+                        acked: 0,
+                        bucket,
+                        resume_at: None,
+                        draining: false,
+                        peer_eof: false,
+                        closing: None,
+                        last_progress: now,
+                        interest: (true, false),
+                    };
+                    self.stats.accepted += 1;
+                    self.emit(ReactorEvent::Opened { conn: token, peer });
+                    self.conns.insert(token, conn);
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        while self.wake_rx.recv(&mut buf).is_ok() {}
+    }
+
+    // ---- session I/O ---------------------------------------------------
+
+    fn conn_ready(&mut self, token: u64, readable: bool, writable: bool) {
+        if !self.conns.contains_key(&token) {
+            return; // already closed earlier in this batch
+        }
+        if writable {
+            self.flush_conn(token);
+        }
+        if readable && self.conns.contains_key(&token) {
+            self.read_conn(token);
+        }
+        self.update_interest(token);
+    }
+
+    fn read_conn(&mut self, token: u64) {
+        let mut eof = false;
+        let mut reset = false;
+        loop {
+            let c = match self.conns.get_mut(&token) {
+                Some(c) => c,
+                None => return,
+            };
+            // respect pauses discovered mid-loop (cap hit while pumping)
+            if c.draining
+                || c.closing.is_some()
+                || c.inflight >= self.cfg.max_inflight
+                || c.resume_at.is_some()
+            {
+                break;
+            }
+            match c.sock.read(&mut self.scratch) {
+                Ok(0) => {
+                    eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.stats.bytes_in += n as u64;
+                    c.decoder.feed(&self.scratch[..n]);
+                    c.last_progress = Instant::now();
+                    if !self.pump_decode(token) {
+                        return; // evicted on protocol error
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    reset = true;
+                    break;
+                }
+            }
+        }
+        if reset {
+            self.close_conn(token, CloseReason::PeerDisconnect);
+            return;
+        }
+        if eof {
+            let draining = match self.conns.get_mut(&token) {
+                Some(c) => {
+                    c.peer_eof = true;
+                    c.draining
+                }
+                None => return,
+            };
+            if draining {
+                // EOS handshake already in progress: the close completes
+                // once in-flight frames drain and the egress flushes.
+                self.maybe_finish_drain(token);
+            } else {
+                // peer vanished without EOS; a mid-frame cut shows up as
+                // decoder.has_partial() in the close accounting
+                self.close_conn(token, CloseReason::PeerDisconnect);
+            }
+        }
+    }
+
+    /// Decode every admissible frame buffered for `token`. Returns
+    /// false if the session was evicted (protocol error).
+    fn pump_decode(&mut self, token: u64) -> bool {
+        loop {
+            let now = Instant::now();
+            let c = match self.conns.get_mut(&token) {
+                Some(c) => c,
+                None => return false,
+            };
+            if c.draining || c.closing.is_some() || c.inflight >= self.cfg.max_inflight {
+                return true; // bytes stay buffered; reads pause via interest
+            }
+            if c.decoder.buffered() < 5 {
+                return true; // not even a header — don't charge the bucket
+            }
+            let mut charged = false;
+            if let Some(b) = &mut c.bucket {
+                if b.try_take(now) {
+                    charged = true;
+                } else {
+                    // out of tokens: pause reads until the bucket refills
+                    let wait = b.next_ready();
+                    c.resume_at = Some(now + wait);
+                    return true;
+                }
+            }
+            match c.decoder.next_into(&mut self.payload) {
+                Ok(Some(FrameType::Data)) => {
+                    c.frames_in += 1;
+                    c.inflight += 1;
+                    c.last_progress = now;
+                    self.stats.frames_in += 1;
+                    let payload = std::mem::take(&mut self.payload);
+                    self.emit(ReactorEvent::Frame { conn: token, payload });
+                }
+                Ok(Some(FrameType::Control)) => {
+                    // heartbeat: progress but no frame budget consumed
+                    if charged {
+                        c.bucket.as_mut().unwrap().refund();
+                    }
+                    c.last_progress = now;
+                }
+                Ok(Some(FrameType::Eos)) => {
+                    if charged {
+                        c.bucket.as_mut().unwrap().refund();
+                    }
+                    c.draining = true;
+                    self.maybe_finish_drain(token);
+                    return true;
+                }
+                Ok(None) => {
+                    if charged {
+                        c.bucket.as_mut().unwrap().refund();
+                    }
+                    return true;
+                }
+                Err(_) => {
+                    self.close_conn(token, CloseReason::ProtocolError);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Try to flush `token`'s egress queue; finalizes a pending close
+    /// when the queue empties.
+    fn flush_conn(&mut self, token: u64) {
+        let mut dead = false;
+        let mut finished = None;
+        {
+            let c = match self.conns.get_mut(&token) {
+                Some(c) => c,
+                None => return,
+            };
+            while let Some(front) = c.outbound.front() {
+                match c.sock.write(&front[c.out_off..]) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        self.stats.bytes_out += n as u64;
+                        c.out_off += n;
+                        c.last_progress = Instant::now();
+                        if c.out_off >= front.len() {
+                            c.outbound.pop_front();
+                            c.out_off = 0;
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if !dead && c.outbound.is_empty() {
+                finished = c.closing;
+            }
+        }
+        if dead {
+            self.close_conn(token, CloseReason::PeerDisconnect);
+        } else if let Some(reason) = finished {
+            self.close_conn(token, reason);
+        }
+    }
+
+    /// Clean-detach progress: once EOS arrived, no frames are in flight
+    /// and the acks are queued, answer EOS and close after the flush.
+    fn maybe_finish_drain(&mut self, token: u64) {
+        let ready = {
+            let c = match self.conns.get(&token) {
+                Some(c) => c,
+                None => return,
+            };
+            c.draining && c.closing.is_none() && c.inflight == 0
+        };
+        if !ready {
+            return;
+        }
+        // answer the EOS, then close once everything flushed
+        if encode_frame_into(&mut self.staging, FrameType::Eos, &[]).is_ok() {
+            let frame = self.staging.clone();
+            if let Some(c) = self.conns.get_mut(&token) {
+                c.outbound.push_back(frame);
+                c.closing = Some(CloseReason::CleanDetach);
+            }
+        }
+        self.flush_conn(token);
+        self.update_interest(token);
+    }
+
+    fn update_interest(&mut self, token: u64) {
+        use std::os::unix::io::AsRawFd;
+        let (fd, desired, current) = match self.conns.get(&token) {
+            Some(c) => (c.sock.as_raw_fd(), c.desired_interest(&self.cfg), c.interest),
+            None => return,
+        };
+        if desired != current && self.poller.modify(fd, token, desired.0, desired.1).is_ok() {
+            if let Some(c) = self.conns.get_mut(&token) {
+                c.interest = desired;
+            }
+        }
+    }
+
+    fn close_conn(&mut self, token: u64, reason: CloseReason) {
+        use std::os::unix::io::AsRawFd;
+        let c = match self.conns.remove(&token) {
+            Some(c) => c,
+            None => return,
+        };
+        let _ = self.poller.deregister(c.sock.as_raw_fd());
+        let clean = reason == CloseReason::CleanDetach;
+        match reason {
+            CloseReason::CleanDetach => self.stats.clean_closes += 1,
+            CloseReason::PeerDisconnect => self.stats.peer_disconnects += 1,
+            CloseReason::Shutdown => {}
+            _ => self.stats.evictions += 1,
+        }
+        self.emit(ReactorEvent::Closed {
+            conn: token,
+            reason,
+            frames_in: c.frames_in,
+            acked: c.acked,
+            clean,
+        });
+        // socket drops (and closes) here
+    }
+
+    // ---- commands ------------------------------------------------------
+
+    fn drain_cmds(&mut self) {
+        while let Ok(cmd) = self.cmd_rx.try_recv() {
+            match cmd {
+                Cmd::Complete { conn } => self.complete_frame(conn),
+                Cmd::Evict { conn, reason } => {
+                    if self.conns.contains_key(&conn) {
+                        self.close_conn(conn, reason);
+                    }
+                }
+                Cmd::AddUplink { id, addr, policy } => self.add_uplink(id, addr, *policy),
+                Cmd::UplinkSend { id, payload } => self.uplink_send(id, payload),
+                Cmd::Shutdown => {
+                    self.shutdown();
+                    return;
+                }
+            }
+        }
+    }
+
+    fn complete_frame(&mut self, token: ConnId) {
+        let ack = self.cfg.ack_frames;
+        {
+            let c = match self.conns.get_mut(&token) {
+                Some(c) => c,
+                None => return, // completed after the session closed — fine
+            };
+            c.inflight = c.inflight.saturating_sub(1);
+            if ack && encode_frame_into(&mut self.staging, FrameType::Data, &[]).is_ok() {
+                c.outbound.push_back(self.staging.clone());
+                c.acked += 1;
+                self.stats.acks_out += 1;
+            }
+        }
+        self.flush_conn(token);
+        if self.conns.contains_key(&token) {
+            // freeing an in-flight slot may admit buffered frames; a
+            // draining session may now be able to finish its handshake
+            if self.pump_decode(token) {
+                self.maybe_finish_drain(token);
+                self.update_interest(token);
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        use std::os::unix::io::AsRawFd;
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            // best-effort final flush so already-earned acks land
+            self.flush_conn(t);
+            if self.conns.contains_key(&t) {
+                self.close_conn(t, CloseReason::Shutdown);
+            }
+        }
+        let ids: Vec<UplinkId> = self.uplinks.keys().copied().collect();
+        for id in ids {
+            if let Some(u) = self.uplinks.remove(&id) {
+                if let Some(s) = u.sock {
+                    let _ = self.poller.deregister(s.as_raw_fd());
+                }
+            }
+        }
+        let _ = self.poller.deregister(self.listener.as_raw_fd());
+        let _ = self.poller.deregister(self.wake_rx.as_raw_fd());
+        self.running = false;
+    }
+
+    // ---- timers --------------------------------------------------------
+
+    fn tick(&mut self, now: Instant) {
+        // rate-limit resumes
+        let resumed: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| matches!(c.resume_at, Some(at) if at <= now))
+            .map(|(t, _)| *t)
+            .collect();
+        for t in resumed {
+            if let Some(c) = self.conns.get_mut(&t) {
+                c.resume_at = None;
+            }
+            // buffered bytes may already hold admissible frames
+            if self.pump_decode(t) {
+                self.maybe_finish_drain(t);
+                self.update_interest(t);
+            }
+        }
+
+        // evidence-based idle eviction: stuck mid-frame (slow-loris) or
+        // unflushable egress (stalled reader); healthy-idle is left alone
+        if self.cfg.idle_timeout > Duration::ZERO {
+            let stuck: Vec<(u64, CloseReason)> = self
+                .conns
+                .iter()
+                .filter(|(_, c)| {
+                    now.saturating_duration_since(c.last_progress) > self.cfg.idle_timeout
+                })
+                .filter_map(|(t, c)| {
+                    if !c.outbound.is_empty() {
+                        Some((*t, CloseReason::WriteStalled))
+                    } else if c.decoder.has_partial() {
+                        Some((*t, CloseReason::IdleTimeout))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            for (t, reason) in stuck {
+                self.close_conn(t, reason);
+            }
+        }
+
+        // uplink reconnects
+        let due: Vec<UplinkId> = self
+            .uplinks
+            .iter()
+            .filter(|(_, u)| u.sock.is_none() && u.retry_at <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in due {
+            self.try_uplink_connect(id, now);
+        }
+    }
+
+    // ---- uplinks -------------------------------------------------------
+
+    fn add_uplink(&mut self, id: UplinkId, addr: String, policy: UplinkPolicy) {
+        let token = UPLINK_TOKEN_BASE + id as u64;
+        let backoff = Backoff::new(policy.backoff_base, policy.backoff_cap, policy.seed);
+        let breaker = CircuitBreaker::new(policy.breaker_threshold, policy.breaker_cooldown);
+        self.uplinks.insert(
+            id,
+            Uplink {
+                addr,
+                policy,
+                sock: None,
+                token,
+                outbound: VecDeque::new(),
+                out_off: 0,
+                backoff,
+                breaker,
+                retry_at: Instant::now(),
+                staging: Vec::new(),
+            },
+        );
+        self.try_uplink_connect(id, Instant::now());
+    }
+
+    fn uplink_send(&mut self, id: UplinkId, payload: Vec<u8>) {
+        let connected = {
+            let u = match self.uplinks.get_mut(&id) {
+                Some(u) => u,
+                None => return,
+            };
+            if encode_frame_into(&mut u.staging, FrameType::Data, &payload).is_err() {
+                return;
+            }
+            let frame = u.staging.clone();
+            if u.outbound.len() >= u.policy.queue_cap {
+                // bounded queue: shed the oldest frame that is not
+                // already partially on the wire (dropping mid-frame
+                // would corrupt the hop's framing)
+                if u.out_off == 0 {
+                    u.outbound.pop_front();
+                    self.stats.uplink_dropped += 1;
+                } else if u.outbound.len() > 1 {
+                    u.outbound.remove(1);
+                    self.stats.uplink_dropped += 1;
+                }
+            }
+            u.outbound.push_back(frame);
+            self.stats.uplink_frames += 1;
+            u.sock.is_some()
+        };
+        if connected {
+            self.flush_uplink(id);
+        }
+    }
+
+    fn try_uplink_connect(&mut self, id: UplinkId, now: Instant) {
+        use std::os::unix::io::AsRawFd;
+        let (addr, timeout, token, was_probing) = {
+            let u = match self.uplinks.get_mut(&id) {
+                Some(u) => u,
+                None => return,
+            };
+            if u.sock.is_some() {
+                return;
+            }
+            if !u.breaker.allow(now) {
+                // reject fast: wake again when the cooldown elapses
+                let wait = u
+                    .breaker
+                    .cooldown_remaining(now)
+                    .unwrap_or(u.policy.breaker_cooldown);
+                u.retry_at = now + wait;
+                return;
+            }
+            let probing = u.breaker.state() == CircuitState::HalfOpen;
+            (u.addr.clone(), u.policy.connect_timeout, u.token, probing)
+        };
+        let attempt = addr
+            .parse::<SocketAddr>()
+            .map_err(anyhow::Error::from)
+            .and_then(|sa| TcpStream::connect_timeout(&sa, timeout).map_err(anyhow::Error::from));
+        match attempt {
+            Ok(sock) => {
+                let _ = sock.set_nonblocking(true);
+                let _ = sock.set_nodelay(true);
+                if self.poller.register(sock.as_raw_fd(), token, true, true).is_err() {
+                    return;
+                }
+                let u = self.uplinks.get_mut(&id).unwrap();
+                u.sock = Some(sock);
+                u.breaker.on_success();
+                u.backoff.reset();
+                self.stats.uplink_connects += 1;
+                let detail = if was_probing { "half-open probe succeeded" } else { "connected" };
+                self.emit(ReactorEvent::UplinkState {
+                    uplink: id,
+                    state: CircuitState::Closed,
+                    detail: detail.into(),
+                });
+                self.flush_uplink(id);
+            }
+            Err(e) => {
+                let u = self.uplinks.get_mut(&id).unwrap();
+                let before = u.breaker.state();
+                u.breaker.on_failure(now);
+                let after = u.breaker.state();
+                u.retry_at = now + u.backoff.next_delay();
+                if after == CircuitState::Open && before != CircuitState::Open {
+                    self.stats.uplink_trips += 1;
+                    self.emit(ReactorEvent::UplinkState {
+                        uplink: id,
+                        state: CircuitState::Open,
+                        detail: format!("breaker tripped: {e}"),
+                    });
+                }
+            }
+        }
+    }
+
+    fn uplink_ready(&mut self, token: u64, readable: bool, writable: bool) {
+        let id = (token - UPLINK_TOKEN_BASE) as UplinkId;
+        if readable {
+            // the only bytes we expect back are EOF/reset = hop died
+            let dead = {
+                let u = match self.uplinks.get_mut(&id) {
+                    Some(u) => u,
+                    None => return,
+                };
+                match u.sock.as_mut() {
+                    Some(s) => match s.read(&mut self.scratch) {
+                        Ok(0) => true,
+                        Ok(_) => false, // ignore hop chatter
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+                        Err(_) => true,
+                    },
+                    None => return,
+                }
+            };
+            if dead {
+                self.uplink_down(id, "peer closed");
+                return;
+            }
+        }
+        if writable {
+            self.flush_uplink(id);
+        }
+    }
+
+    fn flush_uplink(&mut self, id: UplinkId) {
+        let mut dead = false;
+        {
+            let u = match self.uplinks.get_mut(&id) {
+                Some(u) => u,
+                None => return,
+            };
+            let s = match u.sock.as_mut() {
+                Some(s) => s,
+                None => return,
+            };
+            while let Some(front) = u.outbound.front() {
+                match s.write(&front[u.out_off..]) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        u.out_off += n;
+                        if u.out_off >= front.len() {
+                            u.outbound.pop_front();
+                            u.out_off = 0;
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if dead {
+            self.uplink_down(id, "write failed");
+        }
+    }
+
+    fn uplink_down(&mut self, id: UplinkId, why: &str) {
+        use std::os::unix::io::AsRawFd;
+        let now = Instant::now();
+        let u = match self.uplinks.get_mut(&id) {
+            Some(u) => u,
+            None => return,
+        };
+        if let Some(s) = u.sock.take() {
+            let _ = self.poller.deregister(s.as_raw_fd());
+        }
+        u.out_off = 0; // the partially-written frame dies with the socket
+        let before = u.breaker.state();
+        u.breaker.on_failure(now);
+        let after = u.breaker.state();
+        u.retry_at = now + u.backoff.next_delay();
+        if after == CircuitState::Open && before != CircuitState::Open {
+            self.stats.uplink_trips += 1;
+            self.emit(ReactorEvent::UplinkState {
+                uplink: id,
+                state: CircuitState::Open,
+                detail: format!("breaker tripped: {why}"),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::framing::{read_frame, write_frame};
+
+    #[allow(clippy::type_complexity)]
+    fn spawn_reactor(
+        cfg: ReactorConfig,
+    ) -> (SocketAddr, ReactorHandle, Receiver<ReactorEvent>, JoinHandle<ReactorStats>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (h, rx, j) = spawn(listener, cfg).unwrap();
+        (addr, h, rx, j)
+    }
+
+    fn recv_ev(rx: &Receiver<ReactorEvent>) -> ReactorEvent {
+        rx.recv_timeout(Duration::from_secs(5)).expect("reactor event")
+    }
+
+    #[test]
+    fn frame_ack_eos_roundtrip() {
+        let (addr, h, rx, j) = spawn_reactor(ReactorConfig::default());
+        let mut client = TcpStream::connect(addr).unwrap();
+
+        let conn = match recv_ev(&rx) {
+            ReactorEvent::Opened { conn, .. } => conn,
+            other => panic!("expected Opened, got {other:?}"),
+        };
+
+        write_frame(&mut client, FrameType::Data, b"frame-0").unwrap();
+        match recv_ev(&rx) {
+            ReactorEvent::Frame { conn: c, payload } => {
+                assert_eq!(c, conn);
+                assert_eq!(payload, b"frame-0");
+            }
+            other => panic!("expected Frame, got {other:?}"),
+        }
+        h.complete(conn);
+
+        // clean detach: EOS out, ack + EOS back, orderly close
+        write_frame(&mut client, FrameType::Eos, &[]).unwrap();
+        let (t1, _) = read_frame(&mut client).unwrap();
+        assert_eq!(t1, FrameType::Data, "ack for the completed frame");
+        let (t2, _) = read_frame(&mut client).unwrap();
+        assert_eq!(t2, FrameType::Eos, "EOS answer completes the handshake");
+        match recv_ev(&rx) {
+            ReactorEvent::Closed { conn: c, reason, frames_in, acked, clean } => {
+                assert_eq!(c, conn);
+                assert_eq!(reason, CloseReason::CleanDetach);
+                assert_eq!(frames_in, 1);
+                assert_eq!(acked, 1);
+                assert!(clean);
+            }
+            other => panic!("expected Closed, got {other:?}"),
+        }
+
+        h.shutdown();
+        let stats = j.join().unwrap();
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.frames_in, 1);
+        assert_eq!(stats.clean_closes, 1);
+    }
+
+    #[test]
+    fn admission_cap_rejects_at_accept() {
+        let cfg = ReactorConfig { max_sessions: 2, ..ReactorConfig::default() };
+        let (addr, h, rx, j) = spawn_reactor(cfg);
+        let _a = TcpStream::connect(addr).unwrap();
+        let _b = TcpStream::connect(addr).unwrap();
+        for _ in 0..2 {
+            match recv_ev(&rx) {
+                ReactorEvent::Opened { .. } => {}
+                other => panic!("expected Opened, got {other:?}"),
+            }
+        }
+        let mut c = TcpStream::connect(addr).unwrap();
+        match recv_ev(&rx) {
+            ReactorEvent::Rejected { .. } => {}
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        // the rejected socket reads EOF (or reset — both mean "no session")
+        let mut buf = [0u8; 1];
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(c.read(&mut buf).unwrap_or(0), 0);
+
+        h.shutdown();
+        let stats = j.join().unwrap();
+        assert_eq!(stats.accepted, 2);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn abrupt_disconnect_reports_unclean() {
+        let (addr, h, rx, j) = spawn_reactor(ReactorConfig::default());
+        let mut client = TcpStream::connect(addr).unwrap();
+        let conn = match recv_ev(&rx) {
+            ReactorEvent::Opened { conn, .. } => conn,
+            other => panic!("expected Opened, got {other:?}"),
+        };
+        write_frame(&mut client, FrameType::Data, b"x").unwrap();
+        match recv_ev(&rx) {
+            ReactorEvent::Frame { .. } => {}
+            other => panic!("expected Frame, got {other:?}"),
+        }
+        drop(client); // no EOS: unclean
+        h.complete(conn);
+        match recv_ev(&rx) {
+            ReactorEvent::Closed { reason, clean, .. } => {
+                assert_eq!(reason, CloseReason::PeerDisconnect);
+                assert!(!clean);
+            }
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        h.shutdown();
+        let stats = j.join().unwrap();
+        assert_eq!(stats.peer_disconnects, 1);
+    }
+
+    #[test]
+    fn protocol_error_evicts() {
+        let (addr, h, rx, j) = spawn_reactor(ReactorConfig::default());
+        let mut client = TcpStream::connect(addr).unwrap();
+        match recv_ev(&rx) {
+            ReactorEvent::Opened { .. } => {}
+            other => panic!("expected Opened, got {other:?}"),
+        }
+        // garbage: oversize length prefix
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&u32::MAX.to_be_bytes());
+        bad.push(1);
+        client.write_all(&bad).unwrap();
+        match recv_ev(&rx) {
+            ReactorEvent::Closed { reason, clean, .. } => {
+                assert_eq!(reason, CloseReason::ProtocolError);
+                assert!(!clean);
+            }
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        h.shutdown();
+        let stats = j.join().unwrap();
+        assert_eq!(stats.evictions, 1);
+    }
+
+    #[test]
+    fn inflight_cap_pauses_then_resumes() {
+        let cfg = ReactorConfig { max_inflight: 2, ack_frames: false, ..ReactorConfig::default() };
+        let (addr, h, rx, j) = spawn_reactor(cfg);
+        let mut client = TcpStream::connect(addr).unwrap();
+        let conn = match recv_ev(&rx) {
+            ReactorEvent::Opened { conn, .. } => conn,
+            other => panic!("expected Opened, got {other:?}"),
+        };
+        for i in 0..4u8 {
+            write_frame(&mut client, FrameType::Data, &[i]).unwrap();
+        }
+        // only the cap's worth arrives while nothing completes
+        let mut seen = Vec::new();
+        for _ in 0..2 {
+            match recv_ev(&rx) {
+                ReactorEvent::Frame { payload, .. } => seen.push(payload[0]),
+                other => panic!("expected Frame, got {other:?}"),
+            }
+        }
+        assert_eq!(seen, vec![0, 1]);
+        assert!(
+            rx.recv_timeout(Duration::from_millis(200)).is_err(),
+            "third frame must wait for a completion"
+        );
+        // completing frees slots; the rest flow in order
+        h.complete(conn);
+        h.complete(conn);
+        for want in [2u8, 3u8] {
+            match recv_ev(&rx) {
+                ReactorEvent::Frame { payload, .. } => assert_eq!(payload[0], want),
+                other => panic!("expected Frame, got {other:?}"),
+            }
+        }
+        h.complete(conn);
+        h.complete(conn);
+        write_frame(&mut client, FrameType::Eos, &[]).unwrap();
+        match recv_ev(&rx) {
+            ReactorEvent::Closed { clean, frames_in, .. } => {
+                assert!(clean);
+                assert_eq!(frames_in, 4);
+            }
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        h.shutdown();
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn rate_limit_paces_without_loss() {
+        // 50 fps, burst 4 ⇒ 10 frames need ≥ 6 paced intervals (~120ms)
+        let cfg = ReactorConfig {
+            rate_limit_fps: 50.0,
+            max_inflight: 64,
+            ack_frames: false,
+            ..ReactorConfig::default()
+        };
+        let (addr, h, rx, j) = spawn_reactor(cfg);
+        let mut client = TcpStream::connect(addr).unwrap();
+        let conn = match recv_ev(&rx) {
+            ReactorEvent::Opened { conn, .. } => conn,
+            other => panic!("expected Opened, got {other:?}"),
+        };
+        let t0 = Instant::now();
+        let n = 10u8;
+        for i in 0..n {
+            write_frame(&mut client, FrameType::Data, &[i]).unwrap();
+        }
+        let mut got = 0u64;
+        while got < n as u64 {
+            match recv_ev(&rx) {
+                ReactorEvent::Frame { payload, .. } => {
+                    assert_eq!(payload[0], got as u8, "pacing must preserve order");
+                    got += 1;
+                    h.complete(conn);
+                }
+                other => panic!("expected Frame, got {other:?}"),
+            }
+        }
+        assert!(
+            t0.elapsed() >= Duration::from_millis(80),
+            "10 frames at 50 fps (burst 4) must take ≥ 80ms, took {:?}",
+            t0.elapsed()
+        );
+        write_frame(&mut client, FrameType::Eos, &[]).unwrap();
+        match recv_ev(&rx) {
+            ReactorEvent::Closed { clean, frames_in, .. } => {
+                assert!(clean, "rate limiting must never lose frames");
+                assert_eq!(frames_in, n as u64);
+            }
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        h.shutdown();
+        let stats = j.join().unwrap();
+        assert_eq!(stats.frames_in, n as u64);
+    }
+}

@@ -1,0 +1,266 @@
+//! Production resilience primitives for the session plane: exponential
+//! backoff with jitter (reconnecting dead camera/uplink sockets without
+//! a thundering herd) and a circuit breaker (trip → reject fast →
+//! half-open probe) for repeatedly failing inter-stage hops.
+//!
+//! Both are pure state machines: the caller supplies every timestamp
+//! ([`std::time::Instant`]) and the jitter PRNG is the crate's seeded
+//! [`crate::util::rng::Rng`], so every schedule is deterministic and
+//! unit-testable without sleeping. The reactor
+//! ([`crate::net::reactor`]) drives them from its timer wheel; the
+//! chaos suite (`tests/net_chaos.rs`) drives them through scripted
+//! failures.
+
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Rng;
+
+/// Exponential backoff with **equal jitter**: attempt `k` sleeps
+/// `ceil/2 + uniform(0, ceil/2)` where `ceil = min(cap, base·2^k)`.
+/// Equal jitter keeps a hard lower bound (no accidental hot-loop
+/// reconnects) while still decorrelating a fleet of cameras that all
+/// lost the same uplink at the same instant.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// Backoff starting at `base`, exponentially doubling, clamped to
+    /// `cap`. `seed` makes the jitter schedule reproducible.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        Backoff { base, cap, attempt: 0, rng: Rng::new(seed) }
+    }
+
+    /// Delay before the next retry; advances the attempt counter.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.attempt.min(32);
+        let ceil = self
+            .base
+            .checked_mul(1u32 << exp.min(20))
+            .map(|d| d.min(self.cap))
+            .unwrap_or(self.cap);
+        self.attempt = self.attempt.saturating_add(1);
+        let half = ceil / 2;
+        half + Duration::from_secs_f64(half.as_secs_f64() * self.rng.f64())
+    }
+
+    /// Retries attempted since the last [`Self::reset`].
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Connection recovered: the next failure starts from `base` again.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// Circuit breaker state (classic three-state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CircuitState {
+    /// Healthy: requests flow, consecutive failures are counted.
+    Closed,
+    /// Tripped: requests are rejected without touching the resource
+    /// until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: exactly one probe request is allowed through;
+    /// its outcome decides between `Closed` and `Open`.
+    HalfOpen,
+}
+
+/// Circuit breaker over a flaky downstream (an inter-stage TCP hop):
+/// `threshold` consecutive failures trip it open, rejecting instantly
+/// instead of burning a connect timeout per frame; after `cooldown` one
+/// half-open probe decides whether to close it again.
+///
+/// Time is injected through `now` parameters — no internal clock — so
+/// the trip/probe/recover schedule is exactly testable.
+#[derive(Debug, Clone)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    state: CircuitState,
+    failures: u32,
+    opened_at: Option<Instant>,
+}
+
+impl CircuitBreaker {
+    /// Breaker tripping after `threshold` consecutive failures, probing
+    /// again `cooldown` after the trip.
+    pub fn new(threshold: u32, cooldown: Duration) -> Self {
+        assert!(threshold >= 1, "threshold must be at least 1");
+        CircuitBreaker { threshold, cooldown, state: CircuitState::Closed, failures: 0, opened_at: None }
+    }
+
+    /// Current state (`HalfOpen` only appears after an [`Self::allow`]
+    /// admitted the probe).
+    pub fn state(&self) -> CircuitState {
+        self.state
+    }
+
+    /// Consecutive failures observed while closed.
+    pub fn failures(&self) -> u32 {
+        self.failures
+    }
+
+    /// May a request proceed at `now`? `Closed` → yes. `Open` → no,
+    /// unless the cooldown elapsed, which transitions to `HalfOpen` and
+    /// admits this call as the single probe. `HalfOpen` → no (a probe
+    /// is already in flight).
+    pub fn allow(&mut self, now: Instant) -> bool {
+        match self.state {
+            CircuitState::Closed => true,
+            CircuitState::Open => {
+                let ready = self
+                    .opened_at
+                    .map(|t| now.saturating_duration_since(t) >= self.cooldown)
+                    .unwrap_or(true);
+                if ready {
+                    self.state = CircuitState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+            CircuitState::HalfOpen => false,
+        }
+    }
+
+    /// Report a successful request: closes the breaker from any state
+    /// and clears the failure count.
+    pub fn on_success(&mut self) {
+        self.state = CircuitState::Closed;
+        self.failures = 0;
+        self.opened_at = None;
+    }
+
+    /// Report a failed request at `now`. In `Closed`, counts toward the
+    /// threshold and trips to `Open` on reaching it; in `HalfOpen`, the
+    /// probe failed — straight back to `Open` with a fresh cooldown.
+    pub fn on_failure(&mut self, now: Instant) {
+        match self.state {
+            CircuitState::Closed => {
+                self.failures += 1;
+                if self.failures >= self.threshold {
+                    self.state = CircuitState::Open;
+                    self.opened_at = Some(now);
+                }
+            }
+            CircuitState::HalfOpen | CircuitState::Open => {
+                self.state = CircuitState::Open;
+                self.opened_at = Some(now);
+            }
+        }
+    }
+
+    /// Time remaining until the next half-open probe would be admitted
+    /// (`None` when not open).
+    pub fn cooldown_remaining(&self, now: Instant) -> Option<Duration> {
+        match (self.state, self.opened_at) {
+            (CircuitState::Open, Some(t)) => {
+                Some(self.cooldown.saturating_sub(now.saturating_duration_since(t)))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially_within_bounds() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(500);
+        let mut b = Backoff::new(base, cap, 42);
+        let mut prev_ceil = Duration::ZERO;
+        for k in 0..12u32 {
+            let ceil = if k >= 6 { cap } else { base * (1 << k) };
+            let d = b.next_delay();
+            assert!(d >= ceil / 2, "attempt {k}: {d:?} below jitter floor {:?}", ceil / 2);
+            assert!(d <= ceil, "attempt {k}: {d:?} above ceiling {ceil:?}");
+            assert!(ceil >= prev_ceil, "ceiling must be monotone");
+            prev_ceil = ceil;
+        }
+        assert_eq!(b.attempt(), 12);
+        b.reset();
+        assert_eq!(b.attempt(), 0);
+        assert!(b.next_delay() <= base, "post-reset delay restarts at base");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed_and_jittered_across_seeds() {
+        let mk = |seed| {
+            let mut b = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), seed);
+            (0..8).map(|_| b.next_delay()).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(7), mk(7), "same seed, same schedule");
+        assert_ne!(mk(7), mk(8), "different seeds must decorrelate");
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_and_rejects_fast() {
+        let t0 = Instant::now();
+        let mut cb = CircuitBreaker::new(3, Duration::from_secs(5));
+        assert!(cb.allow(t0));
+        cb.on_failure(t0);
+        cb.on_failure(t0);
+        assert_eq!(cb.state(), CircuitState::Closed, "below threshold stays closed");
+        assert!(cb.allow(t0));
+        cb.on_failure(t0);
+        assert_eq!(cb.state(), CircuitState::Open);
+        // inside cooldown: reject without touching the resource
+        assert!(!cb.allow(t0 + Duration::from_secs(1)));
+        assert!(!cb.allow(t0 + Duration::from_secs(4)));
+        assert_eq!(
+            cb.cooldown_remaining(t0 + Duration::from_secs(4)),
+            Some(Duration::from_secs(1))
+        );
+    }
+
+    #[test]
+    fn breaker_half_open_probe_recovers_or_reopens() {
+        let t0 = Instant::now();
+        let cd = Duration::from_secs(5);
+        let mut cb = CircuitBreaker::new(1, cd);
+        cb.on_failure(t0);
+        assert_eq!(cb.state(), CircuitState::Open);
+
+        // cooldown elapsed: exactly one probe goes through
+        assert!(cb.allow(t0 + cd));
+        assert_eq!(cb.state(), CircuitState::HalfOpen);
+        assert!(!cb.allow(t0 + cd), "second caller must wait for the probe verdict");
+
+        // probe fails → reopen with a fresh cooldown from the failure
+        cb.on_failure(t0 + cd);
+        assert_eq!(cb.state(), CircuitState::Open);
+        assert!(!cb.allow(t0 + cd + Duration::from_secs(4)));
+        assert!(cb.allow(t0 + cd + cd));
+        assert_eq!(cb.state(), CircuitState::HalfOpen);
+
+        // probe succeeds → closed, failure count cleared
+        cb.on_success();
+        assert_eq!(cb.state(), CircuitState::Closed);
+        assert_eq!(cb.failures(), 0);
+        assert!(cb.allow(t0 + cd + cd));
+    }
+
+    #[test]
+    fn breaker_success_resets_failure_streak() {
+        let t0 = Instant::now();
+        let mut cb = CircuitBreaker::new(3, Duration::from_secs(1));
+        cb.on_failure(t0);
+        cb.on_failure(t0);
+        cb.on_success();
+        cb.on_failure(t0);
+        cb.on_failure(t0);
+        assert_eq!(cb.state(), CircuitState::Closed, "streak broken by success");
+        cb.on_failure(t0);
+        assert_eq!(cb.state(), CircuitState::Open);
+    }
+}

@@ -12,10 +12,25 @@
 //! source thread it paces. If the pipeline saturates, backpressure blocks
 //! the iterator mid-schedule: offered load beyond capacity turns into
 //! source-side queueing, exactly like a camera buffer overrunning.
+//!
+//! [`SocketSwarm`] is the socket-level counterpart: a fleet of framed
+//! TCP camera clients driven by **one** thread over the readiness
+//! poller (mirroring the server-side reactor), pacing Data frames,
+//! counting acks, and detaching via the EOS handshake — the load
+//! source the session soak and chaos suites aim at a
+//! [`Server::serve_sockets`](crate::coordinator::Server::serve_sockets)
+//! listener.
 
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::time::{Duration, Instant};
 
+use anyhow::{Context, Result};
+
 use super::pipeline::FrameIn;
+use crate::net::framing::{encode_frame_into, FrameDecoder, FrameType};
+use crate::net::poller::{PollEvent, Poller};
 use crate::util::rng::Rng;
 
 /// Arrival-process knobs.
@@ -158,6 +173,397 @@ impl LoadGen {
     }
 }
 
+/// Socket-swarm knobs.
+#[derive(Debug, Clone)]
+pub struct SwarmConfig {
+    /// Total camera sessions to run over the swarm's lifetime.
+    pub clients: usize,
+    /// Sessions live at once (bounds the fd footprint; finished sessions
+    /// free a slot for the next — attach/detach churn).
+    pub max_concurrent: usize,
+    /// Data frames each session sends before its EOS detach.
+    pub frames_per_client: u64,
+    /// Mean inter-frame seconds per session (0 = as fast as the server's
+    /// backpressure allows).
+    pub interval_secs: f64,
+    /// Exponential inter-arrivals (Poisson) instead of fixed rate.
+    pub poisson: bool,
+    /// Payload bytes per Data frame.
+    pub payload_bytes: usize,
+    /// Fraction of sessions that disconnect abruptly mid-stream (no EOS
+    /// handshake) — the swarm's scripted fault injection.
+    pub abrupt_fraction: f64,
+    /// Seconds between session launches (0 = as fast as slots free up).
+    pub attach_interval_secs: f64,
+    /// Seed for the abrupt draw and per-session arrival processes.
+    pub seed: u64,
+    /// Hard wall-clock bound; sessions still live at the deadline are
+    /// closed and reported unclean.
+    pub timeout_secs: f64,
+}
+
+impl Default for SwarmConfig {
+    fn default() -> Self {
+        SwarmConfig {
+            clients: 8,
+            max_concurrent: 8,
+            frames_per_client: 10,
+            interval_secs: 0.0,
+            poisson: false,
+            payload_bytes: 64,
+            abrupt_fraction: 0.0,
+            attach_interval_secs: 0.0,
+            seed: 7,
+            timeout_secs: 30.0,
+        }
+    }
+}
+
+/// One session's final tally.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientOutcome {
+    /// Data frames fully written to the wire.
+    pub fed: u64,
+    /// Completion acks received back.
+    pub acked: u64,
+    /// Finished the clean EOS handshake (server answered EOS).
+    pub clean: bool,
+    /// Scripted to disconnect abruptly (so `!clean` is expected).
+    pub abrupt: bool,
+}
+
+/// Everything the swarm did, one entry per session in launch order.
+#[derive(Debug, Clone)]
+pub struct SwarmReport {
+    /// Per-session outcomes.
+    pub outcomes: Vec<ClientOutcome>,
+}
+
+impl SwarmReport {
+    /// Sessions that completed the clean EOS handshake.
+    pub fn clean(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.clean).count()
+    }
+
+    /// Data frames fully written across all sessions.
+    pub fn total_fed(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.fed).sum()
+    }
+
+    /// Acks received across all sessions.
+    pub fn total_acked(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.acked).sum()
+    }
+}
+
+/// A live swarm session (all driven by the one poller thread).
+struct SwarmClient {
+    sock: TcpStream,
+    /// Index into the report's outcome vector.
+    outcome: usize,
+    arrivals: Arrivals,
+    next_send: Instant,
+    /// Data frames encoded into `out` so far.
+    queued: u64,
+    /// Data frames fully on the wire (`queued` once `out` drains).
+    fed: u64,
+    acked: u64,
+    out: Vec<u8>,
+    out_off: usize,
+    dec: FrameDecoder,
+    sent_eos: bool,
+    /// Close without the handshake once `fed` reaches this.
+    abrupt_after: Option<u64>,
+    want_write: bool,
+}
+
+/// What a client step decided.
+enum SwarmAction {
+    Keep,
+    Close { clean: bool },
+}
+
+/// A fleet of framed TCP camera clients multiplexed over one readiness
+/// poller — the client-side mirror of the server's session reactor. See
+/// the module docs and [`SwarmConfig`].
+pub struct SocketSwarm {
+    cfg: SwarmConfig,
+}
+
+impl SocketSwarm {
+    /// A swarm with the given knobs.
+    pub fn new(cfg: SwarmConfig) -> Self {
+        SocketSwarm { cfg }
+    }
+
+    /// Run the swarm against `addr` to completion (or the configured
+    /// deadline). Errors only on harness-level failures (poller setup);
+    /// per-session I/O failures become unclean outcomes.
+    pub fn run(self, addr: SocketAddr) -> Result<SwarmReport> {
+        let cfg = self.cfg;
+        let mut rng = Rng::new(cfg.seed);
+        let mut poller = Poller::new().context("creating the swarm poller")?;
+        let mut outcomes: Vec<ClientOutcome> = Vec::with_capacity(cfg.clients);
+        let mut slots: Vec<Option<SwarmClient>> = Vec::new();
+        let mut live = 0usize;
+        let mut started = 0usize;
+        let mut next_attach = Instant::now();
+        let deadline = Instant::now() + Duration::from_secs_f64(cfg.timeout_secs.max(0.1));
+        let mut events: Vec<PollEvent> = Vec::new();
+        let mut scratch: Vec<u8> = Vec::new();
+        let mut tmp = [0u8; 4096];
+
+        while started < cfg.clients || live > 0 {
+            if Instant::now() >= deadline {
+                break; // unfinished sessions stay unclean in the report
+            }
+
+            // launch sessions into free capacity, paced by attach interval
+            while started < cfg.clients
+                && live < cfg.max_concurrent.max(1)
+                && Instant::now() >= next_attach
+            {
+                let outcome = outcomes.len();
+                let abrupt = rng.f64() < cfg.abrupt_fraction;
+                let abrupt_after = if abrupt {
+                    // somewhere strictly mid-stream: after ≥1 frame
+                    let span = cfg.frames_per_client.max(2) - 1;
+                    Some(1 + (rng.f64() * span as f64) as u64)
+                } else {
+                    None
+                };
+                outcomes.push(ClientOutcome { fed: 0, acked: 0, clean: false, abrupt });
+                started += 1;
+                next_attach = Instant::now()
+                    + Duration::from_secs_f64(cfg.attach_interval_secs.max(0.0));
+                let sock = match TcpStream::connect_timeout(&addr, Duration::from_millis(500))
+                {
+                    Ok(s) => s,
+                    Err(_) => continue, // rejected/unreachable: unclean outcome
+                };
+                let _ = sock.set_nodelay(true);
+                if sock.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let mut arrivals =
+                    Arrivals::new(cfg.interval_secs, cfg.poisson, cfg.seed.wrapping_add(outcome as u64 + 1));
+                let first = arrivals.next_gap();
+                let slot = match slots.iter().position(|s| s.is_none()) {
+                    Some(i) => i,
+                    None => {
+                        slots.push(None);
+                        slots.len() - 1
+                    }
+                };
+                if poller.register(sock.as_raw_fd(), slot as u64, true, false).is_err() {
+                    continue;
+                }
+                slots[slot] = Some(SwarmClient {
+                    sock,
+                    outcome,
+                    arrivals,
+                    next_send: Instant::now() + Duration::from_secs_f64(first),
+                    queued: 0,
+                    fed: 0,
+                    acked: 0,
+                    out: Vec::new(),
+                    out_off: 0,
+                    dec: FrameDecoder::new(),
+                    sent_eos: false,
+                    abrupt_after,
+                    want_write: false,
+                });
+                live += 1;
+            }
+
+            // paced sends: encode + flush everything that is due
+            let now = Instant::now();
+            for slot in 0..slots.len() {
+                let action = match slots[slot].as_mut() {
+                    Some(c) => Self::step_send(c, &cfg, now),
+                    None => continue,
+                };
+                Self::apply(&mut poller, &mut slots, slot, &mut outcomes, &mut live, action);
+            }
+
+            // nearest timer: a due send, a pending launch, the deadline
+            let now = Instant::now();
+            let mut wake = deadline;
+            if started < cfg.clients && live < cfg.max_concurrent.max(1) {
+                wake = wake.min(next_attach);
+            }
+            for c in slots.iter().flatten() {
+                if !c.sent_eos && c.out.is_empty() && c.queued < cfg.frames_per_client {
+                    wake = wake.min(c.next_send);
+                }
+            }
+            let timeout_ms = wake
+                .saturating_duration_since(now)
+                .as_millis()
+                .min(50) as u64;
+            if poller.wait(&mut events, Some(timeout_ms)).is_err() {
+                break;
+            }
+
+            let drained: Vec<PollEvent> = events.drain(..).collect();
+            for ev in drained {
+                let slot = ev.token as usize;
+                let action = match slots.get_mut(slot).and_then(|s| s.as_mut()) {
+                    Some(c) => Self::step_io(c, ev, &mut scratch, &mut tmp),
+                    None => continue, // already closed this batch
+                };
+                Self::apply(&mut poller, &mut slots, slot, &mut outcomes, &mut live, action);
+            }
+        }
+
+        // deadline or harness exit: everything still live is unclean
+        for slot in 0..slots.len() {
+            Self::apply(
+                &mut poller,
+                &mut slots,
+                slot,
+                &mut outcomes,
+                &mut live,
+                SwarmAction::Close { clean: false },
+            );
+        }
+        Ok(SwarmReport { outcomes })
+    }
+
+    /// Encode the next due Data frame (or the EOS once the budget is
+    /// spent) and push bytes; abrupt sessions close mid-stream here.
+    fn step_send(c: &mut SwarmClient, cfg: &SwarmConfig, now: Instant) -> SwarmAction {
+        if let Some(n) = c.abrupt_after {
+            if c.fed >= n {
+                return SwarmAction::Close { clean: false }; // scripted drop
+            }
+        }
+        if c.out.is_empty() && !c.sent_eos {
+            if c.queued < cfg.frames_per_client {
+                if now < c.next_send {
+                    return SwarmAction::Keep;
+                }
+                let payload = vec![0xCAu8; cfg.payload_bytes];
+                if encode_frame_into(&mut c.out, FrameType::Data, &payload).is_err() {
+                    return SwarmAction::Close { clean: false };
+                }
+                c.queued += 1;
+                c.next_send = now + Duration::from_secs_f64(c.arrivals.next_gap());
+            } else {
+                // budget spent: detach cleanly
+                if encode_frame_into(&mut c.out, FrameType::Eos, &[]).is_err() {
+                    return SwarmAction::Close { clean: false };
+                }
+                c.sent_eos = true;
+            }
+        }
+        Self::flush(c)
+    }
+
+    /// Write as much of the outbound buffer as the socket takes.
+    fn flush(c: &mut SwarmClient) -> SwarmAction {
+        while c.out_off < c.out.len() {
+            match c.sock.write(&c.out[c.out_off..]) {
+                Ok(0) => return SwarmAction::Close { clean: false },
+                Ok(n) => c.out_off += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return SwarmAction::Close { clean: false },
+            }
+        }
+        if c.out_off == c.out.len() {
+            c.out.clear();
+            c.out_off = 0;
+            if !c.sent_eos {
+                c.fed = c.queued; // the frame is fully on the wire
+            }
+        }
+        SwarmAction::Keep
+    }
+
+    /// Handle one readiness event: drain acks / the server's EOS answer,
+    /// flush on writability.
+    fn step_io(
+        c: &mut SwarmClient,
+        ev: PollEvent,
+        scratch: &mut Vec<u8>,
+        tmp: &mut [u8],
+    ) -> SwarmAction {
+        if ev.error {
+            return SwarmAction::Close { clean: false };
+        }
+        if ev.writable {
+            if let SwarmAction::Close { clean } = Self::flush(c) {
+                return SwarmAction::Close { clean };
+            }
+        }
+        if ev.readable {
+            let mut eof = false;
+            loop {
+                match c.sock.read(tmp) {
+                    Ok(0) => {
+                        eof = true;
+                        break;
+                    }
+                    Ok(n) => c.dec.feed(&tmp[..n]),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => return SwarmAction::Close { clean: false },
+                }
+            }
+            loop {
+                match c.dec.next_into(scratch) {
+                    Ok(Some(FrameType::Data)) => c.acked += 1,
+                    Ok(Some(FrameType::Eos)) => {
+                        // the server answered our EOS: handshake complete
+                        return SwarmAction::Close { clean: c.sent_eos };
+                    }
+                    Ok(Some(FrameType::Control)) => {}
+                    Ok(None) => break,
+                    Err(_) => return SwarmAction::Close { clean: false },
+                }
+            }
+            if eof {
+                return SwarmAction::Close { clean: false };
+            }
+        }
+        SwarmAction::Keep
+    }
+
+    /// Apply a step's decision: record the outcome and free the slot (and
+    /// fd) on close, refresh write interest otherwise.
+    fn apply(
+        poller: &mut Poller,
+        slots: &mut [Option<SwarmClient>],
+        slot: usize,
+        outcomes: &mut [ClientOutcome],
+        live: &mut usize,
+        action: SwarmAction,
+    ) {
+        match action {
+            SwarmAction::Keep => {
+                if let Some(c) = slots[slot].as_mut() {
+                    let want = !c.out.is_empty();
+                    if want != c.want_write {
+                        c.want_write = want;
+                        let _ = poller.modify(c.sock.as_raw_fd(), slot as u64, true, want);
+                    }
+                }
+            }
+            SwarmAction::Close { clean } => {
+                if let Some(c) = slots[slot].take() {
+                    let _ = poller.deregister(c.sock.as_raw_fd());
+                    let o = &mut outcomes[c.outcome];
+                    o.fed = c.fed;
+                    o.acked = c.acked;
+                    o.clean = clean;
+                    *live -= 1;
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,5 +696,49 @@ mod tests {
             "queueing under paced load: {}",
             rep.mean_latency()
         );
+    }
+
+    #[test]
+    fn swarm_handshakes_cleanly_against_the_reactor() {
+        use crate::net::reactor::{self, ReactorConfig, ReactorEvent};
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (handle, events, join) =
+            reactor::spawn(listener, ReactorConfig::default()).unwrap();
+        // stand-in for the pipeline: complete every frame immediately so
+        // the reactor acks it
+        let completer = {
+            let handle = handle.clone();
+            std::thread::spawn(move || {
+                while let Ok(ev) = events.recv() {
+                    if let ReactorEvent::Frame { conn, .. } = ev {
+                        handle.complete(conn);
+                    }
+                }
+            })
+        };
+
+        let swarm = SocketSwarm::new(SwarmConfig {
+            clients: 5,
+            max_concurrent: 3, // forces churn: finished sessions free slots
+            frames_per_client: 8,
+            payload_bytes: 32,
+            timeout_secs: 20.0,
+            ..SwarmConfig::default()
+        });
+        let rep = swarm.run(addr).unwrap();
+        assert_eq!(rep.outcomes.len(), 5);
+        assert_eq!(rep.clean(), 5, "all sessions handshake: {:?}", rep.outcomes);
+        for o in &rep.outcomes {
+            assert_eq!(o.fed, 8);
+            assert_eq!(o.acked, 8, "every fed frame acked on clean detach");
+        }
+
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.clean_closes, 5);
+        assert_eq!(stats.frames_in, 40);
+        completer.join().unwrap();
     }
 }

@@ -22,7 +22,9 @@ pub mod tensor;
 pub use backend::{backend_by_name, default_backend, Backend, BlockRunner};
 pub use executor::{BlockExecutable, ChainExecutor};
 pub use scratch::Scratch;
-pub use loadgen::{Arrivals, LoadGen, LoadGenConfig};
+pub use loadgen::{
+    Arrivals, ClientOutcome, LoadGen, LoadGenConfig, SocketSwarm, SwarmConfig, SwarmReport,
+};
 pub use pipeline::{
     stats_channel, FrameIn, FrameInjector, Pipeline, PipelineConfig, PipelineOutput,
     PipelineRunReport, PipelineSnapshot, RunningPipeline, StageSpec, WindowStats, WorkerKind,

@@ -1068,7 +1068,30 @@ fn spawn_tcp_hop(
     let listener =
         TcpListener::bind("127.0.0.1:0").context("binding loopback hop listener")?;
     let addr = listener.local_addr()?;
-    let conn_out = TcpStream::connect(addr).context("connecting loopback hop")?;
+    // connect with jittered backoff: a transiently exhausted accept queue
+    // (every hop of every pipeline in a test process connects at once)
+    // retries instead of failing the whole run
+    let mut backoff = crate::net::resilience::Backoff::new(
+        Duration::from_millis(2),
+        Duration::from_millis(50),
+        idx as u64 + 1,
+    );
+    let conn_out = loop {
+        match TcpStream::connect(addr) {
+            Ok(c) => break c,
+            Err(e) if backoff.attempt() < 5 => {
+                crate::log_debug!(
+                    "pipeline",
+                    "loopback hop {idx} connect retry {}: {e}",
+                    backoff.attempt() + 1
+                );
+                std::thread::sleep(backoff.next_delay());
+            }
+            Err(e) => {
+                return Err(e).context("connecting loopback hop (retries exhausted)");
+            }
+        }
+    };
     let (conn_in, _) = listener.accept().context("accepting loopback hop")?;
     drop(listener);
 

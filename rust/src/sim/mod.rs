@@ -17,4 +17,6 @@ pub mod des;
 pub mod pipeline;
 
 pub use des::{Event, EventQueue};
-pub use pipeline::{simulate, simulate_schedule, PipelineReport, ServerLabel, SimConfig};
+pub use pipeline::{
+    rate_limited_schedule, simulate, simulate_schedule, PipelineReport, ServerLabel, SimConfig,
+};

@@ -363,6 +363,54 @@ pub fn simulate_schedule_batched(
     }
 }
 
+/// Shape a merged arrival schedule through per-stream admission control —
+/// the session reactor's token-bucket rate limiter replayed in virtual
+/// time. Each stream accrues `rate_fps` tokens/sec up to `burst`; a frame
+/// arriving without a token is **delayed** to the accrual instant, never
+/// dropped, and delayed frames of a stream stay FIFO (the reactor pauses
+/// the socket read, so later frames cannot overtake). `rate_fps <= 0`
+/// returns the schedule unchanged.
+///
+/// Feeding the shaped schedule to [`simulate_schedule`] is what makes the
+/// DES the oracle for rate-limited serving: the executed socket plane and
+/// the simulation see the *same* admitted arrival process.
+pub fn rate_limited_schedule(
+    schedule: &[(f64, u32)],
+    rate_fps: f64,
+    burst: f64,
+) -> Vec<(f64, u32)> {
+    if rate_fps <= 0.0 {
+        return schedule.to_vec();
+    }
+    let burst = burst.max(1.0);
+    // per-stream bucket: (tokens at `t_last`, t_last, last release)
+    let mut buckets: std::collections::HashMap<u32, (f64, f64, f64)> =
+        std::collections::HashMap::new();
+    let mut shaped: Vec<(f64, u32)> = Vec::with_capacity(schedule.len());
+    for &(arrival, stream) in schedule {
+        let (tokens, t_last, prev_release) =
+            buckets.entry(stream).or_insert((burst, 0.0, 0.0));
+        // FIFO within the stream: a frame cannot release before its
+        // predecessor even if its own token is long accrued
+        let t0 = arrival.max(*prev_release);
+        let accrued = (*tokens + (t0 - *t_last) * rate_fps).min(burst);
+        let release = if accrued >= 1.0 {
+            *tokens = accrued - 1.0;
+            t0
+        } else {
+            let wait = (1.0 - accrued) / rate_fps;
+            *tokens = 0.0; // the accruing token is consumed on arrival
+            t0 + wait
+        };
+        *t_last = release;
+        *prev_release = release;
+        shaped.push((release, stream));
+    }
+    // releases across streams may interleave differently than arrivals
+    shaped.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    shaped
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -631,5 +679,54 @@ mod tests {
         let rep = simulate(&cm, &p, &SimConfig { frames: 77, ..Default::default() });
         assert_eq!(rep.latencies.len(), 77);
         assert!(rep.latencies.iter().all(|&l| l > 0.0));
+    }
+
+    #[test]
+    fn rate_limiter_delays_but_never_drops() {
+        // one stream blasting 20 frames instantly through a 10 fps bucket
+        // with burst 4: the first 4 admit at t=0, the rest pace at 0.1 s
+        let schedule: Vec<(f64, u32)> = (0..20).map(|_| (0.0, 0u32)).collect();
+        let shaped = rate_limited_schedule(&schedule, 10.0, 4.0);
+        assert_eq!(shaped.len(), 20, "shaping must not drop frames");
+        assert!(shaped.windows(2).all(|w| w[0].0 <= w[1].0), "sorted releases");
+        let burst_admits = shaped.iter().filter(|&&(t, _)| t == 0.0).count();
+        assert_eq!(burst_admits, 4, "burst admits exactly the bucket depth");
+        // steady state: one admitted token per 1/rate
+        let span = shaped.last().unwrap().0;
+        assert!((span - 1.6).abs() < 1e-9, "20 frames at 10 fps after burst 4: {span}");
+        // under-rate traffic passes through untouched
+        let slow: Vec<(f64, u32)> = (0..5).map(|f| (f as f64 * 0.5, 0u32)).collect();
+        assert_eq!(rate_limited_schedule(&slow, 10.0, 1.0), slow);
+        // rate 0 = unlimited
+        assert_eq!(rate_limited_schedule(&schedule, 0.0, 4.0), schedule);
+    }
+
+    #[test]
+    fn rate_limiter_is_per_stream_and_fifo() {
+        // two streams interleaved: each has its own bucket, so stream 1's
+        // backlog never delays stream 0
+        let mut schedule = Vec::new();
+        for k in 0..10 {
+            schedule.push((0.0, 1u32)); // stream 1 blasts
+            schedule.push((k as f64 * 1.0, 0u32)); // stream 0 is slow
+        }
+        let shaped = rate_limited_schedule(&schedule, 5.0, 1.0);
+        assert_eq!(shaped.len(), 20);
+        let s0: Vec<f64> =
+            shaped.iter().filter(|&&(_, s)| s == 0).map(|&(t, _)| t).collect();
+        let s1: Vec<f64> =
+            shaped.iter().filter(|&&(_, s)| s == 1).map(|&(t, _)| t).collect();
+        // stream 0 under its own rate: untouched despite stream 1's burst
+        let expect0: Vec<f64> = (0..10).map(|k| k as f64).collect();
+        assert_eq!(s0, expect0, "cross-stream interference");
+        // stream 1 paces at 0.2 s and stays FIFO
+        assert!(s1.windows(2).all(|w| w[1] > w[0]), "FIFO violated");
+        assert!((s1.last().unwrap() - 1.8).abs() < 1e-9, "10 frames at 5 fps: {s1:?}");
+        // shaped schedules feed the DES directly: frame count conserved
+        let prof = toy_profile();
+        let cm = CostModel::paper(&prof);
+        let p = place(vec![(rid(&cm, "TEE1"), 0..4)]);
+        let rep = simulate_schedule(&cm, &p, &shaped, 4);
+        assert_eq!(rep.stream_frames(0) + rep.stream_frames(1), 20);
     }
 }

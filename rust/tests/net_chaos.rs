@@ -1,0 +1,345 @@
+//! Fault-injection acceptance for the session plane: every way a
+//! camera or an inter-site hop can misbehave must end in a *verdict*,
+//! never a wedge.
+//!
+//! - **Mid-frame disconnect** — a camera dies halfway through a frame:
+//!   the session closes `PeerDisconnect`, unclean, nothing delivered.
+//! - **Slow-loris** — a header arrives, then the drip stops: the
+//!   evidence-based idle scan evicts the session with `IdleTimeout`
+//!   (healthy-but-quiet sessions are never touched — the reactor only
+//!   evicts on a stall *symptom*: a half-received frame).
+//! - **Stalled reader** — a camera sends frames but never reads its
+//!   acks: kernel buffers fill (shrunk via `setsockopt` so the test is
+//!   fast), the egress queue wedges, and the session is evicted
+//!   `WriteStalled` (Linux-only: buffer inheritance from the listener).
+//! - **Flaky hop** — an uplink's connect attempts are refused until its
+//!   circuit breaker opens; when the hop comes back, the half-open
+//!   probe reconnects, and frames queued while it was down flush in
+//!   order.
+//! - **Graceful degradation** — a live [`Server`] with a dead uplink
+//!   surfaces [`ServerEvent::Degraded`] and routes the failure through
+//!   the ordinary §V hot-swap path ([`SwapCompleted`] on record).
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::Receiver;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use serdab::coordinator::{Server, ServerConfig, ServerEvent, SessionPolicy, SyntheticBuilder};
+use serdab::net::reactor::{self, ReactorConfig, ReactorEvent, ReactorHandle, UplinkPolicy};
+use serdab::net::{read_frame, CircuitState, CloseReason, FrameType};
+use serdab::profiler::{DeviceKind, ModelProfile};
+use serdab::topology::{LinkParams, Topology};
+
+#[allow(clippy::type_complexity)]
+fn spawn_reactor(
+    cfg: ReactorConfig,
+) -> (
+    std::net::SocketAddr,
+    ReactorHandle,
+    Receiver<ReactorEvent>,
+    std::thread::JoinHandle<serdab::net::ReactorStats>,
+) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (h, rx, j) = reactor::spawn(listener, cfg).unwrap();
+    (addr, h, rx, j)
+}
+
+/// Drain events until a `Closed` arrives; panics on timeout.
+fn wait_closed(rx: &Receiver<ReactorEvent>, timeout: Duration) -> (CloseReason, u64, u64, bool) {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        assert!(!left.is_zero(), "no Closed event within {timeout:?}");
+        match rx.recv_timeout(left) {
+            Ok(ReactorEvent::Closed { reason, frames_in, acked, clean, .. }) => {
+                return (reason, frames_in, acked, clean)
+            }
+            Ok(_) => continue,
+            Err(e) => panic!("event feed closed: {e}"),
+        }
+    }
+}
+
+/// Drain events until the uplink breaker reaches `want`; returns the
+/// transition detail.
+fn wait_uplink(rx: &Receiver<ReactorEvent>, want: CircuitState, timeout: Duration) -> String {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        assert!(!left.is_zero(), "no UplinkState({want:?}) within {timeout:?}");
+        match rx.recv_timeout(left) {
+            Ok(ReactorEvent::UplinkState { state, detail, .. }) if state == want => return detail,
+            Ok(_) => continue,
+            Err(e) => panic!("event feed closed: {e}"),
+        }
+    }
+}
+
+/// A camera that dies halfway through a frame: header promising 64
+/// payload bytes, ten delivered, then the socket drops.
+#[test]
+fn mid_frame_disconnect_closes_unclean() {
+    let (addr, h, rx, j) = spawn_reactor(ReactorConfig::default());
+    let mut client = TcpStream::connect(addr).unwrap();
+    let mut partial = Vec::new();
+    partial.extend_from_slice(&64u32.to_be_bytes());
+    partial.push(FrameType::Data as u8);
+    partial.extend_from_slice(&[0xAB; 10]);
+    client.write_all(&partial).unwrap();
+    drop(client);
+
+    let (reason, frames_in, _, clean) = wait_closed(&rx, Duration::from_secs(5));
+    assert_eq!(reason, CloseReason::PeerDisconnect);
+    assert!(!clean, "a mid-frame cut can never count as a clean detach");
+    assert_eq!(frames_in, 0, "the truncated frame must not be delivered");
+
+    h.shutdown();
+    let stats = j.join().unwrap();
+    assert_eq!(stats.peer_disconnects, 1);
+    assert_eq!(stats.frames_in, 0);
+}
+
+/// A slow-loris that stalls mid-frame is evicted once the idle deadline
+/// passes — with the socket still open (no disconnect to hide behind).
+#[test]
+fn slow_loris_is_evicted_with_idle_timeout() {
+    let cfg =
+        ReactorConfig { idle_timeout: Duration::from_millis(200), ..ReactorConfig::default() };
+    let (addr, h, rx, j) = spawn_reactor(cfg);
+    let mut client = TcpStream::connect(addr).unwrap();
+
+    // a legitimate header (1024-byte frame coming)...
+    let mut head = Vec::new();
+    head.extend_from_slice(&1024u32.to_be_bytes());
+    head.push(FrameType::Data as u8);
+    client.write_all(&head).unwrap();
+    // ...one dripped byte, then silence
+    thread::sleep(Duration::from_millis(100));
+    client.write_all(&[0x01]).unwrap();
+
+    let (reason, frames_in, _, clean) = wait_closed(&rx, Duration::from_secs(5));
+    assert_eq!(reason, CloseReason::IdleTimeout, "half-received frame + silence = slow-loris");
+    assert!(!clean);
+    assert_eq!(frames_in, 0);
+    drop(client); // held open until the verdict so eviction is the only out
+
+    h.shutdown();
+    let stats = j.join().unwrap();
+    assert_eq!(stats.evictions, 1);
+}
+
+/// A camera that sends frames but never reads its acks: with kernel
+/// buffers shrunk to their minima (send side inherited from the
+/// listener, receive side clamped on the client) the ack backlog
+/// becomes unflushable and the session is evicted `WriteStalled`.
+#[cfg(target_os = "linux")]
+#[test]
+fn stalled_reader_is_evicted_write_stalled() {
+    use std::os::unix::io::AsRawFd;
+
+    fn shrink(fd: i32, opt: libc::c_int) {
+        let bytes: libc::c_int = 1; // the kernel clamps to its floor
+        let rc = unsafe {
+            libc::setsockopt(
+                fd,
+                libc::SOL_SOCKET,
+                opt,
+                &bytes as *const libc::c_int as *const libc::c_void,
+                std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+            )
+        };
+        assert_eq!(rc, 0, "setsockopt failed");
+    }
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    shrink(listener.as_raw_fd(), libc::SO_SNDBUF); // accepted sockets inherit
+    let addr = listener.local_addr().unwrap();
+    let cfg = ReactorConfig {
+        idle_timeout: Duration::from_millis(300),
+        max_inflight: 64,
+        ..ReactorConfig::default()
+    };
+    let (h, rx, j) = reactor::spawn(listener, cfg).unwrap();
+
+    // completer: every delivered frame immediately earns an ack
+    let h2 = h.clone();
+    let (closed_tx, closed_rx) = std::sync::mpsc::channel();
+    let pump = thread::spawn(move || {
+        while let Ok(ev) = rx.recv() {
+            match ev {
+                ReactorEvent::Frame { conn, .. } => h2.complete(conn),
+                ReactorEvent::Closed { reason, clean, .. } => {
+                    let _ = closed_tx.send((reason, clean));
+                }
+                _ => {}
+            }
+        }
+    });
+
+    let mut client = TcpStream::connect(addr).unwrap();
+    shrink(client.as_raw_fd(), libc::SO_RCVBUF); // tiny ack window
+    // 4000 empty frames = ~20 KB of acks against ~7 KB of kernel buffer
+    let mut burst = Vec::new();
+    for _ in 0..4000 {
+        burst.extend_from_slice(&0u32.to_be_bytes());
+        burst.push(FrameType::Data as u8);
+    }
+    client.write_all(&burst).unwrap();
+    // never read a single ack; the socket stays open
+
+    let (reason, clean) = closed_rx
+        .recv_timeout(Duration::from_secs(15))
+        .expect("stalled reader never evicted");
+    assert_eq!(reason, CloseReason::WriteStalled, "unflushable egress must be the verdict");
+    assert!(!clean);
+    drop(client);
+
+    h.shutdown();
+    let stats = j.join().unwrap();
+    pump.join().unwrap();
+    assert_eq!(stats.evictions, 1);
+    assert!(stats.frames_in > 0, "frames were delivered before the stall");
+}
+
+/// A flaky inter-site hop: refused connects trip the breaker (fast-fail
+/// instead of hammering), the hop's return is discovered by the
+/// half-open probe, and frames queued while it was down flush in order.
+#[test]
+fn uplink_breaker_trips_then_half_open_recovers() {
+    let (_addr, h, rx, j) = spawn_reactor(ReactorConfig::default());
+
+    // reserve a port for the hop, then kill it (connects now refused)
+    let hop = TcpListener::bind("127.0.0.1:0").unwrap();
+    let hop_addr = hop.local_addr().unwrap();
+    drop(hop);
+
+    h.add_uplink(
+        0,
+        hop_addr.to_string(),
+        UplinkPolicy {
+            connect_timeout: Duration::from_millis(100),
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(50),
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_millis(200),
+            seed: 5,
+            queue_cap: 16,
+        },
+    );
+    // traffic offered while the hop is down queues (bounded) instead of
+    // being lost or wedging the reactor
+    for i in 0..3u8 {
+        h.uplink_send(0, vec![i]);
+    }
+
+    let detail = wait_uplink(&rx, CircuitState::Open, Duration::from_secs(5));
+    assert!(detail.contains("breaker tripped"), "unexpected trip detail: {detail}");
+
+    // the hop comes back on the same port; the half-open probe finds it
+    let hop = TcpListener::bind(hop_addr).unwrap();
+    let detail = wait_uplink(&rx, CircuitState::Closed, Duration::from_secs(5));
+    assert_eq!(detail, "half-open probe succeeded");
+
+    // everything queued during the outage arrives, in order
+    let (mut sock, _) = hop.accept().unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    for want in 0..3u8 {
+        let (ty, payload) = read_frame(&mut sock).unwrap();
+        assert_eq!(ty, FrameType::Data);
+        assert_eq!(payload, vec![want], "queued frames must flush in order");
+    }
+
+    h.shutdown();
+    let stats = j.join().unwrap();
+    assert!(stats.uplink_trips >= 1, "the trip must be counted: {stats:?}");
+    assert!(stats.uplink_connects >= 1, "the recovery must be counted: {stats:?}");
+    assert_eq!(stats.uplink_frames, 3);
+    assert_eq!(stats.uplink_dropped, 0, "the outage queue stayed under its cap");
+}
+
+/// Same placement-rich graph as `tests/server_session.rs`.
+fn quad_topology() -> Topology {
+    Topology::builder("quad-chaos")
+        .resource("T0", DeviceKind::Tee, 0)
+        .resource("T1", DeviceKind::Tee, 1)
+        .resource("T2", DeviceKind::Tee, 2)
+        .resource("T3", DeviceKind::Tee, 3)
+        .default_link(LinkParams { bandwidth_bps: 1e9, rtt_secs: 1e-4 })
+        .camera(0)
+        .sink(0)
+        .build()
+        .unwrap()
+}
+
+/// A live [`Server`] whose configured uplink is dead: the tripped
+/// breaker surfaces as [`ServerEvent::Degraded`] and — with
+/// `repartition_on_trip` — routes through the ordinary hot-swap path
+/// instead of wedging on the dead hop.
+#[test]
+fn dead_uplink_degrades_server_and_triggers_repartition() {
+    let profile = ModelProfile::millis_demo();
+    let topo = quad_topology();
+    let builder = SyntheticBuilder::new(profile.clone(), topo.clone());
+    let mut server = Server::launch(
+        profile,
+        topo,
+        Box::new(builder),
+        ServerConfig { window_secs: 0.1, ..ServerConfig::default() },
+    )
+    .unwrap();
+    let events = server.events().unwrap();
+
+    let hop = TcpListener::bind("127.0.0.1:0").unwrap();
+    let hop_addr = hop.local_addr().unwrap();
+    drop(hop);
+
+    server
+        .serve_sockets(
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+            SessionPolicy {
+                uplinks: vec![hop_addr.to_string()],
+                uplink_policy: UplinkPolicy {
+                    connect_timeout: Duration::from_millis(100),
+                    backoff_base: Duration::from_millis(10),
+                    backoff_cap: Duration::from_millis(50),
+                    breaker_threshold: 2,
+                    breaker_cooldown: Duration::from_millis(200),
+                    seed: 5,
+                    queue_cap: 16,
+                },
+                repartition_on_trip: true,
+                ..SessionPolicy::default()
+            },
+        )
+        .unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let (mut degraded, mut swapped) = (false, false);
+    let mut seen = Vec::new();
+    while !(degraded && swapped) {
+        let left = deadline.saturating_duration_since(Instant::now());
+        assert!(
+            !left.is_zero(),
+            "no degrade→swap within 15s (degraded={degraded}, swapped={swapped}); events: {seen:?}"
+        );
+        match events.recv_timeout(left) {
+            Ok(ServerEvent::Degraded { reason, .. }) => {
+                assert!(reason.contains("circuit opened"), "unexpected degrade reason: {reason}");
+                degraded = true;
+            }
+            Ok(ServerEvent::SwapCompleted(_)) => swapped = true,
+            Ok(ServerEvent::SwapFailed { error }) => panic!("degraded repartition failed: {error}"),
+            Ok(ev) => seen.push(ev),
+            Err(e) => panic!("event feed closed: {e}"),
+        }
+    }
+
+    let report = server.shutdown().unwrap();
+    assert!(!report.swaps.is_empty(), "the degradation swap must be on record");
+    assert_eq!(report.frames_dropped, 0, "degradation must not drop frames");
+    let stats = report.session_stats.expect("socket plane ran");
+    assert!(stats.uplink_trips >= 1, "the breaker trip must be counted: {stats:?}");
+}

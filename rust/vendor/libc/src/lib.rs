@@ -1,9 +1,19 @@
-//! Minimal in-tree `libc` shim: only the `getrandom(2)` binding that
-//! `serdab::crypto::os_random` uses. On Linux this is the real glibc
-//! symbol; elsewhere a `/dev/urandom` fallback with the same signature
-//! keeps the crate portable.
+//! Minimal in-tree `libc` shim (offline vendor set). Exactly the
+//! syscall surface serdab uses, nothing more:
+//!
+//! - `getrandom(2)` for `serdab::crypto::os_random`;
+//! - `epoll_create1`/`epoll_ctl`/`epoll_wait` + `close` for the
+//!   readiness-driven session reactor (`serdab::net::poller`, Linux);
+//! - `poll(2)` as the portable fallback backend;
+//! - `setsockopt(2)` + the `SO_SNDBUF`/`SO_RCVBUF` options so the chaos
+//!   harness (`tests/net_chaos.rs`) can shrink kernel socket buffers and
+//!   force write-stall conditions deterministically.
+//!
+//! On Linux these are the real glibc symbols; elsewhere the `getrandom`
+//! fallback reads `/dev/urandom` and the epoll surface is simply absent
+//! (the poller selects `poll(2)`, which every unix has).
 
-pub use std::os::raw::c_void;
+pub use std::os::raw::{c_int, c_void};
 
 #[cfg(target_os = "linux")]
 extern "C" {
@@ -25,6 +35,141 @@ pub unsafe fn getrandom(buf: *mut c_void, buflen: usize, _flags: u32) -> isize {
     }
 }
 
+// ---------------------------------------------------------------------------
+// epoll (Linux only)
+// ---------------------------------------------------------------------------
+
+/// Readable (`EPOLLIN` / `POLLIN` share the value on Linux).
+pub const EPOLLIN: u32 = 0x001;
+/// Writable.
+pub const EPOLLOUT: u32 = 0x004;
+/// Error condition (always reported, need not be requested).
+pub const EPOLLERR: u32 = 0x008;
+/// Peer hung up (always reported, need not be requested).
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer closed its write half (half-close detection).
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+/// `epoll_ctl` op: register a new fd.
+pub const EPOLL_CTL_ADD: c_int = 1;
+/// `epoll_ctl` op: remove an fd.
+pub const EPOLL_CTL_DEL: c_int = 2;
+/// `epoll_ctl` op: change the interest set of a registered fd.
+pub const EPOLL_CTL_MOD: c_int = 3;
+
+/// One epoll readiness record. The kernel ABI packs this struct on
+/// x86-64 (12 bytes, no padding between `events` and `data`); getting
+/// the layout wrong silently corrupts every second event in the batch.
+#[cfg(target_os = "linux")]
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+pub struct epoll_event {
+    /// Ready-event bitmask (`EPOLLIN` | `EPOLLOUT` | ...).
+    pub events: u32,
+    /// Caller-owned cookie, returned verbatim (serdab stores a token).
+    pub u64: u64,
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    /// int epoll_create1(int flags)
+    pub fn epoll_create1(flags: c_int) -> c_int;
+    /// int epoll_ctl(int epfd, int op, int fd, struct epoll_event *event)
+    pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut epoll_event) -> c_int;
+    /// int epoll_wait(int epfd, struct epoll_event *events, int maxevents,
+    ///                int timeout)
+    pub fn epoll_wait(
+        epfd: c_int,
+        events: *mut epoll_event,
+        maxevents: c_int,
+        timeout: c_int,
+    ) -> c_int;
+}
+
+// ---------------------------------------------------------------------------
+// poll + close (any unix)
+// ---------------------------------------------------------------------------
+
+/// Readable (poll).
+pub const POLLIN: i16 = 0x001;
+/// Writable (poll).
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (poll; revents only).
+pub const POLLERR: i16 = 0x008;
+/// Hang-up (poll; revents only).
+pub const POLLHUP: i16 = 0x010;
+/// fd not open (poll; revents only).
+pub const POLLNVAL: i16 = 0x020;
+
+/// One `poll(2)` interest/readiness record.
+#[cfg(unix)]
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct pollfd {
+    /// File descriptor to watch.
+    pub fd: c_int,
+    /// Requested events (`POLLIN` | `POLLOUT`).
+    pub events: i16,
+    /// Returned events (kernel-filled).
+    pub revents: i16,
+}
+
+/// `nfds_t`: element count for `poll(2)`.
+#[cfg(unix)]
+#[allow(non_camel_case_types)]
+pub type nfds_t = std::os::raw::c_ulong;
+
+#[cfg(unix)]
+extern "C" {
+    /// int poll(struct pollfd *fds, nfds_t nfds, int timeout)
+    pub fn poll(fds: *mut pollfd, nfds: nfds_t, timeout: c_int) -> c_int;
+    /// int close(int fd)
+    pub fn close(fd: c_int) -> c_int;
+}
+
+// ---------------------------------------------------------------------------
+// setsockopt (any unix; option values differ per OS)
+// ---------------------------------------------------------------------------
+
+/// Socket-level option namespace for `setsockopt`.
+#[cfg(target_os = "linux")]
+pub const SOL_SOCKET: c_int = 1;
+/// Kernel send-buffer size (the kernel doubles and clamps the request).
+#[cfg(target_os = "linux")]
+pub const SO_SNDBUF: c_int = 7;
+/// Kernel receive-buffer size (the kernel doubles and clamps the request).
+#[cfg(target_os = "linux")]
+pub const SO_RCVBUF: c_int = 8;
+
+/// Socket-level option namespace for `setsockopt` (BSD value).
+#[cfg(all(unix, not(target_os = "linux")))]
+pub const SOL_SOCKET: c_int = 0xffff;
+/// Kernel send-buffer size (BSD value).
+#[cfg(all(unix, not(target_os = "linux")))]
+pub const SO_SNDBUF: c_int = 0x1001;
+/// Kernel receive-buffer size (BSD value).
+#[cfg(all(unix, not(target_os = "linux")))]
+pub const SO_RCVBUF: c_int = 0x1002;
+
+/// `socklen_t`: option length for `setsockopt`.
+#[cfg(unix)]
+#[allow(non_camel_case_types)]
+pub type socklen_t = u32;
+
+#[cfg(unix)]
+extern "C" {
+    /// int setsockopt(int fd, int level, int name, const void *val,
+    ///                socklen_t len)
+    pub fn setsockopt(
+        fd: c_int,
+        level: c_int,
+        name: c_int,
+        value: *const c_void,
+        len: socklen_t,
+    ) -> c_int;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -35,5 +180,82 @@ mod tests {
         let n = unsafe { getrandom(buf.as_mut_ptr() as *mut c_void, buf.len(), 0) };
         assert_eq!(n, 64);
         assert_ne!(buf, [0u8; 64]);
+    }
+
+    /// The ABI trap this shim must not fall into: on x86-64 the kernel's
+    /// epoll_event is packed to 12 bytes. A default-repr(C) struct would
+    /// be 16 and epoll_wait would scribble events across the array.
+    #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+    #[test]
+    fn epoll_event_is_packed() {
+        assert_eq!(std::mem::size_of::<epoll_event>(), 12);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_smoke() {
+        use std::net::UdpSocket;
+        use std::os::unix::io::AsRawFd;
+
+        let epfd = unsafe { epoll_create1(0) };
+        assert!(epfd >= 0, "epoll_create1 failed");
+
+        // a UDP socket that has a datagram waiting is readable
+        let rx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let tx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        tx.send_to(b"ping", rx.local_addr().unwrap()).unwrap();
+
+        let mut ev = epoll_event { events: EPOLLIN, u64: 42 };
+        let rc = unsafe { epoll_ctl(epfd, EPOLL_CTL_ADD, rx.as_raw_fd(), &mut ev) };
+        assert_eq!(rc, 0, "epoll_ctl ADD failed");
+
+        let mut out = [epoll_event { events: 0, u64: 0 }; 4];
+        let n = unsafe { epoll_wait(epfd, out.as_mut_ptr(), out.len() as c_int, 1000) };
+        assert_eq!(n, 1, "expected exactly one ready fd");
+        let (events, cookie) = (out[0].events, out[0].u64);
+        assert_ne!(events & EPOLLIN, 0);
+        assert_eq!(cookie, 42, "cookie must round-trip verbatim");
+
+        let rc = unsafe { epoll_ctl(epfd, EPOLL_CTL_DEL, rx.as_raw_fd(), std::ptr::null_mut()) };
+        assert_eq!(rc, 0, "epoll_ctl DEL failed");
+        unsafe { close(epfd) };
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn setsockopt_accepts_buffer_sizes() {
+        use std::net::UdpSocket;
+        use std::os::unix::io::AsRawFd;
+
+        let s = UdpSocket::bind("127.0.0.1:0").unwrap();
+        for opt in [SO_SNDBUF, SO_RCVBUF] {
+            let val: c_int = 4096;
+            let rc = unsafe {
+                setsockopt(
+                    s.as_raw_fd(),
+                    SOL_SOCKET,
+                    opt,
+                    &val as *const c_int as *const c_void,
+                    std::mem::size_of::<c_int>() as socklen_t,
+                )
+            };
+            assert_eq!(rc, 0, "setsockopt rejected option {opt}");
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn poll_smoke() {
+        use std::net::UdpSocket;
+        use std::os::unix::io::AsRawFd;
+
+        let rx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let tx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        tx.send_to(b"ping", rx.local_addr().unwrap()).unwrap();
+
+        let mut fds = [pollfd { fd: rx.as_raw_fd(), events: POLLIN, revents: 0 }];
+        let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as nfds_t, 1000) };
+        assert_eq!(n, 1);
+        assert_ne!(fds[0].revents & POLLIN, 0);
     }
 }

@@ -10,41 +10,71 @@
 #      the batch-1 baseline: if coalescing stops paying for itself the
 #      batching machinery has regressed into pure overhead.
 #
+# Portability rules (so a checkout without a fresh bench run, or a
+# laptop-generated artifact checked on CI, never fails spuriously):
+#   - a missing artifact WARNS and passes (nothing to gate);
+#   - the speedup floor is only enforced when the artifact's "machine"
+#     stamp matches this host's class ($(uname -m)-$(nproc)cpu) — perf
+#     numbers from different hardware are a trend, not a contract;
+#   - parity=false and degenerate rows FAIL regardless of machine:
+#     correctness travels with the artifact.
+# STRICT=1 restores hard failure for both relaxations (CI perf lane).
+#
 # Usage: scripts/check_bench.sh [path/to/BENCH_batching.json]
 set -euo pipefail
 
 bench="${1:-BENCH_batching.json}"
 min_speedup="${MIN_SPEEDUP:-1.2}"
+strict="${STRICT:-0}"
+host_machine="$(uname -m)-$(nproc)cpu"
 
 if [[ ! -f "$bench" ]]; then
-    echo "check_bench: $bench not found (run: cargo bench --bench batching_bench -- --json)" >&2
-    exit 1
+    if [[ "$strict" == "1" ]]; then
+        echo "check_bench: FAIL: $bench not found (STRICT=1)" >&2
+        echo "check_bench: run: cargo bench --bench batching_bench -- --json" >&2
+        exit 1
+    fi
+    echo "check_bench: WARN: $bench not found — nothing to gate (pass)" >&2
+    echo "check_bench: run: cargo bench --bench batching_bench -- --json" >&2
+    echo "check_bench: OK (skipped)"
+    exit 0
 fi
 
-python3 - "$bench" "$min_speedup" <<'PY'
+python3 - "$bench" "$min_speedup" "$host_machine" "$strict" <<'PY'
 import json, sys
 
-path, min_speedup = sys.argv[1], float(sys.argv[2])
+path, min_speedup, host_machine, strict = (
+    sys.argv[1], float(sys.argv[2]), sys.argv[3], sys.argv[4] == "1")
 with open(path) as f:
     bench = json.load(f)
 
 rows = {int(r["batch"]): r for r in bench["rows"]}
 fps1, fps8 = rows[1]["fps"], rows[8]["fps"]
 speedup = fps8 / fps1
+machine = bench.get("machine")
+same_class = machine == host_machine
 print(f"parity={bench['parity']}  fps@1={fps1:.0f}  fps@8={fps8:.0f}  "
-      f"speedup={speedup:.2f}x (floor {min_speedup}x)")
+      f"speedup={speedup:.2f}x (floor {min_speedup}x)  "
+      f"machine={machine or 'unstamped'} vs host={host_machine}")
 
 failed = False
+# correctness claims travel with the artifact: fail on any machine
 if bench["parity"] is not True:
     print("FAIL: batched execution is not bitwise identical to sequential", file=sys.stderr)
-    failed = True
-if speedup < min_speedup:
-    print(f"FAIL: fps@8 is only {speedup:.2f}x fps@1 (< {min_speedup}x)", file=sys.stderr)
     failed = True
 for r in bench["rows"]:
     if r["fps"] <= 0 or r["p99_ms"] <= 0:
         print(f"FAIL: degenerate row {r}", file=sys.stderr)
         failed = True
+# perf claims only bind on the machine class that produced them
+if speedup < min_speedup:
+    if same_class or strict:
+        print(f"FAIL: fps@8 is only {speedup:.2f}x fps@1 (< {min_speedup}x)", file=sys.stderr)
+        failed = True
+    else:
+        print(f"WARN: fps@8 is only {speedup:.2f}x fps@1 (< {min_speedup}x), but the "
+              f"artifact is from '{machine or 'unstamped'}', not this host — not gating",
+              file=sys.stderr)
 
 sys.exit(1 if failed else 0)
 PY

@@ -1,0 +1,113 @@
+#!/usr/bin/env bash
+# Unit tests for scripts/check_bench.sh: exercises every gate/warn path
+# against synthetic BENCH_batching.json artifacts in a temp dir. Run
+# directly (CI runs it next to the real gate):
+#
+#   scripts/test_check_bench.sh
+#
+# Contract under test:
+#   - missing artifact        → warn + pass   (STRICT=1 → fail)
+#   - parity=false            → fail on ANY machine class
+#   - degenerate rows         → fail on ANY machine class
+#   - speedup below floor     → fail only on the producing machine class
+#                               (different/unstamped class → warn + pass;
+#                                STRICT=1 → fail regardless)
+set -uo pipefail
+
+here="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
+check="$here/check_bench.sh"
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+host="$(uname -m)-$(nproc)cpu"
+pass=0
+fail=0
+
+# mk <file> <parity:true|false> <fps8> <machine|none>
+# (fps@1 is fixed at 1000, so fps8 sets the speedup directly)
+mk() {
+    python3 - "$1" "$2" "$3" "$4" <<'PY'
+import json, sys
+file, parity, fps8, machine = (
+    sys.argv[1], sys.argv[2] == "true", float(sys.argv[3]), sys.argv[4])
+doc = {
+    "bench": "batching_bench",
+    "parity": parity,
+    "rows": [
+        {"batch": 1, "fps": 1000.0, "p99_ms": 1.0, "mean_ms": 0.5},
+        {"batch": 8, "fps": fps8, "p99_ms": 1.0, "mean_ms": 0.5},
+    ],
+}
+if machine != "none":
+    doc["machine"] = machine
+with open(file, "w") as f:
+    json.dump(doc, f)
+PY
+}
+
+# expect <name> <want_rc> <got_rc>
+expect() {
+    if [[ "$3" == "$2" ]]; then
+        echo "ok   $1"
+        pass=$((pass + 1))
+    else
+        echo "FAIL $1: want exit $2, got $3"
+        fail=$((fail + 1))
+    fi
+}
+
+# missing artifact: nothing to gate → pass; STRICT makes it binding
+rc=0; "$check" "$tmp/absent.json" >/dev/null 2>&1 || rc=$?
+expect "missing artifact warns and passes" 0 "$rc"
+rc=0; STRICT=1 "$check" "$tmp/absent.json" >/dev/null 2>&1 || rc=$?
+expect "missing artifact fails under STRICT=1" 1 "$rc"
+
+# healthy artifact from this machine class
+mk "$tmp/good.json" true 1500 "$host"
+rc=0; "$check" "$tmp/good.json" >/dev/null 2>&1 || rc=$?
+expect "healthy same-class artifact passes" 0 "$rc"
+
+# healthy but unstamped (pre-machine-field artifact)
+mk "$tmp/good_unstamped.json" true 1500 none
+rc=0; "$check" "$tmp/good_unstamped.json" >/dev/null 2>&1 || rc=$?
+expect "healthy unstamped artifact passes" 0 "$rc"
+
+# parity break: correctness travels with the artifact — fails even from
+# a foreign machine class
+mk "$tmp/parity.json" false 1500 "other-0cpu"
+rc=0; "$check" "$tmp/parity.json" >/dev/null 2>&1 || rc=$?
+expect "parity=false fails on any machine class" 1 "$rc"
+
+# degenerate row: also machine-independent
+mk "$tmp/degenerate.json" true 0 "other-0cpu"
+rc=0; "$check" "$tmp/degenerate.json" >/dev/null 2>&1 || rc=$?
+expect "degenerate row fails on any machine class" 1 "$rc"
+
+# speedup shortfall: binds only on the producing class
+mk "$tmp/slow_same.json" true 1100 "$host"
+rc=0; "$check" "$tmp/slow_same.json" >/dev/null 2>&1 || rc=$?
+expect "speedup shortfall fails on the same class" 1 "$rc"
+
+mk "$tmp/slow_other.json" true 1100 "other-0cpu"
+rc=0; "$check" "$tmp/slow_other.json" >/dev/null 2>&1 || rc=$?
+expect "speedup shortfall warns and passes cross-class" 0 "$rc"
+out="$("$check" "$tmp/slow_other.json" 2>&1)" || true
+case "$out" in
+    *WARN*) expect "cross-class shortfall prints a WARN" 0 0 ;;
+    *) expect "cross-class shortfall prints a WARN" 0 1 ;;
+esac
+
+mk "$tmp/slow_unstamped.json" true 1100 none
+rc=0; "$check" "$tmp/slow_unstamped.json" >/dev/null 2>&1 || rc=$?
+expect "speedup shortfall passes when unstamped" 0 "$rc"
+
+rc=0; STRICT=1 "$check" "$tmp/slow_other.json" >/dev/null 2>&1 || rc=$?
+expect "STRICT=1 restores the hard speedup gate" 1 "$rc"
+
+# the floor itself stays tunable
+rc=0; MIN_SPEEDUP=1.05 "$check" "$tmp/slow_same.json" >/dev/null 2>&1 || rc=$?
+expect "MIN_SPEEDUP lowers the floor" 0 "$rc"
+
+echo
+echo "test_check_bench: $pass passed, $fail failed"
+[[ "$fail" == "0" ]]
