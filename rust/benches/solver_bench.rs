@@ -1,0 +1,218 @@
+//! Fleet-solver bench (DESIGN.md §18): cold solve and incremental
+//! re-solve wall time as the topology grows from the paper's 5-resource
+//! testbed to a 1024-resource random fleet, plus placement-cache
+//! behaviour.
+//!
+//! Per size: a cold [`fleet::solve`] is timed (best of several reps),
+//! the same solve is repeated through a [`PlacementCache`] to prove a
+//! hit returns the identical placement, and a drift on the busiest
+//! stage's resource is repaired with [`fleet::resolve_incremental`] —
+//! the incremental time is compared against the cold time.
+//!
+//! `--json` writes `BENCH_solver.json` at the repo root — the CI
+//! perf-trend lane (`scripts/check_bench.sh`) gates on it: cached
+//! placements must equal their cold solves everywhere, the 256-resource
+//! incremental re-solve must be ≥ 5× faster than cold, and the
+//! 1024-resource cold solve must finish under 5 s without exhausting the
+//! node budget.
+
+use std::time::Instant;
+
+use anyhow::Result;
+use serdab::figures::Table;
+use serdab::placement::cost::CostModel;
+use serdab::placement::fleet::{self, PlacementCache, SolveMode, SolverOpts};
+use serdab::placement::strategies::Strategy;
+use serdab::profiler::ModelProfile;
+use serdab::topology::{gen, Topology};
+use serdab::util::json::{arr, num, obj, s, Json};
+
+const CHUNK: u64 = 10_800;
+
+struct Row {
+    label: String,
+    resources: usize,
+    cold_ms: f64,
+    incr_ms: f64,
+    speedup: f64,
+    mode: &'static str,
+    nodes: u64,
+    budget_exhausted: bool,
+    cache_hit: bool,
+    cache_bitwise: bool,
+    spliced: bool,
+}
+
+/// Bench one topology: cold solve, cache round-trip, drift + incremental
+/// re-solve. `reps` > 1 takes the best wall time (small solves jitter).
+fn bench_topo(label: &str, topo: &Topology, profile: &ModelProfile, reps: usize) -> Result<Row> {
+    let opts = SolverOpts::default();
+    let cm = CostModel::new(profile, topo.clone());
+
+    let mut cold_ms = f64::INFINITY;
+    let mut fp = None;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        let f = fleet::solve(Strategy::Proposed, &cm, CHUNK, &opts);
+        cold_ms = cold_ms.min(t.elapsed().as_secs_f64() * 1e3);
+        fp = Some(f);
+    }
+    let fp = fp.expect("at least one rep ran");
+    fp.plan
+        .placement
+        .validate(topo, profile.m)
+        .map_err(|e| anyhow::anyhow!("{label}: cold solve produced an invalid placement: {e}"))?;
+
+    // cache round-trip: second solve must hit and return the identical
+    // placement
+    let mut cache = PlacementCache::new();
+    let first = cache.solve(Strategy::Proposed, &cm, CHUNK, &opts);
+    let second = cache.solve(Strategy::Proposed, &cm, CHUNK, &opts);
+    let cache_hit = second.mode == SolveMode::Cached;
+    let cache_bitwise = first.plan.placement == fp.plan.placement
+        && second.plan.placement == fp.plan.placement;
+
+    // drift: the busiest stage's resource slows by 30%, the monitor's
+    // recalibration would rescale its speed grade accordingly
+    let standing = fp.plan.placement.clone();
+    let victim = standing
+        .stages
+        .iter()
+        .max_by_key(|st| st.range.len())
+        .expect("placements have stages")
+        .resource;
+    let mut drifted_topo = topo.clone();
+    drifted_topo.set_speed(victim, drifted_topo.speed_of(victim) / 1.3);
+    let cm2 = CostModel::new(profile, drifted_topo);
+
+    let mut incr_ms = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        let o = fleet::resolve_incremental(
+            Strategy::Proposed,
+            &cm2,
+            CHUNK,
+            &standing,
+            &[victim],
+            &opts,
+        );
+        incr_ms = incr_ms.min(t.elapsed().as_secs_f64() * 1e3);
+        out = Some(o);
+    }
+    let out = out.expect("at least one rep ran");
+    out.plan
+        .placement
+        .validate(cm2.topology(), profile.m)
+        .map_err(|e| anyhow::anyhow!("{label}: incremental repair invalid: {e}"))?;
+
+    Ok(Row {
+        label: label.to_string(),
+        resources: topo.len(),
+        cold_ms,
+        incr_ms,
+        speedup: cold_ms / incr_ms.max(1e-6),
+        mode: fp.mode.name(),
+        nodes: fp.nodes,
+        budget_exhausted: fp.budget_exhausted,
+        cache_hit,
+        cache_bitwise,
+        spliced: out.spliced,
+    })
+}
+
+fn main() -> Result<()> {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    println!("# fleet-solver bench\n");
+
+    let profile = ModelProfile::millis_demo();
+    let tree = |n: usize, seed: u64| {
+        gen::generate(&gen::GenSpec { kind: gen::GenKind::Tree, resources: n, seed })
+    };
+    let topos: Vec<(String, Topology, usize)> = vec![
+        ("paper-5".into(), Topology::paper_testbed(), 20),
+        ("tree-64".into(), tree(64, 64)?, 10),
+        ("tree-256".into(), tree(256, 256)?, 5),
+        (
+            "rand-1024".into(),
+            gen::generate(&gen::GenSpec {
+                kind: gen::GenKind::Random,
+                resources: 1024,
+                seed: 1024,
+            })?,
+            2,
+        ),
+    ];
+
+    // warm-up: page in the solver code paths once
+    let warm = CostModel::new(&profile, Topology::paper_testbed());
+    fleet::solve(Strategy::Proposed, &warm, CHUNK, &SolverOpts::default());
+
+    let mut rows = Vec::new();
+    for (label, topo, reps) in &topos {
+        rows.push(bench_topo(label, topo, &profile, *reps)?);
+    }
+
+    let mut table = Table::new(&[
+        "topology", "resources", "mode", "nodes", "cold", "incremental", "speedup", "cache",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.label.clone(),
+            format!("{}", r.resources),
+            r.mode.to_string(),
+            format!("{}", r.nodes),
+            format!("{:.2} ms", r.cold_ms),
+            format!("{:.2} ms", r.incr_ms),
+            format!("{:.1}×", r.speedup),
+            if r.cache_hit && r.cache_bitwise { "hit=cold".into() } else { "MISS".to_string() },
+        ]);
+    }
+    println!("{}", table.render());
+
+    let all_bitwise = rows.iter().all(|r| r.cache_hit && r.cache_bitwise);
+    println!("cache hits bitwise-equal to cold solves: {all_bitwise}");
+
+    if json_mode {
+        // machine class stamp: scripts/check_bench.sh only enforces the
+        // wall-time floors when the recorded class matches the checking
+        // host (`$(uname -m)-$(nproc)cpu`) or STRICT=1 forces them
+        let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+        let machine = format!("{}-{ncpu}cpu", std::env::consts::ARCH);
+        let json = obj(vec![
+            ("bench", s("solver_bench")),
+            ("generator", s("cargo bench --bench solver_bench -- --json")),
+            ("machine", s(&machine)),
+            ("chunk", num(CHUNK as f64)),
+            ("cache_bitwise", Json::Bool(all_bitwise)),
+            (
+                "rows",
+                arr(rows
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("topology", s(&r.label)),
+                            ("resources", num(r.resources as f64)),
+                            ("mode", s(r.mode)),
+                            ("nodes", num(r.nodes as f64)),
+                            ("budget_exhausted", Json::Bool(r.budget_exhausted)),
+                            ("cold_ms", Json::Num(r.cold_ms)),
+                            ("incr_ms", Json::Num(r.incr_ms)),
+                            ("speedup", Json::Num(r.speedup)),
+                            ("cache_hit", Json::Bool(r.cache_hit)),
+                            ("cache_bitwise", Json::Bool(r.cache_bitwise)),
+                            ("spliced", Json::Bool(r.spliced)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ has a parent")
+            .join("BENCH_solver.json");
+        std::fs::write(&path, json.to_string_pretty() + "\n")?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}

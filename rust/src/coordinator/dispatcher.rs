@@ -1,0 +1,403 @@
+//! Sharded multi-chain serving: one logical deployment, K parallel
+//! solved chains (DESIGN.md §18).
+//!
+//! A single placement chain tops out at the throughput of its slowest
+//! stage; past that, admission control is the only lever. The
+//! [`Dispatcher`] scales *out* instead: it partitions the fleet topology
+//! into K disjoint shards ([`shard_topology`]) — each with its own entry
+//! enclave — launches one full [`Server`] per shard (solver, monitor,
+//! hot-swap loop and all), and routes camera streams to shards with
+//! least-loaded admission plus **stream affinity**: a stream attaches to
+//! exactly one shard and every one of its frames follows that chain, so
+//! per-stream ordering and latency accounting need no cross-shard
+//! reconciliation.
+//!
+//! All shards share one [`PlacementCache`]: every solve (launch and
+//! hot-swap, on any shard) goes through the same map, so a shard whose
+//! quantized topology signature was already solved — a relaunch, or a
+//! drift that settles back — is a hit. A drift re-solve on one shard
+//! never perturbs the others: drift is a per-shard event and the
+//! re-solve runs against that shard's cost model alone.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::placement::fleet::PlacementCache;
+use crate::placement::Placement;
+use crate::profiler::ModelProfile;
+use crate::topology::Topology;
+
+use super::server::{
+    Server, ServerConfig, ServerEvent, ServerReport, ServerStatus, SessionPolicy, StageBuilder,
+    StreamHandle, StreamId, StreamReport, StreamSpec, SwapEvent,
+};
+
+/// Partition `topo` into `k` disjoint shard topologies.
+///
+/// Sharding is host-granular (a host's resources never split across
+/// shards — intra-host handoffs stay free) and keeps **original host
+/// numbers**, so a shard's resources, speeds, links, and costs are
+/// exactly those of the parent topology restricted to the shard.
+/// Every in-shard host pair gets an explicit link entry carrying the
+/// parent's effective parameters.
+///
+/// Assignment balances aggregate speed: the `k` heaviest enclave-bearing
+/// hosts seed the shards (every shard needs an entry TEE), then the
+/// remaining hosts go heaviest-first to the lightest shard. The camera
+/// and sink attach at the parent's hosts when the shard contains them,
+/// else at the shard's first-declared enclave host.
+pub fn shard_topology(topo: &Topology, k: usize) -> Result<Vec<Topology>> {
+    if k == 0 {
+        bail!("cannot shard topology '{}' into 0 shards", topo.name);
+    }
+    // distinct hosts in declaration order, with aggregate speed and
+    // whether any enclave lives there
+    let mut order: Vec<usize> = Vec::new();
+    let mut weight: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut has_tee: BTreeMap<usize, bool> = BTreeMap::new();
+    for spec in topo.resources() {
+        if !weight.contains_key(&spec.host) {
+            order.push(spec.host);
+        }
+        *weight.entry(spec.host).or_insert(0.0) += spec.speed;
+        *has_tee.entry(spec.host).or_insert(false) |= spec.kind.trusted();
+    }
+    let mut tee_hosts: Vec<usize> =
+        order.iter().copied().filter(|h| has_tee[h]).collect();
+    if tee_hosts.len() < k {
+        bail!(
+            "topology '{}' has {} enclave-bearing host(s); {} shard(s) each need one",
+            topo.name,
+            tee_hosts.len(),
+            k
+        );
+    }
+    // heaviest first; stable on declaration order for equal weights
+    tee_hosts.sort_by(|a, b| weight[b].partial_cmp(&weight[a]).unwrap());
+    let seeds: BTreeSet<usize> = tee_hosts[..k].iter().copied().collect();
+    let mut shard_hosts: Vec<Vec<usize>> = tee_hosts[..k].iter().map(|&h| vec![h]).collect();
+    let mut shard_weight: Vec<f64> = tee_hosts[..k].iter().map(|&h| weight[&h]).collect();
+    let mut rest: Vec<usize> = order.iter().copied().filter(|h| !seeds.contains(h)).collect();
+    rest.sort_by(|a, b| weight[b].partial_cmp(&weight[a]).unwrap());
+    for h in rest {
+        let lightest = (0..k)
+            .min_by(|&a, &b| shard_weight[a].partial_cmp(&shard_weight[b]).unwrap())
+            .unwrap();
+        shard_hosts[lightest].push(h);
+        shard_weight[lightest] += weight[&h];
+    }
+
+    let mut shards = Vec::with_capacity(k);
+    for (i, hosts) in shard_hosts.iter().enumerate() {
+        let set: BTreeSet<usize> = hosts.iter().copied().collect();
+        let mut b = Topology::builder(format!("{}/shard{i}", topo.name))
+            .default_link(topo.default_link)
+            .crypto_rate(topo.crypto_bytes_per_sec);
+        let mut entry_host = None;
+        for spec in topo.resources() {
+            if set.contains(&spec.host) {
+                if entry_host.is_none() && spec.kind.trusted() {
+                    entry_host = Some(spec.host);
+                }
+                b = b.resource_spec(spec.clone());
+            }
+        }
+        let in_shard: Vec<usize> = set.iter().copied().collect();
+        for (ai, &ha) in in_shard.iter().enumerate() {
+            for &hb in &in_shard[ai + 1..] {
+                b = b.link(ha, hb, topo.link(ha, hb));
+            }
+        }
+        let entry_host = entry_host.expect("every shard is seeded with an enclave host");
+        let camera =
+            if set.contains(&topo.camera_host) { topo.camera_host } else { entry_host };
+        let sink = if set.contains(&topo.sink_host) { topo.sink_host } else { entry_host };
+        let shard = b
+            .camera(camera)
+            .sink(sink)
+            .build()
+            .with_context(|| format!("building shard {i} of topology '{}'", topo.name))?;
+        shards.push(shard);
+    }
+    Ok(shards)
+}
+
+/// Dispatcher knobs.
+pub struct DispatcherConfig {
+    /// How many parallel chains to run.
+    pub shards: usize,
+    /// Per-shard server configuration template. When its `cache` is
+    /// `None` the dispatcher installs one shared [`PlacementCache`]
+    /// across all shards.
+    pub server: ServerConfig,
+    /// Per-shard admission cap: a shard at this many live streams stops
+    /// taking new attaches (0 = unlimited). When every shard is full,
+    /// [`Dispatcher::attach`] fails — explicit admission control, not
+    /// silent queuing.
+    pub max_streams_per_shard: usize,
+}
+
+impl Default for DispatcherConfig {
+    fn default() -> Self {
+        DispatcherConfig {
+            shards: 2,
+            server: ServerConfig::default(),
+            max_streams_per_shard: 0,
+        }
+    }
+}
+
+/// A [`ServerEvent`] tagged with the shard that emitted it.
+#[derive(Debug)]
+pub struct DispatcherEvent {
+    /// Which shard.
+    pub shard: usize,
+    /// The shard server's event.
+    pub event: ServerEvent,
+}
+
+/// A stream admitted by the dispatcher: its dispatcher-global id, the
+/// shard it has affinity to, and the shard server's handle.
+pub struct DispatchedStream {
+    /// Dispatcher-global stream id (use with [`Dispatcher::detach`]).
+    pub id: StreamId,
+    /// The shard every frame of this stream follows.
+    pub shard: usize,
+    /// The underlying shard-server handle.
+    pub handle: StreamHandle,
+}
+
+/// One logical deployment served by K parallel chains. See the module
+/// docs for the routing and cache-sharing model.
+pub struct Dispatcher {
+    servers: Vec<Server>,
+    topos: Vec<Topology>,
+    routes: HashMap<StreamId, (usize, StreamId)>,
+    live: Vec<usize>,
+    next_id: StreamId,
+    max_per_shard: usize,
+    cache: Option<Arc<Mutex<PlacementCache>>>,
+    events_rx: Option<Receiver<DispatcherEvent>>,
+    forwarders: Vec<JoinHandle<()>>,
+}
+
+impl Dispatcher {
+    /// Shard `topo`, launch one [`Server`] per shard (each building its
+    /// pipeline through `builder(&shard_topo)`), and start dispatching.
+    pub fn launch(
+        profile: &ModelProfile,
+        topo: &Topology,
+        mut builder: impl FnMut(&Topology) -> Box<dyn StageBuilder>,
+        cfg: DispatcherConfig,
+    ) -> Result<Dispatcher> {
+        let topos = shard_topology(topo, cfg.shards)?;
+        let mut server_cfg = cfg.server;
+        if server_cfg.cache.is_none() {
+            server_cfg.cache = Some(Arc::new(Mutex::new(PlacementCache::new())));
+        }
+        let cache = server_cfg.cache.clone();
+
+        let (tx, rx) = channel();
+        let mut servers = Vec::with_capacity(topos.len());
+        let mut forwarders = Vec::new();
+        for (i, st) in topos.iter().enumerate() {
+            let mut srv =
+                Server::launch(profile.clone(), st.clone(), builder(st), server_cfg.clone())
+                    .with_context(|| format!("launching shard {i} ('{}')", st.name))?;
+            if let Some(ev) = srv.events() {
+                let tx = tx.clone();
+                forwarders.push(std::thread::spawn(move || {
+                    for event in ev {
+                        if tx.send(DispatcherEvent { shard: i, event }).is_err() {
+                            break;
+                        }
+                    }
+                }));
+            }
+            servers.push(srv);
+        }
+        drop(tx);
+
+        let live = vec![0; servers.len()];
+        Ok(Dispatcher {
+            servers,
+            topos,
+            routes: HashMap::new(),
+            live,
+            next_id: 0,
+            max_per_shard: cfg.max_streams_per_shard,
+            cache,
+            events_rx: Some(rx),
+            forwarders,
+        })
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// The shard topologies, in shard order.
+    pub fn topologies(&self) -> &[Topology] {
+        &self.topos
+    }
+
+    /// The merged event stream (every shard's events, tagged). Callable
+    /// once.
+    pub fn events(&mut self) -> Option<Receiver<DispatcherEvent>> {
+        self.events_rx.take()
+    }
+
+    /// Admit a stream: route it to the least-loaded shard with capacity
+    /// and attach it there. The stream keeps affinity to that shard for
+    /// its whole life.
+    pub fn attach(&mut self, spec: StreamSpec) -> Result<DispatchedStream> {
+        let shard = (0..self.servers.len())
+            .filter(|&i| self.max_per_shard == 0 || self.live[i] < self.max_per_shard)
+            .min_by_key(|&i| self.live[i])
+            .ok_or_else(|| {
+                anyhow!(
+                    "all {} shards are at the admission cap of {} streams",
+                    self.servers.len(),
+                    self.max_per_shard
+                )
+            })?;
+        self.attach_to(shard, spec)
+    }
+
+    /// Attach a stream to an explicit shard (bypasses least-loaded
+    /// routing; still subject to the admission cap).
+    pub fn attach_to(&mut self, shard: usize, spec: StreamSpec) -> Result<DispatchedStream> {
+        anyhow::ensure!(shard < self.servers.len(), "no shard {shard}");
+        anyhow::ensure!(
+            self.max_per_shard == 0 || self.live[shard] < self.max_per_shard,
+            "shard {shard} is at the admission cap of {} streams",
+            self.max_per_shard
+        );
+        let handle = self.servers[shard].attach(spec)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.routes.insert(id, (shard, handle.id()));
+        self.live[shard] += 1;
+        Ok(DispatchedStream { id, shard, handle })
+    }
+
+    /// Detach a stream by its dispatcher-global id.
+    pub fn detach(&mut self, id: StreamId) -> Result<StreamReport> {
+        let (shard, inner) =
+            self.routes.remove(&id).ok_or_else(|| anyhow!("no dispatched stream {id}"))?;
+        self.live[shard] -= 1;
+        self.servers[shard].detach(inner)
+    }
+
+    /// Which shard a live stream has affinity to.
+    pub fn shard_of(&self, id: StreamId) -> Option<usize> {
+        self.routes.get(&id).map(|&(s, _)| s)
+    }
+
+    /// Per-shard point-in-time status, in shard order.
+    pub fn status(&self) -> Vec<ServerStatus> {
+        self.servers.iter().map(|s| s.status()).collect()
+    }
+
+    /// Per-shard hot-swap histories, in shard order.
+    pub fn swaps_by_shard(&self) -> Vec<Vec<SwapEvent>> {
+        self.servers.iter().map(|s| s.swaps()).collect()
+    }
+
+    /// The live placement of one shard.
+    pub fn placement(&self, shard: usize) -> Option<Placement> {
+        self.servers.get(shard).and_then(|s| s.placement())
+    }
+
+    /// Shared placement-cache counters `(hits, misses)`.
+    pub fn cache_stats(&self) -> Option<(u64, u64)> {
+        self.cache.as_ref().map(|c| {
+            let c = c.lock().unwrap();
+            (c.hits(), c.misses())
+        })
+    }
+
+    /// Ask one shard for an out-of-band re-partition.
+    pub fn request_repartition(&self, shard: usize, reason: impl Into<String>) -> Result<()> {
+        let srv = self.servers.get(shard).ok_or_else(|| anyhow!("no shard {shard}"))?;
+        srv.request_repartition(reason);
+        Ok(())
+    }
+
+    /// Attach a TCP listener to one shard's session reactor. Each shard
+    /// binds its own listener — socket streams get shard affinity at the
+    /// network layer (clients of shard `i` connect to shard `i`'s port).
+    pub fn serve_sockets(
+        &mut self,
+        shard: usize,
+        listener: TcpListener,
+        policy: SessionPolicy,
+    ) -> Result<SocketAddr> {
+        anyhow::ensure!(shard < self.servers.len(), "no shard {shard}");
+        self.servers[shard].serve_sockets(listener, policy)
+    }
+
+    /// Shut down every shard (drain, stop, report), in shard order.
+    pub fn shutdown(self) -> Result<Vec<ServerReport>> {
+        let mut reports = Vec::with_capacity(self.servers.len());
+        for srv in self.servers {
+            reports.push(srv.shutdown()?);
+        }
+        for f in self.forwarders {
+            let _ = f.join();
+        }
+        Ok(reports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_paper_testbed_two_ways() {
+        let topo = Topology::paper_testbed();
+        let shards = shard_topology(&topo, 2).unwrap();
+        assert_eq!(shards.len(), 2);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, topo.len());
+        for s in &shards {
+            assert!(!s.tees().is_empty(), "shard '{}' lost its enclave", s.name);
+        }
+        // resource names are disjoint across shards
+        let mut names = BTreeSet::new();
+        for s in &shards {
+            for r in s.resources() {
+                assert!(names.insert(r.name.clone()), "resource {} in two shards", r.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_rejects_more_shards_than_enclave_hosts() {
+        let topo = Topology::paper_testbed();
+        let err = shard_topology(&topo, 9).unwrap_err().to_string();
+        assert!(err.contains("enclave-bearing"), "{err}");
+    }
+
+    #[test]
+    fn shard_links_match_parent() {
+        let topo = Topology::paper_testbed();
+        for shard in shard_topology(&topo, 2).unwrap() {
+            let hosts: BTreeSet<usize> = shard.resources().iter().map(|r| r.host).collect();
+            for &a in &hosts {
+                for &b in &hosts {
+                    if a < b {
+                        assert_eq!(shard.link(a, b), topo.link(a, b));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -13,14 +13,21 @@
 //! placement against the observed stage times and hot-swaps the pipeline
 //! — drain, redeploy, resume — without the caller rebuilding anything.
 //! The one-shot [`Deployment::run_stream`] remains as a thin wrapper over
-//! the same engine lifecycle for batch experiments.
+//! the same engine lifecycle for batch experiments. At fleet scale the
+//! [`Dispatcher`] shards one logical deployment across K parallel solved
+//! chains with least-loaded admission and stream-affinity routing
+//! ([`dispatcher`], DESIGN.md §18).
 
 pub mod deploy;
+pub mod dispatcher;
 pub mod monitor;
 pub mod resources;
 pub mod server;
 
 pub use deploy::{Deployment, DeploymentReport};
+pub use dispatcher::{
+    shard_topology, DispatchedStream, Dispatcher, DispatcherConfig, DispatcherEvent,
+};
 pub use monitor::{Monitor, MonitorVerdict};
 pub use resources::{RegisteredDevice, ResourceManager};
 pub use server::{

@@ -83,8 +83,9 @@ use crate::net::reactor::{
 };
 use crate::net::resilience::CircuitState;
 use crate::placement::cost::{recalibrate_speeds, CostModel, PathCost};
-use crate::placement::strategies::{plan, Strategy};
-use crate::placement::Placement;
+use crate::placement::fleet::{self, PlacementCache, SolverOpts};
+use crate::placement::strategies::{Plan, Strategy};
+use crate::placement::{Placement, ResourceId};
 use crate::profiler::ModelProfile;
 use crate::runtime::loadgen::Arrivals;
 use crate::runtime::pipeline::{
@@ -252,6 +253,17 @@ pub struct ServerConfig {
     /// Mux channel depth (frames buffered between cameras and feeder);
     /// when full, cameras block — per-stream backpressure.
     pub mux_depth: usize,
+    /// Fleet-solver bounds (exact/beam threshold, beam width, node
+    /// budget). On the paper testbed the defaults reduce to the exact
+    /// enumerator, so small deployments are unaffected.
+    pub solver: SolverOpts,
+    /// Shared placement cache consulted before every solve (launch and
+    /// hot-swap). `None` disables caching. Shared across servers — the
+    /// dispatcher hands every shard the same cache.
+    pub cache: Option<Arc<Mutex<PlacementCache>>>,
+    /// Re-solve only the drifted subgraph on a hot swap (incremental
+    /// splice, DESIGN.md §18) instead of solving from scratch.
+    pub incremental: bool,
 }
 
 impl Default for ServerConfig {
@@ -264,8 +276,54 @@ impl Default for ServerConfig {
             drift_threshold: 0.5,
             patience: 2,
             mux_depth: 16,
+            solver: SolverOpts::default(),
+            cache: None,
+            incremental: false,
         }
     }
+}
+
+/// Solve through the shared cache when one is configured; otherwise run
+/// the fleet solver directly. Both paths honour `cfg.solver` bounds.
+fn solve_with_cache(cfg: &ServerConfig, cm: &CostModel<'_>) -> Plan {
+    match &cfg.cache {
+        Some(cache) => {
+            cache.lock().unwrap().solve(cfg.strategy, cm, cfg.chunk, &cfg.solver).plan
+        }
+        None => fleet::solve(cfg.strategy, cm, cfg.chunk, &cfg.solver).plan,
+    }
+}
+
+/// Incremental re-solve on drift: consult the cache first (the recali-
+/// brated topology may quantize onto a signature seen before), else
+/// repair only the drifted window of the standing placement and remember
+/// the result under the new signature.
+fn resolve_with_cache(
+    cfg: &ServerConfig,
+    cm: &CostModel<'_>,
+    standing: &Placement,
+    drifted: &[ResourceId],
+) -> Plan {
+    let Some(cache) = &cfg.cache else {
+        return fleet::resolve_incremental(
+            cfg.strategy,
+            cm,
+            cfg.chunk,
+            standing,
+            drifted,
+            &cfg.solver,
+        )
+        .plan;
+    };
+    let key = PlacementCache::key(cm.profile, cm.topology(), cfg.strategy, cfg.chunk);
+    if let Some(p) = cache.lock().unwrap().lookup(&key, cm) {
+        let cost = cm.cost(&p);
+        return Plan { strategy: cfg.strategy, placement: p, cost, examined: 0 };
+    }
+    let out =
+        fleet::resolve_incremental(cfg.strategy, cm, cfg.chunk, standing, drifted, &cfg.solver);
+    cache.lock().unwrap().insert(key, out.plan.placement.clone());
+    out.plan
 }
 
 /// Knobs of the socket session plane ([`Server::serve_sockets`]): the
@@ -696,7 +754,7 @@ impl Server {
         cfg: ServerConfig,
     ) -> Result<Server> {
         let cm = CostModel::new(&profile, topo.clone());
-        let p = plan(cfg.strategy, &cm, cfg.chunk);
+        let p = solve_with_cache(&cfg, &cm);
         let built = builder
             .build(&topo, &p.placement, &p.cost, cfg.engine)
             .context("building the initial pipeline generation")?;
@@ -1486,9 +1544,15 @@ fn hot_swap(
     // 3. fold the observed profile into the topology and re-solve
     let mut planner = inner.planner.lock().unwrap();
     let Planner { topo, builder, monitor } = &mut *planner;
-    recalibrate_speeds(topo, &old_placement, monitor.predicted(), monitor.observed());
+    let ratios =
+        recalibrate_speeds(topo, &old_placement, monitor.predicted(), monitor.observed());
     let cm = CostModel::new(&inner.profile, topo.clone());
-    let p = plan(inner.cfg.strategy, &cm, inner.cfg.chunk);
+    let p = if inner.cfg.incremental {
+        let drifted = fleet::drifted_resources(&old_placement, &ratios, 0.05);
+        resolve_with_cache(&inner.cfg, &cm, &old_placement, &drifted)
+    } else {
+        solve_with_cache(&inner.cfg, &cm)
+    };
     let from = old_placement.describe(topo);
     let to = p.placement.describe(topo);
 

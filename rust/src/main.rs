@@ -16,16 +16,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use serdab::coordinator::{
-    DeployBuilder, Server, ServerConfig, ServerEvent, SessionPolicy, StageBuilder, StreamSpec,
-    SyntheticBuilder,
+    shard_topology, DeployBuilder, Dispatcher, DispatcherConfig, Server, ServerConfig,
+    ServerEvent, SessionPolicy, StageBuilder, StreamSpec, SyntheticBuilder,
 };
 use serdab::figures::Table;
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::model::MODEL_NAMES;
 use serdab::placement::cost::CostModel;
+use serdab::placement::fleet::{self, PlacementCache};
 use serdab::placement::strategies::{plan, speedup_table, Strategy};
 use serdab::profiler::{calibrated_profile, ModelProfile};
-use serdab::topology::Topology;
+use serdab::topology::{gen, Topology};
 use serdab::util::cli::{Args, Command};
 use serdab::util::log;
 use serdab::video::{SceneKind, VideoSource};
@@ -45,6 +46,7 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "sweep" => cmd_sweep(&rest),
         "study" => cmd_study(&rest),
+        "topo" => cmd_topo(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             return;
@@ -69,6 +71,8 @@ fn usage() -> &'static str {
      \x20         uses real NN partitions with artifacts, synthetic stages without)\n\
      \x20 sweep  [--topology f.json] [--frames N]                                Fig.12-style table\n\
      \x20 study  [--subjects N]                                                  Fig.10/11 simulators\n\
+     \x20 topo   gen --kind tree|random --resources N [--seed S] [--out f.json]  generate a topology\n\
+     \x20 plan/serve also take --shards K to split the topology into K parallel chains\n\
      run any with --help for options"
 }
 
@@ -126,24 +130,44 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         .opt("model", "googlenet", "model name ('all', or 'demo' for the artifact-free profile)")
         .opt("topology", "", "topology JSON file (default: the paper testbed)")
         .opt("frames", "10800", "chunk size n")
-        .opt("strategy", "proposed", "strategy to solve");
+        .opt("strategy", "proposed", "strategy to solve")
+        .opt("shards", "0", "split the topology into K parallel chains and plan each (0 = off)");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     let n: u64 = a.get_u64("frames").map_err(|e| anyhow::anyhow!(e))?;
     let strat = strategy_from(a.get("strategy"))?;
+    let shards = a.get_usize("shards").map_err(|e| anyhow::anyhow!(e))?;
     let topo = topology_from(&a)?;
     println!("topology: {}", topo.summary());
+    let opts = fleet::SolverOpts::default();
+    let topos = if shards == 0 { vec![topo] } else { shard_topology(&topo, shards)? };
     for (name, profile) in profiles_from(a.get("model"))? {
-        let cm = CostModel::new(&profile, topo.clone());
-        let p = plan(strat, &cm, n);
-        println!(
-            "{name}: {}\n  chunk({n}) = {:.1}s  period = {:.3}s  single-frame = {:.3}s  \
-             (examined {} paths)",
-            p.placement.describe(cm.topology()),
-            p.cost.chunk_secs(n),
-            p.cost.period_secs,
-            p.cost.single_secs,
-            p.examined
-        );
+        // one cache per model: shards that quantize to the same topology
+        // signature solve once and hit for the rest
+        let mut cache = PlacementCache::new();
+        for st in &topos {
+            let cm = CostModel::new(&profile, st.clone());
+            let fp = cache.solve(strat, &cm, n, &opts);
+            let p = &fp.plan;
+            let label =
+                if shards == 0 { name.clone() } else { format!("{name} [{}]", st.name) };
+            println!(
+                "{label}: {}\n  chunk({n}) = {:.1}s  period = {:.3}s  single-frame = {:.3}s  \
+                 ({}, {} nodes)",
+                p.placement.describe(cm.topology()),
+                p.cost.chunk_secs(n),
+                p.cost.period_secs,
+                p.cost.single_secs,
+                fp.mode.name(),
+                fp.nodes
+            );
+        }
+        if shards > 0 {
+            println!(
+                "  placement cache: {} hit(s), {} miss(es)",
+                cache.hits(),
+                cache.misses()
+            );
+        }
     }
     Ok(())
 }
@@ -201,7 +225,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("max-inflight", "8", "per-session in-flight frame cap (with --listen)")
         .opt("rate-limit", "0", "per-session rate limit, fps (0 = unlimited; with --listen)")
         .opt("idle-timeout", "10", "evict stalled sessions after this many seconds (with --listen)")
-        .opt("seed", "7", "video seed");
+        .opt("seed", "7", "video seed")
+        .opt("shards", "0", "serve K parallel chains over a sharded topology (0 = one chain)")
+        .flag("incremental", "re-solve only the drifted subgraph on hot swaps");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     if !a.get("backend").is_empty() {
         // stage threads construct their backend via default_backend(),
@@ -242,19 +268,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let batch = a.get_usize("batch").map_err(|e| anyhow::anyhow!(e))?;
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
     let batch_wait_us = a.get_u64("batch-wait-us").map_err(|e| anyhow::anyhow!(e))?;
+    let shards = a.get_usize("shards").map_err(|e| anyhow::anyhow!(e))?;
     let topo = topology_from(&a)?;
     println!("topology: {}", topo.summary());
 
     // Serving mode: real NN partitions through the attested deployment
     // path when the compiled artifacts exist; otherwise the synthetic
     // builder executes the demo profile's modelled service times — same
-    // Server, same monitor loop, no artifacts required.
+    // Server, same monitor loop, no artifacts required. Sharded serving
+    // builds one pipeline per shard, so the builder is a factory over
+    // the (shard) topology.
     let artifacts = default_artifacts_dir();
     let real = model != "demo" && artifacts.join("manifest.json").exists();
-    let (profile, builder): (ModelProfile, Box<dyn StageBuilder>) = if real {
+    let (profile, man) = if real {
         let man = load_manifest(&artifacts)?;
         let profile = calibrated_profile(man.model(&model)?);
-        (profile, Box::new(DeployBuilder::new(man, model.clone(), wan_bps)))
+        (profile, Some(man))
     } else {
         if model != "demo" {
             eprintln!(
@@ -263,8 +292,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 artifacts.display()
             );
         }
-        let profile = ModelProfile::millis_demo();
-        (profile.clone(), Box::new(SyntheticBuilder::new(profile, topo.clone())))
+        (ModelProfile::millis_demo(), None)
+    };
+    let make_builder = |st: &Topology| -> Box<dyn StageBuilder> {
+        match &man {
+            Some(m) => Box::new(DeployBuilder::new(m.clone(), model.clone(), wan_bps)),
+            None => Box::new(SyntheticBuilder::new(profile.clone(), st.clone())),
+        }
     };
 
     // Default per-stream rate: aggregate ≈ 80% of the planned pipeline
@@ -284,6 +318,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut cfg = ServerConfig {
         strategy: strat,
         window_secs: window,
+        incremental: a.has_flag("incremental"),
         ..ServerConfig::default()
     };
     cfg.engine.batch = batch;
@@ -291,6 +326,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if batch > 1 {
         println!("micro-batching: up to {batch} frames per invocation, {batch_wait_us}µs gather");
     }
+
+    if shards > 0 {
+        anyhow::ensure!(
+            listen.is_empty(),
+            "--listen is not supported with --shards (bind per-shard listeners via the API)"
+        );
+        return serve_sharded(ShardedServe {
+            profile: &profile,
+            topo: &topo,
+            make_builder,
+            cfg,
+            shards,
+            streams,
+            interval_secs,
+            frames_per_stream,
+            duration,
+            real,
+            scene,
+            seed,
+        });
+    }
+
+    let builder = make_builder(&topo);
     let mut server = Server::launch(profile, topo, builder, cfg)?;
     let events = server.events().expect("fresh server has its event feed");
     println!("placement: {}", server.status().placement);
@@ -390,6 +448,119 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Everything the sharded serving path needs from `cmd_serve`'s parse.
+struct ShardedServe<'a, F: FnMut(&Topology) -> Box<dyn StageBuilder>> {
+    profile: &'a ModelProfile,
+    topo: &'a Topology,
+    make_builder: F,
+    cfg: ServerConfig,
+    shards: usize,
+    streams: u32,
+    interval_secs: f64,
+    frames_per_stream: u64,
+    duration: Option<f64>,
+    real: bool,
+    scene: SceneKind,
+    seed: u64,
+}
+
+/// `serve --shards K`: one logical deployment over K parallel chains.
+/// Streams are admitted least-loaded with stream affinity; all shards
+/// share one placement cache (see `coordinator::dispatcher`).
+fn serve_sharded<F: FnMut(&Topology) -> Box<dyn StageBuilder>>(
+    s: ShardedServe<'_, F>,
+) -> Result<()> {
+    let dcfg = DispatcherConfig {
+        shards: s.shards,
+        server: s.cfg,
+        max_streams_per_shard: 0,
+    };
+    let mut disp = Dispatcher::launch(s.profile, s.topo, s.make_builder, dcfg)?;
+    let events = disp.events().expect("fresh dispatcher has its event feed");
+    for (i, st) in disp.topologies().iter().enumerate() {
+        println!("shard {i}: {}", st.summary());
+    }
+    for (i, st) in disp.status().iter().enumerate() {
+        println!("shard {i} placement: {}", st.placement);
+    }
+    println!(
+        "serving: {} stream(s) across {} shard(s), {:.1} fps each{}",
+        s.streams,
+        disp.shards(),
+        1.0 / s.interval_secs,
+        match s.duration {
+            Some(d) => format!(", for {d:.1}s"),
+            None => format!(", {} frames each", s.frames_per_stream),
+        }
+    );
+
+    for i in 0..s.streams {
+        let budget = if s.duration.is_some() { None } else { Some(s.frames_per_stream) };
+        let payload: Box<dyn FnMut(u64) -> Vec<u8> + Send> = if s.real {
+            let mut src = VideoSource::new(s.scene, s.seed.wrapping_add(i as u64));
+            Box::new(move |_| src.next_frame().to_le_bytes())
+        } else {
+            Box::new(|_| vec![0u8; 256])
+        };
+        let d = disp.attach(StreamSpec {
+            label: format!("cam-{i}"),
+            interval_secs: s.interval_secs,
+            poisson: false,
+            seed: s.seed.wrapping_add(i as u64),
+            frames: budget,
+            payload,
+        })?;
+        println!("  cam-{i} → shard {}", d.shard);
+    }
+
+    let deadline = s.duration.map(|d| Instant::now() + Duration::from_secs_f64(d));
+    let total_target = s.streams as u64 * s.frames_per_stream;
+    let mut last_progress = (0u64, Instant::now());
+    loop {
+        if let Ok(ev) = events.recv_timeout(Duration::from_millis(200)) {
+            print!("[shard {}] ", ev.shard);
+            print_server_event(&ev.event);
+        }
+        if let Some(dl) = deadline {
+            if Instant::now() >= dl {
+                break;
+            }
+            continue;
+        }
+        let sts = disp.status();
+        let fed: u64 = sts.iter().flat_map(|st| st.streams.iter()).map(|r| r.fed).sum();
+        let completed: u64 = sts.iter().map(|st| st.frames_completed).sum();
+        if fed >= total_target && completed >= fed {
+            break;
+        }
+        if completed != last_progress.0 {
+            last_progress = (completed, Instant::now());
+        } else if last_progress.1.elapsed() > Duration::from_secs(15) {
+            eprintln!("warning: no serving progress for 15s — shutting down");
+            break;
+        }
+    }
+
+    if let Some((hits, misses)) = disp.cache_stats() {
+        println!("placement cache: {hits} hit(s), {misses} miss(es)");
+    }
+    let swaps = disp.swaps_by_shard();
+    let reports = disp.shutdown()?;
+    let mut total = 0u64;
+    for (i, rep) in reports.iter().enumerate() {
+        total += rep.frames;
+        println!(
+            "shard {i}: {} frames over {} generation(s), {} hot-swap(s), {} dropped",
+            rep.frames,
+            rep.segments.len(),
+            swaps[i].len(),
+            rep.frames_dropped
+        );
+    }
+    println!("served {total} frames across {} shard(s)", reports.len());
+    Ok(())
+}
+
 /// One line per server event, CLI form.
 fn print_server_event(ev: &ServerEvent) {
     match ev {
@@ -438,5 +609,42 @@ fn cmd_study(argv: &[String]) -> Result<()> {
     let pct: Vec<String> =
         rep.agreement_by_rank.iter().map(|a| format!("{:.0}%", a * 100.0)).collect();
     println!("Fig.11 ranking agreement by rank 1..5: {pct:?}");
+    Ok(())
+}
+
+fn cmd_topo(argv: &[String]) -> Result<()> {
+    let (sub, rest) = match argv.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => anyhow::bail!(
+            "usage: serdab topo gen --kind tree|random --resources N [--seed S] [--out f.json]"
+        ),
+    };
+    match sub {
+        "gen" => cmd_topo_gen(&rest),
+        other => anyhow::bail!("unknown topo subcommand '{other}' (available: gen)"),
+    }
+}
+
+fn cmd_topo_gen(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serdab topo gen", "generate a seeded fleet topology")
+        .opt("kind", "tree", "tree (edge→hub→cloud tiers) | random")
+        .opt("resources", "64", "total resource count")
+        .opt("seed", "1", "generator seed (same seed, same graph)")
+        .opt("out", "", "write the topology JSON here (default: stdout)");
+    let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let spec = gen::GenSpec {
+        kind: gen::GenKind::parse(a.get("kind"))?,
+        resources: a.get_usize("resources").map_err(|e| anyhow::anyhow!(e))?,
+        seed: a.get_u64("seed").map_err(|e| anyhow::anyhow!(e))?,
+    };
+    let topo = gen::generate(&spec)?;
+    eprintln!("generated: {}", topo.summary());
+    match a.get("out") {
+        "" => println!("{}", topo.to_json().to_string_pretty()),
+        path => {
+            topo.save(path)?;
+            eprintln!("wrote {path}");
+        }
+    }
     Ok(())
 }

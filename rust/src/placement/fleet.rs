@@ -1,0 +1,737 @@
+//! Fleet-scale placement plane (DESIGN.md §18): bounded-complexity solving
+//! for 100–1000-resource topologies, incremental re-solve on monitor
+//! drift, and a placement cache shared by `plan` and the serving hot-swap
+//! loop.
+//!
+//! The exhaustive solver ([`strategies::plan`](crate::placement::strategies::plan))
+//! enumerates every contiguous tiling of every chain in the strategy's
+//! chain family — exact, but the candidate count grows as
+//! `Σ_k C(R−1,k−1)·C(M−1,k−1)` per chain, which is fine for the paper's
+//! 5-resource testbed and hopeless for an edge→hub→cloud fleet. This
+//! module keeps the *same chain family* (derived by
+//! [`placement::tree`](crate::placement::tree)) but swaps the search:
+//!
+//! * [`solve`] first *counts* the candidate paths exactly (saturating
+//!   binomials). Below [`SolverOpts::exact_threshold`] it delegates
+//!   verbatim to the exhaustive solver — so small topologies, including
+//!   the golden paper testbed, produce bit-identical placements. Above
+//!   the threshold it runs a beam search over chain positions under a
+//!   hard [`SolverOpts::node_budget`], seeded with the always-feasible
+//!   all-blocks-on-entry placement so budget exhaustion still returns a
+//!   valid plan.
+//! * [`resolve_incremental`] re-optimizes only the contiguous stage
+//!   window whose resources drifted (per the monitor's recalibration
+//!   ratios) and splices the result into the standing placement,
+//!   falling back to a full solve when the local repair does not at
+//!   least match the standing plan's recalibrated cost.
+//! * [`PlacementCache`] memoizes solved placements keyed by
+//!   (model-profile digest, topology signature with speed grades
+//!   quantized to 1/16-log₂ steps, strategy, chunk length). The solver
+//!   is deterministic, so a cache hit is bitwise identical to the cold
+//!   solve it replaced.
+
+use std::collections::{HashMap, HashSet};
+
+use sha2::{Digest, Sha256};
+
+use crate::model::DELTA_RESOLUTION;
+use crate::placement::cost::{CostModel, PathCost};
+use crate::placement::strategies::{plan, Plan, Strategy};
+use crate::placement::tree::{enumerate_paths, trusted_spine};
+use crate::placement::{Placement, Stage};
+use crate::profiler::{DeviceKind, ModelProfile};
+use crate::topology::{ResourceId, Topology};
+
+/// Tuning knobs for the fleet solver. The defaults keep the paper
+/// testbed (and every topology a human would write by hand) on the
+/// exact path while bounding fleet-scale solves to well under a second.
+#[derive(Debug, Clone, Copy)]
+pub struct SolverOpts {
+    /// Below this exact candidate-path count the solver delegates to the
+    /// exhaustive enumeration — bit-identical to historical behaviour.
+    pub exact_threshold: u128,
+    /// Beam width: surviving partial placements per (chain position,
+    /// blocks-placed) bucket.
+    pub beam_width: usize,
+    /// Hard cap on expanded successor states across the whole solve.
+    pub node_budget: u64,
+    /// In beam mode the trusted spine is capped to the entry TEE plus
+    /// the fastest `trusted_pool − 1` other TEEs (declaration order kept).
+    pub trusted_pool: usize,
+    /// In beam mode only the fastest this-many untrusted resources are
+    /// considered as offload tails.
+    pub untrusted_pool: usize,
+}
+
+impl Default for SolverOpts {
+    fn default() -> Self {
+        SolverOpts {
+            exact_threshold: 200_000,
+            beam_width: 16,
+            node_budget: 2_000_000,
+            trusted_pool: 24,
+            untrusted_pool: 8,
+        }
+    }
+}
+
+/// Which search the fleet solver actually ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveMode {
+    /// Exhaustive enumeration (small topology) — identical to
+    /// [`strategies::plan`](crate::placement::strategies::plan).
+    Exact,
+    /// Bounded beam search over the chain family (fleet topology).
+    Beam,
+    /// Served from the [`PlacementCache`] without searching.
+    Cached,
+}
+
+impl SolveMode {
+    /// Lowercase display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SolveMode::Exact => "exact",
+            SolveMode::Beam => "beam",
+            SolveMode::Cached => "cached",
+        }
+    }
+}
+
+/// A fleet solve result: the plan plus how it was obtained.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// The winning plan (strategy, placement, cost, examined count).
+    pub plan: Plan,
+    /// Which search produced it.
+    pub mode: SolveMode,
+    /// Exact candidate-path count of the full enumeration (saturating).
+    pub estimated_paths: u128,
+    /// Successor states expanded (beam) or paths examined (exact).
+    pub nodes: u64,
+    /// True when the beam stopped early on [`SolverOpts::node_budget`].
+    pub budget_exhausted: bool,
+}
+
+// ---- candidate counting ---------------------------------------------------
+
+/// Saturating binomial coefficient C(n, k).
+fn binom(n: u64, k: u64) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc.saturating_mul((n - i) as u128) / (i as u128 + 1);
+    }
+    acc
+}
+
+/// Exact number of placements [`enumerate_paths`] yields for a chain of
+/// `r` resources and `m` blocks: the head resource is mandatory, later
+/// resources may be skipped, each used resource takes a non-empty
+/// contiguous range — `Σ_{k=1..min(r,m)} C(r−1,k−1)·C(m−1,k−1)`.
+pub fn chain_paths(r: usize, m: usize) -> u128 {
+    let mut total: u128 = 0;
+    for k in 1..=r.min(m) {
+        let ways =
+            binom(r as u64 - 1, k as u64 - 1).saturating_mul(binom(m as u64 - 1, k as u64 - 1));
+        total = total.saturating_add(ways);
+    }
+    total
+}
+
+/// Exact candidate-path count the exhaustive solver would examine for
+/// `strategy` on `topo` with `m` blocks (saturating at `u128::MAX`).
+pub fn estimate_paths(topo: &Topology, strategy: Strategy, m: usize) -> u128 {
+    strategy
+        .chains(topo)
+        .iter()
+        .map(|c| chain_paths(c.len(), m))
+        .fold(0u128, |a, b| a.saturating_add(b))
+}
+
+// ---- solving --------------------------------------------------------------
+
+fn objective(strategy: Strategy, cost: &PathCost, n: u64) -> f64 {
+    match strategy {
+        Strategy::NoPipelining => cost.single_secs,
+        _ => cost.chunk_secs(n),
+    }
+}
+
+/// Solve a placement with mode selection: exact below
+/// [`SolverOpts::exact_threshold`], bounded beam search above it.
+pub fn solve(strategy: Strategy, cm: &CostModel<'_>, n: u64, opts: &SolverOpts) -> FleetPlan {
+    let est = estimate_paths(cm.topology(), strategy, cm.profile.m);
+    if est <= opts.exact_threshold {
+        let p = plan(strategy, cm, n);
+        let nodes = p.examined as u64;
+        return FleetPlan {
+            plan: p,
+            mode: SolveMode::Exact,
+            estimated_paths: est,
+            nodes,
+            budget_exhausted: false,
+        };
+    }
+    beam_solve(strategy, cm, n, opts, est)
+}
+
+/// Cap a trusted spine to the entry plus the fastest `cap − 1` other
+/// TEEs, preserving declaration order (the chain-family ordering).
+fn cap_spine(topo: &Topology, spine: Vec<ResourceId>, cap: usize) -> Vec<ResourceId> {
+    if spine.len() <= cap.max(1) {
+        return spine;
+    }
+    let mut rest: Vec<ResourceId> = spine[1..].to_vec();
+    rest.sort_by(|a, b| {
+        topo.speed_of(*b)
+            .partial_cmp(&topo.speed_of(*a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    rest.truncate(cap.max(1) - 1);
+    let keep: HashSet<usize> = rest.iter().map(|r| r.0).collect();
+    spine
+        .into_iter()
+        .enumerate()
+        .filter(|(i, r)| *i == 0 || keep.contains(&r.0))
+        .map(|(_, r)| r)
+        .collect()
+}
+
+/// The fastest `cap` untrusted resources, declaration order broken by
+/// speed (descending) then id.
+fn fastest_untrusted(topo: &Topology, cap: usize) -> Vec<ResourceId> {
+    let mut un = topo.untrusted();
+    un.sort_by(|a, b| {
+        topo.speed_of(*b)
+            .partial_cmp(&topo.speed_of(*a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    un.truncate(cap);
+    un
+}
+
+/// The chain family the beam searches: the same shape as
+/// [`Strategy::chains`], but with the spine and offload-tail pools capped
+/// so chain length is bounded on fleet topologies.
+fn beam_chains(strategy: Strategy, topo: &Topology, opts: &SolverOpts) -> Vec<Vec<ResourceId>> {
+    match strategy {
+        Strategy::TwoTees => vec![cap_spine(topo, trusted_spine(topo), opts.trusted_pool)],
+        Strategy::Proposed | Strategy::NoPipelining => {
+            let spine = cap_spine(topo, trusted_spine(topo), opts.trusted_pool);
+            let mut chains = vec![spine.clone()];
+            for u in fastest_untrusted(topo, opts.untrusted_pool) {
+                let mut c = spine.clone();
+                c.push(u);
+                chains.push(c);
+            }
+            chains
+        }
+        other => other.chains(topo),
+    }
+}
+
+/// A partial placement at one chain position: blocks `0..placed` are
+/// tiled by `stages`; `sum`/`mx` track the prefix single-frame total and
+/// prefix period (stage *and* boundary terms), mirroring
+/// [`CostModel::cost`] incrementally so beam pruning ranks states by the
+/// same objective the final scoring uses.
+#[derive(Debug, Clone)]
+struct BeamState {
+    placed: usize,
+    stages: Vec<Stage>,
+    sum: f64,
+    mx: f64,
+}
+
+fn partial_score(strategy: Strategy, n: u64, st: &BeamState) -> f64 {
+    match strategy {
+        Strategy::NoPipelining => st.sum,
+        _ => st.sum + (n.max(1) - 1) as f64 * st.mx,
+    }
+}
+
+/// Keep the best `width` states per blocks-placed bucket (pruning across
+/// buckets would starve near-complete prefixes, whose absolute cost is
+/// necessarily higher than a one-block prefix's).
+fn prune(mut states: Vec<BeamState>, strategy: Strategy, n: u64, width: usize) -> Vec<BeamState> {
+    states.sort_by(|a, b| {
+        a.placed.cmp(&b.placed).then(
+            partial_score(strategy, n, a)
+                .partial_cmp(&partial_score(strategy, n, b))
+                .unwrap_or(std::cmp::Ordering::Equal),
+        )
+    });
+    let mut out = Vec::with_capacity(states.len().min(width * 8));
+    let (mut bucket, mut kept) = (usize::MAX, 0usize);
+    for st in states {
+        if st.placed != bucket {
+            bucket = st.placed;
+            kept = 0;
+        }
+        if kept < width {
+            out.push(st);
+            kept += 1;
+        }
+    }
+    out
+}
+
+fn beam_solve(
+    strategy: Strategy,
+    cm: &CostModel<'_>,
+    n: u64,
+    opts: &SolverOpts,
+    est: u128,
+) -> FleetPlan {
+    let topo = cm.topology();
+    let prof = cm.profile;
+    let m = prof.m;
+    let mut nodes: u64 = 0;
+    let mut exhausted = false;
+
+    // Always-feasible fallback: every block inside the entry TEE. Budget
+    // exhaustion can therefore never leave us without a valid plan.
+    let seed = Placement::single(topo.entry(), m);
+    let seed_cost = cm.cost(&seed);
+    let mut best: (f64, Placement, PathCost) =
+        (objective(strategy, &seed_cost, n), seed, seed_cost);
+
+    let delta = DELTA_RESOLUTION;
+    let range_private = |kind: DeviceKind, range: &std::ops::Range<usize>| {
+        kind.trusted() || prof.in_res[range.clone()].iter().all(|&r| r <= delta)
+    };
+
+    'chains: for chain in beam_chains(strategy, topo, opts) {
+        let mut states: Vec<BeamState> = Vec::new();
+        for (i, &r) in chain.iter().enumerate() {
+            let kind = topo.kind_of(r);
+            let prevs = if i == 0 {
+                vec![BeamState { placed: 0, stages: Vec::new(), sum: 0.0, mx: 0.0 }]
+            } else {
+                std::mem::take(&mut states)
+            };
+            let mut next: Vec<BeamState> = Vec::new();
+            for st in prevs {
+                for cut in st.placed + 1..=m {
+                    if nodes >= opts.node_budget {
+                        exhausted = true;
+                        break 'chains;
+                    }
+                    nodes += 1;
+                    let range = st.placed..cut;
+                    if !range_private(kind, &range) {
+                        continue;
+                    }
+                    let stage_secs = topo.stage_secs(prof, r, range.clone())
+                        + topo.invoke_overhead_of(r);
+                    let boundary = match st.stages.last() {
+                        None => 0.0,
+                        Some(prev) => {
+                            let bytes = prof.cut_bytes[prev.range.end - 1];
+                            let crypto = if topo.kind_of(prev.resource) == DeviceKind::Tee
+                                || kind == DeviceKind::Tee
+                            {
+                                topo.crypto_secs(bytes)
+                            } else {
+                                0.0
+                            };
+                            crypto
+                                + topo.transfer_secs(
+                                    topo.host_of(prev.resource),
+                                    topo.host_of(r),
+                                    bytes,
+                                )
+                        }
+                    };
+                    let mut stages = st.stages.clone();
+                    stages.push(Stage { resource: r, range });
+                    let sum = st.sum + stage_secs + boundary;
+                    let mx = st.mx.max(stage_secs).max(boundary);
+                    if cut == m {
+                        // complete: score authoritatively with the cost model
+                        let cand = Placement { stages };
+                        let cost = cm.cost(&cand);
+                        let obj = objective(strategy, &cost, n);
+                        if obj < best.0 {
+                            best = (obj, cand, cost);
+                        }
+                    } else {
+                        next.push(BeamState { placed: cut, stages, sum, mx });
+                    }
+                }
+                // skip this chain resource (the chain head must take blocks)
+                if st.placed > 0 {
+                    next.push(st);
+                }
+            }
+            states = prune(next, strategy, n, opts.beam_width);
+            if states.is_empty() {
+                break;
+            }
+        }
+    }
+
+    let (_, placement, cost) = best;
+    FleetPlan {
+        plan: Plan { strategy, placement, cost, examined: nodes as usize },
+        mode: SolveMode::Beam,
+        estimated_paths: est,
+        nodes,
+        budget_exhausted: exhausted,
+    }
+}
+
+// ---- incremental re-solve -------------------------------------------------
+
+/// Outcome of an incremental re-solve.
+#[derive(Debug, Clone)]
+pub struct ResolveOutcome {
+    /// The adopted plan (spliced repair or full-solve fallback).
+    pub plan: Plan,
+    /// True when the window repair was spliced into the standing
+    /// placement; false when the solver fell back to a full solve.
+    pub spliced: bool,
+    /// The standing-placement stage indices `[lo, hi]` that were
+    /// re-optimized (None on full-solve fallback).
+    pub window: Option<(usize, usize)>,
+}
+
+/// Resources of `standing` whose monitor recalibration ratio moved more
+/// than `eps` from 1.0 — the drifted set fed to [`resolve_incremental`].
+/// `ratios` is per-stage, as returned by
+/// [`recalibrate_speeds`](crate::placement::cost::recalibrate_speeds).
+pub fn drifted_resources(standing: &Placement, ratios: &[f64], eps: f64) -> Vec<ResourceId> {
+    standing
+        .stages
+        .iter()
+        .zip(ratios)
+        .filter(|(_, r)| (**r - 1.0).abs() > eps)
+        .map(|(s, _)| s.resource)
+        .collect()
+}
+
+/// Re-optimize only the contiguous stage window of `standing` that
+/// contains the `drifted` resources, splice the best repair back in, and
+/// adopt it when it at least matches the standing plan's recalibrated
+/// cost — otherwise fall back to a full [`solve`]. `cm` must already
+/// carry the recalibrated topology.
+pub fn resolve_incremental(
+    strategy: Strategy,
+    cm: &CostModel<'_>,
+    n: u64,
+    standing: &Placement,
+    drifted: &[ResourceId],
+    opts: &SolverOpts,
+) -> ResolveOutcome {
+    let topo = cm.topology();
+    let m = cm.profile.m;
+    let full = |why: &str| {
+        let _ = why;
+        let fp = solve(strategy, cm, n, opts);
+        ResolveOutcome { plan: fp.plan, spliced: false, window: None }
+    };
+
+    if standing.validate(topo, m).is_err() || drifted.is_empty() {
+        return full("no usable standing placement");
+    }
+    let drift_set: HashSet<usize> = drifted.iter().map(|r| r.0).collect();
+    let hit: Vec<usize> = standing
+        .stages
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| drift_set.contains(&s.resource.0))
+        .map(|(i, _)| i)
+        .collect();
+    let (Some(&lo), Some(&hi)) = (hit.first(), hit.last()) else {
+        // drift on resources the placement doesn't use: global question
+        return full("drift outside standing placement");
+    };
+    let (b0, b1) = (standing.stages[lo].range.start, standing.stages[hi].range.end);
+    let mw = b1 - b0;
+    let window_is_final = hi == standing.stages.len() - 1;
+
+    // Candidate pool: the window's own resources plus a capped pool of
+    // resources the standing placement does not use anywhere else.
+    let used_outside: HashSet<usize> = standing
+        .stages
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i < lo || *i > hi)
+        .map(|(_, s)| s.resource.0)
+        .collect();
+    let in_window: HashSet<usize> =
+        standing.stages[lo..=hi].iter().map(|s| s.resource.0).collect();
+    let free = |r: &ResourceId| !used_outside.contains(&r.0) && !in_window.contains(&r.0);
+
+    let mut base: Vec<ResourceId> = standing.stages[lo..=hi]
+        .iter()
+        .filter(|s| topo.kind_of(s.resource).trusted())
+        .map(|s| s.resource)
+        .collect();
+    let mut free_trusted: Vec<ResourceId> = topo.tees().into_iter().filter(free).collect();
+    free_trusted.sort_by(|a, b| {
+        topo.speed_of(*b)
+            .partial_cmp(&topo.speed_of(*a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    free_trusted.truncate(4);
+    base.extend(free_trusted);
+
+    // Untrusted candidates stay terminal-only, like the global family.
+    let mut tails: Vec<ResourceId> = Vec::new();
+    if window_is_final {
+        tails.extend(
+            standing.stages[lo..=hi]
+                .iter()
+                .filter(|s| !topo.kind_of(s.resource).trusted())
+                .map(|s| s.resource),
+        );
+        let mut free_un: Vec<ResourceId> =
+            fastest_untrusted(topo, usize::MAX).into_iter().filter(free).collect();
+        free_un.truncate(opts.untrusted_pool);
+        tails.extend(free_un);
+    }
+
+    let mut chains: Vec<(Vec<ResourceId>, Option<ResourceId>)> = vec![(base.clone(), None)];
+    for &u in &tails {
+        let mut c = base.clone();
+        c.push(u);
+        chains.push((c, Some(u)));
+    }
+
+    // Bound the local enumeration exactly like the global solver bounds
+    // the full one: every suffix of every chain may lead the window.
+    let mut est: u128 = 0;
+    for (chain, _) in &chains {
+        for j in 0..chain.len() {
+            est = est.saturating_add(chain_paths(chain.len() - j, mw));
+        }
+    }
+    if est > opts.exact_threshold {
+        return full("window too large for exact repair");
+    }
+
+    let standing_cost = cm.cost(standing);
+    let standing_obj = objective(strategy, &standing_cost, n);
+    let mut examined = 0usize;
+    let mut best: Option<(f64, Placement, PathCost)> = None;
+    for (chain, tail) in &chains {
+        for j in 0..chain.len() {
+            for path in enumerate_paths(&chain[j..], mw) {
+                if let Some(t) = tail {
+                    // tail chains only contribute paths that end on the
+                    // tail; the rest are the base chain's (dedup)
+                    if path.stages.last().map(|s| s.resource) != Some(*t) {
+                        continue;
+                    }
+                }
+                examined += 1;
+                let mut stages: Vec<Stage> = standing.stages[..lo].to_vec();
+                stages.extend(path.stages.iter().map(|s| Stage {
+                    resource: s.resource,
+                    range: s.range.start + b0..s.range.end + b0,
+                }));
+                stages.extend_from_slice(&standing.stages[hi + 1..]);
+                let cand = Placement { stages };
+                if cand.validate(topo, m).is_err()
+                    || !cand.satisfies_privacy(topo, &cm.profile.in_res, DELTA_RESOLUTION)
+                {
+                    continue;
+                }
+                let cost = cm.cost(&cand);
+                let obj = objective(strategy, &cost, n);
+                if best.as_ref().is_none_or(|(b, _, _)| obj < *b) {
+                    best = Some((obj, cand, cost));
+                }
+            }
+        }
+    }
+
+    match best {
+        Some((obj, placement, cost)) if obj <= standing_obj => ResolveOutcome {
+            plan: Plan { strategy, placement, cost, examined },
+            spliced: true,
+            window: Some((lo, hi)),
+        },
+        _ => full("window repair worse than standing plan"),
+    }
+}
+
+// ---- placement cache ------------------------------------------------------
+
+/// Round a speed grade to the nearest 1/16-log₂ step: grades within
+/// ~4.4% of each other share a representative, so monitor jitter maps to
+/// the same cache key while a real grade shift forces a fresh solve.
+pub fn quantize_speed(speed: f64) -> f64 {
+    if speed <= 0.0 {
+        return speed;
+    }
+    ((speed.log2() * 16.0).round() / 16.0).exp2()
+}
+
+/// Canonical signature of a topology with speed grades quantized — the
+/// "subgraph signature + speed-grade quantization" part of the cache key.
+pub fn topology_signature(topo: &Topology) -> [u8; 32] {
+    let mut canon = topo.clone();
+    for id in canon.ids() {
+        canon.set_speed(id, quantize_speed(topo.speed_of(id)));
+    }
+    let mut h = Sha256::new();
+    h.update(canon.to_json().to_string().as_bytes());
+    h.finalize().into()
+}
+
+/// Memoized placements keyed by (profile digest, quantized topology
+/// signature, strategy, chunk length). The fleet solver is deterministic,
+/// so a hit is bitwise identical to the cold solve it stands in for; a
+/// hit is still validated (tiling + privacy) against the live topology
+/// before being served, so a stale entry degrades to a miss, never to a
+/// broken placement.
+#[derive(Debug, Default)]
+pub struct PlacementCache {
+    map: HashMap<[u8; 32], Placement>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlacementCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The cache key for one solve request.
+    pub fn key(profile: &ModelProfile, topo: &Topology, strategy: Strategy, n: u64) -> [u8; 32] {
+        let mut h = Sha256::new();
+        h.update(profile.digest());
+        h.update(topology_signature(topo));
+        h.update(strategy.name().as_bytes());
+        h.update(n.to_le_bytes());
+        h.finalize().into()
+    }
+
+    /// Look up a cached placement, validating it against the live cost
+    /// model. Counts a hit or a miss.
+    pub fn lookup(&mut self, key: &[u8; 32], cm: &CostModel<'_>) -> Option<Placement> {
+        let ok = self.map.get(key).filter(|p| {
+            p.validate(cm.topology(), cm.profile.m).is_ok()
+                && p.satisfies_privacy(cm.topology(), &cm.profile.in_res, DELTA_RESOLUTION)
+        });
+        match ok {
+            Some(p) => {
+                self.hits += 1;
+                Some(p.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a solved placement under `key`.
+    pub fn insert(&mut self, key: [u8; 32], placement: Placement) {
+        self.map.insert(key, placement);
+    }
+
+    /// Solve through the cache: a hit returns the stored placement
+    /// re-costed against `cm` (mode [`SolveMode::Cached`], zero nodes); a
+    /// miss runs [`solve`] and stores the result.
+    pub fn solve(
+        &mut self,
+        strategy: Strategy,
+        cm: &CostModel<'_>,
+        n: u64,
+        opts: &SolverOpts,
+    ) -> FleetPlan {
+        let key = Self::key(cm.profile, cm.topology(), strategy, n);
+        if let Some(p) = self.lookup(&key, cm) {
+            let cost = cm.cost(&p);
+            return FleetPlan {
+                plan: Plan { strategy, placement: p, cost, examined: 0 },
+                mode: SolveMode::Cached,
+                estimated_paths: 0,
+                nodes: 0,
+                budget_exhausted: false,
+            };
+        }
+        let fp = solve(strategy, cm, n, opts);
+        self.insert(key, fp.plan.placement.clone());
+        fp
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cache misses so far.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// hits / (hits + misses), 0.0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Number of stored placements.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Drop every entry (stats are kept).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomials_and_chain_paths() {
+        assert_eq!(binom(5, 2), 10);
+        assert_eq!(binom(5, 0), 1);
+        assert_eq!(binom(3, 5), 0);
+        // 1 resource, m blocks: exactly one path (everything on it)
+        assert_eq!(chain_paths(1, 6), 1);
+        // 2 resources, 2 blocks: [0..2] on head, or [0..1]+[1..2]
+        assert_eq!(chain_paths(2, 2), 2);
+        // matches the exhaustive enumerator on small cases
+        let topo = Topology::paper_testbed();
+        for m in [1usize, 3, 6, 9] {
+            for chain in Strategy::Proposed.chains(&topo) {
+                let got = enumerate_paths(&chain, m).len() as u128;
+                assert_eq!(chain_paths(chain.len(), m), got, "r={} m={m}", chain.len());
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_buckets() {
+        let a = quantize_speed(1.0);
+        let b = quantize_speed(1.01); // ~1% jitter: same bucket
+        let c = quantize_speed(1.5); // real grade shift: different bucket
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

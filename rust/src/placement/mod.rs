@@ -7,7 +7,10 @@
 //! ([`tree`]) over the topology's resources, scores every path under the
 //! pipeline cost model ([`cost`]), filters by the privacy constraint
 //! (C1/C2), and picks the argmin. [`strategies`] packages the five
-//! comparison strategies of Fig. 12.
+//! comparison strategies of Fig. 12. [`fleet`] scales the same chain
+//! family to 100–1000-resource topologies: bounded beam search under a
+//! node budget, incremental re-solve on monitor drift, and a placement
+//! cache shared by planning and serving (DESIGN.md §18).
 //!
 //! Stages reference resources by [`ResourceId`]; names, hosts, and device
 //! classes resolve through the topology, so the same solver runs on the
@@ -15,10 +18,12 @@
 //! loaded from a JSON file (`serdab plan --topology file.json`).
 
 pub mod cost;
+pub mod fleet;
 pub mod strategies;
 pub mod tree;
 
 pub use cost::{recalibrate_speeds, CostModel, PathCost};
+pub use fleet::{FleetPlan, PlacementCache, ResolveOutcome, SolveMode, SolverOpts};
 pub use strategies::{plan, Strategy};
 pub use tree::{enumerate_paths, full_tree, TreeStats};
 

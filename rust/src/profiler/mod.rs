@@ -119,6 +119,38 @@ impl ModelProfile {
         self.stage_secs(DeviceKind::Tee, 0..self.m)
     }
 
+    /// SHA-256 over every field the cost model reads — the model-profile
+    /// half of the fleet placement-cache key
+    /// ([`placement::fleet::PlacementCache`](crate::placement::fleet::PlacementCache),
+    /// DESIGN.md §18). Two profiles with the same digest cost every
+    /// placement identically, so their solved placements are
+    /// interchangeable.
+    pub fn digest(&self) -> [u8; 32] {
+        use sha2::{Digest as _, Sha256};
+        let mut h = Sha256::new();
+        h.update(self.model.as_bytes());
+        h.update((self.m as u64).to_le_bytes());
+        for dev in [&self.cpu, &self.gpu, &self.tee] {
+            h.update(dev.kind.name().as_bytes());
+            for &t in &dev.block_secs {
+                h.update(t.to_le_bytes());
+            }
+        }
+        for bytes in [&self.param_bytes, &self.peak_act_bytes, &self.cut_bytes] {
+            for &b in bytes {
+                h.update(b.to_le_bytes());
+            }
+        }
+        for &r in &self.in_res {
+            h.update(r.to_le_bytes());
+        }
+        h.update(self.epc.epc_bytes.to_le_bytes());
+        h.update(self.epc.runtime_bytes.to_le_bytes());
+        h.update(self.epc.act_factor.to_le_bytes());
+        h.update(self.epc.page_secs_per_byte.to_le_bytes());
+        h.finalize().into()
+    }
+
     /// A synthetic millisecond-scale 6-block profile with the paper's cost
     /// *shape* (TEE ≫ CPU ≫ GPU per block: 9/5/2 ms; boundary tensors of
     /// 2–8 ms at 30 Mbps; resolution crossing δ=20 at block 3 so the tail

@@ -151,6 +151,7 @@ impl Topology {
             name: name.into(),
             resources: Vec::new(),
             default_link: LinkParams::default(),
+            no_default_link: false,
             links: Vec::new(),
             crypto_bytes_per_sec: DEFAULT_CRYPTO_BYTES_PER_SEC,
             camera_host: 0,
@@ -485,9 +486,17 @@ impl Topology {
 
         let mut default_link = LinkParams::default();
         if let Some(dl) = j.get("default_link") {
-            default_link = parse_link_params(dl, LinkParams::default(), false)
-                .context("default_link")?;
-            b = b.default_link(default_link);
+            // the string "none" disables the implicit any-to-any fallback:
+            // hosts are only connected where links are declared, traffic
+            // between non-adjacent hosts is routed over them, and a host
+            // with no path to the camera is rejected at build
+            if dl.as_str() == Some("none") {
+                b = b.no_default_link();
+            } else {
+                default_link = parse_link_params(dl, LinkParams::default(), false)
+                    .context("default_link")?;
+                b = b.default_link(default_link);
+            }
         }
         if let Some(c) = j.get("crypto_bytes_per_sec") {
             b = b.crypto_rate(
@@ -502,6 +511,15 @@ impl Topology {
         let mut specs: Vec<ResourceSpec> = Vec::new();
         for (i, r) in rs.iter().enumerate() {
             let spec = parse_resource(r).with_context(|| format!("resource [{i}]"))?;
+            // duplicate names are also caught by the builder, but here we
+            // can say *which entries* collide instead of just the name
+            if let Some(prev) = specs.iter().position(|p| p.name == spec.name) {
+                bail!(
+                    "resource [{i}]: duplicate resource name '{}' (already declared by \
+                     resource [{prev}])",
+                    spec.name
+                );
+            }
             specs.push(spec.clone());
             b = b.resource_spec(spec);
         }
@@ -679,6 +697,7 @@ pub struct TopologyBuilder {
     name: String,
     resources: Vec<ResourceSpec>,
     default_link: LinkParams,
+    no_default_link: bool,
     links: Vec<(usize, usize, LinkParams)>,
     crypto_bytes_per_sec: f64,
     camera_host: usize,
@@ -706,6 +725,19 @@ impl TopologyBuilder {
     /// Set the fallback link parameters for host pairs without an entry.
     pub fn default_link(mut self, params: LinkParams) -> Self {
         self.default_link = params;
+        self.no_default_link = false;
+        self
+    }
+
+    /// Disable the implicit any-to-any fallback link (the JSON schema's
+    /// `"default_link": "none"`). Hosts are then only connected where
+    /// links were declared: [`TopologyBuilder::build`] routes every other
+    /// host pair over the declared graph (bottleneck bandwidth, summed
+    /// rtt, path minimizing the store-and-forward time of a 1 MB
+    /// reference tensor) and materializes the result, and rejects the
+    /// topology if any resource's host has no path to the camera host.
+    pub fn no_default_link(mut self) -> Self {
+        self.no_default_link = true;
         self
     }
 
@@ -794,6 +826,10 @@ impl TopologyBuilder {
             check_link(&p)?;
             links.insert((a.min(b), a.max(b)), p);
         }
+        if self.no_default_link {
+            links =
+                route_links(&self.name, &occupied, &links, self.camera_host, &self.resources)?;
+        }
         Ok(Topology {
             name: self.name,
             resources: self.resources,
@@ -803,6 +839,322 @@ impl TopologyBuilder {
             camera_host: self.camera_host,
             sink_host: self.sink_host,
         })
+    }
+}
+
+/// Reference payload for route selection under `"default_link": "none"`:
+/// paths are ranked by the summed per-edge store-and-forward time of a
+/// 1 MB boundary tensor, which weighs bandwidth and rtt the way the cost
+/// model's boundary terms do.
+const ROUTE_REF_BYTES: u64 = 1_000_000;
+
+/// Route every occupied host pair over the declared links (Floyd–Warshall
+/// on the additive reference-transfer cost, tracking the path's
+/// bottleneck bandwidth and summed rtt) and materialize the effective
+/// [`LinkParams`] so [`Topology::link`] works unchanged downstream.
+/// Rejects the graph — naming the stranded resources — when a host has
+/// no path to the camera host.
+fn route_links(
+    name: &str,
+    occupied: &std::collections::BTreeSet<usize>,
+    links: &BTreeMap<(usize, usize), LinkParams>,
+    camera_host: usize,
+    resources: &[ResourceSpec],
+) -> Result<BTreeMap<(usize, usize), LinkParams>> {
+    let hosts: Vec<usize> = occupied.iter().copied().collect();
+    let idx: BTreeMap<usize, usize> = hosts.iter().enumerate().map(|(i, &h)| (h, i)).collect();
+    let n = hosts.len();
+    // dist[i][j] = (ref cost, bottleneck bandwidth, summed rtt)
+    let mut dist: Vec<Vec<Option<(f64, f64, f64)>>> = vec![vec![None; n]; n];
+    for (i, row) in dist.iter_mut().enumerate() {
+        row[i] = Some((0.0, f64::INFINITY, 0.0));
+    }
+    for (&(a, b), p) in links {
+        let (i, j) = (idx[&a], idx[&b]);
+        let edge = Some((p.transfer_secs(ROUTE_REF_BYTES), p.bandwidth_bps, p.rtt_secs));
+        dist[i][j] = edge;
+        dist[j][i] = edge;
+    }
+    for k in 0..n {
+        for i in 0..n {
+            let Some((cik, bik, rik)) = dist[i][k] else { continue };
+            for j in 0..n {
+                let Some((ckj, bkj, rkj)) = dist[k][j] else { continue };
+                let cand = cik + ckj;
+                if dist[i][j].is_none_or(|(c, _, _)| cand < c) {
+                    dist[i][j] = Some((cand, bik.min(bkj), rik + rkj));
+                }
+            }
+        }
+    }
+    let cam = idx[&camera_host];
+    let mut stranded: Vec<String> = Vec::new();
+    for (j, &h) in hosts.iter().enumerate() {
+        if dist[cam][j].is_none() {
+            stranded.extend(
+                resources.iter().filter(|r| r.host == h).map(|r| format!("'{}'", r.name)),
+            );
+        }
+    }
+    if !stranded.is_empty() {
+        bail!(
+            "topology '{name}': default_link is \"none\" and {} unreachable from camera \
+             host {camera_host} over the declared links: {}",
+            if stranded.len() == 1 { "this resource is" } else { "these resources are" },
+            stranded.join(", ")
+        );
+    }
+    let mut out = links.clone();
+    for i in 0..n {
+        for j in i + 1..n {
+            let key = (hosts[i].min(hosts[j]), hosts[i].max(hosts[j]));
+            if out.contains_key(&key) {
+                continue;
+            }
+            // camera-connectivity on an undirected graph implies pairwise
+            // connectivity, so this entry always exists
+            if let Some((_, bw, rtt)) = dist[i][j] {
+                out.insert(key, LinkParams { bandwidth_bps: bw, rtt_secs: rtt });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Seeded synthetic-fleet generator (`serdab topo gen`): edge→hub→cloud
+/// trees and random clusters with heterogeneous speed grades and
+/// per-tier links, for exercising the fleet solver
+/// ([`placement::fleet`](crate::placement::fleet)) at 64–1024 resources.
+/// Deterministic per (kind, resources, seed) — the checked-in
+/// `examples/topologies/{tree64,tree256,rand1024}.json` are its outputs.
+pub mod gen {
+    use super::{DeviceKind, LinkParams, ResourceSpec, Topology};
+    use crate::util::rng::Rng;
+    use anyhow::{bail, Result};
+
+    /// Topology family to generate.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum GenKind {
+        /// Edge→hub→cloud tiers: paired TEE+CPU edge hosts, TEE+CPU hub
+        /// hosts, cloud hosts with two fast TEEs and a GPU each, with
+        /// per-tier links (edge→hub slow, hub→cloud fast).
+        Tree,
+        /// Uniformly random device kinds and log-uniform speed grades
+        /// scattered over `resources / 4` hosts with random links.
+        Random,
+    }
+
+    impl GenKind {
+        /// Parse a CLI kind name.
+        pub fn parse(text: &str) -> Result<GenKind> {
+            match text {
+                "tree" => Ok(GenKind::Tree),
+                "random" | "rand" => Ok(GenKind::Random),
+                other => bail!("unknown topology kind '{other}' (tree|random)"),
+            }
+        }
+
+        /// Lowercase display name.
+        pub fn name(self) -> &'static str {
+            match self {
+                GenKind::Tree => "tree",
+                GenKind::Random => "random",
+            }
+        }
+    }
+
+    /// What to generate: family, exact resource count, and seed.
+    #[derive(Debug, Clone, Copy)]
+    pub struct GenSpec {
+        /// Topology family.
+        pub kind: GenKind,
+        /// Exact number of resources in the output.
+        pub resources: usize,
+        /// PRNG seed (same spec ⇒ identical topology).
+        pub seed: u64,
+    }
+
+    /// Round to two decimals: generated grades and millisecond figures
+    /// stay short and human-readable in the JSON files.
+    fn r2(x: f64) -> f64 {
+        (x * 100.0).round() / 100.0
+    }
+
+    fn res(name: String, kind: DeviceKind, host: usize, speed: f64) -> ResourceSpec {
+        let mut spec = ResourceSpec::new(name, kind, host);
+        spec.speed = speed;
+        spec
+    }
+
+    /// Generate the topology described by `spec`.
+    pub fn generate(spec: &GenSpec) -> Result<Topology> {
+        match spec.kind {
+            GenKind::Tree => gen_tree(spec.resources, spec.seed),
+            GenKind::Random => gen_random(spec.resources, spec.seed),
+        }
+    }
+
+    /// Edge→hub→cloud tree. Tier sizes scale with `n`; at 48+ resources
+    /// at least three cloud hosts exist, so host-granular sharding
+    /// ([`shard_topology`](crate::coordinator::dispatcher::shard_topology))
+    /// can seed three balanced chains with a fast TEE pair each.
+    fn gen_tree(n: usize, seed: u64) -> Result<Topology> {
+        if n < 2 {
+            bail!("tree topologies need at least 2 resources (got {n})");
+        }
+        let (cloud_hosts, hubs) = if n >= 48 {
+            ((n / 20).clamp(3, 8), (n / 16).max(1))
+        } else if n >= 12 {
+            (2, (n / 16).max(1))
+        } else if n >= 8 {
+            (1, 1)
+        } else {
+            (0, 0)
+        };
+        let edge_res = n - 3 * cloud_hosts - 2 * hubs;
+        let edge_hosts = edge_res.div_ceil(2);
+        let hub_base = edge_hosts;
+        let cloud_base = edge_hosts + hubs;
+
+        let mut rng = Rng::new(seed);
+        let mut b = Topology::builder(format!("tree{n}-s{seed}"));
+        for e in 0..edge_hosts {
+            b = b.resource_spec(res(
+                format!("edge{e}-tee"),
+                DeviceKind::Tee,
+                e,
+                r2(rng.range_f64(0.4, 1.0)),
+            ));
+            if 2 * e + 1 < edge_res {
+                b = b.resource_spec(res(
+                    format!("edge{e}-cpu"),
+                    DeviceKind::UntrustedCpu,
+                    e,
+                    r2(rng.range_f64(0.3, 0.8)),
+                ));
+            }
+        }
+        for k in 0..hubs {
+            b = b.resource_spec(res(
+                format!("hub{k}-tee"),
+                DeviceKind::Tee,
+                hub_base + k,
+                r2(rng.range_f64(1.2, 2.0)),
+            ));
+            b = b.resource_spec(res(
+                format!("hub{k}-cpu"),
+                DeviceKind::UntrustedCpu,
+                hub_base + k,
+                r2(rng.range_f64(0.8, 1.5)),
+            ));
+        }
+        for c in 0..cloud_hosts {
+            for t in 0..2 {
+                b = b.resource_spec(res(
+                    format!("cloud{c}-tee{t}"),
+                    DeviceKind::Tee,
+                    cloud_base + c,
+                    r2(rng.range_f64(2.0, 4.0)),
+                ));
+            }
+            b = b.resource_spec(res(
+                format!("cloud{c}-gpu"),
+                DeviceKind::Gpu,
+                cloud_base + c,
+                r2(rng.range_f64(2.0, 6.0)),
+            ));
+        }
+
+        // per-tier links; pairs without one (edge↔edge, edge↔cloud) fall
+        // back to the builder's default WAN link
+        if hubs > 0 {
+            for e in 0..edge_hosts {
+                b = b.link(
+                    e,
+                    hub_base + e % hubs,
+                    LinkParams {
+                        bandwidth_bps: rng.range(30, 101) as f64 * 1e6,
+                        rtt_secs: r2(rng.range_f64(5.0, 20.0)) * 1e-3,
+                    },
+                );
+            }
+        }
+        for k in 0..hubs {
+            for c in 0..cloud_hosts {
+                b = b.link(
+                    hub_base + k,
+                    cloud_base + c,
+                    LinkParams {
+                        bandwidth_bps: rng.range(200, 1001) as f64 * 1e6,
+                        rtt_secs: r2(rng.range_f64(2.0, 10.0)) * 1e-3,
+                    },
+                );
+            }
+        }
+        for c1 in 0..cloud_hosts {
+            for c2 in c1 + 1..cloud_hosts {
+                b = b.link(
+                    cloud_base + c1,
+                    cloud_base + c2,
+                    LinkParams { bandwidth_bps: 1e9, rtt_secs: 1e-3 },
+                );
+            }
+        }
+        b.camera(0).sink(0).build()
+    }
+
+    /// Random cluster: `n / 4` hosts (each guaranteed occupied),
+    /// uniformly random device kinds (40% TEE / 35% CPU / 25% GPU,
+    /// resource 0 forced TEE so the graph has an entry), log-uniform
+    /// speeds in [0.25, 4), and `2 · hosts` random links.
+    fn gen_random(n: usize, seed: u64) -> Result<Topology> {
+        if n < 1 {
+            bail!("random topologies need at least 1 resource");
+        }
+        let hosts = (n / 4).max(1);
+        let mut rng = Rng::new(seed);
+        let mut b = Topology::builder(format!("rand{n}-s{seed}"));
+        for i in 0..n {
+            let host = if i < hosts { i } else { rng.range(0, hosts) };
+            let kind = if i == 0 {
+                DeviceKind::Tee
+            } else {
+                let roll = rng.f64();
+                if roll < 0.4 {
+                    DeviceKind::Tee
+                } else if roll < 0.75 {
+                    DeviceKind::UntrustedCpu
+                } else {
+                    DeviceKind::Gpu
+                }
+            };
+            let speed = r2((rng.f64() * 4.0 - 2.0).exp2());
+            b = b.resource_spec(res(format!("r{i}-{}", kind.name()), kind, host, speed));
+        }
+        if hosts >= 2 {
+            let mut seen = std::collections::BTreeSet::new();
+            let (mut added, target) = (0usize, 2 * hosts);
+            for _ in 0..8 * hosts {
+                let a = rng.range(0, hosts);
+                let c = rng.range(0, hosts);
+                if a == c || !seen.insert((a.min(c), a.max(c))) {
+                    continue;
+                }
+                b = b.link(
+                    a,
+                    c,
+                    LinkParams {
+                        bandwidth_bps: rng.range(10, 1001) as f64 * 1e6,
+                        rtt_secs: r2(rng.range_f64(1.0, 30.0)) * 1e-3,
+                    },
+                );
+                added += 1;
+                if added >= target {
+                    break;
+                }
+            }
+        }
+        b.camera(0).sink(0).build()
     }
 }
 

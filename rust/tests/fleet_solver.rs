@@ -1,0 +1,229 @@
+//! Fleet-solver contract (DESIGN.md §18).
+//!
+//! The scalable solver must be invisible at paper scale — below the
+//! exact-delegation threshold [`fleet::solve`] IS the exhaustive planner,
+//! placement-for-placement, across every strategy and chunk size — and
+//! bounded above it: on generated 64/256-resource fleets the beam search
+//! must return valid, privacy-satisfying placements inside its node
+//! budget, deterministically. Placement-cache hits must be
+//! indistinguishable from the cold solves they stand in for, and the
+//! incremental re-solve must never hand back a plan worse than the
+//! standing placement it repairs.
+
+use serdab::model::DELTA_RESOLUTION;
+use serdab::placement::cost::CostModel;
+use serdab::placement::fleet::{self, PlacementCache, SolveMode, SolverOpts};
+use serdab::placement::strategies::{plan, Strategy};
+use serdab::placement::Placement;
+use serdab::profiler::{DeviceKind, ModelProfile};
+use serdab::topology::{gen, LinkParams, Topology};
+
+fn gen_topo(kind: gen::GenKind, n: usize, seed: u64) -> Topology {
+    gen::generate(&gen::GenSpec { kind, resources: n, seed }).unwrap()
+}
+
+fn objective(cm: &CostModel<'_>, strategy: Strategy, p: &Placement, n: u64) -> f64 {
+    let cost = cm.cost(p);
+    match strategy {
+        Strategy::NoPipelining => cost.single_secs,
+        _ => cost.chunk_secs(n),
+    }
+}
+
+/// Below the path-count threshold the fleet solver delegates to the
+/// exhaustive planner — the paper-testbed golden placements are
+/// byte-identical, for every strategy and chunk size.
+#[test]
+fn exact_mode_matches_exhaustive_plan_on_paper_testbed() {
+    let profile = ModelProfile::millis_demo();
+    let cm = CostModel::new(&profile, Topology::paper_testbed());
+    let opts = SolverOpts::default();
+    for s in Strategy::ALL {
+        for n in [1u64, 10, 40, 1_000, 10_800] {
+            let golden = plan(s, &cm, n);
+            let fp = fleet::solve(s, &cm, n, &opts);
+            let name = s.name();
+            assert_eq!(fp.mode, SolveMode::Exact, "{name} n={n} escaped exact mode");
+            assert_eq!(
+                fp.plan.placement,
+                golden.placement,
+                "{name} n={n}: fleet solve diverged from the exhaustive plan"
+            );
+            assert_eq!(fp.nodes, golden.examined as u64);
+            assert!(!fp.budget_exhausted);
+        }
+    }
+}
+
+/// A cache hit returns the bitwise-identical placement of the cold solve
+/// it stands in for, and the counters attribute hits and misses.
+#[test]
+fn cache_hits_are_identical_to_cold_solves() {
+    let profile = ModelProfile::millis_demo();
+    let opts = SolverOpts::default();
+    for topo in [Topology::paper_testbed(), gen_topo(gen::GenKind::Tree, 64, 64)] {
+        let cm = CostModel::new(&profile, topo);
+        let cold = fleet::solve(Strategy::Proposed, &cm, 10_800, &opts);
+
+        let mut cache = PlacementCache::new();
+        let first = cache.solve(Strategy::Proposed, &cm, 10_800, &opts);
+        let second = cache.solve(Strategy::Proposed, &cm, 10_800, &opts);
+        assert_ne!(first.mode, SolveMode::Cached, "first solve cannot hit an empty cache");
+        assert_eq!(second.mode, SolveMode::Cached);
+        assert_eq!(first.plan.placement, cold.plan.placement);
+        assert_eq!(second.plan.placement, cold.plan.placement);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+}
+
+/// The cache key separates what must be separated (strategy, chunk,
+/// meaningful speed drift) and quantizes away what must not matter
+/// (sub-percent speed jitter).
+#[test]
+fn cache_key_discriminates_and_quantizes() {
+    let profile = ModelProfile::millis_demo();
+    let topo = Topology::builder("cache-key")
+        .resource("T0", DeviceKind::Tee, 0)
+        .resource("T1", DeviceKind::Tee, 1)
+        .default_link(LinkParams { bandwidth_bps: 1e9, rtt_secs: 1e-4 })
+        .camera(0)
+        .sink(0)
+        .build()
+        .unwrap();
+    let entry = topo.entry();
+    let base = PlacementCache::key(&profile, &topo, Strategy::Proposed, 10_800);
+    let other_strategy = PlacementCache::key(&profile, &topo, Strategy::TwoTees, 10_800);
+    let other_chunk = PlacementCache::key(&profile, &topo, Strategy::Proposed, 1);
+    assert_ne!(base, other_strategy);
+    assert_ne!(base, other_chunk);
+
+    // 0.1% jitter quantizes into the same speed bucket (same key)...
+    let mut jittered = topo.clone();
+    jittered.set_speed(entry, topo.speed_of(entry) * 1.001);
+    let jittered_key = PlacementCache::key(&profile, &jittered, Strategy::Proposed, 10_800);
+    assert_eq!(base, jittered_key);
+
+    // ...while a real 1.5× drift lands buckets away (different key)
+    let mut drifted = topo.clone();
+    drifted.set_speed(entry, topo.speed_of(entry) * 1.5);
+    let drifted_key = PlacementCache::key(&profile, &drifted, Strategy::Proposed, 10_800);
+    assert_ne!(base, drifted_key);
+}
+
+/// On generated fleets the solver stays inside its bounds: mode follows
+/// the estimated path count, the result validates, satisfies the privacy
+/// constraint, and the node budget is never exhausted.
+#[test]
+fn bounded_solve_is_valid_on_generated_fleets() {
+    let profile = ModelProfile::millis_demo();
+    let opts = SolverOpts::default();
+    let cases = [
+        gen_topo(gen::GenKind::Tree, 64, 64),
+        gen_topo(gen::GenKind::Tree, 256, 256),
+        gen_topo(gen::GenKind::Random, 256, 7),
+    ];
+    for topo in cases {
+        let est = fleet::estimate_paths(&topo, Strategy::Proposed, profile.m);
+        let cm = CostModel::new(&profile, topo);
+        let fp = fleet::solve(Strategy::Proposed, &cm, 10_800, &opts);
+        let topo = cm.topology();
+        let expected = if est <= opts.exact_threshold {
+            SolveMode::Exact
+        } else {
+            SolveMode::Beam
+        };
+        assert_eq!(fp.mode, expected, "{}: paths={est}", topo.name);
+        let placed = &fp.plan.placement;
+        if let Err(e) = placed.validate(topo, profile.m) {
+            panic!("{}: invalid placement: {e}", topo.name);
+        }
+        let private = placed.satisfies_privacy(topo, &profile.in_res, DELTA_RESOLUTION);
+        assert!(private, "{}: placement leaks a private stage", topo.name);
+        assert!(!fp.budget_exhausted, "{}: node budget exhausted", topo.name);
+        assert!(fp.nodes <= opts.node_budget);
+
+        // never worse than the always-feasible everything-on-entry plan
+        let entry = Placement::single(topo.entry(), profile.m);
+        let won = objective(&cm, Strategy::Proposed, placed, 10_800);
+        let fallback = objective(&cm, Strategy::Proposed, &entry, 10_800);
+        assert!(won <= fallback + 1e-9, "{}: beam lost to the trivial fallback", topo.name);
+    }
+}
+
+/// Same spec, same solve — the beam search carries no hidden state.
+#[test]
+fn beam_solve_is_deterministic() {
+    let profile = ModelProfile::millis_demo();
+    let opts = SolverOpts::default();
+    let cm = CostModel::new(&profile, gen_topo(gen::GenKind::Tree, 64, 64));
+    let a = fleet::solve(Strategy::Proposed, &cm, 10_800, &opts);
+    let b = fleet::solve(Strategy::Proposed, &cm, 10_800, &opts);
+    assert_eq!(a.plan.placement, b.plan.placement);
+    assert_eq!(a.nodes, b.nodes);
+}
+
+/// The incremental re-solve repairs a drifted resource without ever
+/// handing back a plan worse than the standing placement costs under the
+/// drifted topology, and its splice/window bookkeeping is consistent.
+#[test]
+fn incremental_resolve_repairs_drift() {
+    let profile = ModelProfile::millis_demo();
+    let opts = SolverOpts::default();
+    for topo in [Topology::paper_testbed(), gen_topo(gen::GenKind::Tree, 64, 64)] {
+        let cm = CostModel::new(&profile, topo.clone());
+        let standing = fleet::solve(Strategy::Proposed, &cm, 10_800, &opts).plan.placement;
+        let victim = standing
+            .stages
+            .iter()
+            .max_by_key(|st| st.range.len())
+            .expect("placements have stages")
+            .resource;
+
+        let mut drifted = topo.clone();
+        drifted.set_speed(victim, drifted.speed_of(victim) / 1.3);
+        let cm2 = CostModel::new(&profile, drifted);
+        let strat = Strategy::Proposed;
+        let out = fleet::resolve_incremental(strat, &cm2, 10_800, &standing, &[victim], &opts);
+
+        let fixed = &out.plan.placement;
+        if let Err(e) = fixed.validate(cm2.topology(), profile.m) {
+            panic!("{}: invalid repair: {e}", topo.name);
+        }
+        let in_res = &profile.in_res;
+        let private = fixed.satisfies_privacy(cm2.topology(), in_res, DELTA_RESOLUTION);
+        assert!(private, "{}: repair leaks a private stage", topo.name);
+        assert_eq!(out.spliced, out.window.is_some(), "{}: splice bookkeeping", topo.name);
+        let repaired = objective(&cm2, strat, fixed, 10_800);
+        let kept = objective(&cm2, strat, &standing, 10_800);
+        assert!(
+            repaired <= kept + 1e-9,
+            "{}: repair ({repaired:.4}s) is worse than standing ({kept:.4}s)",
+            topo.name
+        );
+    }
+}
+
+/// An empty drift set or all-unit ratios flags nothing; a drifted stage
+/// flags exactly its resource (deduplicated).
+#[test]
+fn drifted_resources_flags_only_drifted_stages() {
+    let profile = ModelProfile::millis_demo();
+    let cm = CostModel::new(&profile, Topology::paper_testbed());
+    let opts = SolverOpts::default();
+    let standing = fleet::solve(Strategy::Proposed, &cm, 10_800, &opts).plan.placement;
+    let k = standing.stages.len();
+
+    assert!(fleet::drifted_resources(&standing, &vec![1.0; k], 0.05).is_empty());
+
+    let mut ratios = vec![1.0; k];
+    ratios[0] = 1.3; // stage 0 runs 30% slower than predicted
+    let drifted = fleet::drifted_resources(&standing, &ratios, 0.05);
+    assert_eq!(drifted, vec![standing.stages[0].resource]);
+
+    // every stage drifting still reports each resource at most once
+    let all = fleet::drifted_resources(&standing, &vec![2.0; k], 0.05);
+    let mut dedup = all.clone();
+    dedup.dedup();
+    assert_eq!(all, dedup);
+}

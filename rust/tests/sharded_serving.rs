@@ -1,0 +1,188 @@
+//! Acceptance for sharded multi-chain serving (DESIGN.md §18): the DES
+//! says K parallel solved chains on the generated tree-64 fleet deliver
+//! a real aggregate-throughput win over one chain; the live [`Dispatcher`]
+//! admits, churns, and detaches streams across shards with zero frame
+//! loss; and a repartition on one shard re-solves that shard alone.
+//!
+//! The live scenarios run on the synthetic builder (workers execute the
+//! cost model's nominal service times), so no model artifacts are
+//! needed. They share ONE #[test] so the sleep-based worker threads
+//! never compete with a sibling test for cores.
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use serdab::coordinator::{
+    shard_topology, Dispatcher, DispatcherConfig, DispatcherEvent, ServerConfig, ServerEvent,
+    StreamSpec, SyntheticBuilder,
+};
+use serdab::placement::cost::CostModel;
+use serdab::placement::fleet::{self, SolverOpts};
+use serdab::placement::strategies::Strategy;
+use serdab::profiler::ModelProfile;
+use serdab::sim::simulate_schedule;
+use serdab::topology::{gen, Topology};
+
+const CHUNK: u64 = 10_800;
+
+/// Shard-server template for the live scenarios: fast monitor windows,
+/// incremental re-solve on drift.
+fn shard_server_config() -> ServerConfig {
+    let base = ServerConfig::default();
+    ServerConfig { window_secs: 0.1, incremental: true, ..base }
+}
+
+fn tree64() -> Topology {
+    let spec = gen::GenSpec { kind: gen::GenKind::Tree, resources: 64, seed: 64 };
+    gen::generate(&spec).unwrap()
+}
+
+/// Saturation throughput of the solved chain for one topology, per the
+/// DES: frames arrive far faster than any chain can serve, so completed
+/// frames per virtual second is the chain's service rate.
+fn des_fps(profile: &ModelProfile, topo: &Topology) -> f64 {
+    let cm = CostModel::new(profile, topo.clone());
+    let fp = fleet::solve(Strategy::Proposed, &cm, CHUNK, &SolverOpts::default());
+    let schedule: Vec<(f64, u32)> = (0..240).map(|f| (f as f64 * 1e-4, 0)).collect();
+    let report = simulate_schedule(&cm, &fp.plan.placement, &schedule, 256);
+    report.throughput()
+}
+
+/// Three shards of the tree-64 fleet must aggregate ≥ 2.5× the
+/// throughput of the best single chain over the whole fleet — the
+/// scale-out claim, settled in virtual time.
+#[test]
+fn three_shards_aggregate_des_throughput_beats_one_chain() {
+    let profile = ModelProfile::millis_demo();
+    let topo = tree64();
+    let one_chain = des_fps(&profile, &topo);
+    let shards = shard_topology(&topo, 3).unwrap();
+    assert_eq!(shards.len(), 3);
+    let aggregate: f64 = shards.iter().map(|s| des_fps(&profile, s)).sum();
+    assert!(
+        aggregate >= 2.5 * one_chain,
+        "3 shards aggregate {aggregate:.1} fps < 2.5× one-chain {one_chain:.1} fps"
+    );
+}
+
+/// Drain the merged event feed until `shard` completes a swap.
+fn wait_for_shard_swap(events: &Receiver<DispatcherEvent>, shard: usize, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    let mut seen = Vec::new();
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        assert!(!left.is_zero(), "no swap on shard {shard} within {timeout:?}: {seen:?}");
+        match events.recv_timeout(left) {
+            Ok(ev) if ev.shard == shard => match ev.event {
+                ServerEvent::SwapCompleted(_) => return,
+                ServerEvent::SwapFailed { error } => panic!("swap failed: {error}"),
+                other => seen.push((ev.shard, format!("{other:?}"))),
+            },
+            Ok(ev) => seen.push((ev.shard, format!("{:?}", ev.event))),
+            Err(_) => panic!("event feed closed before shard {shard} swapped: {seen:?}"),
+        }
+    }
+}
+
+#[test]
+fn dispatcher_serves_churns_and_repairs_per_shard() {
+    churn_across_shards_loses_no_frames();
+    repartition_touches_one_shard_only();
+}
+
+/// Streams attach through least-loaded routing with per-shard admission,
+/// churn mid-run, and every fed frame drains — on every shard.
+fn churn_across_shards_loses_no_frames() {
+    let profile = ModelProfile::millis_demo();
+    let topo = tree64();
+    let server = shard_server_config();
+    let cfg = DispatcherConfig { shards: 3, server, max_streams_per_shard: 4 };
+    let builder_profile = profile.clone();
+    let mut d = Dispatcher::launch(
+        &profile,
+        &topo,
+        |st| Box::new(SyntheticBuilder::new(builder_profile.clone(), st.clone())),
+        cfg,
+    )
+    .unwrap();
+    assert_eq!(d.shards(), 3);
+
+    // six cameras spread 2-2-2 by least-loaded admission
+    let mut streams = Vec::new();
+    for i in 0..6 {
+        let s = d.attach(StreamSpec::synthetic(format!("cam-{i}"), 0.05, 64)).unwrap();
+        streams.push(s);
+    }
+    for shard in 0..3 {
+        let on_shard = streams.iter().filter(|s| s.shard == shard).count();
+        assert_eq!(on_shard, 2, "least-loaded admission skewed: {shard}");
+    }
+    std::thread::sleep(Duration::from_millis(500));
+
+    // churn: two cameras leave (their in-flight frames keep flowing to
+    // completion — the zero-loss claim settles in the shutdown report),
+    // two join
+    let r0 = d.detach(streams[0].id).unwrap();
+    let r3 = d.detach(streams[3].id).unwrap();
+    assert!(r0.fed >= 2, "cam-0 barely fed: {r0:?}");
+    assert!(r0.completed <= r0.fed, "cam-0 over-completed: {r0:?}");
+    assert!(r3.completed <= r3.fed, "cam-3 over-completed: {r3:?}");
+    for i in 6..8 {
+        let s = d.attach(StreamSpec::synthetic(format!("cam-{i}"), 0.05, 64)).unwrap();
+        streams.push(s);
+    }
+    std::thread::sleep(Duration::from_millis(400));
+
+    let stats = d.cache_stats().expect("dispatcher installs a shared cache");
+    assert!(stats.0 + stats.1 >= 3, "every shard launch consults the shared cache");
+
+    let reports = d.shutdown().unwrap();
+    assert_eq!(reports.len(), 3);
+    for (i, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.frames_dropped, 0, "shard {i} dropped frames");
+        assert_eq!(rep.sink_errors, 0, "shard {i} sink errors");
+        for s in &rep.streams {
+            assert_eq!(s.completed, s.fed, "shard {i} stream {} lost frames", s.label);
+        }
+    }
+    let served: u64 = reports.iter().flat_map(|r| r.streams.iter().map(|s| s.fed)).sum();
+    assert!(served > 0, "no frames served across the fleet");
+}
+
+/// An out-of-band repartition on shard 0 hot-swaps shard 0 — and only
+/// shard 0; the siblings' swap histories stay empty.
+fn repartition_touches_one_shard_only() {
+    let profile = ModelProfile::millis_demo();
+    let topo = tree64();
+    let server = shard_server_config();
+    let cfg = DispatcherConfig { shards: 3, server, max_streams_per_shard: 0 };
+    let builder_profile = profile.clone();
+    let mut d = Dispatcher::launch(
+        &profile,
+        &topo,
+        |st| Box::new(SyntheticBuilder::new(builder_profile.clone(), st.clone())),
+        cfg,
+    )
+    .unwrap();
+    let events = d.events().expect("merged event feed is available once");
+
+    // one camera per shard so every chain is live while shard 0 swaps
+    for shard in 0..3 {
+        d.attach_to(shard, StreamSpec::synthetic(format!("cam-{shard}"), 0.05, 64)).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(300));
+
+    d.request_repartition(0, "test: forced drift on shard 0").unwrap();
+    wait_for_shard_swap(&events, 0, Duration::from_secs(30));
+    std::thread::sleep(Duration::from_millis(200));
+
+    let swaps = d.swaps_by_shard();
+    assert!(!swaps[0].is_empty(), "shard 0 must record its repartition");
+    assert!(swaps[1].is_empty(), "shard 1 swapped although only shard 0 drifted");
+    assert!(swaps[2].is_empty(), "shard 2 swapped although only shard 0 drifted");
+
+    let reports = d.shutdown().unwrap();
+    for (i, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.frames_dropped, 0, "shard {i} dropped frames across the swap");
+    }
+}

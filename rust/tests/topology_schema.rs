@@ -6,7 +6,8 @@
 use std::path::PathBuf;
 
 use serdab::profiler::DeviceKind;
-use serdab::topology::{LinkParams, Topology};
+use serdab::topology::{gen, LinkParams, Topology};
+use serdab::util::json::Json;
 
 fn topologies_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/topologies")
@@ -79,6 +80,108 @@ fn custom_link_params_survive_round_trip() {
     t.set_link(0, 1, LinkParams { bandwidth_bps: 2.5e6, rtt_secs: 0.042 });
     t.crypto_bytes_per_sec = 123e6;
     let json = t.to_json().to_string();
-    let back = Topology::from_json(&serdab::util::json::Json::parse(&json).unwrap()).unwrap();
+    let back = Topology::from_json(&Json::parse(&json).unwrap()).unwrap();
     assert_eq!(t, back);
+}
+
+/// Duplicate names are rejected at load with both colliding entries
+/// labeled, not just the name.
+#[test]
+fn load_labels_both_entries_of_a_duplicate_resource_name() {
+    let doc = r#"{
+        "name": "dup",
+        "resources": [
+            {"name": "TEE", "kind": "tee", "host": 0},
+            {"name": "CPU", "kind": "cpu", "host": 0},
+            {"name": "TEE", "kind": "gpu", "host": 0}
+        ]
+    }"#;
+    let e = Topology::from_json(&Json::parse(doc).unwrap()).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("resource [2]: duplicate resource name 'TEE'"), "{msg}");
+    assert!(msg.contains("already declared by resource [0]"), "{msg}");
+}
+
+/// With `"default_link": "none"` a resource whose host has no declared
+/// path to the camera is rejected — and the error names it.
+#[test]
+fn load_rejects_unreachable_resources_and_names_them() {
+    let doc = r#"{
+        "name": "strand",
+        "default_link": "none",
+        "resources": [
+            {"name": "T0", "kind": "tee", "host": 0},
+            {"name": "T1", "kind": "tee", "host": 1},
+            {"name": "FAR", "kind": "cpu", "host": 2}
+        ],
+        "links": [
+            {"a": 0, "b": 1, "bandwidth_bps": 100000000, "rtt_secs": 0.005}
+        ]
+    }"#;
+    let e = Topology::from_json(&Json::parse(doc).unwrap()).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("unreachable from camera host 0"), "{msg}");
+    assert!(msg.contains("'FAR'"), "{msg}");
+}
+
+/// Under `"default_link": "none"` non-adjacent host pairs are routed
+/// over the declared graph: bottleneck bandwidth, summed rtt.
+#[test]
+fn load_routes_multi_hop_host_pairs_over_declared_links() {
+    let doc = r#"{
+        "name": "chain",
+        "default_link": "none",
+        "resources": [
+            {"name": "T0", "kind": "tee", "host": 0},
+            {"name": "T1", "kind": "tee", "host": 1},
+            {"name": "T2", "kind": "tee", "host": 2}
+        ],
+        "links": [
+            {"a": 0, "b": 1, "bandwidth_bps": 100000000, "rtt_secs": 0.005},
+            {"a": 1, "b": 2, "bandwidth_bps": 50000000, "rtt_secs": 0.002}
+        ]
+    }"#;
+    let t = Topology::from_json(&Json::parse(doc).unwrap()).unwrap();
+    // declared links are untouched
+    assert!((t.link(0, 1).bandwidth_bps - 100e6).abs() < 1e-6);
+    assert!((t.link(1, 2).rtt_secs - 0.002).abs() < 1e-12);
+    // the 0↔2 pair is materialized from the 0-1-2 path
+    let routed = t.link(0, 2);
+    assert!((routed.bandwidth_bps - 50e6).abs() < 1e-6, "bottleneck bandwidth");
+    assert!((routed.rtt_secs - 0.007).abs() < 1e-12, "summed rtt");
+}
+
+/// Same (kind, resources, seed) spec ⇒ identical fleet; different seeds
+/// actually vary it.
+#[test]
+fn fleet_generator_is_deterministic_per_spec() {
+    for kind in [gen::GenKind::Tree, gen::GenKind::Random] {
+        let spec = gen::GenSpec { kind, resources: 64, seed: 9 };
+        assert_eq!(gen::generate(&spec).unwrap(), gen::generate(&spec).unwrap());
+    }
+    let s1 = gen::GenSpec { kind: gen::GenKind::Tree, resources: 64, seed: 1 };
+    let s2 = gen::GenSpec { kind: gen::GenKind::Tree, resources: 64, seed: 2 };
+    assert_ne!(gen::generate(&s1).unwrap(), gen::generate(&s2).unwrap());
+}
+
+/// The checked-in generated fleets are exactly what `topo gen` produces
+/// for their specs — loading and regenerating agree — and they carry the
+/// scale the fleet-solver benchmarks claim.
+#[test]
+fn shipped_generated_fleets_match_their_generator_specs() {
+    let cases = [
+        ("tree64.json", gen::GenKind::Tree, 64, 64, 31),
+        ("tree256.json", gen::GenKind::Tree, 256, 256, 124),
+        ("rand1024.json", gen::GenKind::Random, 1024, 1024, 256),
+    ];
+    for (file, kind, resources, seed, hosts) in cases {
+        let loaded = Topology::load(topologies_dir().join(file)).unwrap();
+        let spec = gen::GenSpec { kind, resources, seed };
+        let generated = gen::generate(&spec).unwrap();
+        assert_eq!(loaded, generated, "{file} drifted from its generator spec");
+        assert_eq!(loaded.len(), resources, "{file}: resource count");
+        assert_eq!(loaded.hosts(), hosts, "{file}: host count");
+        assert!(!loaded.tees().is_empty(), "{file}: no enclave");
+        assert_eq!(loaded.camera_host, 0, "{file}: camera host");
+    }
 }

@@ -1,45 +1,132 @@
 #!/usr/bin/env bash
-# Perf-trend gate over BENCH_batching.json (written by
-# `cargo bench --bench batching_bench -- --json`).
+# Perf-trend gate over the checked-in bench artifacts:
+#   BENCH_batching.json  (cargo bench --bench batching_bench -- --json)
+#   BENCH_solver.json    (cargo bench --bench solver_bench   -- --json)
+# The artifact kind is picked by filename: *solver* routes to the solver
+# gate, anything else to the batching gate.
 #
-# The gate is deliberately coarse — it fails only on order-of-magnitude
-# wrongness, not run-to-run jitter:
+# The gates are deliberately coarse — they fail only on order-of-magnitude
+# wrongness, not run-to-run jitter.
+#
+# Batching gate:
 #   1. parity must be true: the batched path is worthless the moment it
 #      stops being bitwise identical to sequential execution;
 #   2. frames/sec at B=8 must be at least MIN_SPEEDUP (default 1.2×) of
 #      the batch-1 baseline: if coalescing stops paying for itself the
 #      batching machinery has regressed into pure overhead.
 #
+# Solver gate:
+#   1. cache_bitwise must be true everywhere: a cache hit that differs
+#      from the cold solve it stands in for is corruption, not caching;
+#   2. no row may have exhausted the node budget: the bounded search must
+#      finish inside its own bound on these reference topologies;
+#   3. the 256-resource incremental re-solve must be ≥ INCR_SPEEDUP
+#      (default 5×) faster than the cold solve;
+#   4. the 1024-resource cold solve must finish under MAX_COLD_MS
+#      (default 5000 ms).
+#
 # Portability rules (so a checkout without a fresh bench run, or a
 # laptop-generated artifact checked on CI, never fails spuriously):
 #   - a missing artifact WARNS and passes (nothing to gate);
-#   - the speedup floor is only enforced when the artifact's "machine"
-#     stamp matches this host's class ($(uname -m)-$(nproc)cpu) — perf
-#     numbers from different hardware are a trend, not a contract;
-#   - parity=false and degenerate rows FAIL regardless of machine:
-#     correctness travels with the artifact.
+#   - wall-time/speedup floors are only enforced when the artifact's
+#     "machine" stamp matches this host's class ($(uname -m)-$(nproc)cpu)
+#     — perf numbers from different hardware are a trend, not a contract;
+#   - correctness claims (parity, cache_bitwise, budget, degenerate rows)
+#     FAIL regardless of machine: correctness travels with the artifact.
 # STRICT=1 restores hard failure for both relaxations (CI perf lane).
 #
-# Usage: scripts/check_bench.sh [path/to/BENCH_batching.json]
+# Usage: scripts/check_bench.sh [path/to/BENCH_*.json]
 set -euo pipefail
 
 bench="${1:-BENCH_batching.json}"
 min_speedup="${MIN_SPEEDUP:-1.2}"
+incr_speedup="${INCR_SPEEDUP:-5}"
+max_cold_ms="${MAX_COLD_MS:-5000}"
 strict="${STRICT:-0}"
 host_machine="$(uname -m)-$(nproc)cpu"
+
+case "$(basename "$bench")" in
+    *solver*) kind="solver"; bench_cmd="cargo bench --bench solver_bench -- --json" ;;
+    *) kind="batching"; bench_cmd="cargo bench --bench batching_bench -- --json" ;;
+esac
 
 if [[ ! -f "$bench" ]]; then
     if [[ "$strict" == "1" ]]; then
         echo "check_bench: FAIL: $bench not found (STRICT=1)" >&2
-        echo "check_bench: run: cargo bench --bench batching_bench -- --json" >&2
+        echo "check_bench: run: $bench_cmd" >&2
         exit 1
     fi
     echo "check_bench: WARN: $bench not found — nothing to gate (pass)" >&2
-    echo "check_bench: run: cargo bench --bench batching_bench -- --json" >&2
+    echo "check_bench: run: $bench_cmd" >&2
     echo "check_bench: OK (skipped)"
     exit 0
 fi
 
+if [[ "$kind" == "solver" ]]; then
+python3 - "$bench" "$incr_speedup" "$max_cold_ms" "$host_machine" "$strict" <<'PY'
+import json, sys
+
+path, incr_speedup, max_cold_ms, host_machine, strict = (
+    sys.argv[1], float(sys.argv[2]), float(sys.argv[3]), sys.argv[4],
+    sys.argv[5] == "1")
+with open(path) as f:
+    bench = json.load(f)
+
+rows = {int(r["resources"]): r for r in bench["rows"]}
+machine = bench.get("machine")
+same_class = machine == host_machine
+gate = same_class or strict
+for r in bench["rows"]:
+    print(f"{r['topology']:>10}  r={r['resources']:<5} mode={r['mode']:<6} "
+          f"cold={r['cold_ms']:.2f}ms incr={r['incr_ms']:.2f}ms "
+          f"speedup={r['speedup']:.1f}x cache_bitwise={r['cache_bitwise']}")
+print(f"machine={machine or 'unstamped'} vs host={host_machine} "
+      f"(perf floors {'enforced' if gate else 'advisory'})")
+
+failed = False
+# correctness claims travel with the artifact: fail on any machine
+if bench.get("cache_bitwise") is not True:
+    print("FAIL: a cache hit differed from its cold solve", file=sys.stderr)
+    failed = True
+for r in bench["rows"]:
+    if r["cold_ms"] <= 0 or r["incr_ms"] <= 0:
+        print(f"FAIL: degenerate row {r}", file=sys.stderr)
+        failed = True
+    if r.get("budget_exhausted"):
+        print(f"FAIL: {r['topology']} exhausted the node budget", file=sys.stderr)
+        failed = True
+# perf claims only bind on the machine class that produced them
+checks = []
+if 256 in rows:
+    r = rows[256]
+    checks.append((r["speedup"] >= incr_speedup,
+                   f"incremental re-solve at 256 is only {r['speedup']:.1f}x "
+                   f"cold (< {incr_speedup}x)"))
+else:
+    print("FAIL: no 256-resource row", file=sys.stderr)
+    failed = True
+if 1024 in rows:
+    r = rows[1024]
+    checks.append((r["cold_ms"] < max_cold_ms,
+                   f"cold solve at 1024 took {r['cold_ms']:.0f}ms "
+                   f"(>= {max_cold_ms:.0f}ms)"))
+else:
+    print("FAIL: no 1024-resource row", file=sys.stderr)
+    failed = True
+for ok, msg in checks:
+    if ok:
+        continue
+    if gate:
+        print(f"FAIL: {msg}", file=sys.stderr)
+        failed = True
+    else:
+        print(f"WARN: {msg}, but the artifact is from "
+              f"'{machine or 'unstamped'}', not this host — not gating",
+              file=sys.stderr)
+
+sys.exit(1 if failed else 0)
+PY
+else
 python3 - "$bench" "$min_speedup" "$host_machine" "$strict" <<'PY'
 import json, sys
 
@@ -78,4 +165,5 @@ if speedup < min_speedup:
 
 sys.exit(1 if failed else 0)
 PY
+fi
 echo "check_bench: OK"

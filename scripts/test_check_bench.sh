@@ -108,6 +108,60 @@ expect "STRICT=1 restores the hard speedup gate" 1 "$rc"
 rc=0; MIN_SPEEDUP=1.05 "$check" "$tmp/slow_same.json" >/dev/null 2>&1 || rc=$?
 expect "MIN_SPEEDUP lowers the floor" 0 "$rc"
 
+# ---- solver gate (filenames containing "solver" route here) -----------------
+
+# mk_solver <file> <bitwise:true|false> <speedup256> <cold1024_ms> <machine|none>
+mk_solver() {
+    python3 - "$1" "$2" "$3" "$4" "$5" <<'PY'
+import json, sys
+file, bitwise, sp256, cold1024, machine = (
+    sys.argv[1], sys.argv[2] == "true", float(sys.argv[3]), float(sys.argv[4]),
+    sys.argv[5])
+def row(topo, n, mode, cold, incr):
+    return {"topology": topo, "resources": n, "mode": mode, "nodes": 100,
+            "budget_exhausted": False, "cold_ms": cold, "incr_ms": incr,
+            "speedup": cold / incr, "cache_hit": True, "cache_bitwise": bitwise,
+            "spliced": True}
+doc = {
+    "bench": "solver_bench",
+    "cache_bitwise": bitwise,
+    "rows": [
+        row("paper-5", 5, "exact", 1.0, 1.0),
+        row("tree-64", 64, "beam", 20.0, 4.0),
+        row("tree-256", 256, "beam", sp256 * 10.0, 10.0),
+        row("rand-1024", 1024, "beam", cold1024, 30.0),
+    ],
+}
+if machine != "none":
+    doc["machine"] = machine
+with open(file, "w") as f:
+    json.dump(doc, f)
+PY
+}
+
+mk_solver "$tmp/solver_good.json" true 8 900 "$host"
+rc=0; "$check" "$tmp/solver_good.json" >/dev/null 2>&1 || rc=$?
+expect "healthy solver artifact passes" 0 "$rc"
+
+mk_solver "$tmp/solver_bitwise.json" false 8 900 "other-0cpu"
+rc=0; "$check" "$tmp/solver_bitwise.json" >/dev/null 2>&1 || rc=$?
+expect "cache_bitwise=false fails on any machine class" 1 "$rc"
+
+mk_solver "$tmp/solver_slow_incr.json" true 2 900 "$host"
+rc=0; "$check" "$tmp/solver_slow_incr.json" >/dev/null 2>&1 || rc=$?
+expect "incremental shortfall at 256 fails on the same class" 1 "$rc"
+
+mk_solver "$tmp/solver_slow_other.json" true 2 900 "other-0cpu"
+rc=0; "$check" "$tmp/solver_slow_other.json" >/dev/null 2>&1 || rc=$?
+expect "incremental shortfall warns and passes cross-class" 0 "$rc"
+
+rc=0; STRICT=1 "$check" "$tmp/solver_slow_other.json" >/dev/null 2>&1 || rc=$?
+expect "STRICT=1 restores the hard incremental gate" 1 "$rc"
+
+mk_solver "$tmp/solver_slow_cold.json" true 8 9000 "$host"
+rc=0; "$check" "$tmp/solver_slow_cold.json" >/dev/null 2>&1 || rc=$?
+expect "cold solve over 5s at 1024 fails on the same class" 1 "$rc"
+
 echo
 echo "test_check_bench: $pass passed, $fail failed"
 [[ "$fail" == "0" ]]
