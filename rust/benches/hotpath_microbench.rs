@@ -1,6 +1,9 @@
 //! Hot-path microbenchmarks (DESIGN.md §15 Perf log): the components on
 //! the per-frame critical path of the live pipeline —
-//!   1. AES-128-GCM seal+open of boundary tensors (crypto),
+//!   1. AES-128-GCM seal+open of boundary tensors (crypto), plus the
+//!      sealed-hop lane: dispatched (AES-NI + CLMUL) vs scalar GCM on the
+//!      same records *in the same run* — the before/after pair the ≥3×
+//!      crypto target is judged on, with a bitwise parity check,
 //!   2. secure-channel record sealing + coalesced framing (net + channel),
 //!   3. block execution on the reference backend's GEMM core, measured
 //!      against the retained pre-GEMM `naive` kernels *in the same run*
@@ -9,9 +12,10 @@
 //!      artifacts directory exists.
 //!
 //! `--json` additionally writes `BENCH_hotpath.json` at the repo root
-//! (component → payload → median ns + throughput, plus the block-exec
-//! speedup), so the perf trajectory is machine-readable PR-over-PR; CI
-//! uploads it as a build artifact.
+//! (component → payload → median ns + throughput, the block-exec speedup,
+//! and the sealed-hop lane `scripts/check_bench.sh` gates), so the perf
+//! trajectory is machine-readable PR-over-PR; CI uploads it as a build
+//! artifact.
 
 use serdab::crypto::channel::Channel;
 use serdab::crypto::gcm::AesGcm;
@@ -66,13 +70,57 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // --- 1b. sealed hop: dispatched vs scalar GCM in the same run ---------
+    // The crypto lane scripts/check_bench.sh gates on BENCH_hotpath.json:
+    // parity fails on any machine, the speedup floor binds on AES-NI
+    // hosts (the scalar path IS the dispatched path without AES-NI, so
+    // the ratio is ~1 there by construction).
+    let aesni = serdab::crypto::gcm::aesni_available();
+    let scalar = AesGcm::new_scalar(b"hotpath-bench-ke");
+    let mut hop_rows: Vec<Json> = Vec::new();
+    let mut hop_parity = true;
+    for &(label, bytes) in &[("64 KiB", 64usize << 10), ("1 MiB", 1usize << 20)] {
+        let mut buf = vec![0x5au8; bytes];
+        let mut buf2 = buf.clone();
+        let t_fast = gcm.seal(&[9u8; 12], b"hop", &mut buf);
+        let t_slow = scalar.seal(&[9u8; 12], b"hop", &mut buf2);
+        hop_parity &= t_fast == t_slow && buf == buf2;
+        scalar.open(&[9u8; 12], b"hop", &mut buf, &t_fast).unwrap();
+
+        let m_fast = timer.measure(|| {
+            let tag = gcm.seal(&[9u8; 12], b"hop", &mut buf);
+            gcm.open(&[9u8; 12], b"hop", &mut buf, &tag).unwrap();
+        });
+        let m_slow = timer.measure(|| {
+            let tag = scalar.seal(&[9u8; 12], b"hop", &mut buf);
+            scalar.open(&[9u8; 12], b"hop", &mut buf, &tag).unwrap();
+        });
+        let speedup = m_slow.median_secs / m_fast.median_secs;
+        for (path, m) in [("dispatched", m_fast), ("scalar", m_slow)] {
+            rows.push(Row {
+                component: format!("sealed hop ({path})"),
+                payload: label.into(),
+                m,
+                throughput: format!("{:.2} GB/s", 2.0 * bytes as f64 / m.median_secs / 1e9),
+            });
+        }
+        println!("sealed hop {label}: {speedup:.2}× dispatched vs scalar (aesni={aesni})");
+        hop_rows.push(obj(vec![
+            ("payload", s(label)),
+            ("bytes", num(bytes as f64)),
+            ("dispatched_gbps", Json::Num(2.0 * bytes as f64 / m_fast.median_secs / 1e9)),
+            ("scalar_gbps", Json::Num(2.0 * bytes as f64 / m_slow.median_secs / 1e9)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
     // --- 2. channel record seal (reused buffer) + coalesced framing -------
     {
         let mut ch = Channel::new(b"bench-secret", true);
         let payload = vec![7u8; 400 * 1024];
         let mut rec = Vec::new();
         let m = timer.measure(|| {
-            ch.tx.seal_record_into(&payload, &mut rec);
+            ch.tx.seal_record_into(&payload, &mut rec).unwrap();
             std::hint::black_box(rec.len());
         });
         rows.push(Row {
@@ -255,9 +303,15 @@ fn main() -> anyhow::Result<()> {
     println!("\nblock-exec speedup (gemm vs naive conv3x3): {block_exec_speedup:.2}×");
 
     if json_mode {
+        // machine class stamp: scripts/check_bench.sh only enforces the
+        // crypto speedup floor when the recorded class matches the
+        // checking host (`$(uname -m)-$(nproc)cpu`) or STRICT=1
+        let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+        let machine = format!("{}-{ncpu}cpu", std::env::consts::ARCH);
         let json = obj(vec![
             ("bench", s("hotpath_microbench")),
             ("generator", s("cargo bench --bench hotpath_microbench -- --json")),
+            ("machine", s(&machine)),
             ("threads", num(serdab::runtime::scratch::env_threads() as f64)),
             (
                 "rows",
@@ -279,6 +333,14 @@ fn main() -> anyhow::Result<()> {
                     ("naive_ns", num((m_naive.median_secs * 1e9).round())),
                     ("gemm_ns", num((m_gemm.median_secs * 1e9).round())),
                     ("speedup", Json::Num(block_exec_speedup)),
+                ]),
+            ),
+            (
+                "sealed_hop",
+                obj(vec![
+                    ("aesni", Json::Bool(aesni)),
+                    ("parity", Json::Bool(hop_parity)),
+                    ("rows", arr(hop_rows)),
                 ]),
             ),
         ]);

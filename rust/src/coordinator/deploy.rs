@@ -1,8 +1,11 @@
 //! Application Manager: turn a solved placement into a running pipeline.
 //!
 //! For each stage the manager (1) verifies the enclave's attestation quote
-//! against the expected measurement (code id + sealed-partition digest)
-//! before releasing the per-hop session secrets, (2) ships the partition
+//! against the expected measurement (code id + sealed-partition digest) —
+//! optionally through an [`EvidenceCache`] — then derives the per-hop
+//! channel secrets from the deployment's [`KeyManager`] at the current
+//! [`KeyEpoch`] and wraps each one for the recipient enclave (the stage
+//! worker unwraps them inside the trust boundary), (2) ships the partition
 //! description to the device, whose worker thread loads the block
 //! executables *inside its own runtime* (each stage constructs its own
 //! execution backend — PJRT clients are per-device), and (3) wires
@@ -23,11 +26,12 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::resources::ResourceManager;
-use crate::crypto::attest::Measurement;
+use crate::crypto::attest::{EvidenceCache, Measurement};
 use crate::crypto::channel::Channel;
+use crate::crypto::keymgr::{KeyEpoch, KeyManager};
 use crate::crypto::sha256;
 use crate::dataflow::{Operator, ServiceOperator, TransmitOperator};
-use crate::enclave::{attest_and_release, EnclaveSim, NnService, CODE_ID};
+use crate::enclave::{attest_and_release_cached, EnclaveSim, NnService, CODE_ID};
 use crate::model::Manifest;
 use crate::net::TokenBucket;
 use crate::placement::Placement;
@@ -97,8 +101,6 @@ impl DeploymentReport {
     }
 }
 
-const CAMERA_SECRET: &[u8] = b"serdab-camera-hop";
-
 impl Deployment {
     /// Deploy `placement` of `model` onto the registered devices.
     /// `wan_bps` overrides every cross-host edge with bandwidth-only
@@ -119,7 +121,10 @@ impl Deployment {
     /// [`deploy`](Deployment::deploy) with full control over the engine
     /// configuration — e.g. `tcp_hops: true` to bridge every inter-stage
     /// hop over a loopback TCP socket pair (socket-accurate deployment
-    /// shape: real reads/writes of the framed sealed records).
+    /// shape: real reads/writes of the framed sealed records). Keys come
+    /// from a fresh per-deployment [`KeyManager`] at epoch 0 and every
+    /// quote is verified in full; the server's re-keying hot-swap path
+    /// uses [`deploy_with_keys`](Deployment::deploy_with_keys) instead.
     pub fn deploy_with_config(
         manifest: &Manifest,
         rm: &ResourceManager,
@@ -127,6 +132,28 @@ impl Deployment {
         placement: &Placement,
         wan_bps: Option<f64>,
         cfg: PipelineConfig,
+    ) -> Result<Self> {
+        Self::deploy_with_keys(manifest, rm, model, placement, wan_bps, cfg, &KeyManager::new(), 0, None)
+    }
+
+    /// The full deployment handshake with an explicit key lifecycle
+    /// (DESIGN.md §19): per-hop channel secrets are derived from `keys`
+    /// at `epoch`, wrapped per recipient enclave under the secret its
+    /// attestation released, and unwrapped *inside* each stage worker.
+    /// `attest_cache` (when given) amortizes quote verification across
+    /// re-deploys of the same enclaves — hot-swaps and re-keys re-attest
+    /// for free once the measurement is trusted.
+    #[allow(clippy::too_many_arguments)]
+    pub fn deploy_with_keys(
+        manifest: &Manifest,
+        rm: &ResourceManager,
+        model: &str,
+        placement: &Placement,
+        wan_bps: Option<f64>,
+        cfg: PipelineConfig,
+        keys: &KeyManager,
+        epoch: KeyEpoch,
+        attest_cache: Option<&EvidenceCache>,
     ) -> Result<Self> {
         let topo = rm.topology();
         let info = manifest.model(model)?;
@@ -152,10 +179,15 @@ impl Deployment {
             // the "remote" enclave side produces its quote (simulated by
             // constructing the enclave identity the device would boot)
             let remote = EnclaveSim::new(CODE_ID, &param_bytes, dev.hw_key);
-            let secret = attest_and_release(expected, dev.hw_key, |ch| remote.quote(ch))
-                .with_context(|| {
-                    format!("attestation failed for {}", topo.name_of(stage.resource))
-                })?;
+            let secret = attest_and_release_cached(
+                expected,
+                dev.hw_key,
+                |ch| remote.quote(ch),
+                attest_cache,
+            )
+            .with_context(|| {
+                format!("attestation failed for {}", topo.name_of(stage.resource))
+            })?;
             hop_secrets.push(secret);
         }
 
@@ -168,13 +200,13 @@ impl Deployment {
             let model2 = model.to_string();
             let range = stage.range.clone();
             let hw_key = rm.get_id(stage.resource).unwrap().hw_key;
-            let ingress_secret = if si == 0 {
-                CAMERA_SECRET.to_vec()
-            } else {
-                hop_secrets[si - 1].clone()
-            };
-            let egress_secret =
-                if si + 1 < n_stages { Some(hop_secrets[si].clone()) } else { None };
+            // per-hop channel secrets, wrapped for THIS stage's enclave:
+            // hop i runs stage i-1 → stage i (hop 0 is camera → stage 0),
+            // so stage i unwraps hop i (ingress) and hop i+1 (egress)
+            let attested = hop_secrets[si].clone();
+            let ingress_key = keys.wrap_for(&attested, si, epoch);
+            let egress_key =
+                if si + 1 < n_stages { Some(keys.wrap_for(&attested, si + 1, epoch)) } else { None };
             pipeline.add_stage(StageSpec::new(
                 stage.label(topo),
                 WorkerKind::Stage,
@@ -188,8 +220,9 @@ impl Deployment {
                         &model2,
                         range.clone(),
                         hw_key,
-                        &ingress_secret,
-                        egress_secret.as_deref(),
+                        &attested,
+                        &ingress_key,
+                        egress_key.as_ref(),
                     )?;
                     // pre-warm scratch for the engine's max micro-batch so
                     // the first coalesced invocation allocates nothing new
@@ -225,12 +258,10 @@ impl Deployment {
         }
 
         let out_shape = info.blocks.last().unwrap().out_shape.clone();
-        Ok(Deployment {
-            placement: placement.clone(),
-            pipeline,
-            camera: Channel::new(CAMERA_SECRET, true),
-            out_shape,
-        })
+        // the coordinator plays the camera: it derived hop 0's secret
+        // itself, so no wrap/unwrap round is needed on this side
+        let camera = Channel::with_epoch(&keys.hop_secret(0, epoch), true, epoch);
+        Ok(Deployment { placement: placement.clone(), pipeline, camera, out_shape })
     }
 
     /// Decompose into the session pieces the coordinator's
@@ -258,8 +289,15 @@ impl Deployment {
     {
         let Deployment { placement: _, pipeline, camera, out_shape } = self;
         let mut camera = camera;
-        let feed = frames
-            .map(move |f| FrameIn { stream: 0, payload: camera.tx.seal_record(&f.to_le_bytes()) });
+        let feed = frames.map(move |f| FrameIn {
+            stream: 0,
+            // a one-shot stream cannot exhaust the 64-bit sequence space;
+            // long-lived serving re-keys through the server instead
+            payload: camera
+                .tx
+                .seal_record(&f.to_le_bytes())
+                .expect("camera sequence space exhausted"),
+        });
 
         let mut tally = SinkTally::new(out_shape);
         let report = pipeline.run(feed, |out| tally.absorb(&out.payload))?;

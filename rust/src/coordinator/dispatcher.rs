@@ -330,6 +330,14 @@ impl Dispatcher {
         Ok(())
     }
 
+    /// Ask one shard to rotate its channel keys to a fresh epoch (the
+    /// zero-loss drain/hot-swap path; see [`Server::rekey`](super::server::Server::rekey)).
+    pub fn request_rekey(&self, shard: usize) -> Result<()> {
+        let srv = self.servers.get(shard).ok_or_else(|| anyhow!("no shard {shard}"))?;
+        srv.rekey();
+        Ok(())
+    }
+
     /// Attach a TCP listener to one shard's session reactor. Each shard
     /// binds its own listener — socket streams get shard affinity at the
     /// network layer (clients of shard `i` connect to shard `i`'s port).

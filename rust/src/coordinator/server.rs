@@ -76,7 +76,9 @@ use anyhow::{anyhow, Context, Result};
 
 use super::monitor::{Monitor, MonitorVerdict};
 use super::resources::ResourceManager;
+use crate::crypto::attest::EvidenceCache;
 use crate::crypto::channel::Channel;
+use crate::crypto::keymgr::{KeyEpoch, KeyManager};
 use crate::model::Manifest;
 use crate::net::reactor::{
     self, ConnId, ReactorConfig, ReactorEvent, ReactorHandle, ReactorStats, UplinkPolicy,
@@ -108,13 +110,25 @@ pub trait StageBuilder: Send {
     /// for the placement (its predicted stage/boundary seconds — possibly
     /// recalibrated from observations); builders that execute modelled
     /// times should charge their own notion of ground truth instead.
+    /// `epoch` is the key epoch every sealed record of the new generation
+    /// must carry — the server bumps it on a re-key swap; builders whose
+    /// pipelines don't speak sealed records may ignore it.
     fn build(
         &mut self,
         topo: &Topology,
         placement: &Placement,
         cost: &PathCost,
         cfg: PipelineConfig,
+        epoch: KeyEpoch,
     ) -> Result<BuiltPipeline>;
+
+    /// Attestation-evidence cache counters `(hits, misses)` of this
+    /// builder, when it attests enclaves through one (surfaced in
+    /// [`ServerStatus`] like the `PlacementCache` counters). Default:
+    /// `None` — nothing to attest.
+    fn attest_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// What a [`StageBuilder`] hands back: the pipeline plus the camera-side
@@ -137,13 +151,35 @@ pub struct DeployBuilder {
     manifest: Manifest,
     model: String,
     wan_bps: Option<f64>,
+    /// Per-server key hierarchy: every generation's hop secrets derive
+    /// from the same base, distinguished by the epoch the server passes.
+    keys: KeyManager,
+    /// Evidence cache shared across generations (and across shards when
+    /// installed with [`with_attest_cache`](DeployBuilder::with_attest_cache)):
+    /// a hot-swap re-attests the same enclaves, so every rebuild past the
+    /// first is all hits.
+    attest_cache: Arc<EvidenceCache>,
 }
 
 impl DeployBuilder {
     /// A builder deploying `model` from `manifest`; `wan_bps` as in
-    /// [`Deployment::deploy`](super::Deployment::deploy).
+    /// [`Deployment::deploy`](super::Deployment::deploy). Gets a fresh
+    /// key hierarchy and its own attestation-evidence cache.
     pub fn new(manifest: Manifest, model: impl Into<String>, wan_bps: Option<f64>) -> Self {
-        DeployBuilder { manifest, model: model.into(), wan_bps }
+        DeployBuilder {
+            manifest,
+            model: model.into(),
+            wan_bps,
+            keys: KeyManager::new(),
+            attest_cache: Arc::new(EvidenceCache::new()),
+        }
+    }
+
+    /// Share an attestation-evidence cache (e.g. one per dispatcher,
+    /// across shard servers) instead of this builder's own.
+    pub fn with_attest_cache(mut self, cache: Arc<EvidenceCache>) -> Self {
+        self.attest_cache = cache;
+        self
     }
 }
 
@@ -154,18 +190,26 @@ impl StageBuilder for DeployBuilder {
         placement: &Placement,
         _cost: &PathCost,
         cfg: PipelineConfig,
+        epoch: KeyEpoch,
     ) -> Result<BuiltPipeline> {
         let rm = ResourceManager::for_topology(topo);
-        let dep = super::Deployment::deploy_with_config(
+        let dep = super::Deployment::deploy_with_keys(
             &self.manifest,
             &rm,
             &self.model,
             placement,
             self.wan_bps,
             cfg,
+            &self.keys,
+            epoch,
+            Some(&self.attest_cache),
         )?;
         let (_placement, pipeline, camera, _out_shape) = dep.into_parts();
         Ok(BuiltPipeline { pipeline, camera: Some(camera) })
+    }
+
+    fn attest_stats(&self) -> Option<(u64, u64)> {
+        Some(self.attest_cache.stats())
     }
 }
 
@@ -212,6 +256,7 @@ impl StageBuilder for SyntheticBuilder {
         placement: &Placement,
         _cost: &PathCost,
         cfg: PipelineConfig,
+        _epoch: KeyEpoch,
     ) -> Result<BuiltPipeline> {
         // ground truth: the nominal cost of this placement (NOT the
         // planner's recalibrated estimate), scaled live by the factors.
@@ -264,6 +309,11 @@ pub struct ServerConfig {
     /// Re-solve only the drifted subgraph on a hot swap (incremental
     /// splice, DESIGN.md §18) instead of solving from scratch.
     pub incremental: bool,
+    /// Rotate the deployment's channel keys every this many seconds
+    /// through the zero-loss drain/hot-swap path (0 = periodic re-keying
+    /// off; [`Server::rekey`] still works on demand). Each rotation bumps
+    /// the [`KeyEpoch`] every sealed record carries.
+    pub rekey_interval_secs: f64,
 }
 
 impl Default for ServerConfig {
@@ -279,6 +329,7 @@ impl Default for ServerConfig {
             solver: SolverOpts::default(),
             cache: None,
             incremental: false,
+            rekey_interval_secs: 0.0,
         }
     }
 }
@@ -449,6 +500,9 @@ pub struct SwapEvent {
     pub predicted_throughput_fps: f64,
     /// Frames the old generation completed before retiring.
     pub drained_frames: u64,
+    /// Key epoch the new generation seals under (bumped when the swap was
+    /// a re-key; unchanged on drift swaps).
+    pub key_epoch: KeyEpoch,
 }
 
 /// Live feed the server emits (take it once with [`Server::events`]).
@@ -482,6 +536,16 @@ pub enum ServerEvent {
         stage_means: Vec<Option<f64>>,
         /// The monitor's verdict for the window.
         verdict: MonitorVerdict,
+    },
+    /// A scheduled or on-demand re-key fired: the swap that follows
+    /// (`SwapStarted`/`SwapCompleted` as usual) rotates every channel key
+    /// to `epoch`. In-flight frames drain under the old epoch first —
+    /// zero frame loss by the same argument as any hot-swap.
+    Rekey {
+        /// Server-relative time (seconds).
+        at_secs: f64,
+        /// The epoch the new generation's records will carry.
+        epoch: KeyEpoch,
     },
     /// A drift verdict fired; the hot-swap is starting.
     SwapStarted {
@@ -573,6 +637,11 @@ pub struct ServerStatus {
     pub frames_completed: u64,
     /// Hot-swaps performed.
     pub swaps: u32,
+    /// Key epoch the live generation seals under.
+    pub key_epoch: KeyEpoch,
+    /// Attestation-evidence cache counters `(hits, misses)` of the
+    /// builder (`None` for builders that attest nothing).
+    pub attest_cache: Option<(u64, u64)>,
     /// Per-stream live counters (attached and detached).
     pub streams: Vec<StreamReport>,
 }
@@ -716,6 +785,11 @@ struct ServerInner {
     /// A degradation-triggered re-partition request (reason), polled by
     /// the control loop each window.
     repartition_request: Mutex<Option<String>>,
+    /// Key epoch the live generation seals under; bumped by re-key swaps.
+    key_epoch: AtomicU32,
+    /// An on-demand re-key request ([`Server::rekey`]), polled by the
+    /// control loop each window alongside the periodic schedule.
+    rekey_request: AtomicBool,
     /// Present while the socket plane serves: lets the sink complete
     /// frames back to the reactor.
     egress: Mutex<Option<Egress>>,
@@ -756,7 +830,7 @@ impl Server {
         let cm = CostModel::new(&profile, topo.clone());
         let p = solve_with_cache(&cfg, &cm);
         let built = builder
-            .build(&topo, &p.placement, &p.cost, cfg.engine)
+            .build(&topo, &p.placement, &p.cost, cfg.engine, 0)
             .context("building the initial pipeline generation")?;
         let rp = Arc::new(built.pipeline.start()?);
         let injector = rp.injector()?;
@@ -788,6 +862,8 @@ impl Server {
             events: Mutex::new(ev_tx),
             next_stream: AtomicU32::new(0),
             repartition_request: Mutex::new(None),
+            key_epoch: AtomicU32::new(0),
+            rekey_request: AtomicBool::new(false),
             egress: Mutex::new(None),
         });
 
@@ -925,8 +1001,23 @@ impl Server {
             elapsed_secs: self.inner.t0.elapsed().as_secs_f64(),
             frames_completed: self.inner.frames_past.load(Ordering::SeqCst) + current,
             swaps: self.inner.swaps.lock().unwrap().len() as u32,
+            key_epoch: self.inner.key_epoch.load(Ordering::SeqCst),
+            attest_cache: self.inner.planner.lock().unwrap().builder.attest_stats(),
             streams,
         }
+    }
+
+    /// The key epoch the live generation seals under.
+    pub fn key_epoch(&self) -> KeyEpoch {
+        self.inner.key_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Request an on-demand re-key: the control thread rotates every
+    /// channel key to a fresh epoch through the zero-loss drain/hot-swap
+    /// path on its next window tick (in-flight frames finish under the
+    /// old epoch; new frames seal under the new one).
+    pub fn rekey(&self) {
+        self.inner.rekey_request.store(true, Ordering::SeqCst);
     }
 
     /// Hot-swaps performed so far.
@@ -1176,7 +1267,16 @@ fn feeder_loop(inner: Arc<ServerInner>, mux_rx: Receiver<MuxFrame>) {
         }
         let g = gate.as_mut().unwrap();
         let payload = match &mut g.camera {
-            Some(ch) => ch.tx.seal_record(&mf.payload),
+            Some(ch) => match ch.tx.seal_record(&mf.payload) {
+                Ok(p) => p,
+                Err(_) => {
+                    // sequence space exhausted: the frame is dropped (never
+                    // sealed under a wrapped nonce); a re-key restores flow
+                    drop(gate);
+                    inner.frames_dropped.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+            },
             None => mf.payload,
         };
         // a send error means the generation died; the control thread (or
@@ -1446,6 +1546,7 @@ fn drain_generation(g: GenState) -> Result<SegmentReport> {
 /// hot-swaps (paper §V's continuous loop).
 fn control_loop(inner: Arc<ServerInner>) {
     let mut prev: Option<PipelineSnapshot> = None;
+    let mut last_rekey = Instant::now();
     let window = Duration::from_secs_f64(inner.cfg.window_secs.max(0.01));
     loop {
         sleep_interruptible(window, &inner.shutting_down);
@@ -1463,13 +1564,41 @@ fn control_loop(inner: Arc<ServerInner>) {
                 predicted: 0.0,
                 observed: 0.0,
             });
-            match hot_swap(&inner, 0, 0.0, 0.0) {
+            match hot_swap(&inner, 0, 0.0, 0.0, false) {
                 Ok(ev) => inner.emit(ServerEvent::SwapCompleted(ev)),
                 Err(e) => {
                     inner.broken.store(true, Ordering::SeqCst);
                     inner.emit(ServerEvent::SwapFailed { error: format!("{e:#}") });
                 }
             }
+            prev = None;
+            continue;
+        }
+        // key lifecycle: periodic (rekey_interval_secs) or on-demand
+        // (Server::rekey) rotation, through the same drain/hot-swap path
+        // — in-flight frames finish under the old epoch, the rebuilt
+        // generation seals under the bumped one, nothing is dropped
+        let interval = inner.cfg.rekey_interval_secs;
+        let rekey_due = inner.rekey_request.swap(false, Ordering::SeqCst)
+            || (interval > 0.0 && last_rekey.elapsed().as_secs_f64() >= interval);
+        if rekey_due && inner.gen.lock().unwrap().is_some() {
+            let at_secs = inner.t0.elapsed().as_secs_f64();
+            let epoch = inner.key_epoch.load(Ordering::SeqCst) + 1;
+            inner.emit(ServerEvent::Rekey { at_secs, epoch });
+            inner.emit(ServerEvent::SwapStarted {
+                at_secs,
+                stage: 0,
+                predicted: 0.0,
+                observed: 0.0,
+            });
+            match hot_swap(&inner, 0, 0.0, 0.0, true) {
+                Ok(ev) => inner.emit(ServerEvent::SwapCompleted(ev)),
+                Err(e) => {
+                    inner.broken.store(true, Ordering::SeqCst);
+                    inner.emit(ServerEvent::SwapFailed { error: format!("{e:#}") });
+                }
+            }
+            last_rekey = Instant::now();
             prev = None;
             continue;
         }
@@ -1503,7 +1632,7 @@ fn control_loop(inner: Arc<ServerInner>) {
                 predicted,
                 observed,
             });
-            match hot_swap(&inner, stage, predicted, observed) {
+            match hot_swap(&inner, stage, predicted, observed, false) {
                 Ok(ev) => inner.emit(ServerEvent::SwapCompleted(ev)),
                 Err(e) => {
                     // terminal: no generation is live and nothing retries;
@@ -1518,12 +1647,16 @@ fn control_loop(inner: Arc<ServerInner>) {
     }
 }
 
-/// Drain → recalibrate → re-solve → rebuild → resume.
+/// Drain → recalibrate → re-solve → rebuild → resume. With `rekey`, the
+/// rebuilt generation seals under a bumped key epoch: the drain step
+/// already guarantees every in-flight frame completed under the old
+/// epoch, so rotation costs nothing beyond the swap itself.
 fn hot_swap(
     inner: &Arc<ServerInner>,
     stage: usize,
     predicted: f64,
     observed: f64,
+    rekey: bool,
 ) -> Result<SwapEvent> {
     // 1. pause intake: streams keep queueing in the bounded mux, the
     //    feeder parks once the gate is empty
@@ -1556,9 +1689,12 @@ fn hot_swap(
     let from = old_placement.describe(topo);
     let to = p.placement.describe(topo);
 
-    // 4. rebuild and restart through the builder
+    // 4. rebuild and restart through the builder (under the bumped key
+    //    epoch when this swap is a re-key)
+    let cur_epoch = inner.key_epoch.load(Ordering::SeqCst);
+    let epoch = if rekey { cur_epoch + 1 } else { cur_epoch };
     let built = builder
-        .build(topo, &p.placement, &p.cost, inner.cfg.engine)
+        .build(topo, &p.placement, &p.cost, inner.cfg.engine, epoch)
         .context("rebuilding the pipeline for the re-solved placement")?;
     let rp = Arc::new(built.pipeline.start()?);
     let injector = rp.injector()?;
@@ -1574,6 +1710,7 @@ fn hot_swap(
         Some(GenState { handle: rp, sink, placement: p.placement, desc });
     *inner.feed_gate.lock().unwrap() =
         Some(FeedGate { injector, camera: built.camera });
+    inner.key_epoch.store(epoch, Ordering::SeqCst);
     inner.feed_cv.notify_all();
 
     let ev = SwapEvent {
@@ -1585,6 +1722,7 @@ fn hot_swap(
         to,
         predicted_throughput_fps,
         drained_frames,
+        key_epoch: epoch,
     };
     inner.swaps.lock().unwrap().push(ev.clone());
     Ok(ev)

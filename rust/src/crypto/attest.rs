@@ -18,6 +18,10 @@
 //! is structurally the same and exercises the same code paths in the
 //! coordinator.
 
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
 use super::{hmac, os_random, sha256};
@@ -119,6 +123,65 @@ impl Verifier {
     }
 }
 
+/// Verifier-side cache of already-verified attestation evidence, keyed by
+/// measurement (hardware identity included via the measurement's param
+/// digest + code id — the same pair the verifier checks).
+///
+/// Quote verification is pure over `(measurement, hw_key)`: once a
+/// measurement has verified under this deployment's trust roots, a
+/// re-attaching stream or a hot-swap rebuild presenting the *same*
+/// measurement doesn't need a fresh challenge round. Session secrets are
+/// still drawn fresh per handshake — only the *evidence* is amortized.
+/// Hit/miss counters surface in server status alongside the
+/// `PlacementCache`'s.
+#[derive(Debug, Default)]
+pub struct EvidenceCache {
+    verified: Mutex<HashSet<[u8; 32]>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvidenceCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        EvidenceCache::default()
+    }
+
+    /// Run `verify` only when `measurement` has not verified before.
+    /// A fresh verification failure is returned as-is and NOT cached
+    /// (failures must never be amortized into success).
+    pub fn verify_cached(
+        &self,
+        measurement: &Measurement,
+        verify: impl FnOnce() -> Result<()>,
+    ) -> Result<()> {
+        if self.verified.lock().unwrap().contains(&measurement.0) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        verify()?;
+        self.verified.lock().unwrap().insert(measurement.0);
+        Ok(())
+    }
+
+    /// Verifications skipped because the measurement was already trusted.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Full challenge/verify rounds run (first sight of a measurement, or
+    /// a retry after a failed round).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// `(hits, misses)` in one call — the tuple server status reports.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits(), self.misses())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,5 +253,48 @@ mod tests {
         let a = Measurement::compute("svc", &[7u8; 32]);
         let b = Measurement::compute("svc", &[7u8; 32]);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn evidence_cache_amortizes_repeat_verifications() {
+        let (qe, m) = setup();
+        let cache = EvidenceCache::new();
+        let mut rounds = 0u32;
+        for _ in 0..5 {
+            cache
+                .verify_cached(&m, || {
+                    rounds += 1;
+                    let v = Verifier::new(m.clone(), qe.hw_key());
+                    v.verify(&qe.quote(&m, v.challenge))
+                })
+                .unwrap();
+        }
+        assert_eq!(rounds, 1, "only the first round runs the full protocol");
+        assert_eq!(cache.stats(), (4, 1));
+    }
+
+    #[test]
+    fn evidence_cache_never_caches_failure() {
+        let (qe, m) = setup();
+        let cache = EvidenceCache::new();
+        // a failed round: quote over the wrong measurement
+        let evil = Measurement::compute("trojaned-service", &[3u8; 32]);
+        let r = cache.verify_cached(&evil, || {
+            let v = Verifier::new(evil.clone(), [0u8; 32]);
+            v.verify(&qe.quote(&evil, v.challenge))
+        });
+        assert!(r.is_err());
+        // the failure was not recorded as trust: the next round re-runs
+        let r2 = cache.verify_cached(&evil, || bail!("still failing"));
+        assert!(r2.is_err());
+        assert_eq!(cache.stats(), (0, 2));
+        // an honest measurement is independent of the failed one
+        cache
+            .verify_cached(&m, || {
+                let v = Verifier::new(m.clone(), qe.hw_key());
+                v.verify(&qe.quote(&m, v.challenge))
+            })
+            .unwrap();
+        assert_eq!(cache.stats(), (0, 3));
     }
 }

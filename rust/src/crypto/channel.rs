@@ -7,30 +7,82 @@
 //! protocol": a session is established from a shared secret (delivered via
 //! the attestation step, see `attest.rs`), per-direction AES-128-GCM keys
 //! are derived with label separation, and every record carries an explicit
-//! 64-bit sequence number that is authenticated as AAD — replay, reorder,
-//! and truncation of records are therefore detected.
+//! 64-bit sequence number and a 32-bit [`KeyEpoch`] that are both
+//! authenticated as AAD — replay, reorder, truncation, and cross-epoch
+//! splicing of records are therefore detected.
 //!
 //! Record layout (what travels over the untrusted wire):
-//!   [seq: u64 BE][len: u32 BE][nonce: 12B][tag: 16B][ciphertext: len B]
+//!   [seq: u64 BE][len: u32 BE][epoch: u32 BE][nonce: 12B][tag: 16B][ciphertext: len B]
+//!
+//! **Nonce discipline.** Nonces are random per record, and the sequence
+//! counter [errors out](SealKey::seal_record_into) — it never wraps — at
+//! `u64::MAX`, so a `(key, nonce, seq)` triple can never repeat under one
+//! key. A [re-key](Channel::rekey) installs fresh directional keys (the
+//! epoch feeds the derivation labels) and restarts the sequence at 0:
+//! epochs never share key material, so sequence reuse across epochs is
+//! safe by construction.
+//!
+//! **Zero-loss re-keying.** The receiving side keeps the current *and*
+//! previous epoch's key, each with its own sequence cursor, so frames
+//! sealed just before a re-key still open after it. The coordinator's
+//! drain/hot-swap machinery (DESIGN.md §13, §19) guarantees in-flight
+//! frames finish under the old epoch while new frames seal under the new
+//! one; the previous-key window covers any straggler on the wire.
 
 use anyhow::{bail, Context, Result};
 
 use super::gcm::AesGcm;
+use super::keymgr::KeyEpoch;
 use super::{derive_key, os_random};
 
-/// Fixed per-record overhead in bytes (seq + len + nonce + tag).
-pub const RECORD_OVERHEAD: usize = 8 + 4 + 12 + 16;
+/// Fixed per-record overhead in bytes (seq + len + epoch + nonce + tag).
+pub const RECORD_OVERHEAD: usize = 8 + 4 + 4 + 12 + 16;
+
+/// Derive the directional keys of one epoch. Epoch 0 keeps the original
+/// labels (the pre-lifecycle wire format's keys); later epochs fold the
+/// epoch into the label so no two epochs share key material.
+fn direction_keys(session_secret: &[u8], epoch: KeyEpoch) -> ([u8; 16], [u8; 16]) {
+    if epoch == 0 {
+        (derive_key(session_secret, "serdab/i2r"), derive_key(session_secret, "serdab/r2i"))
+    } else {
+        (
+            derive_key(session_secret, &format!("serdab/i2r/e{epoch}")),
+            derive_key(session_secret, &format!("serdab/r2i/e{epoch}")),
+        )
+    }
+}
+
+/// The 12-byte AAD of one record: sequence number ‖ epoch.
+fn record_aad(seq: u64, epoch: KeyEpoch) -> [u8; 12] {
+    let mut aad = [0u8; 12];
+    aad[..8].copy_from_slice(&seq.to_be_bytes());
+    aad[8..].copy_from_slice(&epoch.to_be_bytes());
+    aad
+}
 
 /// One direction of a secure channel: seals on one side, opens on the other.
 pub struct SealKey {
     gcm: AesGcm,
     seq: u64,
+    epoch: KeyEpoch,
 }
 
-/// The receiving direction: opens records and enforces the sequence.
+/// A retired receiving key kept through the re-key window.
+struct PrevKey {
+    gcm: AesGcm,
+    epoch: KeyEpoch,
+    expect_seq: u64,
+}
+
+/// The receiving direction: opens records and enforces the per-epoch
+/// sequence. Holds the current epoch's key plus (after a re-key) the
+/// previous epoch's, so in-flight frames sealed under the old key still
+/// open.
 pub struct OpenKey {
     gcm: AesGcm,
+    epoch: KeyEpoch,
     expect_seq: u64,
+    previous: Option<PrevKey>,
 }
 
 /// Both endpoints derive the same pair of directional keys from the session
@@ -40,34 +92,83 @@ pub struct Channel {
     pub tx: SealKey,
     /// Opening (receiving) direction.
     pub rx: OpenKey,
+    initiator: bool,
 }
 
 impl Channel {
-    /// Derive both directional keys from an attested session secret.
+    /// Derive both directional keys from an attested session secret
+    /// (epoch 0).
     pub fn new(session_secret: &[u8], initiator: bool) -> Self {
-        let k_i2r = derive_key(session_secret, "serdab/i2r");
-        let k_r2i = derive_key(session_secret, "serdab/r2i");
+        Channel::with_epoch(session_secret, initiator, 0)
+    }
+
+    /// Derive both directional keys at an explicit epoch — what the
+    /// deployment path uses, so records of a rebuilt generation carry the
+    /// generation's key epoch on the wire.
+    pub fn with_epoch(session_secret: &[u8], initiator: bool, epoch: KeyEpoch) -> Self {
+        let (k_i2r, k_r2i) = direction_keys(session_secret, epoch);
         let (ktx, krx) = if initiator { (k_i2r, k_r2i) } else { (k_r2i, k_i2r) };
         Channel {
-            tx: SealKey { gcm: AesGcm::new(&ktx), seq: 0 },
-            rx: OpenKey { gcm: AesGcm::new(&krx), expect_seq: 0 },
+            tx: SealKey { gcm: AesGcm::new(&ktx), seq: 0, epoch },
+            rx: OpenKey {
+                gcm: AesGcm::new(&krx),
+                epoch,
+                expect_seq: 0,
+                previous: None,
+            },
+            initiator,
         }
+    }
+
+    /// Rotate to `epoch` in place: fresh directional keys derived from
+    /// `new_secret`, transmit sequence restarted at 0, and the receiving
+    /// side demoted to "previous" so records sealed under the old epoch
+    /// still open during the changeover. Both endpoints must rotate with
+    /// the same `(new_secret, epoch)`.
+    pub fn rekey(&mut self, new_secret: &[u8], epoch: KeyEpoch) {
+        let (k_i2r, k_r2i) = direction_keys(new_secret, epoch);
+        let (ktx, krx) = if self.initiator { (k_i2r, k_r2i) } else { (k_r2i, k_i2r) };
+        self.tx = SealKey { gcm: AesGcm::new(&ktx), seq: 0, epoch };
+        let old = std::mem::replace(
+            &mut self.rx,
+            OpenKey { gcm: AesGcm::new(&krx), epoch, expect_seq: 0, previous: None },
+        );
+        self.rx.previous =
+            Some(PrevKey { gcm: old.gcm, epoch: old.epoch, expect_seq: old.expect_seq });
+    }
+
+    /// The epoch this channel currently seals under.
+    pub fn epoch(&self) -> KeyEpoch {
+        self.tx.epoch
     }
 }
 
 impl SealKey {
-    /// Encrypt `plain` into a self-contained record.
-    pub fn seal_record(&mut self, plain: &[u8]) -> Vec<u8> {
+    /// Encrypt `plain` into a self-contained record. Errors only when the
+    /// sequence space is exhausted (see
+    /// [`seal_record_into`](SealKey::seal_record_into)).
+    pub fn seal_record(&mut self, plain: &[u8]) -> Result<Vec<u8>> {
         let mut out = Vec::with_capacity(RECORD_OVERHEAD + plain.len());
-        self.seal_record_into(plain, &mut out);
-        out
+        self.seal_record_into(plain, &mut out)?;
+        Ok(out)
     }
 
     /// Encrypt `plain` into `out` (cleared first). Reusing one buffer
     /// across frames makes the steady-state seal path allocation-free
     /// (the record size is fixed per hop, so the capacity stabilizes
     /// after the first frame).
-    pub fn seal_record_into(&mut self, plain: &[u8], out: &mut Vec<u8>) {
+    ///
+    /// Errors — never wraps — when the 64-bit sequence space is
+    /// exhausted: a wrapped counter would let a replayed early record
+    /// match a late expectation. A [re-key](Channel::rekey) installs a
+    /// fresh key and restarts the sequence.
+    pub fn seal_record_into(&mut self, plain: &[u8], out: &mut Vec<u8>) -> Result<()> {
+        if self.seq == u64::MAX {
+            bail!(
+                "channel sequence space exhausted at epoch {}: re-key before sealing more records",
+                self.epoch
+            );
+        }
         let mut nonce = [0u8; 12];
         os_random(&mut nonce);
         let seq = self.seq;
@@ -77,19 +178,37 @@ impl SealKey {
         out.reserve(RECORD_OVERHEAD + plain.len());
         out.extend_from_slice(&seq.to_be_bytes());
         out.extend_from_slice(&(plain.len() as u32).to_be_bytes());
+        out.extend_from_slice(&self.epoch.to_be_bytes());
         out.extend_from_slice(&nonce);
         out.extend_from_slice(&[0u8; 16]); // tag placeholder
         out.extend_from_slice(plain);
 
-        let aad = seq.to_be_bytes();
+        let aad = record_aad(seq, self.epoch);
         let (_, body) = out.split_at_mut(RECORD_OVERHEAD);
         let tag = self.gcm.seal(&nonce, &aad, body);
-        out[24..40].copy_from_slice(&tag);
+        out[28..44].copy_from_slice(&tag);
+        Ok(())
+    }
+
+    /// The epoch this key seals under.
+    pub fn epoch(&self) -> KeyEpoch {
+        self.epoch
+    }
+
+    /// The next record's sequence number.
+    pub fn next_seq(&self) -> u64 {
+        self.seq
+    }
+
+    #[cfg(test)]
+    fn force_seq(&mut self, seq: u64) {
+        self.seq = seq;
     }
 }
 
 impl OpenKey {
-    /// Verify + decrypt one record; enforces strictly sequential delivery.
+    /// Verify + decrypt one record; enforces strictly sequential delivery
+    /// within each epoch.
     pub fn open_record(&mut self, record: &[u8]) -> Result<Vec<u8>> {
         let mut out = Vec::new();
         self.open_record_into(record, &mut out)?;
@@ -99,27 +218,50 @@ impl OpenKey {
     /// Verify + decrypt one record into `out` (cleared first) — the
     /// reusable-buffer twin of [`OpenKey::open_record`]. On error `out`
     /// holds unspecified bytes (never authenticated plaintext) and the
-    /// expected sequence number is unchanged.
+    /// expected sequence numbers are unchanged.
+    ///
+    /// The record's epoch selects the key: the current epoch's, or — in
+    /// the window after a [re-key](Channel::rekey) — the previous
+    /// epoch's, each with its own sequence cursor. Any other epoch is
+    /// rejected.
     pub fn open_record_into(&mut self, record: &[u8], out: &mut Vec<u8>) -> Result<()> {
         if record.len() < RECORD_OVERHEAD {
             bail!("record truncated: {} bytes", record.len());
         }
         let seq = u64::from_be_bytes(record[0..8].try_into().unwrap());
         let len = u32::from_be_bytes(record[8..12].try_into().unwrap()) as usize;
-        let nonce: [u8; 12] = record[12..24].try_into().unwrap();
-        let tag: [u8; 16] = record[24..40].try_into().unwrap();
+        let epoch = u32::from_be_bytes(record[12..16].try_into().unwrap());
+        let nonce: [u8; 12] = record[16..28].try_into().unwrap();
+        let tag: [u8; 16] = record[28..44].try_into().unwrap();
         if record.len() != RECORD_OVERHEAD + len {
-            bail!("record length mismatch: header says {len}, got {}", record.len() - RECORD_OVERHEAD);
+            bail!(
+                "record length mismatch: header says {len}, got {}",
+                record.len() - RECORD_OVERHEAD
+            );
         }
-        if seq != self.expect_seq {
-            bail!("replay/reorder detected: expected seq {}, got {seq}", self.expect_seq);
+        let (gcm, expect_seq) = if epoch == self.epoch {
+            (&self.gcm, &mut self.expect_seq)
+        } else {
+            match self.previous.as_mut() {
+                Some(p) if p.epoch == epoch => (&p.gcm, &mut p.expect_seq),
+                _ => bail!(
+                    "record sealed under unknown key epoch {epoch} (current {}, previous {})",
+                    self.epoch,
+                    match &self.previous {
+                        Some(p) => p.epoch.to_string(),
+                        None => "none".into(),
+                    }
+                ),
+            }
+        };
+        if seq != *expect_seq {
+            bail!("replay/reorder detected: expected seq {expect_seq} at epoch {epoch}, got {seq}");
         }
         out.clear();
         out.extend_from_slice(&record[RECORD_OVERHEAD..]);
-        self.gcm
-            .open(&nonce, &seq.to_be_bytes(), out, &tag)
+        gcm.open(&nonce, &record_aad(seq, epoch), out, &tag)
             .context("record authentication failed")?;
-        self.expect_seq += 1;
+        *expect_seq += 1;
         Ok(())
     }
 }
@@ -136,9 +278,9 @@ mod tests {
     #[test]
     fn roundtrip_both_directions() {
         let (mut a, mut b) = pair();
-        let r = a.tx.seal_record(b"frame-0 tensor bytes");
+        let r = a.tx.seal_record(b"frame-0 tensor bytes").unwrap();
         assert_eq!(b.rx.open_record(&r).unwrap(), b"frame-0 tensor bytes");
-        let r2 = b.tx.seal_record(b"ack");
+        let r2 = b.tx.seal_record(b"ack").unwrap();
         assert_eq!(a.rx.open_record(&r2).unwrap(), b"ack");
     }
 
@@ -149,14 +291,14 @@ mod tests {
         let mut plain = Vec::new();
         for i in 0..4u32 {
             let msg = vec![i as u8; 64 + i as usize];
-            a.tx.seal_record_into(&msg, &mut rec);
+            a.tx.seal_record_into(&msg, &mut rec).unwrap();
             b.rx.open_record_into(&rec, &mut plain).unwrap();
             assert_eq!(plain, msg);
         }
         // a tampered record leaves the sequence untouched, so the next
         // good record still opens
         let msg = b"after-tamper".to_vec();
-        a.tx.seal_record_into(&msg, &mut rec);
+        a.tx.seal_record_into(&msg, &mut rec).unwrap();
         let mut bad = rec.clone();
         let n = bad.len();
         bad[n - 1] ^= 1;
@@ -170,7 +312,7 @@ mod tests {
         let (mut a, mut b) = pair();
         for i in 0..5u32 {
             let msg = i.to_be_bytes();
-            let r = a.tx.seal_record(&msg);
+            let r = a.tx.seal_record(&msg).unwrap();
             assert_eq!(b.rx.open_record(&r).unwrap(), msg);
         }
     }
@@ -178,7 +320,7 @@ mod tests {
     #[test]
     fn replay_rejected() {
         let (mut a, mut b) = pair();
-        let r = a.tx.seal_record(b"x");
+        let r = a.tx.seal_record(b"x").unwrap();
         b.rx.open_record(&r).unwrap();
         assert!(b.rx.open_record(&r).is_err());
     }
@@ -186,8 +328,8 @@ mod tests {
     #[test]
     fn reorder_rejected() {
         let (mut a, mut b) = pair();
-        let r0 = a.tx.seal_record(b"first");
-        let r1 = a.tx.seal_record(b"second");
+        let r0 = a.tx.seal_record(b"first").unwrap();
+        let r1 = a.tx.seal_record(b"second").unwrap();
         assert!(b.rx.open_record(&r1).is_err(), "skipping seq 0 must fail");
         let _ = r0;
     }
@@ -195,7 +337,7 @@ mod tests {
     #[test]
     fn tamper_rejected() {
         let (mut a, mut b) = pair();
-        let mut r = a.tx.seal_record(b"payload-bytes");
+        let mut r = a.tx.seal_record(b"payload-bytes").unwrap();
         let n = r.len();
         r[n - 1] ^= 0x80;
         assert!(b.rx.open_record(&r).is_err());
@@ -204,7 +346,7 @@ mod tests {
     #[test]
     fn truncation_rejected() {
         let (mut a, mut b) = pair();
-        let r = a.tx.seal_record(b"payload-bytes");
+        let r = a.tx.seal_record(b"payload-bytes").unwrap();
         assert!(b.rx.open_record(&r[..r.len() - 3]).is_err());
         assert!(b.rx.open_record(&r[..10]).is_err());
     }
@@ -213,7 +355,7 @@ mod tests {
     fn wrong_secret_fails() {
         let mut a = Channel::new(b"secret-1", true);
         let mut b = Channel::new(b"secret-2", false);
-        let r = a.tx.seal_record(b"x");
+        let r = a.tx.seal_record(b"x").unwrap();
         assert!(b.rx.open_record(&r).is_err());
     }
 
@@ -221,8 +363,73 @@ mod tests {
     fn ciphertext_hides_plaintext() {
         let (mut a, _) = pair();
         let plain = vec![0x41u8; 256];
-        let r = a.tx.seal_record(&plain);
+        let r = a.tx.seal_record(&plain).unwrap();
         // no 16-byte window of the record equals the plaintext run
         assert!(!r.windows(32).any(|w| w == &plain[..32]));
+    }
+
+    #[test]
+    fn rekey_resets_sequence_and_rotates_keys() {
+        let (mut a, mut b) = pair();
+        let r0 = a.tx.seal_record(b"epoch-0 frame").unwrap();
+        assert_eq!(a.tx.next_seq(), 1);
+        b.rx.open_record(&r0).unwrap();
+
+        a.rekey(b"next-epoch-secret", 1);
+        b.rekey(b"next-epoch-secret", 1);
+        assert_eq!((a.epoch(), a.tx.next_seq()), (1, 0));
+
+        // same seq (0) as r0, but a different key — never the same
+        // (key, nonce, seq) triple across epochs
+        let r1 = a.tx.seal_record(b"epoch-1 frame").unwrap();
+        assert_eq!(u32::from_be_bytes(r1[12..16].try_into().unwrap()), 1);
+        assert_eq!(b.rx.open_record(&r1).unwrap(), b"epoch-1 frame");
+    }
+
+    #[test]
+    fn in_flight_old_epoch_records_open_after_rekey() {
+        let (mut a, mut b) = pair();
+        // two frames sealed under epoch 0, still on the wire…
+        let r0 = a.tx.seal_record(b"in-flight 0").unwrap();
+        let r1 = a.tx.seal_record(b"in-flight 1").unwrap();
+        // …when both ends rotate to epoch 1
+        a.rekey(b"rotated", 1);
+        b.rekey(b"rotated", 1);
+        let r2 = a.tx.seal_record(b"fresh under epoch 1").unwrap();
+
+        // arrival order interleaves epochs; each epoch keeps its own
+        // sequence cursor
+        assert_eq!(b.rx.open_record(&r0).unwrap(), b"in-flight 0");
+        assert_eq!(b.rx.open_record(&r2).unwrap(), b"fresh under epoch 1");
+        assert_eq!(b.rx.open_record(&r1).unwrap(), b"in-flight 1");
+        // replay within the retired epoch is still rejected
+        assert!(b.rx.open_record(&r0).is_err());
+    }
+
+    #[test]
+    fn records_from_two_epochs_back_are_rejected() {
+        let (mut a, mut b) = pair();
+        let stale = a.tx.seal_record(b"epoch 0").unwrap();
+        for e in 1..=2u32 {
+            a.rekey(b"rotate", e);
+            b.rekey(b"rotate", e);
+        }
+        // only current (2) + previous (1) keys are held; epoch 0 is gone
+        let err = b.rx.open_record(&stale).unwrap_err().to_string();
+        assert!(err.contains("unknown key epoch 0"), "{err}");
+    }
+
+    #[test]
+    fn sequence_exhaustion_errors_and_never_wraps() {
+        let (mut a, _) = pair();
+        a.tx.force_seq(u64::MAX);
+        let err = a.tx.seal_record(b"one too many").unwrap_err().to_string();
+        assert!(err.contains("sequence space exhausted"), "{err}");
+        // the counter did not wrap: sealing again still errors
+        assert!(a.tx.seal_record(b"still").is_err());
+        // a re-key restarts the sequence and sealing works again
+        a.rekey(b"fresh", 1);
+        assert_eq!(a.tx.next_seq(), 0);
+        a.tx.seal_record(b"ok again").unwrap();
     }
 }

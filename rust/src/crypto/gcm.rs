@@ -3,9 +3,22 @@
 //! tensors ("AES with 128-bit key", §VI-D), and its per-frame cost is part
 //! of Fig. 13's breakdown, so it is implemented and measured, not assumed.
 //!
-//! GHASH is implemented over GF(2^128) with 8-bit tables (Shoup's method):
-//! fast enough that encryption stays <2.5 ms/frame on the hot path, the
-//! paper's reported bound.
+//! Two interchangeable backends sit behind [`AesGcm::seal`]/[`AesGcm::open`]:
+//!
+//! * **Scalar** (portable): the vendored software AES core with GHASH over
+//!   GF(2^128) in 8-bit tables (Shoup's method) — fast enough that
+//!   encryption stays <2.5 ms/frame, the paper's reported bound.
+//! * **AES-NI + CLMUL** (x86-64): hardware AES rounds with an 8-block
+//!   pipelined CTR sweep and a carry-less-multiply GHASH, selected at
+//!   runtime with the same `#[target_feature]` dispatch pattern as the
+//!   AVX2 GEMM (`runtime/backend/reference/gemm.rs`): detect once, run the
+//!   accelerated body behind an `unsafe` guarded call, keep the portable
+//!   body as the fallback. Output is **bit-identical** to the scalar path
+//!   on every input (`tests/gcm_parity.rs` + the NIST vectors below prove
+//!   it), so which backend sealed a record is unobservable on the wire.
+//!
+//! Set `SERDAB_NO_AESNI=1` to force the scalar path on hardware that has
+//! the instructions (CI runs the parity suite both ways on AES-NI hosts).
 
 use aes::cipher::{BlockEncrypt, KeyInit};
 use aes::Aes128;
@@ -113,21 +126,124 @@ fn xor16(a: &mut [u8; 16], b: &[u8; 16]) {
     }
 }
 
+/// Constant-time 16-byte tag comparison: XOR-accumulate every byte, then
+/// branch once on the accumulated difference — no early exit, so timing
+/// leaks nothing about *which* byte diverged.
+#[inline]
+fn ct_tag_eq(expect: &[u8; 16], got: &[u8; 16]) -> bool {
+    let mut diff = 0u8;
+    for i in 0..TAG_LEN {
+        diff |= expect[i] ^ got[i];
+    }
+    diff == 0
+}
+
+/// True when the AES-NI + CLMUL sealed-record path is usable on this
+/// machine *and* has not been disabled with `SERDAB_NO_AESNI=1`.
+///
+/// Contexts built by [`AesGcm::new`] while this returns `true` dispatch to
+/// the hardware path; the env override is read at context construction
+/// (not per call), matching how `SERDAB_THREADS` pins the GEMM pool.
+pub fn aesni_available() -> bool {
+    if std::env::var_os("SERDAB_NO_AESNI").is_some_and(|v| !v.is_empty() && v != "0") {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("aes")
+            && std::is_x86_feature_detected!("pclmulqdq")
+            && std::is_x86_feature_detected!("ssse3")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Measured sealed-hop rate (bytes/sec one way) for this machine's
+/// dispatched GCM path, cached after the first call.
+///
+/// The calibration seals **and** opens a 256 KiB record a few times and
+/// reports `2·bytes/elapsed` — the same convention as
+/// `Topology::crypto_secs`, which charges `2·bytes/rate` per boundary
+/// (seal on the sender, open on the receiver). Feed it to
+/// `Topology::calibrate_crypto_rate` so placement charges what the
+/// hardware actually does instead of the nominal `crypto_bytes_per_sec`.
+pub fn measured_rate() -> f64 {
+    use std::sync::OnceLock;
+    static RATE: OnceLock<f64> = OnceLock::new();
+    *RATE.get_or_init(|| {
+        let g = AesGcm::new(b"serdab-calibrate");
+        let nonce = [3u8; 12];
+        let mut buf = vec![0xa5u8; 256 << 10];
+        // one warm-up round trip, then time a few
+        let tag = g.seal(&nonce, &[], &mut buf);
+        g.open(&nonce, &[], &mut buf, &tag).expect("calibration round trip");
+        const ITERS: usize = 4;
+        let start = std::time::Instant::now();
+        for _ in 0..ITERS {
+            let tag = g.seal(&nonce, &[], &mut buf);
+            g.open(&nonce, &[], &mut buf, &tag).expect("calibration round trip");
+        }
+        let secs = start.elapsed().as_secs_f64().max(1e-9);
+        2.0 * (ITERS * buf.len()) as f64 / secs
+    })
+}
+
 /// AES-128-GCM AEAD context (one key, many nonces).
+///
+/// Construction decides the backend once: [`AesGcm::new`] takes the
+/// AES-NI + CLMUL path when [`aesni_available`] says so,
+/// [`AesGcm::new_scalar`] pins the portable path (parity tests and the
+/// microbench compare the two in the same run). Both produce identical
+/// ciphertext and tags for every input.
 pub struct AesGcm {
     cipher: Aes128,
     ghash: Ghash,
+    #[cfg(target_arch = "x86_64")]
+    ni: Option<ni::NiGcm>,
 }
 
 impl AesGcm {
-    /// Initialize a context from a 128-bit key (derives the GHASH subkey).
+    /// Initialize a context from a 128-bit key (derives the GHASH subkey),
+    /// selecting the accelerated backend when the machine supports it.
     pub fn new(key: &[u8; 16]) -> Self {
+        #[allow(unused_mut)] // mutated only on x86_64
+        let mut g = Self::new_scalar(key);
+        #[cfg(target_arch = "x86_64")]
+        if aesni_available() {
+            // SAFETY: guarded by the runtime aes+pclmulqdq+ssse3 check.
+            g.ni = Some(unsafe { ni::NiGcm::new(key) });
+        }
+        g
+    }
+
+    /// Initialize a context pinned to the portable scalar backend,
+    /// regardless of what the machine supports.
+    pub fn new_scalar(key: &[u8; 16]) -> Self {
         let cipher = Aes128::new(key.into());
         let mut h = [0u8; 16];
         let mut blk = aes::Block::from(h);
         cipher.encrypt_block(&mut blk);
         h.copy_from_slice(&blk);
-        AesGcm { ghash: Ghash::new(h), cipher }
+        AesGcm {
+            ghash: Ghash::new(h),
+            cipher,
+            #[cfg(target_arch = "x86_64")]
+            ni: None,
+        }
+    }
+
+    /// True when this context dispatches to the AES-NI + CLMUL path.
+    pub fn accelerated(&self) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            self.ni.is_some()
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
     }
 
     fn crypt_ctr(&self, j0: &[u8; 16], data: &mut [u8]) {
@@ -168,8 +284,21 @@ impl AesGcm {
         j0
     }
 
-    /// Encrypt in place; returns the 16-byte tag.
+    /// Encrypt in place; returns the 16-byte tag. Dispatches to the
+    /// accelerated backend when the context was built with one.
     pub fn seal(&self, nonce: &[u8; 12], aad: &[u8], data: &mut [u8]) -> [u8; 16] {
+        #[cfg(target_arch = "x86_64")]
+        if let Some(ni) = &self.ni {
+            // SAFETY: `ni` is only Some when runtime detection passed.
+            return unsafe { ni.seal(nonce, aad, data) };
+        }
+        self.seal_scalar(nonce, aad, data)
+    }
+
+    /// The portable scalar seal body (always available; what [`Self::seal`]
+    /// falls back to — kept public so parity tests and the microbench can
+    /// pin it explicitly).
+    pub fn seal_scalar(&self, nonce: &[u8; 12], aad: &[u8], data: &mut [u8]) -> [u8; 16] {
         let j0 = self.j0(nonce);
         self.crypt_ctr(&j0, data);
         let mut tag = self.ghash.hash(aad, data);
@@ -184,8 +313,25 @@ impl AesGcm {
         tag
     }
 
-    /// Verify tag and decrypt in place. Constant-time tag comparison.
+    /// Verify tag and decrypt in place. Constant-time tag comparison;
+    /// dispatches like [`Self::seal`].
     pub fn open(&self, nonce: &[u8; 12], aad: &[u8], data: &mut [u8], tag: &[u8; 16]) -> Result<()> {
+        #[cfg(target_arch = "x86_64")]
+        if let Some(ni) = &self.ni {
+            // SAFETY: `ni` is only Some when runtime detection passed.
+            return unsafe { ni.open(nonce, aad, data, tag) };
+        }
+        self.open_scalar(nonce, aad, data, tag)
+    }
+
+    /// The portable scalar open body (see [`Self::seal_scalar`]).
+    pub fn open_scalar(
+        &self,
+        nonce: &[u8; 12],
+        aad: &[u8],
+        data: &mut [u8],
+        tag: &[u8; 16],
+    ) -> Result<()> {
         let j0 = self.j0(nonce);
         let mut expect = self.ghash.hash(aad, data);
         let ek_j0 = {
@@ -196,15 +342,257 @@ impl AesGcm {
             o
         };
         xor16(&mut expect, &ek_j0);
-        let mut diff = 0u8;
-        for i in 0..TAG_LEN {
-            diff |= expect[i] ^ tag[i];
-        }
-        if diff != 0 {
+        if !ct_tag_eq(&expect, tag) {
             bail!("gcm: authentication tag mismatch");
         }
         self.crypt_ctr(&j0, data);
         Ok(())
+    }
+}
+
+/// AES-NI + CLMUL backend. Everything here is `unsafe fn` gated on the
+/// `aes`/`pclmulqdq`/`ssse3` target features, entered only through the
+/// runtime-detected dispatch in [`AesGcm`] — the same contract as the
+/// `gemm_bias_avx2` wrapper.
+#[cfg(target_arch = "x86_64")]
+mod ni {
+    use super::{ct_tag_eq, xor16, TAG_LEN};
+    use anyhow::{bail, Result};
+    use core::arch::x86_64::*;
+
+    /// Expanded AES-128 round keys plus the byte-swapped GHASH subkey.
+    pub(super) struct NiGcm {
+        rk: [__m128i; 11],
+        /// H = E_K(0), byte-reflected into integer order for `gfmul`.
+        h: __m128i,
+    }
+
+    /// `_mm_shuffle_epi8` control reversing the 16 bytes of a lane, so a
+    /// loaded block reads as the big-endian integer GHASH works over.
+    ///
+    /// # Safety
+    /// Only reachable from the feature-gated bodies below.
+    #[inline]
+    unsafe fn bswap_mask() -> __m128i {
+        _mm_set_epi8(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15)
+    }
+
+    /// One step of the FIPS-197 key schedule via `aeskeygenassist`.
+    macro_rules! expand_round {
+        ($rk:ident, $i:expr, $rcon:literal) => {{
+            let t = _mm_shuffle_epi32::<0xff>(_mm_aeskeygenassist_si128::<{ $rcon }>($rk[$i - 1]));
+            let mut k = $rk[$i - 1];
+            k = _mm_xor_si128(k, _mm_slli_si128::<4>(k));
+            k = _mm_xor_si128(k, _mm_slli_si128::<4>(k));
+            k = _mm_xor_si128(k, _mm_slli_si128::<4>(k));
+            $rk[$i] = _mm_xor_si128(k, t);
+        }};
+    }
+
+    /// Carry-less GF(2^128) multiply of byte-reflected operands with the
+    /// GCM reduction — the classic four-CLMUL schoolbook + shift-left-1 +
+    /// poly reduction sequence from Intel's GCM white paper.
+    ///
+    /// # Safety
+    /// Caller must have verified `pclmulqdq` at runtime.
+    #[target_feature(enable = "pclmulqdq")]
+    #[inline]
+    unsafe fn gfmul(a: __m128i, b: __m128i) -> __m128i {
+        let mut tmp3 = _mm_clmulepi64_si128::<0x00>(a, b);
+        let mut tmp4 = _mm_clmulepi64_si128::<0x10>(a, b);
+        let tmp5 = _mm_clmulepi64_si128::<0x01>(a, b);
+        let mut tmp6 = _mm_clmulepi64_si128::<0x11>(a, b);
+        tmp4 = _mm_xor_si128(tmp4, tmp5);
+        let tmp5 = _mm_slli_si128::<8>(tmp4);
+        tmp4 = _mm_srli_si128::<8>(tmp4);
+        tmp3 = _mm_xor_si128(tmp3, tmp5);
+        tmp6 = _mm_xor_si128(tmp6, tmp4);
+        // shift the 255-bit product left one bit
+        let tmp7 = _mm_srli_epi32::<31>(tmp3);
+        let mut tmp8 = _mm_srli_epi32::<31>(tmp6);
+        tmp3 = _mm_slli_epi32::<1>(tmp3);
+        tmp6 = _mm_slli_epi32::<1>(tmp6);
+        let tmp9 = _mm_srli_si128::<12>(tmp7);
+        tmp8 = _mm_slli_si128::<4>(tmp8);
+        let tmp7 = _mm_slli_si128::<4>(tmp7);
+        tmp3 = _mm_or_si128(tmp3, tmp7);
+        tmp6 = _mm_or_si128(tmp6, tmp8);
+        tmp6 = _mm_or_si128(tmp6, tmp9);
+        // reduce modulo x^128 + x^7 + x^2 + x + 1
+        let mut tmp7 = _mm_slli_epi32::<31>(tmp3);
+        let tmp8 = _mm_slli_epi32::<30>(tmp3);
+        let tmp9 = _mm_slli_epi32::<25>(tmp3);
+        tmp7 = _mm_xor_si128(tmp7, tmp8);
+        tmp7 = _mm_xor_si128(tmp7, tmp9);
+        let tmp8 = _mm_srli_si128::<4>(tmp7);
+        let tmp7 = _mm_slli_si128::<12>(tmp7);
+        tmp3 = _mm_xor_si128(tmp3, tmp7);
+        let mut tmp2 = _mm_srli_epi32::<1>(tmp3);
+        let tmp4 = _mm_srli_epi32::<2>(tmp3);
+        let tmp5 = _mm_srli_epi32::<7>(tmp3);
+        tmp2 = _mm_xor_si128(tmp2, tmp4);
+        tmp2 = _mm_xor_si128(tmp2, tmp5);
+        tmp2 = _mm_xor_si128(tmp2, tmp8);
+        tmp3 = _mm_xor_si128(tmp3, tmp2);
+        _mm_xor_si128(tmp6, tmp3)
+    }
+
+    impl NiGcm {
+        /// Expand the round keys in hardware and derive H.
+        ///
+        /// # Safety
+        /// Caller must have verified `aes`+`pclmulqdq`+`ssse3` at runtime.
+        #[target_feature(enable = "aes,ssse3")]
+        pub(super) unsafe fn new(key: &[u8; 16]) -> Self {
+            let mut rk = [_mm_setzero_si128(); 11];
+            rk[0] = _mm_loadu_si128(key.as_ptr().cast());
+            expand_round!(rk, 1, 0x01);
+            expand_round!(rk, 2, 0x02);
+            expand_round!(rk, 3, 0x04);
+            expand_round!(rk, 4, 0x08);
+            expand_round!(rk, 5, 0x10);
+            expand_round!(rk, 6, 0x20);
+            expand_round!(rk, 7, 0x40);
+            expand_round!(rk, 8, 0x80);
+            expand_round!(rk, 9, 0x1b);
+            expand_round!(rk, 10, 0x36);
+            // H = E_K(0^128), byte-reflected once here so the GHASH loop
+            // never re-swaps it.
+            let mut h = _mm_setzero_si128();
+            h = _mm_xor_si128(h, rk[0]);
+            for r in rk.iter().take(10).skip(1) {
+                h = _mm_aesenc_si128(h, *r);
+            }
+            h = _mm_aesenclast_si128(h, rk[10]);
+            NiGcm { rk, h: _mm_shuffle_epi8(h, bswap_mask()) }
+        }
+
+        /// Encrypt one 16-byte block.
+        #[target_feature(enable = "aes")]
+        #[inline]
+        unsafe fn encrypt_block(&self, b: [u8; 16]) -> [u8; 16] {
+            let mut x = _mm_loadu_si128(b.as_ptr().cast());
+            x = _mm_xor_si128(x, self.rk[0]);
+            for r in self.rk.iter().take(10).skip(1) {
+                x = _mm_aesenc_si128(x, *r);
+            }
+            x = _mm_aesenclast_si128(x, self.rk[10]);
+            let mut out = [0u8; 16];
+            _mm_storeu_si128(out.as_mut_ptr().cast(), x);
+            out
+        }
+
+        /// CTR keystream XORed into `data`, 8 blocks in flight so the AES
+        /// units pipeline (the latency of `aesenc` is what an unbatched
+        /// loop would serialize on).
+        #[target_feature(enable = "aes")]
+        unsafe fn ctr(&self, j0: &[u8; 16], data: &mut [u8]) {
+            const WIDE: usize = 8;
+            let base = u32::from_be_bytes([j0[12], j0[13], j0[14], j0[15]]);
+            let mut ctr = 1u32;
+            let mut off = 0usize;
+            let mut blk = [_mm_setzero_si128(); WIDE];
+            while data.len() - off >= 16 * WIDE {
+                for (i, b) in blk.iter_mut().enumerate() {
+                    let mut c = *j0;
+                    c[12..].copy_from_slice(&base.wrapping_add(ctr + i as u32).to_be_bytes());
+                    *b = _mm_xor_si128(_mm_loadu_si128(c.as_ptr().cast()), self.rk[0]);
+                }
+                for r in self.rk.iter().take(10).skip(1) {
+                    for b in blk.iter_mut() {
+                        *b = _mm_aesenc_si128(*b, *r);
+                    }
+                }
+                for b in blk.iter_mut() {
+                    *b = _mm_aesenclast_si128(*b, self.rk[10]);
+                }
+                for (i, b) in blk.iter().enumerate() {
+                    let p = data.as_mut_ptr().add(off + 16 * i).cast::<__m128i>();
+                    _mm_storeu_si128(p, _mm_xor_si128(_mm_loadu_si128(p), *b));
+                }
+                off += 16 * WIDE;
+                ctr += WIDE as u32;
+            }
+            while off < data.len() {
+                let mut c = *j0;
+                c[12..].copy_from_slice(&base.wrapping_add(ctr).to_be_bytes());
+                let ks = self.encrypt_block(c);
+                let end = (off + 16).min(data.len());
+                for (b, k) in data[off..end].iter_mut().zip(ks.iter()) {
+                    *b ^= k;
+                }
+                off = end;
+                ctr += 1;
+            }
+        }
+
+        /// GHASH(aad, ct) with per-block CLMUL multiplies.
+        #[target_feature(enable = "pclmulqdq,ssse3")]
+        unsafe fn ghash(&self, aad: &[u8], ct: &[u8]) -> [u8; 16] {
+            let mask = bswap_mask();
+            let mut y = _mm_setzero_si128();
+            for part in [aad, ct] {
+                for chunk in part.chunks(16) {
+                    let mut b = [0u8; 16];
+                    b[..chunk.len()].copy_from_slice(chunk);
+                    let x = _mm_shuffle_epi8(_mm_loadu_si128(b.as_ptr().cast()), mask);
+                    y = gfmul(_mm_xor_si128(y, x), self.h);
+                }
+            }
+            let mut lens = [0u8; 16];
+            lens[..8].copy_from_slice(&((aad.len() as u64) * 8).to_be_bytes());
+            lens[8..].copy_from_slice(&((ct.len() as u64) * 8).to_be_bytes());
+            let x = _mm_shuffle_epi8(_mm_loadu_si128(lens.as_ptr().cast()), mask);
+            y = gfmul(_mm_xor_si128(y, x), self.h);
+            let mut out = [0u8; 16];
+            _mm_storeu_si128(out.as_mut_ptr().cast(), _mm_shuffle_epi8(y, mask));
+            out
+        }
+
+        /// Hardware seal body — same abstract computation as
+        /// `AesGcm::seal_scalar`, bit-identical output.
+        ///
+        /// # Safety
+        /// Caller must have verified `aes`+`pclmulqdq`+`ssse3` at runtime.
+        #[target_feature(enable = "aes,pclmulqdq,ssse3")]
+        pub(super) unsafe fn seal(
+            &self,
+            nonce: &[u8; 12],
+            aad: &[u8],
+            data: &mut [u8],
+        ) -> [u8; 16] {
+            let mut j0 = [0u8; 16];
+            j0[..12].copy_from_slice(nonce);
+            j0[15] = 1;
+            self.ctr(&j0, data);
+            let mut tag = self.ghash(aad, data);
+            xor16(&mut tag, &self.encrypt_block(j0));
+            tag
+        }
+
+        /// Hardware open body: constant-time tag check, then decrypt.
+        ///
+        /// # Safety
+        /// Caller must have verified `aes`+`pclmulqdq`+`ssse3` at runtime.
+        #[target_feature(enable = "aes,pclmulqdq,ssse3")]
+        pub(super) unsafe fn open(
+            &self,
+            nonce: &[u8; 12],
+            aad: &[u8],
+            data: &mut [u8],
+            tag: &[u8; TAG_LEN],
+        ) -> Result<()> {
+            let mut j0 = [0u8; 16];
+            j0[..12].copy_from_slice(nonce);
+            j0[15] = 1;
+            let mut expect = self.ghash(aad, data);
+            xor16(&mut expect, &self.encrypt_block(j0));
+            if !ct_tag_eq(&expect, tag) {
+                bail!("gcm: authentication tag mismatch");
+            }
+            self.ctr(&j0, data);
+            Ok(())
+        }
     }
 }
 
@@ -223,23 +611,37 @@ mod tests {
         b.iter().map(|x| format!("{x:02x}")).collect()
     }
 
+    /// NIST vector harness: seal under both backends — the dispatched
+    /// context (hardware on AES-NI machines, scalar elsewhere) and the
+    /// pinned-scalar context — and check ciphertext + tag on each.
+    fn check_vector(key: &[u8; 16], nonce: &[u8; 12], aad: &[u8], pt: &[u8], ct: &str, tag: &str) {
+        for g in [AesGcm::new(key), AesGcm::new_scalar(key)] {
+            let mut data = pt.to_vec();
+            let t = g.seal(nonce, aad, &mut data);
+            assert_eq!(hex(&data), ct, "ciphertext (accelerated={})", g.accelerated());
+            assert_eq!(hex(&t), tag, "tag (accelerated={})", g.accelerated());
+            g.open(nonce, aad, &mut data, &t).unwrap();
+            assert_eq!(data, pt, "round trip (accelerated={})", g.accelerated());
+        }
+    }
+
     #[test]
     fn nist_vector_empty() {
-        // NIST GCM test: key=0^128, nonce=0^96, empty pt/aad
-        let g = AesGcm::new(&[0u8; 16]);
-        let mut data = [];
-        let tag = g.seal(&[0u8; 12], &[], &mut data);
-        assert_eq!(hex(&tag), "58e2fccefa7e3061367f1d57a4e7455a");
+        // NIST GCM test case 1: key=0^128, nonce=0^96, empty pt/aad
+        check_vector(&[0u8; 16], &[0u8; 12], &[], &[], "", "58e2fccefa7e3061367f1d57a4e7455a");
     }
 
     #[test]
     fn nist_vector_one_block() {
-        // key=0, nonce=0, pt=0^128
-        let g = AesGcm::new(&[0u8; 16]);
-        let mut data = [0u8; 16];
-        let tag = g.seal(&[0u8; 12], &[], &mut data);
-        assert_eq!(hex(&data), "0388dace60b6a392f328c2b971b2fe78");
-        assert_eq!(hex(&tag), "ab6e47d42cec13bdf53a67b21257bddf");
+        // NIST GCM test case 2: key=0, nonce=0, pt=0^128
+        check_vector(
+            &[0u8; 16],
+            &[0u8; 12],
+            &[],
+            &[0u8; 16],
+            "0388dace60b6a392f328c2b971b2fe78",
+            "ab6e47d42cec13bdf53a67b21257bddf",
+        );
     }
 
     #[test]
@@ -247,57 +649,91 @@ mod tests {
         // NIST test case 3: 4-block plaintext
         let key: [u8; 16] = unhex("feffe9928665731c6d6a8f9467308308").try_into().unwrap();
         let nonce: [u8; 12] = unhex("cafebabefacedbaddecaf888").try_into().unwrap();
-        let mut pt = unhex(
+        let pt = unhex(
             "d9313225f88406e5a55909c5aff5269a86a7a9531534f7da2e4c303d8a318a72\
              1c3c0c95956809532fcf0e2449a6b525b16aedf5aa0de657ba637b391aafd255",
         );
-        let g = AesGcm::new(&key);
-        let tag = g.seal(&nonce, &[], &mut pt);
-        assert_eq!(
-            hex(&pt),
+        check_vector(
+            &key,
+            &nonce,
+            &[],
+            &pt,
             "42831ec2217774244b7221b784d0d49ce3aa212f2c02a4e035c17e2329aca12e\
-             21d514b25466931c7d8f6a5aac84aa051ba30b396a0aac973d58e091473f5985"
+             21d514b25466931c7d8f6a5aac84aa051ba30b396a0aac973d58e091473f5985",
+            "4d5c2af327cd64a62cf35abd2ba6fab4",
         );
-        assert_eq!(hex(&tag), "4d5c2af327cd64a62cf35abd2ba6fab4");
     }
 
     #[test]
     fn nist_vector_tc4_with_aad() {
+        // NIST test case 4: 60-byte (partial-block) plaintext + AAD
         let key: [u8; 16] = unhex("feffe9928665731c6d6a8f9467308308").try_into().unwrap();
         let nonce: [u8; 12] = unhex("cafebabefacedbaddecaf888").try_into().unwrap();
         let aad = unhex("feedfacedeadbeeffeedfacedeadbeefabaddad2");
-        let mut pt = unhex(
+        let pt = unhex(
             "d9313225f88406e5a55909c5aff5269a86a7a9531534f7da2e4c303d8a318a72\
              1c3c0c95956809532fcf0e2449a6b525b16aedf5aa0de657ba637b39",
         );
-        let g = AesGcm::new(&key);
-        let tag = g.seal(&nonce, &aad, &mut pt);
-        assert_eq!(hex(&tag), "5bc94fbc3221a5db94fae95ae7121a47");
+        check_vector(
+            &key,
+            &nonce,
+            &aad,
+            &pt,
+            "42831ec2217774244b7221b784d0d49ce3aa212f2c02a4e035c17e2329aca12e\
+             21d514b25466931c7d8f6a5aac84aa051ba30b396a0aac973d58e091",
+            "5bc94fbc3221a5db94fae95ae7121a47",
+        );
     }
 
     #[test]
     fn roundtrip_and_tamper_detection() {
-        let g = AesGcm::new(b"0123456789abcdef");
-        let nonce = [7u8; 12];
-        let original = vec![42u8; 1000];
-        let mut data = original.clone();
-        let tag = g.seal(&nonce, b"hdr", &mut data);
-        assert_ne!(data, original);
+        for g in [AesGcm::new(b"0123456789abcdef"), AesGcm::new_scalar(b"0123456789abcdef")] {
+            let nonce = [7u8; 12];
+            let original = vec![42u8; 1000];
+            let mut data = original.clone();
+            let tag = g.seal(&nonce, b"hdr", &mut data);
+            assert_ne!(data, original);
 
-        let mut ok = data.clone();
-        g.open(&nonce, b"hdr", &mut ok, &tag).unwrap();
-        assert_eq!(ok, original);
+            let mut ok = data.clone();
+            g.open(&nonce, b"hdr", &mut ok, &tag).unwrap();
+            assert_eq!(ok, original);
 
-        // flipped ciphertext bit
-        let mut bad = data.clone();
-        bad[5] ^= 1;
-        assert!(g.open(&nonce, b"hdr", &mut bad, &tag).is_err());
-        // wrong aad
-        let mut bad2 = data.clone();
-        assert!(g.open(&nonce, b"x", &mut bad2, &tag).is_err());
-        // wrong nonce
-        let mut bad3 = data;
-        assert!(g.open(&[8u8; 12], b"hdr", &mut bad3, &tag).is_err());
+            // flipped ciphertext bit
+            let mut bad = data.clone();
+            bad[5] ^= 1;
+            assert!(g.open(&nonce, b"hdr", &mut bad, &tag).is_err());
+            // wrong aad
+            let mut bad2 = data.clone();
+            assert!(g.open(&nonce, b"x", &mut bad2, &tag).is_err());
+            // wrong nonce
+            let mut bad3 = data;
+            assert!(g.open(&[8u8; 12], b"hdr", &mut bad3, &tag).is_err());
+        }
+    }
+
+    #[test]
+    fn every_single_bit_tag_flip_rejected() {
+        // The constant-time compare must reject a forgery differing in ANY
+        // single bit — all 128 positions, on both backends.
+        for g in [AesGcm::new(b"0123456789abcdef"), AesGcm::new_scalar(b"0123456789abcdef")] {
+            let nonce = [9u8; 12];
+            let mut data = vec![0x5au8; 96];
+            let tag = g.seal(&nonce, b"aad", &mut data);
+            for byte in 0..16 {
+                for bit in 0..8 {
+                    let mut bad = tag;
+                    bad[byte] ^= 1 << bit;
+                    let mut ct = data.clone();
+                    assert!(
+                        g.open(&nonce, b"aad", &mut ct, &bad).is_err(),
+                        "tag flip at byte {byte} bit {bit} accepted (accelerated={})",
+                        g.accelerated()
+                    );
+                }
+            }
+            // and the untouched tag still opens
+            g.open(&nonce, b"aad", &mut data, &tag).unwrap();
+        }
     }
 
     #[test]
@@ -308,5 +744,12 @@ mod tests {
         g.seal(&[1u8; 12], &[], &mut a);
         g.seal(&[2u8; 12], &[], &mut b);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn measured_rate_is_sane() {
+        let r = measured_rate();
+        assert!(r.is_finite() && r > 0.0, "measured crypto rate {r} not positive/finite");
+        assert_eq!(r, measured_rate(), "calibration must be cached");
     }
 }

@@ -1,0 +1,205 @@
+//! Per-stream session-key lifecycle (the "key manager" of the crypto
+//! plane).
+//!
+//! The deployment's key story has three layers (DESIGN.md §19):
+//!
+//! 1. A per-deployment **base secret** ([`KeyManager`]) from which every
+//!    per-hop channel secret is derived by label separation — hop index
+//!    and [`KeyEpoch`] both feed the label, so no two hops and no two
+//!    epochs ever share key material.
+//! 2. Each hop secret is **wrapped per recipient enclave**
+//!    ([`wrap_key`]): sealed under a key-encryption key derived from the
+//!    secret that enclave's *attestation* released, so only the attested
+//!    enclave can recover it. One wrap per hop in the chain.
+//! 3. Every sealed record carries its epoch, and receivers keep the
+//!    current + previous epoch keys, so a re-key never races in-flight
+//!    frames (see [`channel`](super::channel)).
+//!
+//! Wrap nonces are derived from `(hop, epoch)` — both are also bound as
+//! AAD — which is safe because each KEK wraps at most one key per
+//! `(hop, epoch)` pair.
+
+use anyhow::{bail, Result};
+
+use super::gcm::AesGcm;
+use super::{derive_key, hmac, os_random};
+
+/// Monotonic epoch of the deployment's channel keys. Every sealed record
+/// carries the epoch it was sealed under; a re-key bumps it by one.
+pub type KeyEpoch = u32;
+
+/// A per-hop channel secret sealed under the recipient enclave's
+/// attestation-released secret. Travels over the untrusted control plane;
+/// only the attested enclave can unwrap it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WrappedKey {
+    /// Hop index in the chain this key protects (0 = camera → stage 0).
+    pub hop: usize,
+    /// Epoch the wrapped secret belongs to.
+    pub epoch: KeyEpoch,
+    /// The 16-byte channel secret, encrypted under the recipient's KEK.
+    ct: [u8; 16],
+    /// GCM tag binding the ciphertext to `(hop, epoch)`.
+    tag: [u8; 16],
+}
+
+/// KEK derivation label — versioned so a future wrap format can coexist.
+const KEK_LABEL: &str = "serdab/kek/v1";
+
+/// AAD + nonce material binding a wrap to its hop and epoch.
+fn wrap_binding(hop: usize, epoch: KeyEpoch) -> ([u8; 12], [u8; 12]) {
+    let mut nonce = [0u8; 12];
+    nonce[..8].copy_from_slice(&(hop as u64).to_be_bytes());
+    nonce[8..].copy_from_slice(&epoch.to_be_bytes());
+    (nonce, nonce)
+}
+
+/// Seal the 16-byte channel secret `key` for the enclave whose
+/// attestation released `attested_secret`.
+pub fn wrap_key(
+    attested_secret: &[u8],
+    key: &[u8; 16],
+    hop: usize,
+    epoch: KeyEpoch,
+) -> WrappedKey {
+    let kek = AesGcm::new(&derive_key(attested_secret, KEK_LABEL));
+    let (nonce, aad) = wrap_binding(hop, epoch);
+    let mut ct = *key;
+    let tag = kek.seal(&nonce, &aad, &mut ct);
+    WrappedKey { hop, epoch, ct, tag }
+}
+
+/// Recover the channel secret from a [`WrappedKey`] — only possible with
+/// the same attestation-released secret it was wrapped for. A mismatched
+/// enclave, a tampered wrap, or a forged `(hop, epoch)` all fail cleanly.
+pub fn unwrap_key(attested_secret: &[u8], wrapped: &WrappedKey) -> Result<[u8; 16]> {
+    let kek = AesGcm::new(&derive_key(attested_secret, KEK_LABEL));
+    let (nonce, aad) = wrap_binding(wrapped.hop, wrapped.epoch);
+    let mut plain = wrapped.ct;
+    if kek.open(&nonce, &aad, &mut plain, &wrapped.tag).is_err() {
+        bail!(
+            "unwrapping hop {} key (epoch {}): wrong enclave identity or tampered key material",
+            wrapped.hop,
+            wrapped.epoch
+        );
+    }
+    Ok(plain)
+}
+
+/// Derives every per-hop per-epoch channel secret of one deployment from
+/// a single base secret. Stateless past the base: the epoch counter lives
+/// with the server (it owns the re-key schedule), so the manager can be
+/// shared by every generation a hot-swap builds.
+pub struct KeyManager {
+    base: [u8; 32],
+}
+
+impl KeyManager {
+    /// A manager with a fresh random base secret.
+    pub fn new() -> Self {
+        let mut base = [0u8; 32];
+        os_random(&mut base);
+        KeyManager { base }
+    }
+
+    /// A manager with a caller-chosen base secret (deterministic tests).
+    pub fn from_base(base: [u8; 32]) -> Self {
+        KeyManager { base }
+    }
+
+    /// The channel secret of `hop` at `epoch`. Hop and epoch both feed
+    /// the derivation, so rotating the epoch rotates every hop key and
+    /// no two hops ever share material.
+    pub fn hop_secret(&self, hop: usize, epoch: KeyEpoch) -> [u8; 16] {
+        let label = format!("serdab/hop/{hop}/epoch/{epoch}");
+        let tag = hmac(&self.base, label.as_bytes());
+        let mut out = [0u8; 16];
+        out.copy_from_slice(&tag[..16]);
+        out
+    }
+
+    /// Derive hop `hop`'s secret at `epoch` and wrap it for the recipient
+    /// enclave whose attestation released `attested_secret`.
+    pub fn wrap_for(
+        &self,
+        attested_secret: &[u8],
+        hop: usize,
+        epoch: KeyEpoch,
+    ) -> WrappedKey {
+        wrap_key(attested_secret, &self.hop_secret(hop, epoch), hop, epoch)
+    }
+}
+
+impl Default for KeyManager {
+    fn default() -> Self {
+        KeyManager::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap_unwrap_roundtrip() {
+        let attested = b"attestation-released-secret-bytes";
+        let key = [0x5au8; 16];
+        let w = wrap_key(attested, &key, 2, 7);
+        assert_eq!(unwrap_key(attested, &w).unwrap(), key);
+        // the wire form hides the key
+        assert_ne!(w.ct, key);
+    }
+
+    #[test]
+    fn unwrap_with_wrong_enclave_fails_cleanly() {
+        let w = wrap_key(b"enclave-A", &[1u8; 16], 0, 0);
+        let err = unwrap_key(b"enclave-B", &w).unwrap_err().to_string();
+        assert!(err.contains("wrong enclave identity"), "{err}");
+    }
+
+    #[test]
+    fn unwrap_rejects_forged_hop_or_epoch() {
+        let attested = b"enclave-A";
+        let w = wrap_key(attested, &[9u8; 16], 1, 3);
+        let mut forged = w.clone();
+        forged.epoch = 4; // replaying an old wrap as a newer epoch
+        assert!(unwrap_key(attested, &forged).is_err());
+        let mut forged = w;
+        forged.hop = 2; // replaying one hop's key on another hop
+        assert!(unwrap_key(attested, &forged).is_err());
+    }
+
+    #[test]
+    fn unwrap_rejects_tampered_ciphertext() {
+        let attested = b"enclave-A";
+        let mut w = wrap_key(attested, &[9u8; 16], 1, 3);
+        w.ct[0] ^= 1;
+        assert!(unwrap_key(attested, &w).is_err());
+    }
+
+    #[test]
+    fn hop_secrets_are_distinct_across_hops_and_epochs() {
+        let km = KeyManager::from_base([7u8; 32]);
+        let mut seen = std::collections::BTreeSet::new();
+        for hop in 0..4 {
+            for epoch in 0..4 {
+                assert!(seen.insert(km.hop_secret(hop, epoch).to_vec()));
+            }
+        }
+        // deterministic for a fixed base
+        let km2 = KeyManager::from_base([7u8; 32]);
+        assert_eq!(km.hop_secret(1, 2), km2.hop_secret(1, 2));
+        // distinct bases diverge
+        let km3 = KeyManager::from_base([8u8; 32]);
+        assert_ne!(km.hop_secret(1, 2), km3.hop_secret(1, 2));
+    }
+
+    #[test]
+    fn wrap_for_wraps_the_derived_secret() {
+        let km = KeyManager::from_base([3u8; 32]);
+        let attested = b"enclave-X";
+        let w = km.wrap_for(attested, 1, 5);
+        assert_eq!((w.hop, w.epoch), (1, 5));
+        assert_eq!(unwrap_key(attested, &w).unwrap(), km.hop_secret(1, 5));
+    }
+}

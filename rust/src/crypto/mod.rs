@@ -2,15 +2,18 @@
 //!
 //! The paper's data path is: camera → TLS → TEE₁ → (AES-encrypted
 //! intermediate tensor over an untrusted WAN) → TEE₂ → result. This module
-//! provides the pieces: AES-128-GCM AEAD ([`gcm`]), a TLS-like secure
-//! channel with an HMAC-based key schedule ([`channel`]), and simulated SGX
-//! remote attestation ([`attest`]). Only the AES block core comes from the
-//! vendored `aes` crate; the modes, KDF, channel and attestation protocol
-//! are built here.
+//! provides the pieces: AES-128-GCM AEAD ([`gcm`], scalar + AES-NI/CLMUL
+//! dispatched), a TLS-like secure channel with an HMAC-based key schedule
+//! and epoch-carrying records ([`channel`]), the per-stream key lifecycle
+//! ([`keymgr`]: hop-key derivation, per-enclave wrapping, re-key epochs),
+//! and simulated SGX remote attestation with evidence caching
+//! ([`attest`]). Only the AES block core comes from the vendored `aes`
+//! crate; the modes, KDF, channel and attestation protocol are built here.
 
 pub mod attest;
 pub mod channel;
 pub mod gcm;
+pub mod keymgr;
 
 use hmac::{Hmac, Mac};
 use sha2::{Digest, Sha256};

@@ -20,7 +20,7 @@ pub const CODE_ID: &str = "serdab-nn-service-v1";
 
 use anyhow::Result;
 
-use crate::crypto::attest::{Measurement, Quote, QuotingEnclave};
+use crate::crypto::attest::{EvidenceCache, Measurement, Quote, QuotingEnclave};
 use crate::crypto::sha256;
 use crate::profiler::devices::EpcModel;
 
@@ -83,9 +83,32 @@ pub fn attest_and_release(
     hw_key: [u8; 32],
     quote_fn: impl FnOnce([u8; 32]) -> Quote,
 ) -> Result<Vec<u8>> {
-    let verifier = crate::crypto::attest::Verifier::new(expected, hw_key);
-    let quote = quote_fn(verifier.challenge);
-    verifier.verify(&quote)?;
+    attest_and_release_cached(expected, hw_key, quote_fn, None)
+}
+
+/// [`attest_and_release`] through an optional [`EvidenceCache`]: a
+/// measurement the cache already trusts skips the challenge/verify round
+/// (hot-swap rebuilds and re-attaching streams re-attest the same
+/// enclaves over and over), while the released session secret is still
+/// drawn fresh per handshake — caching amortizes *evidence*, never keys.
+pub fn attest_and_release_cached(
+    expected: Measurement,
+    hw_key: [u8; 32],
+    quote_fn: impl FnOnce([u8; 32]) -> Quote,
+    cache: Option<&EvidenceCache>,
+) -> Result<Vec<u8>> {
+    let run = |expected: Measurement| -> Result<()> {
+        let verifier = crate::crypto::attest::Verifier::new(expected, hw_key);
+        let quote = quote_fn(verifier.challenge);
+        verifier.verify(&quote)
+    };
+    match cache {
+        Some(c) => {
+            let m = expected.clone();
+            c.verify_cached(&m, move || run(expected))?;
+        }
+        None => run(expected)?,
+    }
     let mut secret = vec![0u8; 32];
     crate::crypto::os_random(&mut secret);
     Ok(secret)
@@ -117,6 +140,37 @@ mod tests {
         let evil = EnclaveSim::new("svc", b"trojan-params", [7u8; 32]);
         let r = attest_and_release(honest.measurement(), [7u8; 32], |ch| evil.quote(ch));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn cached_attestation_skips_repeat_rounds_but_rotates_secrets() {
+        let e = EnclaveSim::new("svc", b"params", [7u8; 32]);
+        let cache = EvidenceCache::new();
+        let s1 =
+            attest_and_release_cached(e.measurement(), [7u8; 32], |ch| e.quote(ch), Some(&cache))
+                .unwrap();
+        let s2 =
+            attest_and_release_cached(e.measurement(), [7u8; 32], |ch| e.quote(ch), Some(&cache))
+                .unwrap();
+        assert_eq!(cache.stats(), (1, 1), "second handshake hits the cache");
+        assert_ne!(s1, s2, "session secrets stay fresh per handshake");
+        // a different enclave identity is a miss, and a bad quote fails
+        // even with a warm cache
+        let evil = EnclaveSim::new("svc", b"trojan-params", [7u8; 32]);
+        let r = attest_and_release_cached(
+            e.measurement(),
+            [7u8; 32],
+            |ch| evil.quote(ch),
+            Some(&cache),
+        );
+        assert!(r.is_ok(), "evidence for e's measurement is cached; quote_fn is not consulted");
+        let r2 = attest_and_release_cached(
+            evil.measurement(),
+            [7u8; 32],
+            |ch| e.quote(ch),
+            Some(&cache),
+        );
+        assert!(r2.is_err(), "uncached measurement still runs the full round");
     }
 
     #[test]

@@ -9,6 +9,7 @@ use anyhow::{Context, Result};
 
 use super::{EnclaveSim, CODE_ID};
 use crate::crypto::channel::Channel;
+use crate::crypto::keymgr::{unwrap_key, WrappedKey};
 use crate::model::Manifest;
 use crate::runtime::{default_backend, ChainExecutor, Scratch};
 
@@ -96,8 +97,11 @@ impl NnService {
     /// device boots it: construct the device-local execution backend
     /// (`$SERDAB_BACKEND`), load the block range, seal the partition
     /// parameters into the enclave identity (their digest is what
-    /// attestation measured), and derive the hop channels from the
-    /// session secrets the coordinator released.
+    /// attestation measured), **unwrap the hop keys** the coordinator
+    /// wrapped for this enclave (only the attestation-released
+    /// `attested_secret` can open them — a mismatched or tampered wrap is
+    /// a clean stream error, not a panic), and key the hop channels at
+    /// the wraps' [`KeyEpoch`](crate::crypto::keymgr::KeyEpoch).
     ///
     /// This is the shared stage body behind
     /// [`Deployment`](crate::coordinator::Deployment) workers and the
@@ -107,8 +111,9 @@ impl NnService {
         model: &str,
         range: std::ops::Range<usize>,
         hw_key: [u8; 32],
-        ingress_secret: &[u8],
-        egress_secret: Option<&[u8]>,
+        attested_secret: &[u8],
+        ingress: &WrappedKey,
+        egress: Option<&WrappedKey>,
     ) -> Result<Self> {
         let backend = default_backend()?;
         let chain = ChainExecutor::load_range(backend.as_ref(), manifest, model, range.clone())?;
@@ -121,12 +126,18 @@ impl NnService {
             );
         }
         let enclave = EnclaveSim::new(CODE_ID, &param_bytes, hw_key);
-        Ok(NnService::new(
-            enclave,
-            chain,
-            Channel::new(ingress_secret, false),
-            egress_secret.map(|s| Channel::new(s, true)),
-        ))
+        let ing = unwrap_key(attested_secret, ingress)
+            .context("stage cannot key its ingress channel")?;
+        let ingress_ch = Channel::with_epoch(&ing, false, ingress.epoch);
+        let egress_ch = match egress {
+            Some(w) => {
+                let k = unwrap_key(attested_secret, w)
+                    .context("stage cannot key its egress channel")?;
+                Some(Channel::with_epoch(&k, true, w.epoch))
+            }
+            None => None,
+        };
+        Ok(NnService::new(enclave, chain, ingress_ch, egress_ch))
     }
 
     /// Process one sealed record: open → run partition → seal for the next
@@ -159,7 +170,7 @@ impl NnService {
         out.to_le_bytes_into(&mut self.out_buf);
         self.scratch.give(out);
         let sealed = match &mut self.egress {
-            Some(ch) => ch.tx.seal_record(&self.out_buf),
+            Some(ch) => ch.tx.seal_record(&self.out_buf).context("sealing egress record")?,
             None => self.out_buf.clone(),
         };
         let t_seal = t2.elapsed().as_secs_f64();
@@ -235,7 +246,9 @@ impl NnService {
                 self.out_buf.extend_from_slice(&v.to_le_bytes());
             }
             outs.push(match &mut self.egress {
-                Some(ch) => ch.tx.seal_record(&self.out_buf),
+                Some(ch) => {
+                    ch.tx.seal_record(&self.out_buf).context("sealing egress record")?
+                }
                 None => self.out_buf.clone(),
             });
         }
@@ -303,7 +316,7 @@ mod tests {
         let mut cam = Channel::new(&cam_secret, true);
         let input =
             Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone()).unwrap();
-        let rec0 = cam.tx.seal_record(&input.to_le_bytes());
+        let rec0 = cam.tx.seal_record(&input.to_le_bytes()).unwrap();
 
         let rec1 = svc1.process_record(&rec0).unwrap();
         let out_bytes = svc2.process_record(&rec1).unwrap();
@@ -318,6 +331,31 @@ mod tests {
         assert!(out.max_abs_diff(&golden) < 1e-2, "diff {}", out.max_abs_diff(&golden));
         assert_eq!(svc1.stats.frames, 1);
         assert!(svc1.stats.compute_secs > 0.0);
+    }
+
+    #[test]
+    fn for_stage_rejects_foreign_wrapped_keys() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = load_manifest(&dir).unwrap();
+        let km = crate::crypto::keymgr::KeyManager::from_base([1u8; 32]);
+        // wrapped for some other enclave's attested secret: booting the
+        // stage fails with a clean error, not a panic or a silent
+        // wrong-key channel
+        let wrapped = km.wrap_for(b"the-real-enclave", 0, 0);
+        let err = NnService::for_stage(
+            &man,
+            "squeezenet",
+            0..1,
+            [3u8; 32],
+            b"a-different-enclave",
+            &wrapped,
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("ingress channel"), "{err:#}");
     }
 
     #[test]
@@ -338,7 +376,7 @@ mod tests {
         let mut cam = Channel::new(b"cam", true);
         let input =
             Tensor::from_bin_file(&man.path(&info.golden_input), man.input_shape.clone()).unwrap();
-        let rec = cam.tx.seal_record(&input.to_le_bytes());
+        let rec = cam.tx.seal_record(&input.to_le_bytes()).unwrap();
         svc.process_record(&rec).unwrap();
         assert!(svc.process_record(&rec).is_err(), "replay must be rejected");
     }

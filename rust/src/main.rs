@@ -131,12 +131,18 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         .opt("topology", "", "topology JSON file (default: the paper testbed)")
         .opt("frames", "10800", "chunk size n")
         .opt("strategy", "proposed", "strategy to solve")
-        .opt("shards", "0", "split the topology into K parallel chains and plan each (0 = off)");
+        .opt("shards", "0", "split the topology into K parallel chains and plan each (0 = off)")
+        .flag("measure-crypto", "calibrate the cost model's crypto rate on this machine");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     let n: u64 = a.get_u64("frames").map_err(|e| anyhow::anyhow!(e))?;
     let strat = strategy_from(a.get("strategy"))?;
     let shards = a.get_usize("shards").map_err(|e| anyhow::anyhow!(e))?;
-    let topo = topology_from(&a)?;
+    let mut topo = topology_from(&a)?;
+    if a.has_flag("measure-crypto") {
+        let rate = serdab::crypto::gcm::measured_rate();
+        topo.calibrate_crypto_rate(rate);
+        println!("crypto rate: {:.2} GB/s seal+open (measured on this machine)", rate / 1e9);
+    }
     println!("topology: {}", topo.summary());
     let opts = fleet::SolverOpts::default();
     let topos = if shards == 0 { vec![topo] } else { shard_topology(&topo, shards)? };
@@ -227,7 +233,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("idle-timeout", "10", "evict stalled sessions after this many seconds (with --listen)")
         .opt("seed", "7", "video seed")
         .opt("shards", "0", "serve K parallel chains over a sharded topology (0 = one chain)")
-        .flag("incremental", "re-solve only the drifted subgraph on hot swaps");
+        .opt("rekey-interval", "", "rotate channel keys every this many seconds (zero-loss)")
+        .flag("incremental", "re-solve only the drifted subgraph on hot swaps")
+        .flag("measure-crypto", "calibrate the cost model's crypto rate on this machine");
     let a = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
     if !a.get("backend").is_empty() {
         // stage threads construct their backend via default_backend(),
@@ -269,7 +277,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
     let batch_wait_us = a.get_u64("batch-wait-us").map_err(|e| anyhow::anyhow!(e))?;
     let shards = a.get_usize("shards").map_err(|e| anyhow::anyhow!(e))?;
-    let topo = topology_from(&a)?;
+    let rekey_interval = opt_f64(&a, "rekey-interval")?.unwrap_or(0.0);
+    anyhow::ensure!(rekey_interval >= 0.0, "--rekey-interval must be non-negative");
+    let mut topo = topology_from(&a)?;
+    if a.has_flag("measure-crypto") {
+        let rate = serdab::crypto::gcm::measured_rate();
+        topo.calibrate_crypto_rate(rate);
+        println!("crypto rate: {:.2} GB/s seal+open (measured on this machine)", rate / 1e9);
+    }
     println!("topology: {}", topo.summary());
 
     // Serving mode: real NN partitions through the attested deployment
@@ -319,8 +334,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         strategy: strat,
         window_secs: window,
         incremental: a.has_flag("incremental"),
+        rekey_interval_secs: rekey_interval,
         ..ServerConfig::default()
     };
+    if rekey_interval > 0.0 {
+        println!("re-keying: every {rekey_interval:.1}s (zero-loss drain/hot-swap)");
+    }
     cfg.engine.batch = batch;
     cfg.engine.batch_wait_us = batch_wait_us;
     if batch > 1 {
@@ -422,6 +441,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         }
     }
 
+    let final_status = server.status();
     let rep = server.shutdown()?;
     println!(
         "served {} frames over {} generation(s), {} hot-swap(s), {} sink error(s), {} dropped",
@@ -431,6 +451,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         rep.sink_errors,
         rep.frames_dropped
     );
+    print!("key epoch: {}", final_status.key_epoch);
+    match final_status.attest_cache {
+        Some((hits, misses)) => println!("  attest cache: {hits} hit(s), {misses} miss(es)"),
+        None => println!("  (synthetic stages: nothing attested)"),
+    }
     for s in &rep.streams {
         println!(
             "  {:<8} fed={} completed={} mean-latency={:.3}s",
@@ -544,6 +569,14 @@ fn serve_sharded<F: FnMut(&Topology) -> Box<dyn StageBuilder>>(
     if let Some((hits, misses)) = disp.cache_stats() {
         println!("placement cache: {hits} hit(s), {misses} miss(es)");
     }
+    for (i, st) in disp.status().iter().enumerate() {
+        if let Some((hits, misses)) = st.attest_cache {
+            println!(
+                "shard {i}: key epoch {}, attest cache {hits} hit(s)/{misses} miss(es)",
+                st.key_epoch
+            );
+        }
+    }
     let swaps = disp.swaps_by_shard();
     let reports = disp.shutdown()?;
     let mut total = 0u64;
@@ -576,10 +609,14 @@ fn print_server_event(ev: &ServerEvent) {
              {observed:.4}s — re-partitioning"
         ),
         ServerEvent::SwapCompleted(ev) => println!(
-            "t={:7.2}s  SWAPPED {} → {} (predicted {:.1} fps, drained {} frames)",
-            ev.at_secs, ev.from, ev.to, ev.predicted_throughput_fps, ev.drained_frames
+            "t={:7.2}s  SWAPPED {} → {} (predicted {:.1} fps, drained {} frames, epoch {})",
+            ev.at_secs, ev.from, ev.to, ev.predicted_throughput_fps, ev.drained_frames,
+            ev.key_epoch
         ),
         ServerEvent::SwapFailed { error } => println!("swap FAILED: {error}"),
+        ServerEvent::Rekey { at_secs, epoch } => {
+            println!("t={at_secs:7.2}s  RE-KEY: rotating channel keys to epoch {epoch}")
+        }
         ServerEvent::SessionClosed { stream, reason, clean, fed, acked } => {
             let verdict = if *clean { "clean" } else { "evicted" };
             println!("~ session {stream}: {verdict} ({reason}), fed {fed}, acked {acked}")

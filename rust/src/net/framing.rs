@@ -1,6 +1,9 @@
 //! Length-prefixed frames: [len: u32 BE][type: u8][payload]. The payload
-//! of DATA frames is a sealed `crypto::channel` record — the framing layer
-//! never sees plaintext tensors.
+//! of DATA frames is a sealed `crypto::channel` record
+//! (`[seq][len][epoch][nonce][tag][ciphertext]` — the record header
+//! carries the key epoch it was sealed under, so receivers route it to
+//! the current or previous key across a re-key). The framing layer never
+//! sees plaintext tensors.
 
 use std::io::{Read, Write};
 

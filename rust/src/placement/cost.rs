@@ -15,8 +15,12 @@
 //! TEE dominates. Per-stage times, crypto rate, and per-link
 //! bandwidth/latency all come from the topology (speed grades and EPC
 //! overrides included), so the same model scores the paper testbed and
-//! any loaded resource graph. The discrete-event simulator (`sim/`)
-//! validates this closed form event-by-event, including bounded queues.
+//! any loaded resource graph. The crypto term of each sealed boundary is
+//! charged at `Topology::crypto_secs`, which `Topology::calibrate_crypto_rate`
+//! can pin to the *measured* AES-GCM throughput of the serving machine
+//! (`crypto::gcm::measured_rate`; `--measure-crypto` on the CLI) instead
+//! of the class default. The discrete-event simulator (`sim/`) validates
+//! this closed form event-by-event, including bounded queues.
 
 use super::Placement;
 use crate::profiler::{DeviceKind, ModelProfile};

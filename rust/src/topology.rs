@@ -371,6 +371,18 @@ impl Topology {
         2.0 * bytes as f64 / self.crypto_bytes_per_sec
     }
 
+    /// Replace the topology's assumed seal/open throughput with a
+    /// measured one (e.g. `crypto::gcm::measured_rate()` on the machine
+    /// the pipeline will run on), so the cost model charges sealed hops
+    /// what this hardware actually pays. Non-finite or non-positive
+    /// rates are ignored — the calibrated default survives a failed
+    /// measurement.
+    pub fn calibrate_crypto_rate(&mut self, bytes_per_sec: f64) {
+        if bytes_per_sec.is_finite() && bytes_per_sec > 0.0 {
+            self.crypto_bytes_per_sec = bytes_per_sec;
+        }
+    }
+
     // ---- per-resource cost -----------------------------------------------
 
     /// Execution seconds of a contiguous block `range` on resource `id`
@@ -1203,6 +1215,18 @@ mod tests {
         // paper §VI-D: AES-128 enc+dec < 2.5 ms/frame for boundary tensors
         let t = Topology::paper_testbed();
         assert!(t.crypto_secs(400_000) < 2.5e-3);
+    }
+
+    #[test]
+    fn calibrate_crypto_rate_rescales_sealed_hops() {
+        let mut t = Topology::paper_testbed();
+        let before = t.crypto_secs(1 << 20);
+        t.calibrate_crypto_rate(2.0 * DEFAULT_CRYPTO_BYTES_PER_SEC);
+        assert!((t.crypto_secs(1 << 20) - before / 2.0).abs() < 1e-12);
+        // bogus measurements are ignored, not installed
+        t.calibrate_crypto_rate(0.0);
+        t.calibrate_crypto_rate(f64::NAN);
+        assert_eq!(t.crypto_bytes_per_sec, 2.0 * DEFAULT_CRYPTO_BYTES_PER_SEC);
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! hot path — conv/dwconv/dense/pool through the scratch arena (batch-1
 //! AND a stacked micro-batch, per DESIGN.md §16's sizing rule), a full
 //! reference-block forward (including a parallel merge), GCM
-//! seal+open, channel record sealing/opening into reused buffers, and
-//! coalesced framing — performs **zero** heap allocations.
+//! seal+open, epoch-carrying channel records sealed/opened into reused
+//! buffers (measured *after* a re-key, in the current+previous-key
+//! regime every long-lived deployment serves in), and coalesced
+//! framing — performs **zero** heap allocations.
 //!
 //! A counting `#[global_allocator]` (test-binary only) measures it
 //! directly. Everything runs inside ONE test function so parallel test
@@ -166,6 +168,11 @@ fn steady_state_frame_path_allocates_nothing() {
 
     let mut chan_a = Channel::new(b"alloc-secret", true);
     let mut chan_b = Channel::new(b"alloc-secret", false);
+    // rotate once before measuring: steady state must hold while the
+    // receiver still holds current + previous epoch keys (the post-re-key
+    // regime every long-lived deployment serves in)
+    chan_a.rekey(b"alloc-secret-2", 1);
+    chan_b.rekey(b"alloc-secret-2", 1);
     let payload = vec![5u8; 2048];
     let mut rec_buf = Vec::new();
     let mut plain_buf = Vec::new();
@@ -197,7 +204,7 @@ fn steady_state_frame_path_allocates_nothing() {
         let tag = gcm.seal(&[1u8; 12], b"aad", &mut gcm_buf);
         gcm.open(&[1u8; 12], b"aad", &mut gcm_buf, &tag).unwrap();
 
-        chan_a.tx.seal_record_into(&payload, &mut rec_buf);
+        chan_a.tx.seal_record_into(&payload, &mut rec_buf).unwrap();
         chan_b.rx.open_record_into(&rec_buf, &mut plain_buf).unwrap();
 
         fw.send(FrameType::Data, &payload).unwrap();

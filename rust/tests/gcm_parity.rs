@@ -1,0 +1,116 @@
+//! Dispatched-vs-scalar AES-GCM parity: the AES-NI + CLMUL sealed-record
+//! path must be **bit-identical** to the portable scalar path on every
+//! input — NIST vectors, randomized records over awkward lengths (empty,
+//! sub-block, partial tail blocks, multi-KiB), and cross-backend
+//! open (a record sealed by either backend opens under the other).
+//!
+//! CI runs this suite across the `SERDAB_THREADS` matrix and once more
+//! with `SERDAB_NO_AESNI=1`; in the forced-scalar run the dispatched
+//! context *is* the scalar context, so the suite degenerates to
+//! scalar-vs-scalar self-consistency (still a valid NIST check).
+
+use serdab::crypto::gcm::{aesni_available, AesGcm};
+use serdab::util::rng::Rng;
+
+fn unhex(s: &str) -> Vec<u8> {
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+        .collect()
+}
+
+/// Seal under both backends, check ciphertext + tag against the expected
+/// hex, and open each result under the *other* backend.
+fn check_vector(key: &[u8; 16], nonce: &[u8; 12], aad: &[u8], pt: &[u8], ct: &str, tag: &str) {
+    let fast = AesGcm::new(key);
+    let slow = AesGcm::new_scalar(key);
+    for (sealer, opener) in [(&fast, &slow), (&slow, &fast)] {
+        let mut data = pt.to_vec();
+        let t = sealer.seal(nonce, aad, &mut data);
+        assert_eq!(data, unhex(ct), "ciphertext mismatch");
+        assert_eq!(t.to_vec(), unhex(tag), "tag mismatch");
+        opener.open(nonce, aad, &mut data, &t).expect("cross-backend open");
+        assert_eq!(data, pt, "round trip lost the plaintext");
+    }
+}
+
+#[test]
+fn nist_vectors_on_both_paths() {
+    // NIST GCM test case 1: key=0^128, nonce=0^96, empty pt/aad
+    check_vector(&[0u8; 16], &[0u8; 12], &[], &[], "", "58e2fccefa7e3061367f1d57a4e7455a");
+    // NIST GCM test case 2: pt = one zero block
+    check_vector(
+        &[0u8; 16],
+        &[0u8; 12],
+        &[],
+        &[0u8; 16],
+        "0388dace60b6a392f328c2b971b2fe78",
+        "ab6e47d42cec13bdf53a67b21257bddf",
+    );
+    // NIST test case 4: 60-byte (partial-block) plaintext + AAD
+    let key: [u8; 16] = unhex("feffe9928665731c6d6a8f9467308308").try_into().unwrap();
+    let nonce: [u8; 12] = unhex("cafebabefacedbaddecaf888").try_into().unwrap();
+    let aad = unhex("feedfacedeadbeeffeedfacedeadbeefabaddad2");
+    let pt = unhex(
+        "d9313225f88406e5a55909c5aff5269a86a7a9531534f7da2e4c303d8a318a72\
+         1c3c0c95956809532fcf0e2449a6b525b16aedf5aa0de657ba637b39",
+    );
+    check_vector(
+        &key,
+        &nonce,
+        &aad,
+        &pt,
+        "42831ec2217774244b7221b784d0d49ce3aa212f2c02a4e035c17e2329aca12e\
+         21d514b25466931c7d8f6a5aac84aa051ba30b396a0aac973d58e091",
+        "5bc94fbc3221a5db94fae95ae7121a47",
+    );
+}
+
+#[test]
+fn randomized_records_bitwise_identical() {
+    let mut rng = Rng::new(0x9c39_71e5);
+    // awkward lengths around block boundaries plus multi-KiB records
+    let mut lens: Vec<usize> = vec![0, 1, 15, 16, 17, 31, 32, 33, 255, 256, 257];
+    for _ in 0..8 {
+        lens.push(rng.range(1, 128 << 10));
+    }
+    for (case, &len) in lens.iter().enumerate() {
+        let mut key = [0u8; 16];
+        key.iter_mut().for_each(|b| *b = rng.range(0, 256) as u8);
+        let mut nonce = [0u8; 12];
+        nonce.iter_mut().for_each(|b| *b = rng.range(0, 256) as u8);
+        let aad: Vec<u8> = (0..rng.range(0, 48)).map(|_| rng.range(0, 256) as u8).collect();
+        let pt: Vec<u8> = (0..len).map(|_| rng.range(0, 256) as u8).collect();
+
+        let fast = AesGcm::new(&key);
+        let slow = AesGcm::new_scalar(&key);
+        let mut a = pt.clone();
+        let mut b = pt.clone();
+        let ta = fast.seal(&nonce, &aad, &mut a);
+        let tb = slow.seal(&nonce, &aad, &mut b);
+        assert_eq!(a, b, "case {case} (len {len}): ciphertext diverged");
+        assert_eq!(ta, tb, "case {case} (len {len}): tag diverged");
+
+        // cross-backend open, then a flipped bit must fail on both
+        slow.open(&nonce, &aad, &mut a, &ta).expect("scalar opens dispatched record");
+        assert_eq!(a, pt);
+        fast.open(&nonce, &aad, &mut b, &tb).expect("dispatched opens scalar record");
+        assert_eq!(b, pt);
+        let mut bad = ta;
+        bad[rng.range(0, 16)] ^= 1 << rng.range(0, 8);
+        let mut c = pt.clone();
+        fast.seal(&nonce, &aad, &mut c);
+        assert!(fast.open(&nonce, &aad, &mut c.clone(), &bad).is_err());
+        assert!(slow.open(&nonce, &aad, &mut c, &bad).is_err());
+    }
+}
+
+#[test]
+fn dispatch_matches_machine_capability() {
+    // `accelerated()` must agree with the module-level probe at
+    // construction time, and the pinned-scalar constructor never
+    // accelerates — on any machine, under any env.
+    let g = AesGcm::new(b"dispatch-probe-k");
+    assert_eq!(g.accelerated(), aesni_available());
+    assert!(!AesGcm::new_scalar(b"dispatch-probe-k").accelerated());
+}

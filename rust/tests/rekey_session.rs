@@ -1,0 +1,172 @@
+//! Key-lifecycle acceptance: a live server rotates its channel keys —
+//! periodically (`rekey_interval_secs`) and on demand (`Server::rekey`) —
+//! through the zero-loss drain/hot-swap path. Every fed frame completes
+//! (nothing is dropped across ≥2 epochs), the rotation is on the swap
+//! record with its epoch, and the epoch counter is monotonic.
+//!
+//! Runs on the synthetic builder (no artifacts needed); the sealed-record
+//! mechanics of an epoch bump — old-epoch records opening during the
+//! handover, sequence reset, two-epochs-back rejection — are covered at
+//! unit level in `crypto::channel`, and the wrapped-key handshake in
+//! `crypto::keymgr` / `enclave::service`. Both scenarios live in ONE
+//! #[test] so the sleep-based worker threads never compete with a
+//! sibling test for cores.
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use serdab::coordinator::{Server, ServerConfig, ServerEvent, StreamSpec, SyntheticBuilder};
+use serdab::profiler::{DeviceKind, ModelProfile};
+use serdab::topology::{LinkParams, Topology};
+
+fn quad_topology() -> Topology {
+    Topology::builder("quad-rekey")
+        .resource("T0", DeviceKind::Tee, 0)
+        .resource("T1", DeviceKind::Tee, 1)
+        .resource("T2", DeviceKind::Tee, 2)
+        .resource("T3", DeviceKind::Tee, 3)
+        .default_link(LinkParams { bandwidth_bps: 1e9, rtt_secs: 1e-4 })
+        .camera(0)
+        .sink(0)
+        .build()
+        .unwrap()
+}
+
+/// Drain events until the swap completing `epoch`, returning the Rekey
+/// announcements seen on the way (panicking on failure/timeout).
+fn wait_for_epoch(
+    events: &Receiver<ServerEvent>,
+    epoch: u32,
+    timeout: Duration,
+) -> Vec<ServerEvent> {
+    let deadline = Instant::now() + timeout;
+    let mut seen = Vec::new();
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        assert!(!left.is_zero(), "no epoch-{epoch} swap within {timeout:?}; events: {seen:?}");
+        match events.recv_timeout(left) {
+            Ok(ServerEvent::SwapCompleted(ev)) if ev.key_epoch >= epoch => {
+                seen.push(ServerEvent::SwapCompleted(ev));
+                return seen;
+            }
+            Ok(ServerEvent::SwapFailed { error }) => panic!("re-key swap failed: {error}"),
+            Ok(ev) => seen.push(ev),
+            Err(_) => panic!("event feed closed before epoch {epoch}; events: {seen:?}"),
+        }
+    }
+}
+
+#[test]
+fn rekey_rotates_epochs_without_frame_loss() {
+    periodic_rekey_two_epochs_zero_loss();
+    on_demand_rekey_bumps_epoch();
+}
+
+/// `rekey_interval_secs` drives ≥2 rotations mid-serve: every fed frame
+/// still completes, and each rotation is announced + recorded with its
+/// epoch.
+fn periodic_rekey_two_epochs_zero_loss() {
+    let profile = ModelProfile::millis_demo();
+    let topo = quad_topology();
+    let builder = SyntheticBuilder::new(profile.clone(), topo.clone());
+    let mut server = Server::launch(
+        profile,
+        topo,
+        Box::new(builder),
+        ServerConfig {
+            window_secs: 0.1,
+            rekey_interval_secs: 0.5,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let events = server.events().unwrap();
+    assert_eq!(server.key_epoch(), 0, "a fresh deployment seals under epoch 0");
+
+    // two cameras at a comfortable rate (~25 fps aggregate against a
+    // ≥50 fps pipeline) spanning several re-key intervals
+    server.attach(StreamSpec::synthetic("cam-0", 0.08, 48)).unwrap();
+    server.attach(StreamSpec::synthetic("cam-1", 0.08, 48)).unwrap();
+
+    let seen = wait_for_epoch(&events, 2, Duration::from_secs(15));
+    assert!(server.key_epoch() >= 2, "status must report the rotated epoch");
+
+    // every rotation was announced before its swap, with matching epochs,
+    // and the epoch sequence on completed swaps is monotonically rising
+    let announced: Vec<u32> = seen
+        .iter()
+        .filter_map(|ev| match ev {
+            ServerEvent::Rekey { epoch, .. } => Some(*epoch),
+            _ => None,
+        })
+        .collect();
+    let completed: Vec<u32> = seen
+        .iter()
+        .filter_map(|ev| match ev {
+            ServerEvent::SwapCompleted(ev) => Some(ev.key_epoch),
+            _ => None,
+        })
+        .collect();
+    assert!(announced.len() >= 2, "expected ≥2 Rekey announcements: {seen:?}");
+    assert!(announced.windows(2).all(|w| w[0] < w[1]), "epochs must rise: {announced:?}");
+    assert!(
+        completed.windows(2).all(|w| w[0] < w[1]),
+        "completed swap epochs must rise: {completed:?}"
+    );
+
+    // the synthetic builder attests nothing — status says so (the
+    // attested DeployBuilder path reports real cache counters here)
+    let st = server.status();
+    assert_eq!(st.attest_cache, None);
+    assert_eq!(st.key_epoch, server.key_epoch());
+
+    // zero loss: the drain guarantees every fed frame completed, across
+    // every epoch handover
+    let report = server.shutdown().unwrap();
+    assert!(report.swaps.len() >= 2, "both rotations are on the swap record");
+    assert!(
+        report.swaps.iter().any(|s| s.key_epoch >= 2),
+        "swap record must carry the rotated epoch: {:?}",
+        report.swaps
+    );
+    assert_eq!(report.frames_dropped, 0, "re-keying must drain, never drop");
+    assert_eq!(report.sink_errors, 0);
+    let total_fed: u64 = report.streams.iter().map(|s| s.fed).sum();
+    assert_eq!(report.frames, total_fed, "every fed frame drained to the sink");
+    for s in &report.streams {
+        assert_eq!(s.completed, s.fed, "stream {} lost frames across re-keys", s.label);
+    }
+}
+
+/// With no periodic schedule, `Server::rekey` rotates exactly when asked.
+fn on_demand_rekey_bumps_epoch() {
+    let profile = ModelProfile::millis_demo();
+    let topo = quad_topology();
+    let builder = SyntheticBuilder::new(profile.clone(), topo.clone());
+    let mut server = Server::launch(
+        profile,
+        topo,
+        Box::new(builder),
+        ServerConfig { window_secs: 0.1, ..ServerConfig::default() },
+    )
+    .unwrap();
+    let events = server.events().unwrap();
+    server.attach(StreamSpec::synthetic("cam-0", 0.05, 40)).unwrap();
+
+    // no schedule: serving alone never rotates
+    std::thread::sleep(Duration::from_millis(400));
+    assert_eq!(server.key_epoch(), 0, "no re-key without a request or schedule");
+
+    server.rekey();
+    wait_for_epoch(&events, 1, Duration::from_secs(10));
+    assert_eq!(server.key_epoch(), 1);
+
+    server.rekey();
+    wait_for_epoch(&events, 2, Duration::from_secs(10));
+    assert_eq!(server.key_epoch(), 2);
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.frames_dropped, 0, "on-demand re-keys must not drop frames");
+    let total_fed: u64 = report.streams.iter().map(|s| s.fed).sum();
+    assert_eq!(report.frames, total_fed);
+}

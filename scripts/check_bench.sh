@@ -2,8 +2,10 @@
 # Perf-trend gate over the checked-in bench artifacts:
 #   BENCH_batching.json  (cargo bench --bench batching_bench -- --json)
 #   BENCH_solver.json    (cargo bench --bench solver_bench   -- --json)
+#   BENCH_hotpath.json   (cargo bench --bench hotpath_microbench -- --json)
 # The artifact kind is picked by filename: *solver* routes to the solver
-# gate, anything else to the batching gate.
+# gate, *hotpath* to the crypto (sealed-hop) gate, anything else to the
+# batching gate.
 #
 # The gates are deliberately coarse — they fail only on order-of-magnitude
 # wrongness, not run-to-run jitter.
@@ -25,6 +27,14 @@
 #   4. the 1024-resource cold solve must finish under MAX_COLD_MS
 #      (default 5000 ms).
 #
+# Crypto (sealed-hop) gate:
+#   1. parity must be true: the dispatched AES-GCM path is worthless the
+#      moment it stops being bitwise identical to the scalar reference;
+#   2. every sealed-hop row must be ≥ MIN_CRYPTO_SPEEDUP (default 3.0×)
+#      of the scalar baseline — but only when the artifact was produced
+#      on an AES-NI machine ("aesni": true): without the instructions the
+#      dispatched path IS the scalar path and the ratio is ~1 by design.
+#
 # Portability rules (so a checkout without a fresh bench run, or a
 # laptop-generated artifact checked on CI, never fails spuriously):
 #   - a missing artifact WARNS and passes (nothing to gate);
@@ -42,11 +52,13 @@ bench="${1:-BENCH_batching.json}"
 min_speedup="${MIN_SPEEDUP:-1.2}"
 incr_speedup="${INCR_SPEEDUP:-5}"
 max_cold_ms="${MAX_COLD_MS:-5000}"
+min_crypto_speedup="${MIN_CRYPTO_SPEEDUP:-3.0}"
 strict="${STRICT:-0}"
 host_machine="$(uname -m)-$(nproc)cpu"
 
 case "$(basename "$bench")" in
     *solver*) kind="solver"; bench_cmd="cargo bench --bench solver_bench -- --json" ;;
+    *hotpath*) kind="crypto"; bench_cmd="cargo bench --bench hotpath_microbench -- --json" ;;
     *) kind="batching"; bench_cmd="cargo bench --bench batching_bench -- --json" ;;
 esac
 
@@ -62,7 +74,59 @@ if [[ ! -f "$bench" ]]; then
     exit 0
 fi
 
-if [[ "$kind" == "solver" ]]; then
+if [[ "$kind" == "crypto" ]]; then
+python3 - "$bench" "$min_crypto_speedup" "$host_machine" "$strict" <<'PY'
+import json, sys
+
+path, min_speedup, host_machine, strict = (
+    sys.argv[1], float(sys.argv[2]), sys.argv[3], sys.argv[4] == "1")
+with open(path) as f:
+    bench = json.load(f)
+
+hop = bench.get("sealed_hop")
+if hop is None:
+    print("FAIL: no sealed_hop lane in the artifact (stale bench run?)",
+          file=sys.stderr)
+    sys.exit(1)
+machine = bench.get("machine")
+same_class = machine == host_machine
+aesni = hop.get("aesni") is True
+gate = (same_class or strict) and aesni
+for r in hop["rows"]:
+    print(f"sealed hop {r['payload']:>7}: dispatched={r['dispatched_gbps']:.2f} GB/s "
+          f"scalar={r['scalar_gbps']:.2f} GB/s speedup={r['speedup']:.2f}x")
+print(f"parity={hop['parity']}  aesni={aesni}  "
+      f"machine={machine or 'unstamped'} vs host={host_machine} "
+      f"(speedup floor {min_speedup}x {'enforced' if gate else 'advisory'})")
+
+failed = False
+# correctness claims travel with the artifact: fail on any machine
+if hop["parity"] is not True:
+    print("FAIL: dispatched GCM is not bitwise identical to scalar",
+          file=sys.stderr)
+    failed = True
+for r in hop["rows"]:
+    if r["dispatched_gbps"] <= 0 or r["scalar_gbps"] <= 0:
+        print(f"FAIL: degenerate row {r}", file=sys.stderr)
+        failed = True
+    # the speedup floor binds only on the producing machine class (or
+    # STRICT=1), and only when that machine has AES-NI at all
+    elif r["speedup"] < min_speedup:
+        if gate:
+            print(f"FAIL: sealed hop {r['payload']} is only "
+                  f"{r['speedup']:.2f}x scalar (< {min_speedup}x)",
+                  file=sys.stderr)
+            failed = True
+        else:
+            why = ("no AES-NI on the producing machine" if not aesni else
+                   f"artifact is from '{machine or 'unstamped'}', not this host")
+            print(f"WARN: sealed hop {r['payload']} is only "
+                  f"{r['speedup']:.2f}x scalar (< {min_speedup}x), but "
+                  f"{why} — not gating", file=sys.stderr)
+
+sys.exit(1 if failed else 0)
+PY
+elif [[ "$kind" == "solver" ]]; then
 python3 - "$bench" "$incr_speedup" "$max_cold_ms" "$host_machine" "$strict" <<'PY'
 import json, sys
 

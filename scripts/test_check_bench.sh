@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Unit tests for scripts/check_bench.sh: exercises every gate/warn path
-# against synthetic BENCH_batching.json artifacts in a temp dir. Run
+# against synthetic batching/solver/crypto artifacts in a temp dir. Run
 # directly (CI runs it next to the real gate):
 #
 #   scripts/test_check_bench.sh
@@ -161,6 +161,71 @@ expect "STRICT=1 restores the hard incremental gate" 1 "$rc"
 mk_solver "$tmp/solver_slow_cold.json" true 8 9000 "$host"
 rc=0; "$check" "$tmp/solver_slow_cold.json" >/dev/null 2>&1 || rc=$?
 expect "cold solve over 5s at 1024 fails on the same class" 1 "$rc"
+
+# ---- crypto gate (filenames containing "hotpath" route here) ----------------
+
+# mk_crypto <file> <parity:true|false> <aesni:true|false> <speedup> <machine|none>
+mk_crypto() {
+    python3 - "$1" "$2" "$3" "$4" "$5" <<'PY'
+import json, sys
+file, parity, aesni, speedup, machine = (
+    sys.argv[1], sys.argv[2] == "true", sys.argv[3] == "true",
+    float(sys.argv[4]), sys.argv[5])
+def row(payload, nbytes):
+    scalar = 0.8
+    return {"payload": payload, "bytes": nbytes,
+            "dispatched_gbps": scalar * speedup, "scalar_gbps": scalar,
+            "speedup": speedup}
+doc = {
+    "bench": "hotpath_microbench",
+    "rows": [],
+    "sealed_hop": {
+        "aesni": aesni,
+        "parity": parity,
+        "rows": [row("64 KiB", 65536), row("1 MiB", 1048576)],
+    },
+}
+if machine != "none":
+    doc["machine"] = machine
+with open(file, "w") as f:
+    json.dump(doc, f)
+PY
+}
+
+mk_crypto "$tmp/hotpath_good.json" true true 4.0 "$host"
+rc=0; "$check" "$tmp/hotpath_good.json" >/dev/null 2>&1 || rc=$?
+expect "healthy crypto artifact passes" 0 "$rc"
+
+mk_crypto "$tmp/hotpath_parity.json" false true 4.0 "other-0cpu"
+rc=0; "$check" "$tmp/hotpath_parity.json" >/dev/null 2>&1 || rc=$?
+expect "crypto parity=false fails on any machine class" 1 "$rc"
+
+mk_crypto "$tmp/hotpath_slow_same.json" true true 1.5 "$host"
+rc=0; "$check" "$tmp/hotpath_slow_same.json" >/dev/null 2>&1 || rc=$?
+expect "crypto speedup shortfall fails on the same AES-NI class" 1 "$rc"
+
+mk_crypto "$tmp/hotpath_slow_other.json" true true 1.5 "other-0cpu"
+rc=0; "$check" "$tmp/hotpath_slow_other.json" >/dev/null 2>&1 || rc=$?
+expect "crypto speedup shortfall warns and passes cross-class" 0 "$rc"
+
+rc=0; STRICT=1 "$check" "$tmp/hotpath_slow_other.json" >/dev/null 2>&1 || rc=$?
+expect "STRICT=1 restores the hard crypto speedup gate" 1 "$rc"
+
+# no AES-NI on the producer: dispatched == scalar by design, the floor
+# must never bind — not even under STRICT (there is nothing to speed up)
+mk_crypto "$tmp/hotpath_noaesni.json" true false 1.0 "$host"
+rc=0; "$check" "$tmp/hotpath_noaesni.json" >/dev/null 2>&1 || rc=$?
+expect "speedup ~1 passes on a machine without AES-NI" 0 "$rc"
+rc=0; STRICT=1 "$check" "$tmp/hotpath_noaesni.json" >/dev/null 2>&1 || rc=$?
+expect "STRICT=1 still passes without AES-NI" 0 "$rc"
+
+# a parity break without AES-NI is still a correctness failure
+mk_crypto "$tmp/hotpath_noaesni_parity.json" false false 1.0 "$host"
+rc=0; "$check" "$tmp/hotpath_noaesni_parity.json" >/dev/null 2>&1 || rc=$?
+expect "parity=false fails even without AES-NI" 1 "$rc"
+
+rc=0; MIN_CRYPTO_SPEEDUP=1.2 "$check" "$tmp/hotpath_slow_same.json" >/dev/null 2>&1 || rc=$?
+expect "MIN_CRYPTO_SPEEDUP lowers the crypto floor" 0 "$rc"
 
 echo
 echo "test_check_bench: $pass passed, $fail failed"
