@@ -8,20 +8,25 @@
 //!   3. block execution on the reference backend's GEMM core, measured
 //!      against the retained pre-GEMM `naive` kernels *in the same run*
 //!      (the before/after pair the ≥3× block-exec target is judged on),
+//!      plus the resident-pool lane (4 pooled workers vs the 1-worker
+//!      GEMM row, with in-run bitwise parity across pool sizes) and the
+//!      packed-B lane (prepacked weight panels vs the pack-free path,
+//!      in-run bitwise parity — DESIGN.md §20),
 //!   4. tensor ⇄ wire-bytes bridging and real artifact blocks when the
 //!      artifacts directory exists.
 //!
 //! `--json` additionally writes `BENCH_hotpath.json` at the repo root
 //! (component → payload → median ns + throughput, the block-exec speedup,
-//! and the sealed-hop lane `scripts/check_bench.sh` gates), so the perf
-//! trajectory is machine-readable PR-over-PR; CI uploads it as a build
-//! artifact.
+//! and the sealed-hop / compute-pool / packed-B lanes
+//! `scripts/check_bench.sh` gates), so the perf trajectory is
+//! machine-readable PR-over-PR; CI uploads it as a build artifact.
 
 use serdab::crypto::channel::Channel;
 use serdab::crypto::gcm::AesGcm;
 use serdab::figures::{BenchTimer, Measurement, Table};
 use serdab::model::manifest::{default_artifacts_dir, load_manifest};
 use serdab::net::framing::{FrameType, FrameWriter};
+use serdab::runtime::backend::reference::gemm;
 use serdab::runtime::backend::reference::ops::{self, naive};
 use serdab::runtime::backend::reference::zoo::Pad;
 use serdab::runtime::{default_backend, ChainExecutor, Scratch, Tensor};
@@ -191,6 +196,69 @@ fn main() -> anyhow::Result<()> {
         throughput: gflops(conv_flops, &m_par),
     });
 
+    // --- 3b. resident pool: pooled workers vs the 1-worker GEMM row -------
+    // Same conv, same tensors, dispatched to the resident worker pool at
+    // explicit pool sizes. Parity is checked in-run across {1, 2, 4}
+    // workers (the chunk split fixes every element's accumulation order,
+    // so the bytes must match exactly); check_bench.sh's compute-pool
+    // lane fails the parity anywhere and enforces the ≥2× speedup floor
+    // only when the producing machine has ≥ 4 cores to scale across.
+    let pool_workers = 4usize;
+    let conv_ref_bytes = {
+        let t = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut scratch).unwrap();
+        let bytes = t.to_le_bytes();
+        scratch.give(t);
+        bytes
+    };
+    let mut scratch_p2 = Scratch::with_threads(2);
+    let mut scratch_p4 = Scratch::with_threads(pool_workers);
+    let mut pool_parity = true;
+    for sc in [&mut scratch_p2, &mut scratch_p4] {
+        let t = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, sc).unwrap();
+        pool_parity &= t.to_le_bytes() == conv_ref_bytes;
+        sc.give(t);
+    }
+    let m_pool = slow_timer.measure(|| {
+        let t = ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut scratch_p4).unwrap();
+        scratch_p4.give(std::hint::black_box(t));
+    });
+    rows.push(Row {
+        component: format!("block-exec conv3x3 (pooled, {pool_workers} workers)"),
+        payload: "1×28×28×32→64".into(),
+        m: m_pool,
+        throughput: gflops(conv_flops, &m_pool),
+    });
+    let pool_speedup = m_gemm.median_secs / m_pool.median_secs;
+    println!(
+        "compute pool: {pool_speedup:.2}× at {pool_workers} pooled workers \
+         vs 1 (parity={pool_parity})"
+    );
+
+    // --- 3c. packed-B weight panels vs the pack-free GEMM path ------------
+    // The same conv through a prepacked (NR-tiled, cache-aligned) weight
+    // panel from the process-wide digest cache — what every deployed
+    // block uses after `load_block`. Bitwise parity is part of the lane.
+    let conv_pb = gemm::pack_cache().get_or_pack(3 * 3 * 32, 64, &w.data);
+    let t = ops::conv2d_packed_scratch(
+        &x, &w, &b, 1, &Pad::Same, true, Some(conv_pb.as_ref()), &mut scratch,
+    )
+    .unwrap();
+    let mut packed_parity = t.to_le_bytes() == conv_ref_bytes;
+    scratch.give(t);
+    let m_packed_conv = slow_timer.measure(|| {
+        let t = ops::conv2d_packed_scratch(
+            &x, &w, &b, 1, &Pad::Same, true, Some(conv_pb.as_ref()), &mut scratch,
+        )
+        .unwrap();
+        scratch.give(std::hint::black_box(t));
+    });
+    rows.push(Row {
+        component: "block-exec conv3x3 (packed-B, 1 worker)".into(),
+        payload: "1×28×28×32→64".into(),
+        m: m_packed_conv,
+        throughput: gflops(conv_flops, &m_packed_conv),
+    });
+
     let xd = rand_tensor(&mut rng, &[1, 4096]);
     let wd = rand_tensor(&mut rng, &[4096, 512]);
     let bd = rand_tensor(&mut rng, &[512]);
@@ -214,6 +282,36 @@ fn main() -> anyhow::Result<()> {
         m: m_dg,
         throughput: gflops(dense_flops, &m_dg),
     });
+    // packed-B dense: the batch-1 GEMV walks the same panels column-first
+    let dense_ref_bytes = {
+        let t = ops::dense_scratch(&xd, &wd, &bd, true, &mut scratch).unwrap();
+        let bytes = t.to_le_bytes();
+        scratch.give(t);
+        bytes
+    };
+    let dense_pb = gemm::pack_cache().get_or_pack(4096, 512, &wd.data);
+    let t = ops::dense_packed_scratch(&xd, &wd, &bd, true, Some(dense_pb.as_ref()), &mut scratch)
+        .unwrap();
+    packed_parity &= t.to_le_bytes() == dense_ref_bytes;
+    scratch.give(t);
+    let m_packed_dense = slow_timer.measure(|| {
+        let t = ops::dense_packed_scratch(
+            &xd, &wd, &bd, true, Some(dense_pb.as_ref()), &mut scratch,
+        )
+        .unwrap();
+        scratch.give(std::hint::black_box(t));
+    });
+    rows.push(Row {
+        component: "block-exec dense (packed-B, 1 worker)".into(),
+        payload: "4096→512".into(),
+        m: m_packed_dense,
+        throughput: gflops(dense_flops, &m_packed_dense),
+    });
+    println!(
+        "packed-B: conv {:.2}× dense {:.2}× vs pack-free (parity={packed_parity})",
+        m_gemm.median_secs / m_packed_conv.median_secs,
+        m_dg.median_secs / m_packed_dense.median_secs,
+    );
 
     let xw = rand_tensor(&mut rng, &[1, 56, 56, 64]);
     let ww = rand_tensor(&mut rng, &[3, 3, 64]);
@@ -341,6 +439,48 @@ fn main() -> anyhow::Result<()> {
                     ("aesni", Json::Bool(aesni)),
                     ("parity", Json::Bool(hop_parity)),
                     ("rows", arr(hop_rows)),
+                ]),
+            ),
+            (
+                "compute_pool",
+                obj(vec![
+                    // core count travels with the artifact: the speedup
+                    // floor only binds where ≥ 4 cores exist to scale on
+                    ("cores", num(ncpu as f64)),
+                    ("workers", num(pool_workers as f64)),
+                    ("parity", Json::Bool(pool_parity)),
+                    ("gemm_1w_ns", num((m_gemm.median_secs * 1e9).round())),
+                    ("pooled_ns", num((m_pool.median_secs * 1e9).round())),
+                    ("speedup", Json::Num(m_gemm.median_secs / m_pool.median_secs)),
+                ]),
+            ),
+            (
+                "packed_b",
+                obj(vec![
+                    ("parity", Json::Bool(packed_parity)),
+                    (
+                        "rows",
+                        arr(vec![
+                            obj(vec![
+                                ("component", s("conv3x3")),
+                                ("unpacked_ns", num((m_gemm.median_secs * 1e9).round())),
+                                ("packed_ns", num((m_packed_conv.median_secs * 1e9).round())),
+                                (
+                                    "speedup",
+                                    Json::Num(m_gemm.median_secs / m_packed_conv.median_secs),
+                                ),
+                            ]),
+                            obj(vec![
+                                ("component", s("dense")),
+                                ("unpacked_ns", num((m_dg.median_secs * 1e9).round())),
+                                ("packed_ns", num((m_packed_dense.median_secs * 1e9).round())),
+                                (
+                                    "speedup",
+                                    Json::Num(m_dg.median_secs / m_packed_dense.median_secs),
+                                ),
+                            ]),
+                        ]),
+                    ),
                 ]),
             ),
         ]);

@@ -8,7 +8,10 @@
 //! worker unwraps them inside the trust boundary), (2) ships the partition
 //! description to the device, whose worker thread loads the block
 //! executables *inside its own runtime* (each stage constructs its own
-//! execution backend — PJRT clients are per-device), and (3) wires
+//! execution backend — PJRT clients are per-device; the reference
+//! backend also prepacks every GEMM weight here through the digest-keyed
+//! pack cache, so re-deploys of unchanged blocks — hot-swaps, re-keys —
+//! reuse the panels instead of repacking, DESIGN.md §20), and (3) wires
 //! bandwidth-throttled transmission operators on every cross-host edge.
 //! Frames then stream camera → TEE₁ → … → sink through the
 //! pipeline-parallel engine ([`runtime::pipeline`](crate::runtime::pipeline)):
@@ -193,6 +196,11 @@ impl Deployment {
 
         // --- data plane: one pipeline worker per stage, WAN links on
         // cross-host edges, bounded queues everywhere ---------------------
+        // Warm the process-wide compute pool before any stage worker
+        // boots: deployment, not the first frame, pays the thread spawns
+        // (each worker's NnService prestart then finds them parked).
+        crate::runtime::pool::global()
+            .prestart(crate::runtime::scratch::env_threads().saturating_sub(1));
         let batch = cfg.batch;
         let mut pipeline = Pipeline::new(cfg);
         for (si, stage) in placement.stages.iter().enumerate() {

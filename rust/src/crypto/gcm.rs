@@ -143,7 +143,9 @@ fn ct_tag_eq(expect: &[u8; 16], got: &[u8; 16]) -> bool {
 ///
 /// Contexts built by [`AesGcm::new`] while this returns `true` dispatch to
 /// the hardware path; the env override is read at context construction
-/// (not per call), matching how `SERDAB_THREADS` pins the GEMM pool.
+/// (not per call), matching how `SERDAB_THREADS` is read once per process
+/// ([`scratch::env_threads`](crate::runtime::scratch::env_threads)) to
+/// budget the resident compute pool ([`pool`](crate::runtime::pool)).
 pub fn aesni_available() -> bool {
     if std::env::var_os("SERDAB_NO_AESNI").is_some_and(|v| !v.is_empty() && v != "0") {
         return false;

@@ -79,6 +79,11 @@ impl NnService {
     ) -> Self {
         let in_shape = chain.blocks.first().map(|b| b.in_shape.clone()).unwrap_or_default();
         let out_shape = chain.blocks.last().map(|b| b.out_shape.clone()).unwrap_or_default();
+        let scratch = Scratch::new();
+        // park the pool workers now, at service construction, so the first
+        // frame's kernel fan-out is a queue push instead of thread spawns
+        // (DESIGN.md §20 — the pool outlives every service)
+        crate::runtime::pool::global().prestart(scratch.threads().saturating_sub(1));
         NnService {
             enclave,
             chain,
@@ -87,7 +92,7 @@ impl NnService {
             in_shape,
             out_shape,
             stats: Default::default(),
-            scratch: Scratch::new(),
+            scratch,
             plain_buf: Vec::new(),
             out_buf: Vec::new(),
         }
@@ -95,13 +100,16 @@ impl NnService {
 
     /// Build the complete service for one placement stage, the way a
     /// device boots it: construct the device-local execution backend
-    /// (`$SERDAB_BACKEND`), load the block range, seal the partition
-    /// parameters into the enclave identity (their digest is what
-    /// attestation measured), **unwrap the hop keys** the coordinator
-    /// wrapped for this enclave (only the attestation-released
-    /// `attested_secret` can open them — a mismatched or tampered wrap is
-    /// a clean stream error, not a panic), and key the hop channels at
-    /// the wraps' [`KeyEpoch`](crate::crypto::keymgr::KeyEpoch).
+    /// (`$SERDAB_BACKEND`), load the block range — the reference backend
+    /// prepacks every GEMM weight into cache-aligned panels here, through
+    /// the process-wide digest cache, so no frame ever pays packing
+    /// (DESIGN.md §20) — seal the partition parameters into the enclave
+    /// identity (their digest is what attestation measured), **unwrap the
+    /// hop keys** the coordinator wrapped for this enclave (only the
+    /// attestation-released `attested_secret` can open them — a
+    /// mismatched or tampered wrap is a clean stream error, not a panic),
+    /// and key the hop channels at the wraps'
+    /// [`KeyEpoch`](crate::crypto::keymgr::KeyEpoch).
     ///
     /// This is the shared stage body behind
     /// [`Deployment`](crate::coordinator::Deployment) workers and the
@@ -265,7 +273,11 @@ impl NnService {
     /// Pre-size the scratch arena for micro-batches up to `max_batch`
     /// frames, so the first full batch does not grow any pool tensor
     /// mid-flight (the zero-alloc steady state then covers the batched
-    /// path too — DESIGN.md §16 sizing rules).
+    /// path too — DESIGN.md §16 sizing rules). By this point the other
+    /// two warm-up costs are already sunk: the compute-pool workers were
+    /// parked at construction and the GEMM weights were packed at block
+    /// load, so the first frame after a §13 hot-swap or re-key runs the
+    /// full steady-state path.
     pub fn reserve_batch(&mut self, max_batch: usize) {
         if max_batch > 1 && !self.in_shape.is_empty() {
             let mut shape = self.in_shape.clone();

@@ -18,6 +18,10 @@
 //! matrices are tiled or split across worker threads** — this is what
 //! makes `SERDAB_THREADS=1` and `=N` produce byte-identical tensors.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
 /// Microkernel tile height (output rows per register tile).
 pub const MR: usize = 4;
 /// Microkernel tile width (output columns per register tile).
@@ -326,6 +330,404 @@ pub fn im2col_panel(
     }
 }
 
+// --- packed-B weight panels (DESIGN.md §20) -----------------------------
+
+/// One cache line of packed data; gives the backing store 64-byte
+/// alignment so every panel row starts on a cache-line boundary
+/// (`NR = 16` f32 = 64 bytes, and full panels span `k·NR` floats — a
+/// whole number of lines).
+#[repr(align(64))]
+#[derive(Clone, Copy)]
+struct CacheLine([f32; 16]);
+
+/// A weight matrix repacked once into BLIS-style column panels: panel
+/// `p` holds columns `p·NR .. (p+1)·NR` contiguously, `k`-major — the
+/// exact `NR`-float rows the microkernel streams, so the per-`k` B load
+/// is one aligned consecutive line instead of a strided row crossing
+/// the whole matrix. The tail panel (the last `n % NR` columns) is
+/// stored at its **natural width, not zero-padded**: padding would make
+/// the kernel add `a·0.0` terms, and `-0.0 + 0.0` flips a negative-zero
+/// accumulator to `+0.0` — a bitwise parity break. The packed path
+/// therefore executes the identical abstract float ops as the unpacked
+/// one and `packed_gemm_is_bitwise_identical` pins it.
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    buf: Vec<CacheLine>,
+}
+
+impl PackedB {
+    /// Pack a `k×n` row-major B matrix (weights). One pass, done once
+    /// per (weight digest) at block-load time — never per frame.
+    pub fn pack(k: usize, n: usize, b: &[f32]) -> PackedB {
+        assert_eq!(b.len(), k * n, "B is k×n");
+        let lines = ((k * n + 15) / 16).max(1);
+        let mut buf = vec![CacheLine([0.0; 16]); lines];
+        {
+            // SAFETY: `buf` holds ≥ k·n contiguous f32s (CacheLine is a
+            // plain f32 array; align 64 only raises alignment).
+            let data: &mut [f32] =
+                unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr().cast::<f32>(), k * n) };
+            let full = n / NR;
+            for p in 0..full {
+                let dst = p * k * NR;
+                for kk in 0..k {
+                    data[dst + kk * NR..dst + (kk + 1) * NR]
+                        .copy_from_slice(&b[kk * n + p * NR..kk * n + (p + 1) * NR]);
+                }
+            }
+            let rem = n - full * NR;
+            if rem > 0 {
+                let dst = full * k * NR;
+                for kk in 0..k {
+                    data[dst + kk * rem..dst + (kk + 1) * rem]
+                        .copy_from_slice(&b[kk * n + full * NR..(kk + 1) * n]);
+                }
+            }
+        }
+        PackedB { k, n, buf }
+    }
+
+    /// Reduction depth (`k`) this packing was built for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output width (`n`) this packing was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Resident bytes of the packed store.
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<CacheLine>()
+    }
+
+    #[inline(always)]
+    fn data(&self) -> &[f32] {
+        // SAFETY: see `pack` — the buffer holds ≥ k·n contiguous f32s.
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr().cast::<f32>(), self.k * self.n) }
+    }
+}
+
+/// [`gemm_bias`] over a pre-packed B: same signature contract, same
+/// per-element operation order (bitwise identical to the unpacked path),
+/// but every B access is a contiguous aligned panel row.
+pub fn gemm_bias_packed(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    pb: &PackedB,
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    debug_assert_eq!((pb.k, pb.n), (k, n), "packing built for a different shape");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            // SAFETY: guarded by the runtime AVX2 check above.
+            unsafe { gemm_bias_packed_avx2(m, k, n, a, pb, bias, relu, c) };
+            return;
+        }
+    }
+    gemm_bias_packed_body(m, k, n, a, pb, bias, relu, c);
+}
+
+/// [`gemm_bias_packed`] body recompiled with AVX2 codegen.
+///
+/// # Safety
+/// Callers must have verified AVX2 support at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_bias_packed_avx2(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    pb: &PackedB,
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    gemm_bias_packed_body(m, k, n, a, pb, bias, relu, c);
+}
+
+/// Panel sweep: one packed panel (a `k×NR` column block, already
+/// contiguous) against every row tile, then the natural-width tail
+/// panel through the scalar edge path. Each output element is produced
+/// exactly once with [`gemm_bias`]'s per-element order.
+#[inline(always)]
+fn gemm_bias_packed_body(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    pb: &PackedB,
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k, "A is m×k");
+    debug_assert_eq!(c.len(), m * n, "C is m×n");
+    let data = pb.data();
+    let mt = m - (m % MR);
+    let full = n / NR;
+    for p in 0..full {
+        let j0 = p * NR;
+        let panel = &data[p * k * NR..(p + 1) * k * NR];
+        let mut i0 = 0;
+        while i0 < mt {
+            tile_packed(i0, j0, k, n, a, panel, bias, relu, c);
+            i0 += MR;
+        }
+        if mt < m {
+            edge_packed(mt, m, j0, j0 + NR, NR, k, n, a, panel, bias, relu, c);
+        }
+    }
+    let rem = n - full * NR;
+    if rem > 0 {
+        let panel = &data[full * k * NR..full * k * NR + k * rem];
+        edge_packed(0, m, full * NR, n, rem, k, n, a, panel, bias, relu, c);
+    }
+}
+
+/// [`tile`] reading B from a contiguous packed panel.
+#[inline(always)]
+fn tile_packed(
+    i0: usize,
+    j0: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    panel: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    let mut acc = [[0f32; NR]; MR];
+    let arows = [
+        &a[i0 * k..(i0 + 1) * k],
+        &a[(i0 + 1) * k..(i0 + 2) * k],
+        &a[(i0 + 2) * k..(i0 + 3) * k],
+        &a[(i0 + 3) * k..(i0 + 4) * k],
+    ];
+    for kk in 0..k {
+        let bb = &panel[kk * NR..(kk + 1) * NR];
+        for r in 0..MR {
+            let av = arows[r][kk];
+            let accr = &mut acc[r];
+            for j in 0..NR {
+                accr[j] += av * bb[j];
+            }
+        }
+    }
+    for r in 0..MR {
+        let row = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+        for j in 0..NR {
+            let mut v = acc[r][j];
+            if let Some(bs) = bias {
+                v += bs[j0 + j];
+            }
+            row[j] = if relu { v.max(0.0) } else { v };
+        }
+    }
+}
+
+/// [`edge`] reading B from a packed panel of width `pw` covering columns
+/// `j0..j0+pw` (callers pass `j1 ≤ j0+pw`). Same per-element order.
+#[inline(always)]
+fn edge_packed(
+    ri0: usize,
+    ri1: usize,
+    j0: usize,
+    j1: usize,
+    pw: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    panel: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    c: &mut [f32],
+) {
+    for i in ri0..ri1 {
+        let arow = &a[i * k..i * k + k];
+        for j in j0..j1 {
+            let mut acc = 0f32;
+            for (kk, &av) in arow.iter().enumerate() {
+                acc += av * panel[kk * pw + (j - j0)];
+            }
+            if let Some(bs) = bias {
+                acc += bs[j];
+            }
+            c[i * n + j] = if relu { acc.max(0.0) } else { acc };
+        }
+    }
+}
+
+/// [`gemv_cols`] over a pre-packed B: walks the panels overlapping the
+/// caller's column range `j0..j0+out.len()`, k-outer within each
+/// segment — the memory accumulator for every output column sees the
+/// identical ascending-`k` addition sequence, so this is bitwise equal
+/// to the unpacked path for any column split.
+pub fn gemv_cols_packed(
+    k: usize,
+    n: usize,
+    j0: usize,
+    x: &[f32],
+    pb: &PackedB,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!((pb.k, pb.n), (k, n), "packing built for a different shape");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            // SAFETY: guarded by the runtime AVX2 check above.
+            unsafe { gemv_cols_packed_avx2(k, n, j0, x, pb, bias, relu, out) };
+            return;
+        }
+    }
+    gemv_cols_packed_body(k, n, j0, x, pb, bias, relu, out);
+}
+
+/// [`gemv_cols_packed`] body recompiled with AVX2 codegen.
+///
+/// # Safety
+/// Callers must have verified AVX2 support at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_cols_packed_avx2(
+    k: usize,
+    n: usize,
+    j0: usize,
+    x: &[f32],
+    pb: &PackedB,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    gemv_cols_packed_body(k, n, j0, x, pb, bias, relu, out);
+}
+
+#[inline(always)]
+fn gemv_cols_packed_body(
+    k: usize,
+    n: usize,
+    j0: usize,
+    x: &[f32],
+    pb: &PackedB,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert!(j0 + out.len() <= n);
+    debug_assert_eq!(x.len(), k);
+    let data = pb.data();
+    let full = n / NR;
+    out.fill(0.0);
+    let j_end = j0 + out.len();
+    let mut j = j0;
+    while j < j_end {
+        let p = j / NR;
+        // panel base offset, width, and first column it covers
+        let (base, pw, pcol0) =
+            if p < full { (p * k * NR, NR, p * NR) } else { (full * k * NR, n - full * NR, full * NR) };
+        let seg_end = (pcol0 + pw).min(j_end);
+        let off = j - pcol0;
+        let seg = &mut out[(j - j0)..(seg_end - j0)];
+        let width = seg.len();
+        for (kk, &xv) in x.iter().enumerate() {
+            let prow = &data[base + kk * pw + off..base + kk * pw + off + width];
+            for (o, &wv) in seg.iter_mut().zip(prow) {
+                *o += xv * wv;
+            }
+        }
+        j = seg_end;
+    }
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut v = *o + bias[j0 + j];
+        if relu {
+            v = v.max(0.0);
+        }
+        *o = v;
+    }
+}
+
+// --- digest-keyed pack cache --------------------------------------------
+
+/// Counters + size snapshot of the [`PackCache`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PackCacheStats {
+    /// Lookups that found an existing packing (re-deploys, hot-swaps,
+    /// re-keys, shared weights across shards).
+    pub hits: u64,
+    /// Lookups that had to pack (first deploy of a weight).
+    pub misses: u64,
+    /// Distinct packed weights resident.
+    pub entries: usize,
+    /// Total resident bytes of packed panels.
+    pub resident_bytes: usize,
+}
+
+/// Process-wide cache of packed weight panels, keyed by
+/// `(sha256(weight bytes), k, n)`. Packing happens once per distinct
+/// weight for the life of the process: a §13 drain/hot-swap or re-key
+/// re-deploys the same blocks, `load_block` asks the cache, and the
+/// first post-swap frame runs on already-packed panels. Entries are
+/// `Arc`-shared — a weight used by several shards is packed once.
+pub struct PackCache {
+    map: Mutex<HashMap<([u8; 32], u64, u64), Arc<PackedB>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// The process-wide [`PackCache`].
+pub fn pack_cache() -> &'static PackCache {
+    static CACHE: OnceLock<PackCache> = OnceLock::new();
+    CACHE.get_or_init(|| PackCache {
+        map: Mutex::new(HashMap::new()),
+        hits: AtomicU64::new(0),
+        misses: AtomicU64::new(0),
+    })
+}
+
+impl PackCache {
+    /// Return the packing of the `k×n` weight `b`, packing it now on
+    /// first sight. The digest covers the raw weight bytes; `(k, n)`
+    /// disambiguates identical bytes viewed at different shapes.
+    pub fn get_or_pack(&self, k: usize, n: usize, b: &[f32]) -> Arc<PackedB> {
+        // SAFETY: a plain byte view of the f32 slice (alignment only
+        // decreases; every bit pattern is a valid u8).
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(b.as_ptr().cast::<u8>(), b.len() * 4) };
+        let key = (crate::crypto::sha256(bytes), k as u64, n as u64);
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let packed = Arc::new(PackedB::pack(k, n, b));
+        // a racing packer may have inserted meanwhile; first one wins so
+        // every holder shares one allocation
+        self.map.lock().unwrap().entry(key).or_insert(packed).clone()
+    }
+
+    /// Snapshot the cache counters (deploy logs these).
+    pub fn stats(&self) -> PackCacheStats {
+        let map = self.map.lock().unwrap();
+        PackCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: map.len(),
+            resident_bytes: map.values().map(|p| p.bytes()).sum(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -409,6 +811,63 @@ mod tests {
         for (a, b) in full.iter().zip(&split) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn packed_gemm_is_bitwise_identical() {
+        // shapes hitting every path: full tiles, edge rows, tail panel,
+        // tail-only (n < NR), single row/col
+        let shapes = [(1, 1, 1), (3, 7, 5), (4, 16, 16), (5, 23, 17), (13, 9, 33), (8, 40, 48)];
+        for &(m, k, n) in &shapes {
+            let a = fill(m as u64 + 3, m * k);
+            let b = fill(n as u64 + 17, k * n);
+            let bias = fill(5, n);
+            let pb = PackedB::pack(k, n, &b);
+            assert_eq!((pb.k(), pb.n()), (k, n));
+            let mut c_ref = vec![0f32; m * n];
+            let mut c_pk = vec![7f32; m * n];
+            gemm_bias(m, k, n, &a, &b, Some(&bias), true, &mut c_ref);
+            gemm_bias_packed(m, k, n, &a, &pb, Some(&bias), true, &mut c_pk);
+            for (i, (r, p)) in c_ref.iter().zip(&c_pk).enumerate() {
+                assert_eq!(r.to_bits(), p.to_bits(), "({m},{k},{n}) element {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemv_is_bitwise_identical_under_splits() {
+        let (k, n) = (37, 53); // tail panel of width 53 - 48 = 5
+        let x = fill(1, k);
+        let w = fill(2, k * n);
+        let bias = fill(3, n);
+        let pb = PackedB::pack(k, n, &w);
+        let mut full = vec![0f32; n];
+        gemv_cols(k, n, 0, &x, &w, &bias, true, &mut full);
+        // packed, split at an awkward boundary crossing a panel edge
+        let mut split = vec![0f32; n];
+        let (lo, hi) = split.split_at_mut(19);
+        gemv_cols_packed(k, n, 0, &x, &pb, &bias, true, lo);
+        gemv_cols_packed(k, n, 19, &x, &pb, &bias, true, hi);
+        for (a, b) in full.iter().zip(&split) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn pack_cache_hits_on_identical_weights() {
+        let (k, n) = (11, 19);
+        let w = fill(42, k * n);
+        let before = pack_cache().stats();
+        let p1 = pack_cache().get_or_pack(k, n, &w);
+        let p2 = pack_cache().get_or_pack(k, n, &w);
+        assert!(Arc::ptr_eq(&p1, &p2), "same digest must share one packing");
+        let after = pack_cache().stats();
+        assert!(after.misses >= before.misses + 1);
+        assert!(after.hits >= before.hits + 1);
+        assert!(after.resident_bytes >= p1.bytes());
+        // same bytes, different shape → different packing
+        let p3 = pack_cache().get_or_pack(n, k, &w);
+        assert!(!Arc::ptr_eq(&p1, &p3));
     }
 
     #[test]

@@ -11,9 +11,11 @@ pub mod ops;
 pub mod zoo;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use self::gemm::PackedB;
 use self::zoo::{BlockDef, Combine, Layer};
 use super::{Backend, BlockRunner};
 use crate::model::ModelInfo;
@@ -86,25 +88,88 @@ impl Backend for ReferenceBackend {
         }
         ensure!(off as u64 == b.param_floats, "param file length mismatch for {}", b.name);
 
-        Ok(Box::new(RefBlock { name: b.name.clone(), layers: def.layers, params }))
+        // Pack every GEMM weight now — at load time, i.e. at
+        // `NnService::for_stage`/deploy time — so no frame ever pays
+        // packing. The digest-keyed cache (DESIGN.md §20) makes this free
+        // on re-deploys: a §13 hot-swap or re-key reloads the same weight
+        // bytes and gets the already-packed panels back.
+        let mut packed: Vec<Option<Arc<PackedB>>> = vec![None; params.len()];
+        let mut cursor = 0usize;
+        pack_gemm_weights(&def.layers, &params, &mut cursor, &mut packed)?;
+        ensure!(
+            cursor == params.len(),
+            "block {}: packing walk consumed {cursor} of {} parameter tensors",
+            b.name,
+            params.len()
+        );
+
+        Ok(Box::new(RefBlock { name: b.name.clone(), layers: def.layers, params, packed }))
     }
 }
 
-/// One loaded block: structure + resident parameter tensors. The
-/// out-shape contract is enforced by `BlockExecutable::run` for every
-/// backend, so it is not duplicated here.
+/// Walk the layer tree in the exact parameter-consumption order of
+/// [`forward_layers`] and pack each conv/dense weight through the
+/// process-wide [`gemm::pack_cache`]. Conv's packed B *is* the raw HWIO
+/// tensor viewed as `(KH·KW·Cin) × Cout`; dense's is `(Fin) × Fout`.
+/// Depthwise/pool layers carry no GEMM weight and stay unpacked.
+fn pack_gemm_weights(
+    layers: &[Layer],
+    params: &[Tensor],
+    cursor: &mut usize,
+    packed: &mut [Option<Arc<PackedB>>],
+) -> Result<()> {
+    for layer in layers {
+        match layer {
+            Layer::Conv { .. } => {
+                ensure!(*cursor + 2 <= params.len(), "parameter stream exhausted while packing");
+                let w = &params[*cursor];
+                ensure!(w.shape.len() == 4, "conv weight {:?} is not rank 4", w.shape);
+                let (k, n) = (w.shape[0] * w.shape[1] * w.shape[2], w.shape[3]);
+                packed[*cursor] = Some(gemm::pack_cache().get_or_pack(k, n, &w.data));
+                *cursor += 2;
+            }
+            Layer::Dense { .. } => {
+                ensure!(*cursor + 2 <= params.len(), "parameter stream exhausted while packing");
+                let w = &params[*cursor];
+                ensure!(w.shape.len() == 2, "dense weight {:?} is not rank 2", w.shape);
+                packed[*cursor] =
+                    Some(gemm::pack_cache().get_or_pack(w.shape[0], w.shape[1], &w.data));
+                *cursor += 2;
+            }
+            Layer::DwConv { .. } => {
+                ensure!(*cursor + 2 <= params.len(), "parameter stream exhausted while packing");
+                *cursor += 2;
+            }
+            Layer::Parallel { paths, .. } => {
+                for path in paths {
+                    pack_gemm_weights(path, params, cursor, packed)?;
+                }
+            }
+            Layer::Pool { .. } | Layer::GlobalAvgPool | Layer::Identity => {}
+        }
+    }
+    Ok(())
+}
+
+/// One loaded block: structure + resident parameter tensors + the
+/// load-time packed GEMM weights (`packed[i]` is `Some` iff `params[i]`
+/// is a conv/dense weight). The out-shape contract is enforced by
+/// `BlockExecutable::run` for every backend, so it is not duplicated
+/// here.
 struct RefBlock {
     name: String,
     layers: Vec<Layer>,
     params: Vec<Tensor>,
+    packed: Vec<Option<Arc<PackedB>>>,
 }
 
 impl BlockRunner for RefBlock {
     fn run_scratch(&self, activation: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
         let mut cursor = 0usize;
         let x = scratch.take_copy(activation);
-        let out = forward_layers(&self.layers, x, &self.params, &mut cursor, scratch)
-            .with_context(|| format!("reference forward of block {}", self.name))?;
+        let out =
+            forward_layers_packed(&self.layers, x, &self.params, &self.packed, &mut cursor, scratch)
+                .with_context(|| format!("reference forward of block {}", self.name))?;
         ensure!(
             cursor == self.params.len(),
             "block {}: consumed {cursor} of {} parameter tensors",
@@ -132,10 +197,29 @@ fn take_pair<'a>(params: &'a [Tensor], cursor: &mut usize) -> Result<(&'a Tensor
 /// `x` is owned (taken from the arena); every intermediate activation is
 /// returned to `scratch` as soon as its consumer has produced the next
 /// one, so the steady-state walk allocates nothing.
+///
+/// [`forward_layers_packed`] with no packed weights (unit tests build
+/// ad-hoc layer lists without going through `load_block`).
+#[cfg(test)]
 fn forward_layers(
+    layers: &[Layer],
+    x: Tensor,
+    params: &[Tensor],
+    cursor: &mut usize,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    forward_layers_packed(layers, x, params, &[], cursor, scratch)
+}
+
+/// The forward walk proper: `packed` parallels `params` (entry `i` is
+/// the load-time packing of weight tensor `i`, `None` for biases and
+/// non-GEMM weights — or empty when the caller never packed, which
+/// falls back to the unpacked GEMM path).
+fn forward_layers_packed(
     layers: &[Layer],
     mut x: Tensor,
     params: &[Tensor],
+    packed: &[Option<Arc<PackedB>>],
     cursor: &mut usize,
     scratch: &mut Scratch,
 ) -> Result<Tensor> {
@@ -143,13 +227,15 @@ fn forward_layers(
         match layer {
             Layer::Conv { kernel, stride, pad, relu } => {
                 ensure!(x.shape.len() == 4, "conv after flatten (shape {:?})", x.shape);
+                let wi = *cursor;
                 let (w, b) = take_pair(params, cursor)?;
                 ensure!(
                     w.shape.len() == 4 && w.shape[0] == *kernel,
                     "conv weight {:?} does not match declared {kernel}x{kernel} kernel",
                     w.shape
                 );
-                let out = ops::conv2d_scratch(&x, w, b, *stride, pad, *relu, scratch)?;
+                let pb = packed.get(wi).and_then(|p| p.as_deref());
+                let out = ops::conv2d_packed_scratch(&x, w, b, *stride, pad, *relu, pb, scratch)?;
                 scratch.give(std::mem::replace(&mut x, out));
             }
             Layer::DwConv { kernel, stride, pad, relu } => {
@@ -171,13 +257,15 @@ fn forward_layers(
                 scratch.give(std::mem::replace(&mut x, out));
             }
             Layer::Dense { relu } => {
+                let wi = *cursor;
                 let (w, b) = take_pair(params, cursor)?;
                 if x.shape.len() == 4 {
                     // flatten is a pure reshape on the owned activation
                     let (n, flat) = (x.shape[0], x.shape[1] * x.shape[2] * x.shape[3]);
                     x.reshape_in_place(&[n, flat])?;
                 }
-                let out = ops::dense_scratch(&x, w, b, *relu, scratch)?;
+                let pb = packed.get(wi).and_then(|p| p.as_deref());
+                let out = ops::dense_packed_scratch(&x, w, b, *relu, pb, scratch)?;
                 scratch.give(std::mem::replace(&mut x, out));
             }
             Layer::Identity => {}
@@ -190,7 +278,7 @@ fn forward_layers(
                 outs.clear();
                 for path in paths {
                     let xi = scratch.take_copy(&x);
-                    let o = forward_layers(path, xi, params, cursor, scratch)?;
+                    let o = forward_layers_packed(path, xi, params, packed, cursor, scratch)?;
                     outs.push(o);
                 }
                 let mut merged = match combine {

@@ -8,14 +8,18 @@
 //! [`gemm`](super::gemm): `conv2d` lowers to im2col panels + a blocked,
 //! register-tiled matmul, `dense` calls the same GEMM (a column-split
 //! AXPY for batch 1), and `dwconv2d`/`pool2d` run channel-innermost loops
-//! that autovectorize over the contiguous NHWC channel axis. Kernels can
-//! split output rows across `std::thread::scope` workers
-//! (`SERDAB_THREADS`, see [`Scratch`]); results are bit-identical for
-//! every worker count. The `*_scratch` entry points reuse buffers from a
-//! per-worker [`Scratch`] arena so the steady-state frame path performs
-//! no heap allocation; the plain-named wrappers keep the old signatures
-//! with a throwaway arena. The pre-GEMM scalar loops live on in
-//! [`naive`] as the parity baseline and microbench reference.
+//! that autovectorize over the contiguous NHWC channel axis. Kernels
+//! split output rows into disjoint chunks dispatched on the resident
+//! [`pool`](crate::runtime::pool) (`SERDAB_THREADS`, see [`Scratch`];
+//! DESIGN.md §20) — a queue push per kernel call, not a thread spawn —
+//! and results are bit-identical for every worker count. Conv and dense
+//! also take an optional pre-packed weight ([`gemm::PackedB`], packed
+//! once at block-load time) for the panel-contiguous GEMM path. The
+//! `*_scratch` entry points reuse buffers from a per-worker [`Scratch`]
+//! arena so the steady-state frame path performs no heap allocation; the
+//! plain-named wrappers keep the old signatures with a throwaway arena.
+//! The pre-GEMM scalar loops live on in [`naive`] as the parity baseline
+//! and microbench reference.
 //!
 //! Padding follows XLA/TF conventions: `SAME` pads
 //! `max((ceil(H/s)-1)·s + K - H, 0)` split floor-before / rest-after;
@@ -27,6 +31,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::gemm;
 use super::zoo::Pad;
+use crate::runtime::pool::{self, SendPtr};
 use crate::runtime::scratch::Scratch;
 use crate::runtime::tensor::Tensor;
 
@@ -74,13 +79,17 @@ fn dims4(x: &Tensor, what: &str) -> Result<(usize, usize, usize, usize)> {
     Ok((x.shape[0], x.shape[1], x.shape[2], x.shape[3]))
 }
 
-/// Below this many FLOPs a kernel runs single-threaded — scoped-thread
-/// spawn costs tens of µs, which would dominate tiny ops.
-const MIN_PAR_FLOPS: usize = 1 << 21;
+/// Below this many FLOPs a kernel runs single-threaded. Retuned from
+/// `1 << 21` when dispatch moved from scoped-thread spawn (tens of µs)
+/// to a resident-pool queue push (~1 µs): blocks in the 0.5–2 MFLOP
+/// range that used to run single-threaded now gain parallelism. The
+/// threshold cannot affect results — per-element accumulation order is
+/// split-independent — only where the dispatch overhead break-even sits.
+const MIN_PAR_FLOPS: usize = 1 << 19;
 
 /// Worker count for a kernel invocation: the arena's thread budget,
 /// clamped to the row count, and 1 when the op is too small to amortize
-/// thread spawns.
+/// even a pool dispatch.
 fn effective_workers(threads: usize, rows: usize, flops: usize) -> usize {
     if threads <= 1 || rows < 2 || flops < MIN_PAR_FLOPS {
         1
@@ -89,11 +98,18 @@ fn effective_workers(threads: usize, rows: usize, flops: usize) -> usize {
     }
 }
 
-/// Split `rows` output rows (each `row_elems` elements wide) across
-/// `workers` scoped threads. `f(r0, r1, chunk, panel)` runs once per
-/// worker on its disjoint output chunk with its private panel buffer; the
-/// last chunk runs inline on the calling thread. Single-worker calls
-/// never spawn. `panels` must have at least `workers` entries.
+/// Split `rows` output rows (each `row_elems` elements wide) into
+/// `workers` disjoint chunks dispatched on the resident
+/// [`pool`](crate::runtime::pool). `f(r0, r1, chunk, panel)` runs once
+/// per chunk on its disjoint output slice with its private panel buffer;
+/// chunk 0 runs inline on the calling thread, which then helps drain.
+/// Single-worker calls never touch the queue. `panels` must have at
+/// least `workers` entries.
+///
+/// The chunk split depends only on `(workers, rows)` — and per-element
+/// accumulation order not even on that — so results are bitwise
+/// identical across pool sizes and versus the old scoped-spawn dispatch
+/// (`pool::run_scoped`, pinned by `tests/gemm_parity.rs`).
 fn par_rows<F>(
     workers: usize,
     rows: usize,
@@ -111,33 +127,31 @@ fn par_rows<F>(
         f(0, rows, out, panels[0].as_mut_slice());
         return;
     }
-    std::thread::scope(|s| {
-        let fr = &f;
-        let mut rest: &mut [f32] = out;
-        let mut start = 0usize;
-        for p in panels.iter_mut() {
-            if start >= rows {
-                break;
-            }
-            let end = (start + chunk).min(rows);
-            let cur = std::mem::take(&mut rest);
-            let (mine, tail) = cur.split_at_mut((end - start) * row_elems);
-            rest = tail;
-            let pslice = p.as_mut_slice();
-            if end == rows {
-                // last chunk on the calling thread (others already spawned)
-                fr(start, end, mine, pslice);
-            } else {
-                s.spawn(move || fr(start, end, mine, pslice));
-            }
-            start = end;
-        }
-    });
+    let nchunks = (rows + chunk - 1) / chunk;
+    debug_assert!(nchunks <= panels.len());
+    debug_assert_eq!(out.len(), rows * row_elems);
+    let out_base = SendPtr(out.as_mut_ptr());
+    let panel_base = SendPtr(panels.as_mut_ptr());
+    let body = |ci: usize| {
+        let r0 = ci * chunk;
+        let r1 = ((ci + 1) * chunk).min(rows);
+        // SAFETY: chunk row ranges are disjoint slices of `out`, panel
+        // `ci` belongs to this chunk alone, and the pool runs every chunk
+        // index exactly once — no slice is ever aliased.
+        let mine = unsafe {
+            std::slice::from_raw_parts_mut(out_base.0.add(r0 * row_elems), (r1 - r0) * row_elems)
+        };
+        let panel = unsafe { (*panel_base.0.add(ci)).as_mut_slice() };
+        f(r0, r1, mine, panel);
+    };
+    pool::global().run(nchunks, &body);
 }
 
 /// 2-D convolution, NHWC × HWIO → NHWC, bias add, optional ReLU —
 /// lowered to im2col panels + the blocked GEMM, output rows split across
-/// the arena's worker threads. Output comes from the arena pool.
+/// the arena's worker budget on the resident pool. Output comes from the
+/// arena pool. Packs nothing: for the packed-weight fast path use
+/// [`conv2d_packed_scratch`].
 pub fn conv2d_scratch(
     x: &Tensor,
     w: &Tensor,
@@ -145,6 +159,24 @@ pub fn conv2d_scratch(
     stride: usize,
     pad: &Pad,
     relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    conv2d_packed_scratch(x, w, b, stride, pad, relu, None, scratch)
+}
+
+/// [`conv2d_scratch`] with an optional pre-packed weight: when `packed`
+/// is present (packed once at block-load time, see
+/// [`gemm::pack_cache`]), every GEMM call streams cache-aligned
+/// contiguous B panels instead of strided rows of the raw HWIO tensor.
+/// Bitwise identical to the unpacked path.
+pub fn conv2d_packed_scratch(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    stride: usize,
+    pad: &Pad,
+    relu: bool,
+    packed: Option<&gemm::PackedB>,
     scratch: &mut Scratch,
 ) -> Result<Tensor> {
     let (n, h, wd, cin) = dims4(x, "conv2d input")?;
@@ -162,6 +194,14 @@ pub fn conv2d_scratch(
     let mut out = scratch.take(&[n, oh, ow, cout]);
     let m = n * oh * ow;
     let kcol = kh * kw * cin;
+    if let Some(pb) = packed {
+        ensure!(
+            pb.k() == kcol && pb.n() == cout,
+            "packed weight is {}×{}, conv needs {kcol}×{cout}",
+            pb.k(),
+            pb.n()
+        );
+    }
     let workers = effective_workers(scratch.threads(), m, 2 * m * kcol * cout);
     let (data_x, data_w, bias) = (&x.data[..], &w.data[..], &b.data[..]);
 
@@ -171,16 +211,13 @@ pub fn conv2d_scratch(
     if is_1x1 {
         let panels = scratch.panels_for(workers, 0);
         par_rows(workers, m, cout, &mut out.data, panels, |m0, m1, c_chunk, _p| {
-            gemm::gemm_bias(
-                m1 - m0,
-                cin,
-                cout,
-                &data_x[m0 * cin..m1 * cin],
-                data_w,
-                Some(bias),
-                relu,
-                c_chunk,
-            );
+            let a = &data_x[m0 * cin..m1 * cin];
+            match packed {
+                Some(pb) => {
+                    gemm::gemm_bias_packed(m1 - m0, cin, cout, a, pb, Some(bias), relu, c_chunk)
+                }
+                None => gemm::gemm_bias(m1 - m0, cin, cout, a, data_w, Some(bias), relu, c_chunk),
+            }
         });
     } else {
         let panel_rows = gemm::PANEL_ROWS.min(m.max(1));
@@ -206,16 +243,29 @@ pub fn conv2d_scratch(
                     &mut panel[..pr * kcol],
                 );
                 let c_off = (p0 - m0) * cout;
-                gemm::gemm_bias(
-                    pr,
-                    kcol,
-                    cout,
-                    &panel[..pr * kcol],
-                    data_w,
-                    Some(bias),
-                    relu,
-                    &mut c_chunk[c_off..c_off + pr * cout],
-                );
+                let c_dst = &mut c_chunk[c_off..c_off + pr * cout];
+                match packed {
+                    Some(pb) => gemm::gemm_bias_packed(
+                        pr,
+                        kcol,
+                        cout,
+                        &panel[..pr * kcol],
+                        pb,
+                        Some(bias),
+                        relu,
+                        c_dst,
+                    ),
+                    None => gemm::gemm_bias(
+                        pr,
+                        kcol,
+                        cout,
+                        &panel[..pr * kcol],
+                        data_w,
+                        Some(bias),
+                        relu,
+                        c_dst,
+                    ),
+                }
                 p0 += pr;
             }
         });
@@ -385,6 +435,21 @@ pub fn dense_scratch(
     relu: bool,
     scratch: &mut Scratch,
 ) -> Result<Tensor> {
+    dense_packed_scratch(x, w, b, relu, None, scratch)
+}
+
+/// [`dense_scratch`] with an optional pre-packed weight (see
+/// [`conv2d_packed_scratch`]); both the batch-1 column-split AXPY and
+/// the batched row-split GEMM consume the packed panels. Bitwise
+/// identical to the unpacked path.
+pub fn dense_packed_scratch(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    relu: bool,
+    packed: Option<&gemm::PackedB>,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
     ensure!(x.shape.len() == 2, "dense wants a rank-2 input, got {:?}", x.shape);
     let (n, fin) = (x.shape[0], x.shape[1]);
     ensure!(
@@ -394,29 +459,35 @@ pub fn dense_scratch(
     );
     let fout = w.shape[1];
     ensure!(b.shape == [fout], "dense bias {:?} vs {fout} outputs", b.shape);
+    if let Some(pb) = packed {
+        ensure!(
+            pb.k() == fin && pb.n() == fout,
+            "packed weight is {}×{}, dense needs {fin}×{fout}",
+            pb.k(),
+            pb.n()
+        );
+    }
 
     let mut out = scratch.take(&[n, fout]);
     let (data_x, data_w, bias) = (&x.data[..], &w.data[..], &b.data[..]);
     if n == 1 {
         let workers = effective_workers(scratch.threads(), fout, 2 * fin * fout);
         let panels = scratch.panels_for(workers, 0);
-        par_rows(workers, fout, 1, &mut out.data, panels, |j0, _j1, chunk, _p| {
-            gemm::gemv_cols(fin, fout, j0, data_x, data_w, bias, relu, chunk);
+        par_rows(workers, fout, 1, &mut out.data, panels, |j0, _j1, chunk, _p| match packed {
+            Some(pb) => gemm::gemv_cols_packed(fin, fout, j0, data_x, pb, bias, relu, chunk),
+            None => gemm::gemv_cols(fin, fout, j0, data_x, data_w, bias, relu, chunk),
         });
     } else {
         let workers = effective_workers(scratch.threads(), n, 2 * n * fin * fout);
         let panels = scratch.panels_for(workers, 0);
         par_rows(workers, n, fout, &mut out.data, panels, |r0, r1, chunk, _p| {
-            gemm::gemm_bias(
-                r1 - r0,
-                fin,
-                fout,
-                &data_x[r0 * fin..r1 * fin],
-                data_w,
-                Some(bias),
-                relu,
-                chunk,
-            );
+            let a = &data_x[r0 * fin..r1 * fin];
+            match packed {
+                Some(pb) => {
+                    gemm::gemm_bias_packed(r1 - r0, fin, fout, a, pb, Some(bias), relu, chunk)
+                }
+                None => gemm::gemm_bias(r1 - r0, fin, fout, a, data_w, Some(bias), relu, chunk),
+            }
         });
     }
     Ok(out)

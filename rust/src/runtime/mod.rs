@@ -16,6 +16,7 @@ pub mod backend;
 pub mod executor;
 pub mod loadgen;
 pub mod pipeline;
+pub mod pool;
 pub mod scratch;
 pub mod tensor;
 

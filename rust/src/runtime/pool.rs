@@ -1,0 +1,318 @@
+//! Process-resident compute pool: parked worker threads + a chunk queue,
+//! so the per-frame kernel fan-out is a queue push instead of an OS
+//! thread spawn (DESIGN.md §20).
+//!
+//! Before this module, `par_rows` in the reference kernels spawned fresh
+//! scoped threads on **every** conv/dense invocation — tens of µs of
+//! spawn/join tax per kernel call, paid once per layer per frame. The
+//! pool spawns its workers once (lazily, on first parallel kernel) and
+//! parks them on a condvar; dispatching a kernel is then: push the
+//! chunk indices, wake the workers, run chunk 0 on the submitting
+//! thread, help drain, wait on a stack latch.
+//!
+//! Determinism: the pool carries **chunk indices only**. Which thread
+//! executes a chunk, and in what order chunks complete, is irrelevant to
+//! the result — every output element is written by exactly one chunk
+//! with a fixed per-element accumulation order (see
+//! [`gemm`](crate::runtime::backend::reference::gemm)), so results are
+//! bitwise identical across pool sizes and versus the old scoped-spawn
+//! dispatch ([`run_scoped`] below, retained as the parity oracle).
+//!
+//! Sizing: the resident width is budgeted by `SERDAB_THREADS` (read once
+//! per process, [`env_threads`](crate::runtime::scratch::env_threads))
+//! and grows on demand — a `Scratch::with_threads(n)` test pin can
+//! request a wider fan-out than the env budget — up to
+//! [`MAX_POOL_THREADS`]. Because every kernel in the process shares this
+//! one pool, S pipeline stages each fanning out W ways contend for the
+//! same budgeted workers instead of oversubscribing the machine with
+//! S·W scoped threads, and a submitter always helps drain its own job,
+//! so progress never depends on pool capacity.
+//!
+//! Steady state is allocation-free: the queue's `VecDeque` retains its
+//! capacity, the latch lives on the submitter's stack, and workers are
+//! never respawned.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Hard cap on resident worker threads. Far above `SERDAB_THREADS`'s
+/// auto cap (8); exists so a runaway `Scratch::with_threads(n)` cannot
+/// spawn unbounded OS threads.
+pub const MAX_POOL_THREADS: usize = 16;
+
+/// Raw-pointer wrapper that asserts cross-thread shareability, for
+/// handing the *base* of a buffer to pool chunks that then reconstruct
+/// **disjoint** sub-slices by chunk index. The caller owns the proof of
+/// disjointness (see `par_rows` in the reference kernels).
+pub struct SendPtr<T>(pub *mut T);
+
+// SAFETY: SendPtr is a plain address; the unsafe act is dereferencing,
+// which callers gate on the pool's each-chunk-runs-exactly-once
+// contract plus their own disjointness argument.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// One dispatched job: the lifetime-erased chunk body plus the
+/// completion latch. Lives on the submitting thread's stack; `run` does
+/// not return until `remaining` hits zero, which is what makes the
+/// `'static` lie in `body` sound.
+struct Job {
+    body: &'static (dyn Fn(usize) + Sync),
+    state: Mutex<JobState>,
+    done: Condvar,
+}
+
+struct JobState {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// A queued chunk: job pointer + chunk index.
+struct Task {
+    job: *const Job,
+    chunk: usize,
+}
+
+// SAFETY: the raw job pointer stays valid for the task's whole life —
+// the submitting `run` call blocks until every task of its job has
+// executed and decremented `remaining`.
+unsafe impl Send for Task {}
+
+struct PoolShared {
+    queue: VecDeque<Task>,
+    workers: usize,
+}
+
+/// The resident worker pool. One per process ([`global`]); all kernels
+/// share it.
+pub struct WorkerPool {
+    shared: Mutex<PoolShared>,
+    work: Condvar,
+}
+
+/// The process-wide pool. Workers spawn lazily on first use (or
+/// explicitly via [`WorkerPool::prestart`] at deploy time) and park
+/// until work arrives; they are never torn down.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool {
+        shared: Mutex::new(PoolShared { queue: VecDeque::new(), workers: 0 }),
+        work: Condvar::new(),
+    })
+}
+
+impl WorkerPool {
+    /// Ensure at least `target` resident workers exist (capped at
+    /// [`MAX_POOL_THREADS`]), spawning the missing ones now. Deploy
+    /// calls this so the first frame never pays thread spawns; kernels
+    /// also call it lazily, so forgetting it only moves the cost, never
+    /// breaks anything. Spawn failure is tolerated: submitters drain
+    /// their own jobs, so a short pool only costs parallelism.
+    pub fn prestart(&'static self, target: usize) {
+        let target = target.min(MAX_POOL_THREADS);
+        let mut sh = self.shared.lock().unwrap();
+        while sh.workers < target {
+            let name = format!("serdab-pool-{}", sh.workers);
+            let spawned = std::thread::Builder::new()
+                .name(name)
+                .spawn(move || self.worker_loop())
+                .is_ok();
+            if !spawned {
+                break;
+            }
+            sh.workers += 1;
+        }
+    }
+
+    /// Resident worker-thread count right now.
+    pub fn spawned(&self) -> usize {
+        self.shared.lock().unwrap().workers
+    }
+
+    /// Execute `body(0)`, `body(1)`, … `body(chunks - 1)`, each exactly
+    /// once, across the pool plus the calling thread; returns when all
+    /// chunks have finished. Chunk 0 always runs on the calling thread
+    /// first (single-chunk calls never touch the queue), then the caller
+    /// helps drain its own remaining chunks before parking on the latch,
+    /// so completion never depends on how many workers exist. A panic in
+    /// any chunk is re-raised here after the other chunks finish.
+    pub fn run(&'static self, chunks: usize, body: &(dyn Fn(usize) + Sync)) {
+        if chunks <= 1 {
+            if chunks == 1 {
+                body(0);
+            }
+            return;
+        }
+        self.prestart(chunks - 1);
+        // SAFETY: erasing the borrow lifetime to 'static is sound because
+        // this frame outlives every use — `run` only returns once
+        // `remaining == 0`, i.e. after the last task finished with `body`.
+        let body = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(body)
+        };
+        let job = Job {
+            body,
+            state: Mutex::new(JobState { remaining: chunks, panic: None }),
+            done: Condvar::new(),
+        };
+        {
+            let mut sh = self.shared.lock().unwrap();
+            for chunk in 1..chunks {
+                sh.queue.push_back(Task { job: &job, chunk });
+            }
+        }
+        self.work.notify_all();
+        exec(Task { job: &job, chunk: 0 });
+        // Help-drain: execute this job's still-queued chunks here rather
+        // than waiting on workers (they may be busy with another stage's
+        // job, or not exist at all).
+        loop {
+            let task = {
+                let mut sh = self.shared.lock().unwrap();
+                match sh.queue.iter().position(|t| std::ptr::eq(t.job, &job)) {
+                    Some(i) => sh.queue.remove(i),
+                    None => None,
+                }
+            };
+            match task {
+                Some(t) => exec(t),
+                None => break,
+            }
+        }
+        let mut st = job.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = job.done.wait(st).unwrap();
+        }
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            resume_unwind(payload);
+        }
+    }
+
+    fn worker_loop(&'static self) {
+        loop {
+            let task = {
+                let mut sh = self.shared.lock().unwrap();
+                loop {
+                    match sh.queue.pop_front() {
+                        Some(t) => break t,
+                        None => sh = self.work.wait(sh).unwrap(),
+                    }
+                }
+            };
+            exec(task);
+        }
+    }
+}
+
+/// Run one chunk and tick its job's latch. A panicking chunk body is
+/// caught (first payload wins, re-raised by the submitter) so a worker
+/// thread survives and the latch still reaches zero.
+fn exec(task: Task) {
+    // SAFETY: see `Task` — the job outlives every task referencing it.
+    let job = unsafe { &*task.job };
+    let result = catch_unwind(AssertUnwindSafe(|| (job.body)(task.chunk)));
+    let mut st = job.state.lock().unwrap();
+    if let Err(payload) = result {
+        if st.panic.is_none() {
+            st.panic = Some(payload);
+        }
+    }
+    st.remaining -= 1;
+    if st.remaining == 0 {
+        // Notify while still holding the lock: the submitter cannot wake,
+        // observe zero, and pop its stack frame before we release it.
+        job.done.notify_all();
+    }
+}
+
+/// The pre-pool dispatch, retained verbatim as the parity oracle for
+/// `tests/gemm_parity.rs`: the same chunk indices executed on freshly
+/// spawned scoped threads. **Not** on the per-frame path — kernels only
+/// ever dispatch through [`WorkerPool::run`].
+pub fn run_scoped(chunks: usize, body: &(dyn Fn(usize) + Sync)) {
+    if chunks <= 1 {
+        if chunks == 1 {
+            body(0);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for chunk in 1..chunks {
+            s.spawn(move || body(chunk));
+        }
+        body(0);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+        global().run(hits.len(), &|c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        for (c, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {c}");
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_compose_like_scoped_dispatch() {
+        let rows = 37usize;
+        let run_with = |dispatch: &dyn Fn(usize, &(dyn Fn(usize) + Sync))| -> Vec<f32> {
+            let mut out = vec![0f32; rows];
+            let chunks = 5usize;
+            let per = (rows + chunks - 1) / chunks;
+            let base = SendPtr(out.as_mut_ptr());
+            dispatch(chunks, &|c| {
+                let r0 = c * per;
+                let r1 = ((c + 1) * per).min(rows);
+                for r in r0..r1 {
+                    // SAFETY: chunk row ranges are disjoint.
+                    unsafe { *base.0.add(r) = (r * r) as f32 };
+                }
+            });
+            out
+        };
+        let pooled = run_with(&|n, f| global().run(n, f));
+        let scoped = run_with(&|n, f| run_scoped(n, f));
+        assert_eq!(pooled, scoped);
+        assert_eq!(pooled[10], 100.0);
+    }
+
+    #[test]
+    fn worker_count_is_capped_and_monotonic() {
+        global().prestart(2);
+        let before = global().spawned();
+        assert!(before >= 2);
+        global().prestart(MAX_POOL_THREADS + 50);
+        assert_eq!(global().spawned(), MAX_POOL_THREADS);
+        // prestart never shrinks
+        global().prestart(1);
+        assert_eq!(global().spawned(), MAX_POOL_THREADS);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            global().run(4, &|c| {
+                if c == 2 {
+                    panic!("boom in chunk 2");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic must reach the submitter");
+        // the pool still works afterwards
+        let n = AtomicUsize::new(0);
+        global().run(6, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 6);
+    }
+}

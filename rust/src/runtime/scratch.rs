@@ -19,6 +19,8 @@
 //!   worker with the same accumulation order regardless of how rows are
 //!   split (see `backend::reference::gemm`).
 
+use std::sync::OnceLock;
+
 use crate::runtime::tensor::Tensor;
 
 /// Hard cap on the auto-detected worker count (diminishing returns past
@@ -27,15 +29,19 @@ const AUTO_THREAD_CAP: usize = 8;
 
 /// Worker count the environment asks for: `SERDAB_THREADS` if it parses
 /// to a positive integer, otherwise the machine's available parallelism
-/// capped at 8.
+/// capped at 8. Read **once per process** (every `Scratch::new` used to
+/// re-parse the env var): the value budgets the resident compute pool
+/// ([`pool`](crate::runtime::pool)), whose workers live for the process,
+/// so a mid-run env change could never be honored anyway.
 pub fn env_threads() -> usize {
-    match std::env::var("SERDAB_THREADS") {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| match std::env::var("SERDAB_THREADS") {
         Ok(v) => match v.trim().parse::<usize>() {
             Ok(n) if n >= 1 => n,
             _ => auto_threads(),
         },
         Err(_) => auto_threads(),
-    }
+    })
 }
 
 fn auto_threads() -> usize {

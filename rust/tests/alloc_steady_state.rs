@@ -10,10 +10,14 @@
 //!
 //! A counting `#[global_allocator]` (test-binary only) measures it
 //! directly. Everything runs inside ONE test function so parallel test
-//! threads cannot pollute the counter, and kernels are pinned to one
-//! worker (`Scratch::with_threads(1)`) because spawning scoped threads
-//! allocates stacks — the zero-alloc contract is per *worker*, the
-//! thread-split fan-out is amortized separately.
+//! threads cannot pollute the counter. The single-worker section pins
+//! `Scratch::with_threads(1)`; a second section then proves the
+//! *pooled* frame path — a conv big enough to fan out across the
+//! resident compute pool (DESIGN.md §20), plus a prepacked-weight conv
+//! reusing a cached packed-B panel — is also allocation-free once the
+//! pool's workers are spawned and its chunk queue has its capacity:
+//! dispatch is a queue push into retained storage and the completion
+//! latch lives on the submitter's stack.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::io::Cursor;
@@ -224,6 +228,49 @@ fn steady_state_frame_path_allocates_nothing() {
         after - before,
         0,
         "steady-state frame path allocated {} times (conv/dense/crypt/framing must be alloc-free)",
+        after - before
+    );
+
+    // ---- pooled + packed-B section -----------------------------------
+    // A conv over the parallel threshold so it really fans out across
+    // the resident pool, and the same conv through a cached packed-B
+    // panel. Warm-up pays worker spawns and the queue's first growth;
+    // steady state must then be zero allocations end to end.
+    let xp = rand_tensor(30, &[1, 28, 28, 32]);
+    let wp = rand_tensor(31, &[3, 3, 32, 64]);
+    let bp = rand_tensor(32, &[64]);
+    let pb = serdab::runtime::backend::reference::gemm::pack_cache().get_or_pack(
+        3 * 3 * 32,
+        64,
+        &wp.data,
+    );
+    let mut pooled = Scratch::with_threads(2);
+    let mut pooled_frame = |scratch: &mut Scratch| {
+        let c = ops::conv2d_scratch(&xp, &wp, &bp, 1, &Pad::Same, true, scratch).unwrap();
+        scratch.give(c);
+        let c = ops::conv2d_packed_scratch(
+            &xp,
+            &wp,
+            &bp,
+            1,
+            &Pad::Same,
+            true,
+            Some(pb.as_ref()),
+            scratch,
+        )
+        .unwrap();
+        scratch.give(c);
+    };
+    pooled_frame(&mut pooled);
+    pooled_frame(&mut pooled);
+
+    let before = allocs();
+    pooled_frame(&mut pooled);
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "pooled steady-state frame path allocated {} times (pool dispatch + packed-B reuse must be alloc-free)",
         after - before
     );
 }

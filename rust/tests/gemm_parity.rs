@@ -6,7 +6,10 @@
 //! determinism check: `SERDAB_THREADS=1` and `=4` (pinned through
 //! `Scratch::with_threads`, same mechanism) must produce bit-identical
 //! outputs, because every output element is computed by exactly one
-//! worker with the same accumulation order.
+//! worker with the same accumulation order. The resident compute pool
+//! gets the same treatment: pool sizes {1, 2, 4} must be bit-invisible,
+//! and pooled dispatch must match the retained scoped-spawn oracle
+//! (`pool::run_scoped`) byte for byte on real GEMM row chunks.
 
 use serdab::runtime::backend::reference::ops::{self, naive};
 use serdab::runtime::backend::reference::zoo::Pad;
@@ -174,6 +177,71 @@ fn thread_count_is_bit_invisible() {
     let a1 = ops::conv2d_scratch(&x1, &k1, &b1, 1, &Pad::Same, false, &mut s1).unwrap();
     let a4 = ops::conv2d_scratch(&x1, &k1, &b1, 1, &Pad::Same, false, &mut s4).unwrap();
     assert_eq!(a1.to_le_bytes(), a4.to_le_bytes(), "1×1 path must be thread-count invariant");
+}
+
+#[test]
+fn pool_size_is_bit_invisible() {
+    // the resident pool must be as invisible as the thread count: pool
+    // sizes {1, 2, 4} (1 never touches the queue) produce identical bytes
+    // on a conv and a dense big enough to clear the parallel threshold
+    let mut rng = Rng::new(0x9007a);
+    let x = rand_tensor(&mut rng, &[1, 24, 24, 16]);
+    let w = rand_tensor(&mut rng, &[3, 3, 16, 32]);
+    let b = rand_tensor(&mut rng, &[32]);
+    let xd = rand_tensor(&mut rng, &[1, 2048]);
+    let wd = rand_tensor(&mut rng, &[2048, 768]);
+    let bd = rand_tensor(&mut rng, &[768]);
+
+    let mut conv_outs = Vec::new();
+    let mut dense_outs = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut s = Scratch::with_threads(threads);
+        conv_outs
+            .push(ops::conv2d_scratch(&x, &w, &b, 1, &Pad::Same, true, &mut s).unwrap().to_le_bytes());
+        dense_outs.push(ops::dense_scratch(&xd, &wd, &bd, false, &mut s).unwrap().to_le_bytes());
+    }
+    assert_eq!(conv_outs[0], conv_outs[1], "conv: pool size 2 changed bytes");
+    assert_eq!(conv_outs[0], conv_outs[2], "conv: pool size 4 changed bytes");
+    assert_eq!(dense_outs[0], dense_outs[1], "dense: pool size 2 changed bytes");
+    assert_eq!(dense_outs[0], dense_outs[2], "dense: pool size 4 changed bytes");
+}
+
+#[test]
+fn pooled_dispatch_matches_scoped_dispatch_on_gemm_rows() {
+    // identical chunk bodies — real GEMM calls over disjoint output-row
+    // ranges — through the resident pool and through the retained
+    // scoped-spawn oracle: the dispatch mechanism must not change a bit
+    use serdab::runtime::backend::reference::gemm;
+    use serdab::runtime::pool::{self, SendPtr};
+
+    let mut rng = Rng::new(0x5ca1e);
+    let (m, k, n) = (64usize, 37usize, 33usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let bm: Vec<f32> = (0..k * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let bias: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let chunks = 4usize;
+    let per = (m + chunks - 1) / chunks;
+
+    let run_with = |dispatch: &dyn Fn(usize, &(dyn Fn(usize) + Sync))| -> Vec<u32> {
+        let mut c = vec![0f32; m * n];
+        let base = SendPtr(c.as_mut_ptr());
+        dispatch(chunks, &|ci| {
+            let r0 = ci * per;
+            let r1 = ((ci + 1) * per).min(m);
+            if r0 >= r1 {
+                return;
+            }
+            // SAFETY: chunk row ranges are disjoint, and the dispatcher
+            // guarantees each chunk index runs exactly once.
+            let mine = unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), (r1 - r0) * n) };
+            gemm::gemm_bias(r1 - r0, k, n, &a[r0 * k..r1 * k], &bm, Some(&bias), true, mine);
+        });
+        c.iter().map(|v| v.to_bits()).collect()
+    };
+
+    let pooled = run_with(&|nc, f| pool::global().run(nc, f));
+    let scoped = run_with(&|nc, f| pool::run_scoped(nc, f));
+    assert_eq!(pooled, scoped, "pooled dispatch diverged from the scoped oracle");
 }
 
 #[test]

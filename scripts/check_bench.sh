@@ -27,13 +27,23 @@
 #   4. the 1024-resource cold solve must finish under MAX_COLD_MS
 #      (default 5000 ms).
 #
-# Crypto (sealed-hop) gate:
+# Crypto (sealed-hop) gate — plus the compute-pool and packed-B lanes
+# that live in the same hotpath artifact:
 #   1. parity must be true: the dispatched AES-GCM path is worthless the
 #      moment it stops being bitwise identical to the scalar reference;
 #   2. every sealed-hop row must be ≥ MIN_CRYPTO_SPEEDUP (default 3.0×)
 #      of the scalar baseline — but only when the artifact was produced
 #      on an AES-NI machine ("aesni": true): without the instructions the
-#      dispatched path IS the scalar path and the ratio is ~1 by design.
+#      dispatched path IS the scalar path and the ratio is ~1 by design;
+#   3. compute_pool.parity must be true: pooled dispatch that changes a
+#      single output bit versus 1 worker is a broken kernel, not a pool;
+#   4. compute_pool.speedup must be ≥ MIN_POOL_SPEEDUP (default 2.0×) of
+#      the 1-worker GEMM row — but only when the producing machine had
+#      at least 4 cores ("cores" in the lane): a 1-core host runs the
+#      pooled path at ~1× by construction, same logic as the AES-NI rule;
+#   5. packed_b.parity must be true and its rows non-degenerate: packed
+#      panels exist to kill re-packing traffic, so their perf is logged
+#      as a trend, but bitwise identity is a hard contract.
 #
 # Portability rules (so a checkout without a fresh bench run, or a
 # laptop-generated artifact checked on CI, never fails spuriously):
@@ -53,6 +63,7 @@ min_speedup="${MIN_SPEEDUP:-1.2}"
 incr_speedup="${INCR_SPEEDUP:-5}"
 max_cold_ms="${MAX_COLD_MS:-5000}"
 min_crypto_speedup="${MIN_CRYPTO_SPEEDUP:-3.0}"
+min_pool_speedup="${MIN_POOL_SPEEDUP:-2.0}"
 strict="${STRICT:-0}"
 host_machine="$(uname -m)-$(nproc)cpu"
 
@@ -75,11 +86,12 @@ if [[ ! -f "$bench" ]]; then
 fi
 
 if [[ "$kind" == "crypto" ]]; then
-python3 - "$bench" "$min_crypto_speedup" "$host_machine" "$strict" <<'PY'
+python3 - "$bench" "$min_crypto_speedup" "$host_machine" "$strict" "$min_pool_speedup" <<'PY'
 import json, sys
 
 path, min_speedup, host_machine, strict = (
     sys.argv[1], float(sys.argv[2]), sys.argv[3], sys.argv[4] == "1")
+min_pool_speedup = float(sys.argv[5])
 with open(path) as f:
     bench = json.load(f)
 
@@ -123,6 +135,62 @@ for r in hop["rows"]:
             print(f"WARN: sealed hop {r['payload']} is only "
                   f"{r['speedup']:.2f}x scalar (< {min_speedup}x), but "
                   f"{why} — not gating", file=sys.stderr)
+
+# --- compute-pool lane: pooled dispatch vs the 1-worker GEMM row -------
+pool = bench.get("compute_pool")
+if pool is None:
+    print("FAIL: no compute_pool lane in the artifact (stale bench run?)",
+          file=sys.stderr)
+    failed = True
+else:
+    cores = int(pool.get("cores", 0))
+    pool_gate = (same_class or strict) and cores >= 4
+    print(f"compute pool: {pool['speedup']:.2f}x at {int(pool['workers'])} "
+          f"workers (cores={cores} parity={pool['parity']}, floor "
+          f"{min_pool_speedup}x {'enforced' if pool_gate else 'advisory'})")
+    if pool["parity"] is not True:
+        print("FAIL: pooled dispatch is not bitwise identical to 1 worker",
+              file=sys.stderr)
+        failed = True
+    if pool["gemm_1w_ns"] <= 0 or pool["pooled_ns"] <= 0:
+        print(f"FAIL: degenerate compute_pool lane {pool}", file=sys.stderr)
+        failed = True
+    # the floor binds only where there are cores to scale across (the
+    # producing machine class, or STRICT, with >= 4 cores) — a 1-core
+    # host runs the pooled path at ~1x by construction
+    elif pool["speedup"] < min_pool_speedup:
+        if pool_gate:
+            print(f"FAIL: pooled conv is only {pool['speedup']:.2f}x the "
+                  f"1-worker row (< {min_pool_speedup}x)", file=sys.stderr)
+            failed = True
+        else:
+            why = (f"only {cores} core(s) on the producing machine"
+                   if cores < 4 else
+                   f"artifact is from '{machine or 'unstamped'}', not this host")
+            print(f"WARN: pooled conv is only {pool['speedup']:.2f}x the "
+                  f"1-worker row (< {min_pool_speedup}x), but {why} — "
+                  f"not gating", file=sys.stderr)
+
+# --- packed-B lane: prepacked weight panels vs the pack-free path ------
+packed = bench.get("packed_b")
+if packed is None:
+    print("FAIL: no packed_b lane in the artifact (stale bench run?)",
+          file=sys.stderr)
+    failed = True
+else:
+    for r in packed["rows"]:
+        print(f"packed-B {r['component']:>8}: unpacked={r['unpacked_ns']:.0f}ns "
+              f"packed={r['packed_ns']:.0f}ns speedup={r['speedup']:.2f}x")
+    print(f"packed-B parity={packed['parity']} (perf is a logged trend, "
+          f"parity is the contract)")
+    if packed["parity"] is not True:
+        print("FAIL: packed-B path is not bitwise identical to unpacked",
+              file=sys.stderr)
+        failed = True
+    for r in packed["rows"]:
+        if r["unpacked_ns"] <= 0 or r["packed_ns"] <= 0:
+            print(f"FAIL: degenerate packed_b row {r}", file=sys.stderr)
+            failed = True
 
 sys.exit(1 if failed else 0)
 PY

@@ -165,12 +165,20 @@ expect "cold solve over 5s at 1024 fails on the same class" 1 "$rc"
 # ---- crypto gate (filenames containing "hotpath" route here) ----------------
 
 # mk_crypto <file> <parity:true|false> <aesni:true|false> <speedup> <machine|none>
+#           [pool_parity] [pool_speedup] [cores] [packed_parity] [omit-lane]
+# The trailing args default to a healthy compute_pool/packed_b pair
+# (parity true, 3.0x at 4 cores); "omit-lane" of "nopool"/"nopacked"
+# drops that lane entirely (stale-artifact case).
 mk_crypto() {
-    python3 - "$1" "$2" "$3" "$4" "$5" <<'PY'
+    python3 - "$1" "$2" "$3" "$4" "$5" "${6:-true}" "${7:-3.0}" "${8:-4}" \
+        "${9:-true}" "${10:-none}" <<'PY'
 import json, sys
 file, parity, aesni, speedup, machine = (
     sys.argv[1], sys.argv[2] == "true", sys.argv[3] == "true",
     float(sys.argv[4]), sys.argv[5])
+pool_parity, pool_speedup, cores = (
+    sys.argv[6] == "true", float(sys.argv[7]), int(sys.argv[8]))
+packed_parity, omit = sys.argv[9] == "true", sys.argv[10]
 def row(payload, nbytes):
     scalar = 0.8
     return {"payload": payload, "bytes": nbytes,
@@ -184,7 +192,26 @@ doc = {
         "parity": parity,
         "rows": [row("64 KiB", 65536), row("1 MiB", 1048576)],
     },
+    "compute_pool": {
+        "cores": cores, "workers": 4, "parity": pool_parity,
+        "gemm_1w_ns": 1000000.0,
+        "pooled_ns": 1000000.0 / pool_speedup,
+        "speedup": pool_speedup,
+    },
+    "packed_b": {
+        "parity": packed_parity,
+        "rows": [
+            {"component": "conv3x3", "unpacked_ns": 1000000.0,
+             "packed_ns": 900000.0, "speedup": 1.11},
+            {"component": "dense", "unpacked_ns": 300000.0,
+             "packed_ns": 280000.0, "speedup": 1.07},
+        ],
+    },
 }
+if omit == "nopool":
+    del doc["compute_pool"]
+elif omit == "nopacked":
+    del doc["packed_b"]
 if machine != "none":
     doc["machine"] = machine
 with open(file, "w") as f:
@@ -226,6 +253,54 @@ expect "parity=false fails even without AES-NI" 1 "$rc"
 
 rc=0; MIN_CRYPTO_SPEEDUP=1.2 "$check" "$tmp/hotpath_slow_same.json" >/dev/null 2>&1 || rc=$?
 expect "MIN_CRYPTO_SPEEDUP lowers the crypto floor" 0 "$rc"
+
+# ---- compute-pool lane (same hotpath artifact) -------------------------------
+
+# pooled dispatch that differs bitwise from 1 worker is corruption
+mk_crypto "$tmp/hotpath_pool_parity.json" true true 4.0 "other-0cpu" false
+rc=0; "$check" "$tmp/hotpath_pool_parity.json" >/dev/null 2>&1 || rc=$?
+expect "pool parity=false fails on any machine class" 1 "$rc"
+
+# pool speedup shortfall with >= 4 cores binds on the producing class
+mk_crypto "$tmp/hotpath_pool_slow.json" true true 4.0 "$host" true 1.3 4
+rc=0; "$check" "$tmp/hotpath_pool_slow.json" >/dev/null 2>&1 || rc=$?
+expect "pool shortfall fails on the same 4-core class" 1 "$rc"
+
+mk_crypto "$tmp/hotpath_pool_slow_other.json" true true 4.0 "other-0cpu" true 1.3 4
+rc=0; "$check" "$tmp/hotpath_pool_slow_other.json" >/dev/null 2>&1 || rc=$?
+expect "pool shortfall warns and passes cross-class" 0 "$rc"
+rc=0; STRICT=1 "$check" "$tmp/hotpath_pool_slow_other.json" >/dev/null 2>&1 || rc=$?
+expect "STRICT=1 restores the hard pool speedup gate" 1 "$rc"
+
+# a 1-core producer cannot scale: floor never binds, not even STRICT
+mk_crypto "$tmp/hotpath_pool_1core.json" true true 4.0 "$host" true 1.0 1
+rc=0; "$check" "$tmp/hotpath_pool_1core.json" >/dev/null 2>&1 || rc=$?
+expect "pool speedup ~1 passes on a 1-core producer" 0 "$rc"
+rc=0; STRICT=1 "$check" "$tmp/hotpath_pool_1core.json" >/dev/null 2>&1 || rc=$?
+expect "STRICT=1 still passes on a 1-core producer" 0 "$rc"
+
+# ...but pool parity is still a hard contract on 1 core
+mk_crypto "$tmp/hotpath_pool_1core_parity.json" true true 4.0 "$host" false 1.0 1
+rc=0; "$check" "$tmp/hotpath_pool_1core_parity.json" >/dev/null 2>&1 || rc=$?
+expect "pool parity=false fails even on a 1-core producer" 1 "$rc"
+
+rc=0; MIN_POOL_SPEEDUP=1.2 "$check" "$tmp/hotpath_pool_slow.json" >/dev/null 2>&1 || rc=$?
+expect "MIN_POOL_SPEEDUP lowers the pool floor" 0 "$rc"
+
+# a hotpath artifact without the lane predates this gate: stale, rerun
+mk_crypto "$tmp/hotpath_nopool.json" true true 4.0 "$host" true 3.0 4 true nopool
+rc=0; "$check" "$tmp/hotpath_nopool.json" >/dev/null 2>&1 || rc=$?
+expect "missing compute_pool lane fails as stale" 1 "$rc"
+
+# ---- packed-B lane (same hotpath artifact) -----------------------------------
+
+mk_crypto "$tmp/hotpath_packed_parity.json" true true 4.0 "other-0cpu" true 3.0 4 false
+rc=0; "$check" "$tmp/hotpath_packed_parity.json" >/dev/null 2>&1 || rc=$?
+expect "packed-B parity=false fails on any machine class" 1 "$rc"
+
+mk_crypto "$tmp/hotpath_nopacked.json" true true 4.0 "$host" true 3.0 4 true nopacked
+rc=0; "$check" "$tmp/hotpath_nopacked.json" >/dev/null 2>&1 || rc=$?
+expect "missing packed_b lane fails as stale" 1 "$rc"
 
 echo
 echo "test_check_bench: $pass passed, $fail failed"
